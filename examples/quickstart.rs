@@ -1,0 +1,52 @@
+//! Quickstart: load the artifacts, translate one sentence with DNDM, and
+//! show the NFE saving versus a step-marching baseline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use dndm::coordinator::Engine;
+use dndm::data::{gen_pairs, Dataset, Split};
+use dndm::runtime::Artifacts;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+
+fn main() -> anyhow::Result<()> {
+    let arts = Artifacts::load("artifacts")?;
+    println!("loaded {} models from artifacts/", arts.models.len());
+
+    // pick the absorbing IWSLT14 checkpoint (the paper's Table 3 setting)
+    let model = arts
+        .find("absorbing", "synth-iwslt14", false)
+        .expect("run `make artifacts` first")
+        .name
+        .clone();
+    let engine = Engine::new(&arts, &model)?;
+
+    let (src, reference) = &gen_pairs(Dataset::Iwslt14, Split::Test, 1)[0];
+    let src_text = src.join(" ");
+    println!("\nsource    : {src_text}");
+    println!("reference : {}", reference.join(" "));
+
+    // DNDM (Algorithm 1): NN calls = |𝒯| ≤ N, not T
+    let dndm = SamplerConfig::new(SamplerKind::Dndm, 1000);
+    let out = engine.generate_one(Some(&src_text), &dndm, 7)?;
+    println!(
+        "\nDNDM @ T=1000      : \"{}\"\n                     NFE {} (of 1000 steps) in {:?}",
+        out.text, out.nfe, out.elapsed
+    );
+
+    // the same request under the RDM baseline pays one call per step
+    let rdm = SamplerConfig::new(SamplerKind::Rdm, 50);
+    let out = engine.generate_one(Some(&src_text), &rdm, 7)?;
+    println!(
+        "RDM  @ T=50        : \"{}\"\n                     NFE {} in {:?}",
+        out.text, out.nfe, out.elapsed
+    );
+
+    // continuous-time DNDM-C (Algorithm 2): the T→∞ limit, still ≤ N calls
+    let dndm_c = SamplerConfig::new(SamplerKind::DndmC, 0);
+    let out = engine.generate_one(Some(&src_text), &dndm_c, 7)?;
+    println!(
+        "DNDM-C (T=∞)       : \"{}\"\n                     NFE {} in {:?}",
+        out.text, out.nfe, out.elapsed
+    );
+    Ok(())
+}

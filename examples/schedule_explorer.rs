@@ -1,0 +1,61 @@
+//! Schedule explorer — no artifacts needed. Prints the transition-time
+//! distribution 𝒟_τ (Theorem 3.6 / Figure 3) and the expected NFE
+//! (Theorem D.1) for any (schedule, T, N).
+//!
+//!     cargo run --release --example schedule_explorer -- --steps 50 --n 16
+
+use dndm::schedule::{AlphaSchedule, SplitMix64, TransitionOrder, TransitionSpec};
+use dndm::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let t_max = args.usize_or("steps", 50);
+    let n = args.usize_or("n", 16);
+    let samples = args.usize_or("samples", 20_000);
+
+    let specs: Vec<(String, TransitionSpec)> = vec![
+        ("linear".into(), TransitionSpec::Exact(AlphaSchedule::Linear)),
+        ("cosine".into(), TransitionSpec::Exact(AlphaSchedule::Cosine)),
+        ("cosine^2".into(), TransitionSpec::Exact(AlphaSchedule::CosineSq)),
+        ("Beta(15,7)".into(), TransitionSpec::Beta { a: 15.0, b: 7.0 }),
+        ("Beta(3,3)".into(), TransitionSpec::Beta { a: 3.0, b: 3.0 }),
+    ];
+
+    println!("== 𝒟_τ for T={t_max} (Figure 3) ==");
+    for (name, spec) in &specs {
+        // empirical histogram in 10 buckets
+        let mut rng = SplitMix64::new(0xF16);
+        let mut hist = vec![0usize; 10];
+        for _ in 0..samples {
+            let tau = spec.sample_discrete(t_max, &mut rng);
+            hist[((tau - 1) * 10) / t_max] += 1;
+        }
+        let peak = *hist.iter().max().unwrap() as f64;
+        let bar: String = hist
+            .iter()
+            .map(|&c| {
+                let h = (c as f64 / peak * 8.0).round() as usize;
+                char::from_u32(0x2581 + h.min(7) as u32).unwrap()
+            })
+            .collect();
+        println!("  {name:<11} {bar}   (t: 1 → {t_max})");
+    }
+
+    println!("\n== E|𝒯| = expected NFE (Theorem D.1), N={n} ==");
+    println!("  {:<11} {:>8} {:>10} {:>10}", "schedule", "E|𝒯|", "vs T", "vs N");
+    for (name, spec) in &specs {
+        let e = spec.expected_nfe(t_max, n);
+        println!(
+            "  {name:<11} {e:>8.2} {:>9.1}x {:>9.2}x",
+            t_max as f64 / e,
+            n as f64 / e
+        );
+    }
+
+    println!("\n== positional orders (Table 6) — τ by position, one draw ==");
+    for order in [TransitionOrder::Random, TransitionOrder::LeftToRight, TransitionOrder::RightToLeft] {
+        let mut rng = SplitMix64::new(7);
+        let tt = TransitionSpec::Beta { a: 15.0, b: 7.0 }.sample_times(t_max, n, order, &mut rng);
+        println!("  {order:?}: {:?} (NFE {})", tt.taus, tt.nfe());
+    }
+}

@@ -1,0 +1,95 @@
+//! End-to-end serving driver (the E2E validation run of DESIGN.md §6):
+//! start the coordinator, fire a few hundred concurrent translation
+//! requests from the synthetic IWSLT14 test split at the real build-time-
+//! trained checkpoint, and report BLEU + latency percentiles + throughput
+//! + NFE. Results are recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example translation_server -- \
+//!         --requests 200 --max-batch 16 --window-ms 20 --steps 50
+//!
+//! Flags: --requests N --max-batch B --window-ms MS --steps T
+//!        --sampler dndm|dndm-k|rdm|... --kind absorbing|multinomial
+//!        --dataset iwslt14|wmt14|wmt16
+
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::data::{gen_pairs, Dataset, Split};
+use dndm::metrics::bleu::corpus_bleu_str;
+use dndm::metrics::LatencyStats;
+use dndm::runtime::Artifacts;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_requests = args.usize_or("requests", 200);
+    let dataset = Dataset::parse(args.get_or("dataset", "iwslt14")).expect("bad --dataset");
+    let kind = args.get_or("kind", "absorbing").to_string();
+    let sampler = SamplerKind::parse(args.get_or("sampler", "dndm-k")).expect("bad --sampler");
+    let steps = args.usize_or("steps", 50);
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 16),
+        window: Duration::from_millis(args.u64_or("window-ms", 20)),
+    };
+
+    let arts = Artifacts::load("artifacts")?;
+    let model = arts
+        .find(&kind, dataset.name(), false)
+        .expect("model not found — run `make artifacts`")
+        .name
+        .clone();
+    let cfg = SamplerConfig::new(sampler, steps);
+    println!(
+        "== translation_server ==\nmodel {model}  sampler {}  steps {steps}  policy {policy:?}",
+        sampler.name()
+    );
+
+    let model2 = model.clone();
+    let (srv, join) = Server::start(
+        move || {
+            let arts = Artifacts::load("artifacts")?;
+            let eng = Engine::new(&arts, &model2)?;
+            eng.warmup(&[1, 4, 16])?; // compile buckets before traffic
+            Ok(eng)
+        },
+        cfg,
+        policy,
+    );
+
+    // fire the whole test split as concurrent requests
+    let pairs = gen_pairs(dataset, Split::Test, n_requests);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .collect();
+
+    let mut lat = LatencyStats::new();
+    let mut hyps = Vec::with_capacity(n_requests);
+    for rx in rxs {
+        let out = rx.recv()??;
+        lat.record(out.elapsed);
+        hyps.push(out.text);
+    }
+    let wall = t0.elapsed();
+    let refs: Vec<String> = pairs.iter().map(|(_, t)| t.join(" ")).collect();
+    let bleu = corpus_bleu_str(&hyps, &refs);
+    let stats = srv.stats()?;
+
+    println!("\nserved {n_requests} requests in {:.2}s", wall.as_secs_f64());
+    println!("throughput      : {:.2} req/s", n_requests as f64 / wall.as_secs_f64());
+    println!("BLEU            : {bleu:.2}");
+    println!("batches         : {} (mean size {:.2})", stats.batches, stats.mean_batch);
+    println!("NN calls        : {} ({:.2} per request)", stats.nn_calls,
+             stats.nn_calls as f64 / n_requests as f64);
+    println!("queue p95       : {:.1} ms", stats.queue_p95.as_secs_f64() * 1e3);
+    println!("e2e    p50/p95  : {:.1} / {:.1} ms",
+             stats.e2e_p50.as_secs_f64() * 1e3, stats.e2e_p95.as_secs_f64() * 1e3);
+    println!("{}", lat.summary("batch-compute latency"));
+
+    srv.shutdown();
+    join.join();
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Unconditional text generation on the text8/enwik8 analogs, with a
+//! Figure-2-style trajectory print: watch noise resolve into text as the
+//! reverse process walks the transition events.
+//!
+//!     cargo run --release --example unconditional_gen -- \
+//!         --corpus text8 --steps 100 --count 3
+
+use dndm::coordinator::Engine;
+use dndm::data::UncondCorpus;
+use dndm::exp;
+use dndm::runtime::Artifacts;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let corpus = UncondCorpus::parse(args.get_or("corpus", "text8")).expect("bad --corpus");
+    let steps = args.usize_or("steps", 100);
+    let count = args.usize_or("count", 3);
+
+    let arts = Artifacts::load("artifacts")?;
+    let model = arts
+        .find("multinomial", corpus.name(), false)
+        .expect("run `make artifacts`")
+        .name
+        .clone();
+    let engine = Engine::new(&arts, &model)?;
+
+    // one traced generation: the Figure 2 view
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, steps).with_trace();
+    let (outs, res) = engine.generate_batch(None, 1, &cfg, 42)?;
+    println!("== generation trajectory (T={steps}, NFE {}) ==", res.nfe);
+    for (i, tp) in res.trace.iter().enumerate() {
+        if i % (res.trace.len() / 8).max(1) == 0 || i + 1 == res.trace.len() {
+            let txt: String = engine.decode(&tp.tokens);
+            println!("t={:<6.3} | {}", tp.t, txt);
+        }
+    }
+    println!("final     | {}", outs[0].text);
+
+    // a few more samples + external-LM perplexity (the Table 4 metric)
+    let lm = exp::scorer_for(corpus);
+    let vocab = corpus.vocab();
+    println!("\n== samples ==");
+    for i in 0..count {
+        let out = engine.generate_one(None, &SamplerConfig::new(SamplerKind::Dndm, steps), i as u64)?;
+        let ids: Vec<u32> = out
+            .text
+            .chars()
+            .filter_map(|c| vocab.id(&c.to_string()))
+            .collect();
+        println!("[ppl {:>8.1}, nfe {:>3}] {}", lm.perplexity(&ids), out.nfe, out.text);
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+"""AOT export: train checkpoints, lower to HLO text, write artifacts/.
+
+Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects
+jax≥0.5 serialized HloModuleProto (64-bit instruction ids); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts layout (DESIGN.md §7):
+  artifacts/manifest.json
+  artifacts/fixtures.json              cross-language parity fixtures
+  artifacts/<model>/config.json        geometry + tensor order
+  artifacts/<model>/weights.bin        DNDW1 flat tensor file
+  artifacts/<model>/model_b{B}.hlo.txt denoiser, weights as leading args
+  artifacts/transition/n{N}_v{V}_b{B}.hlo.txt  fused L1 transition kernel
+
+Denoiser HLO signature (1-tuple output, return_tuple=True):
+  cond  : (w_0..w_{P-1}, src i32[B,M], x i32[B,N], t f32[B]) → (logits f32[B,N,V],)
+  uncond: (w_0..w_{P-1},              x i32[B,N], t f32[B]) → (logits f32[B,N,V],)
+Transition HLO signature:
+  (logits f32[B,N,V], x i32[B,N], gumbel f32[B,N,V], move i32[B,N])
+      → (new_x i32[B,N], x0_hat i32[B,N], score f32[B,N])
+
+Usage: python -m compile.aot --out ../artifacts   (from python/)
+Env:   DNDM_TRAIN_STEPS=8 for a fast smoke build; DNDM_ONLY=name1,name2.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import common
+from . import model as M
+from . import trainer
+from .kernels import transition as trans_kernel
+
+WEIGHTS_MAGIC = b"DNDW1\x00"
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, named_leaves) -> int:
+    """DNDW1 format: magic, u32 count, then per tensor
+    (u32 name_len, name, u8 dtype{0:f32,1:i32}, u32 ndim, u32 dims…, LE data)."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(named_leaves)))
+        total = 0
+        for name, leaf in named_leaves:
+            arr = np.asarray(leaf)
+            if arr.dtype == np.float32:
+                dt = 0
+            elif arr.dtype == np.int32:
+                dt = 1
+            else:
+                arr = arr.astype(np.float32)
+                dt = 0
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+            total += arr.size
+    return total
+
+
+def lower_model(cfg: M.ModelConfig, params, bucket: int) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    n_leaves = len(leaves)
+
+    if cfg.conditional:
+        def fn(*args):
+            p = jax.tree_util.tree_unflatten(treedef, args[:n_leaves])
+            src, x, t = args[n_leaves], args[n_leaves + 1], args[n_leaves + 2]
+            return M.apply(p, cfg, x, t, src, use_pallas=True)
+        ex = [jax.ShapeDtypeStruct(np.asarray(l).shape, np.asarray(l).dtype) for l in leaves]
+        ex += [jax.ShapeDtypeStruct((bucket, cfg.src_len), jnp.int32),
+               jax.ShapeDtypeStruct((bucket, cfg.seq_len), jnp.int32),
+               jax.ShapeDtypeStruct((bucket,), jnp.float32)]
+    else:
+        def fn(*args):
+            p = jax.tree_util.tree_unflatten(treedef, args[:n_leaves])
+            x, t = args[n_leaves], args[n_leaves + 1]
+            return M.apply(p, cfg, x, t, None, use_pallas=True)
+        ex = [jax.ShapeDtypeStruct(np.asarray(l).shape, np.asarray(l).dtype) for l in leaves]
+        ex += [jax.ShapeDtypeStruct((bucket, cfg.seq_len), jnp.int32),
+               jax.ShapeDtypeStruct((bucket,), jnp.float32)]
+
+    lowered = jax.jit(fn).lower(*ex)
+    return to_hlo_text(lowered)
+
+
+def lower_transition(bucket: int, n: int, v: int) -> str:
+    def fn(logits, x, gumbel, move):
+        return trans_kernel.transition_step(logits, x, gumbel, move, temperature=1.0)
+
+    ex = [jax.ShapeDtypeStruct((bucket, n, v), jnp.float32),
+          jax.ShapeDtypeStruct((bucket, n), jnp.int32),
+          jax.ShapeDtypeStruct((bucket, n, v), jnp.float32),
+          jax.ShapeDtypeStruct((bucket, n), jnp.int32)]
+    lowered = jax.jit(fn).lower(*ex)
+    return to_hlo_text(lowered)
+
+
+def export_model(out_dir: str, spec: trainer.TrainSpec, cfg, params,
+                 buckets=common.BATCH_BUCKETS) -> dict:
+    mdir = os.path.join(out_dir, spec.name)
+    os.makedirs(mdir, exist_ok=True)
+
+    named = M.flatten_named(params)
+    n_params = write_weights(os.path.join(mdir, "weights.bin"), named)
+
+    hlo_paths = {}
+    for b in buckets:
+        t0 = time.time()
+        text = lower_model(cfg, params, b)
+        rel = f"{spec.name}/model_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        hlo_paths[str(b)] = rel
+        print(f"  lowered {rel} ({len(text)//1024} KiB, {time.time()-t0:.1f}s)")
+
+    config = {
+        **cfg.to_json(),
+        "kind": spec.kind,
+        "task": spec.task,
+        "dataset": spec.dataset,
+        "continuous": spec.continuous,
+        "schedule": spec.schedule,
+        "tensor_order": [n for n, _ in named],
+        "mask_id": trainer.MASK_ID,
+        "noise_lo": trainer.NOISE_LO,
+        "train_t_grid": trainer.TRAIN_T_GRID,
+    }
+    with open(os.path.join(mdir, "config.json"), "w") as f:
+        json.dump(config, f, indent=1)
+
+    return {
+        "name": spec.name, "kind": spec.kind, "task": spec.task,
+        "dataset": spec.dataset, "continuous": spec.continuous,
+        "schedule": spec.schedule,
+        "config": f"{spec.name}/config.json",
+        "weights": f"{spec.name}/weights.bin",
+        "hlo": hlo_paths,
+        "transition": f"n{cfg.seq_len}_v{cfg.vocab}",
+        "n_params": n_params,
+        "n_tensors": len(named),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--buckets", default=",".join(map(str, common.BATCH_BUCKETS)))
+    args = ap.parse_args()
+    out = args.out
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "transition"), exist_ok=True)
+
+    only = os.environ.get("DNDM_ONLY")
+    specs = trainer.default_specs()
+    if only:
+        keep = set(only.split(","))
+        specs = [s for s in specs if s.name in keep]
+
+    entries, shapes = [], set()
+    for spec in specs:
+        print(f"[aot] training {spec.name} ({spec.kind}, {spec.dataset}"
+              f"{', continuous' if spec.continuous else ''})")
+        cfg, params = trainer.train(spec)
+        entries.append(export_model(out, spec, cfg, params, buckets))
+        shapes.add((cfg.seq_len, cfg.vocab))
+
+    trans = {}
+    for (n, v) in sorted(shapes):
+        tag = f"n{n}_v{v}"
+        trans[tag] = {}
+        for b in buckets:
+            text = lower_transition(b, n, v)
+            rel = f"transition/{tag}_b{b}.hlo.txt"
+            with open(os.path.join(out, rel), "w") as f:
+                f.write(text)
+            trans[tag][str(b)] = rel
+        print(f"  lowered transition {tag} for buckets {buckets}")
+
+    manifest = {"version": 1, "buckets": list(buckets),
+                "models": entries, "transition": trans}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    with open(os.path.join(out, "fixtures.json"), "w") as f:
+        json.dump(common.fixtures(), f, indent=1)
+    print(f"[aot] wrote {len(entries)} models → {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,320 @@
+"""Shared deterministic substrate: PRNG, vocabularies, synthetic corpora.
+
+Everything here is mirrored 1:1 in rust (`rust/src/data/`, `rust/src/text/`)
+so that the model trained at build time (python) and the evaluation sets
+generated at run time (rust) come from *exactly* the same distribution.
+Cross-language parity is enforced by fixtures: `make artifacts` dumps sample
+outputs into artifacts/fixtures.json, and `cargo test` re-generates them in
+rust and compares.
+
+The PRNG is splitmix64 — tiny, fast, and trivially portable.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+MASK64 = (1 << 64) - 1
+
+
+class Rng:
+    """splitmix64, mirrored by rust/src/schedule/rng.rs::SplitMix64."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def uniform(self) -> float:
+        """float64 in [0, 1): top 53 bits / 2^53 (same as rust)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        """integer in [0, n) — simple modulo (bias negligible for small n,
+        and identical across both implementations, which is what matters)."""
+        return self.next_u64() % n
+
+    def coin(self, p: float) -> bool:
+        return self.uniform() < p
+
+    def choice(self, xs: List) -> object:
+        return xs[self.below(len(xs))]
+
+    def fork(self, stream: int) -> "Rng":
+        """Derive an independent child stream (same rule in rust)."""
+        return Rng((self.next_u64() ^ (0xA0761D6478BD642F * (stream + 1))) & MASK64)
+
+
+# ---------------------------------------------------------------------------
+# Source-language grammar (an English-like template PCFG)
+# ---------------------------------------------------------------------------
+
+DET = ["the", "a", "every", "some", "this"]
+ADJ = ["quick", "old", "bright", "small", "happy", "green", "quiet", "strange"]
+NOUN = [
+    "fox", "city", "river", "teacher", "garden",
+    "mountain", "child", "song", "road", "winter",
+]
+VERB = [
+    "crosses", "finds", "watches", "builds",
+    "sings", "follows", "keeps", "remembers",
+]
+ADV = ["slowly", "often", "quietly", "never", "always"]
+PREP = ["near", "under", "over", "beside", "through"]
+
+SRC_WORDS: List[str] = sorted(set(DET + ADJ + NOUN + VERB + ADV + PREP))
+
+# Invented target-language surface forms: one pseudo-word per source word,
+# built deterministically from syllables so examples look like a real
+# translation task.  Index-aligned with SRC_WORDS.
+_ONSET = ["b", "d", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"]
+_NUCLEUS = ["a", "e", "i", "o", "u"]
+_CODA = ["", "n", "r", "s", "l", "k"]
+
+
+def _pseudo_word(i: int) -> str:
+    r = Rng(0xDA7A_0000 + i)
+    n_syll = 1 + r.below(2)
+    w = ""
+    for _ in range(n_syll + 1):
+        w += _ONSET[r.below(len(_ONSET))] + _NUCLEUS[r.below(len(_NUCLEUS))]
+    w += _CODA[r.below(len(_CODA))]
+    return w
+
+
+TGT_WORDS: List[str] = []
+_seen = set()
+for _i in range(len(SRC_WORDS)):
+    _w = _pseudo_word(_i)
+    _j = 0
+    while _w in _seen:  # ensure bijection
+        _j += 1
+        _w = _pseudo_word(1000 + 37 * _i + _j)
+    _seen.add(_w)
+    TGT_WORDS.append(_w)
+
+# Ambiguous synonyms for the "hard" dataset: every 3rd source word gets a
+# second valid target form.
+TGT_SYNONYM = {
+    i: _pseudo_word(5000 + i) + "x" for i in range(0, len(SRC_WORDS), 3)
+}
+
+
+def gen_sentence(rng: Rng) -> List[str]:
+    """One source sentence from the template grammar (5..11 words)."""
+    out = [rng.choice(DET)]
+    if rng.coin(0.6):
+        out.append(rng.choice(ADJ))
+    out.append(rng.choice(NOUN))
+    out.append(rng.choice(VERB))
+    out.append(rng.choice(DET))
+    if rng.coin(0.4):
+        out.append(rng.choice(ADJ))
+    out.append(rng.choice(NOUN))
+    if rng.coin(0.5):
+        out += [rng.choice(PREP), rng.choice(DET), rng.choice(NOUN)]
+    if rng.coin(0.4):
+        out.append(rng.choice(ADV))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Translation tasks (synthetic IWSLT14 / WMT14 / WMT16 analogs)
+# ---------------------------------------------------------------------------
+
+SRC_INDEX = {w: i for i, w in enumerate(SRC_WORDS)}
+
+DATASETS = ("synth-iwslt14", "synth-wmt14", "synth-wmt16")
+
+# fixed per-dataset seeds; split seeds derived by fork()
+DATASET_SEED = {
+    "synth-iwslt14": 0x1E51_0014,
+    "synth-wmt14": 0x3A7B_0014,
+    "synth-wmt16": 0x3A7B_0016,
+}
+SPLIT_STREAM = {"train": 1, "valid": 2, "test": 3}
+
+
+def translate(dataset: str, src: List[str], rng: Rng) -> List[str]:
+    """Deterministic-modulo-rng mapping source→target.
+
+    synth-iwslt14: word cipher, same order                (easy, high BLEU)
+    synth-wmt16  : cipher + swap adjacent pairs           (medium)
+    synth-wmt14  : cipher + full reversal + ambiguous
+                   synonym choices drawn from rng         (hard, BLEU ceiling)
+    """
+    base = [TGT_WORDS[SRC_INDEX[w]] for w in src]
+    if dataset == "synth-iwslt14":
+        return base
+    if dataset == "synth-wmt16":
+        out = list(base)
+        for i in range(0, len(out) - 1, 2):
+            out[i], out[i + 1] = out[i + 1], out[i]
+        return out
+    if dataset == "synth-wmt14":
+        out = []
+        for w in reversed(src):
+            i = SRC_INDEX[w]
+            if i in TGT_SYNONYM and rng.coin(0.5):
+                out.append(TGT_SYNONYM[i])
+            else:
+                out.append(TGT_WORDS[i])
+        return out
+    raise ValueError(f"unknown dataset {dataset}")
+
+
+def gen_pairs(dataset: str, split: str, count: int) -> List[Tuple[List[str], List[str]]]:
+    root = Rng(DATASET_SEED[dataset])
+    rng = root.fork(SPLIT_STREAM[split])
+    pairs = []
+    for _ in range(count):
+        src = gen_sentence(rng)
+        tgt = translate(dataset, src, rng)
+        pairs.append((src, tgt))
+    return pairs
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary (shared src+tgt, mirrored by rust/src/text/vocab.rs)
+# ---------------------------------------------------------------------------
+
+PAD, UNK, MASK = "<pad>", "<unk>", "<mask>"
+
+
+@dataclass
+class Vocab:
+    tokens: List[str]
+    index: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.index = {t: i for i, t in enumerate(self.tokens)}
+
+    def __len__(self):
+        return len(self.tokens)
+
+    @property
+    def pad_id(self) -> int:
+        return self.index[PAD]
+
+    @property
+    def mask_id(self) -> int:
+        return self.index[MASK]
+
+    def encode(self, words: List[str], n: int) -> List[int]:
+        ids = [self.index.get(w, self.index[UNK]) for w in words][:n]
+        ids += [self.pad_id] * (n - len(ids))
+        return ids
+
+    def decode(self, ids: List[int]) -> List[str]:
+        out = []
+        for i in ids:
+            t = self.tokens[i]
+            if t == PAD:
+                continue
+            out.append(t)
+        return out
+
+
+def translation_vocab() -> Vocab:
+    """specials + src words + tgt words + synonyms; MASK last-but-specials
+    so absorbing models share ids with multinomial ones."""
+    toks = [PAD, UNK, MASK]
+    toks += SRC_WORDS
+    toks += TGT_WORDS
+    toks += [TGT_SYNONYM[k] for k in sorted(TGT_SYNONYM)]
+    return Vocab(toks)
+
+
+# ---------------------------------------------------------------------------
+# Unconditional corpora (text8 / enwik8 analogs), char-level
+# ---------------------------------------------------------------------------
+
+TEXT8_CHARS = [PAD, UNK, MASK, " "] + [chr(c) for c in range(ord("a"), ord("z") + 1)]
+ENWIK8_CHARS = (
+    [PAD, UNK, MASK, " "]
+    + [chr(c) for c in range(ord("a"), ord("z") + 1)]
+    + list("0123456789")
+    + list("<>/=&;.,")
+)
+
+UNCOND_SEED = {"synth-text8": 0x7E87_0008, "synth-enwik8": 0xE9B1_0008}
+
+
+def text8_vocab() -> Vocab:
+    return Vocab(list(TEXT8_CHARS))
+
+
+def enwik8_vocab() -> Vocab:
+    return Vocab(list(ENWIK8_CHARS))
+
+
+def gen_text_stream(corpus: str, split: str, n_chars: int) -> str:
+    """Character stream for the unconditional corpora.
+
+    synth-text8 : grammar sentences, lowercase words + spaces only.
+    synth-enwik8: same sentences but some wrapped in <p>..</p> / <b>..</b>
+                  markup with occasional year digits — the 'messy bytes'
+                  analog of enwik8.
+    """
+    root = Rng(UNCOND_SEED[corpus])
+    rng = root.fork(SPLIT_STREAM[split])
+    parts: List[str] = []
+    total = 0
+    while total < n_chars:
+        words = gen_sentence(rng)
+        s = " ".join(words)
+        if corpus == "synth-enwik8":
+            if rng.coin(0.3):
+                tag = "p" if rng.coin(0.5) else "b"
+                s = f"<{tag}>{s}</{tag}>"
+            if rng.coin(0.2):
+                year = 1900 + rng.below(120)
+                s = s + f" {year};"
+        parts.append(s)
+        total += len(s) + 1
+    return " ".join(parts)[:n_chars]
+
+
+def gen_text_chunks(corpus: str, split: str, count: int, seq_len: int) -> List[List[int]]:
+    vocab = text8_vocab() if corpus == "synth-text8" else enwik8_vocab()
+    stream = gen_text_stream(corpus, split, count * seq_len + seq_len)
+    chunks = []
+    for i in range(count):
+        seg = stream[i * seq_len : (i + 1) * seq_len]
+        chunks.append([vocab.index.get(c, vocab.index[UNK]) for c in seg])
+    return chunks
+
+
+# ---------------------------------------------------------------------------
+# Model / task geometry shared with rust (also serialized to config.json)
+# ---------------------------------------------------------------------------
+
+SRC_LEN = 16   # source tokens (conditional)
+TGT_LEN = 16   # target tokens (conditional)
+UNCOND_LEN = 64  # chars (unconditional)
+BATCH_BUCKETS = (1, 4, 16)
+
+
+def fixtures() -> dict:
+    """Cross-language parity fixtures consumed by rust tests."""
+    _r = Rng(42)
+    fx = {"rng": [_r.next_u64() for _ in range(8)],
+          "uniform": [round(Rng(7).uniform(), 12)],
+          "datasets": {}}
+    for d in DATASETS:
+        pairs = gen_pairs(d, "test", 3)
+        fx["datasets"][d] = [[" ".join(s), " ".join(t)] for s, t in pairs]
+    fx["text8_head"] = gen_text_stream("synth-text8", "test", 64)
+    fx["enwik8_head"] = gen_text_stream("synth-enwik8", "test", 64)
+    fx["vocab_len"] = {
+        "translation": len(translation_vocab()),
+        "text8": len(text8_vocab()),
+        "enwik8": len(enwik8_vocab()),
+    }
+    return fx

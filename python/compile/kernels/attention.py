@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: tiled fused multi-head attention (online softmax).
+
+This is the denoiser's compute hot spot — every NFE the DNDM coordinator
+spends is one forward pass dominated by attention + FFN matmuls. The paper
+ran a fairseq transformer on an A6000; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) is:
+
+  * the GPU shared-memory K/V tile becomes a BlockSpec-scheduled HBM→VMEM
+    block: the grid walks (batch·head, q-block) and the kernel loops over
+    k-blocks with `jax.lax.fori_loop`, carrying online-softmax state
+    (m, l, acc) in VMEM scratch — the flash-attention recurrence;
+  * matmuls are shaped for the MXU: block_q × d and block_k × d tiles with
+    `preferred_element_type=float32` accumulation;
+  * no causal mask — discrete-diffusion denoisers are bidirectional.
+
+interpret=True always (CPU PJRT cannot run Mosaic custom-calls); the
+structural tiling is what we optimize, wall-clock on CPU is incidental.
+
+VMEM footprint per grid step (f32):
+  q-block  : block_q·d
+  k/v-block: 2·block_k·d
+  acc      : block_q·d
+  m, l     : 2·block_q
+With the defaults (block_q=block_k=64, d≤64) that is ≈ 64 KiB ≪ 16 MiB VMEM,
+leaving headroom for double-buffered HBM→VMEM prefetch on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, kv_len: int, scale: float):
+    """One (batch·head, q-block) grid step.
+
+    q_ref: [block_q, d] VMEM; k_ref/v_ref: [kv_len, d] VMEM (k streamed in
+    block_k slices below); o_ref: [block_q, d].
+    """
+    q = q_ref[...].astype(jnp.float32) * scale
+    block_q, d = q.shape
+
+    n_kb = pl.cdiv(kv_len, block_k)
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        # MXU matmul: [block_q, d] x [d, block_k]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        # mask padded kv tail (kv_len may not divide block_k)
+        kv_ids = i * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(kv_ids < kv_len, s, NEG_INF)
+
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """Fused bidirectional multi-head attention.
+
+    q: [B, H, Sq, D]; k, v: [B, H, Sk, D] → [B, H, Sq, D].
+    Self- and cross-attention share this entry (Sq ≠ Sk allowed).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    scale = 1.0 / (d ** 0.5)
+
+    # Pad both sequence dims to block multiples: the kernel's k-loop uses
+    # dynamic slices, and XLA clamps out-of-bounds starts (which would
+    # silently misalign the tail block against its iota mask). Padded kv
+    # columns are masked with NEG_INF via kv_len; padded q rows are sliced
+    # off the output.
+    sq_pad = pl.cdiv(sq, block_q) * block_q
+    sk_pad = pl.cdiv(sk, block_k) * block_k
+    qf = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - sq), (0, 0))).reshape(b * h, sq_pad, d)
+    kf = jnp.pad(k, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0))).reshape(b * h, sk_pad, d)
+    vf = jnp.pad(v, ((0, 0), (0, 0), (0, sk_pad - sk), (0, 0))).reshape(b * h, sk_pad, d)
+
+    grid = (b * h, sq_pad // block_q)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=block_k, kv_len=sk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, sk_pad, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, sk_pad, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_pad, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq_pad, d)[:, :, :sq, :]

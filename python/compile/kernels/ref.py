@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth that python/tests/test_kernel.py sweeps the
+Pallas implementations against (hypothesis over shapes / dtypes / seeds).
+They are also the `use_pallas=False` fallback inside model.py, which keeps
+the L2 graph debuggable without the kernels in the loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Multi-head attention oracle.
+
+    q, k, v: [B, H, S, D]  →  out: [B, H, S, D]
+    Bidirectional (no causal mask) — discrete-diffusion denoisers attend to
+    both past and future positions (§4.1 of the paper). Cross-attention is
+    the same math with k/v length ≠ q length.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores - m)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def transition_ref(
+    logits: jnp.ndarray,   # [B, N, V] denoiser output
+    x_t: jnp.ndarray,      # [B, N]    current tokens (int32)
+    gumbel: jnp.ndarray,   # [B, N, V] pre-drawn Gumbel(0,1) noise
+    move: jnp.ndarray,     # [B, N]    1 where τ_n == t (token transitions now)
+    temperature: float = 1.0,
+):
+    """DNDM transition update oracle — eq. (9) of the paper.
+
+    x̂0 = argmax(logits + temperature·gumbel)   (Gumbel-max categorical draw;
+                                                temperature=0 → greedy argmax)
+    x_{t-1,n} = 1(move_n)·x̂0_n + 1(¬move_n)·x_{t,n}
+
+    Returns (new_x [B,N] i32, x0_hat [B,N] i32, score [B,N] f32) where score
+    is the log-probability of the decoded token under `logits` (used by the
+    DNDM-k / RDM-k top-k selection rule, Appendix E).
+    """
+    pert = logits + jnp.asarray(temperature, logits.dtype) * gumbel
+    x0_hat = jnp.argmax(pert, axis=-1).astype(jnp.int32)
+
+    mx = jnp.max(logits, axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx[..., None]), axis=-1)) + mx
+    picked = jnp.take_along_axis(logits, x0_hat[..., None], axis=-1)[..., 0]
+    score = (picked - lse).astype(jnp.float32)
+
+    new_x = jnp.where(move.astype(bool), x0_hat, x_t).astype(jnp.int32)
+    return new_x, x0_hat, score

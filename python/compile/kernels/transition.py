@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: fused DNDM transition update (the paper-specific op).
+
+Implements eq. (9) — the de-randomized reverse step that makes DNDM fast:
+
+    x̂0        = argmax(logits + temperature·gumbel)      (Gumbel-max draw)
+    x_{t-1,n} = 1(τ_n = t)·x̂0_n + 1(τ_n ≠ t)·x_{t,n}
+
+plus the per-token log-prob `score` of the decoded token that the top-k
+variants (DNDM-k, Alg. 4) rank on. Fusing the three passes (softmax
+normalizer, gumbel-perturbed argmax, masked select) into one kernel means
+the [N, V] logits tile is read from HBM exactly once.
+
+GPU→TPU rethink (DESIGN.md §Hardware-Adaptation): the per-token curand +
+reduction a CUDA port would use becomes a VPU row-reduction over a VMEM
+tile of [block_n, V]; gumbel noise is pre-drawn host/device-side and
+streamed in as an input so the kernel stays deterministic given its inputs
+(which is exactly DNDM's predetermined-transition-time philosophy).
+
+VMEM per grid step (f32): 2·block_n·V + O(block_n). With block_n=8 and
+V=1024 that is 64 KiB — far under VMEM; block_n trades occupancy against
+the V-width of the tile.
+
+interpret=True always (see attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 8
+
+
+def _transition_kernel(logits_ref, gumbel_ref, x_ref, move_ref,
+                       newx_ref, x0_ref, score_ref, *, temperature: float):
+    """One [block_n, V] tile: fused perturbation+argmax+logsumexp+select."""
+    logits = logits_ref[...].astype(jnp.float32)     # [bn, V]
+    pert = logits + temperature * gumbel_ref[...].astype(jnp.float32)
+
+    x0 = jnp.argmax(pert, axis=-1).astype(jnp.int32)  # [bn]
+
+    # log-prob of decoded token: picked - logsumexp(logits), single pass
+    mx = jnp.max(logits, axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx[:, None]), axis=-1)) + mx
+    # gather via one-hot dot (VPU-friendly; avoids dynamic gather lowering)
+    vocab = logits.shape[-1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    onehot = (cols == x0[:, None]).astype(jnp.float32)
+    picked = jnp.sum(logits * onehot, axis=-1)
+
+    move = move_ref[...] != 0
+    newx_ref[...] = jnp.where(move, x0, x_ref[...]).astype(jnp.int32)
+    x0_ref[...] = x0
+    score_ref[...] = (picked - lse).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "block_n"))
+def transition_step(
+    logits: jnp.ndarray,   # [B, N, V] f32
+    x_t: jnp.ndarray,      # [B, N]    i32
+    gumbel: jnp.ndarray,   # [B, N, V] f32
+    move: jnp.ndarray,     # [B, N]    i32 (1 = τ_n == t)
+    temperature: float = 1.0,
+    block_n: int = DEFAULT_BLOCK_N,
+):
+    """Fused DNDM transition update. Returns (new_x, x0_hat, score)."""
+    b, n, v = logits.shape
+    lf = logits.reshape(b * n, v)
+    gf = gumbel.reshape(b * n, v)
+    xf = x_t.reshape(b * n)
+    mf = move.reshape(b * n)
+
+    bn = min(block_n, b * n)
+    grid = (pl.cdiv(b * n, bn),)
+    new_x, x0_hat, score = pl.pallas_call(
+        functools.partial(_transition_kernel, temperature=temperature),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, v), lambda i: (i, 0)),
+            pl.BlockSpec((bn, v), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * n,), jnp.int32),
+            jax.ShapeDtypeStruct((b * n,), jnp.int32),
+            jax.ShapeDtypeStruct((b * n,), jnp.float32),
+        ],
+        interpret=True,
+    )(lf, gf, xf, mf)
+    return new_x.reshape(b, n), x0_hat.reshape(b, n), score.reshape(b, n)

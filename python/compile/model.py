@@ -1,0 +1,242 @@
+"""L2: the JAX denoiser `p_θ(x̂0 | x_t, t[, src])` — build-time only.
+
+Architecture mirrors the paper's §4 setup scaled to this testbed:
+  * conditional (machine translation): transformer encoder–decoder with
+    **bidirectional** self-attention (no causal mask) + cross-attention,
+    the fairseq/RDM shape (Zheng et al. 2023) at d_model=128;
+  * unconditional (text8/enwik8 analogs): decoder-only stack, the paper's
+    12-layer GPT-like decoder scaled to 4 layers.
+
+Timestep conditioning uses a sinusoidal embedding of normalized t ∈ [0, 1]
+passed through a 2-layer MLP and added at every position — one network
+serves both discrete grids (t = k/T for any T) and DNDM-C's continuous
+timestamps, which is exactly what §3.3 / Table 12 need.
+
+Attention routes through the L1 Pallas kernel (kernels/attention.py) so the
+kernel lowers into the same HLO artifact rust executes; `use_pallas=False`
+falls back to the pure-jnp oracle for debugging and A/B tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    seq_len: int                # target / unconditional length N
+    src_len: int = 0            # 0 → unconditional (no encoder)
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    enc_layers: int = 2
+    dec_layers: int = 2
+
+    @property
+    def conditional(self) -> bool:
+        return self.src_len > 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (nested dicts; jax sorts dict keys → deterministic flatten)
+# ---------------------------------------------------------------------------
+
+def _dense(key, fan_in, fan_out):
+    w = jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+    w = w * (1.0 / jnp.sqrt(fan_in))
+    return {"w": w, "b": jnp.zeros((fan_out,), jnp.float32)}
+
+
+def _ln_init(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _block(key, cfg: ModelConfig, cross: bool):
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": _ln_init(cfg.d_model),
+        "attn": {
+            "wq": _dense(ks[0], cfg.d_model, cfg.d_model),
+            "wk": _dense(ks[1], cfg.d_model, cfg.d_model),
+            "wv": _dense(ks[2], cfg.d_model, cfg.d_model),
+            "wo": _dense(ks[3], cfg.d_model, cfg.d_model),
+        },
+        "ln2": _ln_init(cfg.d_model),
+        "ffn": {
+            "w1": _dense(ks[4], cfg.d_model, cfg.d_ff),
+            "w2": _dense(ks[5], cfg.d_ff, cfg.d_model),
+        },
+    }
+    if cross:
+        p["lnx"] = _ln_init(cfg.d_model)
+        p["xattn"] = {
+            "wq": _dense(ks[6], cfg.d_model, cfg.d_model),
+            "wk": _dense(ks[7], cfg.d_model, cfg.d_model),
+            "wv": _dense(jax.random.fold_in(key, 99), cfg.d_model, cfg.d_model),
+            "wo": _dense(jax.random.fold_in(key, 98), cfg.d_model, cfg.d_model),
+        }
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6 + cfg.enc_layers + cfg.dec_layers)
+    params = {
+        "tok_embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "time_mlp": {
+            "w1": _dense(ks[1], cfg.d_model, cfg.d_model),
+            "w2": _dense(ks[2], cfg.d_model, cfg.d_model),
+        },
+        "dec": {
+            f"layer_{i:02d}": _block(ks[6 + cfg.enc_layers + i], cfg, cfg.conditional)
+            for i in range(cfg.dec_layers)
+        },
+        "ln_out": _ln_init(cfg.d_model),
+        "head": _dense(ks[3], cfg.d_model, cfg.vocab),
+    }
+    if cfg.conditional:
+        params["src_embed"] = jax.random.normal(ks[4], (cfg.vocab, cfg.d_model)) * 0.02
+        params["enc"] = {
+            f"layer_{i:02d}": _block(ks[6 + i], cfg, False)
+            for i in range(cfg.enc_layers)
+        }
+        params["ln_enc"] = _ln_init(cfg.d_model)
+    return params
+
+
+def flatten_named(params) -> list:
+    """[(dot.path, array)] in jax's canonical (sorted-key) order — the order
+    weights.bin is written in and rust uploads device buffers in."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = ".".join(str(getattr(k, "key", k)) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def unflatten_like(params_template, leaves):
+    treedef = jax.tree_util.tree_structure(params_template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _layer_norm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def _apply_dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _sinusoidal(pos: jnp.ndarray, dim: int, max_period: float = 10_000.0):
+    """pos: [...] float → [..., dim] features."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half) / half)
+    args = pos[..., None] * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+def _mha(p, cfg: ModelConfig, xq, xkv, use_pallas: bool):
+    b, sq, d = xq.shape
+    sk = xkv.shape[1]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = _apply_dense(p["wq"], xq).reshape(b, sq, h, hd).transpose(0, 2, 1, 3)
+    k = _apply_dense(p["wk"], xkv).reshape(b, sk, h, hd).transpose(0, 2, 1, 3)
+    v = _apply_dense(p["wv"], xkv).reshape(b, sk, h, hd).transpose(0, 2, 1, 3)
+    o = attn_kernel.mha(q, k, v) if use_pallas else kref.mha_ref(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, sq, d)
+    return _apply_dense(p["wo"], o)
+
+
+def _ffn(p, x):
+    return _apply_dense(p["w2"], jax.nn.gelu(_apply_dense(p["w1"], x)))
+
+
+def _run_block(p, cfg, x, ctx, temb, use_pallas):
+    """Pre-LN transformer block; `temb` is added to the residual stream
+    before self-attention so every layer sees the timestep; `ctx` is the
+    encoder memory (None → decoder-only / encoder block)."""
+    x = x + temb
+    h = _layer_norm(p["ln1"], x)
+    x = x + _mha(p["attn"], cfg, h, h, use_pallas)
+    if ctx is not None:
+        x = x + _mha(p["xattn"], cfg, _layer_norm(p["lnx"], x), ctx, use_pallas)
+    x = x + _ffn(p["ffn"], _layer_norm(p["ln2"], x))
+    return x
+
+
+def encode(params, cfg: ModelConfig, src: jnp.ndarray, use_pallas: bool = True):
+    """src: [B, M] int32 → memory [B, M, D]."""
+    pos = jnp.arange(cfg.src_len, dtype=jnp.float32)
+    h = params["src_embed"][src] + _sinusoidal(pos, cfg.d_model)
+    zero = jnp.zeros((1, 1, cfg.d_model), jnp.float32)
+    for i in range(cfg.enc_layers):
+        h = _run_block(params["enc"][f"layer_{i:02d}"], cfg, h, None, zero, use_pallas)
+    return _layer_norm(params["ln_enc"], h)
+
+
+def apply(params, cfg: ModelConfig, x_t: jnp.ndarray, t: jnp.ndarray,
+          src: jnp.ndarray | None = None, use_pallas: bool = True):
+    """Denoiser forward.
+
+    x_t: [B, N] int32 noisy tokens; t: [B] f32 normalized time ∈ [0,1];
+    src: [B, M] int32 (conditional only). Returns logits [B, N, V].
+    """
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    h = params["tok_embed"][x_t] + _sinusoidal(pos, cfg.d_model)
+
+    temb = _sinusoidal(t * 1000.0, cfg.d_model)          # [B, D]
+    temb = _apply_dense(params["time_mlp"]["w2"],
+                        jax.nn.silu(_apply_dense(params["time_mlp"]["w1"], temb)))
+    temb = temb[:, None, :]                               # [B, 1, D]
+
+    ctx = None
+    if cfg.conditional:
+        assert src is not None
+        ctx = encode(params, cfg, src, use_pallas)
+
+    for i in range(cfg.dec_layers):
+        h = _run_block(params["dec"][f"layer_{i:02d}"], cfg, h, ctx, temb, use_pallas)
+
+    h = _layer_norm(params["ln_out"], h)
+    return _apply_dense(params["head"], h)
+
+
+def apply_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, t: jnp.ndarray,
+                 memory: jnp.ndarray, use_pallas: bool = True):
+    """Decoder-only forward against a precomputed encoder `memory`.
+
+    The L2 perf split (EXPERIMENTS.md §Perf): in conditional sampling the
+    source never changes across the reverse trajectory, so the coordinator
+    runs `encode` once per batch and this decode-only graph once per NFE —
+    removing the encoder's share of every subsequent call.
+    """
+    pos = jnp.arange(cfg.seq_len, dtype=jnp.float32)
+    h = params["tok_embed"][x_t] + _sinusoidal(pos, cfg.d_model)
+    temb = _sinusoidal(t * 1000.0, cfg.d_model)
+    temb = _apply_dense(params["time_mlp"]["w2"],
+                        jax.nn.silu(_apply_dense(params["time_mlp"]["w1"], temb)))
+    temb = temb[:, None, :]
+    for i in range(cfg.dec_layers):
+        h = _run_block(params["dec"][f"layer_{i:02d}"], cfg, h, memory, temb, use_pallas)
+    h = _layer_norm(params["ln_out"], h)
+    return _apply_dense(params["head"], h)

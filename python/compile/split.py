@@ -1,0 +1,133 @@
+"""Post-hoc AOT split: add encode/decode HLO pairs to existing artifacts.
+
+The L2 §Perf optimization (EXPERIMENTS.md): conditional sampling re-ran
+the encoder on every NFE call although src is constant per request. This
+script reconstructs each conditional model's params from weights.bin and
+lowers two extra graphs per bucket:
+
+  encode_b{B}: (w…, src i32[B,M])                      → (memory f32[B,M,D],)
+  decode_b{B}: (w…, memory f32[B,M,D], x i32[B,N], t f32[B]) → (logits,)
+
+and records them in the manifest as "hlo_enc" / "hlo_dec". The rust
+runtime uses them transparently, caching the memory device buffer per
+(src batch) — see runtime::model::ModelRuntime.
+
+Usage: python -m compile.split --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .aot import to_hlo_text
+
+try:  # readers for weights.bin live in the tests module's reference impl
+    from tests.test_aot import read_weights  # type: ignore
+except Exception:  # pragma: no cover - fallback copy
+    import struct
+
+    def read_weights(path):
+        out = []
+        with open(path, "rb") as f:
+            assert f.read(6) == b"DNDW1\x00"
+            (count,) = struct.unpack("<I", f.read(4))
+            for _ in range(count):
+                (nlen,) = struct.unpack("<I", f.read(4))
+                name = f.read(nlen).decode()
+                dt, ndim = struct.unpack("<BI", f.read(5))
+                dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+                n = int(np.prod(dims)) if ndim else 1
+                dtype = np.float32 if dt == 0 else np.int32
+                data = np.frombuffer(f.read(4 * n), dtype=dtype).reshape(dims)
+                out.append((name, data))
+        return out
+
+
+def rebuild_params(cfg: M.ModelConfig, weights_path: str):
+    """Reconstruct the params pytree from the flat file (canonical order)."""
+    template = M.init_params(jax.random.PRNGKey(0), cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    named = read_weights(weights_path)
+    assert len(named) == len(leaves), f"{len(named)} vs {len(leaves)}"
+    new_leaves = [jnp.asarray(a) for _, a in named]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def lower_encode(cfg: M.ModelConfig, params, bucket: int) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    n_leaves = len(leaves)
+
+    def fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:n_leaves])
+        return M.encode(p, cfg, args[n_leaves], use_pallas=True)
+
+    ex = [jax.ShapeDtypeStruct(np.asarray(l).shape, np.asarray(l).dtype) for l in leaves]
+    ex += [jax.ShapeDtypeStruct((bucket, cfg.src_len), jnp.int32)]
+    # untupled: the memory buffer feeds decode_b directly on-device
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*ex), return_tuple=False)
+
+
+def lower_decode(cfg: M.ModelConfig, params, bucket: int) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    n_leaves = len(leaves)
+
+    def fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:n_leaves])
+        mem, x, t = args[n_leaves], args[n_leaves + 1], args[n_leaves + 2]
+        return M.apply_decode(p, cfg, x, t, mem, use_pallas=True)
+
+    ex = [jax.ShapeDtypeStruct(np.asarray(l).shape, np.asarray(l).dtype) for l in leaves]
+    ex += [jax.ShapeDtypeStruct((bucket, cfg.src_len, cfg.d_model), jnp.float32),
+           jax.ShapeDtypeStruct((bucket, cfg.seq_len), jnp.int32),
+           jax.ShapeDtypeStruct((bucket,), jnp.float32)]
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*ex))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out
+
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    for entry in manifest["models"]:
+        if entry["task"] != "cond":
+            continue
+        with open(os.path.join(out, entry["config"])) as f:
+            cj = json.load(f)
+        cfg = M.ModelConfig(
+            vocab=cj["vocab"], seq_len=cj["seq_len"], src_len=cj["src_len"],
+            d_model=cj["d_model"], n_heads=cj["n_heads"], d_ff=cj["d_ff"],
+            enc_layers=cj["enc_layers"], dec_layers=cj["dec_layers"])
+        params = rebuild_params(cfg, os.path.join(out, entry["weights"]))
+
+        entry["hlo_enc"], entry["hlo_dec"] = {}, {}
+        for b in (int(k) for k in entry["hlo"]):
+            enc = lower_encode(cfg, params, b)
+            dec = lower_decode(cfg, params, b)
+            enc_rel = f"{entry['name']}/encode_b{b}.hlo.txt"
+            dec_rel = f"{entry['name']}/decode_b{b}.hlo.txt"
+            with open(os.path.join(out, enc_rel), "w") as f:
+                f.write(enc)
+            with open(os.path.join(out, dec_rel), "w") as f:
+                f.write(dec)
+            entry["hlo_enc"][str(b)] = enc_rel
+            entry["hlo_dec"][str(b)] = dec_rel
+        print(f"[split] {entry['name']}: encode/decode for buckets {list(entry['hlo'])}")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[split] manifest updated")
+
+
+if __name__ == "__main__":
+    main()

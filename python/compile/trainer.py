@@ -1,0 +1,219 @@
+"""Build-time training of the denoiser networks.
+
+The paper evaluates *sampling* with pretrained RDM / multinomial-diffusion
+checkpoints; those are not available here, so `make artifacts` trains the
+same-shaped networks on the synthetic corpora (DESIGN.md §3). Training uses
+the RDM-style reparameterized objective: sample t, corrupt x0 → x_t with the
+forward marginal q(x_t|x0) = Cat(α_t·x0 + (1−α_t)·q_noise) (Thm 3.1 — shared
+by the Markov and non-Markov processes, which is exactly why a
+Markov-trained network drives DNDM sampling unchanged), then cross-entropy
+of p_θ(x̂0|x_t, t) against x0, up-weighted on corrupted positions.
+
+Two time regimes (§3.3 / Table 12):
+  * discrete  : t drawn from the T=50 grid {1/T … 1} (the paper's checkpoints)
+  * continuous: t ~ U(0, 1]                         (C-DNDM training)
+
+Gradients flow through the pure-jnp oracle attention (`use_pallas=False`);
+pallas_call has no registered VJP, and the oracle is numerically identical
+(tested in python/tests/test_kernel.py). AOT export re-lowers the same
+params with the Pallas kernels in the graph.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from . import model as M
+
+# First vocab id that multinomial noise may produce (specials excluded so
+# noise never injects <pad>/<unk>/<mask>); mirrored by rust diffusion::noise.
+NOISE_LO = 3
+MASK_ID = 2
+
+TRAIN_T_GRID = 50  # discrete-training grid, as in the paper's checkpoints
+
+
+@dataclass
+class TrainSpec:
+    name: str            # manifest key, e.g. "cond_multi_iwslt14"
+    kind: str            # "multinomial" | "absorbing"
+    task: str            # "cond" | "uncond"
+    dataset: str         # synth-iwslt14 / synth-wmt14 / synth-wmt16 / synth-text8 / synth-enwik8
+    continuous: bool = False  # continuous-time training (Table 12)
+    schedule: str = "cosine_sq"
+    steps: int = 800
+    batch: int = 32
+    lr: float = 2e-3
+
+
+def alpha_of(schedule: str, t):
+    """Continuous α(t), t ∈ [0,1]. Mirrored by rust schedule::alpha."""
+    if schedule == "linear":
+        return 1.0 - t
+    if schedule == "cosine":
+        return jnp.cos(jnp.pi * t / 2.0)
+    if schedule == "cosine_sq":
+        return jnp.cos(jnp.pi * t / 2.0) ** 2
+    raise ValueError(schedule)
+
+
+def make_config(spec: TrainSpec) -> M.ModelConfig:
+    if spec.task == "cond":
+        vocab = len(common.translation_vocab())
+        return M.ModelConfig(vocab=vocab, seq_len=common.TGT_LEN,
+                             src_len=common.SRC_LEN, d_model=128, n_heads=4,
+                             d_ff=256, enc_layers=2, dec_layers=2)
+    vocab = len(common.text8_vocab() if spec.dataset == "synth-text8"
+                else common.enwik8_vocab())
+    return M.ModelConfig(vocab=vocab, seq_len=common.UNCOND_LEN, src_len=0,
+                         d_model=128, n_heads=4, d_ff=256,
+                         enc_layers=0, dec_layers=4)
+
+
+# ---------------------------------------------------------------------------
+# Data pipelines (numpy, deterministic via common.Rng)
+# ---------------------------------------------------------------------------
+
+def cond_dataset(spec: TrainSpec, split: str, count: int):
+    vocab = common.translation_vocab()
+    pairs = common.gen_pairs(spec.dataset, split, count)
+    src = np.array([vocab.encode(s, common.SRC_LEN) for s, _ in pairs], np.int32)
+    tgt = np.array([vocab.encode(t, common.TGT_LEN) for _, t in pairs], np.int32)
+    return src, tgt
+
+
+def uncond_dataset(spec: TrainSpec, split: str, count: int):
+    chunks = common.gen_text_chunks(spec.dataset, split, count, common.UNCOND_LEN)
+    return None, np.array(chunks, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Corruption + loss
+# ---------------------------------------------------------------------------
+
+def corrupt(key, x0, t, kind: str, schedule: str, vocab: int):
+    """Forward marginal q(x_t|x0): keep token w.p. α(t), else draw q_noise."""
+    kb, kn = jax.random.split(key)
+    a = alpha_of(schedule, t)[:, None]                      # [B,1]
+    keep = jax.random.uniform(kb, x0.shape) < a
+    if kind == "absorbing":
+        noise = jnp.full_like(x0, MASK_ID)
+    else:
+        noise = jax.random.randint(kn, x0.shape, NOISE_LO, vocab)
+    return jnp.where(keep, x0, noise.astype(x0.dtype))
+
+
+def loss_fn(params, cfg, key, x0, src, kind, schedule, continuous):
+    b = x0.shape[0]
+    kt, kc = jax.random.split(key)
+    if continuous:
+        t = jax.random.uniform(kt, (b,), minval=1e-4, maxval=1.0)
+    else:
+        k = jax.random.randint(kt, (b,), 1, TRAIN_T_GRID + 1)
+        t = k.astype(jnp.float32) / TRAIN_T_GRID
+    x_t = corrupt(kc, x0, t, kind, schedule, cfg.vocab)
+    logits = M.apply(params, cfg, x_t, t, src, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, x0[..., None], axis=-1)[..., 0]
+    w = jnp.where(x_t == x0, 0.1, 1.0)                      # RDM-style reweighting
+    return jnp.sum(nll * w) / jnp.sum(w)
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam (optax is not in the image)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = 1.0 / (1 - b1 ** t)
+    vh = 1.0 / (1 - b2 ** t)
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm * mh) / (jnp.sqrt(vv * vh) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+def train(spec: TrainSpec, verbose: bool = True):
+    cfg = make_config(spec)
+    if spec.task == "cond":
+        src_all, tgt_all = cond_dataset(spec, "train", 4096)
+    else:
+        src_all, tgt_all = uncond_dataset(spec, "train", 2048)
+
+    # deterministic per-model seed (python's str hash is salted per process)
+    name_code = sum((i + 1) * b for i, b in enumerate(spec.name.encode())) & 0xFFFF
+    key = jax.random.PRNGKey(common.Rng(name_code).next_u64() & 0x7FFFFFFF)
+    key, ki = jax.random.split(key)
+    params = M.init_params(ki, cfg)
+    opt = adam_init(params)
+
+    steps = int(os.environ.get("DNDM_TRAIN_STEPS", spec.steps))
+
+    @jax.jit
+    def step(params, opt, key, x0, src, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, cfg, key, x0, src, spec.kind, spec.schedule, spec.continuous)
+        params, opt = adam_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    def lr_at(i):
+        """linear warmup (40 steps) then cosine decay to 10%."""
+        warm = 40.0
+        if i < warm:
+            return spec.lr * (i + 1) / warm
+        frac = (i - warm) / max(1.0, steps - warm)
+        return spec.lr * (0.1 + 0.9 * 0.5 * (1 + np.cos(np.pi * frac)))
+
+    n = tgt_all.shape[0]
+    t0 = time.time()
+    for i in range(steps):
+        lo = (i * spec.batch) % n
+        idx = np.arange(lo, lo + spec.batch) % n
+        x0 = jnp.asarray(tgt_all[idx])
+        src = jnp.asarray(src_all[idx]) if src_all is not None else None
+        key, kk = jax.random.split(key)
+        params, opt, loss = step(params, opt, kk, x0, src, lr_at(i))
+        if verbose and (i % 50 == 0 or i == steps - 1):
+            print(f"  [{spec.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.1f}s)")
+    return cfg, params
+
+
+def default_specs() -> list[TrainSpec]:
+    """Every checkpoint the benches need (DESIGN.md §5)."""
+    specs = []
+    for ds in common.DATASETS:
+        short = ds.replace("synth-", "")
+        specs.append(TrainSpec(f"cond_multi_{short}", "multinomial", "cond", ds))
+        specs.append(TrainSpec(f"cond_absorb_{short}", "absorbing", "cond", ds))
+    # Table 12: continuous-time trained variants (IWSLT14 + WMT16)
+    for ds in ("synth-iwslt14", "synth-wmt16"):
+        short = ds.replace("synth-", "")
+        specs.append(TrainSpec(f"cond_multi_{short}_cont", "multinomial", "cond",
+                               ds, continuous=True))
+        specs.append(TrainSpec(f"cond_absorb_{short}_cont", "absorbing", "cond",
+                               ds, continuous=True))
+    # Table 4: unconditional multinomial (vanilla-vs-DNDM comparison)
+    specs.append(TrainSpec("uncond_multi_text8", "multinomial", "uncond",
+                           "synth-text8", schedule="cosine", steps=600, batch=16))
+    specs.append(TrainSpec("uncond_multi_enwik8", "multinomial", "uncond",
+                           "synth-enwik8", schedule="cosine", steps=600, batch=16))
+    return specs

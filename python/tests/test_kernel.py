@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes/dtypes/seeds and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref, transition
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    sq=st.sampled_from([1, 5, 16, 33]),
+    sk=st.sampled_from([1, 7, 16, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mha_matches_ref(b, h, sq, sk, d, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, sq, d), jnp.float32)
+    k = _rand(rng, (b, h, sk, d), jnp.float32)
+    v = _rand(rng, (b, h, sk, d), jnp.float32)
+    out = attention.mha(q, k, v)
+    exp = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(4, 4), (8, 16), (64, 64), (16, 8)])
+def test_mha_block_shapes(block_q, block_k):
+    """Tiling must not change the numbers (online-softmax invariance)."""
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (2, 2, 17, 16), jnp.float32)
+    k = _rand(rng, (2, 2, 23, 16), jnp.float32)
+    v = _rand(rng, (2, 2, 23, 16), jnp.float32)
+    out = attention.mha(q, k, v, block_q=block_q, block_k=block_k)
+    exp = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+def test_mha_bf16_runs():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 2, 16, 16), jnp.bfloat16)
+    k = _rand(rng, (1, 2, 16, 16), jnp.bfloat16)
+    v = _rand(rng, (1, 2, 16, 16), jnp.bfloat16)
+    out = attention.mha(q, k, v)
+    exp = ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(exp),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_mha_softmax_rows_sum_to_one_property():
+    """out of attention over constant V equals that constant (probs sum to 1)."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 1, 9, 8), jnp.float32)
+    k = _rand(rng, (1, 1, 21, 8), jnp.float32)
+    v = jnp.ones((1, 1, 21, 8), jnp.float32) * 3.5
+    out = attention.mha(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# transition update
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    n=st.sampled_from([1, 4, 16, 64]),
+    v=st.sampled_from([5, 27, 99, 130]),
+    temp=st.sampled_from([0.0, 0.7, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_transition_matches_ref(b, n, v, temp, seed):
+    rng = np.random.default_rng(seed)
+    logits = _rand(rng, (b, n, v), jnp.float32)
+    gumbel = jnp.asarray(rng.gumbel(size=(b, n, v)).astype(np.float32))
+    x_t = jnp.asarray(rng.integers(0, v, size=(b, n)).astype(np.int32))
+    move = jnp.asarray(rng.integers(0, 2, size=(b, n)).astype(np.int32))
+    got = transition.transition_step(logits, x_t, gumbel, move, temperature=temp)
+    exp = ref.transition_ref(logits, x_t, gumbel, move, temperature=temp)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(exp[1]))
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(exp[2]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_transition_move_semantics():
+    """move=0 must copy x_t verbatim; move=1 must install x̂0 (eq. 9)."""
+    b, n, v = 2, 8, 13
+    rng = np.random.default_rng(3)
+    logits = _rand(rng, (b, n, v), jnp.float32)
+    x_t = jnp.asarray(rng.integers(0, v, size=(b, n)).astype(np.int32))
+    zeros = jnp.zeros((b, n, v), jnp.float32)
+
+    frozen, _, _ = transition.transition_step(
+        logits, x_t, zeros, jnp.zeros((b, n), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(frozen), np.asarray(x_t))
+
+    moved, x0_hat, _ = transition.transition_step(
+        logits, x_t, zeros, jnp.ones((b, n), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(moved), np.asarray(x0_hat))
+    np.testing.assert_array_equal(
+        np.asarray(x0_hat), np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_transition_scores_are_logprobs():
+    """scores must be valid log-probabilities of the decoded token."""
+    rng = np.random.default_rng(4)
+    logits = _rand(rng, (1, 4, 11), jnp.float32)
+    x_t = jnp.zeros((1, 4), jnp.int32)
+    zeros = jnp.zeros_like(logits)
+    _, x0_hat, score = transition.transition_step(
+        logits, x_t, zeros, jnp.ones((1, 4), jnp.int32))
+    logp = jax.nn.log_softmax(logits, -1)
+    exp = np.take_along_axis(np.asarray(logp), np.asarray(x0_hat)[..., None], -1)[..., 0]
+    np.testing.assert_allclose(np.asarray(score), exp, atol=2e-5)
+    assert (np.asarray(score) <= 1e-6).all()
+
+
+def test_transition_gumbel_max_is_categorical():
+    """Gumbel-max sampling frequencies ≈ softmax probabilities."""
+    v = 4
+    logits = jnp.asarray([[np.log([0.1, 0.2, 0.3, 0.4]).astype(np.float32)]])
+    rng = np.random.default_rng(5)
+    counts = np.zeros(v)
+    trials = 800
+    g = jnp.asarray(rng.gumbel(size=(trials, 1, 1, v)).astype(np.float32))
+    for i in range(trials):
+        _, x0, _ = transition.transition_step(
+            logits, jnp.zeros((1, 1), jnp.int32), g[i],
+            jnp.ones((1, 1), jnp.int32))
+        counts[int(x0[0, 0])] += 1
+    freq = counts / trials
+    np.testing.assert_allclose(freq, [0.1, 0.2, 0.3, 0.4], atol=0.06)

@@ -1,0 +1,49 @@
+//! Figure 1: generation quality (BLEU) vs generation time on the IWSLT14
+//! analog, four samplers (RDM, DNDM, RDM-k, DNDM-k) × step counts, for
+//! both noise kinds. Paper shape: DNDM's points climb in BLEU with almost
+//! no time growth; the baselines' time grows linearly.
+//!
+//! Emits (sampler, steps, time_s, bleu) series; plot time on log-x.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("figure1") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+    let ds = Dataset::Iwslt14;
+
+    let mut out = Table::new(&["kind", "sampler", "steps", "time(s)", "BLEU"]);
+    for kind in ["multinomial", "absorbing"] {
+        let Some(m) = arts.find(kind, ds.name(), false) else { continue };
+        let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+        for sk in [
+            SamplerKind::Rdm,
+            SamplerKind::RdmTopK,
+            SamplerKind::Dndm,
+            SamplerKind::DndmTopK,
+        ] {
+            let grid: Vec<usize> = if sk.is_dndm() {
+                exp::step_grid_dndm()
+            } else {
+                exp::step_grid_baseline()
+            };
+            for steps in grid {
+                let cfg = SamplerConfig::new(sk, steps).with_spec(exp::paper_beta(kind, ds));
+                let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+                out.row(&[
+                    kind.into(),
+                    sk.name().into(),
+                    steps.to_string(),
+                    format!("{:.3}", cell.time_s),
+                    exp::fmt_q(cell.quality),
+                ]);
+            }
+        }
+    }
+    println!("\n== Figure 1: BLEU vs time series (IWSLT14) ==");
+    out.print();
+    exp::save_tsv("figure1_scaling", &out.to_tsv());
+}

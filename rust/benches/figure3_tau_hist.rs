@@ -1,0 +1,64 @@
+//! Figure 3: the transition-time distribution at T=50 under (a) linear,
+//! (b) cosine, (c) cosine² α schedules (sampled 1k times, as in the
+//! paper) and (d) the Beta approximations. No artifacts needed — this is
+//! pure Theorem 3.6. Also cross-checks the empirical histogram against
+//! the closed-form pmf.
+
+use dndm::schedule::{AlphaSchedule, SplitMix64, TransitionSpec};
+use dndm::util::bench::Table;
+
+fn hist(spec: &TransitionSpec, t_max: usize, draws: usize, buckets: usize) -> Vec<f64> {
+    let mut rng = SplitMix64::new(0xF1603);
+    let mut h = vec![0usize; buckets];
+    for _ in 0..draws {
+        let tau = spec.sample_discrete(t_max, &mut rng);
+        h[((tau - 1) * buckets) / t_max] += 1;
+    }
+    h.into_iter().map(|c| c as f64 / draws as f64).collect()
+}
+
+fn bar(frac: f64, peak: f64) -> String {
+    let n = (frac / peak * 40.0).round() as usize;
+    "#".repeat(n)
+}
+
+fn main() {
+    let t_max = 50;
+    let draws = 1000; // the paper samples 1K times
+    let specs = [
+        ("a) linear", TransitionSpec::Exact(AlphaSchedule::Linear)),
+        ("b) cosine", TransitionSpec::Exact(AlphaSchedule::Cosine)),
+        ("c) cosine^2", TransitionSpec::Exact(AlphaSchedule::CosineSq)),
+        ("d) Beta(15,7)", TransitionSpec::Beta { a: 15.0, b: 7.0 }),
+        ("d) Beta(3,3)", TransitionSpec::Beta { a: 3.0, b: 3.0 }),
+        ("d) Beta(5,3)", TransitionSpec::Beta { a: 5.0, b: 3.0 }),
+    ];
+
+    println!("== Figure 3: 𝒟_τ at T={t_max}, {draws} draws ==\n");
+    let mut tsv = Table::new(&["schedule", "bucket", "empirical", "pmf"]);
+    for (name, spec) in &specs {
+        let h = hist(spec, t_max, draws, 10);
+        let pmf = spec.pmf(t_max);
+        let pmf_bucket: Vec<f64> = (0..10)
+            .map(|b| pmf.iter().enumerate().filter(|(i, _)| (i * 10) / t_max == b).map(|(_, p)| p).sum())
+            .collect();
+        let peak = h.iter().cloned().fold(0.0, f64::max).max(1e-9);
+        println!("{name}");
+        for (b, (&e, &p)) in h.iter().zip(&pmf_bucket).enumerate() {
+            println!(
+                "  t∈[{:>2},{:>2}) {:<40} emp {:.3} | pmf {:.3}",
+                b * t_max / 10 + 1,
+                (b + 1) * t_max / 10 + 1,
+                bar(e, peak),
+                e,
+                p
+            );
+            tsv.row(&[name.to_string(), b.to_string(), format!("{e:.4}"), format!("{p:.4}")]);
+            // empirical must track the closed form (1k draws → ~3σ ≈ 4.5%)
+            assert!((e - p).abs() < 0.05, "{name} bucket {b}: {e} vs {p}");
+        }
+        println!();
+    }
+    dndm::exp::save_tsv("figure3_tau_hist", &tsv.to_tsv());
+    println!("empirical histograms match Theorem 3.6 pmfs (±0.05).");
+}

@@ -1,0 +1,77 @@
+//! Figure 4: computational time vs number of sampling steps (absorbing,
+//! IWSLT14 analog). Paper shape: absorbing/RDM-absorbing grow *linearly*
+//! with steps; DNDM-Absorb and DNDM-k-Absorb stay nearly flat (their cost
+//! is |𝒯| ≤ N, not T). The bench fits a slope to make the claim explicit.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let var: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    cov / var
+}
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("figure4") else { return };
+    let ds = Dataset::Iwslt14;
+    let Some(m) = arts.find("absorbing", ds.name(), false) else {
+        println!("[figure4] no absorbing iwslt model");
+        return;
+    };
+    let count = 8; // small: we only need the curve shape
+    let batch = 8;
+    let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+    let steps_grid = [5usize, 10, 20, 40, 80];
+
+    let mut out = Table::new(&["sampler", "steps", "time(s)", "avgNFE"]);
+    let mut series: Vec<(SamplerKind, Vec<f64>, Vec<f64>)> = Vec::new();
+    for sk in [
+        SamplerKind::D3pm,
+        SamplerKind::Rdm,
+        SamplerKind::Dndm,
+        SamplerKind::DndmTopK,
+    ] {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for &steps in &steps_grid {
+            let cfg = SamplerConfig::new(sk, steps).with_spec(exp::paper_beta("absorbing", ds));
+            let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+            out.row(&[
+                sk.name().into(),
+                steps.to_string(),
+                format!("{:.3}", cell.time_s),
+                format!("{:.2}", cell.avg_nfe),
+            ]);
+            xs.push(steps as f64);
+            ys.push(cell.time_s);
+        }
+        series.push((sk, xs, ys));
+    }
+    println!("\n== Figure 4: time vs sampling steps (absorbing, IWSLT14) ==");
+    out.print();
+
+    println!("\nfitted time slopes (s per step):");
+    let mut baseline_slope = f64::NAN;
+    let mut dndm_slope = f64::NAN;
+    for (sk, xs, ys) in &series {
+        let s = slope(xs, ys);
+        println!("  {:<12} {:+.5}", sk.name(), s);
+        if *sk == SamplerKind::Rdm {
+            baseline_slope = s;
+        }
+        if *sk == SamplerKind::Dndm {
+            dndm_slope = s;
+        }
+    }
+    println!(
+        "\nbaseline grows {:.1}x faster per step than DNDM (paper: linear vs ~flat)",
+        baseline_slope / dndm_slope.max(1e-9)
+    );
+    exp::save_tsv("figure4_time_growth", &out.to_tsv());
+}

@@ -1,0 +1,148 @@
+//! Micro/macro performance benches (the criterion-style suite; criterion
+//! itself is unreachable offline — util::bench provides warmup + stats).
+//!
+//! Covers the §Perf hot paths and two DESIGN.md ablations:
+//!   #2 fused L1 transition kernel (HLO) vs native rust transition update
+//!   #5 weights-as-device-buffers (execute_b) — measured as denoise() cost
+//!      per bucket, which includes only per-call input upload
+//! plus the pure-rust hot-path pieces (𝒟_τ sampling, BLEU, posterior).
+
+use std::time::Duration;
+
+use dndm::data::{gen_pairs, Dataset, Split};
+use dndm::diffusion::{multinomial_posterior, NoiseKind};
+use dndm::exp;
+use dndm::metrics::bleu::corpus_bleu_str;
+use dndm::runtime::{Denoiser, ModelRuntime, TransitionRuntime};
+use dndm::sampler::common::{row, sample_x0};
+use dndm::schedule::{AlphaSchedule, SplitMix64, TransitionOrder, TransitionSpec};
+use dndm::util::bench::{bench, Table};
+
+fn main() {
+    let mut results = Vec::new();
+    let quick = Duration::from_millis(300);
+
+    // --- pure-rust substrate hot paths (no artifacts needed) -------------
+    let spec = TransitionSpec::Beta { a: 15.0, b: 7.0 };
+    let mut rng = SplitMix64::new(1);
+    results.push(bench("sample_times beta T=1000 N=16", 50, quick, || {
+        std::hint::black_box(spec.sample_times(1000, 16, TransitionOrder::Random, &mut rng));
+    }));
+    let exact = TransitionSpec::Exact(AlphaSchedule::CosineSq);
+    results.push(bench("sample_times exact T=1000 N=16", 50, quick, || {
+        std::hint::black_box(exact.sample_times(1000, 16, TransitionOrder::Random, &mut rng));
+    }));
+
+    let logits: Vec<f32> = (0..99 * 16).map(|i| ((i * 2654435761usize) % 97) as f32 / 97.0).collect();
+    results.push(bench("sample_x0 greedy 16x99", 200, quick, || {
+        for pos in 0..16 {
+            std::hint::black_box(sample_x0(row(&logits, pos, 99), 0.0, &mut rng));
+        }
+    }));
+    results.push(bench("sample_x0 gumbel 16x99", 200, quick, || {
+        for pos in 0..16 {
+            std::hint::black_box(sample_x0(row(&logits, pos, 99), 1.0, &mut rng));
+        }
+    }));
+
+    let noise = NoiseKind::Multinomial { lo: 3, vocab: 99 };
+    results.push(bench("multinomial_posterior V=99", 200, quick, || {
+        std::hint::black_box(multinomial_posterior(5, 9, 25, 50, AlphaSchedule::CosineSq, noise, 99));
+    }));
+
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, 64);
+    let hyps: Vec<String> = pairs.iter().map(|(_, t)| t.join(" ")).collect();
+    let refs = hyps.clone();
+    results.push(bench("corpus_bleu 64 sents", 20, quick, || {
+        std::hint::black_box(corpus_bleu_str(&hyps, &refs));
+    }));
+
+    // --- runtime hot paths (need artifacts) -------------------------------
+    if let Some(arts) = exp::artifacts_or_skip("perf_criterion(runtime)") {
+        let client = xla::PjRtClient::cpu().unwrap();
+        if let Some(m) = arts.find("absorbing", "synth-iwslt14", false) {
+            let rt = ModelRuntime::load(&arts, &client, &m.name).unwrap();
+            let cfg = rt.config.clone();
+            for b in [1usize, 4, 16] {
+                let x = vec![vec![cfg.mask_id; cfg.seq_len]; b];
+                let src = vec![vec![5u32; cfg.src_len]; b];
+                let t = vec![0.5f32; b];
+                rt.denoise(&x, &t, Some(&src)).unwrap(); // compile warmup
+                results.push(bench(
+                    &format!("denoise b{b} (weights-as-buffers)"),
+                    5,
+                    Duration::from_secs(1),
+                    || {
+                        std::hint::black_box(rt.denoise(&x, &t, Some(&src)).unwrap());
+                    },
+                ));
+            }
+
+            // §Perf L2: split encode/decode (cached memory) vs monolithic
+            if rt.split_enabled() {
+                let x = vec![vec![cfg.mask_id; cfg.seq_len]; 16];
+                let src = vec![vec![5u32; cfg.src_len]; 16];
+                let t = vec![0.5f32; 16];
+                rt.denoise(&x, &t, Some(&src)).unwrap(); // warm decode path
+                results.push(bench("denoise b16 split(cached enc)", 5, Duration::from_secs(1), || {
+                    std::hint::black_box(rt.denoise(&x, &t, Some(&src)).unwrap());
+                }));
+                rt.set_split(false);
+                rt.denoise(&x, &t, Some(&src)).unwrap();
+                results.push(bench("denoise b16 monolithic", 5, Duration::from_secs(1), || {
+                    std::hint::black_box(rt.denoise(&x, &t, Some(&src)).unwrap());
+                }));
+                rt.set_split(true);
+            }
+
+            // ablation #2: fused HLO transition kernel vs native rust
+            let tag = &m.transition_tag;
+            let tr = TransitionRuntime::load(&arts, &client, tag).unwrap();
+            let (n, v) = (tr.seq_len, tr.vocab);
+            let mut r2 = SplitMix64::new(9);
+            let l: Vec<f32> = (0..n * v).map(|_| r2.normal() as f32).collect();
+            let g: Vec<f32> = (0..n * v).map(|_| r2.gumbel() as f32).collect();
+            let xt: Vec<i32> = (0..n).map(|_| r2.below(v as u64) as i32).collect();
+            let mv: Vec<i32> = (0..n).map(|_| r2.coin(0.5) as i32).collect();
+            tr.step(&l, &xt, &g, &mv).unwrap(); // compile warmup
+            results.push(bench("transition kernel (HLO, b1)", 5, Duration::from_secs(1), || {
+                std::hint::black_box(tr.step(&l, &xt, &g, &mv).unwrap());
+            }));
+            results.push(bench("transition native rust (b1)", 100, quick, || {
+                let mut out = vec![0i32; n];
+                for pos in 0..n {
+                    let lrow = row(&l, pos, v);
+                    let grow = &g[pos * v..(pos + 1) * v];
+                    let mut best = f32::NEG_INFINITY;
+                    let mut arg = 0usize;
+                    for i in 0..v {
+                        let val = lrow[i] + grow[i];
+                        if val > best {
+                            best = val;
+                            arg = i;
+                        }
+                    }
+                    out[pos] = if mv[pos] != 0 { arg as i32 } else { xt[pos] };
+                }
+                std::hint::black_box(out);
+            }));
+        }
+    }
+
+    println!("\n== perf_criterion: hot-path micro/macro benches ==");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10}   {:>8}",
+        "bench", "min", "median", "mean", "stddev"
+    );
+    let mut tsv = Table::new(&["bench", "min_s", "median_s", "mean_s"]);
+    for r in &results {
+        println!("{}", r.report());
+        tsv.row(&[
+            r.name.clone(),
+            format!("{:.6}", r.min.as_secs_f64()),
+            format!("{:.6}", r.median.as_secs_f64()),
+            format!("{:.6}", r.mean.as_secs_f64()),
+        ]);
+    }
+    exp::save_tsv("perf_criterion", &tsv.to_tsv());
+}

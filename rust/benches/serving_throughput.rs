@@ -1,0 +1,74 @@
+//! Serving throughput bench (DESIGN.md ablation #1): NFE-aligned dynamic
+//! batching vs sequential per-request serving, on the real runtime.
+//! This is the L3 contribution's headline number — batching amortizes the
+//! shared transition set so throughput scales with batch size while
+//! per-request NFE stays |𝒯|.
+
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::data::{gen_pairs, Dataset, Split};
+use dndm::exp;
+use dndm::runtime::Artifacts;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+fn run(policy: BatchPolicy, n_requests: usize, steps: usize) -> (f64, f64, u64) {
+    let (srv, join) = Server::start(
+        move || {
+            let arts = Artifacts::load(
+                std::env::var("DNDM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+            )?;
+            let m = arts
+                .find("absorbing", "synth-iwslt14", false)
+                .ok_or_else(|| anyhow::anyhow!("no model"))?
+                .name
+                .clone();
+            let eng = Engine::new(&arts, &m)?;
+            eng.warmup(&[1, 4, 16])?;
+            Ok(eng)
+        },
+        SamplerConfig::new(SamplerKind::Dndm, steps),
+        policy,
+    );
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = srv.stats().unwrap();
+    srv.shutdown();
+    join.join();
+    (n_requests as f64 / wall, stats.e2e_p95.as_secs_f64() * 1e3, stats.nn_calls)
+}
+
+fn main() {
+    if exp::artifacts_or_skip("serving_throughput").is_none() {
+        return;
+    }
+    let n = exp::bench_count() * 2;
+    let steps = 50;
+    let mut out = Table::new(&["policy", "req/s", "e2e p95(ms)", "NN calls"]);
+    for (name, policy) in [
+        ("sequential (batch=1)", BatchPolicy { max_batch: 1, window: Duration::ZERO }),
+        ("batch=4 / 10ms", BatchPolicy { max_batch: 4, window: Duration::from_millis(10) }),
+        ("batch=16 / 20ms", BatchPolicy { max_batch: 16, window: Duration::from_millis(20) }),
+    ] {
+        let (tput, p95, calls) = run(policy, n, steps);
+        out.row(&[
+            name.into(),
+            format!("{tput:.2}"),
+            format!("{p95:.1}"),
+            calls.to_string(),
+        ]);
+    }
+    println!("\n== Serving throughput: NFE-aligned batching ablation (T={steps}, {n} reqs) ==");
+    out.print();
+    exp::save_tsv("serving_throughput", &out.to_tsv());
+}

@@ -1,0 +1,53 @@
+//! Table 11: Beta(100, 4) as 𝒟_τ on WMT16 — discrete 50/1000 steps vs
+//! continuous sampling, across the four DNDM variants. Paper shape:
+//! 50-step scores drop with this extreme schedule, 1000-step and ∞ recover.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::schedule::TransitionSpec;
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table11") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+    let ds = Dataset::Wmt16;
+    let spec = TransitionSpec::Beta { a: 100.0, b: 4.0 };
+
+    let mut out = Table::new(&[
+        "steps", "DNDM-k-multi", "DNDM-k-absorb", "DNDM-multi", "DNDM-absorb",
+    ]);
+    for steps in [Some(50usize), Some(1000), None] {
+        let mut row = vec![steps.map(|s| s.to_string()).unwrap_or_else(|| "inf".into())];
+        for (kind, topk) in [
+            ("multinomial", true),
+            ("absorbing", true),
+            ("multinomial", false),
+            ("absorbing", false),
+        ] {
+            let Some(m) = arts.find(kind, ds.name(), false) else {
+                row.push("-".into());
+                continue;
+            };
+            let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+            let cfg = match steps {
+                Some(s) => SamplerConfig::new(
+                    if topk { SamplerKind::DndmTopK } else { SamplerKind::Dndm },
+                    s,
+                )
+                .with_spec(spec.clone()),
+                None => SamplerConfig::new(
+                    if topk { SamplerKind::DndmTopK } else { SamplerKind::DndmC },
+                    4000,
+                )
+                .with_spec(spec.clone()),
+            };
+            let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+            row.push(exp::fmt_q(cell.quality));
+        }
+        out.row(&row);
+    }
+    println!("\n== Table 11: Beta(100,4) — discrete vs continuous (WMT16) ==");
+    out.print();
+    exp::save_tsv("table11_beta100", &out.to_tsv());
+}

@@ -1,0 +1,58 @@
+//! Table 12: continuous training + continuous sampling (C-DNDM) on
+//! IWSLT14 and WMT16. Uses the continuously-trained checkpoints
+//! (`*_cont`, trained with t ~ U(0,1)) and DNDM-C sampling; compares
+//! against the discrete-trained checkpoints under the same sampler.
+//! Paper shape: continuous training improves several ∞-step cells.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table12") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+
+    let mut out = Table::new(&[
+        "dataset", "kind", "training", "default(BLEU)", "top-k(BLEU)",
+    ]);
+    for ds in [Dataset::Iwslt14, Dataset::Wmt16] {
+        for kind in ["multinomial", "absorbing"] {
+            for continuous in [false, true] {
+                let Some(m) = arts.find(kind, ds.name(), continuous) else {
+                    continue;
+                };
+                let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+                let spec = exp::paper_beta_continuous(ds);
+                let d = exp::eval_translation(
+                    &eng,
+                    ds,
+                    &SamplerConfig::new(SamplerKind::DndmC, 0).with_spec(spec.clone()),
+                    count,
+                    batch,
+                    0,
+                )
+                .unwrap();
+                let k = exp::eval_translation(
+                    &eng,
+                    ds,
+                    &SamplerConfig::new(SamplerKind::DndmTopK, 4000).with_spec(spec),
+                    count,
+                    batch,
+                    0,
+                )
+                .unwrap();
+                out.row(&[
+                    ds.short().into(),
+                    kind.into(),
+                    if continuous { "continuous" } else { "discrete" }.into(),
+                    exp::fmt_q(d.quality),
+                    exp::fmt_q(k.quality),
+                ]);
+            }
+        }
+    }
+    println!("\n== Table 12: continuous training + continuous sampling ==");
+    out.print();
+    exp::save_tsv("table12_continuous", &out.to_tsv());
+}

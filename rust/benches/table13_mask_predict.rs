@@ -1,0 +1,92 @@
+//! Table 13: Mask-Predict (Ghazvininejad 2019) vs DNDM-Absorb /
+//! DNDM-k-Absorb on WMT16, aligning Mask-Predict's step count with
+//! DNDM's NFE. Paper shape: DNDM runs faster at matched NFE with equal or
+//! better BLEU.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table13") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+    let ds = Dataset::Wmt16;
+    let Some(m) = arts.find("absorbing", ds.name(), false) else {
+        println!("[table13] no absorbing wmt16 model");
+        return;
+    };
+    let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+
+    let mut out = Table::new(&["method", "steps", "BLEU", "time(s)", "avgNFE"]);
+    // Mask-Predict at the paper's iteration counts
+    for iters in [10usize, 15, 25, 40] {
+        let cfg = SamplerConfig::new(SamplerKind::MaskPredict, iters);
+        let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+        out.row(&[
+            "Mask-Predict".into(),
+            iters.to_string(),
+            exp::fmt_q(cell.quality),
+            format!("{:.2}", cell.time_s),
+            format!("{:.1}", cell.avg_nfe),
+        ]);
+    }
+    // DNDM rows with similar NFE
+    for (sk, label) in [(SamplerKind::Dndm, "DNDM-Absorb"), (SamplerKind::DndmTopK, "DNDM-k-Absorb")] {
+        for steps in [25usize, 50, 1000] {
+            let cfg = SamplerConfig::new(sk, steps).with_spec(exp::paper_beta("absorbing", ds));
+            let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+            out.row(&[
+                label.into(),
+                steps.to_string(),
+                exp::fmt_q(cell.quality),
+                format!("{:.2}", cell.time_s),
+                format!("{:.1}", cell.avg_nfe),
+            ]);
+        }
+        let cfg = SamplerConfig::new(
+            if sk == SamplerKind::Dndm { SamplerKind::DndmC } else { SamplerKind::DndmTopK },
+            4000,
+        )
+        .with_spec(exp::paper_beta_continuous(ds));
+        let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+        out.row(&[
+            label.into(),
+            "inf".into(),
+            exp::fmt_q(cell.quality),
+            format!("{:.2}", cell.time_s),
+            format!("{:.1}", cell.avg_nfe),
+        ]);
+    }
+    // extra comparators: ARDM (Remark 3.7, absorbing, NFE = N) and the
+    // DDIM-discrete kernel (Appendix B.1, on the multinomial checkpoint)
+    {
+        let cfg = SamplerConfig::new(SamplerKind::Ardm, 0);
+        let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+        out.row(&[
+            "ARDM (1/step)".into(),
+            "N".into(),
+            exp::fmt_q(cell.quality),
+            format!("{:.2}", cell.time_s),
+            format!("{:.1}", cell.avg_nfe),
+        ]);
+    }
+    if let Some(mm) = arts.find("multinomial", ds.name(), false) {
+        let eng_m = exp::engine_warm(&arts, &mm.name, batch).unwrap();
+        for steps in [25usize, 50] {
+            let cfg = SamplerConfig::new(SamplerKind::Ddim, steps);
+            let cell = exp::eval_translation(&eng_m, ds, &cfg, count, batch, 0).unwrap();
+            out.row(&[
+                "DDIM-discrete".into(),
+                steps.to_string(),
+                exp::fmt_q(cell.quality),
+                format!("{:.2}", cell.time_s),
+                format!("{:.1}", cell.avg_nfe),
+            ]);
+        }
+    }
+
+    println!("\n== Table 13: Mask-Predict vs DNDM vs ARDM/DDIM (WMT16) ==");
+    out.print();
+    exp::save_tsv("table13_mask_predict", &out.to_tsv());
+}

@@ -1,0 +1,13 @@
+//! Table 2 (+ Table 7's avg-NFE column): multinomial diffusion on the
+//! three translation benchmarks — RDM vs DNDM, with and without top-k.
+//!
+//! Paper shape to reproduce: DNDM time ~flat in steps while RDM grows
+//! linearly; BLEU comparable at equal steps; top-k adds ~1–2 BLEU;
+//! WMT14-analog lowest BLEU. Run `cargo bench --bench table2_multinomial`.
+
+fn main() {
+    if dndm::exp::artifacts_or_skip("table2").is_none() {
+        return;
+    }
+    dndm::exp::run_translation_table("multinomial", "table2_multinomial").unwrap();
+}

@@ -1,0 +1,9 @@
+//! Table 3 (+ Table 8's avg-NFE column): absorbing diffusion on the three
+//! translation benchmarks — RDM vs DNDM, with and without top-k.
+
+fn main() {
+    if dndm::exp::artifacts_or_skip("table3").is_none() {
+        return;
+    }
+    dndm::exp::run_translation_table("absorbing", "table3_absorbing").unwrap();
+}

@@ -1,0 +1,59 @@
+//! Table 4: unconditional generation on the text8/enwik8 analogs —
+//! vanilla multinomial sampling (Hoogeboom 2021b) vs DNDM.
+//!
+//! Paper shape: DNDM is 5×/14× faster AND scores better perplexity under
+//! the external LM. Vanilla runs T steps; the paper uses T=1000 (text8) /
+//! T=4000 (enwik8); the default here scales T down for the 1-core testbed
+//! (DNDM_BENCH_FULL=1 restores the paper values — DNDM cost is unchanged
+//! either way, which is the point).
+
+use dndm::data::UncondCorpus;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table4") else { return };
+    let full = std::env::var("DNDM_BENCH_FULL").is_ok();
+    let count = exp::bench_count().min(8);
+    let batch = 4;
+
+    let mut out = Table::new(&["corpus", "sampler", "T", "perplexity", "time(s)", "avgNFE"]);
+    for (corpus, t_paper) in [(UncondCorpus::Text8, 1000), (UncondCorpus::Enwik8, 4000)] {
+        let Some(m) = arts.find("multinomial", corpus.name(), false) else {
+            println!("[table4] no model for {}", corpus.name());
+            continue;
+        };
+        let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+        let t_vanilla = if full { t_paper } else { 50 };
+
+        let vanilla = SamplerConfig::new(SamplerKind::D3pm, t_vanilla);
+        let cell = exp::eval_unconditional(&eng, corpus, &vanilla, count, batch, 0).unwrap();
+        out.row(&[
+            corpus.name().into(),
+            "vanilla".into(),
+            t_vanilla.to_string(),
+            format!("{:.2}", cell.quality),
+            format!("{:.2}", cell.time_s),
+            format!("{:.1}", cell.avg_nfe),
+        ]);
+
+        let dndm = SamplerConfig::new(SamplerKind::Dndm, t_paper)
+            .with_spec(dndm::schedule::TransitionSpec::Exact(
+                dndm::schedule::AlphaSchedule::Cosine,
+            ));
+        let cell = exp::eval_unconditional(&eng, corpus, &dndm, count, batch, 0).unwrap();
+        out.row(&[
+            corpus.name().into(),
+            "DNDM".into(),
+            t_paper.to_string(),
+            format!("{:.2}", cell.quality),
+            format!("{:.2}", cell.time_s),
+            format!("{:.1}", cell.avg_nfe),
+        ]);
+    }
+    println!("\n== Table 4: unconditional text generation (multinomial) ==");
+    println!("   perplexity under the KN-4gram external LM (GPT-2 substitute)");
+    out.print();
+    exp::save_tsv("table4_unconditional", &out.to_tsv());
+}

@@ -1,0 +1,67 @@
+//! Table 5: transition-time schedule ablation — cosine / cosine² /
+//! linear-α exact 𝒟_τ vs the reported Beta approximation, BLEU + avg NFE
+//! at 1000 steps. Also appends the DESIGN.md ablation #4 rows
+//! (Algorithm 1 vs Algorithm 3).
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::schedule::{AlphaSchedule, TransitionSpec};
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table5") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+    let steps = 1000;
+
+    let schedules: Vec<(&str, fn(&str, Dataset) -> TransitionSpec)> = vec![
+        ("cosine", |_, _| TransitionSpec::Exact(AlphaSchedule::Cosine)),
+        ("cosine^2", |_, _| TransitionSpec::Exact(AlphaSchedule::CosineSq)),
+        ("linear-a", |_, _| TransitionSpec::Exact(AlphaSchedule::Linear)),
+        ("beta(rep)", exp::paper_beta),
+    ];
+
+    let mut out = Table::new(&["dataset", "schedule", "sampler", "BLEU", "avgNFE"]);
+    for ds in Dataset::ALL {
+        for kind in ["multinomial", "absorbing"] {
+            let Some(m) = arts.find(kind, ds.name(), false) else { continue };
+            let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+            for (sname, specf) in &schedules {
+                for sk in [SamplerKind::Dndm, SamplerKind::DndmTopK] {
+                    let cfg = SamplerConfig::new(sk, steps).with_spec(specf(kind, ds));
+                    let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+                    out.row(&[
+                        format!("{}/{}", ds.short(), &kind[..5]),
+                        sname.to_string(),
+                        sk.name().into(),
+                        exp::fmt_q(cell.quality),
+                        format!("{:.2}", cell.avg_nfe),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("\n== Table 5: 𝒟_τ schedule ablation (T={steps}) ==");
+    out.print();
+    exp::save_tsv("table5_schedules", &out.to_tsv());
+
+    // ablation #4: Alg 1 vs Alg 3 (v2 re-updates τ ≥ t)
+    let mut ab = Table::new(&["dataset", "algorithm", "BLEU", "avgNFE"]);
+    for ds in Dataset::ALL {
+        let Some(m) = arts.find("absorbing", ds.name(), false) else { continue };
+        let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+        for sk in [SamplerKind::Dndm, SamplerKind::DndmV2] {
+            let cfg = SamplerConfig::new(sk, 50).with_spec(exp::paper_beta("absorbing", ds));
+            let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+            ab.row(&[
+                ds.short().into(),
+                sk.name().into(),
+                exp::fmt_q(cell.quality),
+                format!("{:.2}", cell.avg_nfe),
+            ]);
+        }
+    }
+    println!("\n== Ablation: Algorithm 1 vs Algorithm 3 (absorbing, T=50) ==");
+    ab.print();
+    exp::save_tsv("ablation_alg1_vs_alg3", &ab.to_tsv());
+}

@@ -1,0 +1,47 @@
+//! Table 6: transition-order ablation — left-to-right vs right-to-left
+//! positional assignment of transition times (absorbing diffusion, the
+//! Table 3 setting). Paper shape: L2R beats R2L at every step count.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::schedule::TransitionOrder;
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table6") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+
+    let mut out = Table::new(&["steps", "direction", "IWSLT14", "WMT14", "WMT16"]);
+    for steps in [25usize, 50, 1000] {
+        for (dname, order) in [
+            ("left-to-right", TransitionOrder::LeftToRight),
+            ("right-to-left", TransitionOrder::RightToLeft),
+        ] {
+            let mut cells = Vec::new();
+            for ds in Dataset::ALL {
+                let Some(m) = arts.find("absorbing", ds.name(), false) else {
+                    cells.push("-".to_string());
+                    continue;
+                };
+                let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+                let cfg = SamplerConfig::new(SamplerKind::Dndm, steps)
+                    .with_spec(exp::paper_beta("absorbing", ds))
+                    .with_order(order);
+                let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+                cells.push(exp::fmt_q(cell.quality));
+            }
+            // reorder cells to IWSLT14, WMT14, WMT16 (Dataset::ALL order)
+            out.row(&[
+                steps.to_string(),
+                dname.into(),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+            ]);
+        }
+    }
+    println!("\n== Table 6: transition order (absorbing, DNDM) ==");
+    out.print();
+    exp::save_tsv("table6_order", &out.to_tsv());
+}

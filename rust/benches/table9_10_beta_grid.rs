@@ -1,0 +1,53 @@
+//! Tables 9 & 10: Beta(α, β) grid ablation on the WMT16 analog — BLEU for
+//! α ∈ {3,5,7}, β ∈ {3,…,21} at 1000 (Table 9) and 50 (Table 10) steps.
+//! Paper shape: broad plateau — most Beta choices land near the optimum.
+//!
+//! Grid is thinned by default (β ∈ {3, 7, 11, 15, 21}); DNDM_BENCH_FULL=1
+//! runs the paper's full β range.
+
+use dndm::data::Dataset;
+use dndm::exp;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::schedule::TransitionSpec;
+use dndm::util::bench::Table;
+
+fn main() {
+    let Some(arts) = exp::artifacts_or_skip("table9_10") else { return };
+    let (count, batch) = (exp::bench_count(), exp::bench_batch());
+    let betas: Vec<f64> = if std::env::var("DNDM_BENCH_FULL").is_ok() {
+        vec![3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0, 17.0, 19.0, 21.0]
+    } else {
+        vec![3.0, 7.0, 11.0, 15.0, 21.0]
+    };
+    let ds = Dataset::Wmt16;
+
+    for (table, steps) in [("table9 (T=1000)", 1000usize), ("table10 (T=50)", 50)] {
+        let mut headers: Vec<String> = vec!["model".into(), "alpha".into()];
+        headers.extend(betas.iter().map(|b| format!("b={b}")));
+        let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut out = Table::new(&hrefs);
+
+        for (mname, kind, sk) in [
+            ("DNDM-k-Multi", "multinomial", SamplerKind::DndmTopK),
+            ("DNDM-Multi", "multinomial", SamplerKind::Dndm),
+            ("DNDM-k-Absorb", "absorbing", SamplerKind::DndmTopK),
+            ("DNDM-Absorb", "absorbing", SamplerKind::Dndm),
+        ] {
+            let Some(m) = arts.find(kind, ds.name(), false) else { continue };
+            let eng = exp::engine_warm(&arts, &m.name, batch).unwrap();
+            for alpha in [3.0f64, 5.0, 7.0] {
+                let mut row = vec![mname.to_string(), format!("{alpha}")];
+                for &beta in &betas {
+                    let cfg = SamplerConfig::new(sk, steps)
+                        .with_spec(TransitionSpec::Beta { a: alpha, b: beta });
+                    let cell = exp::eval_translation(&eng, ds, &cfg, count, batch, 0).unwrap();
+                    row.push(exp::fmt_q(cell.quality));
+                }
+                out.row(&row);
+            }
+        }
+        println!("\n== {table}: Beta(α, β) ablation on WMT16 ==");
+        out.print();
+        exp::save_tsv(&table.replace(' ', "_").replace(['(', ')', '='], ""), &out.to_tsv());
+    }
+}

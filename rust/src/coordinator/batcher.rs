@@ -1,0 +1,132 @@
+//! The dynamic batching policy — the serving-side contribution.
+//!
+//! DNDM makes batching *cheaper* than for step-marching samplers: a batch
+//! shares one predetermined transition set 𝒯, so the whole batch costs
+//! |𝒯| NN calls regardless of size (NFE-aligned batching). The batcher
+//! therefore wants batches as large as the compiled buckets allow, subject
+//! to a latency window:
+//!
+//! * close a batch as soon as it reaches `max_batch`, or
+//! * when `window` has elapsed since the batch's first request.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub window: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 16, window: Duration::from_millis(20) }
+    }
+}
+
+/// Accumulates items into policy-shaped batches.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: Vec<T>,
+    first_at: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, pending: Vec::new(), first_at: None }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.pending.is_empty() {
+            self.first_at = Some(Instant::now());
+        }
+        self.pending.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Should the current batch be dispatched now?
+    pub fn ready(&self) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        if self.pending.len() >= self.policy.max_batch {
+            return true;
+        }
+        self.first_at
+            .map(|t0| t0.elapsed() >= self.policy.window)
+            .unwrap_or(false)
+    }
+
+    /// How long the dispatcher may sleep before this batch must go out.
+    pub fn time_left(&self) -> Option<Duration> {
+        self.first_at.map(|t0| self.policy.window.saturating_sub(t0.elapsed()))
+    }
+
+    /// Take up to `max_batch` items (FIFO), leaving the rest pending.
+    pub fn take(&mut self) -> Vec<T> {
+        let n = self.pending.len().min(self.policy.max_batch);
+        let rest = self.pending.split_off(n);
+        let out = std::mem::replace(&mut self.pending, rest);
+        self.first_at = if self.pending.is_empty() { None } else { Some(Instant::now()) };
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch: max, window: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn dispatches_on_full_batch() {
+        let mut b = Batcher::new(policy(3, 10_000));
+        b.push(1);
+        b.push(2);
+        assert!(!b.ready());
+        b.push(3);
+        assert!(b.ready());
+        assert_eq!(b.take(), vec![1, 2, 3]);
+        assert!(b.is_empty() && !b.ready());
+    }
+
+    #[test]
+    fn dispatches_on_window_expiry() {
+        let mut b = Batcher::new(policy(100, 5));
+        b.push("a");
+        assert!(!b.ready());
+        std::thread::sleep(Duration::from_millis(7));
+        assert!(b.ready());
+        assert_eq!(b.take(), vec!["a"]);
+    }
+
+    #[test]
+    fn take_respects_max_and_keeps_overflow() {
+        let mut b = Batcher::new(policy(2, 1));
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.take(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.take(), vec![2, 3]);
+        assert_eq!(b.take(), vec![4]);
+    }
+
+    #[test]
+    fn time_left_counts_down() {
+        let mut b = Batcher::new(policy(10, 50));
+        assert!(b.time_left().is_none());
+        b.push(());
+        let left = b.time_left().unwrap();
+        assert!(left <= Duration::from_millis(50));
+    }
+}

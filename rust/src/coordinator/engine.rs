@@ -1,0 +1,217 @@
+//! The engine: model runtime + vocabulary + sampling entry points.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{words, UncondCorpus};
+use crate::metrics::NfeCounter;
+use crate::runtime::{Artifacts, Denoiser, ModelRuntime};
+use crate::sampler::{self, GenResult, SamplerConfig};
+use crate::text::Vocab;
+
+/// One generated sequence plus its accounting.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub text: String,
+    pub tokens: Vec<u32>,
+    /// NN calls of the batch this sequence was generated in
+    pub nfe: usize,
+    pub elapsed: Duration,
+}
+
+/// Model + vocab + counters; the object everything above L3 talks to.
+pub struct Engine {
+    den: Box<dyn Denoiser>,
+    vocab: Vocab,
+    pub name: String,
+    pub nfe: Arc<NfeCounter>,
+}
+
+impl Engine {
+    /// Load a model from artifacts (creates its own PJRT CPU client).
+    pub fn new(arts: &Artifacts, model: &str) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let rt = ModelRuntime::load(arts, &client, model)?;
+        let vocab = vocab_for(&rt.config.dataset)?;
+        Ok(Engine {
+            name: model.to_string(),
+            den: Box::new(rt),
+            vocab,
+            nfe: Arc::new(NfeCounter::new()),
+        })
+    }
+
+    /// Wrap any denoiser (tests / mock-backed serving).
+    pub fn from_denoiser(den: Box<dyn Denoiser>, vocab: Vocab, name: &str) -> Engine {
+        Engine { den, vocab, name: name.to_string(), nfe: Arc::new(NfeCounter::new()) }
+    }
+
+    pub fn denoiser(&self) -> &dyn Denoiser {
+        self.den.as_ref()
+    }
+
+    pub fn vocab(&self) -> &Vocab {
+        &self.vocab
+    }
+
+    pub fn conditional(&self) -> bool {
+        self.den.config().conditional()
+    }
+
+    /// Pre-compile the given batch buckets (serving warmup).
+    pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
+        // only meaningful for the PJRT runtime; a quick denoise forces
+        // compilation for the bucket of each size
+        let cfg = self.den.config().clone();
+        for &b in buckets {
+            let x = vec![vec![cfg.noise_lo; cfg.seq_len]; b];
+            let t = vec![1.0f32; b];
+            let src = if cfg.conditional() {
+                Some(vec![vec![cfg.noise_lo; cfg.src_len]; b])
+            } else {
+                None
+            };
+            self.den.denoise(&x, &t, src.as_deref())?;
+        }
+        Ok(())
+    }
+
+    /// Encode source text to the model's source length.
+    pub fn encode_src(&self, text: &str) -> Vec<u32> {
+        self.vocab.encode_str(text, self.den.config().src_len)
+    }
+
+    /// Decode generated ids to text (word models join with spaces, char
+    /// models concatenate).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let cfg = self.den.config();
+        if cfg.conditional() {
+            self.vocab.decode_str(tokens)
+        } else {
+            self.vocab.decode_chars(tokens)
+        }
+    }
+
+    /// Generate a whole batch with one shared sampler run.
+    pub fn generate_batch(
+        &self,
+        srcs: Option<&[String]>,
+        batch: usize,
+        cfg: &SamplerConfig,
+        seed: u64,
+    ) -> Result<(Vec<GenOutput>, GenResult)> {
+        let t0 = Instant::now();
+        let src_ids: Option<Vec<Vec<u32>>> =
+            srcs.map(|ss| ss.iter().map(|s| self.encode_src(s)).collect());
+        let result = sampler::generate(
+            self.den.as_ref(),
+            cfg,
+            src_ids.as_deref(),
+            batch,
+            seed,
+            Some(&self.nfe),
+        )?;
+        let elapsed = t0.elapsed();
+        let outs = result
+            .tokens
+            .iter()
+            .map(|toks| GenOutput {
+                text: self.decode(toks),
+                tokens: toks.clone(),
+                nfe: result.nfe,
+                elapsed,
+            })
+            .collect();
+        Ok((outs, result))
+    }
+
+    /// Single-sequence convenience.
+    pub fn generate_one(
+        &self,
+        src: Option<&str>,
+        cfg: &SamplerConfig,
+        seed: u64,
+    ) -> Result<GenOutput> {
+        let srcs = src.map(|s| vec![s.to_string()]);
+        let (mut outs, _) = self.generate_batch(srcs.as_deref(), 1, cfg, seed)?;
+        Ok(outs.remove(0))
+    }
+}
+
+/// Vocab for a dataset name (translation share one vocab; uncond per corpus).
+pub fn vocab_for(dataset: &str) -> Result<Vocab> {
+    if dataset.contains("iwslt") || dataset.contains("wmt") || dataset == "mock" {
+        Ok(words::translation_vocab())
+    } else if let Some(c) = UncondCorpus::parse(dataset) {
+        Ok(c.vocab())
+    } else {
+        Err(anyhow!("unknown dataset '{dataset}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+    use crate::sampler::SamplerKind;
+
+    fn mock_engine() -> Engine {
+        let vocab = words::translation_vocab();
+        let v = vocab.len();
+        let cfg = MockDenoiser::test_config(v, 8, 8, "absorbing");
+        // target = "identity cipher": src token id + 41 (src word → tgt word)
+        let den = MockDenoiser::with_fn(cfg, move |src, pos| {
+            let s = src.map(|s| s[pos]).unwrap_or(3);
+            if s >= 3 && (s as usize) < 3 + 41 {
+                s + 41
+            } else {
+                0
+            }
+        });
+        Engine::from_denoiser(Box::new(den), vocab, "mock")
+    }
+
+    #[test]
+    fn generate_one_translates_via_mock() {
+        let eng = mock_engine();
+        let out = eng
+            .generate_one(
+                Some("the quick fox"),
+                &SamplerConfig::new(SamplerKind::Dndm, 25),
+                7,
+            )
+            .unwrap();
+        assert!(out.nfe >= 1 && out.nfe <= 8);
+        // every emitted token is a target-language word (id ≥ 44) or pad
+        assert!(!out.text.is_empty());
+        assert!(eng.nfe.calls() >= 1);
+    }
+
+    #[test]
+    fn batch_outputs_share_nfe() {
+        let eng = mock_engine();
+        let srcs: Vec<String> = vec!["the quick fox".into(), "a small river".into()];
+        let (outs, res) = eng
+            .generate_batch(Some(&srcs), 2, &SamplerConfig::new(SamplerKind::Dndm, 50), 3)
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().all(|o| o.nfe == res.nfe));
+    }
+
+    #[test]
+    fn vocab_for_known_datasets() {
+        assert!(vocab_for("synth-iwslt14").is_ok());
+        assert!(vocab_for("synth-text8").is_ok());
+        assert!(vocab_for("synth-enwik8").is_ok());
+        assert!(vocab_for("alien").is_err());
+    }
+
+    #[test]
+    fn warmup_runs_denoiser() {
+        let eng = mock_engine();
+        eng.warmup(&[1, 2]).unwrap();
+        assert_eq!(eng.denoiser().calls(), 2);
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator — the serving system around the samplers.
+//!
+//! * [`engine`] — owns the PJRT runtime + vocab and exposes the
+//!   generate/translate API the CLI, examples and benches use.
+//! * [`server`] — the request loop: multi-producer queue, NFE-aligned
+//!   dynamic batcher, per-request latency/NFE accounting. PJRT handles are
+//!   not `Send`, so the engine lives on the server thread and requests
+//!   travel over channels (the vLLM-router shape, std::thread edition —
+//!   tokio is unreachable offline).
+//! * [`batcher`] — the batching policy (max size + collection window).
+
+pub mod batcher;
+pub mod engine;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, GenOutput};
+pub use server::{Server, ServerStats};

@@ -1,0 +1,337 @@
+//! The request loop: queue → batcher → engine → responses.
+//!
+//! PJRT handles are not `Send`, so the engine is built *inside* the server
+//! thread from a factory closure; clients hold a cheap cloneable handle
+//! and block on a per-request response channel (or use `submit_async` and
+//! collect later). Shutdown is explicit or on handle drop.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::LatencyStats;
+use crate::sampler::SamplerConfig;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::{Engine, GenOutput};
+
+/// One queued request.
+struct Request {
+    src: Option<String>,
+    seed: u64,
+    enqueued: Instant,
+    respond: Sender<Result<GenOutput>>,
+}
+
+enum Msg {
+    Req(Request),
+    Stats(Sender<ServerStats>),
+    Shutdown,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub nn_calls: u64,
+    pub mean_batch: f64,
+    pub queue_p95: Duration,
+    pub e2e_p95: Duration,
+    pub e2e_p50: Duration,
+}
+
+/// Cloneable client handle to a running server.
+#[derive(Clone)]
+pub struct Server {
+    tx: Sender<Msg>,
+}
+
+impl Server {
+    /// Start the server thread. `factory` builds the engine on that thread
+    /// (PJRT is thread-bound); `cfg` is the sampler every request uses.
+    pub fn start<F>(factory: F, cfg: SamplerConfig, policy: BatchPolicy) -> (Server, ServerJoin)
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::spawn(move || serve_loop(factory, cfg, policy, rx));
+        (Server { tx }, ServerJoin { handle: Some(handle) })
+    }
+
+    /// Submit and wait for the result.
+    pub fn submit(&self, src: Option<String>, seed: u64) -> Result<GenOutput> {
+        self.submit_async(src, seed)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped response"))?
+    }
+
+    /// Submit without blocking; returns the response receiver.
+    pub fn submit_async(
+        &self,
+        src: Option<String>,
+        seed: u64,
+    ) -> Result<Receiver<Result<GenOutput>>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Req(Request { src, seed, enqueued: Instant::now(), respond: rtx }))
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(rrx)
+    }
+
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (stx, srx) = channel();
+        self.tx.send(Msg::Stats(stx)).map_err(|_| anyhow!("server is down"))?;
+        srx.recv().map_err(|_| anyhow!("server dropped stats"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// Joins the server thread on drop.
+pub struct ServerJoin {
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerJoin {
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerJoin {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct LoopState {
+    requests: u64,
+    batches: u64,
+    batch_sizes: u64,
+    queue_lat: LatencyStats,
+    e2e_lat: LatencyStats,
+}
+
+fn serve_loop<F>(factory: F, cfg: SamplerConfig, policy: BatchPolicy, rx: Receiver<Msg>)
+where
+    F: FnOnce() -> Result<Engine>,
+{
+    let engine = match factory() {
+        Ok(e) => e,
+        Err(err) => {
+            // engine failed: drain and fail every request
+            eprintln!("[server] engine init failed: {err:#}");
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Req(r) => {
+                        let _ = r.respond.send(Err(anyhow!("engine init failed")));
+                    }
+                    Msg::Shutdown => break,
+                    Msg::Stats(s) => {
+                        let _ = s.send(empty_stats());
+                    }
+                }
+            }
+            return;
+        }
+    };
+
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    let mut st = LoopState {
+        requests: 0,
+        batches: 0,
+        batch_sizes: 0,
+        queue_lat: LatencyStats::new(),
+        e2e_lat: LatencyStats::new(),
+    };
+    let stats_lock: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
+    let _ = stats_lock; // reserved for future concurrent stats readers
+
+    loop {
+        // wait: bounded by the batch window if one is open
+        let msg = match batcher.time_left() {
+            Some(left) if !batcher.is_empty() => match rx.recv_timeout(left) {
+                Ok(m) => Some(m),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                Err(_) => break,
+            },
+            _ => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+        };
+
+        match msg {
+            Some(Msg::Req(r)) => {
+                st.requests += 1;
+                batcher.push(r);
+            }
+            Some(Msg::Stats(s)) => {
+                let _ = s.send(snapshot(&st, &engine));
+                continue;
+            }
+            Some(Msg::Shutdown) => {
+                // flush remaining requests before exiting
+                while !batcher.is_empty() {
+                    dispatch(&engine, &cfg, &mut batcher, &mut st);
+                }
+                break;
+            }
+            None => {} // window expired
+        }
+
+        while batcher.ready() {
+            dispatch(&engine, &cfg, &mut batcher, &mut st);
+        }
+    }
+}
+
+fn dispatch(engine: &Engine, cfg: &SamplerConfig, batcher: &mut Batcher<Request>, st: &mut LoopState) {
+    let reqs = batcher.take();
+    if reqs.is_empty() {
+        return;
+    }
+    st.batches += 1;
+    st.batch_sizes += reqs.len() as u64;
+    for r in &reqs {
+        st.queue_lat.record(r.enqueued.elapsed());
+    }
+
+    let conditional = engine.conditional();
+    let srcs: Option<Vec<String>> = if conditional {
+        Some(reqs.iter().map(|r| r.src.clone().unwrap_or_default()).collect())
+    } else {
+        None
+    };
+    let seed = reqs.first().map(|r| r.seed).unwrap_or(0);
+
+    match engine.generate_batch(srcs.as_deref(), reqs.len(), cfg, seed) {
+        Ok((outs, _)) => {
+            for (r, o) in reqs.into_iter().zip(outs) {
+                st.e2e_lat.record(r.enqueued.elapsed());
+                let _ = r.respond.send(Ok(o));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in reqs {
+                let _ = r.respond.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+fn snapshot(st: &LoopState, engine: &Engine) -> ServerStats {
+    ServerStats {
+        requests: st.requests,
+        batches: st.batches,
+        nn_calls: engine.nfe.calls(),
+        mean_batch: if st.batches == 0 {
+            0.0
+        } else {
+            st.batch_sizes as f64 / st.batches as f64
+        },
+        queue_p95: st.queue_lat.p95(),
+        e2e_p95: st.e2e_lat.p95(),
+        e2e_p50: st.e2e_lat.p50(),
+    }
+}
+
+fn empty_stats() -> ServerStats {
+    ServerStats {
+        requests: 0,
+        batches: 0,
+        nn_calls: 0,
+        mean_batch: 0.0,
+        queue_p95: Duration::ZERO,
+        e2e_p95: Duration::ZERO,
+        e2e_p50: Duration::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::data::words;
+    use crate::runtime::MockDenoiser;
+    use crate::sampler::{SamplerConfig, SamplerKind};
+
+    fn mock_factory() -> Result<Engine> {
+        let vocab = words::translation_vocab();
+        let cfg = MockDenoiser::test_config(vocab.len(), 8, 8, "absorbing");
+        let den = MockDenoiser::with_fn(cfg, |src, pos| {
+            src.map(|s| (s[pos] + 41).min(98)).unwrap_or(3)
+        });
+        Ok(Engine::from_denoiser(Box::new(den), vocab, "mock"))
+    }
+
+    #[test]
+    fn serves_concurrent_requests_batched() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let policy = BatchPolicy { max_batch: 4, window: Duration::from_millis(30) };
+        let (srv, join) = Server::start(mock_factory, cfg, policy);
+
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(srv.submit_async(Some("the quick fox crosses a river".into()), i).unwrap());
+        }
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert!(out.nfe >= 1);
+        }
+        let stats = srv.stats().unwrap();
+        assert_eq!(stats.requests, 8);
+        assert!(stats.batches <= 4, "8 reqs with max_batch 4 → ≤4 batches, got {}", stats.batches);
+        assert!(stats.mean_batch >= 2.0, "batching should coalesce: {}", stats.mean_batch);
+        srv.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn blocking_submit_roundtrip() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let (srv, join) =
+            Server::start(mock_factory, cfg, BatchPolicy { max_batch: 1, window: Duration::ZERO });
+        let out = srv.submit(Some("a small garden".into()), 1).unwrap();
+        assert!(!out.text.is_empty());
+        srv.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let policy = BatchPolicy { max_batch: 64, window: Duration::from_secs(60) };
+        let (srv, join) = Server::start(mock_factory, cfg, policy);
+        let rx = srv.submit_async(Some("this old road".into()), 2).unwrap();
+        srv.shutdown();
+        // pending request must still be answered (flush-on-shutdown)
+        let out = rx.recv().unwrap().unwrap();
+        assert!(!out.tokens.is_empty());
+        join.join();
+    }
+
+    #[test]
+    fn engine_failure_fails_requests_cleanly() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let (srv, join) = Server::start(
+            || Err(anyhow!("boom")),
+            cfg,
+            BatchPolicy::default(),
+        );
+        let r = srv.submit(Some("x".into()), 0);
+        assert!(r.is_err());
+        srv.shutdown();
+        join.join();
+    }
+}

@@ -1,0 +1,137 @@
+//! Unconditional corpora (text8 / enwik8 analogs) — char streams from the
+//! grammar source (mirror of common.py::gen_text_stream / gen_text_chunks).
+
+use crate::schedule::SplitMix64;
+use crate::text::Vocab;
+
+use super::grammar::gen_sentence;
+use super::translation::Split;
+use super::words::{enwik8_vocab, text8_vocab};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UncondCorpus {
+    Text8,
+    Enwik8,
+}
+
+impl UncondCorpus {
+    pub fn seed(&self) -> u64 {
+        match self {
+            UncondCorpus::Text8 => 0x7E87_0008,
+            UncondCorpus::Enwik8 => 0xE9B1_0008,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UncondCorpus::Text8 => "synth-text8",
+            UncondCorpus::Enwik8 => "synth-enwik8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UncondCorpus> {
+        match s {
+            "synth-text8" | "text8" => Some(UncondCorpus::Text8),
+            "synth-enwik8" | "enwik8" => Some(UncondCorpus::Enwik8),
+            _ => None,
+        }
+    }
+
+    pub fn vocab(&self) -> Vocab {
+        match self {
+            UncondCorpus::Text8 => text8_vocab(),
+            UncondCorpus::Enwik8 => enwik8_vocab(),
+        }
+    }
+}
+
+/// Character stream for (corpus, split), exactly `n_chars` long.
+pub fn gen_text_stream(corpus: UncondCorpus, split: Split, n_chars: usize) -> String {
+    let mut root = SplitMix64::new(corpus.seed());
+    let mut rng = root.fork(split.stream());
+    let mut parts: Vec<String> = Vec::new();
+    let mut total = 0usize;
+    while total < n_chars {
+        let words = gen_sentence(&mut rng);
+        let mut s = words.join(" ");
+        if corpus == UncondCorpus::Enwik8 {
+            if rng.coin(0.3) {
+                let tag = if rng.coin(0.5) { "p" } else { "b" };
+                s = format!("<{tag}>{s}</{tag}>");
+            }
+            if rng.coin(0.2) {
+                let year = 1900 + rng.below(120);
+                s = format!("{s} {year};");
+            }
+        }
+        total += s.len() + 1;
+        parts.push(s);
+    }
+    let joined = parts.join(" ");
+    joined.chars().take(n_chars).collect()
+}
+
+/// `count` fixed-length id chunks.
+pub fn gen_text_chunks(
+    corpus: UncondCorpus,
+    split: Split,
+    count: usize,
+    seq_len: usize,
+) -> Vec<Vec<u32>> {
+    let vocab = corpus.vocab();
+    let stream = gen_text_stream(corpus, split, count * seq_len + seq_len);
+    let chars: Vec<char> = stream.chars().collect();
+    (0..count)
+        .map(|i| {
+            chars[i * seq_len..(i + 1) * seq_len]
+                .iter()
+                .map(|c| vocab.id(&c.to_string()).unwrap_or(vocab.unk_id()))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text8_charset() {
+        let s = gen_text_stream(UncondCorpus::Text8, Split::Test, 500);
+        assert_eq!(s.chars().count(), 500);
+        assert!(s.chars().all(|c| c == ' ' || c.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn enwik8_has_markup() {
+        let s = gen_text_stream(UncondCorpus::Enwik8, Split::Test, 2000);
+        assert!(s.contains('<') && s.contains('>'));
+        let allowed: std::collections::HashSet<char> =
+            " abcdefghijklmnopqrstuvwxyz0123456789<>/=&;.,".chars().collect();
+        assert!(s.chars().all(|c| allowed.contains(&c)));
+    }
+
+    #[test]
+    fn chunks_shape_and_range() {
+        let chunks = gen_text_chunks(UncondCorpus::Text8, Split::Valid, 4, 64);
+        assert_eq!(chunks.len(), 4);
+        let v = text8_vocab_len();
+        for c in &chunks {
+            assert_eq!(c.len(), 64);
+            assert!(c.iter().all(|&id| (id as usize) < v));
+        }
+    }
+
+    fn text8_vocab_len() -> usize {
+        UncondCorpus::Text8.vocab().len()
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gen_text_stream(UncondCorpus::Enwik8, Split::Train, 300);
+        let b = gen_text_stream(UncondCorpus::Enwik8, Split::Train, 300);
+        assert_eq!(a, b);
+        let c = gen_text_stream(UncondCorpus::Enwik8, Split::Valid, 300);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,68 @@
+//! Template-PCFG sentence source (mirror of common.py::gen_sentence —
+//! identical rng call order, so both sides produce identical corpora).
+
+use crate::schedule::SplitMix64;
+
+use super::words::{ADJ, ADV, DET, NOUN, PREP, VERB};
+
+/// One source sentence, 5..=11 words.
+pub fn gen_sentence(rng: &mut SplitMix64) -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = Vec::with_capacity(11);
+    out.push(*rng.choice(&DET));
+    if rng.coin(0.6) {
+        out.push(*rng.choice(&ADJ));
+    }
+    out.push(*rng.choice(&NOUN));
+    out.push(*rng.choice(&VERB));
+    out.push(*rng.choice(&DET));
+    if rng.coin(0.4) {
+        out.push(*rng.choice(&ADJ));
+    }
+    out.push(*rng.choice(&NOUN));
+    if rng.coin(0.5) {
+        out.push(*rng.choice(&PREP));
+        out.push(*rng.choice(&DET));
+        out.push(*rng.choice(&NOUN));
+    }
+    if rng.coin(0.4) {
+        out.push(*rng.choice(&ADV));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::words::lexicon;
+
+    #[test]
+    fn sentences_in_length_range_and_vocab() {
+        let lex = lexicon();
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..500 {
+            let s = gen_sentence(&mut rng);
+            assert!((5..=11).contains(&s.len()), "{s:?}");
+            for w in &s {
+                assert!(lex.src_index(w).is_some(), "{w} not in lexicon");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SplitMix64::new(4);
+        let mut b = SplitMix64::new(4);
+        for _ in 0..50 {
+            assert_eq!(gen_sentence(&mut a), gen_sentence(&mut b));
+        }
+    }
+
+    #[test]
+    fn grammar_structure_det_first() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..100 {
+            let s = gen_sentence(&mut rng);
+            assert!(DET.contains(&s[0]));
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Synthetic corpora — the data substrate (mirrors python/compile/common.py
+//! exactly; parity pinned against artifacts/fixtures.json).
+//!
+//! The paper evaluates on IWSLT14/WMT14/WMT16 (translation) and
+//! text8/enwik8 (unconditional). Those datasets and the pretrained
+//! checkpoints are not available in this environment, so we substitute
+//! seeded synthetic analogs with the same *difficulty ordering* — see
+//! DESIGN.md §3 for the substitution argument.
+
+pub mod corpus;
+pub mod grammar;
+pub mod translation;
+pub mod words;
+
+pub use corpus::{gen_text_chunks, gen_text_stream, UncondCorpus};
+pub use grammar::gen_sentence;
+pub use translation::{gen_pairs, translate, Dataset, Split};

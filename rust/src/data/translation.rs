@@ -1,0 +1,203 @@
+//! The three synthetic seq2seq tasks (IWSLT14/WMT14/WMT16 analogs).
+//!
+//! Difficulty ordering is engineered to mirror the paper's Tables 2/3:
+//! * `Iwslt14` — positionwise word cipher (easy → highest BLEU);
+//! * `Wmt16`  — cipher + adjacent-pair swap (medium);
+//! * `Wmt14`  — cipher + full reversal + *genuinely ambiguous* synonym
+//!   choices (hard → BLEU ceiling < 100, like real WMT14 being the hardest
+//!   benchmark in the paper).
+
+use crate::schedule::SplitMix64;
+
+use super::grammar::gen_sentence;
+use super::words::lexicon;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    Iwslt14,
+    Wmt14,
+    Wmt16,
+}
+
+impl Dataset {
+    pub const ALL: [Dataset; 3] = [Dataset::Iwslt14, Dataset::Wmt14, Dataset::Wmt16];
+
+    /// python common.DATASET_SEED
+    pub fn seed(&self) -> u64 {
+        match self {
+            Dataset::Iwslt14 => 0x1E51_0014,
+            Dataset::Wmt14 => 0x3A7B_0014,
+            Dataset::Wmt16 => 0x3A7B_0016,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Iwslt14 => "synth-iwslt14",
+            Dataset::Wmt14 => "synth-wmt14",
+            Dataset::Wmt16 => "synth-wmt16",
+        }
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            Dataset::Iwslt14 => "iwslt14",
+            Dataset::Wmt14 => "wmt14",
+            Dataset::Wmt16 => "wmt16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        match s {
+            "synth-iwslt14" | "iwslt14" | "IWSLT14" => Some(Dataset::Iwslt14),
+            "synth-wmt14" | "wmt14" | "WMT14" => Some(Dataset::Wmt14),
+            "synth-wmt16" | "wmt16" | "WMT16" => Some(Dataset::Wmt16),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+}
+
+impl Split {
+    /// python common.SPLIT_STREAM
+    pub fn stream(&self) -> u64 {
+        match self {
+            Split::Train => 1,
+            Split::Valid => 2,
+            Split::Test => 3,
+        }
+    }
+}
+
+/// source → target (mirror of common.py::translate, incl. rng call order).
+pub fn translate(dataset: Dataset, src: &[&str], rng: &mut SplitMix64) -> Vec<String> {
+    let lex = lexicon();
+    let base: Vec<&str> = src
+        .iter()
+        .map(|w| lex.tgt_words[lex.src_index(w).expect("word in lexicon")].as_str())
+        .collect();
+    match dataset {
+        Dataset::Iwslt14 => base.iter().map(|s| s.to_string()).collect(),
+        Dataset::Wmt16 => {
+            let mut out: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+            let mut i = 0;
+            while i + 1 < out.len() {
+                out.swap(i, i + 1);
+                i += 2;
+            }
+            out
+        }
+        Dataset::Wmt14 => {
+            let mut out = Vec::with_capacity(src.len());
+            for w in src.iter().rev() {
+                let i = lex.src_index(w).unwrap();
+                // short-circuit exactly like python: coin only drawn when a
+                // synonym exists (rng call parity!)
+                match lex.synonym_for(i) {
+                    Some(syn) if rng.coin(0.5) => out.push(syn.to_string()),
+                    _ => out.push(lex.tgt_words[i].clone()),
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Deterministic sentence pairs for (dataset, split).
+pub fn gen_pairs(
+    dataset: Dataset,
+    split: Split,
+    count: usize,
+) -> Vec<(Vec<&'static str>, Vec<String>)> {
+    let mut root = SplitMix64::new(dataset.seed());
+    let mut rng = root.fork(split.stream());
+    (0..count)
+        .map(|_| {
+            let src = gen_sentence(&mut rng);
+            let tgt = translate(dataset, &src, &mut rng);
+            (src, tgt)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_split_disjoint() {
+        let a = gen_pairs(Dataset::Iwslt14, Split::Test, 5);
+        let b = gen_pairs(Dataset::Iwslt14, Split::Test, 5);
+        assert_eq!(a, b);
+        let tr = gen_pairs(Dataset::Iwslt14, Split::Train, 5);
+        assert_ne!(tr, a);
+    }
+
+    #[test]
+    fn iwslt_positionwise_cipher() {
+        let lex = lexicon();
+        let mut rng = SplitMix64::new(0);
+        let src = gen_sentence(&mut rng);
+        let tgt = translate(Dataset::Iwslt14, &src, &mut rng);
+        assert_eq!(tgt.len(), src.len());
+        for (s, t) in src.iter().zip(&tgt) {
+            assert_eq!(t, &lex.tgt_words[lex.src_index(s).unwrap()]);
+        }
+    }
+
+    #[test]
+    fn wmt16_swaps_pairs() {
+        let lex = lexicon();
+        let mut rng = SplitMix64::new(0);
+        let src = ["the", "fox", "crosses", "a", "river"];
+        let tgt = translate(Dataset::Wmt16, &src, &mut rng);
+        let base: Vec<&str> = src
+            .iter()
+            .map(|w| lex.tgt_words[lex.src_index(w).unwrap()].as_str())
+            .collect();
+        assert_eq!(tgt[0], base[1]);
+        assert_eq!(tgt[1], base[0]);
+        assert_eq!(tgt[4], base[4]); // odd tail unswapped
+    }
+
+    #[test]
+    fn wmt14_reverses_and_is_ambiguous() {
+        let src = ["the", "fox", "crosses", "a", "river"];
+        let mut outs = std::collections::HashSet::new();
+        for seed in 0..20 {
+            let mut rng = SplitMix64::new(seed);
+            outs.insert(translate(Dataset::Wmt14, &src, &mut rng));
+        }
+        // "a" (src idx 0) has a synonym → at least two realizations
+        assert!(outs.len() >= 2, "{outs:?}");
+        for t in &outs {
+            assert_eq!(t.len(), src.len());
+        }
+    }
+
+    #[test]
+    fn difficulty_ordering_via_reference_agreement() {
+        // iwslt references are unique per source; wmt14's are not — this is
+        // the BLEU-ceiling mechanism.
+        let uniq = |d: Dataset| {
+            let pairs = gen_pairs(d, Split::Test, 200);
+            let mut by_src: std::collections::HashMap<_, std::collections::HashSet<_>> =
+                Default::default();
+            for (s, t) in pairs {
+                by_src.entry(s).or_default().insert(t);
+            }
+            by_src.values().all(|v| v.len() == 1)
+        };
+        assert!(uniq(Dataset::Iwslt14));
+        assert!(uniq(Dataset::Wmt16));
+        // wmt14 ambiguity only matters across repeated sources, which the
+        // test split may not contain — assert instead at translate level
+        // (covered by wmt14_reverses_and_is_ambiguous).
+    }
+}

@@ -1,0 +1,176 @@
+//! Word lists, pseudo-word target language, vocab builders.
+//!
+//! Bit-exact mirror of python/compile/common.py (word lists, the
+//! syllable-built target lexicon, the synonym table, vocab layouts).
+
+use std::sync::OnceLock;
+
+use crate::schedule::SplitMix64;
+use crate::text::{Vocab, MASK, PAD, UNK};
+
+pub const DET: [&str; 5] = ["the", "a", "every", "some", "this"];
+pub const ADJ: [&str; 8] = [
+    "quick", "old", "bright", "small", "happy", "green", "quiet", "strange",
+];
+pub const NOUN: [&str; 10] = [
+    "fox", "city", "river", "teacher", "garden", "mountain", "child", "song", "road", "winter",
+];
+pub const VERB: [&str; 8] = [
+    "crosses", "finds", "watches", "builds", "sings", "follows", "keeps", "remembers",
+];
+pub const ADV: [&str; 5] = ["slowly", "often", "quietly", "never", "always"];
+pub const PREP: [&str; 5] = ["near", "under", "over", "beside", "through"];
+
+const ONSET: [&str; 13] = ["b", "d", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"];
+const NUCLEUS: [&str; 5] = ["a", "e", "i", "o", "u"];
+const CODA: [&str; 6] = ["", "n", "r", "s", "l", "k"];
+
+/// Deterministic pseudo-word i (python: `_pseudo_word`).
+pub fn pseudo_word(i: u64) -> String {
+    let mut r = SplitMix64::new(0xDA7A_0000 + i);
+    let n_syll = 1 + r.below(2);
+    let mut w = String::new();
+    for _ in 0..(n_syll + 1) {
+        w.push_str(ONSET[r.below(ONSET.len() as u64) as usize]);
+        w.push_str(NUCLEUS[r.below(NUCLEUS.len() as u64) as usize]);
+    }
+    w.push_str(CODA[r.below(CODA.len() as u64) as usize]);
+    w
+}
+
+/// Lexicon tables, built once.
+pub struct Lexicon {
+    /// sorted source words (python SRC_WORDS)
+    pub src_words: Vec<&'static str>,
+    /// target pseudo-word per source index (python TGT_WORDS)
+    pub tgt_words: Vec<String>,
+    /// ambiguous second forms: (src index, word) for every 3rd src word
+    pub synonyms: Vec<(usize, String)>,
+}
+
+impl Lexicon {
+    pub fn src_index(&self, w: &str) -> Option<usize> {
+        self.src_words.binary_search(&w).ok()
+    }
+
+    pub fn synonym_for(&self, src_idx: usize) -> Option<&str> {
+        self.synonyms
+            .iter()
+            .find(|(i, _)| *i == src_idx)
+            .map(|(_, w)| w.as_str())
+    }
+}
+
+pub fn lexicon() -> &'static Lexicon {
+    static LEX: OnceLock<Lexicon> = OnceLock::new();
+    LEX.get_or_init(|| {
+        let mut src: Vec<&'static str> = DET
+            .iter()
+            .chain(ADJ.iter())
+            .chain(NOUN.iter())
+            .chain(VERB.iter())
+            .chain(ADV.iter())
+            .chain(PREP.iter())
+            .copied()
+            .collect();
+        src.sort_unstable();
+        src.dedup();
+
+        // target words with the same collision-resolution loop as python
+        let mut tgt = Vec::with_capacity(src.len());
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..src.len() as u64 {
+            let mut w = pseudo_word(i);
+            let mut j = 0u64;
+            while seen.contains(&w) {
+                j += 1;
+                w = pseudo_word(1000 + 37 * i + j);
+            }
+            seen.insert(w.clone());
+            tgt.push(w);
+        }
+
+        let synonyms = (0..src.len())
+            .step_by(3)
+            .map(|i| (i, format!("{}x", pseudo_word(5000 + i as u64))))
+            .collect();
+
+        Lexicon { src_words: src, tgt_words: tgt, synonyms }
+    })
+}
+
+/// Shared translation vocab: specials + src + tgt + synonyms (python order).
+pub fn translation_vocab() -> Vocab {
+    let lex = lexicon();
+    let mut toks: Vec<String> = vec![PAD.into(), UNK.into(), MASK.into()];
+    toks.extend(lex.src_words.iter().map(|s| s.to_string()));
+    toks.extend(lex.tgt_words.iter().cloned());
+    toks.extend(lex.synonyms.iter().map(|(_, w)| w.clone()));
+    Vocab::new(toks)
+}
+
+/// text8 analog: specials + space + a..z (27 content chars as in the paper).
+pub fn text8_vocab() -> Vocab {
+    let mut toks: Vec<String> = vec![PAD.into(), UNK.into(), MASK.into(), " ".into()];
+    toks.extend(('a'..='z').map(|c| c.to_string()));
+    Vocab::new(toks)
+}
+
+/// enwik8 analog: text8 chars + digits + markup bytes.
+pub fn enwik8_vocab() -> Vocab {
+    let mut toks: Vec<String> = vec![PAD.into(), UNK.into(), MASK.into(), " ".into()];
+    toks.extend(('a'..='z').map(|c| c.to_string()));
+    toks.extend(('0'..='9').map(|c| c.to_string()));
+    toks.extend("<>/=&;.,".chars().map(|c| c.to_string()));
+    Vocab::new(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn src_words_sorted_unique_41() {
+        let lex = lexicon();
+        assert_eq!(lex.src_words.len(), 41);
+        for w in lex.src_words.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn tgt_words_bijective() {
+        let lex = lexicon();
+        assert_eq!(lex.tgt_words.len(), lex.src_words.len());
+        let set: std::collections::HashSet<_> = lex.tgt_words.iter().collect();
+        assert_eq!(set.len(), lex.tgt_words.len());
+    }
+
+    #[test]
+    fn synonyms_every_third_word() {
+        let lex = lexicon();
+        assert_eq!(lex.synonyms.len(), (41 + 2) / 3);
+        assert!(lex.synonym_for(0).is_some());
+        assert!(lex.synonym_for(1).is_none());
+        assert!(lex.synonym_for(3).is_some());
+        for (_, w) in &lex.synonyms {
+            assert!(w.ends_with('x'));
+        }
+    }
+
+    #[test]
+    fn pseudo_word_is_deterministic_and_wordlike() {
+        assert_eq!(pseudo_word(0), pseudo_word(0));
+        for i in 0..50 {
+            let w = pseudo_word(i);
+            assert!(w.len() >= 2 && w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+
+    #[test]
+    fn vocab_sizes() {
+        assert_eq!(translation_vocab().len(), 3 + 41 + 41 + 14);
+        assert_eq!(text8_vocab().len(), 30);
+        assert_eq!(enwik8_vocab().len(), 48);
+    }
+}

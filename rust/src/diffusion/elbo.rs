@@ -1,0 +1,160 @@
+//! DNDM evidence lower bound (Appendix B.3).
+//!
+//! The paper decomposes the ELBO over transition times instead of steps:
+//! conditioned on 𝒯, the only stochastic reconstruction each token needs
+//! is p_θ(x₀,ₙ | x_{τ_n}) at its own transition time, so
+//!
+//!   −ELBO(x₀) ≈ E_{𝒯~𝒟_τ} Σ_n −log p_θ(x₀,ₙ | x_{τ_n}, τ_n)  (+ const)
+//!
+//! with x_{τ_n} drawn from the non-Markov forward (eq. 7): position m is
+//! still x₀ if τ_m > τ_n, already noise w_m otherwise. This gives a
+//! Monte-Carlo NLL-per-token estimator that costs |𝒯| network calls per
+//! sample — the evaluation-side twin of the fast sampler, used by the
+//! benches as a likelihood sanity check and by tests to verify that the
+//! Markov and non-Markov corruptions score identically in expectation
+//! (Theorem 3.1 at the loss level, Appendix B.3's claim).
+
+use anyhow::Result;
+
+use crate::runtime::Denoiser;
+use crate::sampler::common::{log_prob, noise_of, row};
+use crate::schedule::{SplitMix64, TransitionOrder, TransitionSpec};
+
+/// Monte-Carlo −ELBO estimate in nats/token for one sequence.
+///
+/// `samples` independent 𝒯 draws are averaged; each draw costs |𝒯| calls.
+pub fn dndm_nll(
+    den: &dyn Denoiser,
+    x0: &[u32],
+    src: Option<&[u32]>,
+    spec: &TransitionSpec,
+    t_max: usize,
+    samples: usize,
+    rng: &mut SplitMix64,
+) -> Result<f64> {
+    let cfg = den.config().clone();
+    let (n, v) = (cfg.seq_len, cfg.vocab);
+    assert_eq!(x0.len(), n);
+    let noise = noise_of(&cfg);
+
+    let mut total = 0.0f64;
+    for _ in 0..samples {
+        let tt = spec.sample_times(t_max, n, TransitionOrder::Random, rng);
+        // per-token time-invariant noise draw w_n (eq. 6)
+        let w: Vec<u32> = (0..n).map(|_| noise.sample(rng)).collect();
+        for &t in tt.events() {
+            // eq. 7 state at time t: x0 where τ > t, w where τ ≤ t
+            let x_t: Vec<u32> = (0..n)
+                .map(|m| if tt.taus[m] > t { x0[m] } else { w[m] })
+                .collect();
+            let t_norm = t as f32 / t_max as f32;
+            let src_b = src.map(|s| vec![s.to_vec()]);
+            let logits = den.denoise(&[x_t], &[t_norm], src_b.as_deref())?;
+            for m in tt.moves_at(t) {
+                total += -f64::from(log_prob(row(&logits[0], m, v), x0[m] as usize));
+            }
+        }
+    }
+    Ok(total / (samples * n) as f64)
+}
+
+/// Control estimator: the same reconstruction loss but with x_t drawn from
+/// the *Markov* marginal (eq. 3) at each token's τ — per Theorem 3.1 both
+/// corruptions share q(x_t|x0), so the two estimators agree in expectation.
+pub fn markov_nll(
+    den: &dyn Denoiser,
+    x0: &[u32],
+    src: Option<&[u32]>,
+    spec: &TransitionSpec,
+    t_max: usize,
+    samples: usize,
+    rng: &mut SplitMix64,
+) -> Result<f64> {
+    let cfg = den.config().clone();
+    let (n, v) = (cfg.seq_len, cfg.vocab);
+    let noise = noise_of(&cfg);
+    let sched = crate::schedule::AlphaSchedule::parse(&cfg.schedule)
+        .unwrap_or(crate::schedule::AlphaSchedule::CosineSq);
+
+    let mut total = 0.0f64;
+    for _ in 0..samples {
+        let tt = spec.sample_times(t_max, n, TransitionOrder::Random, rng);
+        for &t in tt.events() {
+            // fresh marginal draw per position (Markov chain's q(x_t|x0))
+            let x_t: Vec<u32> = (0..n)
+                .map(|m| {
+                    crate::diffusion::forward_marginal(x0[m], sched, t, t_max, noise, rng)
+                })
+                .collect();
+            let t_norm = t as f32 / t_max as f32;
+            let src_b = src.map(|s| vec![s.to_vec()]);
+            let logits = den.denoise(&[x_t], &[t_norm], src_b.as_deref())?;
+            for m in tt.moves_at(t) {
+                total += -f64::from(log_prob(row(&logits[0], m, v), x0[m] as usize));
+            }
+        }
+    }
+    Ok(total / (samples * n) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+    use crate::schedule::AlphaSchedule;
+
+    const TARGET: [u32; 8] = [10, 11, 12, 13, 14, 15, 16, 17];
+
+    fn spec() -> TransitionSpec {
+        TransitionSpec::Exact(AlphaSchedule::CosineSq)
+    }
+
+    #[test]
+    fn perfect_model_has_near_zero_nll() {
+        let cfg = MockDenoiser::test_config(20, 8, 0, "absorbing");
+        let mut den = MockDenoiser::fixed(cfg, TARGET.to_vec());
+        den.peak = 20.0;
+        let mut rng = SplitMix64::new(1);
+        let nll = dndm_nll(&den, &TARGET, None, &spec(), 50, 4, &mut rng).unwrap();
+        assert!(nll < 0.05, "{nll}");
+    }
+
+    #[test]
+    fn uniform_model_has_log_v_nll() {
+        // a mock with peak 0 emits (almost) uniform logits → NLL ≈ ln V
+        let cfg = MockDenoiser::test_config(20, 8, 0, "multinomial");
+        let mut den = MockDenoiser::fixed(cfg, TARGET.to_vec());
+        den.peak = 0.0;
+        let mut rng = SplitMix64::new(2);
+        let nll = dndm_nll(&den, &TARGET, None, &spec(), 50, 4, &mut rng).unwrap();
+        let ln_v = (20f64).ln();
+        assert!((nll - ln_v).abs() < 0.4, "{nll} vs ln V = {ln_v}");
+    }
+
+    #[test]
+    fn wrong_target_scores_worse_than_right_target() {
+        let cfg = MockDenoiser::test_config(20, 8, 0, "absorbing");
+        let mut den = MockDenoiser::fixed(cfg, TARGET.to_vec());
+        den.peak = 6.0;
+        let mut rng = SplitMix64::new(3);
+        let right = dndm_nll(&den, &TARGET, None, &spec(), 50, 3, &mut rng).unwrap();
+        let wrong: Vec<u32> = TARGET.iter().map(|&t| t.wrapping_sub(5) % 20).collect();
+        let bad = dndm_nll(&den, &wrong, None, &spec(), 50, 3, &mut rng).unwrap();
+        assert!(bad > right + 1.0, "{bad} vs {right}");
+    }
+
+    #[test]
+    fn markov_and_dndm_estimators_agree_in_expectation() {
+        // Theorem 3.1 at the loss level (Appendix B.3): both corruptions
+        // have the same q(x_t|x0), so the two NLL estimators converge to
+        // the same value. The mock depends only weakly on x_t (the 0.5
+        // self-bump), so the agreement is tight even with few samples.
+        let cfg = MockDenoiser::test_config(20, 8, 0, "multinomial");
+        let mut den = MockDenoiser::fixed(cfg, TARGET.to_vec());
+        den.peak = 4.0;
+        let mut rng = SplitMix64::new(4);
+        let a = dndm_nll(&den, &TARGET, None, &spec(), 30, 24, &mut rng).unwrap();
+        let b = markov_nll(&den, &TARGET, None, &spec(), 30, 24, &mut rng).unwrap();
+        assert!((a - b).abs() < 0.08, "dndm {a} vs markov {b}");
+    }
+}

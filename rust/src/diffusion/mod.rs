@@ -1,0 +1,13 @@
+//! The discrete diffusion substrate: noise distributions, forward
+//! processes (Markov eq. 1 and non-Markov eq. 6), and the reverse-step
+//! posteriors the baseline samplers need.
+
+pub mod elbo;
+pub mod noise;
+pub mod posterior;
+pub mod process;
+
+pub use elbo::{dndm_nll, markov_nll};
+pub use noise::NoiseKind;
+pub use posterior::{absorbing_reverse_step, multinomial_posterior, multinomial_reverse_step};
+pub use process::{forward_marginal, forward_markov, forward_non_markov};

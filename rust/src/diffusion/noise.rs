@@ -1,0 +1,100 @@
+//! q_noise — the two noise families the paper covers (§2).
+
+use crate::schedule::SplitMix64;
+
+/// The stationary noise distribution q_noise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoiseKind {
+    /// Uniform over the usable vocabulary [lo, vocab) — multinomial
+    /// diffusion (Hoogeboom et al. 2021b). `lo` excludes the special
+    /// tokens (<pad>/<unk>/<mask>), mirroring trainer.py::NOISE_LO.
+    Multinomial { lo: u32, vocab: u32 },
+    /// Point mass on the absorbing [MASK] state (Austin et al. 2021).
+    Absorbing { mask_id: u32 },
+}
+
+impl NoiseKind {
+    pub fn parse(kind: &str, noise_lo: u32, vocab: u32, mask_id: u32) -> Option<NoiseKind> {
+        match kind {
+            "multinomial" => Some(NoiseKind::Multinomial { lo: noise_lo, vocab }),
+            "absorbing" => Some(NoiseKind::Absorbing { mask_id }),
+            _ => None,
+        }
+    }
+
+    /// Draw w ~ q_noise.
+    #[inline]
+    pub fn sample(&self, rng: &mut SplitMix64) -> u32 {
+        match *self {
+            NoiseKind::Multinomial { lo, vocab } => lo + rng.below((vocab - lo) as u64) as u32,
+            NoiseKind::Absorbing { mask_id } => mask_id,
+        }
+    }
+
+    /// q_noise(x) — the probability the noise assigns to token x.
+    pub fn prob(&self, x: u32) -> f64 {
+        match *self {
+            NoiseKind::Multinomial { lo, vocab } => {
+                if x >= lo && x < vocab {
+                    1.0 / (vocab - lo) as f64
+                } else {
+                    0.0
+                }
+            }
+            NoiseKind::Absorbing { mask_id } => {
+                if x == mask_id {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Fill a whole sequence with noise (the x_T initialization).
+    pub fn sample_seq(&self, n: usize, rng: &mut SplitMix64) -> Vec<u32> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+
+    pub fn is_absorbing(&self) -> bool {
+        matches!(self, NoiseKind::Absorbing { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multinomial_avoids_specials_and_is_uniform() {
+        let nk = NoiseKind::Multinomial { lo: 3, vocab: 13 };
+        let mut rng = SplitMix64::new(1);
+        let mut counts = [0usize; 13];
+        for _ in 0..50_000 {
+            counts[nk.sample(&mut rng) as usize] += 1;
+        }
+        assert_eq!(counts[0] + counts[1] + counts[2], 0);
+        for c in &counts[3..] {
+            let f = *c as f64 / 50_000.0;
+            assert!((f - 0.1).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn absorbing_is_point_mass() {
+        let nk = NoiseKind::Absorbing { mask_id: 2 };
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..100 {
+            assert_eq!(nk.sample(&mut rng), 2);
+        }
+        assert_eq!(nk.prob(2), 1.0);
+        assert_eq!(nk.prob(5), 0.0);
+    }
+
+    #[test]
+    fn prob_sums_to_one() {
+        let nk = NoiseKind::Multinomial { lo: 3, vocab: 30 };
+        let total: f64 = (0..30).map(|x| nk.prob(x)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! Reverse-step posteriors q(x_{t−1} | x_t, x̂0) — the per-step machinery
+//! of the **baseline** samplers (D3PM ancestral sampling and RDM).
+//!
+//! DNDM itself never touches these: its reverse step (eq. 9) is the
+//! deterministic select in `sampler::dndm`. These formulas are Appendix
+//! B.1/B.2 of the paper.
+
+use crate::schedule::{AlphaSchedule, SplitMix64};
+
+use super::noise::NoiseKind;
+
+/// Multinomial posterior over x_{t−1} for one token (Appendix B.2):
+/// θ_post(x_t, x̂0) ∝ (β_t·x_t + (1−β_t)·q_noise) ⊙ (α_{t−1}·x̂0 + (1−α_{t−1})·q_noise)
+///
+/// Returns an unnormalized weight vector over the vocabulary.
+pub fn multinomial_posterior(
+    x_t: u32,
+    x0_hat: u32,
+    k: usize,
+    t_max: usize,
+    sched: AlphaSchedule,
+    noise: NoiseKind,
+    vocab: usize,
+) -> Vec<f64> {
+    let beta = sched.beta_discrete(k, t_max);
+    let a_prev = sched.alpha_discrete(k - 1, t_max);
+    let mut w = vec![0.0f64; vocab];
+    for (x, wx) in w.iter_mut().enumerate() {
+        let x = x as u32;
+        let lhs = if x == x_t { beta } else { 0.0 } + (1.0 - beta) * noise.prob(x);
+        let rhs = if x == x0_hat { a_prev } else { 0.0 } + (1.0 - a_prev) * noise.prob(x);
+        *wx = lhs * rhs;
+    }
+    w
+}
+
+/// Draw x_{t−1} from the multinomial posterior.
+pub fn multinomial_reverse_step(
+    x_t: u32,
+    x0_hat: u32,
+    k: usize,
+    t_max: usize,
+    sched: AlphaSchedule,
+    noise: NoiseKind,
+    vocab: usize,
+    rng: &mut SplitMix64,
+) -> u32 {
+    let w = multinomial_posterior(x_t, x0_hat, k, t_max, sched, noise, vocab);
+    rng.categorical(&w) as u32
+}
+
+/// Absorbing-diffusion reverse step (Appendix B.1):
+/// if x_t ≠ [MASK]    → x_{t−1} = x_t (already decoded, frozen);
+/// if x_t = [MASK]    → stay [MASK] w.p. (1−α_{t−1})/(1−α_t),
+///                      else reveal x̂0.
+pub fn absorbing_reverse_step(
+    x_t: u32,
+    x0_hat: u32,
+    k: usize,
+    t_max: usize,
+    sched: AlphaSchedule,
+    mask_id: u32,
+    rng: &mut SplitMix64,
+) -> u32 {
+    if x_t != mask_id {
+        return x_t;
+    }
+    let a_t = sched.alpha_discrete(k, t_max);
+    let a_prev = sched.alpha_discrete(k - 1, t_max);
+    let stay_mask = if a_t >= 1.0 { 0.0 } else { (1.0 - a_prev) / (1.0 - a_t) };
+    if rng.coin(stay_mask) {
+        mask_id
+    } else {
+        x0_hat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: usize = 10;
+    const V: usize = 8;
+
+    #[test]
+    fn multinomial_posterior_is_valid_and_consistent_with_bayes() {
+        // brute-force Bayes check: q(x_{t-1}|x_t,x0) ∝ q(x_t|x_{t-1})·q(x_{t-1}|x0)
+        let sched = AlphaSchedule::CosineSq;
+        let noise = NoiseKind::Multinomial { lo: 0, vocab: V as u32 };
+        let (x_t, x0, k) = (3u32, 5u32, 6usize);
+        let w = multinomial_posterior(x_t, x0, k, T, sched, noise, V);
+        assert!(w.iter().all(|&p| p >= 0.0));
+        assert!(w.iter().sum::<f64>() > 0.0);
+
+        let beta = sched.beta_discrete(k, T);
+        let a_prev = sched.alpha_discrete(k - 1, T);
+        for x_prev in 0..V as u32 {
+            // q(x_t|x_{t-1}) under the Markov kernel (eq. 2)
+            let fwd = if x_t == x_prev { beta } else { 0.0 } + (1.0 - beta) / V as f64;
+            // q(x_{t-1}|x0) marginal (eq. 3)
+            let marg = if x_prev == x0 { a_prev } else { 0.0 } + (1.0 - a_prev) / V as f64;
+            let expect = fwd * marg;
+            assert!(
+                (w[x_prev as usize] - expect).abs() < 1e-12,
+                "x_prev={x_prev}: {} vs {expect}",
+                w[x_prev as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn multinomial_reverse_recovers_x0_at_k1() {
+        // at k=1, α_0 = 1 ⇒ posterior puts all non-x_t mass on x̂0
+        let sched = AlphaSchedule::Linear;
+        let noise = NoiseKind::Multinomial { lo: 0, vocab: V as u32 };
+        let mut rng = SplitMix64::new(1);
+        let mut hits = 0;
+        for _ in 0..2_000 {
+            let x = multinomial_reverse_step(2, 5, 1, T, sched, noise, V, &mut rng);
+            if x == 5 {
+                hits += 1;
+            }
+        }
+        // β_1 < 1 leaves some mass on x_t = 2; everything else goes to 5
+        assert!(hits > 1_500, "{hits}");
+        let w = multinomial_posterior(2, 5, 1, T, sched, noise, V);
+        for (i, &p) in w.iter().enumerate() {
+            if i != 2 && i != 5 {
+                assert!(p.abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn absorbing_freezes_decoded_tokens() {
+        let sched = AlphaSchedule::Linear;
+        let mut rng = SplitMix64::new(2);
+        for k in 2..=T {
+            assert_eq!(
+                absorbing_reverse_step(4, 6, k, T, sched, 0, &mut rng),
+                4,
+                "decoded token must not change"
+            );
+        }
+    }
+
+    #[test]
+    fn absorbing_reveal_probability_matches_formula() {
+        let sched = AlphaSchedule::Linear;
+        let (k, mask) = (5usize, 0u32);
+        let a_t = sched.alpha_discrete(k, T);
+        let a_prev = sched.alpha_discrete(k - 1, T);
+        let p_reveal = (a_prev - a_t) / (1.0 - a_t);
+        let mut rng = SplitMix64::new(3);
+        let n = 40_000;
+        let mut revealed = 0;
+        for _ in 0..n {
+            if absorbing_reverse_step(mask, 7, k, T, sched, mask, &mut rng) == 7 {
+                revealed += 1;
+            }
+        }
+        let f = revealed as f64 / n as f64;
+        assert!((f - p_reveal).abs() < 0.01, "{f} vs {p_reveal}");
+    }
+
+    #[test]
+    fn absorbing_always_reveals_at_k1() {
+        let sched = AlphaSchedule::CosineSq;
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..200 {
+            assert_eq!(absorbing_reverse_step(0, 3, 1, T, sched, 0, &mut rng), 3);
+        }
+    }
+}

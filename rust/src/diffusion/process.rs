@@ -1,0 +1,166 @@
+//! Forward processes: the Markov chain (eq. 1), the non-Markov chain
+//! (eq. 6), and the shared marginal (Theorems 3.1 / eq. 3).
+//!
+//! These exist for testing and documentation — the serving path never runs
+//! a forward pass — but they are the executable statement of the paper's
+//! central claim: both processes induce the *same* q(x_t | x_0), so a
+//! network trained under (1) drives DNDM sampling under (6) unchanged.
+
+use crate::schedule::{AlphaSchedule, SplitMix64};
+
+use super::noise::NoiseKind;
+
+/// One trajectory of the **Markov** forward process (eq. 1):
+/// x_t = b_t·x_{t−1} + (1 − b_t)·w_t with fresh noise w_t each step.
+/// Returns [x_0, x_1, …, x_T] for a single token.
+pub fn forward_markov(
+    x0: u32,
+    sched: AlphaSchedule,
+    t_max: usize,
+    noise: NoiseKind,
+    rng: &mut SplitMix64,
+) -> Vec<u32> {
+    let mut traj = Vec::with_capacity(t_max + 1);
+    let mut x = x0;
+    traj.push(x);
+    for k in 1..=t_max {
+        let beta = sched.beta_discrete(k, t_max);
+        if !rng.coin(beta) {
+            x = noise.sample(rng); // fresh w_t
+        }
+        traj.push(x);
+    }
+    traj
+}
+
+/// One trajectory of the **non-Markov** forward process (eq. 6):
+/// x_t = b_t·x_{t−1} + (1 − b_t)·w with a single, time-invariant w.
+/// Once transitioned, the token stays at w forever (eq. 7).
+pub fn forward_non_markov(
+    x0: u32,
+    sched: AlphaSchedule,
+    t_max: usize,
+    noise: NoiseKind,
+    rng: &mut SplitMix64,
+) -> Vec<u32> {
+    let w = noise.sample(rng);
+    let mut traj = Vec::with_capacity(t_max + 1);
+    let mut transitioned = false;
+    traj.push(x0);
+    for k in 1..=t_max {
+        let beta = sched.beta_discrete(k, t_max);
+        if !transitioned && !rng.coin(beta) {
+            transitioned = true; // τ = k
+        }
+        traj.push(if transitioned { w } else { x0 });
+    }
+    traj
+}
+
+/// Direct draw from the shared marginal q(x_t|x_0) =
+/// Cat(α_t·x_0 + (1 − α_t)·q_noise) (eq. 3 / Thm 3.1).
+pub fn forward_marginal(
+    x0: u32,
+    sched: AlphaSchedule,
+    k: usize,
+    t_max: usize,
+    noise: NoiseKind,
+    rng: &mut SplitMix64,
+) -> u32 {
+    let a = sched.alpha_discrete(k, t_max);
+    if rng.coin(a) {
+        x0
+    } else {
+        noise.sample(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: usize = 20;
+    const TRIALS: usize = 30_000;
+
+    fn keep_rate(trajs: &[Vec<u32>], k: usize, x0: u32) -> f64 {
+        trajs.iter().filter(|t| t[k] == x0).count() as f64 / trajs.len() as f64
+    }
+
+    /// Theorem 3.1, empirically: the Markov and non-Markov processes have
+    /// the same marginal ℙ(x_t = x_0) at every t.
+    #[test]
+    fn markov_and_non_markov_share_marginals() {
+        let sched = AlphaSchedule::CosineSq;
+        let noise = NoiseKind::Absorbing { mask_id: 99 };
+        let x0 = 7u32;
+        let mut rng = SplitMix64::new(31);
+        let mk: Vec<_> = (0..TRIALS)
+            .map(|_| forward_markov(x0, sched, T, noise, &mut rng))
+            .collect();
+        let nm: Vec<_> = (0..TRIALS)
+            .map(|_| forward_non_markov(x0, sched, T, noise, &mut rng))
+            .collect();
+        for k in [1, 5, 10, 15, 20] {
+            let a = sched.alpha_discrete(k, T);
+            let fm = keep_rate(&mk, k, x0);
+            let fn_ = keep_rate(&nm, k, x0);
+            assert!((fm - a).abs() < 0.015, "markov k={k}: {fm} vs α={a}");
+            assert!((fn_ - a).abs() < 0.015, "non-markov k={k}: {fn_} vs α={a}");
+        }
+    }
+
+    /// With multinomial noise the *joint* behaviour differs (w fixed vs
+    /// fresh w_t): in the non-Markov chain a token that left x0 never takes
+    /// two different noise values; in the Markov chain it can.
+    #[test]
+    fn non_markov_noise_is_time_invariant() {
+        let sched = AlphaSchedule::Linear;
+        let noise = NoiseKind::Multinomial { lo: 0, vocab: 50 };
+        let x0 = 777; // outside vocab → never equal to noise
+        let mut rng = SplitMix64::new(77);
+        let mut markov_changed = false;
+        for _ in 0..2_000 {
+            let nm = forward_non_markov(x0, sched, T, noise, &mut rng);
+            let noise_vals: std::collections::HashSet<u32> =
+                nm.iter().copied().filter(|&v| v != x0).collect();
+            assert!(noise_vals.len() <= 1, "non-markov used two noise values");
+
+            let mk = forward_markov(x0, sched, T, noise, &mut rng);
+            let mk_vals: std::collections::HashSet<u32> =
+                mk.iter().copied().filter(|&v| v != x0).collect();
+            if mk_vals.len() > 1 {
+                markov_changed = true;
+            }
+        }
+        assert!(markov_changed, "markov chain should resample noise");
+    }
+
+    /// Eq. 7: the non-Markov trajectory is x0 before τ and w after — i.e.
+    /// exactly one change point.
+    #[test]
+    fn non_markov_has_single_change_point() {
+        let sched = AlphaSchedule::Cosine;
+        let noise = NoiseKind::Multinomial { lo: 0, vocab: 10 };
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..2_000 {
+            let traj = forward_non_markov(1_000, sched, T, noise, &mut rng);
+            let changes = traj.windows(2).filter(|w| w[0] != w[1]).count();
+            assert!(changes <= 1, "trajectory changed {changes} times: {traj:?}");
+            assert_ne!(traj[T], 1_000, "α_T = 0 ⇒ x_T must be noise");
+        }
+    }
+
+    #[test]
+    fn marginal_sampler_matches_alpha() {
+        let sched = AlphaSchedule::Linear;
+        let noise = NoiseKind::Absorbing { mask_id: 0 };
+        let mut rng = SplitMix64::new(13);
+        let k = 7;
+        let a = sched.alpha_discrete(k, T);
+        let kept = (0..TRIALS)
+            .filter(|_| forward_marginal(9, sched, k, T, noise, &mut rng) == 9)
+            .count();
+        let f = kept as f64 / TRIALS as f64;
+        assert!((f - a).abs() < 0.01, "{f} vs {a}");
+    }
+}

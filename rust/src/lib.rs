@@ -1,0 +1,47 @@
+//! # DNDM — Discrete Non-Markov Diffusion Models, served from Rust
+//!
+//! Reproduction of *"Fast Sampling via Discrete Non-Markov Diffusion Models
+//! with Predetermined Transition Time"* (Chen et al., NeurIPS 2024) as a
+//! deployable three-layer serving stack:
+//!
+//! * **L3 (this crate)** — the coordinator: request queue, NFE-aligned
+//!   dynamic batcher, all sampling algorithms (DNDM Alg. 1/2/3/4 plus the
+//!   D3PM / RDM / Mask-Predict baselines), schedules, metrics, and the PJRT
+//!   runtime that executes the AOT artifacts.
+//! * **L2 (python/compile/model.py, build time)** — the JAX denoiser
+//!   `p_θ(x̂0 | x_t, t[, src])`, lowered once to HLO text.
+//! * **L1 (python/compile/kernels/, build time)** — Pallas kernels (fused
+//!   attention + the fused DNDM transition update) inside that HLO.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use dndm::runtime::Artifacts;
+//! use dndm::sampler::{SamplerKind, SamplerConfig};
+//! use dndm::coordinator::Engine;
+//!
+//! let arts = Artifacts::load("artifacts").unwrap();
+//! let engine = Engine::new(&arts, "cond_absorb_iwslt14").unwrap();
+//! let out = engine.generate_one(
+//!     Some("the quick fox crosses a river"),
+//!     &SamplerConfig::new(SamplerKind::Dndm, 50),
+//!     7,
+//! ).unwrap();
+//! println!("{} (NFE {})", out.text, out.nfe);
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod diffusion;
+pub mod exp;
+pub mod metrics;
+pub mod runtime;
+pub mod sampler;
+pub mod schedule;
+pub mod text;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

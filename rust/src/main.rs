@@ -1,0 +1,304 @@
+//! dndm — CLI for the DNDM serving stack.
+//!
+//! Subcommands:
+//!   inspect                         list models in artifacts/
+//!   generate   --model M [...]      unconditional generation
+//!   translate  --dataset D [...]    translate the synthetic test split + BLEU
+//!   serve      [...]                run the server against a synthetic workload
+//!   nfe        --steps T --n N      print E|𝒯| (Theorem D.1) per 𝒟_τ
+//!
+//! Common flags: --artifacts PATH (default: artifacts), --sampler NAME,
+//! --steps T, --batch B, --seed S, --spec exact:cosine_sq | beta:15:7,
+//! --order random|l2r|r2l, --temperature X, --count N.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::data::{gen_pairs, Dataset, Split};
+use dndm::metrics::bleu::corpus_bleu_str;
+use dndm::runtime::Artifacts;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::schedule::{TransitionOrder, TransitionSpec};
+use dndm::util::args::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let r = match cmd {
+        "inspect" => inspect(&args),
+        "generate" => generate(&args),
+        "translate" => translate(&args),
+        "serve" => serve(&args),
+        "nfe" => nfe(&args),
+        "validate" => validate(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "dndm — Discrete Non-Markov Diffusion Model serving stack\n\n\
+         USAGE: dndm <inspect|validate|generate|translate|serve|nfe> [flags]\n\n\
+         inspect    --artifacts PATH\n\
+         generate   --model NAME --sampler dndm --steps 50 --batch 4 --count 4 --seed 0\n\
+         translate  --dataset iwslt14 --kind absorbing --sampler dndm-k --steps 50 --count 64\n\
+         serve      --dataset iwslt14 --kind absorbing --requests 64 --max-batch 16 --window-ms 20\n\
+         nfe        --steps 1000 --n 16 --spec beta:15:7\n\n\
+         common flags: --artifacts PATH  --spec exact:cosine_sq|beta:A:B\n\
+                       --order random|l2r|r2l  --temperature X  --seed N\n\
+                       --sampler dndm|dndm-v2|dndm-k|dndm-c|d3pm|rdm|rdm-k|mask-predict"
+    );
+}
+
+fn sampler_config(args: &Args) -> Result<SamplerConfig> {
+    let kind = SamplerKind::parse(args.get_or("sampler", "dndm"))
+        .ok_or_else(|| anyhow!("unknown sampler"))?;
+    let mut cfg = SamplerConfig::new(kind, args.usize_or("steps", 50));
+    if let Some(spec) = args.get("spec") {
+        cfg.spec = TransitionSpec::parse(spec).ok_or_else(|| anyhow!("bad --spec"))?;
+    }
+    cfg.order = match args.get_or("order", "random") {
+        "random" => TransitionOrder::Random,
+        "l2r" => TransitionOrder::LeftToRight,
+        "r2l" => TransitionOrder::RightToLeft,
+        o => bail!("bad --order {o}"),
+    };
+    cfg.temperature = args.f64_or("temperature", 0.0) as f32;
+    if args.has("trace") {
+        cfg = cfg.with_trace();
+    }
+    Ok(cfg)
+}
+
+fn load_artifacts(args: &Args) -> Result<Artifacts> {
+    Artifacts::load(args.get_or("artifacts", "artifacts"))
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args)?;
+    println!("artifacts root : {:?}", arts.root);
+    println!("batch buckets  : {:?}", arts.buckets);
+    println!("{:<28} {:>11} {:>8} {:>9}  dataset", "model", "kind", "params", "tensors");
+    for m in &arts.models {
+        println!(
+            "{:<28} {:>11} {:>8} {:>9}  {}{}",
+            m.name,
+            m.kind,
+            m.n_params,
+            m.n_tensors,
+            m.dataset,
+            if m.continuous { " (continuous-trained)" } else { "" }
+        );
+    }
+    println!("transition kernels: {:?}", arts.transition.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn model_for(args: &Args, arts: &Artifacts) -> Result<String> {
+    if let Some(m) = args.get("model") {
+        return Ok(m.to_string());
+    }
+    let ds = Dataset::parse(args.get_or("dataset", "iwslt14"))
+        .ok_or_else(|| anyhow!("bad --dataset"))?;
+    let kind = args.get_or("kind", "absorbing");
+    let continuous = args.has("continuous");
+    arts.find(kind, ds.name(), continuous)
+        .map(|m| m.name.clone())
+        .ok_or_else(|| anyhow!("no model for {kind}/{}", ds.name()))
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args)?;
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model required (see `dndm inspect`)"))?;
+    let eng = Engine::new(&arts, model)?;
+    let cfg = sampler_config(args)?;
+    let count = args.usize_or("count", 4);
+    let batch = args.usize_or("batch", count.min(4));
+    let seed = args.u64_or("seed", 0);
+
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < count {
+        let b = batch.min(count - done);
+        let (outs, res) = eng.generate_batch(None, b, &cfg, seed + done as u64)?;
+        for o in outs {
+            println!("[nfe={:>3}] {}", res.nfe, o.text);
+        }
+        done += b;
+    }
+    println!(
+        "generated {count} sequences in {:.2}s (avg NFE {:.1})",
+        t0.elapsed().as_secs_f64(),
+        eng.nfe.avg_nfe()
+    );
+    Ok(())
+}
+
+fn translate(args: &Args) -> Result<()> {
+    let arts = load_artifacts(args)?;
+    let ds = Dataset::parse(args.get_or("dataset", "iwslt14"))
+        .ok_or_else(|| anyhow!("bad --dataset"))?;
+    let model = model_for(args, &arts)?;
+    let eng = Engine::new(&arts, &model)?;
+    let cfg = sampler_config(args)?;
+    let count = args.usize_or("count", 64);
+    let batch = args.usize_or("batch", 16);
+    let seed = args.u64_or("seed", 0);
+    let verbose = args.has("verbose");
+
+    let pairs = gen_pairs(ds, Split::Test, count);
+    let mut hyps = Vec::with_capacity(count);
+    let mut refs = Vec::with_capacity(count);
+    let t0 = Instant::now();
+    for chunk in pairs.chunks(batch) {
+        let srcs: Vec<String> = chunk.iter().map(|(s, _)| s.join(" ")).collect();
+        let (outs, _) = eng.generate_batch(Some(&srcs), srcs.len(), &cfg, seed)?;
+        for ((src, tgt), out) in chunk.iter().zip(outs) {
+            if verbose {
+                println!("SRC {}\nREF {}\nHYP {}\n", src.join(" "), tgt.join(" "), out.text);
+            }
+            hyps.push(out.text);
+            refs.push(tgt.join(" "));
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "model={model} sampler={} steps={} : BLEU {:.2}  time {:.2}s  avg NFE {:.2}",
+        cfg.kind.name(),
+        cfg.steps,
+        corpus_bleu_str(&hyps, &refs),
+        elapsed.as_secs_f64(),
+        eng.nfe.avg_nfe(),
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let arts_path = args.get_or("artifacts", "artifacts").to_string();
+    let arts = load_artifacts(args)?;
+    let ds = Dataset::parse(args.get_or("dataset", "iwslt14"))
+        .ok_or_else(|| anyhow!("bad --dataset"))?;
+    let model = model_for(args, &arts)?;
+    let cfg = sampler_config(args)?;
+    let policy = BatchPolicy {
+        max_batch: args.usize_or("max-batch", 16),
+        window: std::time::Duration::from_millis(args.u64_or("window-ms", 20)),
+    };
+    let n_requests = args.usize_or("requests", 64);
+
+    println!("starting server: model={model} sampler={} policy={policy:?}", cfg.kind.name());
+    let model2 = model.clone();
+    let (srv, join) = Server::start(
+        move || {
+            let arts = Artifacts::load(&arts_path)?;
+            let eng = Engine::new(&arts, &model2)?;
+            eng.warmup(&[1, 4, 16])?;
+            Ok(eng)
+        },
+        cfg,
+        policy,
+    );
+
+    // synthetic client load: the test split as concurrent requests
+    let pairs = gen_pairs(ds, Split::Test, n_requests);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .collect();
+    let mut hyps = Vec::new();
+    for rx in rxs {
+        hyps.push(rx.recv()??.text);
+    }
+    let wall = t0.elapsed();
+    let refs: Vec<String> = pairs.iter().map(|(_, t)| t.join(" ")).collect();
+    let stats = srv.stats()?;
+    println!(
+        "served {} requests in {:.2}s ({:.1} req/s)\n  batches {} (mean size {:.1})  NN calls {}\n  \
+         queue p95 {:.1}ms  e2e p50 {:.1}ms  p95 {:.1}ms\n  BLEU {:.2}",
+        n_requests,
+        wall.as_secs_f64(),
+        n_requests as f64 / wall.as_secs_f64(),
+        stats.batches,
+        stats.mean_batch,
+        stats.nn_calls,
+        stats.queue_p95.as_secs_f64() * 1e3,
+        stats.e2e_p50.as_secs_f64() * 1e3,
+        stats.e2e_p95.as_secs_f64() * 1e3,
+        corpus_bleu_str(&hyps, &refs),
+    );
+    srv.shutdown();
+    join.join();
+    Ok(())
+}
+
+/// Artifact self-check: every HLO parses+compiles, every weights file
+/// matches its config's tensor order, every model answers a denoise call.
+fn validate(args: &Args) -> Result<()> {
+    use dndm::runtime::{ModelRuntime, WeightsFile};
+    let arts = load_artifacts(args)?;
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e}"))?;
+    let mut failures = 0;
+    for m in &arts.models {
+        print!("{:<28} ", m.name);
+        let check = (|| -> Result<()> {
+            let wf = WeightsFile::read(&arts.root.join(&m.weights_path))?;
+            if wf.total_params() != m.n_params {
+                bail!("param count {} != manifest {}", wf.total_params(), m.n_params);
+            }
+            let rt = ModelRuntime::load(&arts, &client, &m.name)?;
+            let cfg = rt.config.clone();
+            let x = vec![vec![cfg.noise_lo; cfg.seq_len]];
+            let src = cfg.conditional().then(|| vec![vec![cfg.noise_lo; cfg.src_len]]);
+            let logits = dndm::runtime::Denoiser::denoise(&rt, &x, &[0.5], src.as_deref())?;
+            if logits[0].iter().any(|v| !v.is_finite()) {
+                bail!("non-finite logits");
+            }
+            Ok(())
+        })();
+        match check {
+            Ok(()) => println!("OK ({} params, {} buckets)", m.n_params, m.hlo.len()),
+            Err(e) => {
+                failures += 1;
+                println!("FAIL: {e:#}");
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} model(s) failed validation");
+    }
+    println!("all {} models valid", arts.models.len());
+    Ok(())
+}
+
+fn nfe(args: &Args) -> Result<()> {
+    let t = args.usize_or("steps", 1000);
+    let n = args.usize_or("n", 16);
+    let specs = [
+        TransitionSpec::Exact(dndm::schedule::AlphaSchedule::Linear),
+        TransitionSpec::Exact(dndm::schedule::AlphaSchedule::Cosine),
+        TransitionSpec::Exact(dndm::schedule::AlphaSchedule::CosineSq),
+        TransitionSpec::Beta { a: 15.0, b: 7.0 },
+    ];
+    println!("T={t} N={n}  (baselines: NFE = {t})");
+    for spec in specs {
+        println!("  {:<18} E|𝒯| = {:.2}", spec.name(), spec.expected_nfe(t, n));
+    }
+    if let Some(s) = args.get("spec") {
+        let spec = TransitionSpec::parse(s).ok_or_else(|| anyhow!("bad --spec"))?;
+        println!("  {:<18} E|𝒯| = {:.2}", spec.name(), spec.expected_nfe(t, n));
+    }
+    Ok(())
+}

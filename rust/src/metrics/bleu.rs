@@ -1,0 +1,217 @@
+//! BLEU-4 (Papineni et al. 2002) — the paper's translation metric.
+//!
+//! Corpus BLEU with the standard brevity penalty and (for sentence-level
+//! diagnostics) exponential smoothing of empty n-gram counts. Scores are
+//! reported on the 0–100 scale like the paper's tables.
+
+use std::collections::HashMap;
+
+const MAX_N: usize = 4;
+
+fn ngram_counts<'a>(tokens: &[&'a str], n: usize) -> HashMap<Vec<&'a str>, usize> {
+    let mut m = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Clipped n-gram matches + candidate total for one sentence at order n.
+fn clipped_matches(cand: &[&str], refs: &[Vec<&str>], n: usize) -> (usize, usize) {
+    let cc = ngram_counts(cand, n);
+    let total: usize = cc.values().sum();
+    let mut matched = 0usize;
+    for (gram, &count) in &cc {
+        let max_ref = refs
+            .iter()
+            .map(|r| ngram_counts(r, n).get(gram).copied().unwrap_or(0))
+            .max()
+            .unwrap_or(0);
+        matched += count.min(max_ref);
+    }
+    (matched, total)
+}
+
+/// Corpus BLEU-4 over (candidate, references) pairs; 0–100.
+pub fn corpus_bleu(cands: &[Vec<&str>], refs: &[Vec<Vec<&str>>]) -> f64 {
+    assert_eq!(cands.len(), refs.len());
+    let mut matched = [0usize; MAX_N];
+    let mut totals = [0usize; MAX_N];
+    let mut cand_len = 0usize;
+    let mut ref_len = 0usize;
+    for (c, rs) in cands.iter().zip(refs) {
+        cand_len += c.len();
+        // closest reference length (standard BLEU tie-break: shorter)
+        ref_len += rs
+            .iter()
+            .map(|r| r.len())
+            .min_by_key(|&l| (l.abs_diff(c.len()), l))
+            .unwrap_or(0);
+        for n in 1..=MAX_N {
+            let (m, t) = clipped_matches(c, rs, n);
+            matched[n - 1] += m;
+            totals[n - 1] += t;
+        }
+    }
+    bleu_from_stats(&matched, &totals, cand_len, ref_len, false)
+}
+
+/// Sentence BLEU with exp smoothing (useful for Figure 2's trajectory).
+pub fn sentence_bleu(cand: &[&str], refs: &[Vec<&str>]) -> f64 {
+    let mut matched = [0usize; MAX_N];
+    let mut totals = [0usize; MAX_N];
+    for n in 1..=MAX_N {
+        let (m, t) = clipped_matches(cand, refs, n);
+        matched[n - 1] = m;
+        totals[n - 1] = t;
+    }
+    let ref_len = refs
+        .iter()
+        .map(|r| r.len())
+        .min_by_key(|&l| (l.abs_diff(cand.len()), l))
+        .unwrap_or(0);
+    bleu_from_stats(&matched, &totals, cand.len(), ref_len, true)
+}
+
+fn bleu_from_stats(
+    matched: &[usize; MAX_N],
+    totals: &[usize; MAX_N],
+    cand_len: usize,
+    ref_len: usize,
+    smooth: bool,
+) -> f64 {
+    if cand_len == 0 {
+        return 0.0;
+    }
+    let mut log_p = 0.0f64;
+    let mut smooth_inv = 1.0f64;
+    for n in 0..MAX_N {
+        let (m, t) = (matched[n] as f64, totals[n] as f64);
+        let p = if totals[n] == 0 {
+            if smooth {
+                // no n-grams of this order at all: skip (short sentences)
+                continue;
+            }
+            return 0.0;
+        } else if matched[n] == 0 {
+            if smooth {
+                smooth_inv *= 2.0;
+                1.0 / (smooth_inv * t) // exp smoothing (chencherry method 3-ish)
+            } else {
+                return 0.0;
+            }
+        } else {
+            m / t
+        };
+        log_p += p.ln() / MAX_N as f64;
+    }
+    let bp = if cand_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / cand_len as f64).exp()
+    };
+    100.0 * bp * log_p.exp()
+}
+
+/// Convenience: BLEU over whitespace-tokenized strings, one ref each.
+pub fn corpus_bleu_str(cands: &[String], refs: &[String]) -> f64 {
+    let c: Vec<Vec<&str>> = cands.iter().map(|s| s.split_whitespace().collect()).collect();
+    let r: Vec<Vec<Vec<&str>>> = refs
+        .iter()
+        .map(|s| vec![s.split_whitespace().collect()])
+        .collect();
+    corpus_bleu(&c, &r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<&str> {
+        s.split_whitespace().collect()
+    }
+
+    #[test]
+    fn perfect_match_is_100() {
+        let c = vec![toks("the quick fox crosses the river today ok")];
+        let r = vec![vec![toks("the quick fox crosses the river today ok")]];
+        assert!((corpus_bleu(&c, &r) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_is_zero() {
+        let c = vec![toks("a b c d e")];
+        let r = vec![vec![toks("v w x y z")]];
+        assert_eq!(corpus_bleu(&c, &r), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_between() {
+        let c = vec![toks("the quick fox crosses a road")];
+        let r = vec![vec![toks("the quick fox crosses the river")]];
+        let b = corpus_bleu(&c, &r);
+        assert!(b > 0.0 && b < 100.0, "{b}");
+    }
+
+    #[test]
+    fn clipping_penalizes_repetition() {
+        // "the the the ..." must not get unigram credit beyond ref count
+        let c = vec![toks("the the the the the the")];
+        let r = vec![vec![toks("the cat sat on the mat")]];
+        let b = corpus_bleu(&c, &r);
+        assert_eq!(b, 0.0); // no bigram matches → 0 without smoothing
+        let sb = sentence_bleu(&toks("the the the the the the"), &[toks("the cat sat on the mat")]);
+        assert!(sb < 15.0);
+    }
+
+    #[test]
+    fn brevity_penalty_hurts_short_candidates() {
+        let full = corpus_bleu(
+            &[toks("a b c d e f g h")],
+            &[vec![toks("a b c d e f g h")]],
+        );
+        let short = corpus_bleu(&[toks("a b c d")], &[vec![toks("a b c d e f g h")]]);
+        assert!(short < full);
+        assert!(short < 60.0);
+    }
+
+    #[test]
+    fn multi_reference_takes_best() {
+        let c = vec![toks("the small fox sings a song")];
+        let single = corpus_bleu(&c, &[vec![toks("a large dog eats the bone")]]);
+        let multi = corpus_bleu(
+            &c,
+            &[vec![
+                toks("a large dog eats the bone"),
+                toks("the small fox sings a song"),
+            ]],
+        );
+        assert!(multi > single);
+        assert!((multi - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn corpus_is_not_mean_of_sentences() {
+        // corpus BLEU pools statistics — a known property worth pinning
+        let c = vec![toks("a b c d e"), toks("v w x y z")];
+        let r = vec![vec![toks("a b c d e")], vec![toks("a b c q q")]];
+        let pooled = corpus_bleu(&c, &r);
+        assert!(pooled > 0.0 && pooled < 100.0);
+    }
+
+    #[test]
+    fn str_helper_agrees() {
+        let b1 = corpus_bleu_str(
+            &["the quick fox crosses a river".into()],
+            &["the quick fox crosses a river".into()],
+        );
+        assert!((b1 - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_candidate_is_zero() {
+        assert_eq!(corpus_bleu(&[vec![]], &[vec![toks("a b")]]), 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Latency / throughput statistics for the serving benches.
+
+use std::time::Duration;
+
+/// Collects durations; reports mean / percentiles / throughput.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let sum: u64 = self.samples_us.iter().sum();
+        Duration::from_micros(sum / self.samples_us.len() as u64)
+    }
+
+    /// q ∈ [0, 1]; nearest-rank percentile.
+    pub fn percentile(&self, q: f64) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
+        Duration::from_micros(s[idx])
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(0.99)
+    }
+
+    pub fn min(&self) -> Duration {
+        Duration::from_micros(self.samples_us.iter().copied().min().unwrap_or(0))
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.samples_us.iter().copied().max().unwrap_or(0))
+    }
+
+    /// items/sec given total wall-clock time.
+    pub fn throughput(items: usize, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        items as f64 / wall.as_secs_f64()
+    }
+
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms",
+            self.len(),
+            self.mean().as_secs_f64() * 1e3,
+            self.p50().as_secs_f64() * 1e3,
+            self.p95().as_secs_f64() * 1e3,
+            self.p99().as_secs_f64() * 1e3,
+            self.max().as_secs_f64() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i * 100));
+        }
+        assert!(s.p50() <= s.p95());
+        assert!(s.p95() <= s.p99());
+        assert!(s.p99() <= s.max());
+        assert_eq!(s.p50(), Duration::from_micros(5000));
+        assert_eq!(s.min(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn mean_correct() {
+        let mut s = LatencyStats::new();
+        s.record(Duration::from_micros(100));
+        s.record(Duration::from_micros(300));
+        assert_eq!(s.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), Duration::ZERO);
+        assert_eq!(s.p95(), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = LatencyStats::throughput(50, Duration::from_secs(2));
+        assert!((t - 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation metrics: BLEU (translation quality), n-gram LM perplexity
+//! (unconditional fluency), NFE accounting, latency/throughput statistics.
+
+pub mod bleu;
+pub mod latency;
+pub mod ngram;
+pub mod nfe;
+
+pub use bleu::{corpus_bleu, sentence_bleu};
+pub use latency::LatencyStats;
+pub use ngram::NgramLm;
+pub use nfe::NfeCounter;

@@ -1,0 +1,115 @@
+//! NFE accounting — the paper's efficiency currency.
+//!
+//! Tables 7/8 report "average NFE": total denoiser calls divided by the
+//! number of batches. This counter distinguishes *calls* (one batched
+//! forward = one call, the wall-clock-relevant number) from *sequence
+//! evaluations* (calls × batch size).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe NFE counter shared between samplers and the coordinator.
+#[derive(Debug, Default)]
+pub struct NfeCounter {
+    calls: AtomicU64,
+    seqs: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl NfeCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One denoiser invocation over `batch` sequences.
+    pub fn record_call(&self, batch: usize) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.seqs.fetch_add(batch as u64, Ordering::Relaxed);
+    }
+
+    /// One generation batch finished (the denominator in Tables 7/8).
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn seq_evals(&self) -> u64 {
+        self.seqs.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Average NFE per batch — the Tables 7/8 statistic.
+    pub fn avg_nfe(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            0.0
+        } else {
+            self.calls() as f64 / b as f64
+        }
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.seqs.store(0, Ordering::Relaxed);
+        self.batches.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_average() {
+        let c = NfeCounter::new();
+        c.record_call(16);
+        c.record_call(16);
+        c.record_batch();
+        c.record_call(8);
+        c.record_batch();
+        assert_eq!(c.calls(), 3);
+        assert_eq!(c.seq_evals(), 40);
+        assert_eq!(c.batches(), 2);
+        assert!((c.avg_nfe() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_batches_is_zero_avg() {
+        let c = NfeCounter::new();
+        c.record_call(4);
+        assert_eq!(c.avg_nfe(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let c = NfeCounter::new();
+        c.record_call(1);
+        c.record_batch();
+        c.reset();
+        assert_eq!(c.calls() + c.seq_evals() + c.batches(), 0);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let c = std::sync::Arc::new(NfeCounter::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.record_call(2);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.calls(), 4000);
+        assert_eq!(c.seq_evals(), 8000);
+    }
+}

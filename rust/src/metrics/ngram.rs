@@ -1,0 +1,174 @@
+//! Interpolated Kneser–Ney n-gram LM — the perplexity scorer for
+//! unconditional generation (Table 4).
+//!
+//! The paper scores text8/enwik8 samples with GPT-2 (an *external* LM
+//! measuring fluency). GPT-2 isn't available offline, so we fit a
+//! character-level KN LM on held-out real corpus text and score generated
+//! samples with it (DESIGN.md §3). What Table 4 claims — vanilla vs DNDM
+//! ordering and the speedup — is preserved under any external LM.
+
+use std::collections::HashMap;
+
+/// Interpolated Kneser–Ney LM over u32 token ids, order `n`.
+pub struct NgramLm {
+    n: usize,
+    /// counts[k][context ++ token] for k-grams (k = 1..=n)
+    counts: Vec<HashMap<Vec<u32>, usize>>,
+    /// context totals per order
+    ctx_totals: Vec<HashMap<Vec<u32>, usize>>,
+    /// distinct continuations per context (for the KN λ weights)
+    ctx_types: Vec<HashMap<Vec<u32>, usize>>,
+    /// continuation counts (unique left contexts) for the unigram base
+    continuation: HashMap<u32, usize>,
+    total_bigram_types: usize,
+    vocab: usize,
+    discount: f64,
+}
+
+impl NgramLm {
+    pub fn new(n: usize, vocab: usize) -> Self {
+        assert!(n >= 2);
+        Self {
+            n,
+            counts: vec![HashMap::new(); n],
+            ctx_totals: vec![HashMap::new(); n],
+            ctx_types: vec![HashMap::new(); n],
+            continuation: HashMap::new(),
+            total_bigram_types: 0,
+            vocab,
+            discount: 0.75,
+        }
+    }
+
+    /// Train on one token stream.
+    pub fn fit(&mut self, stream: &[u32]) {
+        for k in 1..=self.n {
+            for w in stream.windows(k) {
+                let e = self.counts[k - 1].entry(w.to_vec()).or_insert(0);
+                *e += 1;
+                let ctx = w[..k - 1].to_vec();
+                *self.ctx_totals[k - 1].entry(ctx.clone()).or_insert(0) += 1;
+                if *e == 1 {
+                    *self.ctx_types[k - 1].entry(ctx).or_insert(0) += 1;
+                    if k == 2 {
+                        *self.continuation.entry(w[1]).or_insert(0) += 1;
+                        self.total_bigram_types += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// p(token | context) with interpolated KN smoothing.
+    pub fn prob(&self, context: &[u32], token: u32) -> f64 {
+        let ctx = if context.len() > self.n - 1 {
+            &context[context.len() - (self.n - 1)..]
+        } else {
+            context
+        };
+        self.prob_order(ctx, token, ctx.len() + 1)
+    }
+
+    fn prob_order(&self, ctx: &[u32], token: u32, k: usize) -> f64 {
+        if k == 1 {
+            // KN continuation unigram, interpolated with uniform for OOV
+            let cont = self.continuation.get(&token).copied().unwrap_or(0) as f64;
+            let base = if self.total_bigram_types > 0 {
+                cont / self.total_bigram_types as f64
+            } else {
+                0.0
+            };
+            return 0.9 * base + 0.1 / self.vocab as f64;
+        }
+        let total = self.ctx_totals[k - 1].get(ctx).copied().unwrap_or(0);
+        let lower = self.prob_order(&ctx[1..], token, k - 1);
+        if total == 0 {
+            return lower; // unseen context: full backoff
+        }
+        let mut gram = ctx.to_vec();
+        gram.push(token);
+        let c = self.counts[k - 1].get(&gram).copied().unwrap_or(0) as f64;
+        let types = self.ctx_types[k - 1].get(ctx).copied().unwrap_or(0) as f64;
+        let d = self.discount;
+        let lambda = d * types / total as f64;
+        ((c - d).max(0.0)) / total as f64 + lambda * lower
+    }
+
+    /// Perplexity of a token stream: exp(mean NLL).
+    pub fn perplexity(&self, stream: &[u32]) -> f64 {
+        if stream.is_empty() {
+            return f64::INFINITY;
+        }
+        let mut nll = 0.0;
+        for i in 0..stream.len() {
+            let lo = i.saturating_sub(self.n - 1);
+            let p = self.prob(&stream[lo..i], stream[i]).max(1e-12);
+            nll -= p.ln();
+        }
+        (nll / stream.len() as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{corpus, translation::Split, UncondCorpus};
+
+    fn fit_text8(n_chars: usize) -> (NgramLm, Vec<u32>) {
+        let vocab = UncondCorpus::Text8.vocab();
+        let stream: Vec<u32> = corpus::gen_text_stream(UncondCorpus::Text8, Split::Train, n_chars)
+            .chars()
+            .map(|c| vocab.id(&c.to_string()).unwrap())
+            .collect();
+        let mut lm = NgramLm::new(4, vocab.len());
+        lm.fit(&stream);
+        (lm, stream)
+    }
+
+    #[test]
+    fn probs_normalize_over_vocab() {
+        let (lm, stream) = fit_text8(5_000);
+        let ctx = &stream[10..13];
+        let total: f64 = (0..lm.vocab as u32).map(|t| lm.prob(ctx, t)).sum();
+        assert!((total - 1.0).abs() < 0.02, "Σp = {total}");
+    }
+
+    #[test]
+    fn real_text_scores_better_than_random() {
+        let (lm, _) = fit_text8(20_000);
+        let vocab = UncondCorpus::Text8.vocab();
+        let held: Vec<u32> = corpus::gen_text_stream(UncondCorpus::Text8, Split::Test, 2_000)
+            .chars()
+            .map(|c| vocab.id(&c.to_string()).unwrap())
+            .collect();
+        let mut rng = crate::schedule::SplitMix64::new(1);
+        let random: Vec<u32> = (0..2_000).map(|_| 3 + rng.below(27) as u32).collect();
+        let ppl_real = lm.perplexity(&held);
+        let ppl_rand = lm.perplexity(&random);
+        assert!(
+            ppl_real * 2.0 < ppl_rand,
+            "real {ppl_real} should be ≪ random {ppl_rand}"
+        );
+        assert!(ppl_real < 10.0, "held-out ppl {ppl_real}");
+    }
+
+    #[test]
+    fn unseen_context_backs_off_not_zero() {
+        let (lm, _) = fit_text8(2_000);
+        let p = lm.prob(&[29, 29, 29], 5);
+        assert!(p > 0.0 && p < 1.0);
+    }
+
+    #[test]
+    fn perplexity_of_training_text_is_low() {
+        let (lm, stream) = fit_text8(10_000);
+        let ppl = lm.perplexity(&stream[..2_000]);
+        assert!(ppl < 8.0, "{ppl}");
+    }
+
+    #[test]
+    fn empty_stream_is_infinite() {
+        let (lm, _) = fit_text8(1_000);
+        assert!(lm.perplexity(&[]).is_infinite());
+    }
+}

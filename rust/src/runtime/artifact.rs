@@ -1,0 +1,305 @@
+//! artifacts/manifest.json + per-model config.json (written by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One model entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestModel {
+    pub name: String,
+    /// "multinomial" | "absorbing"
+    pub kind: String,
+    /// "cond" | "uncond"
+    pub task: String,
+    pub dataset: String,
+    pub continuous: bool,
+    pub schedule: String,
+    pub config_path: String,
+    pub weights_path: String,
+    /// bucket (batch size) → HLO path
+    pub hlo: BTreeMap<usize, String>,
+    /// optional split graphs (compile/split.py): encoder-only…
+    pub hlo_enc: BTreeMap<usize, String>,
+    /// …and decoder-against-memory, enabling the per-request memory cache
+    pub hlo_dec: BTreeMap<usize, String>,
+    /// transition-kernel tag, e.g. "n16_v99"
+    pub transition_tag: String,
+    pub n_params: usize,
+    pub n_tensors: usize,
+}
+
+/// Per-model geometry (config.json ∪ manifest fields rust needs).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub src_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub enc_layers: usize,
+    pub dec_layers: usize,
+    pub kind: String,
+    pub dataset: String,
+    pub schedule: String,
+    pub continuous: bool,
+    pub mask_id: u32,
+    pub noise_lo: u32,
+    pub train_t_grid: usize,
+    pub tensor_order: Vec<String>,
+}
+
+impl ModelConfig {
+    pub fn conditional(&self) -> bool {
+        self.src_len > 0
+    }
+}
+
+/// The loaded artifacts directory.
+#[derive(Debug)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub buckets: Vec<usize>,
+    pub models: Vec<ManifestModel>,
+    /// tag → bucket → transition HLO path
+    pub transition: BTreeMap<String, BTreeMap<usize, String>>,
+}
+
+impl Artifacts {
+    pub fn load(root: impl AsRef<Path>) -> Result<Artifacts> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let j = Json::parse_file(&manifest_path)
+            .with_context(|| format!("loading {manifest_path:?} — run `make artifacts` first"))?;
+
+        let buckets: Vec<usize> = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let mut models = Vec::new();
+        for m in j
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let parse_map = |key: &str| -> BTreeMap<usize, String> {
+                m.get(key)
+                    .and_then(Json::as_obj)
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(|(k, v)| Some((k.parse().ok()?, v.as_str()?.to_string())))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let hlo = parse_map("hlo");
+            if hlo.is_empty() {
+                return Err(anyhow!("model missing hlo map"));
+            }
+            let hlo_enc = parse_map("hlo_enc");
+            let hlo_dec = parse_map("hlo_dec");
+            models.push(ManifestModel {
+                name: m.str_field("name")?.to_string(),
+                kind: m.str_field("kind")?.to_string(),
+                task: m.str_field("task")?.to_string(),
+                dataset: m.str_field("dataset")?.to_string(),
+                continuous: m.get("continuous").and_then(Json::as_bool).unwrap_or(false),
+                schedule: m.str_field("schedule")?.to_string(),
+                config_path: m.str_field("config")?.to_string(),
+                weights_path: m.str_field("weights")?.to_string(),
+                hlo,
+                hlo_enc,
+                hlo_dec,
+                transition_tag: m.str_field("transition")?.to_string(),
+                n_params: m.num_field("n_params")? as usize,
+                n_tensors: m.num_field("n_tensors")? as usize,
+            });
+        }
+
+        let mut transition = BTreeMap::new();
+        if let Some(t) = j.get("transition").and_then(Json::as_obj) {
+            for (tag, buckets_map) in t {
+                let inner: BTreeMap<usize, String> = buckets_map
+                    .as_obj()
+                    .map(|m| {
+                        m.iter()
+                            .filter_map(|(k, v)| Some((k.parse().ok()?, v.as_str()?.to_string())))
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                transition.insert(tag.clone(), inner);
+            }
+        }
+
+        Ok(Artifacts { root, buckets, models, transition })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ManifestModel> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model '{name}' not in manifest (have: {})",
+                    self.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    /// Models filtered by (kind, task, dataset, continuous).
+    pub fn find(
+        &self,
+        kind: &str,
+        dataset: &str,
+        continuous: bool,
+    ) -> Option<&ManifestModel> {
+        self.models
+            .iter()
+            .find(|m| m.kind == kind && m.dataset == dataset && m.continuous == continuous)
+    }
+
+    pub fn config(&self, model: &ManifestModel) -> Result<ModelConfig> {
+        let path = self.root.join(&model.config_path);
+        let j = Json::parse_file(&path).with_context(|| format!("loading {path:?}"))?;
+        Ok(ModelConfig {
+            vocab: j.num_field("vocab")? as usize,
+            seq_len: j.num_field("seq_len")? as usize,
+            src_len: j.num_field("src_len")? as usize,
+            d_model: j.num_field("d_model")? as usize,
+            n_heads: j.num_field("n_heads")? as usize,
+            d_ff: j.num_field("d_ff")? as usize,
+            enc_layers: j.num_field("enc_layers")? as usize,
+            dec_layers: j.num_field("dec_layers")? as usize,
+            kind: j.str_field("kind")?.to_string(),
+            dataset: j.str_field("dataset")?.to_string(),
+            schedule: j.str_field("schedule")?.to_string(),
+            continuous: j.get("continuous").and_then(Json::as_bool).unwrap_or(false),
+            mask_id: j.num_field("mask_id")? as u32,
+            noise_lo: j.num_field("noise_lo")? as u32,
+            train_t_grid: j.num_field("train_t_grid")? as usize,
+            tensor_order: j
+                .get("tensor_order")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Pick the smallest compiled bucket that fits `batch`.
+    pub fn bucket_for(&self, batch: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+            .or_else(|| self.buckets.iter().copied().max())
+            .ok_or_else(|| anyhow!("no buckets in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_artifacts() -> (tempdir::TempDir, Artifacts) {
+        let dir = tempdir::TempDir::new();
+        std::fs::create_dir_all(dir.path().join("m1")).unwrap();
+        let manifest = r#"{
+          "version": 1, "buckets": [1, 4, 16],
+          "models": [{
+            "name": "m1", "kind": "multinomial", "task": "cond",
+            "dataset": "synth-iwslt14", "continuous": false,
+            "schedule": "cosine_sq",
+            "config": "m1/config.json", "weights": "m1/weights.bin",
+            "hlo": {"1": "m1/model_b1.hlo.txt", "4": "m1/model_b4.hlo.txt"},
+            "transition": "n16_v99", "n_params": 100, "n_tensors": 3
+          }],
+          "transition": {"n16_v99": {"1": "transition/n16_v99_b1.hlo.txt"}}
+        }"#;
+        let config = r#"{
+          "vocab": 99, "seq_len": 16, "src_len": 16, "d_model": 128,
+          "n_heads": 4, "d_ff": 256, "enc_layers": 2, "dec_layers": 2,
+          "kind": "multinomial", "task": "cond", "dataset": "synth-iwslt14",
+          "continuous": false, "schedule": "cosine_sq",
+          "tensor_order": ["a", "b", "c"], "mask_id": 2, "noise_lo": 3,
+          "train_t_grid": 50
+        }"#;
+        write!(std::fs::File::create(dir.path().join("manifest.json")).unwrap(), "{manifest}")
+            .unwrap();
+        write!(std::fs::File::create(dir.path().join("m1/config.json")).unwrap(), "{config}")
+            .unwrap();
+        let arts = Artifacts::load(dir.path()).unwrap();
+        (dir, arts)
+    }
+
+    // std-only tempdir
+    mod tempdir {
+        pub struct TempDir(std::path::PathBuf);
+        impl TempDir {
+            pub fn new() -> TempDir {
+                let p = std::env::temp_dir().join(format!(
+                    "dndm-test-{}-{:?}",
+                    std::process::id(),
+                    std::thread::current().id()
+                ));
+                std::fs::create_dir_all(&p).unwrap();
+                TempDir(p)
+            }
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+
+    #[test]
+    fn loads_manifest_and_config() {
+        let (_d, arts) = fake_artifacts();
+        assert_eq!(arts.buckets, vec![1, 4, 16]);
+        let m = arts.model("m1").unwrap();
+        assert_eq!(m.kind, "multinomial");
+        assert_eq!(m.hlo[&4], "m1/model_b4.hlo.txt");
+        let cfg = arts.config(m).unwrap();
+        assert_eq!(cfg.vocab, 99);
+        assert!(cfg.conditional());
+        assert_eq!(cfg.tensor_order.len(), 3);
+        assert_eq!(arts.transition["n16_v99"][&1], "transition/n16_v99_b1.hlo.txt");
+    }
+
+    #[test]
+    fn find_by_kind_dataset() {
+        let (_d, arts) = fake_artifacts();
+        assert!(arts.find("multinomial", "synth-iwslt14", false).is_some());
+        assert!(arts.find("absorbing", "synth-iwslt14", false).is_none());
+        assert!(arts.find("multinomial", "synth-iwslt14", true).is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let (_d, arts) = fake_artifacts();
+        assert_eq!(arts.bucket_for(1).unwrap(), 1);
+        assert_eq!(arts.bucket_for(3).unwrap(), 4);
+        assert_eq!(arts.bucket_for(16).unwrap(), 16);
+        assert_eq!(arts.bucket_for(99).unwrap(), 16); // clamp to largest
+    }
+
+    #[test]
+    fn missing_model_errors_helpfully() {
+        let (_d, arts) = fake_artifacts();
+        let e = arts.model("nope").unwrap_err().to_string();
+        assert!(e.contains("m1"), "{e}");
+    }
+}

@@ -1,0 +1,17 @@
+//! The PJRT runtime: loads `artifacts/` (HLO text + weights) produced by
+//! `make artifacts` and executes the denoiser from the rust hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute_b` with weights pre-uploaded as device
+//! buffers (uploaded once per model, reused for every NFE call).
+
+pub mod artifact;
+pub mod denoiser;
+pub mod model;
+pub mod weights;
+
+pub use artifact::{Artifacts, ManifestModel, ModelConfig};
+pub use denoiser::{Denoiser, MockDenoiser};
+pub use model::{ModelRuntime, TransitionRuntime};
+pub use weights::{Dtype, Tensor, WeightsFile};

@@ -1,0 +1,412 @@
+//! PJRT-backed model execution: compile HLO text once per (model, bucket),
+//! upload weights once, run `execute_b` per NFE.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{Artifacts, ManifestModel, ModelConfig};
+use super::denoiser::Denoiser;
+use super::weights::{Dtype, WeightsFile};
+
+/// Compile an HLO text file on the given client.
+pub fn compile_hlo(client: &PjRtClient, path: &std::path::Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+}
+
+/// One servable model: config + weights-on-device + per-bucket executables.
+///
+/// Executables compile lazily on first use of a bucket (compiling all
+/// buckets up front costs seconds each; most workloads touch one or two).
+pub struct ModelRuntime {
+    pub name: String,
+    pub config: ModelConfig,
+    client: PjRtClient,
+    weights: Vec<PjRtBuffer>,
+    hlo_paths: HashMap<usize, PathBuf>,
+    execs: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+    /// split graphs (compile/split.py): encoder-only / decoder-vs-memory.
+    enc_paths: HashMap<usize, PathBuf>,
+    dec_paths: HashMap<usize, PathBuf>,
+    enc_execs: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+    dec_execs: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+    /// encoder-memory device buffer, keyed by (hash(src), bucket). One
+    /// entry: sampling loops re-use the same src batch for every NFE call.
+    memory_cache: RefCell<Option<(u64, usize, PjRtBuffer)>>,
+    /// toggle for the §Perf ablation (true when split artifacts exist).
+    use_split: std::cell::Cell<bool>,
+    buckets: Vec<usize>,
+    calls: std::cell::Cell<u64>,
+    enc_calls: std::cell::Cell<u64>,
+}
+
+impl ModelRuntime {
+    pub fn load(arts: &Artifacts, client: &PjRtClient, name: &str) -> Result<ModelRuntime> {
+        let entry: &ManifestModel = arts.model(name)?;
+        let config = arts.config(entry)?;
+
+        let wf = WeightsFile::read(&arts.root.join(&entry.weights_path))?;
+        if wf.tensors.len() != config.tensor_order.len() {
+            bail!(
+                "weights/tensor_order mismatch: {} vs {}",
+                wf.tensors.len(),
+                config.tensor_order.len()
+            );
+        }
+        for (t, expect) in wf.tensors.iter().zip(&config.tensor_order) {
+            if &t.name != expect {
+                bail!("weights order mismatch: {} vs {expect}", t.name);
+            }
+        }
+
+        // Upload each tensor once; the buffers live for the model lifetime.
+        let mut weights = Vec::with_capacity(wf.tensors.len());
+        for t in &wf.tensors {
+            let buf = match t.dtype {
+                Dtype::F32 => client.buffer_from_host_buffer(&t.as_f32()?, &t.dims, None)?,
+                Dtype::I32 => client.buffer_from_host_buffer(&t.as_i32()?, &t.dims, None)?,
+            };
+            weights.push(buf);
+        }
+
+        let to_paths = |m: &std::collections::BTreeMap<usize, String>| -> HashMap<usize, PathBuf> {
+            m.iter().map(|(b, p)| (*b, arts.root.join(p))).collect()
+        };
+        let hlo_paths = to_paths(&entry.hlo);
+        let enc_paths = to_paths(&entry.hlo_enc);
+        let dec_paths = to_paths(&entry.hlo_dec);
+        let mut buckets: Vec<usize> = entry.hlo.keys().copied().collect();
+        buckets.sort_unstable();
+
+        let has_split = !enc_paths.is_empty() && !dec_paths.is_empty();
+        Ok(ModelRuntime {
+            name: name.to_string(),
+            config,
+            client: client.clone(),
+            weights,
+            hlo_paths,
+            execs: RefCell::new(HashMap::new()),
+            enc_paths,
+            dec_paths,
+            enc_execs: RefCell::new(HashMap::new()),
+            dec_execs: RefCell::new(HashMap::new()),
+            memory_cache: RefCell::new(None),
+            use_split: std::cell::Cell::new(has_split),
+            buckets,
+            calls: std::cell::Cell::new(0),
+            enc_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Enable/disable the split encode/decode path (§Perf ablation; only
+    /// effective when split artifacts exist).
+    pub fn set_split(&self, on: bool) {
+        self.use_split
+            .set(on && !self.enc_paths.is_empty() && !self.dec_paths.is_empty());
+        *self.memory_cache.borrow_mut() = None;
+    }
+
+    pub fn split_enabled(&self) -> bool {
+        self.use_split.get()
+    }
+
+    /// Encoder invocations (cache misses) — for tests/benches.
+    pub fn encoder_calls(&self) -> u64 {
+        self.enc_calls.get()
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn bucket_for(&self, batch: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or_else(|| *self.buckets.last().expect("no buckets"))
+    }
+
+    fn ensure_compiled(&self, bucket: usize) -> Result<()> {
+        if self.execs.borrow().contains_key(&bucket) {
+            return Ok(());
+        }
+        let path = self
+            .hlo_paths
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("model {} has no bucket {bucket}", self.name))?;
+        let exe = compile_hlo(&self.client, path)?;
+        self.execs.borrow_mut().insert(bucket, exe);
+        Ok(())
+    }
+
+    /// Pre-compile specific buckets (the serving warmup path).
+    pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
+        for &b in buckets {
+            if self.hlo_paths.contains_key(&b) {
+                self.ensure_compiled(b)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Make sure the encoder memory for this padded src batch is on
+    /// device; re-encodes only on (src, bucket) change.
+    fn ensure_memory(&self, s_flat: &[i32], bucket: usize) -> Result<()> {
+        // FNV-1a over the padded ids — cheap and collision-safe enough for
+        // a single-entry cache (a false hit needs a hash collision *and*
+        // an identical bucket within one sampler loop).
+        let mut h = 0xcbf29ce484222325u64;
+        for &v in s_flat {
+            h = (h ^ v as u64).wrapping_mul(0x100000001b3);
+        }
+        if let Some((ch, cb, _)) = self.memory_cache.borrow().as_ref() {
+            if *ch == h && *cb == bucket {
+                return Ok(());
+            }
+        }
+        if !self.enc_execs.borrow().contains_key(&bucket) {
+            let exe = compile_hlo(&self.client, &self.enc_paths[&bucket])?;
+            self.enc_execs.borrow_mut().insert(bucket, exe);
+        }
+        let m = self.config.src_len;
+        let src_buf = self.client.buffer_from_host_buffer(s_flat, &[bucket, m], None)?;
+        let enc_execs = self.enc_execs.borrow();
+        let exe = enc_execs.get(&bucket).unwrap();
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&src_buf);
+        // encode is lowered *untupled* (split.py) so the output buffer is
+        // the raw f32[B,M,D] array, directly consumable by decode_b.
+        let mut out = exe.execute_b(&args)?;
+        let mem = out.remove(0).remove(0);
+        self.enc_calls.set(self.enc_calls.get() + 1);
+        *self.memory_cache.borrow_mut() = Some((h, bucket, mem));
+        Ok(())
+    }
+
+    /// Run one (possibly chunked) denoiser call over `batch` sequences.
+    fn run_bucket(
+        &self,
+        x: &[Vec<u32>],
+        t: &[f32],
+        src: Option<&[Vec<u32>]>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = x.len();
+        let bucket = self.bucket_for(b);
+        let n = self.config.seq_len;
+        let v = self.config.vocab;
+        let split = self.config.conditional() && self.use_split.get();
+        if !split {
+            self.ensure_compiled(bucket)?;
+        }
+
+        // pad to the bucket by repeating row 0 (content irrelevant, sliced off)
+        let pad = |rows: &[Vec<u32>], len: usize| -> Vec<i32> {
+            let mut flat = Vec::with_capacity(bucket * len);
+            for r in rows {
+                debug_assert_eq!(r.len(), len);
+                flat.extend(r.iter().map(|&u| u as i32));
+            }
+            for _ in b..bucket {
+                flat.extend(rows[0].iter().map(|&u| u as i32));
+            }
+            flat
+        };
+
+        let x_flat = pad(x, n);
+        let mut t_pad: Vec<f32> = t.to_vec();
+        t_pad.resize(bucket, t[0]);
+
+        let x_buf = self.client.buffer_from_host_buffer(&x_flat, &[bucket, n], None)?;
+        let t_buf = self.client.buffer_from_host_buffer(&t_pad, &[bucket], None)?;
+
+        // Split path (conditional models with encode/decode artifacts):
+        // encode once per src batch, keep the memory on device, then run
+        // the decoder-only graph per NFE call.
+        let out = if split {
+            let s = src.ok_or_else(|| anyhow!("conditional model requires src"))?;
+            let s_flat = pad(s, self.config.src_len);
+            self.ensure_memory(&s_flat, bucket)?;
+            let cache = self.memory_cache.borrow();
+            let (_, _, mem_buf) = cache.as_ref().unwrap();
+            if !self.dec_execs.borrow().contains_key(&bucket) {
+                let exe = compile_hlo(&self.client, &self.dec_paths[&bucket])?;
+                self.dec_execs.borrow_mut().insert(bucket, exe);
+            }
+            let dec_execs = self.dec_execs.borrow();
+            let exe = dec_execs.get(&bucket).unwrap();
+            let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+            args.push(mem_buf);
+            args.push(&x_buf);
+            args.push(&t_buf);
+            exe.execute_b(&args)?
+        } else {
+            let execs = self.execs.borrow();
+            let exe = execs.get(&bucket).unwrap();
+            let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+            let src_buf;
+            if self.config.conditional() {
+                let s = src.ok_or_else(|| anyhow!("conditional model requires src"))?;
+                let m = self.config.src_len;
+                let s_flat = pad(s, m);
+                src_buf = self.client.buffer_from_host_buffer(&s_flat, &[bucket, m], None)?;
+                args.push(&src_buf);
+            }
+            args.push(&x_buf);
+            args.push(&t_buf);
+            exe.execute_b(&args)?
+        };
+        self.calls.set(self.calls.get() + 1);
+        let lit: Literal = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let flat: Vec<f32> = lit.to_vec()?;
+        debug_assert_eq!(flat.len(), bucket * n * v);
+
+        Ok((0..b).map(|i| flat[i * n * v..(i + 1) * n * v].to_vec()).collect())
+    }
+}
+
+impl Denoiser for ModelRuntime {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn denoise(
+        &self,
+        x: &[Vec<u32>],
+        t: &[f32],
+        src: Option<&[Vec<u32>]>,
+    ) -> Result<Vec<Vec<f32>>> {
+        if x.is_empty() {
+            return Ok(vec![]);
+        }
+        let max_bucket = *self.buckets.last().expect("no buckets");
+        if x.len() <= max_bucket {
+            return self.run_bucket(x, t, src);
+        }
+        // chunk oversized batches through the largest bucket
+        let mut out = Vec::with_capacity(x.len());
+        for chunk_start in (0..x.len()).step_by(max_bucket) {
+            let end = (chunk_start + max_bucket).min(x.len());
+            let sub_src_owned;
+            let sub_src = match src {
+                Some(s) => {
+                    sub_src_owned = s[chunk_start..end].to_vec();
+                    Some(sub_src_owned)
+                }
+                None => None,
+            };
+            out.extend(self.run_bucket(
+                &x[chunk_start..end],
+                &t[chunk_start..end],
+                sub_src.as_deref(),
+            )?);
+        }
+        Ok(out)
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+}
+
+/// The AOT-exported fused L1 transition kernel, runnable from rust.
+///
+/// This is the in-HLO alternative to the native rust transition update in
+/// `sampler::common` — benched against each other in perf_criterion
+/// (DESIGN.md ablation #2).
+pub struct TransitionRuntime {
+    client: PjRtClient,
+    hlo_paths: HashMap<usize, PathBuf>,
+    execs: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+impl TransitionRuntime {
+    pub fn load(arts: &Artifacts, client: &PjRtClient, tag: &str) -> Result<TransitionRuntime> {
+        let map = arts
+            .transition
+            .get(tag)
+            .ok_or_else(|| anyhow!("no transition kernel tag {tag}"))?;
+        // tag format nN_vV
+        let (n, v) = tag
+            .strip_prefix('n')
+            .and_then(|s| s.split_once("_v"))
+            .and_then(|(n, v)| Some((n.parse().ok()?, v.parse().ok()?)))
+            .ok_or_else(|| anyhow!("bad transition tag {tag}"))?;
+        Ok(TransitionRuntime {
+            client: client.clone(),
+            hlo_paths: map.iter().map(|(b, p)| (*b, arts.root.join(p))).collect(),
+            execs: RefCell::new(HashMap::new()),
+            seq_len: n,
+            vocab: v,
+        })
+    }
+
+    /// (logits, x_t, gumbel, move) → (new_x, x0_hat, score), all batch-major.
+    #[allow(clippy::type_complexity)]
+    pub fn step(
+        &self,
+        logits: &[f32],
+        x_t: &[i32],
+        gumbel: &[f32],
+        mv: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, Vec<f32>)> {
+        let (n, v) = (self.seq_len, self.vocab);
+        let b = x_t.len() / n;
+        let bucket = self
+            .hlo_paths
+            .keys()
+            .copied()
+            .filter(|&k| k >= b)
+            .min()
+            .ok_or_else(|| anyhow!("batch {b} exceeds transition buckets"))?;
+        if !self.execs.borrow().contains_key(&bucket) {
+            let exe = compile_hlo(&self.client, &self.hlo_paths[&bucket])?;
+            self.execs.borrow_mut().insert(bucket, exe);
+        }
+
+        let pad_f = |d: &[f32], row: usize| {
+            let mut out = d.to_vec();
+            out.resize(bucket * row, 0.0);
+            out
+        };
+        let pad_i = |d: &[i32], row: usize| {
+            let mut out = d.to_vec();
+            out.resize(bucket * row, 0);
+            out
+        };
+        let l = self
+            .client
+            .buffer_from_host_buffer(&pad_f(logits, n * v), &[bucket, n, v], None)?;
+        let x = self
+            .client
+            .buffer_from_host_buffer(&pad_i(x_t, n), &[bucket, n], None)?;
+        let g = self
+            .client
+            .buffer_from_host_buffer(&pad_f(gumbel, n * v), &[bucket, n, v], None)?;
+        let m = self
+            .client
+            .buffer_from_host_buffer(&pad_i(mv, n), &[bucket, n], None)?;
+
+        let execs = self.execs.borrow();
+        let exe = execs.get(&bucket).unwrap();
+        let out = exe.execute_b(&[&l, &x, &g, &m])?;
+        let (a, b_, c) = out[0][0].to_literal_sync()?.to_tuple3()?;
+        let mut new_x: Vec<i32> = a.to_vec()?;
+        let mut x0: Vec<i32> = b_.to_vec()?;
+        let mut score: Vec<f32> = c.to_vec()?;
+        new_x.truncate(b * n);
+        x0.truncate(b * n);
+        score.truncate(b * n);
+        Ok((new_x, x0, score))
+    }
+}

@@ -1,0 +1,187 @@
+//! Reader for the DNDW1 flat tensor file written by python/compile/aot.py.
+//!
+//! Layout: magic "DNDW1\0", u32 tensor count, then per tensor
+//! (u32 name_len, name bytes, u8 dtype{0:f32,1:i32}, u32 ndim, u32 dims…,
+//! raw little-endian data). Tensor order is the jax canonical flatten
+//! order — the exact order the HLO's leading parameters expect.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 6] = b"DNDW1\x00";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+    /// raw little-endian payload, 4 bytes per element
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(if self.dims.is_empty() { 1 } else { 0 })
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor {} is not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("tensor {} is not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[derive(Debug)]
+pub struct WeightsFile {
+    pub tensors: Vec<Tensor>,
+}
+
+impl WeightsFile {
+    pub fn read(path: &Path) -> Result<WeightsFile> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightsFile> {
+        let mut r = bytes;
+        let mut magic = [0u8; 6];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic {magic:?}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let mut dt = [0u8; 1];
+            r.read_exact(&mut dt)?;
+            let dtype = match dt[0] {
+                0 => Dtype::F32,
+                1 => Dtype::I32,
+                d => bail!("unknown dtype {d}"),
+            };
+            let ndim = read_u32(&mut r)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = dims.iter().product::<usize>().max(usize::from(ndim == 0));
+            let mut data = vec![0u8; 4 * n];
+            r.read_exact(&mut data)?;
+            tensors.push(Tensor { name: String::from_utf8(name)?, dtype, dims, data });
+        }
+        if !r.is_empty() {
+            bail!("{} trailing bytes", r.len());
+        }
+        Ok(WeightsFile { tensors })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::elem_count).sum()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tensor(out: &mut Vec<u8>, name: &str, dtype: u8, dims: &[u32], data: &[u8]) {
+        out.extend((name.len() as u32).to_le_bytes());
+        out.extend(name.as_bytes());
+        out.push(dtype);
+        out.extend((dims.len() as u32).to_le_bytes());
+        for d in dims {
+            out.extend(d.to_le_bytes());
+        }
+        out.extend(data);
+    }
+
+    fn sample_file() -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend(MAGIC);
+        out.extend(2u32.to_le_bytes());
+        let f: Vec<u8> = [1.0f32, -2.5, 3.0, 0.0, 5.5, 6.25]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        write_tensor(&mut out, "a.w", 0, &[2, 3], &f);
+        let i: Vec<u8> = [7i32, -8].iter().flat_map(|x| x.to_le_bytes()).collect();
+        write_tensor(&mut out, "b", 1, &[2], &i);
+        out
+    }
+
+    #[test]
+    fn parses_reference_file() {
+        let wf = WeightsFile::parse(&sample_file()).unwrap();
+        assert_eq!(wf.tensors.len(), 2);
+        assert_eq!(wf.tensors[0].name, "a.w");
+        assert_eq!(wf.tensors[0].dims, vec![2, 3]);
+        assert_eq!(wf.tensors[0].as_f32().unwrap(), vec![1.0, -2.5, 3.0, 0.0, 5.5, 6.25]);
+        assert_eq!(wf.tensors[1].as_i32().unwrap(), vec![7, -8]);
+        assert_eq!(wf.total_params(), 8);
+    }
+
+    #[test]
+    fn scalar_tensor_has_one_element() {
+        let mut out = Vec::new();
+        out.extend(MAGIC);
+        out.extend(1u32.to_le_bytes());
+        write_tensor(&mut out, "s", 0, &[], &1.5f32.to_le_bytes());
+        let wf = WeightsFile::parse(&out).unwrap();
+        assert_eq!(wf.tensors[0].elem_count(), 1);
+        assert_eq!(wf.tensors[0].as_f32().unwrap(), vec![1.5]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(WeightsFile::parse(b"NOPE").is_err());
+        let f = sample_file();
+        assert!(WeightsFile::parse(&f[..f.len() - 2]).is_err());
+        let mut extra = f.clone();
+        extra.push(0);
+        assert!(WeightsFile::parse(&extra).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_access_fails() {
+        let wf = WeightsFile::parse(&sample_file()).unwrap();
+        assert!(wf.tensors[0].as_i32().is_err());
+        assert!(wf.tensors[1].as_f32().is_err());
+    }
+}

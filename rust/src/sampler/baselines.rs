@@ -1,0 +1,271 @@
+//! Baseline samplers the paper compares against.
+//!
+//! All of these call the denoiser **once per step** (NFE = T) — that is
+//! the cost DNDM removes. Implementations follow Appendix B.1 (D3PM) and
+//! Zheng et al. 2023 (RDM), plus Mask-Predict for Table 13.
+
+use anyhow::{bail, Result};
+
+use crate::diffusion::{absorbing_reverse_step, multinomial_reverse_step, NoiseKind};
+use crate::runtime::Denoiser;
+use crate::schedule::{AlphaSchedule, SplitMix64};
+
+use super::common::{init_noise, noise_of, row, sample_x0};
+use super::{GenResult, SamplerConfig, TracePoint};
+
+fn schedule_of(den: &dyn Denoiser) -> AlphaSchedule {
+    AlphaSchedule::parse(&den.config().schedule).unwrap_or(AlphaSchedule::CosineSq)
+}
+
+/// Vanilla D3PM ancestral sampling (Hoogeboom 2021b / Austin 2021):
+/// every step t draws x̂0 ~ p_θ(·|x_t) then x_{t−1} ~ q(x_{t−1}|x_t, x̂0).
+pub fn d3pm(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+) -> Result<GenResult> {
+    let mcfg = den.config().clone();
+    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
+    let noise = noise_of(&mcfg);
+    let sched = schedule_of(den);
+    let mut rng = SplitMix64::new(seed);
+
+    let mut x = init_noise(batch, n, noise, &mut rng);
+    let mut trace = Vec::new();
+
+    for t in (1..=t_max).rev() {
+        let t_norm = t as f32 / t_max as f32;
+        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
+        for b in 0..batch {
+            for pos in 0..n {
+                let (x0_hat, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature.max(1.0), &mut rng);
+                x[b][pos] = match noise {
+                    NoiseKind::Absorbing { mask_id } => absorbing_reverse_step(
+                        x[b][pos], x0_hat, t, t_max, sched, mask_id, &mut rng,
+                    ),
+                    NoiseKind::Multinomial { .. } => multinomial_reverse_step(
+                        x[b][pos], x0_hat, t, t_max, sched, noise, v, &mut rng,
+                    ),
+                };
+            }
+        }
+        if cfg.trace {
+            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
+        }
+    }
+
+    Ok(GenResult { tokens: x, nfe: t_max, trace })
+}
+
+/// RDM reparameterized sampling (Zheng et al. 2023).
+///
+/// RDM tracks a per-token "decoded" indicator v_t. At each step the
+/// expected number of newly revealed tokens follows the schedule
+/// (α_{t−1} − α_t)/(1 − α_t) over still-noisy tokens; `topk=false`
+/// reveals a Bernoulli-random subset (vanilla RDM), `topk=true` reveals
+/// the highest-scoring ones (RDM-k, their best variant). Revealed tokens
+/// are *re-predicted* every step (RDM re-decodes, unlike D3PM-Absorb).
+pub fn rdm(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+    topk: bool,
+) -> Result<GenResult> {
+    let mcfg = den.config().clone();
+    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
+    let noise = noise_of(&mcfg);
+    let sched = schedule_of(den);
+    let mut rng = SplitMix64::new(seed);
+
+    let mut x = init_noise(batch, n, noise, &mut rng);
+    let mut revealed = vec![vec![false; n]; batch];
+    let mut trace = Vec::new();
+
+    for t in (1..=t_max).rev() {
+        let t_norm = t as f32 / t_max as f32;
+        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
+        let a_t = sched.alpha_discrete(t, t_max);
+        let a_prev = sched.alpha_discrete(t - 1, t_max);
+        let p_reveal = if a_t >= 1.0 { 0.0 } else { (a_prev - a_t) / (1.0 - a_t) };
+
+        for b in 0..batch {
+            let mut decoded: Vec<(usize, u32, f32)> = Vec::with_capacity(n);
+            for pos in 0..n {
+                let (tok, score) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+                decoded.push((pos, tok, score));
+            }
+            // re-predict already-revealed tokens (RDM re-decoding)
+            for &(pos, tok, _) in &decoded {
+                if revealed[b][pos] {
+                    x[b][pos] = tok;
+                }
+            }
+            let noisy: Vec<usize> = (0..n).filter(|&p| !revealed[b][p]).collect();
+            if topk {
+                // reveal count = Binomial expectation, positions by score
+                let k = ((noisy.len() as f64) * p_reveal).round() as usize;
+                let k = if t == 1 { noisy.len() } else { k };
+                let mut ranked: Vec<&(usize, u32, f32)> = decoded
+                    .iter()
+                    .filter(|(p, _, _)| !revealed[b][*p])
+                    .collect();
+                ranked.sort_by(|a, b| b.2.total_cmp(&a.2));
+                for &&(pos, tok, _) in ranked.iter().take(k) {
+                    x[b][pos] = tok;
+                    revealed[b][pos] = true;
+                }
+            } else {
+                for &pos in &noisy {
+                    if t == 1 || rng.coin(p_reveal) {
+                        let (_, tok, _) = decoded[pos];
+                        x[b][pos] = tok;
+                        revealed[b][pos] = true;
+                    }
+                }
+            }
+        }
+        if cfg.trace {
+            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
+        }
+    }
+
+    Ok(GenResult { tokens: x, nfe: t_max, trace })
+}
+
+/// Mask-Predict (Ghazvininejad et al. 2019) — Table 13's comparator.
+///
+/// Absorbing models only: start fully masked; at iteration i of S, predict
+/// everything, then re-mask the ⌈N·(S−i−1)/S⌉ lowest-scoring tokens.
+pub fn mask_predict(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+) -> Result<GenResult> {
+    let mcfg = den.config().clone();
+    if mcfg.kind != "absorbing" {
+        bail!("mask-predict requires an absorbing model");
+    }
+    let (n, v, iters) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
+    let mask = mcfg.mask_id;
+    let mut rng = SplitMix64::new(seed);
+
+    let mut x = vec![vec![mask; n]; batch];
+    let mut trace = Vec::new();
+
+    for i in 0..iters {
+        // feed a time proportional to the masked fraction for conditioning
+        let t_norm = 1.0 - (i as f32 / iters as f32);
+        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
+        let n_mask = (n * (iters - i - 1)) / iters;
+        for b in 0..batch {
+            let mut scored: Vec<(usize, u32, f32)> = (0..n)
+                .map(|pos| {
+                    let (tok, s) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+                    (pos, tok, s)
+                })
+                .collect();
+            for &(pos, tok, _) in &scored {
+                x[b][pos] = tok;
+            }
+            if n_mask > 0 {
+                scored.sort_by(|a, b| a.2.total_cmp(&b.2)); // ascending score
+                for &(pos, _, _) in scored.iter().take(n_mask) {
+                    x[b][pos] = mask;
+                }
+            }
+        }
+        if cfg.trace {
+            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
+        }
+    }
+
+    Ok(GenResult { tokens: x, nfe: iters, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+    use crate::sampler::{generate, SamplerConfig, SamplerKind};
+
+    const TARGET: [u32; 8] = [10, 11, 12, 13, 14, 15, 16, 17];
+
+    fn mock(kind: &str) -> MockDenoiser {
+        let cfg = MockDenoiser::test_config(20, 8, 0, kind);
+        MockDenoiser::fixed(cfg, TARGET.to_vec())
+    }
+
+    #[test]
+    fn d3pm_absorbing_converges_with_t_nfe() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 30);
+        let out = generate(&den, &cfg, None, 2, 7, None).unwrap();
+        assert_eq!(out.nfe, 30);
+        assert_eq!(den.calls(), 30);
+        for seq in &out.tokens {
+            assert_eq!(seq, &TARGET.to_vec());
+        }
+    }
+
+    #[test]
+    fn d3pm_multinomial_converges() {
+        let den = mock("multinomial");
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 40);
+        let out = generate(&den, &cfg, None, 2, 3, None).unwrap();
+        // posterior sampling is stochastic but the mock's peak dominates
+        let hits: usize = out.tokens[0]
+            .iter()
+            .zip(TARGET.iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(hits >= 7, "{:?}", out.tokens[0]);
+    }
+
+    #[test]
+    fn rdm_variants_converge_and_reveal_everything() {
+        for topk in [false, true] {
+            for kind in ["absorbing", "multinomial"] {
+                let den = mock(kind);
+                let cfg = SamplerConfig::new(
+                    if topk { SamplerKind::RdmTopK } else { SamplerKind::Rdm },
+                    25,
+                );
+                let out = generate(&den, &cfg, None, 2, 11, None).unwrap();
+                assert_eq!(out.nfe, 25);
+                for seq in &out.tokens {
+                    assert_eq!(seq, &TARGET.to_vec(), "kind={kind} topk={topk}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_predict_converges_and_requires_absorbing() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::MaskPredict, 10);
+        let out = generate(&den, &cfg, None, 2, 5, None).unwrap();
+        assert_eq!(out.nfe, 10);
+        for seq in &out.tokens {
+            assert_eq!(seq, &TARGET.to_vec());
+        }
+        let den = mock("multinomial");
+        assert!(generate(&den, &cfg, None, 1, 5, None).is_err());
+    }
+
+    #[test]
+    fn mask_predict_intermediate_has_masks() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::MaskPredict, 5).with_trace();
+        let out = generate(&den, &cfg, None, 1, 5, None).unwrap();
+        let masked_first = out.trace[0].tokens.iter().filter(|&&t| t == 2).count();
+        let masked_last = out.trace.last().unwrap().tokens.iter().filter(|&&t| t == 2).count();
+        assert!(masked_first > 0, "early iterations re-mask low scores");
+        assert_eq!(masked_last, 0);
+    }
+}

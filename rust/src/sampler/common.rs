@@ -1,0 +1,125 @@
+//! Shared decode-loop machinery: the native transition update (the rust
+//! twin of the fused L1 Pallas kernel), x̂0 draws, noise init.
+
+use crate::diffusion::NoiseKind;
+use crate::runtime::ModelConfig;
+use crate::schedule::SplitMix64;
+
+/// q_noise from a model config.
+pub fn noise_of(cfg: &ModelConfig) -> NoiseKind {
+    if cfg.kind == "absorbing" {
+        NoiseKind::Absorbing { mask_id: cfg.mask_id }
+    } else {
+        NoiseKind::Multinomial { lo: cfg.noise_lo, vocab: cfg.vocab as u32 }
+    }
+}
+
+/// Draw x̂0 for one position from its logits row.
+///
+/// temperature > 0: Gumbel-max categorical draw at that temperature;
+/// temperature = 0: greedy argmax. Returns (token, log-prob score) where
+/// the score is log p(token | logits) — the ranking signal of DNDM-k /
+/// RDM-k (Appendix E).
+#[inline]
+pub fn sample_x0(logits: &[f32], temperature: f32, rng: &mut SplitMix64) -> (u32, f32) {
+    debug_assert!(!logits.is_empty());
+    let mut best = f32::NEG_INFINITY;
+    let mut arg = 0usize;
+    if temperature > 0.0 {
+        for (i, &l) in logits.iter().enumerate() {
+            let val = l + temperature * rng.gumbel() as f32;
+            if val > best {
+                best = val;
+                arg = i;
+            }
+        }
+    } else {
+        for (i, &l) in logits.iter().enumerate() {
+            if l > best {
+                best = l;
+                arg = i;
+            }
+        }
+    }
+    (arg as u32, log_prob(logits, arg))
+}
+
+/// log softmax(logits)[idx], numerically stable single pass.
+#[inline]
+pub fn log_prob(logits: &[f32], idx: usize) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for &l in logits {
+        mx = mx.max(l);
+    }
+    let mut sum = 0.0f32;
+    for &l in logits {
+        sum += (l - mx).exp();
+    }
+    logits[idx] - mx - sum.ln()
+}
+
+/// Per-position logits row accessor for flattened [N*V] logits.
+#[inline]
+pub fn row(logits: &[f32], pos: usize, vocab: usize) -> &[f32] {
+    &logits[pos * vocab..(pos + 1) * vocab]
+}
+
+/// Initialize x_T ~ q_noise for a batch.
+pub fn init_noise(batch: usize, n: usize, noise: NoiseKind, rng: &mut SplitMix64) -> Vec<Vec<u32>> {
+    (0..batch).map(|_| noise.sample_seq(n, rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax_and_score_is_logprob() {
+        let logits = [0.0f32, 3.0, 1.0];
+        let mut rng = SplitMix64::new(1);
+        let (tok, score) = sample_x0(&logits, 0.0, &mut rng);
+        assert_eq!(tok, 1);
+        let z: f32 = logits.iter().map(|l| l.exp()).sum();
+        assert!((score - (3.0f32.exp() / z).ln()).abs() < 1e-5);
+        assert!(score <= 0.0);
+    }
+
+    #[test]
+    fn temperature_sampling_matches_softmax_frequencies() {
+        let logits = [0.0f32, (2.0f32).ln(), (3.0f32).ln()];
+        let mut rng = SplitMix64::new(2);
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            counts[sample_x0(&logits, 1.0, &mut rng).0 as usize] += 1;
+        }
+        for (i, want) in [1.0 / 6.0, 2.0 / 6.0, 3.0 / 6.0].iter().enumerate() {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - want).abs() < 0.015, "cat {i}: {f} vs {want}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = [0.0f32, 2.0, 1.0];
+        let mut rng = SplitMix64::new(3);
+        let hits = (0..1000)
+            .filter(|_| sample_x0(&logits, 0.05, &mut rng).0 == 1)
+            .count();
+        assert!(hits > 990, "{hits}");
+    }
+
+    #[test]
+    fn row_indexing() {
+        let logits: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        assert_eq!(row(&logits, 1, 4), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn noise_of_maps_kinds() {
+        let mut cfg = crate::runtime::MockDenoiser::test_config(30, 4, 0, "absorbing");
+        assert_eq!(noise_of(&cfg), NoiseKind::Absorbing { mask_id: 2 });
+        cfg.kind = "multinomial".into();
+        assert_eq!(noise_of(&cfg), NoiseKind::Multinomial { lo: 3, vocab: 30 });
+    }
+}

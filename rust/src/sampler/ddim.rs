@@ -1,0 +1,149 @@
+//! DDIM-discrete comparator (Appendix B.1 of the paper).
+//!
+//! Song et al. (2020a), Appendix A, sketches a non-Markov *multinomial*
+//! process whose reverse kernel is
+//!
+//!   q(x_{t−1}|x_t, x̂0) = Cat(σ_t·x_t + (α_{t−1} − σ_t·α_t)·x̂0
+//!                             + ((1−α_{t−1}) − (1−α_t)·σ_t)·𝟙/K).
+//!
+//! With the "deterministic" choice σ_t = (1−α_{t−1})/(1−α_t) this becomes
+//! Cat(σ_t·x_t + (1−σ_t)·x̂0): **still stochastic at every step** — it
+//! cannot tell whether x_t already equals x0, so it keeps re-drawing.
+//! That is exactly the paper's point of contrast (Remark 3.5 / B.1):
+//! DDIM needs a network call every step (NFE = T), while DNDM's
+//! predetermined τ de-randomizes the walk to |𝒯| calls.
+//!
+//! Implemented as an extra baseline so the contrast is measurable, not
+//! just asserted: see the `ablation_comparators` bench rows.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Denoiser;
+use crate::schedule::{AlphaSchedule, SplitMix64};
+
+use super::common::{init_noise, noise_of, row, sample_x0};
+use super::{GenResult, SamplerConfig, TracePoint};
+
+/// σ_t interpolation knob: 1.0 = the paper's "deterministic" DDIM choice
+/// σ_t = (1−α_{t−1})/(1−α_t); 0.0 = fully stochastic (reduces to the
+/// posterior's noise level of ancestral sampling).
+pub fn run(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+    eta: f64,
+) -> Result<GenResult> {
+    let mcfg = den.config().clone();
+    if mcfg.kind != "multinomial" {
+        bail!("ddim-discrete is defined for multinomial diffusion");
+    }
+    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
+    let noise = noise_of(&mcfg);
+    let sched = AlphaSchedule::parse(&mcfg.schedule).unwrap_or(AlphaSchedule::CosineSq);
+    let mut rng = SplitMix64::new(seed);
+
+    let mut x = init_noise(batch, n, noise, &mut rng);
+    let mut trace = Vec::new();
+
+    for t in (1..=t_max).rev() {
+        let t_norm = t as f32 / t_max as f32;
+        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
+        let a_t = sched.alpha_discrete(t, t_max);
+        let a_prev = sched.alpha_discrete(t - 1, t_max);
+        let sigma_max = if a_t >= 1.0 { 0.0 } else { (1.0 - a_prev) / (1.0 - a_t) };
+        let sigma = eta * sigma_max;
+        // mixture weights over {x_t, x̂0, uniform}
+        let w_xt = sigma;
+        let w_x0 = a_prev - sigma * a_t;
+        let w_uni = ((1.0 - a_prev) - (1.0 - a_t) * sigma).max(0.0);
+
+        for b in 0..batch {
+            for pos in 0..n {
+                let (x0_hat, _) =
+                    sample_x0(row(&logits[b], pos, v), cfg.temperature.max(1.0), &mut rng);
+                let u = rng.uniform() * (w_xt + w_x0 + w_uni);
+                x[b][pos] = if u < w_xt {
+                    x[b][pos]
+                } else if u < w_xt + w_x0 {
+                    x0_hat
+                } else {
+                    noise.sample(&mut rng)
+                };
+            }
+        }
+        if cfg.trace {
+            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
+        }
+    }
+
+    Ok(GenResult { tokens: x, nfe: t_max, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+    use crate::sampler::SamplerKind;
+
+    const TARGET: [u32; 8] = [10, 11, 12, 13, 14, 15, 16, 17];
+
+    fn mock(kind: &str) -> MockDenoiser {
+        let cfg = MockDenoiser::test_config(20, 8, 0, kind);
+        let mut m = MockDenoiser::fixed(cfg, TARGET.to_vec());
+        m.peak = 14.0;
+        m
+    }
+
+    #[test]
+    fn ddim_converges_with_t_nfe() {
+        let den = mock("multinomial");
+        let cfg = SamplerConfig::new(SamplerKind::Rdm, 40); // kind unused here
+        let out = run(&den, &cfg, None, 2, 7, 1.0).unwrap();
+        assert_eq!(out.nfe, 40);
+        for seq in &out.tokens {
+            let hits = seq.iter().zip(TARGET.iter()).filter(|(a, b)| a == b).count();
+            assert!(hits >= 7, "{seq:?}");
+        }
+    }
+
+    #[test]
+    fn ddim_rejects_absorbing() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Rdm, 10);
+        assert!(run(&den, &cfg, None, 1, 1, 1.0).is_err());
+    }
+
+    #[test]
+    fn mixture_weights_are_a_distribution() {
+        // internal invariant: at every t, w_xt + w_x0 + w_uni == 1 (η=1)
+        let sched = AlphaSchedule::CosineSq;
+        let t_max = 50;
+        for t in 1..=t_max {
+            let a_t = sched.alpha_discrete(t, t_max);
+            let a_prev = sched.alpha_discrete(t - 1, t_max);
+            let sigma = if a_t >= 1.0 { 0.0 } else { (1.0 - a_prev) / (1.0 - a_t) };
+            let total = sigma + (a_prev - sigma * a_t) + ((1.0 - a_prev) - (1.0 - a_t) * sigma);
+            assert!((total - 1.0).abs() < 1e-9, "t={t}: {total}");
+            assert!(a_prev - sigma * a_t >= -1e-12, "x̂0 weight negative at t={t}");
+        }
+    }
+
+    #[test]
+    fn ddim_remains_stochastic_even_deterministic_sigma() {
+        // Remark 3.5: with σ_t = (1−α_{t−1})/(1−α_t) the kernel still mixes
+        // x_t and x̂0 — two seeds should diverge somewhere mid-trajectory.
+        let den = mock("multinomial");
+        let cfg = SamplerConfig::new(SamplerKind::Rdm, 30).with_trace();
+        let a = run(&den, &cfg, None, 1, 1, 1.0).unwrap();
+        let b = run(&den, &cfg, None, 1, 2, 1.0).unwrap();
+        let mid_differs = a
+            .trace
+            .iter()
+            .zip(&b.trace)
+            .take(20)
+            .any(|(x, y)| x.tokens != y.tokens);
+        assert!(mid_differs);
+    }
+}

@@ -1,0 +1,245 @@
+//! DNDM — Algorithms 1, 3 (discrete) and 2 (continuous).
+//!
+//! The whole point of the paper in one loop: sample the transition-time
+//! set 𝒯 up front, then walk the *event list* (distinct τ values,
+//! descending) instead of all T steps. The denoiser runs once per event;
+//! every other step is the identity `x_{t−1} = x_t` and costs nothing.
+
+use anyhow::Result;
+
+use crate::runtime::Denoiser;
+use crate::schedule::SplitMix64;
+
+use super::common::{init_noise, noise_of, row, sample_x0};
+use super::{GenResult, SamplerConfig, TracePoint};
+
+/// Algorithms 1 (v2=false) and 3 (v2=true), batched.
+///
+/// With `cfg.shared_tau` one 𝒯 is drawn per batch and broadcast over
+/// sequences (the paper's batched implementation — NFE per batch = |𝒯|);
+/// otherwise each sequence draws its own 𝒯 and the event list is the
+/// union (ablation; more calls, finer per-sequence schedules).
+pub fn run(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+    v2: bool,
+) -> Result<GenResult> {
+    let mcfg = den.config().clone();
+    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
+    let noise = noise_of(&mcfg);
+    let mut rng = SplitMix64::new(seed);
+
+    // 1. x_T ~ q_noise, 𝒯 ~ 𝒟_τ
+    let mut x = init_noise(batch, n, noise, &mut rng);
+    let taus: Vec<Vec<usize>> = if cfg.shared_tau {
+        let tt = cfg.spec.sample_times(t_max, n, cfg.order, &mut rng);
+        vec![tt.taus; batch]
+    } else {
+        (0..batch)
+            .map(|_| cfg.spec.sample_times(t_max, n, cfg.order, &mut rng).taus)
+            .collect()
+    };
+
+    // event list = distinct transition times over the whole batch, descending
+    let mut events: Vec<usize> = taus.iter().flatten().copied().collect();
+    events.sort_unstable_by(|a, b| b.cmp(a));
+    events.dedup();
+
+    let mut trace = Vec::new();
+    // 2. reverse walk over events only
+    for &t in &events {
+        let t_norm = t as f32 / t_max as f32;
+        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
+        for b in 0..batch {
+            for pos in 0..n {
+                let moves = if v2 { taus[b][pos] >= t } else { taus[b][pos] == t };
+                if moves {
+                    let (tok, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+                    x[b][pos] = tok;
+                }
+            }
+        }
+        if cfg.trace {
+            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
+        }
+    }
+
+    Ok(GenResult { tokens: x, nfe: events.len(), trace })
+}
+
+/// Algorithm 2 — DNDM-C (continuous time / infinite steps).
+///
+/// Transition timestamps are drawn from the continuous 𝒟_τ (density
+/// −α′(t), or the Beta approximation) and visited in descending order;
+/// ties (which have probability 0 in the continuum but can occur with the
+/// rounded Beta) collapse into one event. NFE → N as T → ∞ (Remark D.4).
+pub fn run_continuous(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+) -> Result<GenResult> {
+    let mcfg = den.config().clone();
+    let (n, v) = (mcfg.seq_len, mcfg.vocab);
+    let noise = noise_of(&mcfg);
+    let mut rng = SplitMix64::new(seed);
+
+    let mut x = init_noise(batch, n, noise, &mut rng);
+    // shared continuous 𝒯 (same broadcast convention as the discrete path)
+    let taus: Vec<f64> = cfg
+        .spec
+        .sample_times_continuous(n, cfg.order, &mut rng);
+
+    // order events descending; group exactly-equal timestamps
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| taus[b].partial_cmp(&taus[a]).unwrap());
+
+    let mut trace = Vec::new();
+    let mut nfe = 0usize;
+    let mut k = 0usize;
+    while k < n {
+        let t = taus[order[k]];
+        // all positions sharing this timestamp transition together
+        let mut group = vec![order[k]];
+        let mut j = k + 1;
+        while j < n && (taus[order[j]] - t).abs() < 1e-12 {
+            group.push(order[j]);
+            j += 1;
+        }
+        let logits = den.denoise(&x, &vec![t as f32; batch], src)?;
+        nfe += 1;
+        for b in 0..batch {
+            for &pos in &group {
+                let (tok, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+                x[b][pos] = tok;
+            }
+        }
+        if cfg.trace {
+            trace.push(TracePoint { t, tokens: x[0].clone() });
+        }
+        k = j;
+    }
+
+    Ok(GenResult { tokens: x, nfe, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+    use crate::sampler::{generate, SamplerConfig, SamplerKind};
+    use crate::schedule::{AlphaSchedule, TransitionSpec};
+
+    fn mock(kind: &str) -> MockDenoiser {
+        let cfg = MockDenoiser::test_config(20, 8, 0, kind);
+        MockDenoiser::fixed(cfg, vec![10, 11, 12, 13, 14, 15, 16, 17])
+    }
+
+    #[test]
+    fn converges_to_mock_target_absorbing() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let out = generate(&den, &cfg, None, 2, 7, None).unwrap();
+        for seq in &out.tokens {
+            assert_eq!(seq, &vec![10, 11, 12, 13, 14, 15, 16, 17]);
+        }
+    }
+
+    #[test]
+    fn converges_to_mock_target_multinomial() {
+        let den = mock("multinomial");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50)
+            .with_spec(TransitionSpec::Exact(AlphaSchedule::CosineSq));
+        let out = generate(&den, &cfg, None, 3, 9, None).unwrap();
+        for seq in &out.tokens {
+            assert_eq!(seq, &vec![10, 11, 12, 13, 14, 15, 16, 17]);
+        }
+    }
+
+    #[test]
+    fn nfe_bounded_by_min_n_t_and_calls_match() {
+        let den = mock("absorbing");
+        for steps in [5usize, 50, 1000] {
+            let den = mock("absorbing");
+            let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+            let out = generate(&den, &cfg, None, 4, 3, None).unwrap();
+            assert!(out.nfe >= 1 && out.nfe <= steps.min(8), "T={steps} nfe={}", out.nfe);
+            assert_eq!(den.calls() as usize, out.nfe, "NN calls must equal |𝒯|");
+        }
+        let _ = den;
+    }
+
+    #[test]
+    fn v2_also_converges() {
+        let den = mock("multinomial");
+        let cfg = SamplerConfig::new(SamplerKind::DndmV2, 50);
+        let out = generate(&den, &cfg, None, 2, 5, None).unwrap();
+        for seq in &out.tokens {
+            assert_eq!(seq, &vec![10, 11, 12, 13, 14, 15, 16, 17]);
+        }
+    }
+
+    #[test]
+    fn continuous_nfe_is_n_when_no_ties() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::DndmC, 0)
+            .with_spec(TransitionSpec::Exact(AlphaSchedule::Linear));
+        let out = generate(&den, &cfg, None, 2, 11, None).unwrap();
+        assert_eq!(out.nfe, 8, "continuous τ are a.s. distinct → NFE = N");
+        assert_eq!(out.tokens[0], vec![10, 11, 12, 13, 14, 15, 16, 17]);
+    }
+
+    #[test]
+    fn per_seq_tau_unions_events() {
+        let den = mock("absorbing");
+        let mut cfg = SamplerConfig::new(SamplerKind::Dndm, 1000);
+        cfg.shared_tau = false;
+        let out = generate(&den, &cfg, None, 4, 13, None).unwrap();
+        // union over 4 sequences ≥ single-sequence NFE, still ≤ 4·N
+        assert!(out.nfe <= 32);
+        assert_eq!(out.tokens[2], vec![10, 11, 12, 13, 14, 15, 16, 17]);
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_trace();
+        let out = generate(&den, &cfg, None, 1, 17, None).unwrap();
+        assert_eq!(out.trace.len(), out.nfe);
+        // times strictly decreasing
+        for w in out.trace.windows(2) {
+            assert!(w[0].t > w[1].t);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let den = mock("multinomial");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_temperature(1.0);
+        let a = generate(&den, &cfg, None, 2, 23, None).unwrap();
+        let b = generate(&den, &cfg, None, 2, 23, None).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        let c = generate(&den, &cfg, None, 2, 24, None).unwrap();
+        // different seed → different 𝒯 (tokens may or may not differ, but
+        // nfe/trace-level equality would be a miracle with temp 1.0)
+        assert!(a.tokens != c.tokens || a.nfe != c.nfe);
+    }
+
+    #[test]
+    fn absorbing_untouched_positions_stay_masked_midway() {
+        // run with only 2 steps so some τ collide; before finishing,
+        // positions with τ below the last processed event must be MASK.
+        // (We verify the final output instead: after the full run nothing
+        // should remain MASK because every τ ∈ 1..=T is processed.)
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 3);
+        let out = generate(&den, &cfg, None, 2, 29, None).unwrap();
+        for seq in &out.tokens {
+            assert!(seq.iter().all(|&t| t != 2), "mask must be fully resolved");
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Sampling algorithms.
+//!
+//! The paper's contributions:
+//! * [`dndm`] — Algorithm 1 (DNDM), Algorithm 3 (DNDM-v2, re-update τ≥t)
+//!   and Algorithm 2 (DNDM-C, continuous/infinite-step).
+//! * [`dndm_topk`] — Algorithm 4 (DNDM-k, top-k transition time).
+//!
+//! Baselines reproduced for the tables:
+//! * [`baselines::d3pm`] — vanilla ancestral sampling (Hoogeboom 2021b /
+//!   Austin 2021): one NN call per step, stochastic posterior per token.
+//! * [`baselines::rdm`] — RDM reparameterized sampling (Zheng 2023), with
+//!   and without top-k selection: one NN call per step, reveal-count from
+//!   the schedule.
+//! * [`baselines::mask_predict`] — Mask-Predict (Ghazvininejad 2019) for
+//!   Table 13.
+
+pub mod ardm;
+pub mod baselines;
+pub mod common;
+pub mod ddim;
+pub mod dndm;
+pub mod dndm_topk;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::NfeCounter;
+use crate::runtime::Denoiser;
+use crate::schedule::{AlphaSchedule, TransitionOrder, TransitionSpec};
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Algorithm 1 — DNDM with predetermined transition times.
+    Dndm,
+    /// Algorithm 3 — DNDM updating every token with τ ≥ t (more robust).
+    DndmV2,
+    /// Algorithm 4 — DNDM-k: top-k score-ordered transitions.
+    DndmTopK,
+    /// Algorithm 2 — DNDM-C: continuous-time (∞-step) sampling.
+    DndmC,
+    /// Vanilla D3PM ancestral sampling (NFE = T).
+    D3pm,
+    /// RDM reparameterized sampling (NFE = T).
+    Rdm,
+    /// RDM with top-k token selection (NFE = T).
+    RdmTopK,
+    /// Mask-Predict (absorbing models only; NFE = steps).
+    MaskPredict,
+    /// DDIM-discrete comparator (Appendix B.1; multinomial only, NFE = T).
+    Ddim,
+    /// ARDM-style order-agnostic AR baseline (Remark 3.7; absorbing, NFE = N).
+    Ardm,
+}
+
+impl SamplerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Dndm => "dndm",
+            SamplerKind::DndmV2 => "dndm-v2",
+            SamplerKind::DndmTopK => "dndm-k",
+            SamplerKind::DndmC => "dndm-c",
+            SamplerKind::D3pm => "d3pm",
+            SamplerKind::Rdm => "rdm",
+            SamplerKind::RdmTopK => "rdm-k",
+            SamplerKind::MaskPredict => "mask-predict",
+            SamplerKind::Ddim => "ddim",
+            SamplerKind::Ardm => "ardm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SamplerKind> {
+        match s {
+            "dndm" => Some(SamplerKind::Dndm),
+            "dndm-v2" | "dndm2" => Some(SamplerKind::DndmV2),
+            "dndm-k" | "dndm-topk" => Some(SamplerKind::DndmTopK),
+            "dndm-c" | "dndm-inf" => Some(SamplerKind::DndmC),
+            "d3pm" | "vanilla" => Some(SamplerKind::D3pm),
+            "rdm" => Some(SamplerKind::Rdm),
+            "rdm-k" | "rdm-topk" => Some(SamplerKind::RdmTopK),
+            "mask-predict" | "maskpredict" => Some(SamplerKind::MaskPredict),
+            "ddim" => Some(SamplerKind::Ddim),
+            "ardm" => Some(SamplerKind::Ardm),
+            _ => None,
+        }
+    }
+
+    pub fn is_dndm(&self) -> bool {
+        matches!(
+            self,
+            SamplerKind::Dndm | SamplerKind::DndmV2 | SamplerKind::DndmTopK | SamplerKind::DndmC
+        )
+    }
+}
+
+/// Full sampling configuration.
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    pub kind: SamplerKind,
+    /// T (discrete step count); ignored by DndmC.
+    pub steps: usize,
+    /// 𝒟_τ for the DNDM family.
+    pub spec: TransitionSpec,
+    /// positional τ assignment (Table 6).
+    pub order: TransitionOrder,
+    /// Gumbel temperature for x̂0 draws; 0.0 = greedy argmax.
+    pub temperature: f32,
+    /// sample one shared 𝒯 per batch (the paper's batched implementation)
+    /// or one per sequence (ablation).
+    pub shared_tau: bool,
+    /// record per-event snapshots (Figure 2).
+    pub trace: bool,
+}
+
+impl SamplerConfig {
+    pub fn new(kind: SamplerKind, steps: usize) -> SamplerConfig {
+        SamplerConfig {
+            kind,
+            steps,
+            spec: TransitionSpec::Beta { a: 15.0, b: 7.0 },
+            order: TransitionOrder::Random,
+            temperature: 0.0,
+            shared_tau: true,
+            trace: false,
+        }
+    }
+
+    pub fn with_spec(mut self, spec: TransitionSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    pub fn with_order(mut self, order: TransitionOrder) -> Self {
+        self.order = order;
+        self
+    }
+
+    pub fn with_temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
+        self
+    }
+
+    /// Use the exact 𝒟_τ induced by an α schedule (Theorem 3.6).
+    pub fn exact_from_schedule(mut self, sched: AlphaSchedule) -> Self {
+        self.spec = TransitionSpec::Exact(sched);
+        self
+    }
+}
+
+/// Snapshot after one NN call (Figure 2 trajectories).
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    /// normalized time of the call
+    pub t: f64,
+    /// tokens of sequence 0 after the update
+    pub tokens: Vec<u32>,
+}
+
+/// Result of one batched generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub tokens: Vec<Vec<u32>>,
+    /// NN calls made for this batch (= |𝒯| for DNDM, T for baselines)
+    pub nfe: usize,
+    pub trace: Vec<TracePoint>,
+}
+
+/// Dispatch: run `cfg.kind` on `den` for a batch of `batch` sequences.
+pub fn generate(
+    den: &dyn Denoiser,
+    cfg: &SamplerConfig,
+    src: Option<&[Vec<u32>]>,
+    batch: usize,
+    seed: u64,
+    counter: Option<&NfeCounter>,
+) -> Result<GenResult> {
+    if let Some(s) = src {
+        if s.len() != batch {
+            bail!("src batch {} != batch {}", s.len(), batch);
+        }
+    } else if den.config().conditional() {
+        bail!("conditional model requires src");
+    }
+    let result = match cfg.kind {
+        SamplerKind::Dndm => dndm::run(den, cfg, src, batch, seed, false)?,
+        SamplerKind::DndmV2 => dndm::run(den, cfg, src, batch, seed, true)?,
+        SamplerKind::DndmC => dndm::run_continuous(den, cfg, src, batch, seed)?,
+        SamplerKind::DndmTopK => dndm_topk::run(den, cfg, src, batch, seed)?,
+        SamplerKind::D3pm => baselines::d3pm(den, cfg, src, batch, seed)?,
+        SamplerKind::Rdm => baselines::rdm(den, cfg, src, batch, seed, false)?,
+        SamplerKind::RdmTopK => baselines::rdm(den, cfg, src, batch, seed, true)?,
+        SamplerKind::MaskPredict => baselines::mask_predict(den, cfg, src, batch, seed)?,
+        SamplerKind::Ddim => ddim::run(den, cfg, src, batch, seed, 1.0)?,
+        SamplerKind::Ardm => ardm::run(den, cfg, src, batch, seed, 1)?,
+    };
+    if let Some(c) = counter {
+        for _ in 0..result.nfe {
+            c.record_call(batch);
+        }
+        c.record_batch();
+    }
+    Ok(result)
+}

@@ -1,0 +1,180 @@
+//! α(t) noise schedules (Appendix C of the paper).
+//!
+//! All schedules are expressed as a continuous, scale-invariant α(t) over
+//! t ∈ [0, 1] (footnote 1: α_t(T) = g(t/T) with α_{ct}(cT) = α_t(T)), which
+//! serves both the discrete grid (α_k = α(k/T)) and DNDM-C's continuous
+//! sampling. Mirrors `python/compile/trainer.py::alpha_of`.
+
+/// Continuous α schedule; decreasing from α(0)=1 to α(1)=0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AlphaSchedule {
+    /// α(t) = 1 − t (Austin et al. 2021). Uniform 𝒟_τ.
+    Linear,
+    /// α(t) = cos(πt/2) (Hoogeboom et al. 2021b). τ mass shifts late.
+    Cosine,
+    /// α(t) = cos²(πt/2) (Zheng et al. 2023 / Nichol & Dhariwal). τ mass
+    /// concentrates mid-range.
+    CosineSq,
+    /// Cosine with the numerical offset s: α(t) = f(t)/f(0),
+    /// f(t) = cos(((s + t)/(1 + s))·π/2).
+    CosineOffset { s: f64 },
+}
+
+impl AlphaSchedule {
+    /// α(t) for t ∈ [0, 1].
+    pub fn alpha(&self, t: f64) -> f64 {
+        let t = t.clamp(0.0, 1.0);
+        match self {
+            AlphaSchedule::Linear => 1.0 - t,
+            AlphaSchedule::Cosine => (std::f64::consts::FRAC_PI_2 * t).cos(),
+            AlphaSchedule::CosineSq => {
+                let c = (std::f64::consts::FRAC_PI_2 * t).cos();
+                c * c
+            }
+            AlphaSchedule::CosineOffset { s } => {
+                let f = |x: f64| (((s + x) / (1.0 + s)) * std::f64::consts::FRAC_PI_2).cos();
+                f(t) / f(0.0)
+            }
+        }
+    }
+
+    /// Discrete α_k on a T-step grid; α_0 = 1, α_T = 0 exactly.
+    pub fn alpha_discrete(&self, k: usize, t_max: usize) -> f64 {
+        if k == 0 {
+            return 1.0;
+        }
+        if k >= t_max {
+            return 0.0;
+        }
+        self.alpha(k as f64 / t_max as f64)
+    }
+
+    /// β_k = α_k / α_{k−1} — the per-step keep probability of eq. (1)/(6).
+    pub fn beta_discrete(&self, k: usize, t_max: usize) -> f64 {
+        let prev = self.alpha_discrete(k - 1, t_max);
+        if prev <= 0.0 {
+            return 0.0;
+        }
+        (self.alpha_discrete(k, t_max) / prev).clamp(0.0, 1.0)
+    }
+
+    /// −α′(t), the continuous transition-time density of §3.3 (numerical).
+    pub fn neg_alpha_prime(&self, t: f64) -> f64 {
+        let h = 1e-6;
+        let lo = (t - h).max(0.0);
+        let hi = (t + h).min(1.0);
+        ((self.alpha(lo) - self.alpha(hi)) / (hi - lo)).max(0.0)
+    }
+
+    /// ℙ(τ = k) = α_{k−1} − α_k for k = 1..=T (Theorem 3.6).
+    pub fn tau_pmf(&self, t_max: usize) -> Vec<f64> {
+        (1..=t_max)
+            .map(|k| self.alpha_discrete(k - 1, t_max) - self.alpha_discrete(k, t_max))
+            .collect()
+    }
+
+    pub fn parse(name: &str) -> Option<AlphaSchedule> {
+        match name {
+            "linear" => Some(AlphaSchedule::Linear),
+            "cosine" => Some(AlphaSchedule::Cosine),
+            "cosine_sq" => Some(AlphaSchedule::CosineSq),
+            _ => name
+                .strip_prefix("cosine_offset:")
+                .and_then(|s| s.parse().ok())
+                .map(|s| AlphaSchedule::CosineOffset { s }),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AlphaSchedule::Linear => "linear".into(),
+            AlphaSchedule::Cosine => "cosine".into(),
+            AlphaSchedule::CosineSq => "cosine_sq".into(),
+            AlphaSchedule::CosineOffset { s } => format!("cosine_offset:{s}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [AlphaSchedule; 4] = [
+        AlphaSchedule::Linear,
+        AlphaSchedule::Cosine,
+        AlphaSchedule::CosineSq,
+        AlphaSchedule::CosineOffset { s: 0.008 },
+    ];
+
+    #[test]
+    fn boundaries_and_monotonicity() {
+        for s in ALL {
+            assert!((s.alpha(0.0) - 1.0).abs() < 1e-12, "{s:?}");
+            assert!(s.alpha(1.0).abs() < 0.05, "{s:?} α(1)={}", s.alpha(1.0));
+            let mut prev = 1.0;
+            for i in 1..=100 {
+                let a = s.alpha(i as f64 / 100.0);
+                assert!(a <= prev + 1e-12, "{s:?} not decreasing at {i}");
+                prev = a;
+            }
+        }
+    }
+
+    #[test]
+    fn tau_pmf_sums_to_one_and_nonnegative() {
+        // Theorem 3.6 validity: Σ ℙ(τ=t) = α_0 − α_T = 1
+        for s in ALL {
+            for t_max in [1, 2, 10, 50, 1000] {
+                let pmf = s.tau_pmf(t_max);
+                assert_eq!(pmf.len(), t_max);
+                assert!(pmf.iter().all(|&p| p >= -1e-12), "{s:?}");
+                let sum: f64 = pmf.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "{s:?} T={t_max} sum={sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_gives_uniform_tau() {
+        let pmf = AlphaSchedule::Linear.tau_pmf(50);
+        for p in pmf {
+            assert!((p - 0.02).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn beta_discrete_reconstructs_alpha() {
+        // α_k = Π β_s (definition under Theorem 3.1)
+        for s in ALL {
+            let t_max = 50;
+            let mut prod = 1.0;
+            for k in 1..=t_max {
+                prod *= s.beta_discrete(k, t_max);
+                assert!(
+                    (prod - s.alpha_discrete(k, t_max)).abs() < 1e-9,
+                    "{s:?} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn neg_alpha_prime_matches_pmf_shape() {
+        // ℙ(τ=t) ≈ (1/T)·|g′(t/T)| (§3.2). Check against the T=1000 pmf.
+        let s = AlphaSchedule::CosineSq;
+        let t_max = 1000;
+        let pmf = s.tau_pmf(t_max);
+        for &k in &[100usize, 500, 900] {
+            let approx = s.neg_alpha_prime(k as f64 / t_max as f64) / t_max as f64;
+            assert!((pmf[k - 1] - approx).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ALL {
+            assert_eq!(AlphaSchedule::parse(&s.name()), Some(s));
+        }
+        assert_eq!(AlphaSchedule::parse("nope"), None);
+    }
+}

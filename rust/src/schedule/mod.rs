@@ -1,0 +1,10 @@
+//! Schedules: α(t) noise schedules, the transition-time distribution 𝒟_τ,
+//! and the deterministic RNG shared with the python build layer.
+
+pub mod alpha;
+pub mod rng;
+pub mod transition;
+
+pub use alpha::AlphaSchedule;
+pub use rng::SplitMix64;
+pub use transition::{TransitionOrder, TransitionSpec, TransitionTimes};

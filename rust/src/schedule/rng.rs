@@ -1,0 +1,231 @@
+//! splitmix64 PRNG + the sampling distributions the samplers need.
+//!
+//! Mirrors `python/compile/common.py::Rng` bit-for-bit (pinned by the
+//! fixtures test in `rust/tests/parity.rs`): the synthetic corpora are
+//! generated from the same streams on both sides of the build.
+
+/// splitmix64 — 64-bit state, passes BigCrush, two lines of code.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// f64 in [0, 1): top 53 bits / 2^53 (identical to python).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// integer in [0, n) — modulo, same (negligible, identical) bias as python.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Derive an independent child stream (same rule as python's fork()).
+    pub fn fork(&mut self, stream: u64) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ 0xA076_1D64_78BD_642Fu64.wrapping_mul(stream + 1))
+    }
+
+    // -- distributions used by the samplers (rust-only; no parity needed) --
+
+    /// Gumbel(0,1): −ln(−ln U) with U clamped away from {0,1}.
+    #[inline]
+    pub fn gumbel(&mut self) -> f64 {
+        let u = self.uniform().max(1e-300);
+        -(-(u.ln())).ln()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-300);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (with the α<1 boost).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            let u = self.uniform().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.uniform().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v3 + d * v3.ln() {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Beta(a, b) via two gammas.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a);
+        let y = self.gamma(b);
+        x / (x + y)
+    }
+
+    /// Draw an index from an unnormalized weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "categorical with zero mass");
+        let mut r = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_reference_sequence() {
+        // same numbers as python/tests/test_data.py::test_rng_reference_values
+        let mut r = SplitMix64::new(42);
+        assert_eq!(r.next_u64(), 13679457532755275413);
+        assert_eq!(r.next_u64(), 2949826092126892291);
+        assert_eq!(r.next_u64(), 5139283748462763858);
+        assert_eq!(r.next_u64(), 6349198060258255764);
+    }
+
+    #[test]
+    fn uniform_matches_python_and_stays_in_range() {
+        let mut r = SplitMix64::new(7);
+        let u = r.uniform();
+        assert!((u - 0.389829748391).abs() < 1e-12);
+        let mut r = SplitMix64::new(123);
+        let us: Vec<f64> = (0..10_000).map(|_| r.uniform()).collect();
+        assert!(us.iter().all(|&u| (0.0..1.0).contains(&u)));
+        let mean = us.iter().sum::<f64>() / us.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(1);
+        let mut fa = a.fork(1);
+        let mut fb = b.fork(2);
+        assert_ne!(fa.next_u64(), fb.next_u64());
+    }
+
+    #[test]
+    fn gumbel_max_trick_matches_softmax() {
+        // argmax(logit + G) frequencies ≈ softmax(logits)
+        let logits = [0.0f64, (2.0f64).ln(), (3.0f64).ln()];
+        let mut r = SplitMix64::new(99);
+        let mut counts = [0usize; 3];
+        let trials = 60_000;
+        for _ in 0..trials {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = 0;
+            for (i, &l) in logits.iter().enumerate() {
+                let v = l + r.gumbel();
+                if v > best {
+                    best = v;
+                    arg = i;
+                }
+            }
+            counts[arg] += 1;
+        }
+        let exp = [1.0 / 6.0, 2.0 / 6.0, 3.0 / 6.0];
+        for i in 0..3 {
+            let f = counts[i] as f64 / trials as f64;
+            assert!((f - exp[i]).abs() < 0.01, "cat {i}: {f} vs {}", exp[i]);
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let (a, b) = (15.0, 7.0);
+        let mut r = SplitMix64::new(5);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.beta(a, b)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let em = a / (a + b);
+        let ev = a * b / ((a + b) * (a + b) * (a + b + 1.0));
+        assert!((mean - em).abs() < 0.01, "mean {mean} vs {em}");
+        assert!((var - ev).abs() < 0.005, "var {var} vs {ev}");
+        assert!(xs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn gamma_small_shape_is_finite_positive() {
+        let mut r = SplitMix64::new(11);
+        for _ in 0..2_000 {
+            let g = r.gamma(0.3);
+            assert!(g.is_finite() && g >= 0.0);
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = SplitMix64::new(3);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let f0 = counts[0] as f64 / 40_000.0;
+        assert!((f0 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(8);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,437 @@
+//! The predetermined transition-time set 𝒯 — the paper's core object.
+//!
+//! Definition 3.2: τ_n = min{t : b_t = 0} is the (single) step at which
+//! token n flips from data to noise in the non-Markov forward process (6);
+//! in reverse, the only step at which it flips back (eq. 9). Theorem 3.6
+//! gives the exact law ℙ(τ = t) = α_{t−1} − α_t; §3.2/Appendix C show a
+//! reshaped Beta(a, b) approximation works as well or better in practice.
+//!
+//! Sampling 𝒯 = {τ_n} *before* the reverse loop de-randomizes it: the
+//! denoiser only runs at t ∈ 𝒯, so NFE = |𝒯| ≤ min(N, T) (Theorem D.1).
+
+use super::alpha::AlphaSchedule;
+use super::rng::SplitMix64;
+
+/// Positional assignment of sampled transition times (Table 6 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransitionOrder {
+    /// i.i.d. per position — the paper's default.
+    Random,
+    /// Left tokens transition (= are decoded) earliest in the reverse pass.
+    LeftToRight,
+    /// Right tokens decoded earliest.
+    RightToLeft,
+}
+
+/// How 𝒟_τ is sampled.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TransitionSpec {
+    /// Exact law from the α schedule: ℙ(τ=t) = α_{t−1} − α_t (Thm 3.6).
+    Exact(AlphaSchedule),
+    /// Reshaped Beta(a, b): draw u ~ Beta, τ = clamp(round(u·T), 1, T).
+    Beta { a: f64, b: f64 },
+}
+
+impl TransitionSpec {
+    /// ℙ(τ = k), k = 1..=T.
+    pub fn pmf(&self, t_max: usize) -> Vec<f64> {
+        match self {
+            TransitionSpec::Exact(s) => s.tau_pmf(t_max),
+            TransitionSpec::Beta { a, b } => {
+                // Monte-Carlo–free: integrate the Beta density over the
+                // rounding cells [ (k−½)/T, (k+½)/T ).
+                let mut pmf = vec![0.0; t_max];
+                let steps = 64;
+                for k in 1..=t_max {
+                    let lo = ((k as f64 - 0.5) / t_max as f64).max(0.0);
+                    let hi = ((k as f64 + 0.5) / t_max as f64).min(1.0);
+                    let mut acc = 0.0;
+                    for i in 0..steps {
+                        let x = lo + (hi - lo) * (i as f64 + 0.5) / steps as f64;
+                        acc += beta_pdf(x, *a, *b);
+                    }
+                    pmf[k - 1] = acc * (hi - lo) / steps as f64;
+                }
+                // cell k=1 also absorbs the [0, 1/(2T)) tail (clamp), k=T the top
+                let mut acc = 0.0;
+                for i in 0..steps {
+                    let x = (0.5 / t_max as f64) * (i as f64 + 0.5) / steps as f64;
+                    acc += beta_pdf(x, *a, *b);
+                }
+                pmf[0] += acc * (0.5 / t_max as f64) / steps as f64;
+                let sum: f64 = pmf.iter().sum();
+                for p in pmf.iter_mut() {
+                    *p /= sum;
+                }
+                pmf
+            }
+        }
+    }
+
+    /// Draw one τ ∈ 1..=T.
+    pub fn sample_discrete(&self, t_max: usize, rng: &mut SplitMix64) -> usize {
+        match self {
+            TransitionSpec::Exact(s) => {
+                // inverse-CDF on the closed form: ℙ(τ ≤ k) = 1 − α_k
+                let u = rng.uniform();
+                // find smallest k with 1 − α_k ≥ u  ⇔  α_k ≤ 1 − u
+                let target = 1.0 - u;
+                let (mut lo, mut hi) = (1usize, t_max);
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    if s.alpha_discrete(mid, t_max) <= target {
+                        hi = mid;
+                    } else {
+                        lo = mid + 1;
+                    }
+                }
+                lo
+            }
+            TransitionSpec::Beta { a, b } => {
+                let u = rng.beta(*a, *b);
+                ((u * t_max as f64).round() as usize).clamp(1, t_max)
+            }
+        }
+    }
+
+    /// Draw one continuous τ ∈ (0, 1] (DNDM-C, §3.3: density −α′(t)).
+    pub fn sample_continuous(&self, rng: &mut SplitMix64) -> f64 {
+        match self {
+            TransitionSpec::Exact(s) => {
+                // τ = α⁻¹(1 − u): bisection on the monotone α(t)
+                let u = rng.uniform();
+                let target = 1.0 - u;
+                let (mut lo, mut hi) = (0.0f64, 1.0f64);
+                for _ in 0..60 {
+                    let mid = 0.5 * (lo + hi);
+                    if s.alpha(mid) <= target {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                    }
+                }
+                0.5 * (lo + hi)
+            }
+            TransitionSpec::Beta { a, b } => rng.beta(*a, *b).clamp(1e-9, 1.0),
+        }
+    }
+
+    /// Sample the full set 𝒯 for an N-token sequence (discrete grid).
+    pub fn sample_times(
+        &self,
+        t_max: usize,
+        n_tokens: usize,
+        order: TransitionOrder,
+        rng: &mut SplitMix64,
+    ) -> TransitionTimes {
+        let mut taus: Vec<usize> = (0..n_tokens)
+            .map(|_| self.sample_discrete(t_max, rng))
+            .collect();
+        apply_order(&mut taus, order);
+        TransitionTimes::new(taus, t_max)
+    }
+
+    /// Sample continuous 𝒯 (DNDM-C). Returned per-position.
+    pub fn sample_times_continuous(
+        &self,
+        n_tokens: usize,
+        order: TransitionOrder,
+        rng: &mut SplitMix64,
+    ) -> Vec<f64> {
+        let mut taus: Vec<f64> = (0..n_tokens)
+            .map(|_| self.sample_continuous(rng))
+            .collect();
+        match order {
+            TransitionOrder::Random => {}
+            TransitionOrder::LeftToRight => {
+                taus.sort_by(|x, y| y.partial_cmp(x).unwrap());
+            }
+            TransitionOrder::RightToLeft => {
+                taus.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            }
+        }
+        taus
+    }
+
+    /// E[|𝒯|] = Σ_i [1 − (1 − p_i)^N] (Theorem D.1).
+    pub fn expected_nfe(&self, t_max: usize, n_tokens: usize) -> f64 {
+        self.pmf(t_max)
+            .iter()
+            .map(|&p| 1.0 - (1.0 - p).powi(n_tokens as i32))
+            .sum()
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            TransitionSpec::Exact(s) => format!("exact:{}", s.name()),
+            TransitionSpec::Beta { a, b } => format!("beta:{a}:{b}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TransitionSpec> {
+        if let Some(rest) = s.strip_prefix("exact:") {
+            return AlphaSchedule::parse(rest).map(TransitionSpec::Exact);
+        }
+        if let Some(rest) = s.strip_prefix("beta:") {
+            let mut it = rest.split(':');
+            let a = it.next()?.parse().ok()?;
+            let b = it.next()?.parse().ok()?;
+            return Some(TransitionSpec::Beta { a, b });
+        }
+        None
+    }
+}
+
+fn apply_order(taus: &mut [usize], order: TransitionOrder) {
+    match order {
+        TransitionOrder::Random => {}
+        // reverse-time generation: a *larger* τ is decoded *earlier*,
+        // so left-to-right decode order = descending τ by position.
+        TransitionOrder::LeftToRight => taus.sort_by(|a, b| b.cmp(a)),
+        TransitionOrder::RightToLeft => taus.sort(),
+    }
+}
+
+fn beta_pdf(x: f64, a: f64, b: f64) -> f64 {
+    if x <= 0.0 || x >= 1.0 {
+        return 0.0;
+    }
+    ((a - 1.0) * x.ln() + (b - 1.0) * (1.0 - x).ln() - ln_beta(a, b)).exp()
+}
+
+fn ln_beta(a: f64, b: f64) -> f64 {
+    ln_gamma(a) + ln_gamma(b) - ln_gamma(a + b)
+}
+
+/// Lanczos ln Γ.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// The sampled set 𝒯 with the event structure the samplers iterate over.
+#[derive(Debug, Clone)]
+pub struct TransitionTimes {
+    /// τ_n per position, values in 1..=T.
+    pub taus: Vec<usize>,
+    pub t_max: usize,
+    /// distinct transition times, descending — the reverse-loop event list.
+    events: Vec<usize>,
+}
+
+impl TransitionTimes {
+    pub fn new(taus: Vec<usize>, t_max: usize) -> Self {
+        let mut events: Vec<usize> = taus.clone();
+        events.sort_unstable_by(|a, b| b.cmp(a));
+        events.dedup();
+        Self { taus, t_max, events }
+    }
+
+    /// |𝒯| — exactly the number of function evaluations Algorithm 1 makes.
+    pub fn nfe(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Distinct transition times, descending (reverse-time order).
+    pub fn events(&self) -> &[usize] {
+        &self.events
+    }
+
+    pub fn is_event(&self, t: usize) -> bool {
+        self.events.binary_search_by(|e| t.cmp(e)).is_ok()
+    }
+
+    /// Positions with τ_n == t (they flip to x̂0 at step t; eq. 9).
+    pub fn moves_at(&self, t: usize) -> Vec<usize> {
+        (0..self.taus.len()).filter(|&n| self.taus[n] == t).collect()
+    }
+
+    /// Positions with τ_n ≥ t (Algorithm 3's re-update set).
+    pub fn moved_by(&self, t: usize) -> Vec<usize> {
+        (0..self.taus.len()).filter(|&n| self.taus[n] >= t).collect()
+    }
+
+    /// K_t = Σ_n 1(τ_n ≥ t) — the top-k count sequence of Algorithm 4.
+    pub fn k_t(&self, t: usize) -> usize {
+        self.taus.iter().filter(|&&tau| tau >= t).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> SplitMix64 {
+        SplitMix64::new(0xD17F)
+    }
+
+    #[test]
+    fn exact_sampler_matches_pmf() {
+        // Theorem 3.6: empirical τ frequencies ≈ α_{t−1} − α_t
+        for sched in [AlphaSchedule::Linear, AlphaSchedule::CosineSq] {
+            let spec = TransitionSpec::Exact(sched);
+            let t_max = 10;
+            let pmf = spec.pmf(t_max);
+            let mut counts = vec![0usize; t_max];
+            let mut r = rng();
+            let trials = 60_000;
+            for _ in 0..trials {
+                counts[spec.sample_discrete(t_max, &mut r) - 1] += 1;
+            }
+            for k in 0..t_max {
+                let f = counts[k] as f64 / trials as f64;
+                assert!((f - pmf[k]).abs() < 0.012, "{sched:?} k={} {f} vs {}", k + 1, pmf[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_sampler_in_range_and_shaped() {
+        let spec = TransitionSpec::Beta { a: 15.0, b: 7.0 };
+        let mut r = rng();
+        let t_max = 50;
+        let mut counts = vec![0usize; t_max];
+        for _ in 0..20_000 {
+            let k = spec.sample_discrete(t_max, &mut r);
+            assert!((1..=t_max).contains(&k));
+            counts[k - 1] += 1;
+        }
+        // mode should be near T·a/(a+b) ≈ 34
+        let mode = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0 + 1;
+        assert!((28..=40).contains(&mode), "mode {mode}");
+    }
+
+    #[test]
+    fn beta_pmf_normalizes_and_matches_sampler() {
+        let spec = TransitionSpec::Beta { a: 3.0, b: 3.0 };
+        let t_max = 25;
+        let pmf = spec.pmf(t_max);
+        assert!((pmf.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let mut r = rng();
+        let mut counts = vec![0usize; t_max];
+        let trials = 60_000;
+        for _ in 0..trials {
+            counts[spec.sample_discrete(t_max, &mut r) - 1] += 1;
+        }
+        for k in 0..t_max {
+            let f = counts[k] as f64 / trials as f64;
+            assert!((f - pmf[k]).abs() < 0.012, "k={} {f} vs {}", k + 1, pmf[k]);
+        }
+    }
+
+    #[test]
+    fn continuous_sampler_matches_alpha_cdf() {
+        let spec = TransitionSpec::Exact(AlphaSchedule::CosineSq);
+        let mut r = rng();
+        let n = 40_000;
+        let mut below_half = 0;
+        for _ in 0..n {
+            let tau = spec.sample_continuous(&mut r);
+            assert!((0.0..=1.0).contains(&tau));
+            if tau <= 0.5 {
+                below_half += 1;
+            }
+        }
+        // ℙ(τ ≤ 0.5) = 1 − α(0.5) = 1 − cos²(π/4) = 0.5
+        let f = below_half as f64 / n as f64;
+        assert!((f - 0.5).abs() < 0.01, "{f}");
+    }
+
+    #[test]
+    fn expected_nfe_bounds_thm_d1() {
+        let spec = TransitionSpec::Exact(AlphaSchedule::Linear);
+        for (t_max, n) in [(25usize, 16usize), (50, 16), (1000, 16), (16, 16)] {
+            let e = spec.expected_nfe(t_max, n);
+            assert!(e >= 1.0 && e <= t_max.min(n) as f64 + 1e-9, "T={t_max} N={n} E={e}");
+        }
+        // uniform case closed form: E = T·[1 − (1−1/T)^N]
+        let e = spec.expected_nfe(50, 16);
+        let closed = 50.0 * (1.0 - (1.0 - 0.02f64).powi(16));
+        assert!((e - closed).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empirical_nfe_matches_expectation() {
+        let spec = TransitionSpec::Exact(AlphaSchedule::Linear);
+        let (t_max, n) = (50, 16);
+        let mut r = rng();
+        let mut total = 0usize;
+        let reps = 4000;
+        for _ in 0..reps {
+            total += spec
+                .sample_times(t_max, n, TransitionOrder::Random, &mut r)
+                .nfe();
+        }
+        let emp = total as f64 / reps as f64;
+        let exp = spec.expected_nfe(t_max, n);
+        assert!((emp - exp).abs() < 0.15, "{emp} vs {exp}");
+    }
+
+    #[test]
+    fn order_assignment() {
+        let spec = TransitionSpec::Exact(AlphaSchedule::Linear);
+        let mut r = rng();
+        let tt = spec.sample_times(100, 10, TransitionOrder::LeftToRight, &mut r);
+        for w in tt.taus.windows(2) {
+            assert!(w[0] >= w[1], "L2R must decode left first (descending τ)");
+        }
+        let tt = spec.sample_times(100, 10, TransitionOrder::RightToLeft, &mut r);
+        for w in tt.taus.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn event_structure() {
+        let tt = TransitionTimes::new(vec![5, 3, 5, 9, 1], 10);
+        assert_eq!(tt.nfe(), 4);
+        assert_eq!(tt.events(), &[9, 5, 3, 1]);
+        assert!(tt.is_event(5) && !tt.is_event(4));
+        assert_eq!(tt.moves_at(5), vec![0, 2]);
+        assert_eq!(tt.moved_by(5), vec![0, 2, 3]);
+        assert_eq!(tt.k_t(5), 3);
+        assert_eq!(tt.k_t(1), 5);
+        assert_eq!(tt.k_t(10), 0);
+    }
+
+    #[test]
+    fn nfe_capped_by_min_n_t() {
+        let spec = TransitionSpec::Beta { a: 5.0, b: 3.0 };
+        let mut r = rng();
+        for (t_max, n) in [(8usize, 32usize), (1000, 4)] {
+            for _ in 0..200 {
+                let tt = spec.sample_times(t_max, n, TransitionOrder::Random, &mut r);
+                assert!(tt.nfe() >= 1 && tt.nfe() <= t_max.min(n));
+            }
+        }
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - (24.0f64).ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,218 @@
+//! BPE-lite: learned byte-pair merges (Sennrich et al. 2016), the shared
+//! sub-word vocabulary mechanism the paper's fairseq pipeline uses.
+//!
+//! The synthetic translation tasks are word-level, so the serving path
+//! does not need BPE — but a real deployment of this stack would, and the
+//! `quickstart`-level API is the same: `Bpe::train` on a corpus, then
+//! `encode`/`decode` around the diffusion vocabulary. Tested standalone.
+
+use std::collections::HashMap;
+
+/// A learned BPE model: ordered merge rules over character symbols.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// merge rules in priority order: (left, right) → joined
+    merges: Vec<(String, String)>,
+    rank: HashMap<(String, String), usize>,
+}
+
+impl Bpe {
+    /// Learn `n_merges` merges from whitespace-tokenized text. Words are
+    /// terminated with the `</w>` marker so merges never cross words.
+    pub fn train(corpus: &str, n_merges: usize) -> Bpe {
+        // word → frequency
+        let mut word_freq: HashMap<Vec<String>, usize> = HashMap::new();
+        for w in corpus.split_whitespace() {
+            let mut symbols: Vec<String> = w.chars().map(|c| c.to_string()).collect();
+            symbols.push("</w>".to_string());
+            *word_freq.entry(symbols).or_insert(0) += 1;
+        }
+
+        let mut merges = Vec::with_capacity(n_merges);
+        for _ in 0..n_merges {
+            // count symbol pairs
+            let mut pair_freq: HashMap<(String, String), usize> = HashMap::new();
+            for (word, &f) in &word_freq {
+                for pair in word.windows(2) {
+                    *pair_freq
+                        .entry((pair[0].clone(), pair[1].clone()))
+                        .or_insert(0) += f;
+                }
+            }
+            // best pair (ties broken lexicographically for determinism)
+            let Some((best, freq)) = pair_freq
+                .into_iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)))
+            else {
+                break;
+            };
+            if freq < 2 {
+                break; // nothing left worth merging
+            }
+            // apply the merge to every word
+            let joined = format!("{}{}", best.0, best.1);
+            let mut next: HashMap<Vec<String>, usize> = HashMap::new();
+            for (word, f) in word_freq {
+                let mut out = Vec::with_capacity(word.len());
+                let mut i = 0;
+                while i < word.len() {
+                    if i + 1 < word.len() && word[i] == best.0 && word[i + 1] == best.1 {
+                        out.push(joined.clone());
+                        i += 2;
+                    } else {
+                        out.push(word[i].clone());
+                        i += 1;
+                    }
+                }
+                *next.entry(out).or_insert(0) += f;
+            }
+            word_freq = next;
+            merges.push(best);
+        }
+
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.clone(), i))
+            .collect();
+        Bpe { merges, rank }
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode one word into sub-word symbols (greedy lowest-rank merging,
+    /// the standard BPE application order).
+    pub fn encode_word(&self, word: &str) -> Vec<String> {
+        let mut symbols: Vec<String> = word.chars().map(|c| c.to_string()).collect();
+        symbols.push("</w>".to_string());
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (rank, index)
+            for i in 0..symbols.len().saturating_sub(1) {
+                if let Some(&r) =
+                    self.rank.get(&(symbols[i].clone(), symbols[i + 1].clone()))
+                {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                Some((_, i)) => {
+                    let joined = format!("{}{}", symbols[i], symbols[i + 1]);
+                    symbols.splice(i..i + 2, [joined]);
+                }
+                None => break,
+            }
+        }
+        symbols
+    }
+
+    /// Encode whitespace-tokenized text.
+    pub fn encode(&self, text: &str) -> Vec<String> {
+        text.split_whitespace()
+            .flat_map(|w| self.encode_word(w))
+            .collect()
+    }
+
+    /// Invert encode: join symbols, split words at `</w>`.
+    pub fn decode(&self, symbols: &[String]) -> String {
+        let mut words = Vec::new();
+        let mut cur = String::new();
+        for s in symbols {
+            if let Some(stripped) = s.strip_suffix("</w>") {
+                cur.push_str(stripped);
+                words.push(std::mem::take(&mut cur));
+            } else {
+                cur.push_str(s);
+            }
+        }
+        if !cur.is_empty() {
+            words.push(cur);
+        }
+        words.join(" ")
+    }
+
+    /// The sub-word vocabulary implied by the merges over a corpus.
+    pub fn vocab_of(&self, corpus: &str) -> Vec<String> {
+        let mut set = std::collections::BTreeSet::new();
+        for sym in self.encode(corpus) {
+            set.insert(sym);
+        }
+        set.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_pairs, Dataset, Split};
+
+    fn corpus() -> String {
+        gen_pairs(Dataset::Iwslt14, Split::Train, 300)
+            .iter()
+            .map(|(s, t)| format!("{} {}", s.join(" "), t.join(" ")))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let c = corpus();
+        let bpe = Bpe::train(&c, 80);
+        for (src, tgt) in gen_pairs(Dataset::Iwslt14, Split::Test, 20) {
+            for text in [src.join(" "), tgt.join(" ")] {
+                let enc = bpe.encode(&text);
+                assert_eq!(bpe.decode(&enc), text);
+            }
+        }
+    }
+
+    #[test]
+    fn merges_compress_frequent_words() {
+        let c = corpus();
+        let bpe = Bpe::train(&c, 120);
+        // "the" is the most frequent word → should encode to 1-2 symbols
+        let enc = bpe.encode_word("the");
+        assert!(enc.len() <= 2, "{enc:?}");
+        // a rare unseen word stays mostly characters
+        let rare = bpe.encode_word("zzqx");
+        assert!(rare.len() >= 3, "{rare:?}");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let c = corpus();
+        let a = Bpe::train(&c, 50);
+        let b = Bpe::train(&c, 50);
+        assert_eq!(a.merges, b.merges);
+    }
+
+    #[test]
+    fn more_merges_never_lengthen_encodings() {
+        let c = corpus();
+        let small = Bpe::train(&c, 20);
+        let big = Bpe::train(&c, 200);
+        let text = "the quick fox crosses a river";
+        assert!(big.encode(text).len() <= small.encode(text).len());
+    }
+
+    #[test]
+    fn vocab_of_covers_corpus() {
+        let c = corpus();
+        let bpe = Bpe::train(&c, 60);
+        let vocab: std::collections::HashSet<String> =
+            bpe.vocab_of(&c).into_iter().collect();
+        for sym in bpe.encode(&c) {
+            assert!(vocab.contains(&sym));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_char() {
+        let bpe = Bpe::train("a b a b", 5);
+        assert_eq!(bpe.decode(&bpe.encode("a")), "a");
+        assert_eq!(bpe.encode(""), Vec::<String>::new());
+    }
+}

@@ -1,0 +1,7 @@
+//! Tokenization / vocabulary substrate (mirrors python/compile/common.py).
+
+pub mod bpe;
+pub mod vocab;
+
+pub use bpe::Bpe;
+pub use vocab::{Vocab, MASK, PAD, UNK};

@@ -1,0 +1,150 @@
+//! Vocabulary: token ↔ id mapping, padding-aware encode/decode.
+//!
+//! Mirrors `python/compile/common.py::Vocab` — same special tokens at the
+//! same ids (<pad>=0, <unk>=1, <mask>=2) so the trained checkpoints and
+//! rust-side data agree. Parity is pinned by `rust/tests/parity.rs`.
+
+use std::collections::HashMap;
+
+pub const PAD: &str = "<pad>";
+pub const UNK: &str = "<unk>";
+pub const MASK: &str = "<mask>";
+
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    tokens: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocab {
+    pub fn new(tokens: Vec<String>) -> Self {
+        let index = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Self { tokens, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn pad_id(&self) -> u32 {
+        self.index[PAD]
+    }
+
+    pub fn unk_id(&self) -> u32 {
+        self.index[UNK]
+    }
+
+    pub fn mask_id(&self) -> u32 {
+        self.index[MASK]
+    }
+
+    pub fn id(&self, token: &str) -> Option<u32> {
+        self.index.get(token).copied()
+    }
+
+    pub fn token(&self, id: u32) -> &str {
+        &self.tokens[id as usize]
+    }
+
+    pub fn tokens(&self) -> &[String] {
+        &self.tokens
+    }
+
+    /// Encode to a fixed length n: truncate then right-pad with <pad>.
+    pub fn encode(&self, words: &[&str], n: usize) -> Vec<u32> {
+        let unk = self.unk_id();
+        let mut ids: Vec<u32> = words
+            .iter()
+            .take(n)
+            .map(|w| self.id(w).unwrap_or(unk))
+            .collect();
+        ids.resize(n, self.pad_id());
+        ids
+    }
+
+    /// Encode a whitespace-separated string.
+    pub fn encode_str(&self, s: &str, n: usize) -> Vec<u32> {
+        let words: Vec<&str> = s.split_whitespace().collect();
+        self.encode(&words, n)
+    }
+
+    /// Decode, dropping <pad>.
+    pub fn decode(&self, ids: &[u32]) -> Vec<&str> {
+        ids.iter()
+            .map(|&i| self.token(i))
+            .filter(|t| *t != PAD)
+            .collect()
+    }
+
+    pub fn decode_str(&self, ids: &[u32]) -> String {
+        self.decode(ids).join(" ")
+    }
+
+    /// Decode chars (unconditional corpora) — tokens are single chars.
+    pub fn decode_chars(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.token(i))
+            .filter(|t| *t != PAD && *t != UNK && *t != MASK)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+
+    use crate::data::words;
+
+    #[test]
+    fn special_ids_are_fixed() {
+        let v = words::translation_vocab();
+        assert_eq!(v.pad_id(), 0);
+        assert_eq!(v.unk_id(), 1);
+        assert_eq!(v.mask_id(), 2);
+    }
+
+    #[test]
+    fn encode_pads_and_truncates() {
+        let v = words::translation_vocab();
+        let ids = v.encode(&["the", "quick", "fox"], 8);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(&ids[3..], &[0, 0, 0, 0, 0]);
+        let trunc = v.encode(&["the"; 20], 4);
+        assert_eq!(trunc.len(), 4);
+        assert!(trunc.iter().all(|&i| i == v.id("the").unwrap()));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = words::translation_vocab();
+        let ids = v.encode(&["every", "old", "river"], 6);
+        assert_eq!(v.decode(&ids), vec!["every", "old", "river"]);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = words::translation_vocab();
+        assert_eq!(v.encode(&["zzzz"], 1), vec![1]);
+    }
+
+    #[test]
+    fn no_duplicate_tokens() {
+        for v in [
+            words::translation_vocab(),
+            words::text8_vocab(),
+            words::enwik8_vocab(),
+        ] {
+            let mut seen = std::collections::HashSet::new();
+            for t in v.tokens() {
+                assert!(seen.insert(t.clone()), "dup token {t}");
+            }
+        }
+    }
+}

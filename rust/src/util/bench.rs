@@ -1,0 +1,176 @@
+//! Mini bench harness (criterion is unreachable offline): warmup +
+//! timed iterations, mean/median/stddev, and a table printer shared by
+//! the per-paper-table bench binaries.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} ± {:>8}  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Criterion-style: warm up, then run ≥`min_iters` or until `min_time`.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time: Duration, mut f: F) -> BenchResult {
+    // warmup
+    for _ in 0..2.min(min_iters) {
+        f();
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_iters || (start.elapsed() < min_time && times.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, times)
+}
+
+/// Fixed iteration count (for expensive end-to-end cells).
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    summarize(name, times)
+}
+
+fn summarize(name: &str, mut times: Vec<Duration>) -> BenchResult {
+    times.sort();
+    let n = times.len();
+    let mean_s = times.iter().map(Duration::as_secs_f64).sum::<f64>() / n as f64;
+    let var = times
+        .iter()
+        .map(|t| (t.as_secs_f64() - mean_s).powi(2))
+        .sum::<f64>()
+        / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: Duration::from_secs_f64(mean_s),
+        median: times[n / 2],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: times[0],
+    }
+}
+
+/// Simple aligned table printer for paper-table reproduction output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+
+    /// Also emit machine-readable TSV (appended to EXPERIMENTS data files).
+    pub fn to_tsv(&self) -> String {
+        let mut out = self.headers.join("\t");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let r = bench("noop", 10, Duration::from_millis(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.min <= r.median && r.median <= r.mean + r.stddev * 3);
+    }
+
+    #[test]
+    fn bench_n_exact() {
+        let r = bench_n("sleepless", 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let tsv = t.to_tsv();
+        assert_eq!(tsv, "a\tbb\n1\t2\n");
+        t.print();
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+    }
+}

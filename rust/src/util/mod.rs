@@ -1,0 +1,10 @@
+//! In-tree utilities replacing crates that are unreachable offline
+//! (serde_json → `json`, clap → `args`, criterion → `bench`,
+//! proptest → `prop`).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+
+pub use json::Json;

@@ -1,0 +1,117 @@
+//! Mini property-testing harness (proptest is unreachable offline).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure over `cases` randomized
+//! inputs drawn through a [`Gen`]; on failure it panics with the seed so
+//! the exact case replays with `check_seeded`. No shrinking — failing
+//! inputs here are small by construction.
+
+use crate::schedule::SplitMix64;
+
+/// Randomized input source handed to each property case.
+pub struct Gen {
+    pub rng: SplitMix64,
+    /// the per-case seed (printed on failure)
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec_u32(&mut self, len: usize, lo: u32, hi: u32) -> Vec<u32> {
+        (0..len)
+            .map(|_| lo + self.rng.below((hi - lo) as u64 + 1) as u32)
+            .collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the replay seed on the
+/// first failure (assert inside the closure).
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let mut meta = SplitMix64::new(0x5EED ^ name.len() as u64);
+    for case in 0..cases {
+        let seed = meta.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen { rng: SplitMix64::new(seed), seed };
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seeded<F: FnMut(&mut Gen)>(seed: u64, mut prop: F) {
+    let mut g = Gen { rng: SplitMix64::new(seed), seed };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 50, |g| {
+            n += 1;
+            let x = g.usize_in(1, 10);
+            assert!((1..=10).contains(&x));
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("fails", 10, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x > 1000, "x={x}");
+        });
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut a = Vec::new();
+        check_seeded(42, |g| a.push(g.usize_in(0, 1_000_000)));
+        let mut b = Vec::new();
+        check_seeded(42, |g| b.push(g.usize_in(0, 1_000_000)));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn generators_cover_ranges() {
+        check("ranges", 100, |g| {
+            let f = g.f64_in(-2.0, 3.0);
+            assert!((-2.0..=3.0).contains(&f));
+            let v = g.vec_u32(5, 10, 20);
+            assert_eq!(v.len(), 5);
+            assert!(v.iter().all(|&x| (10..=20).contains(&x)));
+            let _ = g.bool();
+            let p = *g.pick(&[1, 2, 3]);
+            assert!((1..=3).contains(&p));
+        });
+    }
+}

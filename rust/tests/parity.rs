@@ -1,0 +1,74 @@
+//! Cross-language parity: rust's data substrate must regenerate exactly
+//! what python/compile/common.py generated at build time
+//! (artifacts/fixtures.json). Self-skips when artifacts are absent.
+
+use dndm::data::{corpus, gen_pairs, words, Dataset, Split, UncondCorpus};
+use dndm::schedule::SplitMix64;
+use dndm::util::Json;
+
+fn fixtures() -> Option<Json> {
+    let root = std::env::var("DNDM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let path = std::path::Path::new(&root).join("fixtures.json");
+    match Json::parse_file(&path) {
+        Ok(j) => Some(j),
+        Err(_) => {
+            println!("SKIP parity: {path:?} missing (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn rng_stream_parity() {
+    let Some(fx) = fixtures() else { return };
+    let expect: Vec<f64> = fx
+        .get("rng")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let mut r = SplitMix64::new(42);
+    for (i, &e) in expect.iter().enumerate() {
+        let got = r.next_u64();
+        // json numbers are f64 — compare through the same lossy representation
+        assert_eq!(got as f64, e, "rng value {i}");
+    }
+}
+
+#[test]
+fn dataset_pairs_parity() {
+    let Some(fx) = fixtures() else { return };
+    let ds_fx = fx.get("datasets").unwrap();
+    for ds in Dataset::ALL {
+        let expect = ds_fx.get(ds.name()).and_then(Json::as_arr).unwrap();
+        let pairs = gen_pairs(ds, Split::Test, expect.len());
+        for (i, (e, (src, tgt))) in expect.iter().zip(&pairs).enumerate() {
+            let e_src = e.idx(0).and_then(Json::as_str).unwrap();
+            let e_tgt = e.idx(1).and_then(Json::as_str).unwrap();
+            assert_eq!(src.join(" "), e_src, "{} pair {i} src", ds.name());
+            assert_eq!(tgt.join(" "), e_tgt, "{} pair {i} tgt", ds.name());
+        }
+    }
+}
+
+#[test]
+fn text_stream_parity() {
+    let Some(fx) = fixtures() else { return };
+    let t8 = corpus::gen_text_stream(UncondCorpus::Text8, Split::Test, 64);
+    assert_eq!(t8, fx.str_field("text8_head").unwrap());
+    let e8 = corpus::gen_text_stream(UncondCorpus::Enwik8, Split::Test, 64);
+    assert_eq!(e8, fx.str_field("enwik8_head").unwrap());
+}
+
+#[test]
+fn vocab_size_parity() {
+    let Some(fx) = fixtures() else { return };
+    let vl = fx.get("vocab_len").unwrap();
+    assert_eq!(
+        words::translation_vocab().len(),
+        vl.num_field("translation").unwrap() as usize
+    );
+    assert_eq!(words::text8_vocab().len(), vl.num_field("text8").unwrap() as usize);
+    assert_eq!(words::enwik8_vocab().len(), vl.num_field("enwik8").unwrap() as usize);
+}

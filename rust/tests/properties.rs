@@ -1,0 +1,214 @@
+//! Property-based test suites (in-tree prop harness; proptest is
+//! unreachable offline). These encode the paper's theorems as invariants.
+
+use dndm::diffusion::{forward_marginal, forward_non_markov, NoiseKind};
+use dndm::metrics::bleu::{corpus_bleu, sentence_bleu};
+use dndm::runtime::MockDenoiser;
+use dndm::sampler::{generate, SamplerConfig, SamplerKind};
+use dndm::schedule::{AlphaSchedule, SplitMix64, TransitionOrder, TransitionSpec};
+use dndm::util::prop::check;
+
+const SCHEDULES: [AlphaSchedule; 3] =
+    [AlphaSchedule::Linear, AlphaSchedule::Cosine, AlphaSchedule::CosineSq];
+
+fn random_spec(g: &mut dndm::util::prop::Gen) -> TransitionSpec {
+    if g.bool() {
+        TransitionSpec::Exact(*g.pick(&SCHEDULES))
+    } else {
+        TransitionSpec::Beta { a: g.f64_in(1.0, 30.0), b: g.f64_in(1.0, 12.0) }
+    }
+}
+
+/// Theorem 3.6 corollary: every 𝒟_τ pmf is a valid distribution on 1..=T.
+#[test]
+fn prop_tau_pmf_is_distribution() {
+    check("tau_pmf_distribution", 60, |g| {
+        let spec = random_spec(g);
+        let t_max = g.usize_in(1, 400);
+        let pmf = spec.pmf(t_max);
+        assert_eq!(pmf.len(), t_max);
+        assert!(pmf.iter().all(|&p| (-1e-12..=1.0 + 1e-9).contains(&p)), "{spec:?}");
+        let sum: f64 = pmf.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "{spec:?} T={t_max} sum={sum}");
+    });
+}
+
+/// Theorem D.1: 1 ≤ |𝒯| ≤ min(N, T) for every sampled set, and
+/// E|𝒯| from the formula lies in the same bounds.
+#[test]
+fn prop_transition_set_cardinality_bounds() {
+    check("nfe_bounds", 80, |g| {
+        let spec = random_spec(g);
+        let t_max = g.usize_in(1, 300);
+        let n = g.usize_in(1, 64);
+        let order = *g.pick(&[
+            TransitionOrder::Random,
+            TransitionOrder::LeftToRight,
+            TransitionOrder::RightToLeft,
+        ]);
+        let tt = spec.sample_times(t_max, n, order, &mut g.rng);
+        assert!(tt.nfe() >= 1 && tt.nfe() <= t_max.min(n), "{:?}", tt.nfe());
+        assert!(tt.taus.iter().all(|&t| (1..=t_max).contains(&t)));
+        let e = spec.expected_nfe(t_max, n);
+        assert!(e >= 1.0 - 1e-9 && e <= t_max.min(n) as f64 + 1e-6, "E={e}");
+    });
+}
+
+/// The event list is exactly the descending distinct τ values, and
+/// moves_at partitions positions across events.
+#[test]
+fn prop_event_partition() {
+    check("event_partition", 60, |g| {
+        let spec = random_spec(g);
+        let t_max = g.usize_in(2, 100);
+        let n = g.usize_in(1, 32);
+        let tt = spec.sample_times(t_max, n, TransitionOrder::Random, &mut g.rng);
+        let mut seen = vec![false; n];
+        for &e in tt.events() {
+            for pos in tt.moves_at(e) {
+                assert!(!seen[pos], "position moved twice");
+                seen[pos] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every position moves exactly once");
+        // K_t is non-increasing in t
+        let mut prev = usize::MAX;
+        for t in (1..=t_max).rev() {
+            let k = tt.k_t(t);
+            assert!(k <= n);
+            let _ = prev;
+            prev = k;
+        }
+        assert_eq!(tt.k_t(1), n);
+    });
+}
+
+/// Theorem 3.1: the non-Markov forward marginal matches α(t) for random
+/// schedules, times, and noise kinds (statistical check).
+#[test]
+fn prop_non_markov_marginal() {
+    check("non_markov_marginal", 8, |g| {
+        let sched = *g.pick(&SCHEDULES);
+        let t_max = g.usize_in(5, 40);
+        let k = g.usize_in(1, t_max);
+        let noise = if g.bool() {
+            NoiseKind::Absorbing { mask_id: 0 }
+        } else {
+            NoiseKind::Multinomial { lo: 0, vocab: 50 }
+        };
+        let x0 = 777u32; // outside noise support
+        let trials = 6_000;
+        let kept = (0..trials)
+            .filter(|_| forward_non_markov(x0, sched, t_max, noise, &mut g.rng)[k] == x0)
+            .count();
+        let f = kept as f64 / trials as f64;
+        let a = sched.alpha_discrete(k, t_max);
+        assert!((f - a).abs() < 0.03, "{sched:?} k={k}/{t_max}: {f} vs {a}");
+    });
+}
+
+/// Marginal sampler and trajectory sampler agree in distribution.
+#[test]
+fn prop_marginal_equals_trajectory() {
+    check("marginal_vs_trajectory", 4, |g| {
+        let sched = *g.pick(&SCHEDULES);
+        let t_max = 20;
+        let k = g.usize_in(1, t_max);
+        let noise = NoiseKind::Absorbing { mask_id: 0 };
+        let trials = 8_000;
+        let via_marginal = (0..trials)
+            .filter(|_| forward_marginal(9, sched, k, t_max, noise, &mut g.rng) == 9)
+            .count() as f64;
+        let via_traj = (0..trials)
+            .filter(|_| forward_non_markov(9, sched, t_max, noise, &mut g.rng)[k] == 9)
+            .count() as f64;
+        assert!((via_marginal - via_traj).abs() / (trials as f64) < 0.03);
+    });
+}
+
+/// DNDM invariant: regardless of spec/steps/temperature, the sampler
+/// resolves every token (no mask left) and NFE ≤ min(N, T).
+#[test]
+fn prop_dndm_always_resolves() {
+    check("dndm_resolves", 25, |g| {
+        let n = g.usize_in(2, 12);
+        let vocab = g.usize_in(8, 40);
+        let kind = if g.bool() { "absorbing" } else { "multinomial" };
+        let target: Vec<u32> = (0..n).map(|i| (3 + i % (vocab - 3)) as u32).collect();
+        let cfg_m = MockDenoiser::test_config(vocab, n, 0, kind);
+        let den = MockDenoiser::fixed(cfg_m, target);
+        let steps = g.usize_in(1, 200);
+        let kind_s = *g.pick(&[SamplerKind::Dndm, SamplerKind::DndmV2, SamplerKind::DndmTopK]);
+        let mut cfg = SamplerConfig::new(kind_s, steps).with_spec(random_spec(g));
+        cfg.temperature = *g.pick(&[0.0f32, 0.5, 1.0]);
+        let batch = g.usize_in(1, 3);
+        let out = generate(&den, &cfg, None, batch, g.seed, None).unwrap();
+        assert!(out.nfe >= 1 && out.nfe <= steps.min(n));
+        if kind == "absorbing" {
+            for seq in &out.tokens {
+                assert!(seq.iter().all(|&t| t != 2), "mask survived: {seq:?}");
+            }
+        }
+    });
+}
+
+/// Baselines invariant: NFE always equals T (the cost DNDM removes).
+#[test]
+fn prop_baseline_nfe_is_t() {
+    check("baseline_nfe", 12, |g| {
+        let steps = g.usize_in(1, 40);
+        let kind_s = *g.pick(&[SamplerKind::D3pm, SamplerKind::Rdm, SamplerKind::RdmTopK]);
+        let cfg_m = MockDenoiser::test_config(15, 6, 0, "absorbing");
+        let den = MockDenoiser::fixed(cfg_m, vec![5, 6, 7, 8, 9, 10]);
+        let cfg = SamplerConfig::new(kind_s, steps);
+        let out = generate(&den, &cfg, None, 2, g.seed, None).unwrap();
+        assert_eq!(out.nfe, steps);
+        assert_eq!(dndm::runtime::Denoiser::calls(&den) as usize, steps);
+    });
+}
+
+/// BLEU properties: bounded to [0, 100]; identity scores 100; score is
+/// invariant to candidate order (corpus pooling).
+#[test]
+fn prop_bleu_bounds_and_identity() {
+    check("bleu_props", 40, |g| {
+        let vocab = ["a", "b", "c", "d", "e", "f", "g"];
+        let len = g.usize_in(4, 12);
+        let sent: Vec<&str> = (0..len).map(|_| *g.pick(&vocab)).collect();
+        let other: Vec<&str> = (0..len).map(|_| *g.pick(&vocab)).collect();
+
+        let perfect = corpus_bleu(&[sent.clone()], &[vec![sent.clone()]]);
+        assert!((perfect - 100.0).abs() < 1e-9);
+
+        let b = corpus_bleu(&[other.clone()], &[vec![sent.clone()]]);
+        assert!((0.0..=100.0 + 1e-9).contains(&b));
+
+        let sb = sentence_bleu(&other, &[sent.clone()]);
+        assert!((0.0..=100.0 + 1e-9).contains(&sb));
+
+        // corpus order invariance
+        let two_a = corpus_bleu(
+            &[sent.clone(), other.clone()],
+            &[vec![sent.clone()], vec![sent.clone()]],
+        );
+        let two_b = corpus_bleu(
+            &[other.clone(), sent.clone()],
+            &[vec![sent.clone()], vec![sent.clone()]],
+        );
+        assert!((two_a - two_b).abs() < 1e-9);
+    });
+}
+
+/// splitmix64 streams: forked streams don't collide over a window.
+#[test]
+fn prop_rng_fork_no_short_cycle() {
+    check("rng_fork", 20, |g| {
+        let seed = g.rng.next_u64();
+        let mut root = SplitMix64::new(seed);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let va: Vec<u64> = (0..50).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..50).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    });
+}

@@ -1,0 +1,161 @@
+//! Integration tests across samplers + engine + server using the mock
+//! denoiser (no artifacts needed — the runtime-backed twin lives in
+//! runtime_e2e.rs and self-skips without artifacts).
+
+use std::time::Duration;
+
+use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::data::{gen_pairs, words, Dataset, Split};
+use dndm::exp;
+use dndm::metrics::NfeCounter;
+use dndm::runtime::MockDenoiser;
+use dndm::sampler::{generate, SamplerConfig, SamplerKind};
+use dndm::schedule::{AlphaSchedule, TransitionSpec};
+
+/// A mock that implements the iwslt cipher perfectly (src id + 41).
+fn cipher_engine(kind: &str) -> Engine {
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), 16, 16, kind);
+    let mut den = MockDenoiser::with_fn(cfg, |src, pos| {
+        let s = src.map(|s| s[pos]).unwrap_or(0);
+        if s >= 3 && (s as usize) < 3 + 41 {
+            s + 41
+        } else {
+            0
+        }
+    });
+    den.peak = 14.0; // sharp enough that temperature-1 draws stay correct
+    Engine::from_denoiser(Box::new(den), vocab, "cipher-mock")
+}
+
+#[test]
+fn all_samplers_agree_on_an_easy_task() {
+    // every algorithm must reach (near-)perfect BLEU with a perfect net —
+    // the quality differences in the paper come from imperfect nets, not
+    // from the algorithms themselves.
+    let kinds = [
+        (SamplerKind::Dndm, "absorbing"),
+        (SamplerKind::DndmV2, "absorbing"),
+        (SamplerKind::DndmTopK, "absorbing"),
+        (SamplerKind::DndmC, "absorbing"),
+        (SamplerKind::D3pm, "absorbing"),
+        (SamplerKind::Rdm, "absorbing"),
+        (SamplerKind::RdmTopK, "absorbing"),
+        (SamplerKind::MaskPredict, "absorbing"),
+        (SamplerKind::Dndm, "multinomial"),
+        (SamplerKind::Rdm, "multinomial"),
+    ];
+    for (sk, noise) in kinds {
+        let eng = cipher_engine(noise);
+        let cfg = SamplerConfig::new(sk, 25);
+        let cell = exp::eval_translation(&eng, Dataset::Iwslt14, &cfg, 8, 4, 1).unwrap();
+        assert!(
+            cell.quality > 95.0,
+            "{} on {noise}: BLEU {}",
+            sk.name(),
+            cell.quality
+        );
+    }
+}
+
+#[test]
+fn dndm_nfe_is_dramatically_lower_than_baselines() {
+    let steps = 200;
+    let eng = cipher_engine("absorbing");
+    let dndm_cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let base_cfg = SamplerConfig::new(SamplerKind::Rdm, steps);
+    let d = exp::eval_translation(&eng, Dataset::Iwslt14, &dndm_cfg, 8, 8, 2).unwrap();
+    let b = exp::eval_translation(&eng, Dataset::Iwslt14, &base_cfg, 8, 8, 2).unwrap();
+    assert!(d.avg_nfe <= 16.0, "DNDM NFE {}", d.avg_nfe);
+    assert_eq!(b.avg_nfe, steps as f64);
+    assert!(b.avg_nfe / d.avg_nfe >= 10.0, "speedup {}", b.avg_nfe / d.avg_nfe);
+}
+
+#[test]
+fn nfe_counter_accounting_through_generate() {
+    let eng = cipher_engine("absorbing");
+    let counter = NfeCounter::new();
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, 4);
+    let srcs: Vec<Vec<u32>> = pairs.iter().map(|(s, _)| {
+        let joined = s.join(" ");
+        eng.vocab().encode_str(&joined, 16)
+    }).collect();
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+    let out = generate(eng.denoiser(), &cfg, Some(&srcs), 4, 9, Some(&counter)).unwrap();
+    assert_eq!(counter.calls() as usize, out.nfe);
+    assert_eq!(counter.batches(), 1);
+    assert_eq!(counter.seq_evals() as usize, out.nfe * 4);
+}
+
+#[test]
+fn continuous_sampler_uses_exactly_n_calls() {
+    let eng = cipher_engine("multinomial");
+    let cfg = SamplerConfig::new(SamplerKind::DndmC, 0)
+        .with_spec(TransitionSpec::Exact(AlphaSchedule::CosineSq));
+    let cell = exp::eval_translation(&eng, Dataset::Iwslt14, &cfg, 4, 4, 3).unwrap();
+    assert_eq!(cell.avg_nfe, 16.0, "continuous NFE must equal N");
+    assert!(cell.quality > 95.0);
+}
+
+#[test]
+fn schedules_dont_change_convergence_with_perfect_net() {
+    for spec in [
+        TransitionSpec::Exact(AlphaSchedule::Linear),
+        TransitionSpec::Exact(AlphaSchedule::Cosine),
+        TransitionSpec::Exact(AlphaSchedule::CosineSq),
+        TransitionSpec::Beta { a: 15.0, b: 7.0 },
+        TransitionSpec::Beta { a: 3.0, b: 3.0 },
+    ] {
+        let eng = cipher_engine("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_spec(spec.clone());
+        let cell = exp::eval_translation(&eng, Dataset::Iwslt14, &cfg, 4, 4, 5).unwrap();
+        assert!(cell.quality > 95.0, "{spec:?}: {}", cell.quality);
+    }
+}
+
+#[test]
+fn server_end_to_end_with_mock_backend() {
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+    let policy = BatchPolicy { max_batch: 8, window: Duration::from_millis(15) };
+    let (srv, join) = Server::start(
+        || Ok(cipher_engine("absorbing")),
+        cfg,
+        policy,
+    );
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, 12);
+    let rxs: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .collect();
+    let mut correct = 0;
+    for (rx, (_, tgt)) in rxs.into_iter().zip(&pairs) {
+        let out = rx.recv().unwrap().unwrap();
+        if out.text == tgt.join(" ") {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 11, "{correct}/12 exact translations via server");
+    let stats = srv.stats().unwrap();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.mean_batch > 1.0, "batching happened: {}", stats.mean_batch);
+    srv.shutdown();
+    join.join();
+}
+
+#[test]
+fn uncond_mock_generation_scores_reasonably() {
+    // an uncond mock that emits a fixed real-text chunk should beat noise
+    use dndm::data::{corpus, UncondCorpus};
+    let vocab = UncondCorpus::Text8.vocab();
+    let chunk = corpus::gen_text_chunks(UncondCorpus::Text8, Split::Test, 1, 64)
+        .pop()
+        .unwrap();
+    let cfg = MockDenoiser::test_config(vocab.len(), 64, 0, "multinomial");
+    let target = chunk.clone();
+    let den = MockDenoiser::with_fn(cfg, move |_, pos| target[pos]);
+    let eng = Engine::from_denoiser(Box::new(den), vocab, "uncond-mock");
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 100);
+    let cell = exp::eval_unconditional(&eng, UncondCorpus::Text8, &cfg, 4, 4, 1).unwrap();
+    assert!(cell.quality < 15.0, "real-text ppl {}", cell.quality);
+}
