@@ -1,36 +1,75 @@
-//! Serving throughput bench (DESIGN.md ablation #1): NFE-aligned dynamic
-//! batching vs sequential per-request serving, on the real runtime.
-//! This is the L3 contribution's headline number — batching amortizes the
-//! shared transition set so throughput scales with batch size while
-//! per-request NFE stays |𝒯|.
+//! Serving throughput bench (DESIGN.md ablation #1): continuous
+//! NFE-aligned scheduling vs fixed-batch vs sequential serving.
+//!
+//! The fixed policy freezes FIFO batches and runs them to completion; the
+//! continuous scheduler admits requests into the in-flight batch at
+//! transition-time boundaries and retires sequences individually, so slots
+//! never idle while the queue is non-empty. Rows compare the two at equal
+//! latency windows; per-request NFE stays |𝒯| under both.
+//!
+//! Runs against the real PJRT runtime when artifacts exist, otherwise
+//! against the deterministic cipher mock (so the continuous-admission path
+//! is exercised on every machine).
 
 use std::time::{Duration, Instant};
 
-use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::coordinator::{BatchPolicy, Engine, SchedPolicy, Server};
 use dndm::data::{gen_pairs, Dataset, Split};
 use dndm::exp;
 use dndm::runtime::Artifacts;
 use dndm::sampler::{SamplerConfig, SamplerKind};
 use dndm::util::bench::Table;
 
-fn run(policy: BatchPolicy, n_requests: usize, steps: usize) -> (f64, f64, u64) {
-    let (srv, join) = Server::start(
-        move || {
-            let arts = Artifacts::load(
-                std::env::var("DNDM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-            )?;
-            let m = arts
-                .find("absorbing", "synth-iwslt14", false)
-                .ok_or_else(|| anyhow::anyhow!("no model"))?
-                .name
-                .clone();
-            let eng = Engine::new(&arts, &m)?;
-            eng.warmup(&[1, 4, 16])?;
-            Ok(eng)
-        },
-        SamplerConfig::new(SamplerKind::Dndm, steps),
-        policy,
-    );
+#[derive(Clone, Copy)]
+enum Mode {
+    Sequential,
+    Fixed(usize, u64),
+    Continuous(usize, u64),
+}
+
+fn factory(use_mock: bool) -> impl FnOnce() -> anyhow::Result<Engine> + Send + 'static {
+    move || {
+        if use_mock {
+            return Ok(dndm::coordinator::cipher_mock_engine(16));
+        }
+        let arts = Artifacts::load(
+            std::env::var("DNDM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        )?;
+        let m = arts
+            .find("absorbing", "synth-iwslt14", false)
+            .ok_or_else(|| anyhow::anyhow!("no model"))?
+            .name
+            .clone();
+        let eng = Engine::new(&arts, &m)?;
+        eng.warmup(&[1, 4, 16])?;
+        Ok(eng)
+    }
+}
+
+/// (req/s, e2e p95 ms, NN calls, avg per-request NFE)
+fn run(mode: Mode, n_requests: usize, steps: usize, use_mock: bool) -> (f64, f64, u64, f64) {
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let (srv, join) = match mode {
+        Mode::Sequential => Server::start(
+            factory(use_mock),
+            cfg,
+            BatchPolicy { max_batch: 1, window: Duration::ZERO },
+        ),
+        Mode::Fixed(max_batch, window_ms) => Server::start(
+            factory(use_mock),
+            cfg,
+            BatchPolicy { max_batch, window: Duration::from_millis(window_ms) },
+        ),
+        Mode::Continuous(max_batch, window_ms) => Server::start_continuous(
+            factory(use_mock),
+            cfg,
+            SchedPolicy {
+                max_batch,
+                window: Duration::from_millis(window_ms),
+                shared_tau_groups: true,
+            },
+        ),
+    };
     let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
     let t0 = Instant::now();
     let rxs: Vec<_> = pairs
@@ -45,30 +84,68 @@ fn run(policy: BatchPolicy, n_requests: usize, steps: usize) -> (f64, f64, u64) 
     let stats = srv.stats().unwrap();
     srv.shutdown();
     join.join();
-    (n_requests as f64 / wall, stats.e2e_p95.as_secs_f64() * 1e3, stats.nn_calls)
+    (
+        n_requests as f64 / wall,
+        stats.e2e_p95.as_secs_f64() * 1e3,
+        stats.nn_calls,
+        stats.avg_request_nfe,
+    )
+}
+
+/// Cheap engine-init probe: loads artifacts + weights but skips the
+/// expensive per-bucket warmup compilation the real factory does.
+fn probe_real_engine() -> anyhow::Result<()> {
+    let arts = Artifacts::load(
+        std::env::var("DNDM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )?;
+    let m = arts
+        .find("absorbing", "synth-iwslt14", false)
+        .ok_or_else(|| anyhow::anyhow!("no model"))?
+        .name
+        .clone();
+    Engine::new(&arts, &m)?;
+    Ok(())
 }
 
 fn main() {
-    if exp::artifacts_or_skip("serving_throughput").is_none() {
-        return;
+    let mut use_mock = exp::artifacts().is_err();
+    if use_mock {
+        println!("[serving_throughput] no artifacts — using the cipher mock backend");
+    } else if let Err(e) = probe_real_engine() {
+        // artifacts exist but the engine cannot start (e.g. the vendored
+        // xla stub instead of real PJRT bindings) — probe once up front so
+        // the bench degrades to the mock instead of failing every request
+        println!(
+            "[serving_throughput] artifacts present but engine init failed \
+             ({e:#}) — using the cipher mock backend"
+        );
+        use_mock = true;
     }
     let n = exp::bench_count() * 2;
     let steps = 50;
-    let mut out = Table::new(&["policy", "req/s", "e2e p95(ms)", "NN calls"]);
-    for (name, policy) in [
-        ("sequential (batch=1)", BatchPolicy { max_batch: 1, window: Duration::ZERO }),
-        ("batch=4 / 10ms", BatchPolicy { max_batch: 4, window: Duration::from_millis(10) }),
-        ("batch=16 / 20ms", BatchPolicy { max_batch: 16, window: Duration::from_millis(20) }),
+    let mut out = Table::new(&["policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE"]);
+    for (name, mode) in [
+        ("sequential (batch=1)", Mode::Sequential),
+        ("fixed b=4 / 10ms", Mode::Fixed(4, 10)),
+        ("fixed b=16 / 20ms", Mode::Fixed(16, 20)),
+        ("continuous b=4 / 10ms", Mode::Continuous(4, 10)),
+        ("continuous b=16 / 20ms", Mode::Continuous(16, 20)),
     ] {
-        let (tput, p95, calls) = run(policy, n, steps);
+        let (tput, p95, calls, req_nfe) = run(mode, n, steps, use_mock);
         out.row(&[
             name.into(),
             format!("{tput:.2}"),
             format!("{p95:.1}"),
             calls.to_string(),
+            if req_nfe > 0.0 { format!("{req_nfe:.2}") } else { "-".into() },
         ]);
     }
-    println!("\n== Serving throughput: NFE-aligned batching ablation (T={steps}, {n} reqs) ==");
+    println!(
+        "\n== Serving throughput: continuous vs fixed NFE-aligned batching (T={steps}, {n} reqs) =="
+    );
     out.print();
-    exp::save_tsv("serving_throughput", &out.to_tsv());
+    // mock results go to their own file so they can never masquerade as
+    // real-runtime numbers in the persisted bench data
+    let tsv_name = if use_mock { "serving_throughput_mock" } else { "serving_throughput" };
+    exp::save_tsv(tsv_name, &out.to_tsv());
 }

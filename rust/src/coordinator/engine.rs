@@ -18,6 +18,7 @@ pub struct GenOutput {
     pub tokens: Vec<u32>,
     /// NN calls of the batch this sequence was generated in
     pub nfe: usize,
+    /// generation wall time (excludes queue wait in both server modes)
     pub elapsed: Duration,
 }
 
@@ -138,6 +139,25 @@ impl Engine {
         let (mut outs, _) = self.generate_batch(srcs.as_deref(), 1, cfg, seed)?;
         Ok(outs.remove(0))
     }
+}
+
+/// Deterministic mock-backed engine implementing the synthetic iwslt
+/// cipher (src word id + 41) perfectly — the shared backend for serving
+/// tests and artifact-free bench runs.
+pub fn cipher_mock_engine(seq_len: usize) -> Engine {
+    use crate::runtime::MockDenoiser;
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), seq_len, seq_len, "absorbing");
+    let mut den = MockDenoiser::with_fn(cfg, |src, pos| {
+        let s = src.map(|s| s[pos]).unwrap_or(0);
+        if s >= 3 && (s as usize) < 3 + 41 {
+            s + 41
+        } else {
+            0
+        }
+    });
+    den.peak = 14.0; // sharp enough that temperature-1 draws stay correct
+    Engine::from_denoiser(Box::new(den), vocab, "cipher-mock")
 }
 
 /// Vocab for a dataset name (translation share one vocab; uncond per corpus).

@@ -2,17 +2,24 @@
 //!
 //! * [`engine`] — owns the PJRT runtime + vocab and exposes the
 //!   generate/translate API the CLI, examples and benches use.
-//! * [`server`] — the request loop: multi-producer queue, NFE-aligned
-//!   dynamic batcher, per-request latency/NFE accounting. PJRT handles are
-//!   not `Send`, so the engine lives on the server thread and requests
-//!   travel over channels (the vLLM-router shape, std::thread edition —
-//!   tokio is unreachable offline).
-//! * [`batcher`] — the batching policy (max size + collection window).
+//! * [`scheduler`] — the continuous NFE-aligned scheduler: requests join
+//!   the in-flight batch at transition-time boundaries (the per-NFE
+//!   `SamplerSession` yield points), sequences retire individually when
+//!   their last τ fires, freed slots refill.
+//! * [`server`] — the request loop: multi-producer queue, fixed-batch or
+//!   continuous scheduling, per-request latency/NFE accounting. PJRT
+//!   handles are not `Send`, so the engine lives on the server thread and
+//!   requests travel over channels (the vLLM-router shape, std::thread
+//!   edition — tokio is unreachable offline).
+//! * [`batcher`] — the legacy fixed batching policy (max size +
+//!   collection window), kept as the serving bench's ablation baseline.
 
 pub mod batcher;
 pub mod engine;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, GenOutput};
+pub use engine::{cipher_mock_engine, Engine, GenOutput};
+pub use scheduler::{LaneInfo, Pending, SchedPolicy, Scheduler};
 pub use server::{Server, ServerStats};

@@ -1,0 +1,523 @@
+//! Continuous NFE-aligned scheduling — step-decoupled serving.
+//!
+//! The legacy batcher freezes a FIFO batch, runs it to completion, and
+//! only then looks at the queue again. Because every sampler is now a
+//! [`SamplerSession`] (one denoiser call per `next_event`/`advance`
+//! round-trip), the scheduler can instead keep a *rolling* batch:
+//!
+//! * Pending requests are admitted **at transition-time boundaries** —
+//!   between two denoiser calls — never mid-call. A group admitted
+//!   together forms one *lane* (one session); with
+//!   [`SchedPolicy::shared_tau_groups`] the lane shares a single 𝒯, the
+//!   paper's batched fast path. Lanes admitted at different boundaries
+//!   union their event ladders simply by coexisting: the denoiser takes a
+//!   per-sequence time vector, so one call advances every lane by one
+//!   event of its own ladder.
+//! * A lane retires the moment its last τ fires; its slots free up and are
+//!   refilled at the next boundary.
+//! * Requests whose sampler spec differs from the in-flight batch's spec
+//!   (different kind/steps/𝒟_τ/order/temperature) are **not** merged —
+//!   they wait until the batch drains and then form their own batch, so a
+//!   mixed-spec workload degrades to separate batches instead of
+//!   corrupting the shared ladder.
+//!
+//! Per-request NFE (= the number of calls the request's session consumed,
+//! |𝒯| for DNDM), queue wait, and in-flight occupancy are recorded on the
+//! engine's [`NfeCounter`] (`metrics::nfe`).
+//!
+//! [`NfeCounter`]: crate::metrics::NfeCounter
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::sampler::{SamplerConfig, SamplerSession};
+
+use super::engine::{Engine, GenOutput};
+
+/// Admission policy of the continuous scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedPolicy {
+    /// Slot capacity: total in-flight sequences across all lanes.
+    pub max_batch: usize,
+    /// How long the oldest pending request may wait before an *empty*
+    /// scheduler starts a batch anyway (grouping window). While a batch is
+    /// in flight, compatible requests join at the next boundary regardless.
+    pub window: Duration,
+    /// Admit a same-boundary group as one shared-𝒯 session (the paper's
+    /// batched implementation) instead of one session per request.
+    ///
+    /// Note on reproducibility: a shared lane is seeded from its *first*
+    /// member's seed (like the fixed path's batch seed), so a request's
+    /// output then depends on admission grouping. Set this to `false` when
+    /// per-request (src, seed) → tokens reproducibility matters more than
+    /// the shared-𝒯 call amortization.
+    pub shared_tau_groups: bool,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        SchedPolicy {
+            max_batch: 16,
+            window: Duration::from_millis(20),
+            shared_tau_groups: true,
+        }
+    }
+}
+
+/// A queued request, generic over the caller's payload (response channel,
+/// test id, …).
+pub struct Pending<P> {
+    pub src: Option<String>,
+    pub seed: u64,
+    /// per-request sampler override; `None` = the scheduler's default
+    pub cfg: Option<SamplerConfig>,
+    pub enqueued: Instant,
+    pub payload: P,
+}
+
+struct Member<P> {
+    payload: P,
+    enqueued: Instant,
+    admitted: Instant,
+}
+
+/// One co-admitted group: a session of `members.len()` sequences.
+struct Lane<P> {
+    session: SamplerSession,
+    src_ids: Option<Vec<Vec<u32>>>,
+    members: Vec<Member<P>>,
+    admitted_boundary: u64,
+}
+
+/// Observable lane state (tests, debugging).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneInfo {
+    pub width: usize,
+    /// boundary index (completed-call count) at which the lane joined
+    pub admitted_boundary: u64,
+    /// denoiser calls this lane has consumed so far
+    pub nfe: usize,
+}
+
+/// A retired (or failed) request handed back to the caller.
+pub struct Finished<P> {
+    pub payload: P,
+    pub result: Result<GenOutput>,
+    /// queue wait: enqueue → admission into a lane
+    pub wait: Duration,
+}
+
+/// Admission-compatibility key: two requests may share an in-flight batch
+/// iff their effective sampler configs agree on everything that shapes the
+/// event ladder and the update rule.
+fn spec_key(cfg: &SamplerConfig) -> String {
+    format!(
+        "{}|T{}|{}|{:?}|temp{}|shared{}",
+        cfg.kind.name(),
+        cfg.steps,
+        cfg.spec.name(),
+        cfg.order,
+        cfg.temperature,
+        cfg.shared_tau
+    )
+}
+
+/// The continuous scheduler. Owns the engine; single-threaded by design
+/// (PJRT handles are not `Send`) — the server wraps it in a thread + queue.
+pub struct Scheduler<P> {
+    engine: Engine,
+    default_cfg: SamplerConfig,
+    policy: SchedPolicy,
+    pending: VecDeque<Pending<P>>,
+    lanes: Vec<Lane<P>>,
+    /// spec key of the in-flight batch (`None` when no lanes are active)
+    key: Option<String>,
+    /// completed denoiser calls — the boundary clock
+    boundary: u64,
+    /// shutdown/drain mode: ignore the grouping window
+    flushing: bool,
+}
+
+impl<P> Scheduler<P> {
+    pub fn new(engine: Engine, default_cfg: SamplerConfig, policy: SchedPolicy) -> Scheduler<P> {
+        Scheduler {
+            engine,
+            default_cfg,
+            policy,
+            pending: VecDeque::new(),
+            lanes: Vec::new(),
+            key: None,
+            boundary: 0,
+            flushing: false,
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Completed-call count — admissions only ever happen between calls,
+    /// i.e. at a value of this clock.
+    pub fn boundary(&self) -> u64 {
+        self.boundary
+    }
+
+    /// Total in-flight sequences (sum of lane widths).
+    pub fn in_flight(&self) -> usize {
+        self.lanes.iter().map(|l| l.session.batch()).sum()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.lanes.is_empty() || !self.pending.is_empty()
+    }
+
+    pub fn lane_info(&self) -> Vec<LaneInfo> {
+        self.lanes
+            .iter()
+            .map(|l| LaneInfo {
+                width: l.session.batch(),
+                admitted_boundary: l.admitted_boundary,
+                nfe: l.session.nfe(),
+            })
+            .collect()
+    }
+
+    /// Spec key of the in-flight batch, if any.
+    pub fn current_key(&self) -> Option<&str> {
+        self.key.as_deref()
+    }
+
+    /// Queue a request; it will be admitted at a future boundary.
+    pub fn enqueue(&mut self, req: Pending<P>) {
+        self.pending.push_back(req);
+    }
+
+    /// Enter drain mode: admit pending work immediately (ignore the
+    /// grouping window) until the queue is empty.
+    pub fn flush(&mut self) {
+        self.flushing = true;
+    }
+
+    /// When idle with pending work, the instant by which the grouping
+    /// window forces a batch to start. `None` while lanes are active (the
+    /// scheduler should keep stepping) or when nothing is pending.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        if !self.lanes.is_empty() {
+            return None;
+        }
+        self.pending.front().map(|p| p.enqueued + self.policy.window)
+    }
+
+    fn effective_key(&self, p: &Pending<P>) -> String {
+        spec_key(p.cfg.as_ref().unwrap_or(&self.default_cfg))
+    }
+
+    /// Admit pending requests into free slots. Called only between calls
+    /// (from [`Self::tick`]) — the transition-time-boundary rule. Returns
+    /// requests resolved at admission: failed (bad spec for this engine)
+    /// or degenerate zero-call completions.
+    fn admit(&mut self) -> Vec<Finished<P>> {
+        let mut resolved = Vec::new();
+        if self.pending.is_empty() {
+            return resolved;
+        }
+        if self.lanes.is_empty() {
+            // an idle scheduler starts a batch when the queue fills the
+            // capacity, the oldest request has waited out the window, or
+            // we are draining
+            let full = self.pending.len() >= self.policy.max_batch;
+            let waited = self
+                .pending
+                .front()
+                .map(|p| p.enqueued.elapsed() >= self.policy.window)
+                .unwrap_or(false);
+            if !(full || waited || self.flushing) {
+                return resolved;
+            }
+            self.key = None;
+        }
+
+        loop {
+            let free = self.policy.max_batch.saturating_sub(self.in_flight());
+            if free == 0 {
+                break;
+            }
+            // strict FIFO: take the longest front run with a matching key
+            let mut group: Vec<Pending<P>> = Vec::new();
+            while group.len() < free {
+                let Some(front) = self.pending.front() else { break };
+                let fkey = self.effective_key(front);
+                match &self.key {
+                    Some(k) if *k != fkey => break,
+                    _ => {}
+                }
+                if self.key.is_none() {
+                    self.key = Some(fkey);
+                }
+                group.push(self.pending.pop_front().expect("front exists"));
+            }
+            if group.is_empty() {
+                break;
+            }
+            if self.policy.shared_tau_groups {
+                self.push_lane(group, &mut resolved);
+            } else {
+                for req in group {
+                    self.push_lane(vec![req], &mut resolved);
+                }
+            }
+            if self.lanes.is_empty() {
+                // the whole group resolved without a lane (bad spec /
+                // zero-call): drop its key so the next front request is
+                // considered this same tick instead of after its window
+                self.key = None;
+            }
+        }
+        if self.lanes.is_empty() {
+            self.key = None;
+        }
+        resolved
+    }
+
+    /// Build one lane (one session) from a co-admitted group. Requests that
+    /// resolve without a lane (bad spec, zero-call specs) go to `out`.
+    fn push_lane(&mut self, group: Vec<Pending<P>>, out: &mut Vec<Finished<P>>) {
+        let cfg = group[0].cfg.clone().unwrap_or_else(|| self.default_cfg.clone());
+        let width = group.len();
+        let seed = group[0].seed;
+        let session =
+            match SamplerSession::new(self.engine.denoiser().config(), &cfg, width, seed) {
+                Ok(s) => s,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for p in group {
+                        out.push(Finished {
+                            payload: p.payload,
+                            result: Err(anyhow!("{msg}")),
+                            wait: p.enqueued.elapsed(),
+                        });
+                    }
+                    return;
+                }
+            };
+        if session.is_done() {
+            // degenerate spec (e.g. 0 steps): nothing to denoise — complete
+            // immediately with x_T as drawn
+            self.engine.nfe.record_batch();
+            let nfe = session.nfe();
+            let res = session.into_result();
+            for (i, p) in group.into_iter().enumerate() {
+                let wait = p.enqueued.elapsed();
+                self.engine.nfe.record_request(nfe, wait);
+                let tokens = res.tokens[i].clone();
+                out.push(Finished {
+                    payload: p.payload,
+                    result: Ok(GenOutput {
+                        text: self.engine.decode(&tokens),
+                        tokens,
+                        nfe,
+                        // zero denoiser calls were made for this request
+                        elapsed: Duration::ZERO,
+                    }),
+                    wait,
+                });
+            }
+            return;
+        }
+        let src_ids = if self.engine.conditional() {
+            Some(
+                group
+                    .iter()
+                    .map(|p| self.engine.encode_src(p.src.as_deref().unwrap_or("")))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let now = Instant::now();
+        let members = group
+            .into_iter()
+            .map(|p| Member { payload: p.payload, enqueued: p.enqueued, admitted: now })
+            .collect();
+        self.lanes.push(Lane { session, src_ids, members, admitted_boundary: self.boundary });
+    }
+
+    /// One denoiser call over every active lane: each lane advances by one
+    /// event of its own ladder (its own time, via the per-sequence time
+    /// vector), finished lanes retire and their requests are returned.
+    fn step(&mut self) -> Vec<Finished<P>> {
+        if self.lanes.is_empty() {
+            return Vec::new();
+        }
+        let conditional = self.engine.conditional();
+        let mut xs: Vec<Vec<u32>> = Vec::with_capacity(self.in_flight());
+        let mut ts: Vec<f32> = Vec::with_capacity(self.in_flight());
+        let mut srcs: Vec<Vec<u32>> = Vec::new();
+        for lane in &self.lanes {
+            let call = lane.session.next_event().expect("active lane has a pending call");
+            for seq in lane.session.x() {
+                xs.push(seq.clone());
+            }
+            ts.extend(std::iter::repeat(call.t).take(lane.session.batch()));
+            if conditional {
+                srcs.extend(lane.src_ids.as_ref().expect("conditional lane has srcs").iter().cloned());
+            }
+        }
+        let src_opt: Option<&[Vec<u32>]> = if conditional { Some(&srcs) } else { None };
+        let logits = match self.engine.denoiser().denoise(&xs, &ts, src_opt) {
+            Ok(l) => l,
+            Err(e) => return self.fail_all(&e),
+        };
+        self.engine.nfe.record_call(xs.len());
+        self.boundary += 1;
+
+        let mut off = 0usize;
+        let mut step_err = None;
+        for lane in &mut self.lanes {
+            let w = lane.session.batch();
+            if let Err(e) = lane.session.advance(&logits[off..off + w]) {
+                step_err = Some(e);
+                break;
+            }
+            off += w;
+        }
+        if let Some(e) = step_err {
+            return self.fail_all(&e);
+        }
+
+        let mut finished = Vec::new();
+        let lanes = std::mem::take(&mut self.lanes);
+        for lane in lanes {
+            if lane.session.is_done() {
+                self.engine.nfe.record_batch();
+                let nfe = lane.session.nfe();
+                let res = lane.session.into_result();
+                for (i, m) in lane.members.into_iter().enumerate() {
+                    let wait = m.admitted.duration_since(m.enqueued);
+                    self.engine.nfe.record_request(nfe, wait);
+                    let tokens = res.tokens[i].clone();
+                    finished.push(Finished {
+                        payload: m.payload,
+                        result: Ok(GenOutput {
+                            text: self.engine.decode(&tokens),
+                            tokens,
+                            nfe,
+                            // generation time only (same meaning as the
+                            // fixed path); queue wait travels separately
+                            elapsed: m.admitted.elapsed(),
+                        }),
+                        wait,
+                    });
+                }
+            } else {
+                self.lanes.push(lane);
+            }
+        }
+        if self.lanes.is_empty() {
+            self.key = None;
+        }
+        finished
+    }
+
+    fn fail_all(&mut self, e: &anyhow::Error) -> Vec<Finished<P>> {
+        let msg = format!("{e:#}");
+        let mut out = Vec::new();
+        for lane in std::mem::take(&mut self.lanes) {
+            for m in lane.members {
+                out.push(Finished {
+                    payload: m.payload,
+                    result: Err(anyhow!("{msg}")),
+                    wait: m.admitted.duration_since(m.enqueued),
+                });
+            }
+        }
+        self.key = None;
+        out
+    }
+
+    /// One boundary: admit pending work into free slots, then make one
+    /// denoiser call. Returns every request that finished (or failed) at
+    /// this boundary.
+    pub fn tick(&mut self) -> Vec<Finished<P>> {
+        let mut out = self.admit();
+        out.extend(self.step());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::cipher_mock_engine;
+    use crate::sampler::SamplerKind;
+
+    fn mock_engine() -> Engine {
+        cipher_mock_engine(8)
+    }
+
+    fn req(id: usize, seed: u64, cfg: Option<SamplerConfig>) -> Pending<usize> {
+        Pending {
+            src: Some("the quick fox".into()),
+            seed,
+            cfg,
+            enqueued: Instant::now(),
+            payload: id,
+        }
+    }
+
+    fn policy(max_batch: usize) -> SchedPolicy {
+        SchedPolicy { max_batch, window: Duration::ZERO, shared_tau_groups: true }
+    }
+
+    #[test]
+    fn single_request_completes_with_session_nfe() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(mock_engine(), SamplerConfig::new(SamplerKind::Dndm, 50), policy(4));
+        s.enqueue(req(0, 7, None));
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert_eq!(done.len(), 1);
+        let out = done[0].result.as_ref().unwrap();
+        assert!(out.nfe >= 1 && out.nfe <= 8);
+        assert_eq!(s.engine().nfe.requests(), 1);
+        assert_eq!(s.engine().nfe.calls() as usize, out.nfe);
+    }
+
+    #[test]
+    fn group_admitted_together_shares_one_lane() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(mock_engine(), SamplerConfig::new(SamplerKind::Dndm, 50), policy(4));
+        for i in 0..3 {
+            s.enqueue(req(i, 9, None));
+        }
+        let done = s.tick();
+        assert!(done.is_empty() || done.len() == 3);
+        let lanes = s.lane_info();
+        if !lanes.is_empty() {
+            assert_eq!(lanes.len(), 1, "one shared-𝒯 lane");
+            assert_eq!(lanes[0].width, 3);
+            assert_eq!(lanes[0].admitted_boundary, 0);
+        }
+        let mut all = done;
+        while s.has_work() {
+            all.extend(s.tick());
+        }
+        assert_eq!(all.len(), 3);
+        // shared 𝒯 ⇒ identical per-request NFE
+        let nfes: Vec<usize> =
+            all.iter().map(|f| f.result.as_ref().unwrap().nfe).collect();
+        assert!(nfes.windows(2).all(|w| w[0] == w[1]), "{nfes:?}");
+    }
+}

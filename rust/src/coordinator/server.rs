@@ -1,12 +1,23 @@
-//! The request loop: queue → batcher → engine → responses.
+//! The request loop: queue → scheduler → engine → responses.
 //!
 //! PJRT handles are not `Send`, so the engine is built *inside* the server
 //! thread from a factory closure; clients hold a cheap cloneable handle
 //! and block on a per-request response channel (or use `submit_async` and
 //! collect later). Shutdown is explicit or on handle drop.
+//!
+//! Two scheduling modes share the same client handle:
+//!
+//! * **Fixed** ([`Server::start`]) — the legacy policy: FIFO batches are
+//!   frozen by the [`Batcher`] and run to completion. Kept as the ablation
+//!   baseline for the serving bench.
+//! * **Continuous** ([`Server::start_continuous`]) — the NFE-aligned
+//!   [`Scheduler`]: requests join the in-flight batch at transition-time
+//!   boundaries, sequences retire individually, freed slots refill.
+//!
+//! [`Batcher`]: super::batcher::Batcher
+//! [`Scheduler`]: super::scheduler::Scheduler
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -16,11 +27,15 @@ use crate::sampler::SamplerConfig;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenOutput};
+use super::scheduler::{Pending, SchedPolicy, Scheduler};
 
 /// One queued request.
 struct Request {
     src: Option<String>,
     seed: u64,
+    /// per-request sampler override (continuous mode only; the fixed path
+    /// ignores it and uses the server-wide config)
+    cfg: Option<SamplerConfig>,
     enqueued: Instant,
     respond: Sender<Result<GenOutput>>,
 }
@@ -41,6 +56,11 @@ pub struct ServerStats {
     pub queue_p95: Duration,
     pub e2e_p95: Duration,
     pub e2e_p50: Duration,
+    /// mean per-request NFE over retired requests (continuous mode;
+    /// 0 under the fixed policy, which accounts per batch instead)
+    pub avg_request_nfe: f64,
+    /// mean in-flight width per denoiser call / slot capacity, in [0, 1]
+    pub occupancy: f64,
 }
 
 /// Cloneable client handle to a running server.
@@ -50,14 +70,32 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the server thread. `factory` builds the engine on that thread
-    /// (PJRT is thread-bound); `cfg` is the sampler every request uses.
+    /// Start a server with the legacy fixed-batch policy. `factory` builds
+    /// the engine on the server thread (PJRT is thread-bound); `cfg` is the
+    /// sampler every request uses.
     pub fn start<F>(factory: F, cfg: SamplerConfig, policy: BatchPolicy) -> (Server, ServerJoin)
     where
         F: FnOnce() -> Result<Engine> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
         let handle = std::thread::spawn(move || serve_loop(factory, cfg, policy, rx));
+        (Server { tx }, ServerJoin { handle: Some(handle) })
+    }
+
+    /// Start a server with the continuous NFE-aligned scheduler: requests
+    /// are admitted into the in-flight batch at transition-time boundaries
+    /// and retire individually.
+    pub fn start_continuous<F>(
+        factory: F,
+        cfg: SamplerConfig,
+        policy: SchedPolicy,
+    ) -> (Server, ServerJoin)
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let handle =
+            std::thread::spawn(move || serve_continuous_loop(factory, cfg, policy, rx));
         (Server { tx }, ServerJoin { handle: Some(handle) })
     }
 
@@ -74,9 +112,26 @@ impl Server {
         src: Option<String>,
         seed: u64,
     ) -> Result<Receiver<Result<GenOutput>>> {
+        self.submit_with(src, seed, None)
+    }
+
+    /// Submit with a per-request sampler override (continuous mode;
+    /// requests with different specs are served in separate batches).
+    pub fn submit_with(
+        &self,
+        src: Option<String>,
+        seed: u64,
+        cfg: Option<SamplerConfig>,
+    ) -> Result<Receiver<Result<GenOutput>>> {
         let (rtx, rrx) = channel();
         self.tx
-            .send(Msg::Req(Request { src, seed, enqueued: Instant::now(), respond: rtx }))
+            .send(Msg::Req(Request {
+                src,
+                seed,
+                cfg,
+                enqueued: Instant::now(),
+                respond: rtx,
+            }))
             .map_err(|_| anyhow!("server is down"))?;
         Ok(rrx)
     }
@@ -119,7 +174,42 @@ struct LoopState {
     batch_sizes: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
+    /// slot capacity, for the occupancy statistic
+    capacity: usize,
 }
+
+impl LoopState {
+    fn new(capacity: usize) -> LoopState {
+        LoopState {
+            requests: 0,
+            batches: 0,
+            batch_sizes: 0,
+            queue_lat: LatencyStats::new(),
+            e2e_lat: LatencyStats::new(),
+            capacity,
+        }
+    }
+}
+
+/// Drain-and-fail loop for a factory that could not build an engine.
+fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error) {
+    eprintln!("[server] engine init failed: {err:#}");
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Req(r) => {
+                let _ = r.respond.send(Err(anyhow!("engine init failed")));
+            }
+            Msg::Shutdown => break,
+            Msg::Stats(s) => {
+                let _ = s.send(empty_stats());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-batch mode (legacy policy; the bench's ablation baseline)
+// ---------------------------------------------------------------------------
 
 fn serve_loop<F>(factory: F, cfg: SamplerConfig, policy: BatchPolicy, rx: Receiver<Msg>)
 where
@@ -128,33 +218,13 @@ where
     let engine = match factory() {
         Ok(e) => e,
         Err(err) => {
-            // engine failed: drain and fail every request
-            eprintln!("[server] engine init failed: {err:#}");
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Req(r) => {
-                        let _ = r.respond.send(Err(anyhow!("engine init failed")));
-                    }
-                    Msg::Shutdown => break,
-                    Msg::Stats(s) => {
-                        let _ = s.send(empty_stats());
-                    }
-                }
-            }
+            fail_engine_loop(rx, err);
             return;
         }
     };
 
     let mut batcher: Batcher<Request> = Batcher::new(policy);
-    let mut st = LoopState {
-        requests: 0,
-        batches: 0,
-        batch_sizes: 0,
-        queue_lat: LatencyStats::new(),
-        e2e_lat: LatencyStats::new(),
-    };
-    let stats_lock: Arc<Mutex<()>> = Arc::new(Mutex::new(()));
-    let _ = stats_lock; // reserved for future concurrent stats readers
+    let mut st = LoopState::new(policy.max_batch);
 
     loop {
         // wait: bounded by the batch window if one is open
@@ -172,6 +242,15 @@ where
 
         match msg {
             Some(Msg::Req(r)) => {
+                if r.cfg.is_some() {
+                    // the fixed path serves one server-wide config; silently
+                    // substituting it for the requested one would be wrong
+                    let _ = r.respond.send(Err(anyhow!(
+                        "per-request sampler config requires a continuous-mode \
+                         server (Server::start_continuous)"
+                    )));
+                    continue;
+                }
                 st.requests += 1;
                 batcher.push(r);
             }
@@ -230,6 +309,131 @@ fn dispatch(engine: &Engine, cfg: &SamplerConfig, batcher: &mut Batcher<Request>
     }
 }
 
+// ---------------------------------------------------------------------------
+// Continuous mode (NFE-aligned scheduler)
+// ---------------------------------------------------------------------------
+
+fn serve_continuous_loop<F>(
+    factory: F,
+    cfg: SamplerConfig,
+    policy: SchedPolicy,
+    rx: Receiver<Msg>,
+) where
+    F: FnOnce() -> Result<Engine>,
+{
+    let engine = match factory() {
+        Ok(e) => e,
+        Err(err) => {
+            fail_engine_loop(rx, err);
+            return;
+        }
+    };
+
+    let mut sched: Scheduler<Sender<Result<GenOutput>>> = Scheduler::new(engine, cfg, policy);
+    let mut st = LoopState::new(policy.max_batch);
+    let mut draining = false;
+
+    'outer: loop {
+        // 1. ingest. While lanes are active, never block — drain whatever
+        //    arrived and get back to stepping (admission happens at the
+        //    boundary inside tick()). Otherwise block until the grouping
+        //    window of the oldest pending request expires, or forever when
+        //    fully idle.
+        if sched.in_flight() > 0 {
+            loop {
+                match rx.try_recv() {
+                    Ok(m) => {
+                        if handle_msg(m, &mut sched, &mut st) {
+                            draining = true;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        draining = true;
+                        sched.flush();
+                        break;
+                    }
+                }
+            }
+        } else if sched.pending_len() > 0 && !draining {
+            let deadline = sched.next_deadline().expect("pending implies a deadline");
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(m) => {
+                    if handle_msg(m, &mut sched, &mut st) {
+                        draining = true;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    draining = true;
+                    sched.flush();
+                }
+            }
+        } else if !sched.has_work() {
+            if draining {
+                break;
+            }
+            match rx.recv() {
+                Ok(m) => {
+                    if handle_msg(m, &mut sched, &mut st) {
+                        draining = true;
+                        if !sched.has_work() {
+                            break;
+                        }
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+
+        // 2. one boundary: admit + one denoiser call; deliver retirements.
+        for f in sched.tick() {
+            st.queue_lat.record(f.wait);
+            if let Ok(out) = &f.result {
+                // e2e = queue wait + in-flight generation time
+                st.e2e_lat.record(f.wait + out.elapsed);
+            }
+            let _ = f.payload.send(f.result);
+        }
+        if draining && !sched.has_work() {
+            break 'outer;
+        }
+    }
+}
+
+/// Returns true when the message requests shutdown.
+fn handle_msg(
+    msg: Msg,
+    sched: &mut Scheduler<Sender<Result<GenOutput>>>,
+    st: &mut LoopState,
+) -> bool {
+    match msg {
+        Msg::Req(r) => {
+            st.requests += 1;
+            sched.enqueue(Pending {
+                src: r.src,
+                seed: r.seed,
+                cfg: r.cfg,
+                enqueued: r.enqueued,
+                payload: r.respond,
+            });
+            false
+        }
+        Msg::Stats(s) => {
+            // lanes retired so far are the "batches" of continuous mode
+            st.batches = sched.engine().nfe.batches();
+            st.batch_sizes = sched.engine().nfe.requests();
+            let _ = s.send(snapshot(st, sched.engine()));
+            false
+        }
+        Msg::Shutdown => {
+            sched.flush();
+            true
+        }
+    }
+}
+
 fn snapshot(st: &LoopState, engine: &Engine) -> ServerStats {
     ServerStats {
         requests: st.requests,
@@ -243,6 +447,8 @@ fn snapshot(st: &LoopState, engine: &Engine) -> ServerStats {
         queue_p95: st.queue_lat.p95(),
         e2e_p95: st.e2e_lat.p95(),
         e2e_p50: st.e2e_lat.p50(),
+        avg_request_nfe: engine.nfe.avg_request_nfe(),
+        occupancy: engine.nfe.occupancy(st.capacity),
     }
 }
 
@@ -255,6 +461,8 @@ fn empty_stats() -> ServerStats {
         queue_p95: Duration::ZERO,
         e2e_p95: Duration::ZERO,
         e2e_p50: Duration::ZERO,
+        avg_request_nfe: 0.0,
+        occupancy: 0.0,
     }
 }
 
@@ -262,17 +470,10 @@ fn empty_stats() -> ServerStats {
 mod tests {
     use super::*;
     use crate::coordinator::engine::Engine;
-    use crate::data::words;
-    use crate::runtime::MockDenoiser;
     use crate::sampler::{SamplerConfig, SamplerKind};
 
     fn mock_factory() -> Result<Engine> {
-        let vocab = words::translation_vocab();
-        let cfg = MockDenoiser::test_config(vocab.len(), 8, 8, "absorbing");
-        let den = MockDenoiser::with_fn(cfg, |src, pos| {
-            src.map(|s| (s[pos] + 41).min(98)).unwrap_or(3)
-        });
-        Ok(Engine::from_denoiser(Box::new(den), vocab, "mock"))
+        Ok(crate::coordinator::engine::cipher_mock_engine(8))
     }
 
     #[test]
@@ -328,6 +529,64 @@ mod tests {
             || Err(anyhow!("boom")),
             cfg,
             BatchPolicy::default(),
+        );
+        let r = srv.submit(Some("x".into()), 0);
+        assert!(r.is_err());
+        srv.shutdown();
+        join.join();
+    }
+
+    // -- continuous mode --
+
+    #[test]
+    fn continuous_serves_and_reports_per_request_nfe() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let policy = SchedPolicy {
+            max_batch: 4,
+            window: Duration::from_millis(10),
+            shared_tau_groups: true,
+        };
+        let (srv, join) = Server::start_continuous(mock_factory, cfg, policy);
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            rxs.push(srv.submit_async(Some("the quick fox crosses a river".into()), i).unwrap());
+        }
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert!(out.nfe >= 1 && out.nfe <= 8, "per-request NFE = |𝒯| ≤ N");
+            assert!(!out.text.is_empty());
+        }
+        let stats = srv.stats().unwrap();
+        assert_eq!(stats.requests, 8);
+        assert!(stats.avg_request_nfe >= 1.0 && stats.avg_request_nfe <= 8.0);
+        assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0);
+        srv.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn continuous_shutdown_flushes_pending() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let policy = SchedPolicy {
+            max_batch: 8,
+            window: Duration::from_secs(60), // window must not delay the drain
+            shared_tau_groups: true,
+        };
+        let (srv, join) = Server::start_continuous(mock_factory, cfg, policy);
+        let rx = srv.submit_async(Some("this old road".into()), 2).unwrap();
+        srv.shutdown();
+        let out = rx.recv().unwrap().unwrap();
+        assert!(!out.tokens.is_empty());
+        join.join();
+    }
+
+    #[test]
+    fn continuous_engine_failure_fails_requests_cleanly() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let (srv, join) = Server::start_continuous(
+            || Err(anyhow!("boom")),
+            cfg,
+            SchedPolicy::default(),
         );
         let r = srv.submit(Some("x".into()), 0);
         assert!(r.is_err());

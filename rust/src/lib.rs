@@ -4,10 +4,13 @@
 //! with Predetermined Transition Time"* (Chen et al., NeurIPS 2024) as a
 //! deployable three-layer serving stack:
 //!
-//! * **L3 (this crate)** — the coordinator: request queue, NFE-aligned
-//!   dynamic batcher, all sampling algorithms (DNDM Alg. 1/2/3/4 plus the
-//!   D3PM / RDM / Mask-Predict baselines), schedules, metrics, and the PJRT
-//!   runtime that executes the AOT artifacts.
+//! * **L3 (this crate)** — the coordinator: request queue, continuous
+//!   NFE-aligned scheduler (requests join in-flight batches at
+//!   transition-time boundaries; see `docs/serving.md`), all sampling
+//!   algorithms as per-NFE `SamplerSession` state machines (DNDM
+//!   Alg. 1/2/3/4 plus the D3PM / RDM / Mask-Predict baselines),
+//!   schedules, metrics, and the PJRT runtime that executes the AOT
+//!   artifacts.
 //! * **L2 (python/compile/model.py, build time)** — the JAX denoiser
 //!   `p_θ(x̂0 | x_t, t[, src])`, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/, build time)** — Pallas kernels (fused

@@ -4,6 +4,11 @@
 //! number of batches. This counter distinguishes *calls* (one batched
 //! forward = one call, the wall-clock-relevant number) from *sequence
 //! evaluations* (calls × batch size).
+//!
+//! The continuous scheduler adds per-request accounting on top: each
+//! retired request records its own NFE (= |𝒯| of its session) and its
+//! queue wait, and every call records the in-flight width so occupancy
+//! (mean width / capacity) is observable.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -13,6 +18,12 @@ pub struct NfeCounter {
     calls: AtomicU64,
     seqs: AtomicU64,
     batches: AtomicU64,
+    /// Σ per-request NFE over retired requests (continuous scheduler).
+    request_nfe: AtomicU64,
+    /// retired requests (denominator of `avg_request_nfe`).
+    requests: AtomicU64,
+    /// Σ queue wait in microseconds over retired requests.
+    wait_us: AtomicU64,
 }
 
 impl NfeCounter {
@@ -31,6 +42,15 @@ impl NfeCounter {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One request retired from the continuous scheduler: its own NFE
+    /// (= denoiser calls while it was in flight = |𝒯| of its session)
+    /// and how long it waited in the queue before admission.
+    pub fn record_request(&self, nfe: usize, wait: std::time::Duration) {
+        self.request_nfe.fetch_add(nfe as u64, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.wait_us.fetch_add(wait.as_micros() as u64, Ordering::Relaxed);
+    }
+
     pub fn calls(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
     }
@@ -43,6 +63,10 @@ impl NfeCounter {
         self.batches.load(Ordering::Relaxed)
     }
 
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
     /// Average NFE per batch — the Tables 7/8 statistic.
     pub fn avg_nfe(&self) -> f64 {
         let b = self.batches();
@@ -53,16 +77,60 @@ impl NfeCounter {
         }
     }
 
+    /// Mean per-request NFE over retired requests.
+    pub fn avg_request_nfe(&self) -> f64 {
+        let r = self.requests();
+        if r == 0 {
+            0.0
+        } else {
+            self.request_nfe.load(Ordering::Relaxed) as f64 / r as f64
+        }
+    }
+
+    /// Mean queue wait over retired requests.
+    pub fn avg_wait(&self) -> std::time::Duration {
+        let r = self.requests();
+        if r == 0 {
+            std::time::Duration::ZERO
+        } else {
+            std::time::Duration::from_micros(self.wait_us.load(Ordering::Relaxed) / r)
+        }
+    }
+
+    /// Mean in-flight width per call (sequence evaluations / calls) —
+    /// divide by slot capacity for occupancy in [0, 1].
+    pub fn mean_width(&self) -> f64 {
+        let c = self.calls();
+        if c == 0 {
+            0.0
+        } else {
+            self.seq_evals() as f64 / c as f64
+        }
+    }
+
+    /// Fraction of slot capacity in use, averaged over calls.
+    pub fn occupancy(&self, capacity: usize) -> f64 {
+        if capacity == 0 {
+            0.0
+        } else {
+            self.mean_width() / capacity as f64
+        }
+    }
+
     pub fn reset(&self) {
         self.calls.store(0, Ordering::Relaxed);
         self.seqs.store(0, Ordering::Relaxed);
         self.batches.store(0, Ordering::Relaxed);
+        self.request_nfe.store(0, Ordering::Relaxed);
+        self.requests.store(0, Ordering::Relaxed);
+        self.wait_us.store(0, Ordering::Relaxed);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn counts_and_average() {
@@ -83,6 +151,28 @@ mod tests {
         let c = NfeCounter::new();
         c.record_call(4);
         assert_eq!(c.avg_nfe(), 0.0);
+        assert_eq!(c.avg_request_nfe(), 0.0);
+        assert_eq!(c.avg_wait(), Duration::ZERO);
+    }
+
+    #[test]
+    fn per_request_accounting() {
+        let c = NfeCounter::new();
+        c.record_request(6, Duration::from_micros(100));
+        c.record_request(10, Duration::from_micros(300));
+        assert_eq!(c.requests(), 2);
+        assert!((c.avg_request_nfe() - 8.0).abs() < 1e-12);
+        assert_eq!(c.avg_wait(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn occupancy_from_call_widths() {
+        let c = NfeCounter::new();
+        c.record_call(4);
+        c.record_call(2);
+        assert!((c.mean_width() - 3.0).abs() < 1e-12);
+        assert!((c.occupancy(4) - 0.75).abs() < 1e-12);
+        assert_eq!(c.occupancy(0), 0.0);
     }
 
     #[test]
@@ -90,8 +180,10 @@ mod tests {
         let c = NfeCounter::new();
         c.record_call(1);
         c.record_batch();
+        c.record_request(3, Duration::from_micros(7));
         c.reset();
-        assert_eq!(c.calls() + c.seq_evals() + c.batches(), 0);
+        assert_eq!(c.calls() + c.seq_evals() + c.batches() + c.requests(), 0);
+        assert_eq!(c.avg_request_nfe(), 0.0);
     }
 
     #[test]

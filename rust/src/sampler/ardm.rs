@@ -12,11 +12,57 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::Denoiser;
-use crate::schedule::SplitMix64;
 
 use super::common::{row, sample_x0};
-use super::{GenResult, SamplerConfig, TracePoint};
+use super::session::{self, AlgState, Core, SamplerSession};
+use super::{GenResult, SamplerConfig};
 
+/// Session state: one shared random decode order (σ in ARDM, like DNDM's
+/// shared 𝒯), advanced `parallel` positions per event.
+pub(crate) struct ArdmState {
+    order: Vec<usize>,
+    done: usize,
+    parallel: usize,
+}
+
+impl ArdmState {
+    pub(crate) fn new(core: &mut Core, parallel: usize) -> ArdmState {
+        let mut order: Vec<usize> = (0..core.n).collect();
+        core.rng.shuffle(&mut order);
+        ArdmState { order, done: 0, parallel: parallel.max(1) }
+    }
+}
+
+impl AlgState for ArdmState {
+    fn next_t(&self, core: &Core) -> Option<(f32, f64)> {
+        if self.done < core.n {
+            // time = fraction of tokens still masked (the absorbing coupling)
+            let t_norm = 1.0 - self.done as f32 / core.n as f32;
+            Some((t_norm, t_norm as f64))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let group: Vec<usize> =
+            self.order[self.done..(self.done + self.parallel).min(core.n)].to_vec();
+        let t_norm = 1.0 - self.done as f32 / core.n as f32;
+        for b in 0..core.x.len() {
+            for &pos in &group {
+                let (tok, _) =
+                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
+                core.x[b][pos] = tok;
+            }
+        }
+        self.done += group.len();
+        core.finish_event(t_norm as f64);
+    }
+}
+
+/// Run-to-completion wrapper with an explicit `parallel` (the `generate()`
+/// dispatch uses 1 through `SamplerSession`; the unit tests below probe
+/// the parallelized variant).
 pub fn run(
     den: &dyn Denoiser,
     cfg: &SamplerConfig,
@@ -25,42 +71,13 @@ pub fn run(
     seed: u64,
     parallel: usize,
 ) -> Result<GenResult> {
-    let mcfg = den.config().clone();
+    let mcfg = den.config();
     if mcfg.kind != "absorbing" {
         bail!("ardm baseline requires an absorbing model");
     }
-    let (n, v) = (mcfg.seq_len, mcfg.vocab);
-    let mask = mcfg.mask_id;
-    let parallel = parallel.max(1);
-    let mut rng = SplitMix64::new(seed);
-
-    let mut x = vec![vec![mask; n]; batch];
-    // one shared random decode order (σ in ARDM), like DNDM's shared 𝒯
-    let mut order: Vec<usize> = (0..n).collect();
-    rng.shuffle(&mut order);
-
-    let mut trace = Vec::new();
-    let mut nfe = 0usize;
-    let mut done = 0usize;
-    while done < n {
-        let group: Vec<usize> = order[done..(done + parallel).min(n)].to_vec();
-        // time = fraction of tokens still masked (the absorbing coupling)
-        let t_norm = 1.0 - done as f32 / n as f32;
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        nfe += 1;
-        for b in 0..batch {
-            for &pos in &group {
-                let (tok, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
-                x[b][pos] = tok;
-            }
-        }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
-        done += group.len();
-    }
-
-    Ok(GenResult { tokens: x, nfe, trace })
+    let mut core = session::build_core(mcfg, cfg, batch, seed, true);
+    let alg = Box::new(ArdmState::new(&mut core, parallel));
+    session::drive(den, SamplerSession::from_parts(core, alg, batch), src)
 }
 
 #[cfg(test)]

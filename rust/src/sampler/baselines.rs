@@ -1,62 +1,80 @@
-//! Baseline samplers the paper compares against.
+//! Baseline samplers the paper compares against, as session states.
 //!
 //! All of these call the denoiser **once per step** (NFE = T) — that is
 //! the cost DNDM removes. Implementations follow Appendix B.1 (D3PM) and
-//! Zheng et al. 2023 (RDM), plus Mask-Predict for Table 13.
-
-use anyhow::{bail, Result};
+//! Zheng et al. 2023 (RDM), plus Mask-Predict for Table 13. Where DNDM
+//! sessions own a predetermined 𝒯, these own the per-step schedule: a
+//! countdown t = T..1 (or the iteration ladder for Mask-Predict).
 
 use crate::diffusion::{absorbing_reverse_step, multinomial_reverse_step, NoiseKind};
-use crate::runtime::Denoiser;
-use crate::schedule::{AlphaSchedule, SplitMix64};
+use crate::schedule::AlphaSchedule;
 
-use super::common::{init_noise, noise_of, row, sample_x0};
-use super::{GenResult, SamplerConfig, TracePoint};
-
-fn schedule_of(den: &dyn Denoiser) -> AlphaSchedule {
-    AlphaSchedule::parse(&den.config().schedule).unwrap_or(AlphaSchedule::CosineSq)
-}
+use super::common::{row, sample_x0};
+use super::session::{AlgState, Core};
+use super::SamplerConfig;
 
 /// Vanilla D3PM ancestral sampling (Hoogeboom 2021b / Austin 2021):
 /// every step t draws x̂0 ~ p_θ(·|x_t) then x_{t−1} ~ q(x_{t−1}|x_t, x̂0).
-pub fn d3pm(
-    den: &dyn Denoiser,
-    cfg: &SamplerConfig,
-    src: Option<&[Vec<u32>]>,
-    batch: usize,
-    seed: u64,
-) -> Result<GenResult> {
-    let mcfg = den.config().clone();
-    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
-    let noise = noise_of(&mcfg);
-    let sched = schedule_of(den);
-    let mut rng = SplitMix64::new(seed);
+pub(crate) struct D3pmState {
+    /// current step, counting down T..=1; 0 = done
+    t: usize,
+    t_max: usize,
+    sched: AlphaSchedule,
+    noise: NoiseKind,
+}
 
-    let mut x = init_noise(batch, n, noise, &mut rng);
-    let mut trace = Vec::new();
+impl D3pmState {
+    pub(crate) fn new(cfg: &SamplerConfig, sched: AlphaSchedule, noise: NoiseKind) -> D3pmState {
+        D3pmState { t: cfg.steps, t_max: cfg.steps, sched, noise }
+    }
+}
 
-    for t in (1..=t_max).rev() {
-        let t_norm = t as f32 / t_max as f32;
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        for b in 0..batch {
-            for pos in 0..n {
-                let (x0_hat, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature.max(1.0), &mut rng);
-                x[b][pos] = match noise {
+impl AlgState for D3pmState {
+    fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
+        if self.t >= 1 {
+            let t_norm = self.t as f32 / self.t_max as f32;
+            Some((t_norm, t_norm as f64))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let t = self.t;
+        let t_norm = t as f32 / self.t_max as f32;
+        for b in 0..core.x.len() {
+            for pos in 0..core.n {
+                let (x0_hat, _) = sample_x0(
+                    row(&logits[b], pos, core.v),
+                    core.temperature.max(1.0),
+                    &mut core.rng,
+                );
+                core.x[b][pos] = match self.noise {
                     NoiseKind::Absorbing { mask_id } => absorbing_reverse_step(
-                        x[b][pos], x0_hat, t, t_max, sched, mask_id, &mut rng,
+                        core.x[b][pos],
+                        x0_hat,
+                        t,
+                        self.t_max,
+                        self.sched,
+                        mask_id,
+                        &mut core.rng,
                     ),
                     NoiseKind::Multinomial { .. } => multinomial_reverse_step(
-                        x[b][pos], x0_hat, t, t_max, sched, noise, v, &mut rng,
+                        core.x[b][pos],
+                        x0_hat,
+                        t,
+                        self.t_max,
+                        self.sched,
+                        self.noise,
+                        core.v,
+                        &mut core.rng,
                     ),
                 };
             }
         }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
+        self.t -= 1;
+        core.finish_event(t_norm as f64);
     }
-
-    Ok(GenResult { tokens: x, nfe: t_max, trace })
 }
 
 /// RDM reparameterized sampling (Zheng et al. 2023).
@@ -67,131 +85,148 @@ pub fn d3pm(
 /// reveals a Bernoulli-random subset (vanilla RDM), `topk=true` reveals
 /// the highest-scoring ones (RDM-k, their best variant). Revealed tokens
 /// are *re-predicted* every step (RDM re-decodes, unlike D3PM-Absorb).
-pub fn rdm(
-    den: &dyn Denoiser,
-    cfg: &SamplerConfig,
-    src: Option<&[Vec<u32>]>,
-    batch: usize,
-    seed: u64,
+pub(crate) struct RdmState {
+    revealed: Vec<Vec<bool>>,
+    t: usize,
+    t_max: usize,
+    sched: AlphaSchedule,
     topk: bool,
-) -> Result<GenResult> {
-    let mcfg = den.config().clone();
-    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
-    let noise = noise_of(&mcfg);
-    let sched = schedule_of(den);
-    let mut rng = SplitMix64::new(seed);
+}
 
-    let mut x = init_noise(batch, n, noise, &mut rng);
-    let mut revealed = vec![vec![false; n]; batch];
-    let mut trace = Vec::new();
+impl RdmState {
+    pub(crate) fn new(
+        cfg: &SamplerConfig,
+        sched: AlphaSchedule,
+        batch: usize,
+        n: usize,
+        topk: bool,
+    ) -> RdmState {
+        RdmState {
+            revealed: vec![vec![false; n]; batch],
+            t: cfg.steps,
+            t_max: cfg.steps,
+            sched,
+            topk,
+        }
+    }
+}
 
-    for t in (1..=t_max).rev() {
-        let t_norm = t as f32 / t_max as f32;
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        let a_t = sched.alpha_discrete(t, t_max);
-        let a_prev = sched.alpha_discrete(t - 1, t_max);
+impl AlgState for RdmState {
+    fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
+        if self.t >= 1 {
+            let t_norm = self.t as f32 / self.t_max as f32;
+            Some((t_norm, t_norm as f64))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let t = self.t;
+        let t_norm = t as f32 / self.t_max as f32;
+        let a_t = self.sched.alpha_discrete(t, self.t_max);
+        let a_prev = self.sched.alpha_discrete(t - 1, self.t_max);
         let p_reveal = if a_t >= 1.0 { 0.0 } else { (a_prev - a_t) / (1.0 - a_t) };
 
-        for b in 0..batch {
-            let mut decoded: Vec<(usize, u32, f32)> = Vec::with_capacity(n);
-            for pos in 0..n {
-                let (tok, score) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+        for b in 0..core.x.len() {
+            let mut decoded: Vec<(usize, u32, f32)> = Vec::with_capacity(core.n);
+            for pos in 0..core.n {
+                let (tok, score) =
+                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
                 decoded.push((pos, tok, score));
             }
             // re-predict already-revealed tokens (RDM re-decoding)
             for &(pos, tok, _) in &decoded {
-                if revealed[b][pos] {
-                    x[b][pos] = tok;
+                if self.revealed[b][pos] {
+                    core.x[b][pos] = tok;
                 }
             }
-            let noisy: Vec<usize> = (0..n).filter(|&p| !revealed[b][p]).collect();
-            if topk {
+            let noisy: Vec<usize> = (0..core.n).filter(|&p| !self.revealed[b][p]).collect();
+            if self.topk {
                 // reveal count = Binomial expectation, positions by score
                 let k = ((noisy.len() as f64) * p_reveal).round() as usize;
                 let k = if t == 1 { noisy.len() } else { k };
                 let mut ranked: Vec<&(usize, u32, f32)> = decoded
                     .iter()
-                    .filter(|(p, _, _)| !revealed[b][*p])
+                    .filter(|(p, _, _)| !self.revealed[b][*p])
                     .collect();
                 ranked.sort_by(|a, b| b.2.total_cmp(&a.2));
                 for &&(pos, tok, _) in ranked.iter().take(k) {
-                    x[b][pos] = tok;
-                    revealed[b][pos] = true;
+                    core.x[b][pos] = tok;
+                    self.revealed[b][pos] = true;
                 }
             } else {
                 for &pos in &noisy {
-                    if t == 1 || rng.coin(p_reveal) {
+                    if t == 1 || core.rng.coin(p_reveal) {
                         let (_, tok, _) = decoded[pos];
-                        x[b][pos] = tok;
-                        revealed[b][pos] = true;
+                        core.x[b][pos] = tok;
+                        self.revealed[b][pos] = true;
                     }
                 }
             }
         }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
+        self.t -= 1;
+        core.finish_event(t_norm as f64);
     }
-
-    Ok(GenResult { tokens: x, nfe: t_max, trace })
 }
 
 /// Mask-Predict (Ghazvininejad et al. 2019) — Table 13's comparator.
 ///
 /// Absorbing models only: start fully masked; at iteration i of S, predict
 /// everything, then re-mask the ⌈N·(S−i−1)/S⌉ lowest-scoring tokens.
-pub fn mask_predict(
-    den: &dyn Denoiser,
-    cfg: &SamplerConfig,
-    src: Option<&[Vec<u32>]>,
-    batch: usize,
-    seed: u64,
-) -> Result<GenResult> {
-    let mcfg = den.config().clone();
-    if mcfg.kind != "absorbing" {
-        bail!("mask-predict requires an absorbing model");
+pub(crate) struct MaskPredictState {
+    i: usize,
+    iters: usize,
+    mask: u32,
+}
+
+impl MaskPredictState {
+    pub(crate) fn new(cfg: &SamplerConfig, mask: u32) -> MaskPredictState {
+        MaskPredictState { i: 0, iters: cfg.steps, mask }
     }
-    let (n, v, iters) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
-    let mask = mcfg.mask_id;
-    let mut rng = SplitMix64::new(seed);
+}
 
-    let mut x = vec![vec![mask; n]; batch];
-    let mut trace = Vec::new();
+impl AlgState for MaskPredictState {
+    fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
+        if self.i < self.iters {
+            // feed a time proportional to the masked fraction for conditioning
+            let t_norm = 1.0 - (self.i as f32 / self.iters as f32);
+            Some((t_norm, t_norm as f64))
+        } else {
+            None
+        }
+    }
 
-    for i in 0..iters {
-        // feed a time proportional to the masked fraction for conditioning
-        let t_norm = 1.0 - (i as f32 / iters as f32);
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        let n_mask = (n * (iters - i - 1)) / iters;
-        for b in 0..batch {
-            let mut scored: Vec<(usize, u32, f32)> = (0..n)
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let i = self.i;
+        let t_norm = 1.0 - (i as f32 / self.iters as f32);
+        let n_mask = (core.n * (self.iters - i - 1)) / self.iters;
+        for b in 0..core.x.len() {
+            let mut scored: Vec<(usize, u32, f32)> = (0..core.n)
                 .map(|pos| {
-                    let (tok, s) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+                    let (tok, s) =
+                        sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
                     (pos, tok, s)
                 })
                 .collect();
             for &(pos, tok, _) in &scored {
-                x[b][pos] = tok;
+                core.x[b][pos] = tok;
             }
             if n_mask > 0 {
                 scored.sort_by(|a, b| a.2.total_cmp(&b.2)); // ascending score
                 for &(pos, _, _) in scored.iter().take(n_mask) {
-                    x[b][pos] = mask;
+                    core.x[b][pos] = self.mask;
                 }
             }
         }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
+        self.i += 1;
+        core.finish_event(t_norm as f64);
     }
-
-    Ok(GenResult { tokens: x, nfe: iters, trace })
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-    use crate::runtime::MockDenoiser;
+    use crate::runtime::{Denoiser, MockDenoiser};
     use crate::sampler::{generate, SamplerConfig, SamplerKind};
 
     const TARGET: [u32; 8] = [10, 11, 12, 13, 14, 15, 16, 17];

@@ -18,15 +18,83 @@
 
 use anyhow::{bail, Result};
 
+use crate::diffusion::NoiseKind;
 use crate::runtime::Denoiser;
-use crate::schedule::{AlphaSchedule, SplitMix64};
+use crate::schedule::AlphaSchedule;
 
-use super::common::{init_noise, noise_of, row, sample_x0};
-use super::{GenResult, SamplerConfig, TracePoint};
+use super::common::{row, sample_x0};
+use super::session::{self, AlgState, Core, SamplerSession};
+use super::{GenResult, SamplerConfig};
 
-/// σ_t interpolation knob: 1.0 = the paper's "deterministic" DDIM choice
-/// σ_t = (1−α_{t−1})/(1−α_t); 0.0 = fully stochastic (reduces to the
-/// posterior's noise level of ancestral sampling).
+/// Session state for the DDIM-discrete walk; one event per step T..1.
+pub(crate) struct DdimState {
+    t: usize,
+    t_max: usize,
+    sched: AlphaSchedule,
+    noise: NoiseKind,
+    /// σ_t interpolation knob: 1.0 = the paper's "deterministic" DDIM
+    /// choice σ_t = (1−α_{t−1})/(1−α_t); 0.0 = fully stochastic.
+    eta: f64,
+}
+
+impl DdimState {
+    pub(crate) fn new(
+        cfg: &SamplerConfig,
+        sched: AlphaSchedule,
+        noise: NoiseKind,
+        eta: f64,
+    ) -> DdimState {
+        DdimState { t: cfg.steps, t_max: cfg.steps, sched, noise, eta }
+    }
+}
+
+impl AlgState for DdimState {
+    fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
+        if self.t >= 1 {
+            let t_norm = self.t as f32 / self.t_max as f32;
+            Some((t_norm, t_norm as f64))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let t = self.t;
+        let t_norm = t as f32 / self.t_max as f32;
+        let a_t = self.sched.alpha_discrete(t, self.t_max);
+        let a_prev = self.sched.alpha_discrete(t - 1, self.t_max);
+        let sigma_max = if a_t >= 1.0 { 0.0 } else { (1.0 - a_prev) / (1.0 - a_t) };
+        let sigma = self.eta * sigma_max;
+        // mixture weights over {x_t, x̂0, uniform}
+        let w_xt = sigma;
+        let w_x0 = a_prev - sigma * a_t;
+        let w_uni = ((1.0 - a_prev) - (1.0 - a_t) * sigma).max(0.0);
+
+        for b in 0..core.x.len() {
+            for pos in 0..core.n {
+                let (x0_hat, _) = sample_x0(
+                    row(&logits[b], pos, core.v),
+                    core.temperature.max(1.0),
+                    &mut core.rng,
+                );
+                let u = core.rng.uniform() * (w_xt + w_x0 + w_uni);
+                core.x[b][pos] = if u < w_xt {
+                    core.x[b][pos]
+                } else if u < w_xt + w_x0 {
+                    x0_hat
+                } else {
+                    self.noise.sample(&mut core.rng)
+                };
+            }
+        }
+        self.t -= 1;
+        core.finish_event(t_norm as f64);
+    }
+}
+
+/// Run-to-completion wrapper with an explicit η (the `generate()` dispatch
+/// uses η = 1.0 through `SamplerSession`; the unit tests below and future
+/// ablations probe other values).
 pub fn run(
     den: &dyn Denoiser,
     cfg: &SamplerConfig,
@@ -35,50 +103,15 @@ pub fn run(
     seed: u64,
     eta: f64,
 ) -> Result<GenResult> {
-    let mcfg = den.config().clone();
+    let mcfg = den.config();
     if mcfg.kind != "multinomial" {
         bail!("ddim-discrete is defined for multinomial diffusion");
     }
-    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
-    let noise = noise_of(&mcfg);
     let sched = AlphaSchedule::parse(&mcfg.schedule).unwrap_or(AlphaSchedule::CosineSq);
-    let mut rng = SplitMix64::new(seed);
-
-    let mut x = init_noise(batch, n, noise, &mut rng);
-    let mut trace = Vec::new();
-
-    for t in (1..=t_max).rev() {
-        let t_norm = t as f32 / t_max as f32;
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        let a_t = sched.alpha_discrete(t, t_max);
-        let a_prev = sched.alpha_discrete(t - 1, t_max);
-        let sigma_max = if a_t >= 1.0 { 0.0 } else { (1.0 - a_prev) / (1.0 - a_t) };
-        let sigma = eta * sigma_max;
-        // mixture weights over {x_t, x̂0, uniform}
-        let w_xt = sigma;
-        let w_x0 = a_prev - sigma * a_t;
-        let w_uni = ((1.0 - a_prev) - (1.0 - a_t) * sigma).max(0.0);
-
-        for b in 0..batch {
-            for pos in 0..n {
-                let (x0_hat, _) =
-                    sample_x0(row(&logits[b], pos, v), cfg.temperature.max(1.0), &mut rng);
-                let u = rng.uniform() * (w_xt + w_x0 + w_uni);
-                x[b][pos] = if u < w_xt {
-                    x[b][pos]
-                } else if u < w_xt + w_x0 {
-                    x0_hat
-                } else {
-                    noise.sample(&mut rng)
-                };
-            }
-        }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
-    }
-
-    Ok(GenResult { tokens: x, nfe: t_max, trace })
+    let noise = super::common::noise_of(mcfg);
+    let core = session::build_core(mcfg, cfg, batch, seed, false);
+    let alg = Box::new(DdimState::new(cfg, sched, noise, eta));
+    session::drive(den, SamplerSession::from_parts(core, alg, batch), src)
 }
 
 #[cfg(test)]

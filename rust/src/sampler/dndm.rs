@@ -1,73 +1,80 @@
 //! DNDM — Algorithms 1, 3 (discrete) and 2 (continuous).
 //!
-//! The whole point of the paper in one loop: sample the transition-time
-//! set 𝒯 up front, then walk the *event list* (distinct τ values,
-//! descending) instead of all T steps. The denoiser runs once per event;
-//! every other step is the identity `x_{t−1} = x_t` and costs nothing.
+//! The whole point of the paper in one state machine: sample the
+//! transition-time set 𝒯 up front, then walk the *event list* (distinct τ
+//! values, descending) instead of all T steps. The denoiser runs once per
+//! event; every other step is the identity `x_{t−1} = x_t` and costs
+//! nothing. [`DndmState`] / [`DndmCState`] hold 𝒯 and the event cursor;
+//! `session::drive` (or the coordinator's continuous scheduler) supplies
+//! the logits one event at a time.
 
-use anyhow::Result;
+use super::common::{row, sample_x0};
+use super::session::{AlgState, Core};
+use super::SamplerConfig;
 
-use crate::runtime::Denoiser;
-use crate::schedule::SplitMix64;
-
-use super::common::{init_noise, noise_of, row, sample_x0};
-use super::{GenResult, SamplerConfig, TracePoint};
-
-/// Algorithms 1 (v2=false) and 3 (v2=true), batched.
+/// Algorithms 1 (`v2 = false`) and 3 (`v2 = true`), batched.
 ///
 /// With `cfg.shared_tau` one 𝒯 is drawn per batch and broadcast over
 /// sequences (the paper's batched implementation — NFE per batch = |𝒯|);
 /// otherwise each sequence draws its own 𝒯 and the event list is the
 /// union (ablation; more calls, finer per-sequence schedules).
-pub fn run(
-    den: &dyn Denoiser,
-    cfg: &SamplerConfig,
-    src: Option<&[Vec<u32>]>,
-    batch: usize,
-    seed: u64,
+pub(crate) struct DndmState {
+    /// τ per (sequence, position)
+    taus: Vec<Vec<usize>>,
+    /// distinct transition times over the whole batch, descending
+    events: Vec<usize>,
+    idx: usize,
+    t_max: usize,
     v2: bool,
-) -> Result<GenResult> {
-    let mcfg = den.config().clone();
-    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
-    let noise = noise_of(&mcfg);
-    let mut rng = SplitMix64::new(seed);
+}
 
-    // 1. x_T ~ q_noise, 𝒯 ~ 𝒟_τ
-    let mut x = init_noise(batch, n, noise, &mut rng);
-    let taus: Vec<Vec<usize>> = if cfg.shared_tau {
-        let tt = cfg.spec.sample_times(t_max, n, cfg.order, &mut rng);
-        vec![tt.taus; batch]
-    } else {
-        (0..batch)
-            .map(|_| cfg.spec.sample_times(t_max, n, cfg.order, &mut rng).taus)
-            .collect()
-    };
+impl DndmState {
+    pub(crate) fn new(core: &mut Core, cfg: &SamplerConfig, batch: usize, v2: bool) -> DndmState {
+        let t_max = cfg.steps;
+        let taus: Vec<Vec<usize>> = if cfg.shared_tau {
+            let tt = cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng);
+            vec![tt.taus; batch]
+        } else {
+            (0..batch)
+                .map(|_| cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng).taus)
+                .collect()
+        };
+        let mut events: Vec<usize> = taus.iter().flatten().copied().collect();
+        events.sort_unstable_by(|a, b| b.cmp(a));
+        events.dedup();
+        DndmState { taus, events, idx: 0, t_max, v2 }
+    }
+}
 
-    // event list = distinct transition times over the whole batch, descending
-    let mut events: Vec<usize> = taus.iter().flatten().copied().collect();
-    events.sort_unstable_by(|a, b| b.cmp(a));
-    events.dedup();
+impl AlgState for DndmState {
+    fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
+        self.events.get(self.idx).map(|&t| {
+            let t_norm = t as f32 / self.t_max as f32;
+            (t_norm, t_norm as f64)
+        })
+    }
 
-    let mut trace = Vec::new();
-    // 2. reverse walk over events only
-    for &t in &events {
-        let t_norm = t as f32 / t_max as f32;
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        for b in 0..batch {
-            for pos in 0..n {
-                let moves = if v2 { taus[b][pos] >= t } else { taus[b][pos] == t };
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let t = self.events[self.idx];
+        let t_norm = t as f32 / self.t_max as f32;
+        for b in 0..core.x.len() {
+            for pos in 0..core.n {
+                let moves =
+                    if self.v2 { self.taus[b][pos] >= t } else { self.taus[b][pos] == t };
                 if moves {
-                    let (tok, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
-                    x[b][pos] = tok;
+                    let (tok, _) =
+                        sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
+                    core.x[b][pos] = tok;
                 }
             }
         }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
+        self.idx += 1;
+        core.finish_event(t_norm as f64);
     }
 
-    Ok(GenResult { tokens: x, nfe: events.len(), trace })
+    fn taus(&self) -> Option<&[Vec<usize>]> {
+        Some(&self.taus)
+    }
 }
 
 /// Algorithm 2 — DNDM-C (continuous time / infinite steps).
@@ -76,61 +83,58 @@ pub fn run(
 /// −α′(t), or the Beta approximation) and visited in descending order;
 /// ties (which have probability 0 in the continuum but can occur with the
 /// rounded Beta) collapse into one event. NFE → N as T → ∞ (Remark D.4).
-pub fn run_continuous(
-    den: &dyn Denoiser,
-    cfg: &SamplerConfig,
-    src: Option<&[Vec<u32>]>,
-    batch: usize,
-    seed: u64,
-) -> Result<GenResult> {
-    let mcfg = den.config().clone();
-    let (n, v) = (mcfg.seq_len, mcfg.vocab);
-    let noise = noise_of(&mcfg);
-    let mut rng = SplitMix64::new(seed);
+pub(crate) struct DndmCState {
+    /// shared continuous 𝒯 (same broadcast convention as the discrete path)
+    taus: Vec<f64>,
+    /// position indices, descending by timestamp
+    order: Vec<usize>,
+    /// cursor into `order`; ties are grouped per event
+    k: usize,
+}
 
-    let mut x = init_noise(batch, n, noise, &mut rng);
-    // shared continuous 𝒯 (same broadcast convention as the discrete path)
-    let taus: Vec<f64> = cfg
-        .spec
-        .sample_times_continuous(n, cfg.order, &mut rng);
+impl DndmCState {
+    pub(crate) fn new(core: &mut Core, cfg: &SamplerConfig) -> DndmCState {
+        let taus: Vec<f64> = cfg.spec.sample_times_continuous(core.n, cfg.order, &mut core.rng);
+        let mut order: Vec<usize> = (0..core.n).collect();
+        order.sort_by(|&a, &b| taus[b].partial_cmp(&taus[a]).unwrap());
+        DndmCState { taus, order, k: 0 }
+    }
+}
 
-    // order events descending; group exactly-equal timestamps
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| taus[b].partial_cmp(&taus[a]).unwrap());
-
-    let mut trace = Vec::new();
-    let mut nfe = 0usize;
-    let mut k = 0usize;
-    while k < n {
-        let t = taus[order[k]];
-        // all positions sharing this timestamp transition together
-        let mut group = vec![order[k]];
-        let mut j = k + 1;
-        while j < n && (taus[order[j]] - t).abs() < 1e-12 {
-            group.push(order[j]);
-            j += 1;
+impl AlgState for DndmCState {
+    fn next_t(&self, core: &Core) -> Option<(f32, f64)> {
+        if self.k < core.n {
+            let t = self.taus[self.order[self.k]];
+            Some((t as f32, t))
+        } else {
+            None
         }
-        let logits = den.denoise(&x, &vec![t as f32; batch], src)?;
-        nfe += 1;
-        for b in 0..batch {
-            for &pos in &group {
-                let (tok, _) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
-                x[b][pos] = tok;
-            }
-        }
-        if cfg.trace {
-            trace.push(TracePoint { t, tokens: x[0].clone() });
-        }
-        k = j;
     }
 
-    Ok(GenResult { tokens: x, nfe, trace })
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let t = self.taus[self.order[self.k]];
+        // all positions sharing this timestamp transition together
+        let mut group = vec![self.order[self.k]];
+        let mut j = self.k + 1;
+        while j < core.n && (self.taus[self.order[j]] - t).abs() < 1e-12 {
+            group.push(self.order[j]);
+            j += 1;
+        }
+        for b in 0..core.x.len() {
+            for &pos in &group {
+                let (tok, _) =
+                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
+                core.x[b][pos] = tok;
+            }
+        }
+        self.k = j;
+        core.finish_event(t);
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-    use crate::runtime::MockDenoiser;
+    use crate::runtime::{Denoiser, MockDenoiser};
     use crate::sampler::{generate, SamplerConfig, SamplerKind};
     use crate::schedule::{AlphaSchedule, TransitionSpec};
 

@@ -6,75 +6,75 @@
 //! where the score s_{t,n} is the denoiser's log-probability of its own
 //! decoded token. Same NFE as Algorithm 1; + ~1–2 BLEU in the paper.
 
-use anyhow::Result;
+use crate::schedule::TransitionTimes;
 
-use crate::runtime::Denoiser;
-use crate::schedule::SplitMix64;
+use super::common::{row, sample_x0};
+use super::session::{AlgState, Core};
+use super::SamplerConfig;
 
-use super::common::{init_noise, noise_of, row, sample_x0};
-use super::{GenResult, SamplerConfig, TracePoint};
+pub(crate) struct TopKState {
+    /// shared 𝒯 fixing the K_t ladder (counts only; positions score-picked)
+    tt: TransitionTimes,
+    /// decoded-set U per sequence
+    updated: Vec<Vec<bool>>,
+    idx: usize,
+    t_max: usize,
+}
 
-pub fn run(
-    den: &dyn Denoiser,
-    cfg: &SamplerConfig,
-    src: Option<&[Vec<u32>]>,
-    batch: usize,
-    seed: u64,
-) -> Result<GenResult> {
-    let mcfg = den.config().clone();
-    let (n, v, t_max) = (mcfg.seq_len, mcfg.vocab, cfg.steps);
-    let noise = noise_of(&mcfg);
-    let mut rng = SplitMix64::new(seed);
+impl TopKState {
+    pub(crate) fn new(core: &mut Core, cfg: &SamplerConfig, batch: usize) -> TopKState {
+        let t_max = cfg.steps;
+        let tt = cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng);
+        TopKState { tt, updated: vec![vec![false; core.n]; batch], idx: 0, t_max }
+    }
+}
 
-    let mut x = init_noise(batch, n, noise, &mut rng);
-    // shared 𝒯 fixes the K_t ladder (counts only; positions are score-picked)
-    let tt = cfg.spec.sample_times(t_max, n, cfg.order, &mut rng);
+impl AlgState for TopKState {
+    fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
+        self.tt.events().get(self.idx).map(|&t| {
+            let t_norm = t as f32 / self.t_max as f32;
+            (t_norm, t_norm as f64)
+        })
+    }
 
-    // decoded-set U per sequence
-    let mut updated = vec![vec![false; n]; batch];
-    let mut trace = Vec::new();
-    let mut nfe = 0usize;
-
-    // events: times where K_{t-1} > K_t, i.e. the distinct τ values
-    for &t in tt.events() {
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+        let t = self.tt.events()[self.idx];
         // after this event, k_target tokens must be decoded in total
-        let k_target = tt.k_t(t);
-        let t_norm = t as f32 / t_max as f32;
-        let logits = den.denoise(&x, &vec![t_norm; batch], src)?;
-        nfe += 1;
+        let k_target = self.tt.k_t(t);
+        let t_norm = t as f32 / self.t_max as f32;
 
-        for b in 0..batch {
+        for b in 0..core.x.len() {
             // decode + score every position, then commit the top scorers
-            let mut cand: Vec<(usize, u32, f32)> = Vec::with_capacity(n);
-            for pos in 0..n {
-                let (tok, score) = sample_x0(row(&logits[b], pos, v), cfg.temperature, &mut rng);
+            let mut cand: Vec<(usize, u32, f32)> = Vec::with_capacity(core.n);
+            for pos in 0..core.n {
+                let (tok, score) =
+                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
                 cand.push((pos, tok, score));
             }
             cand.sort_by(|a, b| b.2.total_cmp(&a.2));
-            let mut committed = updated[b].iter().filter(|&&u| u).count();
+            let mut committed = self.updated[b].iter().filter(|&&u| u).count();
             for (pos, tok, _) in cand {
                 if committed >= k_target {
                     break;
                 }
-                if !updated[b][pos] {
-                    x[b][pos] = tok;
-                    updated[b][pos] = true;
+                if !self.updated[b][pos] {
+                    core.x[b][pos] = tok;
+                    self.updated[b][pos] = true;
                     committed += 1;
                 }
             }
         }
-        if cfg.trace {
-            trace.push(TracePoint { t: t_norm as f64, tokens: x[0].clone() });
-        }
+        self.idx += 1;
+        core.finish_event(t_norm as f64);
     }
 
-    Ok(GenResult { tokens: x, nfe, trace })
+    // no taus() override: Algorithm 4 predetermines the K_t counts, not
+    // per-position times, so the default `None` is correct.
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
-    use crate::runtime::MockDenoiser;
+    use crate::runtime::{Denoiser, MockDenoiser};
     use crate::sampler::{generate, SamplerConfig, SamplerKind};
 
     fn mock(kind: &str) -> MockDenoiser {

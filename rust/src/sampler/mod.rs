@@ -1,4 +1,12 @@
-//! Sampling algorithms.
+//! Sampling algorithms, structured as per-NFE state machines.
+//!
+//! Every algorithm is a [`session::SamplerSession`]: it owns its
+//! predetermined transition set 𝒯 (DNDM family) or per-step schedule
+//! (baselines), exposes `next_event()` / `advance(logits)`, and yields
+//! control back to the caller at every denoiser-call boundary. The
+//! [`generate`] dispatch is a thin [`session::drive`] loop over a session;
+//! the coordinator's continuous scheduler steps sessions by hand to merge
+//! requests into in-flight batches.
 //!
 //! The paper's contributions:
 //! * [`dndm`] — Algorithm 1 (DNDM), Algorithm 3 (DNDM-v2, re-update τ≥t)
@@ -6,13 +14,11 @@
 //! * [`dndm_topk`] — Algorithm 4 (DNDM-k, top-k transition time).
 //!
 //! Baselines reproduced for the tables:
-//! * [`baselines::d3pm`] — vanilla ancestral sampling (Hoogeboom 2021b /
-//!   Austin 2021): one NN call per step, stochastic posterior per token.
-//! * [`baselines::rdm`] — RDM reparameterized sampling (Zheng 2023), with
-//!   and without top-k selection: one NN call per step, reveal-count from
-//!   the schedule.
-//! * [`baselines::mask_predict`] — Mask-Predict (Ghazvininejad 2019) for
-//!   Table 13.
+//! * [`baselines`] — D3PM ancestral sampling (one NN call per step,
+//!   stochastic posterior per token), RDM reparameterized sampling
+//!   (Zheng 2023, with/without top-k selection), and Mask-Predict
+//!   (Ghazvininejad 2019) for Table 13.
+//! * [`ddim`] / [`ardm`] — the Remark 3.5 / 3.7 comparators.
 
 pub mod ardm;
 pub mod baselines;
@@ -20,12 +26,15 @@ pub mod common;
 pub mod ddim;
 pub mod dndm;
 pub mod dndm_topk;
+pub mod session;
 
 use anyhow::{bail, Result};
 
 use crate::metrics::NfeCounter;
 use crate::runtime::Denoiser;
 use crate::schedule::{AlphaSchedule, TransitionOrder, TransitionSpec};
+
+pub use session::{PendingCall, SamplerSession};
 
 /// Which algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -185,18 +194,8 @@ pub fn generate(
     } else if den.config().conditional() {
         bail!("conditional model requires src");
     }
-    let result = match cfg.kind {
-        SamplerKind::Dndm => dndm::run(den, cfg, src, batch, seed, false)?,
-        SamplerKind::DndmV2 => dndm::run(den, cfg, src, batch, seed, true)?,
-        SamplerKind::DndmC => dndm::run_continuous(den, cfg, src, batch, seed)?,
-        SamplerKind::DndmTopK => dndm_topk::run(den, cfg, src, batch, seed)?,
-        SamplerKind::D3pm => baselines::d3pm(den, cfg, src, batch, seed)?,
-        SamplerKind::Rdm => baselines::rdm(den, cfg, src, batch, seed, false)?,
-        SamplerKind::RdmTopK => baselines::rdm(den, cfg, src, batch, seed, true)?,
-        SamplerKind::MaskPredict => baselines::mask_predict(den, cfg, src, batch, seed)?,
-        SamplerKind::Ddim => ddim::run(den, cfg, src, batch, seed, 1.0)?,
-        SamplerKind::Ardm => ardm::run(den, cfg, src, batch, seed, 1)?,
-    };
+    let sess = SamplerSession::new(den.config(), cfg, batch, seed)?;
+    let result = session::drive(den, sess, src)?;
     if let Some(c) = counter {
         for _ in 0..result.nfe {
             c.record_call(batch);

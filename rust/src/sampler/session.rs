@@ -1,0 +1,343 @@
+//! The per-NFE sampling state machine — every sampler as a resumable
+//! session instead of a closed run-to-completion loop.
+//!
+//! DNDM's predetermined transition set 𝒯 fixes every denoiser call before
+//! sampling begins (Algorithm 1), so a sampler is naturally a sequence of
+//! (call time, state update) events. A [`SamplerSession`] exposes exactly
+//! that structure:
+//!
+//! ```text
+//! let mut sess = SamplerSession::new(den.config(), &cfg, batch, seed)?;
+//! while let Some(call) = sess.next_event() {
+//!     let logits = den.denoise(sess.x(), &vec![call.t; sess.batch()], src)?;
+//!     sess.advance(&logits)?;
+//! }
+//! let result = sess.into_result();
+//! ```
+//!
+//! Yielding control to the caller at every NFE boundary is what lets the
+//! coordinator's continuous scheduler merge new requests into an in-flight
+//! batch between calls (`coordinator::scheduler`) — the serving-side
+//! analogue of the paper's |𝒯|-call speedup. The legacy [`generate`]
+//! dispatch is now just [`drive`] over a session, so closed-loop and
+//! hand-stepped sampling are the same code path and produce byte-identical
+//! outputs (pinned by `tests/determinism.rs`).
+//!
+//! [`generate`]: super::generate
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Denoiser, ModelConfig};
+use crate::schedule::{AlphaSchedule, SplitMix64};
+
+use super::common::{init_noise, noise_of};
+use super::{ardm, baselines, ddim, dndm, dndm_topk};
+use super::{GenResult, SamplerConfig, SamplerKind, TracePoint};
+
+/// The denoiser call a session needs next.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PendingCall {
+    /// Normalized time in [0, 1] to feed the denoiser for every sequence
+    /// in this session (sessions are time-aligned internally).
+    pub t: f32,
+    /// Exact event time — identical to `t` for discrete samplers, the
+    /// full-precision timestamp for DNDM-C (trace resolution).
+    pub t_exact: f64,
+    /// 0-based index of this call within the session (== NFE so far).
+    pub index: usize,
+}
+
+/// State shared by every algorithm: current tokens, the RNG stream, and
+/// per-event accounting. Field layout mirrors the locals of the old
+/// run-to-completion loops so the RNG consumption order — and therefore
+/// every sampled token — is unchanged.
+pub(crate) struct Core {
+    pub x: Vec<Vec<u32>>,
+    pub rng: SplitMix64,
+    pub temperature: f32,
+    /// sequence length N
+    pub n: usize,
+    /// vocab size V
+    pub v: usize,
+    pub trace_on: bool,
+    pub trace: Vec<TracePoint>,
+    /// denoiser calls completed
+    pub nfe: usize,
+}
+
+impl Core {
+    /// Book-keeping after one denoiser call has been applied.
+    pub fn finish_event(&mut self, t: f64) {
+        self.nfe += 1;
+        if self.trace_on {
+            self.trace.push(TracePoint { t, tokens: self.x[0].clone() });
+        }
+    }
+}
+
+/// One sampling algorithm's private state. Implementations live next to
+/// the algorithms they refactor (`dndm.rs`, `baselines.rs`, …).
+pub(crate) trait AlgState {
+    /// `(t_for_denoiser, exact_event_time)` of the next call, or `None`
+    /// when sampling is complete.
+    fn next_t(&self, core: &Core) -> Option<(f32, f64)>;
+
+    /// Apply the logits of the pending call: update `core.x`, consume RNG,
+    /// and finish with `core.finish_event(..)`.
+    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]);
+
+    /// The discrete per-position transition times, for samplers that
+    /// predetermine them (the DNDM family).
+    fn taus(&self) -> Option<&[Vec<usize>]> {
+        None
+    }
+}
+
+/// Construct the shared core exactly the way the old loops did: RNG from
+/// the seed, then x_T (from q_noise, or all-[MASK] for the mask-seeded
+/// algorithms, which draw nothing for x_T).
+pub(crate) fn build_core(
+    mcfg: &ModelConfig,
+    cfg: &SamplerConfig,
+    batch: usize,
+    seed: u64,
+    masked_init: bool,
+) -> Core {
+    let n = mcfg.seq_len;
+    let mut rng = SplitMix64::new(seed);
+    let x = if masked_init {
+        vec![vec![mcfg.mask_id; n]; batch]
+    } else {
+        init_noise(batch, n, noise_of(mcfg), &mut rng)
+    };
+    Core {
+        x,
+        rng,
+        temperature: cfg.temperature,
+        n,
+        v: mcfg.vocab,
+        trace_on: cfg.trace,
+        trace: Vec::new(),
+        nfe: 0,
+    }
+}
+
+/// A batched sampling run, advanced one NFE at a time by the caller.
+pub struct SamplerSession {
+    core: Core,
+    alg: Box<dyn AlgState>,
+    batch: usize,
+}
+
+impl SamplerSession {
+    /// Build a session for `cfg.kind`. Fails fast on model/sampler
+    /// mismatches (mask-predict & ARDM need absorbing, DDIM multinomial).
+    pub fn new(
+        mcfg: &ModelConfig,
+        cfg: &SamplerConfig,
+        batch: usize,
+        seed: u64,
+    ) -> Result<SamplerSession> {
+        match cfg.kind {
+            SamplerKind::MaskPredict | SamplerKind::Ardm if mcfg.kind != "absorbing" => {
+                bail!("{} requires an absorbing model", cfg.kind.name());
+            }
+            SamplerKind::Ddim if mcfg.kind != "multinomial" => {
+                bail!("ddim-discrete is defined for multinomial diffusion");
+            }
+            // τ is drawn from 1..=T, so the discrete DNDM family needs a
+            // non-empty grid (the step-marching baselines treat T = 0 as a
+            // no-op instead; DNDM-C ignores `steps` entirely)
+            SamplerKind::Dndm | SamplerKind::DndmV2 | SamplerKind::DndmTopK
+                if cfg.steps == 0 =>
+            {
+                bail!("{} requires steps >= 1", cfg.kind.name());
+            }
+            _ => {}
+        }
+        let masked_init =
+            matches!(cfg.kind, SamplerKind::MaskPredict | SamplerKind::Ardm);
+        let mut core = build_core(mcfg, cfg, batch, seed, masked_init);
+        let sched = AlphaSchedule::parse(&mcfg.schedule).unwrap_or(AlphaSchedule::CosineSq);
+        let noise = noise_of(mcfg);
+        let alg: Box<dyn AlgState> = match cfg.kind {
+            SamplerKind::Dndm => Box::new(dndm::DndmState::new(&mut core, cfg, batch, false)),
+            SamplerKind::DndmV2 => Box::new(dndm::DndmState::new(&mut core, cfg, batch, true)),
+            SamplerKind::DndmC => Box::new(dndm::DndmCState::new(&mut core, cfg)),
+            SamplerKind::DndmTopK => Box::new(dndm_topk::TopKState::new(&mut core, cfg, batch)),
+            SamplerKind::D3pm => Box::new(baselines::D3pmState::new(cfg, sched, noise)),
+            SamplerKind::Rdm => {
+                Box::new(baselines::RdmState::new(cfg, sched, batch, core.n, false))
+            }
+            SamplerKind::RdmTopK => {
+                Box::new(baselines::RdmState::new(cfg, sched, batch, core.n, true))
+            }
+            SamplerKind::MaskPredict => {
+                Box::new(baselines::MaskPredictState::new(cfg, mcfg.mask_id))
+            }
+            SamplerKind::Ddim => Box::new(ddim::DdimState::new(cfg, sched, noise, 1.0)),
+            SamplerKind::Ardm => Box::new(ardm::ArdmState::new(&mut core, 1)),
+        };
+        Ok(SamplerSession { core, alg, batch })
+    }
+
+    /// Assemble a session from a pre-built core + algorithm state (the
+    /// escape hatch for non-default knobs: DDIM's η, ARDM's parallel k).
+    pub(crate) fn from_parts(core: Core, alg: Box<dyn AlgState>, batch: usize) -> SamplerSession {
+        SamplerSession { core, alg, batch }
+    }
+
+    /// Number of sequences in this session.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Current tokens (x_t), one row per sequence — what the next denoiser
+    /// call must see.
+    pub fn x(&self) -> &[Vec<u32>] {
+        &self.core.x
+    }
+
+    /// Denoiser calls completed so far (== |𝒯| events fired for DNDM).
+    pub fn nfe(&self) -> usize {
+        self.core.nfe
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.alg.next_t(&self.core).is_none()
+    }
+
+    /// The next denoiser call this session needs, or `None` when finished.
+    pub fn next_event(&self) -> Option<PendingCall> {
+        self.alg
+            .next_t(&self.core)
+            .map(|(t, t_exact)| PendingCall { t, t_exact, index: self.core.nfe })
+    }
+
+    /// Apply the logits answering [`Self::next_event`]'s call.
+    pub fn advance(&mut self, logits: &[Vec<f32>]) -> Result<()> {
+        if self.alg.next_t(&self.core).is_none() {
+            bail!("session is already complete");
+        }
+        if logits.len() != self.batch {
+            bail!("logits batch {} != session batch {}", logits.len(), self.batch);
+        }
+        self.alg.advance(&mut self.core, logits);
+        Ok(())
+    }
+
+    /// Predetermined per-position transition times (DNDM family only).
+    pub fn taus(&self) -> Option<&[Vec<usize>]> {
+        self.alg.taus()
+    }
+
+    pub fn into_result(self) -> GenResult {
+        GenResult { tokens: self.core.x, nfe: self.core.nfe, trace: self.core.trace }
+    }
+}
+
+/// Run a session to completion against a denoiser — the thin driver loop
+/// the legacy `generate()` dispatch now reduces to.
+pub fn drive(
+    den: &dyn Denoiser,
+    mut sess: SamplerSession,
+    src: Option<&[Vec<u32>]>,
+) -> Result<GenResult> {
+    while let Some(call) = sess.next_event() {
+        let t = vec![call.t; sess.batch()];
+        let logits = den.denoise(sess.x(), &t, src)?;
+        sess.advance(&logits)?;
+    }
+    Ok(sess.into_result())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+    use crate::sampler::{generate, SamplerConfig, SamplerKind};
+
+    fn mock(kind: &str) -> MockDenoiser {
+        let cfg = MockDenoiser::test_config(20, 8, 0, kind);
+        MockDenoiser::fixed(cfg, vec![10, 11, 12, 13, 14, 15, 16, 17])
+    }
+
+    #[test]
+    fn hand_stepped_session_matches_generate() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_temperature(1.0);
+        let den = mock("absorbing");
+        let want = generate(&den, &cfg, None, 2, 7, None).unwrap();
+
+        let den = mock("absorbing");
+        let mut sess = SamplerSession::new(den.config(), &cfg, 2, 7).unwrap();
+        let mut calls = 0;
+        while let Some(call) = sess.next_event() {
+            assert_eq!(call.index, calls);
+            let logits = den.denoise(sess.x(), &vec![call.t; sess.batch()], None).unwrap();
+            sess.advance(&logits).unwrap();
+            calls += 1;
+        }
+        assert!(sess.is_done());
+        let got = sess.into_result();
+        assert_eq!(got.tokens, want.tokens);
+        assert_eq!(got.nfe, want.nfe);
+        assert_eq!(calls, got.nfe);
+    }
+
+    #[test]
+    fn event_times_are_decreasing_for_dndm() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let mut sess = SamplerSession::new(den.config(), &cfg, 1, 3).unwrap();
+        let mut prev = f32::INFINITY;
+        while let Some(call) = sess.next_event() {
+            assert!(call.t < prev, "event times must strictly decrease");
+            prev = call.t;
+            let logits = den.denoise(sess.x(), &vec![call.t; 1], None).unwrap();
+            sess.advance(&logits).unwrap();
+        }
+    }
+
+    #[test]
+    fn advance_rejects_wrong_batch_and_completed_session() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let mut sess = SamplerSession::new(den.config(), &cfg, 2, 5).unwrap();
+        let call = sess.next_event().unwrap();
+        let logits = den.denoise(sess.x(), &vec![call.t; 2], None).unwrap();
+        assert!(sess.advance(&logits[..1]).is_err(), "wrong batch must fail");
+        sess.advance(&logits).unwrap();
+        while let Some(call) = sess.next_event() {
+            let logits = den.denoise(sess.x(), &vec![call.t; 2], None).unwrap();
+            sess.advance(&logits).unwrap();
+        }
+        let logits = den.denoise(sess.x(), &[1.0, 1.0], None).unwrap();
+        assert!(sess.advance(&logits).is_err(), "completed session must fail");
+    }
+
+    #[test]
+    fn dndm_session_exposes_taus_baselines_dont() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let sess = SamplerSession::new(den.config(), &cfg, 3, 1).unwrap();
+        let taus = sess.taus().unwrap();
+        assert_eq!(taus.len(), 3);
+        assert!(taus.iter().all(|row| row.iter().all(|&t| (1..=25).contains(&t))));
+
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 25);
+        let sess = SamplerSession::new(den.config(), &cfg, 1, 1).unwrap();
+        assert!(sess.taus().is_none());
+    }
+
+    #[test]
+    fn session_rejects_model_mismatch() {
+        let den = mock("multinomial");
+        for kind in [SamplerKind::MaskPredict, SamplerKind::Ardm] {
+            let cfg = SamplerConfig::new(kind, 10);
+            assert!(SamplerSession::new(den.config(), &cfg, 1, 1).is_err(), "{kind:?}");
+        }
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Ddim, 10);
+        assert!(SamplerSession::new(den.config(), &cfg, 1, 1).is_err());
+    }
+}

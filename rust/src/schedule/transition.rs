@@ -30,6 +30,10 @@ pub enum TransitionSpec {
     Exact(AlphaSchedule),
     /// Reshaped Beta(a, b): draw u ~ Beta, τ = clamp(round(u·T), 1, T).
     Beta { a: f64, b: f64 },
+    /// τ ~ U{1..T} — the exact law of the linear α schedule, but sampled
+    /// directly (one RNG draw, no inverse-CDF search); the continuous
+    /// analogue is U(0, 1].
+    Uniform,
 }
 
 impl TransitionSpec {
@@ -65,6 +69,7 @@ impl TransitionSpec {
                 }
                 pmf
             }
+            TransitionSpec::Uniform => vec![1.0 / t_max as f64; t_max],
         }
     }
 
@@ -91,6 +96,7 @@ impl TransitionSpec {
                 let u = rng.beta(*a, *b);
                 ((u * t_max as f64).round() as usize).clamp(1, t_max)
             }
+            TransitionSpec::Uniform => 1 + rng.below(t_max as u64) as usize,
         }
     }
 
@@ -113,6 +119,7 @@ impl TransitionSpec {
                 0.5 * (lo + hi)
             }
             TransitionSpec::Beta { a, b } => rng.beta(*a, *b).clamp(1e-9, 1.0),
+            TransitionSpec::Uniform => rng.uniform().clamp(1e-9, 1.0),
         }
     }
 
@@ -165,10 +172,14 @@ impl TransitionSpec {
         match self {
             TransitionSpec::Exact(s) => format!("exact:{}", s.name()),
             TransitionSpec::Beta { a, b } => format!("beta:{a}:{b}"),
+            TransitionSpec::Uniform => "uniform".to_string(),
         }
     }
 
     pub fn parse(s: &str) -> Option<TransitionSpec> {
+        if s == "uniform" {
+            return Some(TransitionSpec::Uniform);
+        }
         if let Some(rest) = s.strip_prefix("exact:") {
             return AlphaSchedule::parse(rest).map(TransitionSpec::Exact);
         }
@@ -426,6 +437,33 @@ mod tests {
                 assert!(tt.nfe() >= 1 && tt.nfe() <= t_max.min(n));
             }
         }
+    }
+
+    #[test]
+    fn uniform_spec_matches_linear_exact_law() {
+        // ℙ(τ=t) under Uniform equals the linear-schedule exact law: 1/T.
+        let t_max = 20;
+        let uni = TransitionSpec::Uniform.pmf(t_max);
+        let lin = TransitionSpec::Exact(AlphaSchedule::Linear).pmf(t_max);
+        for (u, l) in uni.iter().zip(&lin) {
+            assert!((u - l).abs() < 1e-9, "{u} vs {l}");
+        }
+        let mut r = rng();
+        let mut counts = vec![0usize; t_max];
+        let trials = 40_000;
+        for _ in 0..trials {
+            let k = TransitionSpec::Uniform.sample_discrete(t_max, &mut r);
+            assert!((1..=t_max).contains(&k));
+            counts[k - 1] += 1;
+        }
+        for (k, &c) in counts.iter().enumerate() {
+            let f = c as f64 / trials as f64;
+            assert!((f - 1.0 / t_max as f64).abs() < 0.01, "k={} f={f}", k + 1);
+        }
+        let tau = TransitionSpec::Uniform.sample_continuous(&mut r);
+        assert!((0.0..=1.0).contains(&tau));
+        assert_eq!(TransitionSpec::parse("uniform"), Some(TransitionSpec::Uniform));
+        assert_eq!(TransitionSpec::Uniform.name(), "uniform");
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Continuous NFE-aligned batching suite, driven deterministically by
+//! hand-ticking the `Scheduler` (no threads, no timing):
+//!
+//! * mid-flight admission happens at transition-time boundaries only,
+//! * retired sequences free slots that are refilled,
+//! * a mixed-spec workload falls back to separate batches instead of
+//!   corrupting the union-𝒯 path.
+//!
+//! DNDM-C with the exact linear schedule is the workhorse: its continuous
+//! τ are a.s. distinct, so every request costs exactly N = 8 denoiser
+//! calls — which makes boundary arithmetic exact.
+
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{cipher_mock_engine, Engine, Pending, SchedPolicy, Scheduler};
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::schedule::{AlphaSchedule, TransitionSpec};
+
+const N: usize = 8;
+
+fn mock_engine() -> Engine {
+    cipher_mock_engine(N)
+}
+
+/// DNDM-C with exact linear 𝒟_τ: per-request NFE = N deterministically.
+fn dndm_c_cfg() -> SamplerConfig {
+    SamplerConfig::new(SamplerKind::DndmC, 0)
+        .with_spec(TransitionSpec::Exact(AlphaSchedule::Linear))
+}
+
+fn req(id: usize, seed: u64, cfg: Option<SamplerConfig>) -> Pending<usize> {
+    Pending {
+        src: Some("the quick fox crosses a river to the garden by".into()),
+        seed,
+        cfg,
+        enqueued: Instant::now(),
+        payload: id,
+    }
+}
+
+fn policy(max_batch: usize, shared: bool) -> SchedPolicy {
+    SchedPolicy { max_batch, window: Duration::ZERO, shared_tau_groups: shared }
+}
+
+#[test]
+fn mid_flight_admission_joins_at_a_boundary_only() {
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(4, true));
+    s.enqueue(req(0, 1, None));
+    let mut done = Vec::new();
+    done.extend(s.tick());
+    done.extend(s.tick());
+    assert_eq!(s.boundary(), 2, "two calls completed");
+    assert_eq!(s.lane_info()[0].admitted_boundary, 0);
+
+    // request 1 arrives while request 0 is mid-flight
+    s.enqueue(req(1, 2, None));
+    done.extend(s.tick());
+    let lanes = s.lane_info();
+    assert_eq!(lanes.len(), 2, "joiner gets its own lane");
+    assert_eq!(lanes[1].admitted_boundary, 2, "admitted exactly at the boundary it arrived at");
+    // the joiner has consumed exactly the calls made since its admission
+    assert_eq!(lanes[1].nfe, 1);
+    assert_eq!(lanes[0].nfe, 3);
+
+    while s.has_work() {
+        done.extend(s.tick());
+    }
+    assert_eq!(done.len(), 2);
+    // both cost exactly N calls of their own — step-decoupling means the
+    // shared in-flight window doesn't distort per-request NFE
+    for f in &done {
+        assert_eq!(f.result.as_ref().unwrap().nfe, N);
+    }
+    // req 0 spans boundaries [0, 8), req 1 [2, 10) → 10 calls total,
+    // versus 16 for run-to-completion serial batches
+    assert_eq!(s.engine().nfe.calls(), 10);
+    assert_eq!(s.engine().nfe.requests(), 2);
+    assert!((s.engine().nfe.avg_request_nfe() - N as f64).abs() < 1e-9);
+}
+
+#[test]
+fn retired_sequences_free_slots_for_waiting_requests() {
+    // capacity 2, three width-1 lanes: the third request must wait until a
+    // slot frees at the retirement boundary, then be admitted there
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(2, false));
+    for i in 0..3 {
+        s.enqueue(req(i, 10 + i as u64, None));
+    }
+    let mut done = Vec::new();
+    done.extend(s.tick());
+    assert_eq!(s.in_flight(), 2, "capacity bounds admission");
+    assert_eq!(s.pending_len(), 1, "third request waits");
+
+    while s.pending_len() > 0 || s.lane_info().len() > 1 {
+        done.extend(s.tick());
+        assert!(s.in_flight() <= 2, "capacity is never exceeded");
+    }
+    // the first two lanes retire together after N calls; request 2 is
+    // admitted at that same boundary
+    let lanes = s.lane_info();
+    assert_eq!(lanes.len(), 1);
+    assert_eq!(lanes[0].admitted_boundary, N as u64, "refill at the retirement boundary");
+
+    while s.has_work() {
+        done.extend(s.tick());
+    }
+    assert_eq!(done.len(), 3);
+    for f in &done {
+        assert_eq!(f.result.as_ref().unwrap().nfe, N);
+    }
+    assert_eq!(s.engine().nfe.calls(), 2 * N as u64);
+}
+
+#[test]
+fn mixed_spec_workload_falls_back_to_separate_batches() {
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(4, true));
+    let other = SamplerConfig::new(SamplerKind::D3pm, 3);
+    s.enqueue(req(0, 1, None));
+    s.enqueue(req(1, 2, Some(other.clone())));
+
+    let mut done = Vec::new();
+    let mut max_in_flight = 0;
+    while s.has_work() {
+        done.extend(s.tick());
+        max_in_flight = max_in_flight.max(s.in_flight());
+        // the two specs must never share the in-flight batch
+        assert!(s.lane_info().len() <= 1, "mixed specs may not co-reside");
+    }
+    assert_eq!(max_in_flight, 1);
+    assert_eq!(done.len(), 2);
+    let nfe0 = done.iter().find(|f| f.payload == 0).unwrap().result.as_ref().unwrap().nfe;
+    let nfe1 = done.iter().find(|f| f.payload == 1).unwrap().result.as_ref().unwrap().nfe;
+    assert_eq!(nfe0, N, "DNDM-C batch ran alone");
+    assert_eq!(nfe1, 3, "D3PM batch ran alone with NFE = T");
+    assert_eq!(s.engine().nfe.calls(), (N + 3) as u64);
+}
+
+#[test]
+fn same_boundary_group_takes_the_shared_tau_fast_path() {
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(8, true));
+    for i in 0..4 {
+        s.enqueue(req(i, 99, None));
+    }
+    let mut done = Vec::new();
+    done.extend(s.tick());
+    // one lane of width 4: the paper's batched implementation — the whole
+    // group costs |𝒯| calls regardless of width
+    if !s.lane_info().is_empty() {
+        assert_eq!(s.lane_info().len(), 1);
+        assert_eq!(s.lane_info()[0].width, 4);
+    }
+    while s.has_work() {
+        done.extend(s.tick());
+    }
+    assert_eq!(done.len(), 4);
+    let nfes: Vec<usize> = done.iter().map(|f| f.result.as_ref().unwrap().nfe).collect();
+    assert!(nfes.windows(2).all(|w| w[0] == w[1]), "shared 𝒯 ⇒ equal NFE: {nfes:?}");
+    assert_eq!(s.engine().nfe.calls() as usize, nfes[0], "batch cost = |𝒯|, not 4·|𝒯|");
+    assert!((s.engine().nfe.mean_width() - 4.0).abs() < 1e-9);
+}
+
+#[test]
+fn bad_spec_fails_its_group_without_poisoning_the_queue() {
+    // DDIM on an absorbing engine is invalid; the request must fail fast
+    // and the next (valid) request must still be served
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(4, true));
+    s.enqueue(req(0, 1, Some(SamplerConfig::new(SamplerKind::Ddim, 10))));
+    s.enqueue(req(1, 2, None));
+    let mut done = Vec::new();
+    while s.has_work() {
+        done.extend(s.tick());
+    }
+    assert_eq!(done.len(), 2);
+    assert!(done.iter().find(|f| f.payload == 0).unwrap().result.is_err());
+    let ok = done.iter().find(|f| f.payload == 1).unwrap();
+    assert_eq!(ok.result.as_ref().unwrap().nfe, N);
+}
+
+#[test]
+fn occupancy_and_wait_metrics_are_recorded() {
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(2, false));
+    for i in 0..2 {
+        s.enqueue(req(i, i as u64, None));
+    }
+    while s.has_work() {
+        s.tick();
+    }
+    let c = &s.engine().nfe;
+    assert_eq!(c.requests(), 2);
+    assert!((c.occupancy(2) - 1.0).abs() < 1e-9, "both slots full for every call");
+    assert!(c.avg_wait() < Duration::from_secs(5), "waits are recorded and sane");
+}

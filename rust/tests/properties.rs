@@ -12,10 +12,10 @@ const SCHEDULES: [AlphaSchedule; 3] =
     [AlphaSchedule::Linear, AlphaSchedule::Cosine, AlphaSchedule::CosineSq];
 
 fn random_spec(g: &mut dndm::util::prop::Gen) -> TransitionSpec {
-    if g.bool() {
-        TransitionSpec::Exact(*g.pick(&SCHEDULES))
-    } else {
-        TransitionSpec::Beta { a: g.f64_in(1.0, 30.0), b: g.f64_in(1.0, 12.0) }
+    match g.usize_in(0, 2) {
+        0 => TransitionSpec::Exact(*g.pick(&SCHEDULES)),
+        1 => TransitionSpec::Beta { a: g.f64_in(1.0, 30.0), b: g.f64_in(1.0, 12.0) },
+        _ => TransitionSpec::Uniform,
     }
 }
 
@@ -196,6 +196,46 @@ fn prop_bleu_bounds_and_identity() {
             &[vec![sent.clone()], vec![sent.clone()]],
         );
         assert!((two_a - two_b).abs() < 1e-9);
+    });
+}
+
+/// NFE accounting through the session API: for Beta/Uniform/Exact specs,
+/// every position transitions exactly once (τ ∈ [1, T], |𝒯| ≤ T), and the
+/// DNDM-reported `nfe` equals |𝒯| — the distinct values in the session's
+/// predetermined transition set.
+#[test]
+fn prop_session_nfe_equals_transition_set_size() {
+    use dndm::runtime::Denoiser;
+    use dndm::sampler::SamplerSession;
+    check("session_nfe_is_tau_size", 20, |g| {
+        let n = g.usize_in(2, 12);
+        let vocab = g.usize_in(8, 30);
+        let steps = g.usize_in(1, 120);
+        let batch = g.usize_in(1, 3);
+        let spec = random_spec(g);
+        let target: Vec<u32> = (0..n).map(|i| (3 + i % (vocab - 3)) as u32).collect();
+        let den = MockDenoiser::fixed(MockDenoiser::test_config(vocab, n, 0, "absorbing"), target);
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, steps).with_spec(spec);
+
+        let mut sess = SamplerSession::new(den.config(), &cfg, batch, g.seed).unwrap();
+        let taus = sess.taus().expect("DNDM sessions expose 𝒯").to_vec();
+        assert_eq!(taus.len(), batch);
+        for row in &taus {
+            assert_eq!(row.len(), n, "every position gets exactly one τ");
+            assert!(row.iter().all(|&t| (1..=steps).contains(&t)), "τ ∈ [1, T]");
+        }
+        let distinct: std::collections::BTreeSet<usize> =
+            taus.iter().flatten().copied().collect();
+        assert!(distinct.len() <= steps, "|𝒯| ≤ T");
+        assert!(distinct.len() <= n * batch, "|𝒯| ≤ N·B");
+
+        while let Some(call) = sess.next_event() {
+            let logits = den.denoise(sess.x(), &vec![call.t; batch], None).unwrap();
+            sess.advance(&logits).unwrap();
+        }
+        let out = sess.into_result();
+        assert_eq!(out.nfe, distinct.len(), "DNDM nfe == |𝒯|");
+        assert_eq!(dndm::runtime::Denoiser::calls(&den) as usize, distinct.len());
     });
 }
 

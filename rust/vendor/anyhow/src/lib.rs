@@ -1,0 +1,230 @@
+//! In-tree drop-in subset of the `anyhow` API, in the same spirit as
+//! `dndm::util` (serde_json → json, clap → args, proptest → prop):
+//! crates.io is unreachable offline, and the handful of features this
+//! codebase uses — `Error`, `Result`, `anyhow!`, `bail!`, `Context` —
+//! fit in one file.
+//!
+//! Mirrored semantics:
+//! * `Error` is a message plus an optional chain of causes.
+//! * `?` converts from any `std::error::Error + Send + Sync + 'static`
+//!   (the blanket `From` below; `Error` itself deliberately does NOT
+//!   implement `std::error::Error`, exactly like the real crate, so the
+//!   blanket impl does not overlap `From<T> for T`).
+//! * `{e}` prints the outermost message; `{e:#}` appends the cause chain
+//!   separated by `: ` (the alternate-Display convention callers rely on).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as the
+/// real crate, so `anyhow::Result<T, E>` call sites also work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message with an optional chain of lower-level causes.
+pub struct Error {
+    msg: String,
+    /// outermost-first chain of causes below `msg`
+    causes: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), causes: Vec::new() }
+    }
+
+    /// Wrap this error under a new context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        let mut causes = Vec::with_capacity(self.causes.len() + 1);
+        causes.push(self.msg);
+        causes.extend(self.causes);
+        Error { msg: ctx.to_string(), causes }
+    }
+
+    /// The outermost message (what `{e}` prints).
+    pub fn to_string_outer(&self) -> &str {
+        &self.msg
+    }
+
+    /// The deepest cause in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.causes.last().map(String::as_str).unwrap_or(&self.msg)
+    }
+
+    /// Outermost-first iterator over the message chain.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.causes.iter().map(String::as_str))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.msg)?;
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error. `Error` itself is not `std::error::Error`,
+// so this cannot overlap the reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut causes = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            causes.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg: e.to_string(), causes }
+    }
+}
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `if !cond { bail!(...) }` — provided for API completeness.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .with_context(|| "loading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("zero input (got {x})");
+            }
+            ensure!(x < 10, "too big: {}", x);
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero input (got 0)");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+
+    #[test]
+    fn chain_iterates_outermost_first() {
+        let e = Error::msg("root").context("mid").context("top");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["top", "mid", "root"]);
+    }
+}

@@ -1,0 +1,133 @@
+//! In-tree **stub** of the `xla` PJRT bindings.
+//!
+//! The real crate links against libxla/PJRT, which cannot be built or
+//! fetched offline. This stub keeps the whole `dndm` crate — including the
+//! PJRT-backed `runtime::ModelRuntime` — compiling, and turns every
+//! attempt to actually touch PJRT into a clear runtime error. Everything
+//! mock-backed (unit tests, property tests, the continuous-batching
+//! scheduler tests, benches without artifacts) never reaches these calls:
+//! `PjRtClient::cpu()` is the single entry point and it fails first.
+//!
+//! To serve compiled HLO artifacts, replace this path dependency in
+//! `rust/Cargo.toml` with the real `xla` bindings; the API surface below
+//! matches the subset `runtime/model.rs` uses.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: built with the in-tree xla stub (no libxla). \
+     Mock-backed paths are unaffected; to run compiled artifacts, swap \
+     rust/vendor/xla for the real xla bindings";
+
+/// Error type for all stub operations.
+pub struct XlaError(String);
+
+impl XlaError {
+    fn unavailable() -> XlaError {
+        XlaError(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Stub of the PJRT client handle.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the stub — the one gate every PJRT path goes through.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Stub of a parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Stub of an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of a compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Stub of a host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(XlaError::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_with_clear_message() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("stub"));
+    }
+}
