@@ -16,6 +16,7 @@ use dndm::metrics::bleu::corpus_bleu_str;
 use dndm::runtime::{Denoiser, ModelRuntime, TransitionRuntime};
 use dndm::sampler::common::{row, sample_x0};
 use dndm::schedule::{AlphaSchedule, SplitMix64, TransitionOrder, TransitionSpec};
+use dndm::tensor::{LogitsBuf, TokenBatch};
 use dndm::util::bench::{bench, Table};
 
 fn main() {
@@ -64,33 +65,38 @@ fn main() {
             let rt = ModelRuntime::load(&arts, &client, &m.name).unwrap();
             let cfg = rt.config.clone();
             for b in [1usize, 4, 16] {
-                let x = vec![vec![cfg.mask_id; cfg.seq_len]; b];
-                let src = vec![vec![5u32; cfg.src_len]; b];
+                let x = TokenBatch::filled(b, cfg.seq_len, cfg.mask_id);
+                let src = TokenBatch::filled(b, cfg.src_len, 5);
                 let t = vec![0.5f32; b];
-                rt.denoise(&x, &t, Some(&src)).unwrap(); // compile warmup
+                let mut out = LogitsBuf::new();
+                rt.denoise_into(&x, &t, Some(&src), &mut out).unwrap(); // compile warmup
                 results.push(bench(
                     &format!("denoise b{b} (weights-as-buffers)"),
                     5,
                     Duration::from_secs(1),
                     || {
-                        std::hint::black_box(rt.denoise(&x, &t, Some(&src)).unwrap());
+                        rt.denoise_into(&x, &t, Some(&src), &mut out).unwrap();
+                        std::hint::black_box(out.flat());
                     },
                 ));
             }
 
             // §Perf L2: split encode/decode (cached memory) vs monolithic
             if rt.split_enabled() {
-                let x = vec![vec![cfg.mask_id; cfg.seq_len]; 16];
-                let src = vec![vec![5u32; cfg.src_len]; 16];
+                let x = TokenBatch::filled(16, cfg.seq_len, cfg.mask_id);
+                let src = TokenBatch::filled(16, cfg.src_len, 5);
                 let t = vec![0.5f32; 16];
-                rt.denoise(&x, &t, Some(&src)).unwrap(); // warm decode path
+                let mut out = LogitsBuf::new();
+                rt.denoise_into(&x, &t, Some(&src), &mut out).unwrap(); // warm decode path
                 results.push(bench("denoise b16 split(cached enc)", 5, Duration::from_secs(1), || {
-                    std::hint::black_box(rt.denoise(&x, &t, Some(&src)).unwrap());
+                    rt.denoise_into(&x, &t, Some(&src), &mut out).unwrap();
+                    std::hint::black_box(out.flat());
                 }));
                 rt.set_split(false);
-                rt.denoise(&x, &t, Some(&src)).unwrap();
+                rt.denoise_into(&x, &t, Some(&src), &mut out).unwrap();
                 results.push(bench("denoise b16 monolithic", 5, Duration::from_secs(1), || {
-                    std::hint::black_box(rt.denoise(&x, &t, Some(&src)).unwrap());
+                    rt.denoise_into(&x, &t, Some(&src), &mut out).unwrap();
+                    std::hint::black_box(out.flat());
                 }));
                 rt.set_split(true);
             }

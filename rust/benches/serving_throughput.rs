@@ -10,7 +10,14 @@
 //! Runs against the real PJRT runtime when artifacts exist, otherwise
 //! against the deterministic cipher mock (so the continuous-admission path
 //! is exercised on every machine).
+//!
+//! Besides the human-readable table, the bench emits a machine-readable
+//! `BENCH_serving.json` with per-row throughput, per-NFE host overhead,
+//! and allocations per denoiser call (counted by a process-wide allocator
+//! wrapper) — the perf trajectory of the flat data path (`docs/perf.md`).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use dndm::coordinator::{BatchPolicy, Engine, SchedPolicy, Server};
@@ -20,11 +27,61 @@ use dndm::runtime::Artifacts;
 use dndm::sampler::{SamplerConfig, SamplerKind};
 use dndm::util::bench::Table;
 
+/// Process-wide allocation counter: every heap acquisition (alloc /
+/// realloc / alloc_zeroed) bumps one relaxed atomic. Benches own their
+/// binary, so unlike the cfg(test) lib harness this can be global.
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
 #[derive(Clone, Copy)]
 enum Mode {
     Sequential,
     Fixed(usize, u64),
     Continuous(usize, u64),
+}
+
+struct Row {
+    name: &'static str,
+    req_per_s: f64,
+    e2e_p95_ms: f64,
+    nn_calls: u64,
+    avg_request_nfe: f64,
+    /// wall-clock per denoiser call over the whole run, µs. An upper bound
+    /// on host overhead per NFE: windowed policies include admission-window
+    /// idle time; the sequential row (batch 1, window 0) is the clean
+    /// host-overhead trend metric, since its network (mock) is ~free.
+    per_nfe_host_us: f64,
+    /// heap acquisitions per denoiser call over the request phase. Counts
+    /// the whole process (client submit loop, channels, per-request
+    /// admission/retirement), so like `per_nfe_host_us` it is an upper
+    /// bound; the sequential row (1 request per batch, fewest confounders
+    /// per call) is the cleanest trend row for per-NFE churn.
+    allocs_per_call: f64,
 }
 
 fn factory(use_mock: bool) -> impl FnOnce() -> anyhow::Result<Engine> + Send + 'static {
@@ -46,8 +103,7 @@ fn factory(use_mock: bool) -> impl FnOnce() -> anyhow::Result<Engine> + Send + '
     }
 }
 
-/// (req/s, e2e p95 ms, NN calls, avg per-request NFE)
-fn run(mode: Mode, n_requests: usize, steps: usize, use_mock: bool) -> (f64, f64, u64, f64) {
+fn run(name: &'static str, mode: Mode, n_requests: usize, steps: usize, use_mock: bool) -> Row {
     let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
     let (srv, join) = match mode {
         Mode::Sequential => Server::start(
@@ -71,6 +127,7 @@ fn run(mode: Mode, n_requests: usize, steps: usize, use_mock: bool) -> (f64, f64
         ),
     };
     let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
     let t0 = Instant::now();
     let rxs: Vec<_> = pairs
         .iter()
@@ -81,15 +138,20 @@ fn run(mode: Mode, n_requests: usize, steps: usize, use_mock: bool) -> (f64, f64
         rx.recv().unwrap().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
     let stats = srv.stats().unwrap();
     srv.shutdown();
     join.join();
-    (
-        n_requests as f64 / wall,
-        stats.e2e_p95.as_secs_f64() * 1e3,
-        stats.nn_calls,
-        stats.avg_request_nfe,
-    )
+    let calls = stats.nn_calls.max(1);
+    Row {
+        name,
+        req_per_s: n_requests as f64 / wall,
+        e2e_p95_ms: stats.e2e_p95.as_secs_f64() * 1e3,
+        nn_calls: stats.nn_calls,
+        avg_request_nfe: stats.avg_request_nfe,
+        per_nfe_host_us: wall / calls as f64 * 1e6,
+        allocs_per_call: allocs as f64 / calls as f64,
+    }
 }
 
 /// Cheap engine-init probe: loads artifacts + weights but skips the
@@ -105,6 +167,48 @@ fn probe_real_engine() -> anyhow::Result<()> {
         .clone();
     Engine::new(&arts, &m)?;
     Ok(())
+}
+
+fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"serving_throughput\",\n");
+    json.push_str(&format!("  \"backend\": \"{backend}\",\n"));
+    json.push_str(&format!("  \"requests\": {n},\n"));
+    json.push_str(&format!("  \"steps\": {steps},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"policy\": \"{}\", \"req_per_s\": {:.3}, \"e2e_p95_ms\": {:.3}, \
+             \"nn_calls\": {}, \"avg_request_nfe\": {:.3}, \"per_nfe_host_us\": {:.3}, \
+             \"allocs_per_call\": {:.1}}}{}\n",
+            r.name,
+            r.req_per_s,
+            r.e2e_p95_ms,
+            r.nn_calls,
+            r.avg_request_nfe,
+            r.per_nfe_host_us,
+            r.allocs_per_call,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    // same policy as the TSV below: a mock run must never clobber
+    // real-runtime numbers — if BENCH_serving.json holds pjrt data and
+    // this run is mock-backed, divert to the _mock file
+    let path = if backend == "mock"
+        && std::fs::read_to_string("BENCH_serving.json")
+            .map(|s| s.contains("\"backend\": \"pjrt\""))
+            .unwrap_or(false)
+    {
+        "BENCH_serving_mock.json"
+    } else {
+        "BENCH_serving.json"
+    };
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[serving_throughput] wrote {path}"),
+        Err(e) => eprintln!("[serving_throughput] could not write {path}: {e}"),
+    }
 }
 
 fn main() {
@@ -123,7 +227,7 @@ fn main() {
     }
     let n = exp::bench_count() * 2;
     let steps = 50;
-    let mut out = Table::new(&["policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE"]);
+    let mut rows = Vec::new();
     for (name, mode) in [
         ("sequential (batch=1)", Mode::Sequential),
         ("fixed b=4 / 10ms", Mode::Fixed(4, 10)),
@@ -131,19 +235,29 @@ fn main() {
         ("continuous b=4 / 10ms", Mode::Continuous(4, 10)),
         ("continuous b=16 / 20ms", Mode::Continuous(16, 20)),
     ] {
-        let (tput, p95, calls, req_nfe) = run(mode, n, steps, use_mock);
+        rows.push(run(name, mode, n, steps, use_mock));
+    }
+
+    let mut out = Table::new(&[
+        "policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE", "host µs/NFE", "allocs/call",
+    ]);
+    for r in &rows {
         out.row(&[
-            name.into(),
-            format!("{tput:.2}"),
-            format!("{p95:.1}"),
-            calls.to_string(),
-            if req_nfe > 0.0 { format!("{req_nfe:.2}") } else { "-".into() },
+            r.name.into(),
+            format!("{:.2}", r.req_per_s),
+            format!("{:.1}", r.e2e_p95_ms),
+            r.nn_calls.to_string(),
+            if r.avg_request_nfe > 0.0 { format!("{:.2}", r.avg_request_nfe) } else { "-".into() },
+            format!("{:.1}", r.per_nfe_host_us),
+            format!("{:.1}", r.allocs_per_call),
         ]);
     }
     println!(
         "\n== Serving throughput: continuous vs fixed NFE-aligned batching (T={steps}, {n} reqs) =="
     );
     out.print();
+    let backend = if use_mock { "mock" } else { "pjrt" };
+    save_json(&rows, backend, n, steps);
     // mock results go to their own file so they can never masquerade as
     // real-runtime numbers in the persisted bench data
     let tsv_name = if use_mock { "serving_throughput_mock" } else { "serving_throughput" };

@@ -67,14 +67,12 @@ impl Engine {
         // compilation for the bucket of each size
         let cfg = self.den.config().clone();
         for &b in buckets {
-            let x = vec![vec![cfg.noise_lo; cfg.seq_len]; b];
+            let x = crate::tensor::TokenBatch::filled(b, cfg.seq_len, cfg.noise_lo);
             let t = vec![1.0f32; b];
-            let src = if cfg.conditional() {
-                Some(vec![vec![cfg.noise_lo; cfg.src_len]; b])
-            } else {
-                None
-            };
-            self.den.denoise(&x, &t, src.as_deref())?;
+            let src = cfg
+                .conditional()
+                .then(|| crate::tensor::TokenBatch::filled(b, cfg.src_len, cfg.noise_lo));
+            self.den.denoise(&x, &t, src.as_ref())?;
         }
         Ok(())
     }

@@ -21,5 +21,5 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{cipher_mock_engine, Engine, GenOutput};
-pub use scheduler::{LaneInfo, Pending, SchedPolicy, Scheduler};
+pub use scheduler::{LaneInfo, Pending, SchedPolicy, Scheduler, SpecKey};
 pub use server::{Server, ServerStats};

@@ -32,7 +32,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::sampler::{SamplerConfig, SamplerSession};
+use crate::sampler::{SamplerConfig, SamplerKind, SamplerSession};
+use crate::schedule::{TransitionOrder, TransitionSpec};
+use crate::tensor::{LogitsBuf, TokenBatch};
 
 use super::engine::{Engine, GenOutput};
 
@@ -83,10 +85,13 @@ struct Member<P> {
     admitted: Instant,
 }
 
-/// One co-admitted group: a session of `members.len()` sequences.
+/// One co-admitted group: a session of `members.len()` sequences. Source
+/// ids are flattened into a [`TokenBatch`] once at admission, so every
+/// subsequent NFE call gathers them with a single memcpy instead of
+/// re-cloning one `Vec` per sequence per call.
 struct Lane<P> {
     session: SamplerSession,
-    src_ids: Option<Vec<Vec<u32>>>,
+    src_ids: Option<TokenBatch>,
     members: Vec<Member<P>>,
     admitted_boundary: u64,
 }
@@ -112,16 +117,51 @@ pub struct Finished<P> {
 /// Admission-compatibility key: two requests may share an in-flight batch
 /// iff their effective sampler configs agree on everything that shapes the
 /// event ladder and the update rule.
-fn spec_key(cfg: &SamplerConfig) -> String {
-    format!(
-        "{}|T{}|{}|{:?}|temp{}|shared{}",
-        cfg.kind.name(),
-        cfg.steps,
-        cfg.spec.name(),
-        cfg.order,
-        cfg.temperature,
-        cfg.shared_tau
-    )
+///
+/// A plain derived-`PartialEq` struct (no heap) — it replaces a
+/// `format!`-built `String` that was allocated per pending request on
+/// every `admit()` pass. Holding the full [`TransitionSpec`] (not just its
+/// name) also stops e.g. `Beta(15, 7)` and `Beta(2, 3)` requests from
+/// being merged into one ladder. Derived float equality means a config
+/// carrying NaN (already nonsensical for sampling) is never equal to
+/// itself and degrades to singleton lanes — correct output, just no
+/// batching for that pathological request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecKey {
+    kind: SamplerKind,
+    steps: usize,
+    spec: TransitionSpec,
+    order: TransitionOrder,
+    temperature: f32,
+    shared_tau: bool,
+}
+
+impl SpecKey {
+    fn of(cfg: &SamplerConfig) -> SpecKey {
+        SpecKey {
+            kind: cfg.kind,
+            steps: cfg.steps,
+            spec: cfg.spec.clone(),
+            order: cfg.order,
+            temperature: cfg.temperature,
+            shared_tau: cfg.shared_tau,
+        }
+    }
+}
+
+/// Persistent per-tick buffers: the batch the denoiser sees is gathered
+/// into these (one memcpy per lane) and the logits come back into the same
+/// `LogitsBuf` every call — after the first tick, steady-state `tick()`
+/// performs zero heap allocations outside the denoiser itself for the
+/// non-sorting samplers (pinned by `steady_state_tick_is_allocation_free`
+/// below; the score-ranking kinds may allocate std's stable-sort merge
+/// buffer inside `advance` at seq_len > 20 — see `docs/perf.md`).
+#[derive(Default)]
+struct StepScratch {
+    xs: TokenBatch,
+    ts: Vec<f32>,
+    srcs: TokenBatch,
+    logits: LogitsBuf,
 }
 
 /// The continuous scheduler. Owns the engine; single-threaded by design
@@ -133,11 +173,13 @@ pub struct Scheduler<P> {
     pending: VecDeque<Pending<P>>,
     lanes: Vec<Lane<P>>,
     /// spec key of the in-flight batch (`None` when no lanes are active)
-    key: Option<String>,
+    key: Option<SpecKey>,
     /// completed denoiser calls — the boundary clock
     boundary: u64,
     /// shutdown/drain mode: ignore the grouping window
     flushing: bool,
+    /// reusable per-tick buffers (see [`StepScratch`])
+    scratch: StepScratch,
 }
 
 impl<P> Scheduler<P> {
@@ -151,6 +193,7 @@ impl<P> Scheduler<P> {
             key: None,
             boundary: 0,
             flushing: false,
+            scratch: StepScratch::default(),
         }
     }
 
@@ -193,8 +236,8 @@ impl<P> Scheduler<P> {
     }
 
     /// Spec key of the in-flight batch, if any.
-    pub fn current_key(&self) -> Option<&str> {
-        self.key.as_deref()
+    pub fn current_key(&self) -> Option<&SpecKey> {
+        self.key.as_ref()
     }
 
     /// Queue a request; it will be admitted at a future boundary.
@@ -218,8 +261,8 @@ impl<P> Scheduler<P> {
         self.pending.front().map(|p| p.enqueued + self.policy.window)
     }
 
-    fn effective_key(&self, p: &Pending<P>) -> String {
-        spec_key(p.cfg.as_ref().unwrap_or(&self.default_cfg))
+    fn effective_key(&self, p: &Pending<P>) -> SpecKey {
+        SpecKey::of(p.cfg.as_ref().unwrap_or(&self.default_cfg))
     }
 
     /// Admit pending requests into free slots. Called only between calls
@@ -335,12 +378,14 @@ impl<P> Scheduler<P> {
             return;
         }
         let src_ids = if self.engine.conditional() {
-            Some(
-                group
-                    .iter()
-                    .map(|p| self.engine.encode_src(p.src.as_deref().unwrap_or("")))
-                    .collect(),
-            )
+            // pre-flatten once at admission; the per-NFE gather is then a
+            // single memcpy into the step scratch
+            let src_len = self.engine.denoiser().config().src_len;
+            let mut tb = TokenBatch::new(src_len);
+            for p in &group {
+                tb.push_row(&self.engine.encode_src(p.src.as_deref().unwrap_or("")));
+            }
+            Some(tb)
         } else {
             None
         };
@@ -355,37 +400,54 @@ impl<P> Scheduler<P> {
     /// One denoiser call over every active lane: each lane advances by one
     /// event of its own ladder (its own time, via the per-sequence time
     /// vector), finished lanes retire and their requests are returned.
+    ///
+    /// The batch is gathered into the persistent [`StepScratch`] (one
+    /// memcpy per lane, no per-row clones) and the logits are written back
+    /// into the same reusable buffer; each lane then advances on a
+    /// `narrow`ed view of its own rows. Steady-state (no admission, no
+    /// retirement) this performs zero heap allocations outside the
+    /// denoiser, modulo std's stable-sort scratch inside the score-ranking
+    /// samplers' `advance` (see `docs/perf.md`).
     fn step(&mut self) -> Vec<Finished<P>> {
         if self.lanes.is_empty() {
             return Vec::new();
         }
         let conditional = self.engine.conditional();
-        let mut xs: Vec<Vec<u32>> = Vec::with_capacity(self.in_flight());
-        let mut ts: Vec<f32> = Vec::with_capacity(self.in_flight());
-        let mut srcs: Vec<Vec<u32>> = Vec::new();
+        let mcfg = self.engine.denoiser().config();
+        self.scratch.xs.reset(mcfg.seq_len);
+        self.scratch.ts.clear();
+        self.scratch.srcs.reset(mcfg.src_len);
         for lane in &self.lanes {
             let call = lane.session.next_event().expect("active lane has a pending call");
-            for seq in lane.session.x() {
-                xs.push(seq.clone());
+            self.scratch.xs.extend_from(lane.session.x());
+            for _ in 0..lane.session.batch() {
+                self.scratch.ts.push(call.t);
             }
-            ts.extend(std::iter::repeat(call.t).take(lane.session.batch()));
             if conditional {
-                srcs.extend(lane.src_ids.as_ref().expect("conditional lane has srcs").iter().cloned());
+                self.scratch
+                    .srcs
+                    .extend_from(lane.src_ids.as_ref().expect("conditional lane has srcs"));
             }
         }
-        let src_opt: Option<&[Vec<u32>]> = if conditional { Some(&srcs) } else { None };
-        let logits = match self.engine.denoiser().denoise(&xs, &ts, src_opt) {
-            Ok(l) => l,
-            Err(e) => return self.fail_all(&e),
-        };
-        self.engine.nfe.record_call(xs.len());
+        let src_opt = if conditional { Some(&self.scratch.srcs) } else { None };
+        let width = self.scratch.xs.rows();
+        if let Err(e) = self.engine.denoiser().denoise_into(
+            &self.scratch.xs,
+            &self.scratch.ts,
+            src_opt,
+            &mut self.scratch.logits,
+        ) {
+            return self.fail_all(&e);
+        }
+        self.engine.nfe.record_call(width);
         self.boundary += 1;
 
+        let view = self.scratch.logits.view();
         let mut off = 0usize;
         let mut step_err = None;
         for lane in &mut self.lanes {
             let w = lane.session.batch();
-            if let Err(e) = lane.session.advance(&logits[off..off + w]) {
+            if let Err(e) = lane.session.advance(view.narrow(off, w)) {
                 step_err = Some(e);
                 break;
             }
@@ -395,32 +457,35 @@ impl<P> Scheduler<P> {
             return self.fail_all(&e);
         }
 
+        // retire finished lanes in place (no mem::take + re-push, which
+        // would re-allocate the lane vector on every boundary)
         let mut finished = Vec::new();
-        let lanes = std::mem::take(&mut self.lanes);
-        for lane in lanes {
-            if lane.session.is_done() {
-                self.engine.nfe.record_batch();
-                let nfe = lane.session.nfe();
-                let res = lane.session.into_result();
-                for (i, m) in lane.members.into_iter().enumerate() {
-                    let wait = m.admitted.duration_since(m.enqueued);
-                    self.engine.nfe.record_request(nfe, wait);
-                    let tokens = res.tokens[i].clone();
-                    finished.push(Finished {
-                        payload: m.payload,
-                        result: Ok(GenOutput {
-                            text: self.engine.decode(&tokens),
-                            tokens,
-                            nfe,
-                            // generation time only (same meaning as the
-                            // fixed path); queue wait travels separately
-                            elapsed: m.admitted.elapsed(),
-                        }),
-                        wait,
-                    });
-                }
-            } else {
-                self.lanes.push(lane);
+        let mut i = 0usize;
+        while i < self.lanes.len() {
+            if !self.lanes[i].session.is_done() {
+                i += 1;
+                continue;
+            }
+            let lane = self.lanes.remove(i);
+            self.engine.nfe.record_batch();
+            let nfe = lane.session.nfe();
+            let res = lane.session.into_result();
+            for (j, m) in lane.members.into_iter().enumerate() {
+                let wait = m.admitted.duration_since(m.enqueued);
+                self.engine.nfe.record_request(nfe, wait);
+                let tokens = res.tokens[j].clone();
+                finished.push(Finished {
+                    payload: m.payload,
+                    result: Ok(GenOutput {
+                        text: self.engine.decode(&tokens),
+                        tokens,
+                        nfe,
+                        // generation time only (same meaning as the
+                        // fixed path); queue wait travels separately
+                        elapsed: m.admitted.elapsed(),
+                    }),
+                    wait,
+                });
             }
         }
         if self.lanes.is_empty() {
@@ -493,6 +558,67 @@ mod tests {
         assert!(out.nfe >= 1 && out.nfe <= 8);
         assert_eq!(s.engine().nfe.requests(), 1);
         assert_eq!(s.engine().nfe.calls() as usize, out.nfe);
+    }
+
+    #[test]
+    fn spec_key_separates_differing_specs_and_matches_equal_ones() {
+        let a = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let b = SamplerConfig::new(SamplerKind::Dndm, 50);
+        assert_eq!(SpecKey::of(&a), SpecKey::of(&b));
+        assert_ne!(SpecKey::of(&a), SpecKey::of(&SamplerConfig::new(SamplerKind::DndmV2, 50)));
+        assert_ne!(SpecKey::of(&a), SpecKey::of(&SamplerConfig::new(SamplerKind::Dndm, 25)));
+        assert_ne!(SpecKey::of(&a), SpecKey::of(&a.clone().with_temperature(1.0)));
+        // differing 𝒟_τ parameters must not share a ladder (the String key
+        // only compared the spec *name* and would have merged these)
+        use crate::schedule::TransitionSpec;
+        let beta_a = a.clone().with_spec(TransitionSpec::Beta { a: 15.0, b: 7.0 });
+        let beta_b = a.clone().with_spec(TransitionSpec::Beta { a: 2.0, b: 3.0 });
+        assert_ne!(SpecKey::of(&beta_a), SpecKey::of(&beta_b));
+    }
+
+    /// The tentpole guarantee: between admission and retirement, `tick()`
+    /// allocates nothing — token gather, time vector, src gather, and the
+    /// logits all live in buffers reused across calls (the mock denoiser
+    /// writes in place, so the whole boundary is heap-silent).
+    #[test]
+    fn steady_state_tick_is_allocation_free() {
+        use crate::util::bench::alloc_count::thread_allocs;
+
+        let eng = mock_engine();
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        // pick a seed whose session spans enough events that some ticks
+        // neither admit nor retire (DNDM's |𝒯| varies with the seed)
+        let seed = (0..64u64)
+            .find(|&s| {
+                let sess =
+                    SamplerSession::new(eng.denoiser().config(), &cfg, 1, s).unwrap();
+                let distinct: std::collections::BTreeSet<usize> =
+                    sess.taus().unwrap().iter().flatten().copied().collect();
+                distinct.len() >= 4
+            })
+            .expect("some seed in 0..64 must give >= 4 events");
+
+        let mut s: Scheduler<usize> = Scheduler::new(eng, cfg, policy(4));
+        s.enqueue(req(0, seed, None));
+        // boundary 1: admission + first call — warms every scratch buffer
+        let first = s.tick();
+        assert!(first.is_empty(), ">= 4 events, so the first tick cannot retire");
+
+        let mut steady = 0usize;
+        let mut done = Vec::new();
+        while s.has_work() {
+            let before = thread_allocs();
+            let out = s.tick();
+            let delta = thread_allocs() - before;
+            if out.is_empty() {
+                assert_eq!(delta, 0, "steady-state tick() allocated {delta} time(s)");
+                steady += 1;
+            }
+            done.extend(out);
+        }
+        assert!(steady >= 2, "expected >= 2 steady-state ticks, saw {steady}");
+        assert_eq!(done.len(), 1);
+        assert!(done[0].result.is_ok());
     }
 
     #[test]

@@ -19,6 +19,7 @@ use anyhow::Result;
 use crate::runtime::Denoiser;
 use crate::sampler::common::{log_prob, noise_of, row};
 use crate::schedule::{SplitMix64, TransitionOrder, TransitionSpec};
+use crate::tensor::{LogitsBuf, TokenBatch};
 
 /// Monte-Carlo −ELBO estimate in nats/token for one sequence.
 ///
@@ -37,6 +38,9 @@ pub fn dndm_nll(
     assert_eq!(x0.len(), n);
     let noise = noise_of(&cfg);
 
+    let src_b = src.map(|s| TokenBatch::from_rows(&[s.to_vec()]));
+    let mut x_t = TokenBatch::filled(1, n, 0);
+    let mut logits = LogitsBuf::new();
     let mut total = 0.0f64;
     for _ in 0..samples {
         let tt = spec.sample_times(t_max, n, TransitionOrder::Random, rng);
@@ -44,14 +48,13 @@ pub fn dndm_nll(
         let w: Vec<u32> = (0..n).map(|_| noise.sample(rng)).collect();
         for &t in tt.events() {
             // eq. 7 state at time t: x0 where τ > t, w where τ ≤ t
-            let x_t: Vec<u32> = (0..n)
-                .map(|m| if tt.taus[m] > t { x0[m] } else { w[m] })
-                .collect();
+            for m in 0..n {
+                x_t.set(0, m, if tt.taus[m] > t { x0[m] } else { w[m] });
+            }
             let t_norm = t as f32 / t_max as f32;
-            let src_b = src.map(|s| vec![s.to_vec()]);
-            let logits = den.denoise(&[x_t], &[t_norm], src_b.as_deref())?;
+            den.denoise_into(&x_t, &[t_norm], src_b.as_ref(), &mut logits)?;
             for m in tt.moves_at(t) {
-                total += -f64::from(log_prob(row(&logits[0], m, v), x0[m] as usize));
+                total += -f64::from(log_prob(row(logits.seq(0), m, v), x0[m] as usize));
             }
         }
     }
@@ -76,21 +79,25 @@ pub fn markov_nll(
     let sched = crate::schedule::AlphaSchedule::parse(&cfg.schedule)
         .unwrap_or(crate::schedule::AlphaSchedule::CosineSq);
 
+    let src_b = src.map(|s| TokenBatch::from_rows(&[s.to_vec()]));
+    let mut x_t = TokenBatch::filled(1, n, 0);
+    let mut logits = LogitsBuf::new();
     let mut total = 0.0f64;
     for _ in 0..samples {
         let tt = spec.sample_times(t_max, n, TransitionOrder::Random, rng);
         for &t in tt.events() {
             // fresh marginal draw per position (Markov chain's q(x_t|x0))
-            let x_t: Vec<u32> = (0..n)
-                .map(|m| {
-                    crate::diffusion::forward_marginal(x0[m], sched, t, t_max, noise, rng)
-                })
-                .collect();
+            for m in 0..n {
+                x_t.set(
+                    0,
+                    m,
+                    crate::diffusion::forward_marginal(x0[m], sched, t, t_max, noise, rng),
+                );
+            }
             let t_norm = t as f32 / t_max as f32;
-            let src_b = src.map(|s| vec![s.to_vec()]);
-            let logits = den.denoise(&[x_t], &[t_norm], src_b.as_deref())?;
+            den.denoise_into(&x_t, &[t_norm], src_b.as_ref(), &mut logits)?;
             for m in tt.moves_at(t) {
-                total += -f64::from(log_prob(row(&logits[0], m, v), x0[m] as usize));
+                total += -f64::from(log_prob(row(logits.seq(0), m, v), x0[m] as usize));
             }
         }
     }

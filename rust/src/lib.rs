@@ -44,6 +44,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sampler;
 pub mod schedule;
+pub mod tensor;
 pub mod text;
 pub mod util;
 

@@ -260,10 +260,12 @@ fn validate(args: &Args) -> Result<()> {
             }
             let rt = ModelRuntime::load(&arts, &client, &m.name)?;
             let cfg = rt.config.clone();
-            let x = vec![vec![cfg.noise_lo; cfg.seq_len]];
-            let src = cfg.conditional().then(|| vec![vec![cfg.noise_lo; cfg.src_len]]);
-            let logits = dndm::runtime::Denoiser::denoise(&rt, &x, &[0.5], src.as_deref())?;
-            if logits[0].iter().any(|v| !v.is_finite()) {
+            let x = dndm::tensor::TokenBatch::filled(1, cfg.seq_len, cfg.noise_lo);
+            let src = cfg
+                .conditional()
+                .then(|| dndm::tensor::TokenBatch::filled(1, cfg.src_len, cfg.noise_lo));
+            let logits = dndm::runtime::Denoiser::denoise(&rt, &x, &[0.5], src.as_ref())?;
+            if logits.flat().iter().any(|v| !v.is_finite()) {
                 bail!("non-finite logits");
             }
             Ok(())

@@ -4,33 +4,95 @@
 //! `MockDenoiser` gives tests and CI a deterministic, artifact-free
 //! network with the same interface, so every sampling algorithm is unit-
 //! tested without compiled HLO.
+//!
+//! The primary entry point is [`Denoiser::denoise_into`]: the caller owns
+//! the output [`LogitsBuf`] and reuses it across NFE calls, so the host
+//! side of a denoiser call performs no steady-state heap allocation (the
+//! flat data path, `docs/perf.md`). [`Denoiser::denoise`] is the
+//! convenience shim that allocates a fresh buffer per call.
 
 use anyhow::Result;
+
+use crate::tensor::{LogitsBuf, TokenBatch};
 
 use super::artifact::ModelConfig;
 
 /// Batched denoiser `p_θ(x̂0 | x_t, t[, src])`.
 ///
-/// * `x`: B sequences of N token ids (the noisy x_t)
+/// * `x`: `[B, N]` token ids (the noisy x_t)
 /// * `t`: B normalized times in [0, 1]
-/// * `src`: B source sequences (conditional models only)
+/// * `src`: `[B, M]` source ids (conditional models only)
 ///
-/// Returns per-sequence logits, each of length `seq_len * vocab`
-/// (row-major `[n][v]`).
+/// Output logits are `[B, N, V]` row-major in a flat buffer.
 pub trait Denoiser {
     fn config(&self) -> &ModelConfig;
 
-    fn denoise(
+    /// Run the network and write the `[B, N, V]` logits into `out`
+    /// (re-dimensioned by the implementation; capacity is reused).
+    fn denoise_into(
         &self,
-        x: &[Vec<u32>],
+        x: &TokenBatch,
         t: &[f32],
-        src: Option<&[Vec<u32>]>,
-    ) -> Result<Vec<Vec<f32>>>;
+        src: Option<&TokenBatch>,
+        out: &mut LogitsBuf,
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper over [`Self::denoise_into`] — for
+    /// call sites outside the per-NFE hot path (tests, warmup, ELBO).
+    fn denoise(&self, x: &TokenBatch, t: &[f32], src: Option<&TokenBatch>) -> Result<LogitsBuf> {
+        let mut out = LogitsBuf::new();
+        self.denoise_into(x, t, src, &mut out)?;
+        Ok(out)
+    }
 
     /// Total denoiser invocations (for NFE accounting hooks).
     fn calls(&self) -> u64 {
         0
     }
+}
+
+/// Split an oversized batch into `chunk`-row sub-batches and run each
+/// through `den`, reassembling the `[B, N, V]` logits in `out`.
+///
+/// This is the shared implementation of the "batch > largest bucket" path:
+/// `ModelRuntime` calls it with its largest compiled bucket, and tests
+/// drive it directly over `MockDenoiser` to pin the sub-slicing (including
+/// the conditional-src case) against the unchunked result.
+pub fn denoise_chunked(
+    den: &dyn Denoiser,
+    chunk: usize,
+    x: &TokenBatch,
+    t: &[f32],
+    src: Option<&TokenBatch>,
+    out: &mut LogitsBuf,
+) -> Result<()> {
+    assert!(chunk >= 1, "chunk size must be >= 1");
+    let b = x.rows();
+    let cfg = den.config();
+    let (n, v) = (cfg.seq_len, cfg.vocab);
+    // every element is overwritten by a chunk copy below — no memset needed
+    out.reset_for_overwrite(b, n, v);
+    let mut cx = TokenBatch::new(x.cols());
+    let mut cs = src.map(|s| TokenBatch::new(s.cols()));
+    let mut cout = LogitsBuf::new();
+    let mut start = 0;
+    while start < b {
+        let end = (start + chunk).min(b);
+        cx.reset(x.cols());
+        for i in start..end {
+            cx.push_row(x.row(i));
+        }
+        if let (Some(cs), Some(s)) = (cs.as_mut(), src) {
+            cs.reset(s.cols());
+            for i in start..end {
+                cs.push_row(s.row(i));
+            }
+        }
+        den.denoise_into(&cx, &t[start..end], cs.as_ref(), &mut cout)?;
+        out.flat_mut()[start * n * v..end * n * v].copy_from_slice(cout.flat());
+        start = end;
+    }
+    Ok(())
 }
 
 /// Deterministic test double: produces logits that put `peak` mass on the
@@ -91,19 +153,21 @@ impl Denoiser for MockDenoiser {
         &self.cfg
     }
 
-    fn denoise(
+    fn denoise_into(
         &self,
-        x: &[Vec<u32>],
+        x: &TokenBatch,
         t: &[f32],
-        src: Option<&[Vec<u32>]>,
-    ) -> Result<Vec<Vec<f32>>> {
-        assert_eq!(x.len(), t.len());
+        src: Option<&TokenBatch>,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        assert_eq!(x.rows(), t.len());
         self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (n, v) = (self.cfg.seq_len, self.cfg.vocab);
-        let mut out = Vec::with_capacity(x.len());
-        for (b, xb) in x.iter().enumerate() {
-            let sb = src.map(|s| s[b].as_slice());
-            let mut logits = vec![0.0f32; n * v];
+        out.reset(x.rows(), n, v);
+        for b in 0..x.rows() {
+            let sb = src.map(|s| s.row(b));
+            let xb = x.row(b);
+            let logits = out.seq_mut(b);
             for pos in 0..n {
                 let tgt = (self.target)(sb, pos);
                 logits[pos * v + tgt as usize] = self.peak;
@@ -111,9 +175,8 @@ impl Denoiser for MockDenoiser {
                 let cur = xb[pos] as usize % v;
                 logits[pos * v + cur] += 0.5;
             }
-            out.push(logits);
         }
-        Ok(out)
+        Ok(())
     }
 
     fn calls(&self) -> u64 {
@@ -129,13 +192,12 @@ mod tests {
     fn mock_shapes_and_peak() {
         let cfg = MockDenoiser::test_config(10, 4, 0, "multinomial");
         let m = MockDenoiser::fixed(cfg, vec![5, 6, 7, 8]);
-        let logits = m
-            .denoise(&[vec![3, 3, 3, 3], vec![4, 4, 4, 4]], &[0.5, 0.5], None)
-            .unwrap();
-        assert_eq!(logits.len(), 2);
-        assert_eq!(logits[0].len(), 40);
+        let x = TokenBatch::from_rows(&[vec![3, 3, 3, 3], vec![4, 4, 4, 4]]);
+        let logits = m.denoise(&x, &[0.5, 0.5], None).unwrap();
+        assert_eq!(logits.batch(), 2);
+        assert_eq!(logits.seq(0).len(), 40);
         // argmax at position 0 must be token 5
-        let row = &logits[0][0..10];
+        let row = logits.row(0, 0);
         let arg = row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
         assert_eq!(arg, 5);
         assert_eq!(m.calls(), 1);
@@ -145,13 +207,27 @@ mod tests {
     fn src_dependent_target() {
         let cfg = MockDenoiser::test_config(10, 3, 3, "absorbing");
         let m = MockDenoiser::with_fn(cfg, |src, pos| src.unwrap()[pos] + 1);
-        let logits = m
-            .denoise(&[vec![2, 2, 2]], &[1.0], Some(&[vec![4, 5, 6]]))
-            .unwrap();
+        let x = TokenBatch::from_rows(&[vec![2, 2, 2]]);
+        let src = TokenBatch::from_rows(&[vec![4, 5, 6]]);
+        let logits = m.denoise(&x, &[1.0], Some(&src)).unwrap();
         for (pos, want) in [(0usize, 5usize), (1, 6), (2, 7)] {
-            let row = &logits[0][pos * 10..(pos + 1) * 10];
+            let row = logits.row(0, pos);
             let arg = row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
             assert_eq!(arg, want);
         }
+    }
+
+    #[test]
+    fn denoise_into_reuses_the_buffer() {
+        let cfg = MockDenoiser::test_config(10, 4, 0, "multinomial");
+        let m = MockDenoiser::fixed(cfg, vec![5, 6, 7, 8]);
+        let x = TokenBatch::filled(2, 4, 3);
+        let mut out = LogitsBuf::new();
+        m.denoise_into(&x, &[0.5, 0.5], None, &mut out).unwrap();
+        let first = out.flat().to_vec();
+        // second call must fully overwrite (reset zeroes before writing)
+        m.denoise_into(&x, &[0.1, 0.1], None, &mut out).unwrap();
+        assert_eq!(out.flat(), &first[..], "mock is time-independent");
+        assert_eq!(m.calls(), 2);
     }
 }

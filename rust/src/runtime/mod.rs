@@ -12,6 +12,6 @@ pub mod model;
 pub mod weights;
 
 pub use artifact::{Artifacts, ManifestModel, ModelConfig};
-pub use denoiser::{Denoiser, MockDenoiser};
+pub use denoiser::{denoise_chunked, Denoiser, MockDenoiser};
 pub use model::{ModelRuntime, TransitionRuntime};
 pub use weights::{Dtype, Tensor, WeightsFile};

@@ -8,8 +8,10 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use crate::tensor::{LogitsBuf, TokenBatch};
+
 use super::artifact::{Artifacts, ManifestModel, ModelConfig};
-use super::denoiser::Denoiser;
+use super::denoiser::{denoise_chunked, Denoiser};
 use super::weights::{Dtype, WeightsFile};
 
 /// Compile an HLO text file on the given client.
@@ -192,14 +194,17 @@ impl ModelRuntime {
         Ok(())
     }
 
-    /// Run one (possibly chunked) denoiser call over `batch` sequences.
+    /// Run one denoiser call over `x.rows() <= bucket` sequences, writing
+    /// the `[B, N, V]` logits straight into the caller-owned `out` slice
+    /// (no per-row `Vec` collection on the way back from PJRT).
     fn run_bucket(
         &self,
-        x: &[Vec<u32>],
+        x: &TokenBatch,
         t: &[f32],
-        src: Option<&[Vec<u32>]>,
-    ) -> Result<Vec<Vec<f32>>> {
-        let b = x.len();
+        src: Option<&TokenBatch>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let b = x.rows();
         let bucket = self.bucket_for(b);
         let n = self.config.seq_len;
         let v = self.config.vocab;
@@ -209,14 +214,12 @@ impl ModelRuntime {
         }
 
         // pad to the bucket by repeating row 0 (content irrelevant, sliced off)
-        let pad = |rows: &[Vec<u32>], len: usize| -> Vec<i32> {
+        let pad = |rows: &TokenBatch, len: usize| -> Vec<i32> {
+            debug_assert_eq!(rows.cols(), len);
             let mut flat = Vec::with_capacity(bucket * len);
-            for r in rows {
-                debug_assert_eq!(r.len(), len);
-                flat.extend(r.iter().map(|&u| u as i32));
-            }
+            flat.extend(rows.flat().iter().map(|&u| u as i32));
             for _ in b..bucket {
-                flat.extend(rows[0].iter().map(|&u| u as i32));
+                flat.extend(rows.row(0).iter().map(|&u| u as i32));
             }
             flat
         };
@@ -231,7 +234,7 @@ impl ModelRuntime {
         // Split path (conditional models with encode/decode artifacts):
         // encode once per src batch, keep the memory on device, then run
         // the decoder-only graph per NFE call.
-        let out = if split {
+        let res = if split {
             let s = src.ok_or_else(|| anyhow!("conditional model requires src"))?;
             let s_flat = pad(s, self.config.src_len);
             self.ensure_memory(&s_flat, bucket)?;
@@ -265,11 +268,12 @@ impl ModelRuntime {
             exe.execute_b(&args)?
         };
         self.calls.set(self.calls.get() + 1);
-        let lit: Literal = out[0][0].to_literal_sync()?.to_tuple1()?;
+        let lit: Literal = res[0][0].to_literal_sync()?.to_tuple1()?;
         let flat: Vec<f32> = lit.to_vec()?;
         debug_assert_eq!(flat.len(), bucket * n * v);
 
-        Ok((0..b).map(|i| flat[i * n * v..(i + 1) * n * v].to_vec()).collect())
+        out.copy_from_slice(&flat[..b * n * v]);
+        Ok(())
     }
 }
 
@@ -278,38 +282,26 @@ impl Denoiser for ModelRuntime {
         &self.config
     }
 
-    fn denoise(
+    fn denoise_into(
         &self,
-        x: &[Vec<u32>],
+        x: &TokenBatch,
         t: &[f32],
-        src: Option<&[Vec<u32>]>,
-    ) -> Result<Vec<Vec<f32>>> {
-        if x.is_empty() {
-            return Ok(vec![]);
-        }
+        src: Option<&TokenBatch>,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        let b = x.rows();
+        let (n, v) = (self.config.seq_len, self.config.vocab);
         let max_bucket = *self.buckets.last().expect("no buckets");
-        if x.len() <= max_bucket {
-            return self.run_bucket(x, t, src);
+        if b > max_bucket {
+            // chunk oversized batches through the largest bucket
+            return denoise_chunked(self, max_bucket, x, t, src, out);
         }
-        // chunk oversized batches through the largest bucket
-        let mut out = Vec::with_capacity(x.len());
-        for chunk_start in (0..x.len()).step_by(max_bucket) {
-            let end = (chunk_start + max_bucket).min(x.len());
-            let sub_src_owned;
-            let sub_src = match src {
-                Some(s) => {
-                    sub_src_owned = s[chunk_start..end].to_vec();
-                    Some(sub_src_owned)
-                }
-                None => None,
-            };
-            out.extend(self.run_bucket(
-                &x[chunk_start..end],
-                &t[chunk_start..end],
-                sub_src.as_deref(),
-            )?);
+        // run_bucket fully overwrites [B, N, V] — skip the reset memset
+        out.reset_for_overwrite(b, n, v);
+        if b == 0 {
+            return Ok(());
         }
-        Ok(out)
+        self.run_bucket(x, t, src, out.flat_mut())
     }
 
     fn calls(&self) -> u64 {

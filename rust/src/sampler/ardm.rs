@@ -12,8 +12,9 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::Denoiser;
+use crate::tensor::{LogitsView, TokenBatch};
 
-use super::common::{row, sample_x0};
+use super::common::sample_x0;
 use super::session::{self, AlgState, Core, SamplerSession};
 use super::{GenResult, SamplerConfig};
 
@@ -44,18 +45,17 @@ impl AlgState for ArdmState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
-        let group: Vec<usize> =
-            self.order[self.done..(self.done + self.parallel).min(core.n)].to_vec();
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+        let end = (self.done + self.parallel).min(core.n);
         let t_norm = 1.0 - self.done as f32 / core.n as f32;
-        for b in 0..core.x.len() {
-            for &pos in &group {
+        for b in 0..core.x.rows() {
+            for &pos in &self.order[self.done..end] {
                 let (tok, _) =
-                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
-                core.x[b][pos] = tok;
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                core.x.set(b, pos, tok);
             }
         }
-        self.done += group.len();
+        self.done = end;
         core.finish_event(t_norm as f64);
     }
 }
@@ -77,7 +77,8 @@ pub fn run(
     }
     let mut core = session::build_core(mcfg, cfg, batch, seed, true);
     let alg = Box::new(ArdmState::new(&mut core, parallel));
-    session::drive(den, SamplerSession::from_parts(core, alg, batch), src)
+    let src_tb = src.map(TokenBatch::from_rows);
+    session::drive(den, SamplerSession::from_parts(core, alg, batch), src_tb.as_ref())
 }
 
 #[cfg(test)]

@@ -8,8 +8,9 @@
 
 use crate::diffusion::{absorbing_reverse_step, multinomial_reverse_step, NoiseKind};
 use crate::schedule::AlphaSchedule;
+use crate::tensor::LogitsView;
 
-use super::common::{row, sample_x0};
+use super::common::sample_x0;
 use super::session::{AlgState, Core};
 use super::SamplerConfig;
 
@@ -39,19 +40,19 @@ impl AlgState for D3pmState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let t = self.t;
         let t_norm = t as f32 / self.t_max as f32;
-        for b in 0..core.x.len() {
+        for b in 0..core.x.rows() {
             for pos in 0..core.n {
                 let (x0_hat, _) = sample_x0(
-                    row(&logits[b], pos, core.v),
+                    logits.row(b, pos),
                     core.temperature.max(1.0),
                     &mut core.rng,
                 );
-                core.x[b][pos] = match self.noise {
+                let next = match self.noise {
                     NoiseKind::Absorbing { mask_id } => absorbing_reverse_step(
-                        core.x[b][pos],
+                        core.x.get(b, pos),
                         x0_hat,
                         t,
                         self.t_max,
@@ -60,7 +61,7 @@ impl AlgState for D3pmState {
                         &mut core.rng,
                     ),
                     NoiseKind::Multinomial { .. } => multinomial_reverse_step(
-                        core.x[b][pos],
+                        core.x.get(b, pos),
                         x0_hat,
                         t,
                         self.t_max,
@@ -70,6 +71,7 @@ impl AlgState for D3pmState {
                         &mut core.rng,
                     ),
                 };
+                core.x.set(b, pos, next);
             }
         }
         self.t -= 1;
@@ -91,6 +93,12 @@ pub(crate) struct RdmState {
     t_max: usize,
     sched: AlphaSchedule,
     topk: bool,
+    /// per-advance (pos, token, score) scratch, indexable by position;
+    /// reused across steps to avoid per-step Vec churn (the top-k variant
+    /// still pays std's stable-sort merge buffer at n > 20)
+    decoded: Vec<(usize, u32, f32)>,
+    /// indices into `decoded`, score-ranked (top-k variant scratch)
+    ranked: Vec<usize>,
 }
 
 impl RdmState {
@@ -107,6 +115,8 @@ impl RdmState {
             t_max: cfg.steps,
             sched,
             topk,
+            decoded: Vec::with_capacity(n),
+            ranked: Vec::with_capacity(n),
         }
     }
 }
@@ -121,45 +131,48 @@ impl AlgState for RdmState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let t = self.t;
         let t_norm = t as f32 / self.t_max as f32;
         let a_t = self.sched.alpha_discrete(t, self.t_max);
         let a_prev = self.sched.alpha_discrete(t - 1, self.t_max);
         let p_reveal = if a_t >= 1.0 { 0.0 } else { (a_prev - a_t) / (1.0 - a_t) };
 
-        for b in 0..core.x.len() {
-            let mut decoded: Vec<(usize, u32, f32)> = Vec::with_capacity(core.n);
+        for b in 0..core.x.rows() {
+            self.decoded.clear();
             for pos in 0..core.n {
                 let (tok, score) =
-                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
-                decoded.push((pos, tok, score));
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                self.decoded.push((pos, tok, score));
             }
             // re-predict already-revealed tokens (RDM re-decoding)
-            for &(pos, tok, _) in &decoded {
+            for &(pos, tok, _) in &self.decoded {
                 if self.revealed[b][pos] {
-                    core.x[b][pos] = tok;
+                    core.x.set(b, pos, tok);
                 }
             }
-            let noisy: Vec<usize> = (0..core.n).filter(|&p| !self.revealed[b][p]).collect();
+            let noisy_count = (0..core.n).filter(|&p| !self.revealed[b][p]).count();
             if self.topk {
                 // reveal count = Binomial expectation, positions by score
-                let k = ((noisy.len() as f64) * p_reveal).round() as usize;
-                let k = if t == 1 { noisy.len() } else { k };
-                let mut ranked: Vec<&(usize, u32, f32)> = decoded
-                    .iter()
-                    .filter(|(p, _, _)| !self.revealed[b][*p])
-                    .collect();
-                ranked.sort_by(|a, b| b.2.total_cmp(&a.2));
-                for &&(pos, tok, _) in ranked.iter().take(k) {
-                    core.x[b][pos] = tok;
+                let k = ((noisy_count as f64) * p_reveal).round() as usize;
+                let k = if t == 1 { noisy_count } else { k };
+                self.ranked.clear();
+                self.ranked.extend((0..core.n).filter(|&p| !self.revealed[b][p]));
+                let decoded = &self.decoded;
+                self.ranked.sort_by(|&i, &j| decoded[j].2.total_cmp(&decoded[i].2));
+                for &ri in self.ranked.iter().take(k) {
+                    let (pos, tok, _) = self.decoded[ri];
+                    core.x.set(b, pos, tok);
                     self.revealed[b][pos] = true;
                 }
             } else {
-                for &pos in &noisy {
+                for pos in 0..core.n {
+                    if self.revealed[b][pos] {
+                        continue;
+                    }
                     if t == 1 || core.rng.coin(p_reveal) {
-                        let (_, tok, _) = decoded[pos];
-                        core.x[b][pos] = tok;
+                        let (_, tok, _) = self.decoded[pos];
+                        core.x.set(b, pos, tok);
                         self.revealed[b][pos] = true;
                     }
                 }
@@ -178,11 +191,13 @@ pub(crate) struct MaskPredictState {
     i: usize,
     iters: usize,
     mask: u32,
+    /// per-advance (pos, token, score) scratch, reused across iterations
+    scored: Vec<(usize, u32, f32)>,
 }
 
 impl MaskPredictState {
     pub(crate) fn new(cfg: &SamplerConfig, mask: u32) -> MaskPredictState {
-        MaskPredictState { i: 0, iters: cfg.steps, mask }
+        MaskPredictState { i: 0, iters: cfg.steps, mask, scored: Vec::new() }
     }
 }
 
@@ -197,25 +212,24 @@ impl AlgState for MaskPredictState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let i = self.i;
         let t_norm = 1.0 - (i as f32 / self.iters as f32);
         let n_mask = (core.n * (self.iters - i - 1)) / self.iters;
-        for b in 0..core.x.len() {
-            let mut scored: Vec<(usize, u32, f32)> = (0..core.n)
-                .map(|pos| {
-                    let (tok, s) =
-                        sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
-                    (pos, tok, s)
-                })
-                .collect();
-            for &(pos, tok, _) in &scored {
-                core.x[b][pos] = tok;
+        for b in 0..core.x.rows() {
+            self.scored.clear();
+            for pos in 0..core.n {
+                let (tok, s) =
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                self.scored.push((pos, tok, s));
+            }
+            for &(pos, tok, _) in &self.scored {
+                core.x.set(b, pos, tok);
             }
             if n_mask > 0 {
-                scored.sort_by(|a, b| a.2.total_cmp(&b.2)); // ascending score
-                for &(pos, _, _) in scored.iter().take(n_mask) {
-                    core.x[b][pos] = self.mask;
+                self.scored.sort_by(|a, b| a.2.total_cmp(&b.2)); // ascending score
+                for &(pos, _, _) in self.scored.iter().take(n_mask) {
+                    core.x.set(b, pos, self.mask);
                 }
             }
         }

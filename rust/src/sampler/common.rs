@@ -4,6 +4,7 @@
 use crate::diffusion::NoiseKind;
 use crate::runtime::ModelConfig;
 use crate::schedule::SplitMix64;
+use crate::tensor::TokenBatch;
 
 /// q_noise from a model config.
 pub fn noise_of(cfg: &ModelConfig) -> NoiseKind {
@@ -64,9 +65,16 @@ pub fn row(logits: &[f32], pos: usize, vocab: usize) -> &[f32] {
     &logits[pos * vocab..(pos + 1) * vocab]
 }
 
-/// Initialize x_T ~ q_noise for a batch.
-pub fn init_noise(batch: usize, n: usize, noise: NoiseKind, rng: &mut SplitMix64) -> Vec<Vec<u32>> {
-    (0..batch).map(|_| noise.sample_seq(n, rng)).collect()
+/// Initialize x_T ~ q_noise for a batch. Rows are drawn in batch order so
+/// the RNG stream is identical to the historical row-of-rows init.
+pub fn init_noise(batch: usize, n: usize, noise: NoiseKind, rng: &mut SplitMix64) -> TokenBatch {
+    let mut x = TokenBatch::filled(batch, n, 0);
+    for b in 0..batch {
+        for tok in x.row_mut(b) {
+            *tok = noise.sample(rng);
+        }
+    }
+    x
 }
 
 #[cfg(test)]

@@ -21,8 +21,9 @@ use anyhow::{bail, Result};
 use crate::diffusion::NoiseKind;
 use crate::runtime::Denoiser;
 use crate::schedule::AlphaSchedule;
+use crate::tensor::{LogitsView, TokenBatch};
 
-use super::common::{row, sample_x0};
+use super::common::sample_x0;
 use super::session::{self, AlgState, Core, SamplerSession};
 use super::{GenResult, SamplerConfig};
 
@@ -58,7 +59,7 @@ impl AlgState for DdimState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let t = self.t;
         let t_norm = t as f32 / self.t_max as f32;
         let a_t = self.sched.alpha_discrete(t, self.t_max);
@@ -70,21 +71,22 @@ impl AlgState for DdimState {
         let w_x0 = a_prev - sigma * a_t;
         let w_uni = ((1.0 - a_prev) - (1.0 - a_t) * sigma).max(0.0);
 
-        for b in 0..core.x.len() {
+        for b in 0..core.x.rows() {
             for pos in 0..core.n {
                 let (x0_hat, _) = sample_x0(
-                    row(&logits[b], pos, core.v),
+                    logits.row(b, pos),
                     core.temperature.max(1.0),
                     &mut core.rng,
                 );
                 let u = core.rng.uniform() * (w_xt + w_x0 + w_uni);
-                core.x[b][pos] = if u < w_xt {
-                    core.x[b][pos]
+                let next = if u < w_xt {
+                    core.x.get(b, pos)
                 } else if u < w_xt + w_x0 {
                     x0_hat
                 } else {
                     self.noise.sample(&mut core.rng)
                 };
+                core.x.set(b, pos, next);
             }
         }
         self.t -= 1;
@@ -111,7 +113,8 @@ pub fn run(
     let noise = super::common::noise_of(mcfg);
     let core = session::build_core(mcfg, cfg, batch, seed, false);
     let alg = Box::new(DdimState::new(cfg, sched, noise, eta));
-    session::drive(den, SamplerSession::from_parts(core, alg, batch), src)
+    let src_tb = src.map(TokenBatch::from_rows);
+    session::drive(den, SamplerSession::from_parts(core, alg, batch), src_tb.as_ref())
 }
 
 #[cfg(test)]

@@ -8,7 +8,9 @@
 //! `session::drive` (or the coordinator's continuous scheduler) supplies
 //! the logits one event at a time.
 
-use super::common::{row, sample_x0};
+use crate::tensor::LogitsView;
+
+use super::common::sample_x0;
 use super::session::{AlgState, Core};
 use super::SamplerConfig;
 
@@ -54,17 +56,17 @@ impl AlgState for DndmState {
         })
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let t = self.events[self.idx];
         let t_norm = t as f32 / self.t_max as f32;
-        for b in 0..core.x.len() {
+        for b in 0..core.x.rows() {
             for pos in 0..core.n {
                 let moves =
                     if self.v2 { self.taus[b][pos] >= t } else { self.taus[b][pos] == t };
                 if moves {
                     let (tok, _) =
-                        sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
-                    core.x[b][pos] = tok;
+                        sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                    core.x.set(b, pos, tok);
                 }
             }
         }
@@ -111,20 +113,18 @@ impl AlgState for DndmCState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let t = self.taus[self.order[self.k]];
         // all positions sharing this timestamp transition together
-        let mut group = vec![self.order[self.k]];
         let mut j = self.k + 1;
         while j < core.n && (self.taus[self.order[j]] - t).abs() < 1e-12 {
-            group.push(self.order[j]);
             j += 1;
         }
-        for b in 0..core.x.len() {
-            for &pos in &group {
+        for b in 0..core.x.rows() {
+            for &pos in &self.order[self.k..j] {
                 let (tok, _) =
-                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
-                core.x[b][pos] = tok;
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                core.x.set(b, pos, tok);
             }
         }
         self.k = j;

@@ -7,8 +7,9 @@
 //! decoded token. Same NFE as Algorithm 1; + ~1–2 BLEU in the paper.
 
 use crate::schedule::TransitionTimes;
+use crate::tensor::LogitsView;
 
-use super::common::{row, sample_x0};
+use super::common::sample_x0;
 use super::session::{AlgState, Core};
 use super::SamplerConfig;
 
@@ -19,13 +20,23 @@ pub(crate) struct TopKState {
     updated: Vec<Vec<bool>>,
     idx: usize,
     t_max: usize,
+    /// per-advance (pos, token, score) scratch, reused across events to
+    /// avoid per-event Vec churn (the score sort itself still pays std's
+    /// stable-sort merge buffer at n > 20)
+    cand: Vec<(usize, u32, f32)>,
 }
 
 impl TopKState {
     pub(crate) fn new(core: &mut Core, cfg: &SamplerConfig, batch: usize) -> TopKState {
         let t_max = cfg.steps;
         let tt = cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng);
-        TopKState { tt, updated: vec![vec![false; core.n]; batch], idx: 0, t_max }
+        TopKState {
+            tt,
+            updated: vec![vec![false; core.n]; batch],
+            idx: 0,
+            t_max,
+            cand: Vec::with_capacity(core.n),
+        }
     }
 }
 
@@ -37,28 +48,28 @@ impl AlgState for TopKState {
         })
     }
 
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
         let t = self.tt.events()[self.idx];
         // after this event, k_target tokens must be decoded in total
         let k_target = self.tt.k_t(t);
         let t_norm = t as f32 / self.t_max as f32;
 
-        for b in 0..core.x.len() {
+        for b in 0..core.x.rows() {
             // decode + score every position, then commit the top scorers
-            let mut cand: Vec<(usize, u32, f32)> = Vec::with_capacity(core.n);
+            self.cand.clear();
             for pos in 0..core.n {
                 let (tok, score) =
-                    sample_x0(row(&logits[b], pos, core.v), core.temperature, &mut core.rng);
-                cand.push((pos, tok, score));
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                self.cand.push((pos, tok, score));
             }
-            cand.sort_by(|a, b| b.2.total_cmp(&a.2));
+            self.cand.sort_by(|a, b| b.2.total_cmp(&a.2));
             let mut committed = self.updated[b].iter().filter(|&&u| u).count();
-            for (pos, tok, _) in cand {
+            for &(pos, tok, _) in &self.cand {
                 if committed >= k_target {
                     break;
                 }
                 if !self.updated[b][pos] {
-                    core.x[b][pos] = tok;
+                    core.x.set(b, pos, tok);
                     self.updated[b][pos] = true;
                     committed += 1;
                 }

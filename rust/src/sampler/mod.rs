@@ -179,6 +179,8 @@ pub struct GenResult {
 }
 
 /// Dispatch: run `cfg.kind` on `den` for a batch of `batch` sequences.
+/// The src rows are flattened once into a [`crate::tensor::TokenBatch`];
+/// the per-NFE loop then runs without copying them again.
 pub fn generate(
     den: &dyn Denoiser,
     cfg: &SamplerConfig,
@@ -194,8 +196,9 @@ pub fn generate(
     } else if den.config().conditional() {
         bail!("conditional model requires src");
     }
+    let src_tb = src.map(crate::tensor::TokenBatch::from_rows);
     let sess = SamplerSession::new(den.config(), cfg, batch, seed)?;
-    let result = session::drive(den, sess, src)?;
+    let result = session::drive(den, sess, src_tb.as_ref())?;
     if let Some(c) = counter {
         for _ in 0..result.nfe {
             c.record_call(batch);

@@ -8,8 +8,11 @@
 //!
 //! ```text
 //! let mut sess = SamplerSession::new(den.config(), &cfg, batch, seed)?;
+//! let mut ts = vec![0.0; batch];
+//! let mut logits = LogitsBuf::new();
 //! while let Some(call) = sess.next_event() {
-//!     let logits = den.denoise(sess.x(), &vec![call.t; sess.batch()], src)?;
+//!     ts.fill(call.t);
+//!     den.denoise_into(sess.x(), &ts, src, &mut logits)?;
 //!     sess.advance(&logits)?;
 //! }
 //! let result = sess.into_result();
@@ -23,12 +26,18 @@
 //! hand-stepped sampling are the same code path and produce byte-identical
 //! outputs (pinned by `tests/determinism.rs`).
 //!
+//! Data flow is flat end to end: session state is a [`TokenBatch`], logits
+//! arrive as a [`LogitsView`] (possibly a `narrow`ed window of a larger
+//! scheduler batch), and no tokens or logits are copied per NFE outside
+//! the denoiser itself (`docs/perf.md`).
+//!
 //! [`generate`]: super::generate
 
 use anyhow::{bail, Result};
 
 use crate::runtime::{Denoiser, ModelConfig};
 use crate::schedule::{AlphaSchedule, SplitMix64};
+use crate::tensor::{LogitsBuf, LogitsView, TokenBatch};
 
 use super::common::{init_noise, noise_of};
 use super::{ardm, baselines, ddim, dndm, dndm_topk};
@@ -48,11 +57,12 @@ pub struct PendingCall {
 }
 
 /// State shared by every algorithm: current tokens, the RNG stream, and
-/// per-event accounting. Field layout mirrors the locals of the old
-/// run-to-completion loops so the RNG consumption order — and therefore
-/// every sampled token — is unchanged.
+/// per-event accounting. The update order inside every `advance` mirrors
+/// the locals of the old run-to-completion loops so the RNG consumption
+/// order — and therefore every sampled token — is unchanged.
 pub(crate) struct Core {
-    pub x: Vec<Vec<u32>>,
+    /// current tokens x_t, flat `[B, N]`
+    pub x: TokenBatch,
     pub rng: SplitMix64,
     pub temperature: f32,
     /// sequence length N
@@ -70,7 +80,7 @@ impl Core {
     pub fn finish_event(&mut self, t: f64) {
         self.nfe += 1;
         if self.trace_on {
-            self.trace.push(TracePoint { t, tokens: self.x[0].clone() });
+            self.trace.push(TracePoint { t, tokens: self.x.row(0).to_vec() });
         }
     }
 }
@@ -84,7 +94,7 @@ pub(crate) trait AlgState {
 
     /// Apply the logits of the pending call: update `core.x`, consume RNG,
     /// and finish with `core.finish_event(..)`.
-    fn advance(&mut self, core: &mut Core, logits: &[Vec<f32>]);
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>);
 
     /// The discrete per-position transition times, for samplers that
     /// predetermine them (the DNDM family).
@@ -106,7 +116,7 @@ pub(crate) fn build_core(
     let n = mcfg.seq_len;
     let mut rng = SplitMix64::new(seed);
     let x = if masked_init {
-        vec![vec![mcfg.mask_id; n]; batch]
+        TokenBatch::filled(batch, n, mcfg.mask_id)
     } else {
         init_noise(batch, n, noise_of(mcfg), &mut rng)
     };
@@ -192,9 +202,9 @@ impl SamplerSession {
         self.batch
     }
 
-    /// Current tokens (x_t), one row per sequence — what the next denoiser
-    /// call must see.
-    pub fn x(&self) -> &[Vec<u32>] {
+    /// Current tokens (x_t) as a flat `[B, N]` batch — what the next
+    /// denoiser call must see, borrowable without per-row clones.
+    pub fn x(&self) -> &TokenBatch {
         &self.core.x
     }
 
@@ -214,15 +224,27 @@ impl SamplerSession {
             .map(|(t, t_exact)| PendingCall { t, t_exact, index: self.core.nfe })
     }
 
-    /// Apply the logits answering [`Self::next_event`]'s call.
-    pub fn advance(&mut self, logits: &[Vec<f32>]) -> Result<()> {
+    /// Apply the logits answering [`Self::next_event`]'s call. Accepts a
+    /// `&LogitsBuf` or a [`LogitsView`] (e.g. a `narrow`ed window of a
+    /// scheduler-level batch).
+    pub fn advance<'a>(&mut self, logits: impl Into<LogitsView<'a>>) -> Result<()> {
+        let view: LogitsView<'a> = logits.into();
         if self.alg.next_t(&self.core).is_none() {
             bail!("session is already complete");
         }
-        if logits.len() != self.batch {
-            bail!("logits batch {} != session batch {}", logits.len(), self.batch);
+        if view.batch() != self.batch {
+            bail!("logits batch {} != session batch {}", view.batch(), self.batch);
         }
-        self.alg.advance(&mut self.core, logits);
+        if view.seq_len() != self.core.n || view.vocab() != self.core.v {
+            bail!(
+                "logits dims [{}, {}] != model dims [{}, {}]",
+                view.seq_len(),
+                view.vocab(),
+                self.core.n,
+                self.core.v
+            );
+        }
+        self.alg.advance(&mut self.core, view);
         Ok(())
     }
 
@@ -232,20 +254,23 @@ impl SamplerSession {
     }
 
     pub fn into_result(self) -> GenResult {
-        GenResult { tokens: self.core.x, nfe: self.core.nfe, trace: self.core.trace }
+        GenResult { tokens: self.core.x.into_rows(), nfe: self.core.nfe, trace: self.core.trace }
     }
 }
 
 /// Run a session to completion against a denoiser — the thin driver loop
-/// the legacy `generate()` dispatch now reduces to.
+/// the legacy `generate()` dispatch now reduces to. The time vector and
+/// the logits buffer are allocated once and reused for every NFE call.
 pub fn drive(
     den: &dyn Denoiser,
     mut sess: SamplerSession,
-    src: Option<&[Vec<u32>]>,
+    src: Option<&TokenBatch>,
 ) -> Result<GenResult> {
+    let mut ts = vec![0.0f32; sess.batch()];
+    let mut logits = LogitsBuf::new();
     while let Some(call) = sess.next_event() {
-        let t = vec![call.t; sess.batch()];
-        let logits = den.denoise(sess.x(), &t, src)?;
+        ts.fill(call.t);
+        den.denoise_into(sess.x(), &ts, src, &mut logits)?;
         sess.advance(&logits)?;
     }
     Ok(sess.into_result())
@@ -305,7 +330,10 @@ mod tests {
         let mut sess = SamplerSession::new(den.config(), &cfg, 2, 5).unwrap();
         let call = sess.next_event().unwrap();
         let logits = den.denoise(sess.x(), &vec![call.t; 2], None).unwrap();
-        assert!(sess.advance(&logits[..1]).is_err(), "wrong batch must fail");
+        assert!(
+            sess.advance(logits.view().narrow(0, 1)).is_err(),
+            "wrong batch must fail"
+        );
         sess.advance(&logits).unwrap();
         while let Some(call) = sess.next_event() {
             let logits = den.denoise(sess.x(), &vec![call.t; 2], None).unwrap();
@@ -313,6 +341,19 @@ mod tests {
         }
         let logits = den.denoise(sess.x(), &[1.0, 1.0], None).unwrap();
         assert!(sess.advance(&logits).is_err(), "completed session must fail");
+    }
+
+    #[test]
+    fn advance_rejects_mismatched_dims() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let mut sess = SamplerSession::new(den.config(), &cfg, 1, 5).unwrap();
+        let mut wrong = LogitsBuf::new();
+        wrong.reset(1, 8, 21); // vocab 21 != model vocab 20
+        assert!(sess.advance(&wrong).is_err());
+        let mut wrong = LogitsBuf::new();
+        wrong.reset(1, 7, 20); // seq_len 7 != model seq_len 8
+        assert!(sess.advance(&wrong).is_err());
     }
 
     #[test]

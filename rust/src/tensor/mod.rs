@@ -1,0 +1,385 @@
+//! Flat, reusable batch tensors — the zero-copy data path between the
+//! scheduler, the sampler sessions, and the denoiser.
+//!
+//! DNDM's cost model is |𝒯| denoiser calls, so anything the host does
+//! *per call* is pure overhead on the paper's headline metric. Before this
+//! module existed, every NFE boundary re-cloned every token row into a
+//! `Vec<Vec<u32>>`, collected logits into a `Vec<Vec<f32>>` row by row,
+//! and dropped it all on the floor one call later. The three types here
+//! replace that with contiguous storage that is allocated once and reused:
+//!
+//! * [`TokenBatch`] — flat `u32` storage with `[B, N]` dims: cheap row
+//!   views, in-place row writes, `extend_from` for gathering lanes into a
+//!   batch without per-row clones.
+//! * [`LogitsBuf`] — flat `f32` `[B, N, V]` storage the denoiser writes
+//!   into (`Denoiser::denoise_into`); `reset` keeps capacity across calls.
+//! * [`LogitsView`] — a borrowed, `Copy` window over a `LogitsBuf` (or any
+//!   flat logits), with per-sequence/per-position slice accessors and
+//!   `narrow` for handing each lane exactly its rows of a shared batch.
+//!
+//! Ownership rules (see `docs/perf.md`): buffers live with the outermost
+//! loop — the scheduler's `StepScratch`, `session::drive`'s locals — and
+//! everything below them borrows.
+
+/// A `[B, N]` batch of token ids in one contiguous allocation.
+///
+/// `cols` (N) is fixed per use; rows are appended with [`Self::push_row`]
+/// / [`Self::extend_from`] and reused across calls via [`Self::reset`],
+/// which clears the rows but keeps both the capacity and nothing else.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TokenBatch {
+    data: Vec<u32>,
+    cols: usize,
+}
+
+impl TokenBatch {
+    /// Empty batch with row width `cols` (N).
+    pub fn new(cols: usize) -> TokenBatch {
+        TokenBatch { data: Vec::new(), cols }
+    }
+
+    /// `rows × cols` batch filled with `val`.
+    pub fn filled(rows: usize, cols: usize, val: u32) -> TokenBatch {
+        TokenBatch { data: vec![val; rows * cols], cols }
+    }
+
+    /// Copy a row-of-rows into flat storage. All rows must share a length.
+    pub fn from_rows(rows: &[Vec<u32>]) -> TokenBatch {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut tb = TokenBatch { data: Vec::with_capacity(rows.len() * cols), cols };
+        for r in rows {
+            tb.push_row(r);
+        }
+        tb
+    }
+
+    /// Number of rows (B).
+    pub fn rows(&self) -> usize {
+        if self.cols == 0 {
+            0
+        } else {
+            self.data.len() / self.cols
+        }
+    }
+
+    /// Row width (N).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Drop all rows and set the row width, keeping the allocation.
+    pub fn reset(&mut self, cols: usize) {
+        self.data.clear();
+        self.cols = cols;
+    }
+
+    /// Append one row (must match the row width).
+    pub fn push_row(&mut self, row: &[u32]) {
+        assert_eq!(row.len(), self.cols, "row width {} != batch width {}", row.len(), self.cols);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Append every row of `other` (one memcpy, no per-row clones).
+    pub fn extend_from(&mut self, other: &TokenBatch) {
+        assert_eq!(other.cols, self.cols, "column widths differ");
+        self.data.extend_from_slice(&other.data);
+    }
+
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [u32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> u32 {
+        self.data[row * self.cols + col]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, val: u32) {
+        self.data[row * self.cols + col] = val;
+    }
+
+    /// The whole `[B * N]` storage, row-major.
+    pub fn flat(&self) -> &[u32] {
+        &self.data
+    }
+
+    /// Iterate rows as slices.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[u32]> {
+        self.data.chunks_exact(self.cols.max(1))
+    }
+
+    /// Convert into a row-of-rows (result materialization only — never on
+    /// the per-NFE hot path).
+    pub fn into_rows(self) -> Vec<Vec<u32>> {
+        if self.cols == 0 {
+            return Vec::new();
+        }
+        self.data.chunks_exact(self.cols).map(|c| c.to_vec()).collect()
+    }
+}
+
+/// Owned flat `[B, N, V]` logits storage the denoiser writes into.
+///
+/// [`Self::reset`] re-dims and zeroes without shrinking capacity, so a
+/// buffer held across NFE calls stops allocating after the first call.
+#[derive(Debug, Clone, Default)]
+pub struct LogitsBuf {
+    data: Vec<f32>,
+    n: usize,
+    v: usize,
+}
+
+impl LogitsBuf {
+    pub fn new() -> LogitsBuf {
+        LogitsBuf::default()
+    }
+
+    /// Re-dimension to `[batch, n, v]` and zero the contents, keeping the
+    /// allocation when capacity suffices. For writers that accumulate into
+    /// a zeroed background (e.g. `MockDenoiser`).
+    pub fn reset(&mut self, batch: usize, n: usize, v: usize) {
+        self.n = n;
+        self.v = v;
+        self.data.clear();
+        self.data.resize(batch * n * v, 0.0);
+    }
+
+    /// Re-dimension to `[batch, n, v]` **without** zeroing retained
+    /// elements — for implementations that fully overwrite the buffer
+    /// (`ModelRuntime` memcpys the whole `[B, N, V]` block), where the
+    /// `reset` memset would be pure wasted memory traffic per NFE call.
+    /// Newly grown elements are zero-filled; previously used ones keep
+    /// stale values until overwritten.
+    pub fn reset_for_overwrite(&mut self, batch: usize, n: usize, v: usize) {
+        self.n = n;
+        self.v = v;
+        self.data.resize(batch * n * v, 0.0);
+    }
+
+    pub fn batch(&self) -> usize {
+        let stride = self.n * self.v;
+        if stride == 0 {
+            0
+        } else {
+            self.data.len() / stride
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.n
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.v
+    }
+
+    /// Logits of sequence `i`: an `[N * V]` row-major slice.
+    pub fn seq(&self, i: usize) -> &[f32] {
+        let stride = self.n * self.v;
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn seq_mut(&mut self, i: usize) -> &mut [f32] {
+        let stride = self.n * self.v;
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// Vocab-sized logits row of (sequence `i`, position `pos`).
+    pub fn row(&self, i: usize, pos: usize) -> &[f32] {
+        self.view().row(i, pos)
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn flat_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn view(&self) -> LogitsView<'_> {
+        LogitsView { data: &self.data, n: self.n, v: self.v }
+    }
+}
+
+/// A borrowed `[B, N, V]` window over flat logits. `Copy`, so it threads
+/// through the sampler call tree without lifetime gymnastics; `narrow`
+/// hands each lane of a shared batch exactly its rows, which is how one
+/// scheduler-level denoiser call feeds many sessions without copying.
+#[derive(Debug, Clone, Copy)]
+pub struct LogitsView<'a> {
+    data: &'a [f32],
+    n: usize,
+    v: usize,
+}
+
+impl<'a> LogitsView<'a> {
+    pub fn batch(&self) -> usize {
+        let stride = self.n * self.v;
+        if stride == 0 {
+            0
+        } else {
+            self.data.len() / stride
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.n
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.v
+    }
+
+    /// Sub-batch window of `count` sequences starting at `start`.
+    pub fn narrow(&self, start: usize, count: usize) -> LogitsView<'a> {
+        let stride = self.n * self.v;
+        LogitsView { data: &self.data[start * stride..(start + count) * stride], n: self.n, v: self.v }
+    }
+
+    /// Logits of sequence `i`: an `[N * V]` row-major slice.
+    pub fn seq(&self, i: usize) -> &'a [f32] {
+        let stride = self.n * self.v;
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// Vocab-sized logits row of (sequence `i`, position `pos`).
+    #[inline]
+    pub fn row(&self, i: usize, pos: usize) -> &'a [f32] {
+        let start = i * self.n * self.v + pos * self.v;
+        &self.data[start..start + self.v]
+    }
+
+    pub fn flat(&self) -> &'a [f32] {
+        self.data
+    }
+}
+
+impl<'a> From<&'a LogitsBuf> for LogitsView<'a> {
+    fn from(buf: &'a LogitsBuf) -> LogitsView<'a> {
+        buf.view()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_batch_rows_and_flat_agree() {
+        let tb = TokenBatch::from_rows(&[vec![1, 2, 3], vec![4, 5, 6]]);
+        assert_eq!(tb.rows(), 2);
+        assert_eq!(tb.cols(), 3);
+        assert_eq!(tb.row(1), &[4, 5, 6]);
+        assert_eq!(tb.flat(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(tb.get(1, 0), 4);
+        let rows: Vec<&[u32]> = tb.iter_rows().collect();
+        assert_eq!(rows, vec![&[1u32, 2, 3][..], &[4, 5, 6][..]]);
+        assert_eq!(tb.clone().into_rows(), vec![vec![1, 2, 3], vec![4, 5, 6]]);
+    }
+
+    #[test]
+    fn token_batch_reset_keeps_capacity() {
+        let mut tb = TokenBatch::new(4);
+        tb.push_row(&[1, 2, 3, 4]);
+        tb.push_row(&[5, 6, 7, 8]);
+        let cap = tb.data.capacity();
+        tb.reset(4);
+        assert_eq!(tb.rows(), 0);
+        assert!(tb.is_empty());
+        assert_eq!(tb.data.capacity(), cap, "reset must not free");
+        tb.push_row(&[9, 9, 9, 9]);
+        assert_eq!(tb.row(0), &[9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn token_batch_set_and_row_mut_write_in_place() {
+        let mut tb = TokenBatch::filled(2, 3, 7);
+        tb.set(0, 1, 42);
+        tb.row_mut(1)[2] = 9;
+        assert_eq!(tb.row(0), &[7, 42, 7]);
+        assert_eq!(tb.row(1), &[7, 7, 9]);
+    }
+
+    #[test]
+    fn token_batch_extend_from_concatenates() {
+        let mut a = TokenBatch::from_rows(&[vec![1, 1]]);
+        let b = TokenBatch::from_rows(&[vec![2, 2], vec![3, 3]]);
+        a.extend_from(&b);
+        assert_eq!(a.rows(), 3);
+        assert_eq!(a.row(2), &[3, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn token_batch_rejects_ragged_rows() {
+        let mut tb = TokenBatch::new(2);
+        tb.push_row(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn logits_buf_reset_dims_and_zeroes() {
+        let mut lb = LogitsBuf::new();
+        lb.reset(2, 3, 4);
+        assert_eq!(lb.batch(), 2);
+        assert_eq!(lb.seq(1).len(), 12);
+        lb.seq_mut(1)[0] = 5.0;
+        assert_eq!(lb.row(1, 0)[0], 5.0);
+        let cap = lb.data.capacity();
+        lb.reset(2, 3, 4);
+        assert_eq!(lb.data.capacity(), cap, "reset must not free");
+        assert!(lb.flat().iter().all(|&x| x == 0.0), "reset must zero");
+    }
+
+    #[test]
+    fn reset_for_overwrite_keeps_stale_data_but_redims() {
+        let mut lb = LogitsBuf::new();
+        lb.reset(2, 2, 2);
+        lb.flat_mut().fill(7.0);
+        lb.reset_for_overwrite(2, 2, 2);
+        assert_eq!(lb.batch(), 2);
+        assert!(lb.flat().iter().all(|&x| x == 7.0), "same size: no memset");
+        lb.reset_for_overwrite(3, 2, 2);
+        assert_eq!(lb.batch(), 3);
+        assert!(lb.flat()[8..].iter().all(|&x| x == 0.0), "growth zero-fills");
+    }
+
+    #[test]
+    fn logits_view_rows_and_narrow() {
+        let mut lb = LogitsBuf::new();
+        lb.reset(3, 2, 2);
+        for (i, x) in lb.flat_mut().iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let v = lb.view();
+        assert_eq!(v.batch(), 3);
+        assert_eq!(v.seq(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(v.row(1, 1), &[6.0, 7.0]);
+        let w = v.narrow(1, 2);
+        assert_eq!(w.batch(), 2);
+        assert_eq!(w.seq(0), v.seq(1));
+        assert_eq!(w.row(1, 0), v.row(2, 0));
+        // views are Copy
+        let w2 = w;
+        assert_eq!(w2.flat(), w.flat());
+    }
+
+    #[test]
+    fn logits_view_from_buf_ref() {
+        let mut lb = LogitsBuf::new();
+        lb.reset(1, 2, 3);
+        let v: LogitsView = (&lb).into();
+        assert_eq!(v.batch(), 1);
+        assert_eq!(v.seq_len(), 2);
+        assert_eq!(v.vocab(), 3);
+    }
+}

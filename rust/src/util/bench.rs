@@ -1,8 +1,96 @@
 //! Mini bench harness (criterion is unreachable offline): warmup +
-//! timed iterations, mean/median/stddev, and a table printer shared by
-//! the per-paper-table bench binaries.
+//! timed iterations, mean/median/stddev, a table printer shared by the
+//! per-paper-table bench binaries, and (under `cfg(test)`) a counting
+//! global allocator that lets unit tests assert a code path performs no
+//! heap allocation.
 
 use std::time::{Duration, Instant};
+
+/// Heap-allocation counting for unit tests.
+///
+/// Registers a [`std::alloc::GlobalAlloc`] wrapper around the system
+/// allocator **in the library's unit-test binary only** (`cfg(test)`, so
+/// release builds and integration tests are untouched). Counts are kept
+/// per thread, which makes [`thread_allocs`] deltas immune to the other
+/// unit tests `cargo test` runs concurrently.
+///
+/// This is how the flat-data-path guarantee is enforced: the scheduler's
+/// `steady_state_tick_is_allocation_free` test snapshots the counter
+/// around `Scheduler::tick` and asserts a zero delta (`docs/perf.md`).
+#[cfg(test)]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    pub struct CountingAlloc;
+
+    #[inline]
+    fn bump() {
+        // try_with: never panic from inside the allocator, even during
+        // thread teardown
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            bump();
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc_zeroed(layout)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTER: CountingAlloc = CountingAlloc;
+
+    /// Heap allocations made by the current thread since it started
+    /// (deallocations are not counted — only acquisition matters for the
+    /// churn guarantee).
+    pub fn thread_allocs() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn counter_observes_allocations_on_this_thread() {
+            let before = thread_allocs();
+            let v: Vec<u64> = Vec::with_capacity(32);
+            std::hint::black_box(&v);
+            let after = thread_allocs();
+            assert!(after > before, "Vec::with_capacity must register");
+        }
+
+        #[test]
+        fn no_alloc_code_registers_zero() {
+            let mut acc = 0u64;
+            let before = thread_allocs();
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+            assert_eq!(thread_allocs(), before);
+        }
+    }
+}
 
 pub struct BenchResult {
     pub name: String,

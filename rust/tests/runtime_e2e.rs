@@ -7,6 +7,15 @@ use dndm::runtime::{Artifacts, Denoiser, ModelRuntime, TransitionRuntime, Weight
 use dndm::sampler::common::{log_prob, row, sample_x0};
 use dndm::sampler::{SamplerConfig, SamplerKind};
 use dndm::schedule::SplitMix64;
+use dndm::tensor::TokenBatch;
+
+fn rand_batch(rng: &mut SplitMix64, rows: usize, cols: usize) -> TokenBatch {
+    TokenBatch::from_rows(
+        &(0..rows)
+            .map(|_| (0..cols).map(|_| 3 + rng.below(20) as u32).collect())
+            .collect::<Vec<_>>(),
+    )
+}
 
 fn arts() -> Option<Artifacts> {
     match exp::artifacts() {
@@ -45,21 +54,18 @@ fn denoise_shapes_and_finiteness() {
     let rt = ModelRuntime::load(&arts, &client, &name).unwrap();
     let cfg = rt.config.clone();
     let mut rng = SplitMix64::new(1);
-    let x: Vec<Vec<u32>> = (0..2)
-        .map(|_| (0..cfg.seq_len).map(|_| 3 + rng.below(20) as u32).collect())
-        .collect();
-    let src: Vec<Vec<u32>> = (0..2)
-        .map(|_| (0..cfg.src_len).map(|_| 3 + rng.below(20) as u32).collect())
-        .collect();
+    let x = rand_batch(&mut rng, 2, cfg.seq_len);
+    let src = rand_batch(&mut rng, 2, cfg.src_len);
     let logits = rt.denoise(&x, &[0.5, 0.9], Some(&src)).unwrap();
-    assert_eq!(logits.len(), 2);
-    assert_eq!(logits[0].len(), cfg.seq_len * cfg.vocab);
-    assert!(logits.iter().flatten().all(|v| v.is_finite()));
+    assert_eq!(logits.batch(), 2);
+    assert_eq!(logits.seq(0).len(), cfg.seq_len * cfg.vocab);
+    assert!(logits.flat().iter().all(|v| v.is_finite()));
     // different t must give different logits (time conditioning is live)
     let logits2 = rt.denoise(&x, &[0.1, 0.1], Some(&src)).unwrap();
-    let diff: f32 = logits[0]
+    let diff: f32 = logits
+        .seq(0)
         .iter()
-        .zip(&logits2[0])
+        .zip(logits2.seq(0))
         .map(|(a, b)| (a - b).abs())
         .sum();
     assert!(diff > 1e-3, "time conditioning inert");
@@ -73,14 +79,14 @@ fn bucket_padding_gives_same_logits() {
     let client = xla::PjRtClient::cpu().unwrap();
     let rt = ModelRuntime::load(&arts, &client, &name).unwrap();
     let cfg = rt.config.clone();
-    let x = vec![vec![5u32; cfg.seq_len]];
-    let src = vec![vec![7u32; cfg.src_len]];
+    let x = TokenBatch::filled(1, cfg.seq_len, 5);
+    let src = TokenBatch::filled(1, cfg.src_len, 7);
     let a = rt.denoise(&x, &[0.5], Some(&src)).unwrap();
     // force the larger bucket by batching then slicing
-    let x3 = vec![x[0].clone(), x[0].clone(), x[0].clone()];
-    let src3 = vec![src[0].clone(), src[0].clone(), src[0].clone()];
+    let x3 = TokenBatch::filled(3, cfg.seq_len, 5);
+    let src3 = TokenBatch::filled(3, cfg.src_len, 7);
     let b = rt.denoise(&x3, &[0.5, 0.5, 0.5], Some(&src3)).unwrap();
-    for (u, w) in a[0].iter().zip(&b[0]) {
+    for (u, w) in a.seq(0).iter().zip(b.seq(0)) {
         assert!((u - w).abs() < 1e-4, "bucket padding changed logits");
     }
 }
@@ -157,15 +163,9 @@ fn split_encode_decode_matches_monolithic() {
     assert!(rt.split_enabled());
     let cfg = rt.config.clone();
     let mut rng = SplitMix64::new(11);
-    let x1: Vec<Vec<u32>> = (0..2)
-        .map(|_| (0..cfg.seq_len).map(|_| 3 + rng.below(20) as u32).collect())
-        .collect();
-    let x2: Vec<Vec<u32>> = (0..2)
-        .map(|_| (0..cfg.seq_len).map(|_| 3 + rng.below(20) as u32).collect())
-        .collect();
-    let src: Vec<Vec<u32>> = (0..2)
-        .map(|_| (0..cfg.src_len).map(|_| 3 + rng.below(20) as u32).collect())
-        .collect();
+    let x1 = rand_batch(&mut rng, 2, cfg.seq_len);
+    let x2 = rand_batch(&mut rng, 2, cfg.seq_len);
+    let src = rand_batch(&mut rng, 2, cfg.src_len);
 
     let a1 = rt.denoise(&x1, &[0.5, 0.8], Some(&src)).unwrap();
     let a2 = rt.denoise(&x2, &[0.3, 0.1], Some(&src)).unwrap();
@@ -174,15 +174,22 @@ fn split_encode_decode_matches_monolithic() {
     rt.set_split(false);
     let b1 = rt.denoise(&x1, &[0.5, 0.8], Some(&src)).unwrap();
     let b2 = rt.denoise(&x2, &[0.3, 0.1], Some(&src)).unwrap();
-    for (sa, sb) in a1.iter().zip(&b1).chain(a2.iter().zip(&b2)) {
-        for (u, w) in sa.iter().zip(sb) {
-            assert!((u - w).abs() < 1e-3, "split vs monolithic logits differ");
-        }
+    for (sa, sb) in a1
+        .flat()
+        .iter()
+        .zip(b1.flat())
+        .chain(a2.flat().iter().zip(b2.flat()))
+    {
+        assert!((sa - sb).abs() < 1e-3, "split vs monolithic logits differ");
     }
 
     // new src must re-encode
     rt.set_split(true);
-    let src2: Vec<Vec<u32>> = src.iter().map(|s| s.iter().map(|&v| v + 1).collect()).collect();
+    let src2 = TokenBatch::from_rows(
+        &(0..2)
+            .map(|i| src.row(i).iter().map(|&v| v + 1).collect())
+            .collect::<Vec<_>>(),
+    );
     rt.denoise(&x1, &[0.5, 0.8], Some(&src2)).unwrap();
     assert_eq!(rt.encoder_calls(), 2);
 }
@@ -194,12 +201,12 @@ fn sample_x0_helper_consistency_on_runtime_logits() {
     let client = xla::PjRtClient::cpu().unwrap();
     let rt = ModelRuntime::load(&arts, &client, &name).unwrap();
     let cfg = rt.config.clone();
-    let x = vec![vec![cfg.mask_id; cfg.seq_len]];
-    let src = vec![vec![5u32; cfg.src_len]];
+    let x = TokenBatch::filled(1, cfg.seq_len, cfg.mask_id);
+    let src = TokenBatch::filled(1, cfg.src_len, 5);
     let logits = rt.denoise(&x, &[1.0], Some(&src)).unwrap();
     let mut rng = SplitMix64::new(5);
     for pos in 0..cfg.seq_len {
-        let (tok, score) = sample_x0(row(&logits[0], pos, cfg.vocab), 0.0, &mut rng);
+        let (tok, score) = sample_x0(row(logits.seq(0), pos, cfg.vocab), 0.0, &mut rng);
         assert!((tok as usize) < cfg.vocab);
         assert!(score <= 0.0 && score.is_finite());
     }
