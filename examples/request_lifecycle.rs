@@ -1,0 +1,87 @@
+//! Request-lifecycle walkthrough — runs anywhere, no artifacts needed
+//! (deterministic cipher-mock engine): the typed `GenRequest` builder,
+//! per-NFE streaming through a `Ticket`, boundary cancellation, deadlines,
+//! and spec-affinity sharding across two engines.
+//!
+//!     cargo run --release --example request_lifecycle
+
+use std::time::Duration;
+
+use dndm::coordinator::{
+    cipher_mock_engine, Event, GenRequest, Priority, SchedPolicy, ServeBuilder,
+};
+use dndm::sampler::{SamplerConfig, SamplerKind};
+
+fn main() -> anyhow::Result<()> {
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(16)),
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+    )
+    .continuous(SchedPolicy {
+        max_batch: 8,
+        window: Duration::from_millis(2),
+        shared_tau_groups: true,
+    })
+    .shards(2)
+    .start();
+
+    // 1. stream a request: one event per transition-time boundary
+    println!("== streaming ==");
+    let mut ticket = router.submit_request(
+        GenRequest::new(7)
+            .src("the quick fox crosses a river to the garden by the old road")
+            .stream_partials(),
+    )?;
+    while let Some(event) = ticket.next_event() {
+        match event {
+            Event::Admitted => println!("admitted into the in-flight batch"),
+            Event::Progress { nfe_done, nfe_total, partial_tokens } => {
+                let resolved = partial_tokens.iter().filter(|&&t| t != 2).count();
+                println!(
+                    "boundary {nfe_done}/{nfe_total}: {resolved}/{} positions resolved",
+                    partial_tokens.len()
+                );
+            }
+            Event::Done(out) => println!("done (NFE {}): {}", out.nfe, out.text),
+            other => println!("unexpected: {other:?}"),
+        }
+    }
+
+    // 2. cancellation frees the request's slot at the next boundary
+    println!("\n== cancellation ==");
+    let t = router.submit_request(
+        GenRequest::new(8).src("a small garden").priority(Priority::Low),
+    )?;
+    t.cancel();
+    match t.wait() {
+        Err(e) => println!("request resolved as: {e}"),
+        Ok(out) => println!("finished before the cancel landed: {}", out.text),
+    }
+
+    // 3. a queued request past its deadline is never admitted
+    println!("\n== deadline ==");
+    let t = router.submit_request(
+        GenRequest::new(9).src("this old road").deadline(Duration::ZERO),
+    )?;
+    match t.wait() {
+        Err(e) => println!("request resolved as: {e}"),
+        Ok(_) => println!("unexpectedly finished"),
+    }
+
+    // 4. router-level accounting across both shards
+    let stats = router.stats()?;
+    println!(
+        "\n== stats ==\nrequests {}  NN calls {}  avg request NFE {:.2}\n\
+         cancelled {}  deadline-exceeded {}  e2e p99 {:.2} ms",
+        stats.requests,
+        stats.nn_calls,
+        stats.avg_request_nfe,
+        stats.cancelled,
+        stats.deadline_exceeded,
+        stats.e2e_p99.as_secs_f64() * 1e3,
+    );
+
+    router.shutdown();
+    router.join();
+    Ok(())
+}

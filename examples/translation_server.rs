@@ -1,19 +1,22 @@
 //! End-to-end serving driver (the E2E validation run of DESIGN.md §6):
-//! start the coordinator, fire a few hundred concurrent translation
-//! requests from the synthetic IWSLT14 test split at the real build-time-
-//! trained checkpoint, and report BLEU + latency percentiles + throughput
-//! + NFE. Results are recorded in EXPERIMENTS.md.
+//! start the sharded continuous-scheduling stack via `ServeBuilder`, fire
+//! a few hundred concurrent translation requests from the synthetic
+//! IWSLT14 test split at the real build-time-trained checkpoint, and
+//! report BLEU + latency percentiles + throughput + NFE. Results are
+//! recorded in EXPERIMENTS.md.
 //!
 //!     cargo run --release --example translation_server -- \
-//!         --requests 200 --max-batch 16 --window-ms 20 --steps 50
+//!         --requests 200 --max-batch 16 --window-ms 20 --steps 50 --shards 1
 //!
-//! Flags: --requests N --max-batch B --window-ms MS --steps T
+//! Flags: --requests N --max-batch B --window-ms MS --steps T --shards S
 //!        --sampler dndm|dndm-k|rdm|... --kind absorbing|multinomial
-//!        --dataset iwslt14|wmt14|wmt16
+//!        --dataset iwslt14|wmt14|wmt16 --fixed (legacy frozen-batch mode)
 
 use std::time::{Duration, Instant};
 
-use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::coordinator::{
+    BatchPolicy, Engine, Event, GenRequest, SchedPolicy, ServeBuilder,
+};
 use dndm::data::{gen_pairs, Dataset, Split};
 use dndm::metrics::bleu::corpus_bleu_str;
 use dndm::metrics::LatencyStats;
@@ -28,10 +31,10 @@ fn main() -> anyhow::Result<()> {
     let kind = args.get_or("kind", "absorbing").to_string();
     let sampler = SamplerKind::parse(args.get_or("sampler", "dndm-k")).expect("bad --sampler");
     let steps = args.usize_or("steps", 50);
-    let policy = BatchPolicy {
-        max_batch: args.usize_or("max-batch", 16),
-        window: Duration::from_millis(args.u64_or("window-ms", 20)),
-    };
+    let max_batch = args.usize_or("max-batch", 16);
+    let window = Duration::from_millis(args.u64_or("window-ms", 20));
+    let shards = args.usize_or("shards", 1);
+    let fixed = args.has("fixed");
 
     let arts = Artifacts::load("artifacts")?;
     let model = arts
@@ -41,42 +44,64 @@ fn main() -> anyhow::Result<()> {
         .clone();
     let cfg = SamplerConfig::new(sampler, steps);
     println!(
-        "== translation_server ==\nmodel {model}  sampler {}  steps {steps}  policy {policy:?}",
-        sampler.name()
+        "== translation_server ==\nmodel {model}  sampler {}  steps {steps}  \
+         mode {}  max_batch {max_batch}  window {window:?}  shards {shards}",
+        sampler.name(),
+        if fixed { "fixed" } else { "continuous" },
     );
 
     let model2 = model.clone();
-    let (srv, join) = Server::start(
-        move || {
-            let arts = Artifacts::load("artifacts")?;
-            let eng = Engine::new(&arts, &model2)?;
-            eng.warmup(&[1, 4, 16])?; // compile buckets before traffic
-            Ok(eng)
-        },
-        cfg,
-        policy,
-    );
+    let factory = move || {
+        let arts = Artifacts::load("artifacts")?;
+        let eng = Engine::new(&arts, &model2)?;
+        eng.warmup(&[1, 4, 16])?; // compile buckets before traffic
+        Ok(eng)
+    };
+    let builder = ServeBuilder::new(factory, cfg).shards(shards);
+    let router = if fixed {
+        builder.fixed(BatchPolicy { max_batch, window }).start()
+    } else {
+        builder
+            .continuous(SchedPolicy { max_batch, window, shared_tau_groups: true })
+            .start()
+    };
 
-    // fire the whole test split as concurrent requests
+    // fire the whole test split as concurrent requests; stream the first
+    // one so the per-NFE progress path is exercised under real load
     let pairs = gen_pairs(dataset, Split::Test, n_requests);
     let t0 = Instant::now();
-    let rxs: Vec<_> = pairs
+    let tickets: Vec<_> = pairs
         .iter()
         .enumerate()
-        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .map(|(i, (s, _))| {
+            let mut req = GenRequest::new(i as u64).src(s.join(" "));
+            if i == 0 {
+                req = req.stream_partials();
+            }
+            router.submit_request(req).unwrap()
+        })
         .collect();
 
     let mut lat = LatencyStats::new();
     let mut hyps = Vec::with_capacity(n_requests);
-    for rx in rxs {
-        let out = rx.recv()??;
+    let mut progress_events = 0usize;
+    for (i, mut t) in tickets.into_iter().enumerate() {
+        let out = loop {
+            match t.next_event() {
+                Some(Event::Progress { .. }) => progress_events += 1,
+                Some(Event::Done(out)) => break out,
+                Some(Event::Admitted) => {}
+                Some(other) => anyhow::bail!("request {i} ended early: {other:?}"),
+                None => anyhow::bail!("request {i} stream ended without a result"),
+            }
+        };
         lat.record(out.elapsed);
         hyps.push(out.text);
     }
     let wall = t0.elapsed();
     let refs: Vec<String> = pairs.iter().map(|(_, t)| t.join(" ")).collect();
     let bleu = corpus_bleu_str(&hyps, &refs);
-    let stats = srv.stats()?;
+    let stats = router.stats()?;
 
     println!("\nserved {n_requests} requests in {:.2}s", wall.as_secs_f64());
     println!("throughput      : {:.2} req/s", n_requests as f64 / wall.as_secs_f64());
@@ -84,12 +109,14 @@ fn main() -> anyhow::Result<()> {
     println!("batches         : {} (mean size {:.2})", stats.batches, stats.mean_batch);
     println!("NN calls        : {} ({:.2} per request)", stats.nn_calls,
              stats.nn_calls as f64 / n_requests as f64);
+    println!("streamed events : {progress_events} (request 0 subscribed per-NFE)");
     println!("queue p95       : {:.1} ms", stats.queue_p95.as_secs_f64() * 1e3);
-    println!("e2e    p50/p95  : {:.1} / {:.1} ms",
-             stats.e2e_p50.as_secs_f64() * 1e3, stats.e2e_p95.as_secs_f64() * 1e3);
+    println!("e2e p50/p95/p99 : {:.1} / {:.1} / {:.1} ms",
+             stats.e2e_p50.as_secs_f64() * 1e3, stats.e2e_p95.as_secs_f64() * 1e3,
+             stats.e2e_p99.as_secs_f64() * 1e3);
     println!("{}", lat.summary("batch-compute latency"));
 
-    srv.shutdown();
-    join.join();
+    router.shutdown();
+    router.join();
     Ok(())
 }

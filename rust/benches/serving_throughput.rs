@@ -16,6 +16,11 @@
 //! and allocations per denoiser call (counted by a process-wide allocator
 //! wrapper) — the perf trajectory of the flat data path (`docs/perf.md`).
 
+// This bench intentionally drives the deprecated `submit_async` wrapper:
+// it doubles as the compile-and-run guarantee that the legacy channel
+// surface stays intact on top of the GenRequest/Ticket path.
+#![allow(deprecated)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};

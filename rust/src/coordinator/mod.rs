@@ -2,24 +2,36 @@
 //!
 //! * [`engine`] — owns the PJRT runtime + vocab and exposes the
 //!   generate/translate API the CLI, examples and benches use.
+//! * [`request`] — the client-visible request lifecycle: [`GenRequest`]
+//!   (typed builder: src, seed, per-request config, deadline, priority)
+//!   and [`Ticket`] (per-NFE [`Event`] stream, boundary cancellation).
 //! * [`scheduler`] — the continuous NFE-aligned scheduler: requests join
 //!   the in-flight batch at transition-time boundaries (the per-NFE
 //!   `SamplerSession` yield points), sequences retire individually when
-//!   their last τ fires, freed slots refill.
+//!   their last τ fires, freed slots refill; the same boundaries enforce
+//!   cancellation/deadlines and emit progress events.
 //! * [`server`] — the request loop: multi-producer queue, fixed-batch or
 //!   continuous scheduling, per-request latency/NFE accounting. PJRT
 //!   handles are not `Send`, so the engine lives on the server thread and
 //!   requests travel over channels (the vLLM-router shape, std::thread
 //!   edition — tokio is unreachable offline).
+//! * [`router`] — [`ServeBuilder`], the single entry point for both
+//!   scheduling modes, and [`Router`], which shards requests across N
+//!   server threads/engines with spec-affinity placement and least-loaded
+//!   fallback.
 //! * [`batcher`] — the legacy fixed batching policy (max size +
 //!   collection window), kept as the serving bench's ablation baseline.
 
 pub mod batcher;
 pub mod engine;
+pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{cipher_mock_engine, Engine, GenOutput};
-pub use scheduler::{LaneInfo, Pending, SchedPolicy, Scheduler, SpecKey};
+pub use request::{CancelHandle, Event, GenRequest, Priority, Ticket, TicketSink};
+pub use router::{Router, ServeBuilder};
+pub use scheduler::{LaneInfo, Outcome, Pending, SchedPolicy, Scheduler, SpecKey};
 pub use server::{Server, ServerStats};

@@ -1,0 +1,543 @@
+//! The client-visible request lifecycle: typed request builder, streaming
+//! ticket, and the serving-side sink that feeds it.
+//!
+//! DNDM's predetermined transition set makes every denoiser-call boundary
+//! a safe point, so a request's life is a small state machine whose edges
+//! all sit on those boundaries:
+//!
+//! ```text
+//! submit ─ queued ──▶ Admitted ──▶ Progress* ──▶ Done(GenOutput)
+//!    │        │                       │
+//!    │        ├──▶ Cancelled          ├──▶ Cancelled          (at a boundary)
+//!    │        └──▶ DeadlineExceeded   └──▶ DeadlineExceeded   (at a boundary)
+//!    └─ (engine/spec failure anywhere) ──▶ Failed
+//! ```
+//!
+//! [`Ticket`] is the client half: a blocking/non-blocking [`Event`] stream
+//! plus [`Ticket::cancel`]. [`TicketSink`] is the serving half, threaded
+//! through the scheduler; it holds one **coalescing snapshot** instead of
+//! an event queue. Each boundary overwrites the snapshot in place (the
+//! per-lane scratch is a reused `Vec`, so emission allocates nothing on
+//! the scheduler's hot path), and the ticket turns every observed change
+//! into an event. A slow reader skips intermediate snapshots but always
+//! sees the final `Progress` and the terminal event; terminal events are
+//! never lost.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::sampler::SamplerConfig;
+
+use super::engine::GenOutput;
+
+/// Queue-ordering class of a request. Within one class the scheduler is
+/// strictly FIFO; a higher class is admitted first. The fixed-batch policy
+/// ignores priority (its `Batcher` is FIFO by construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+/// A typed generation request — the builder behind
+/// [`Server::submit_request`](super::server::Server::submit_request) and
+/// [`Router::submit_request`](super::router::Router::submit_request).
+///
+/// ```
+/// use dndm::coordinator::{GenRequest, Priority};
+/// use dndm::sampler::{SamplerConfig, SamplerKind};
+/// use std::time::Duration;
+///
+/// let req = GenRequest::new(7)
+///     .src("the quick fox crosses a river")
+///     .config(SamplerConfig::new(SamplerKind::DndmC, 0))
+///     .deadline(Duration::from_secs(2))
+///     .priority(Priority::High)
+///     .stream_partials();
+/// ```
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub(crate) src: Option<String>,
+    pub(crate) seed: u64,
+    pub(crate) cfg: Option<SamplerConfig>,
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) priority: Priority,
+    pub(crate) stream: bool,
+}
+
+impl GenRequest {
+    /// A request with the given RNG seed, no source text, the server-wide
+    /// sampler config, no deadline, and [`Priority::Normal`].
+    pub fn new(seed: u64) -> GenRequest {
+        GenRequest {
+            src: None,
+            seed,
+            cfg: None,
+            deadline: None,
+            priority: Priority::Normal,
+            stream: false,
+        }
+    }
+
+    /// Source text (required by conditional models).
+    pub fn src(mut self, src: impl Into<String>) -> Self {
+        self.src = Some(src.into());
+        self
+    }
+
+    /// Per-request sampler override. Requests whose spec differs from the
+    /// in-flight batch are served in separate batches (continuous mode);
+    /// the fixed policy rejects overrides.
+    pub fn config(mut self, cfg: SamplerConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Relative deadline, measured from submission. A queued request past
+    /// its deadline is never admitted; an in-flight one is dropped at the
+    /// next transition-time boundary. Either way the ticket receives
+    /// [`Event::DeadlineExceeded`].
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Subscribe to partial tokens: every [`Event::Progress`] carries the
+    /// request's current `x_t`. Off by default — unsubscribed progress
+    /// events still report `nfe_done`/`nfe_total` but skip the token copy.
+    pub fn stream_partials(mut self) -> Self {
+        self.stream = true;
+        self
+    }
+}
+
+/// One lifecycle event observed through a [`Ticket`].
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// The request joined an in-flight batch at a transition-time boundary.
+    Admitted,
+    /// A boundary the request participated in has completed. `partial_tokens`
+    /// is the request's current `x_t` when the client subscribed via
+    /// [`GenRequest::stream_partials`] (empty otherwise). Progress coalesces:
+    /// a slow reader may skip intermediate boundaries, but the final
+    /// `Progress` (where `nfe_done == nfe_total`) is always observable and
+    /// its tokens equal the [`Event::Done`] output exactly.
+    Progress { nfe_done: usize, nfe_total: usize, partial_tokens: Vec<u32> },
+    /// Terminal: generation finished.
+    Done(GenOutput),
+    /// Terminal: the request was cancelled (queue-side before admission, or
+    /// at the next boundary while in flight).
+    Cancelled,
+    /// Terminal: the deadline passed before the request finished.
+    DeadlineExceeded,
+    /// Terminal: the engine or sampler spec failed.
+    Failed(String),
+}
+
+enum Terminal {
+    Done(GenOutput),
+    Cancelled,
+    DeadlineExceeded,
+    Failed(String),
+}
+
+impl Terminal {
+    fn to_event(&self) -> Event {
+        match self {
+            Terminal::Done(out) => Event::Done(out.clone()),
+            Terminal::Cancelled => Event::Cancelled,
+            Terminal::DeadlineExceeded => Event::DeadlineExceeded,
+            Terminal::Failed(msg) => Event::Failed(msg.clone()),
+        }
+    }
+}
+
+/// The coalescing snapshot shared by ticket and sink.
+struct SinkState {
+    admitted: bool,
+    nfe_done: usize,
+    nfe_total: usize,
+    /// reused partial-token scratch — overwritten, never reallocated after
+    /// the first boundary
+    partial: Vec<u32>,
+    terminal: Option<Terminal>,
+}
+
+struct Shared {
+    cancelled: AtomicBool,
+    /// client subscribed to partial tokens
+    stream: bool,
+    /// router shard load, decremented exactly once at the terminal event
+    load: Option<Arc<AtomicUsize>>,
+    state: Mutex<SinkState>,
+    cv: Condvar,
+}
+
+fn lock(shared: &Shared) -> MutexGuard<'_, SinkState> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Build a connected ticket/sink pair.
+pub(crate) fn lifecycle(
+    stream: bool,
+    load: Option<Arc<AtomicUsize>>,
+) -> (Ticket, TicketSink) {
+    let shared = Arc::new(Shared {
+        cancelled: AtomicBool::new(false),
+        stream,
+        load,
+        state: Mutex::new(SinkState {
+            admitted: false,
+            nfe_done: 0,
+            nfe_total: 0,
+            partial: Vec::new(),
+            terminal: None,
+        }),
+        cv: Condvar::new(),
+    });
+    (
+        Ticket { shared: shared.clone(), seen_admitted: false, seen_nfe: 0, seen_terminal: false },
+        TicketSink { shared },
+    )
+}
+
+/// Client handle to one submitted request: an event stream plus
+/// boundary-cancellation.
+pub struct Ticket {
+    shared: Arc<Shared>,
+    seen_admitted: bool,
+    seen_nfe: usize,
+    seen_terminal: bool,
+}
+
+impl Ticket {
+    /// A ticket/sink pair not attached to any server — for embedding the
+    /// [`Scheduler`](super::scheduler::Scheduler) directly (hand-ticked
+    /// tests, custom serving loops): put the sink in
+    /// [`Pending::ctl`](super::scheduler::Pending) and drive `tick()`.
+    pub fn detached(stream: bool) -> (Ticket, TicketSink) {
+        lifecycle(stream, None)
+    }
+
+    /// Request cancellation. Queue-side the request is dropped before
+    /// admission (the idle server polls its queue, so this resolves within
+    /// tens of milliseconds even under a long grouping window); in flight,
+    /// its lane slot is freed at the next transition-time boundary. The
+    /// ticket then receives [`Event::Cancelled`] (unless the request
+    /// already finished — a terminal event is never overwritten).
+    ///
+    /// To cancel while another thread is blocked in [`Self::next_event`] /
+    /// [`Self::wait`], detach a [`CancelHandle`] first.
+    pub fn cancel(&self) {
+        self.shared.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// A cheap cloneable handle that can cancel this request from another
+    /// thread — e.g. while this ticket is consumed by a blocking
+    /// [`Self::wait`] / [`Self::next_event`] loop.
+    pub fn cancel_handle(&self) -> CancelHandle {
+        CancelHandle { shared: self.shared.clone() }
+    }
+
+    /// `true` once this ticket has delivered its terminal event.
+    pub fn finished(&self) -> bool {
+        self.seen_terminal
+    }
+
+    /// Blocking: the next lifecycle event, or `None` after the terminal
+    /// event has been delivered.
+    pub fn next_event(&mut self) -> Option<Event> {
+        if self.seen_terminal {
+            return None;
+        }
+        // local Arc so the guard's borrow is independent of `self`
+        let shared = self.shared.clone();
+        let mut st = lock(&shared);
+        loop {
+            if let Some(ev) = self.diff(&st) {
+                return Some(ev);
+            }
+            st = shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking variant of [`Self::next_event`]: `None` when no new
+    /// event is observable right now (check [`Self::finished`] to
+    /// distinguish "stream ended" from "nothing yet").
+    pub fn try_next_event(&mut self) -> Option<Event> {
+        if self.seen_terminal {
+            return None;
+        }
+        let shared = self.shared.clone();
+        let st = lock(&shared);
+        self.diff(&st)
+    }
+
+    /// Drive the stream to its terminal event and return the output (the
+    /// blocking-submit convenience).
+    pub fn wait(mut self) -> Result<GenOutput> {
+        loop {
+            match self.next_event() {
+                Some(Event::Done(out)) => return Ok(out),
+                Some(Event::Cancelled) => return Err(anyhow!("request cancelled")),
+                Some(Event::DeadlineExceeded) => return Err(anyhow!("request deadline exceeded")),
+                Some(Event::Failed(msg)) => return Err(anyhow!("{msg}")),
+                Some(_) => {}
+                None => return Err(anyhow!("event stream ended without a result")),
+            }
+        }
+    }
+
+    /// The oldest not-yet-delivered change in the snapshot, if any.
+    fn diff(&mut self, st: &SinkState) -> Option<Event> {
+        if st.admitted && !self.seen_admitted {
+            self.seen_admitted = true;
+            return Some(Event::Admitted);
+        }
+        if st.nfe_done > self.seen_nfe {
+            self.seen_nfe = st.nfe_done;
+            return Some(Event::Progress {
+                nfe_done: st.nfe_done,
+                nfe_total: st.nfe_total,
+                partial_tokens: st.partial.clone(),
+            });
+        }
+        if let Some(t) = &st.terminal {
+            self.seen_terminal = true;
+            return Some(t.to_event());
+        }
+        None
+    }
+}
+
+/// Detached cancellation handle (see [`Ticket::cancel_handle`]): `Clone`
+/// and `Send`, so a supervisor thread can abort a request whose ticket is
+/// tied up in a blocking event loop elsewhere.
+#[derive(Clone)]
+pub struct CancelHandle {
+    shared: Arc<Shared>,
+}
+
+impl CancelHandle {
+    /// Same semantics as [`Ticket::cancel`].
+    pub fn cancel(&self) {
+        self.shared.cancelled.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Serving-side half of a ticket. The scheduler (or the fixed-batch loop)
+/// writes lifecycle transitions into it; dropping a sink whose request
+/// never reached a terminal state fails the ticket with
+/// [`Event::Failed`] — a request can never be silently lost.
+pub struct TicketSink {
+    shared: Arc<Shared>,
+}
+
+impl TicketSink {
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.shared.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Did the client subscribe to partial tokens?
+    pub(crate) fn wants_partials(&self) -> bool {
+        self.shared.stream
+    }
+
+    pub(crate) fn set_admitted(&self) {
+        let mut st = lock(&self.shared);
+        st.admitted = true;
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    /// Overwrite the progress snapshot. `tokens: None` skips the copy
+    /// (unsubscribed clients). Allocation-free after the first boundary:
+    /// the partial buffer is reused and the lock/notify pair never touch
+    /// the heap.
+    pub(crate) fn progress(&self, nfe_done: usize, nfe_total: usize, tokens: Option<&[u32]>) {
+        let mut st = lock(&self.shared);
+        if st.terminal.is_some() {
+            return;
+        }
+        st.nfe_done = nfe_done;
+        st.nfe_total = nfe_total;
+        if let Some(t) = tokens {
+            st.partial.clear();
+            st.partial.extend_from_slice(t);
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    pub(crate) fn finish_done(&self, out: GenOutput) {
+        self.finish(Terminal::Done(out));
+    }
+
+    pub(crate) fn finish_cancelled(&self) {
+        self.finish(Terminal::Cancelled);
+    }
+
+    pub(crate) fn finish_deadline(&self) {
+        self.finish(Terminal::DeadlineExceeded);
+    }
+
+    pub(crate) fn finish_failed(&self, msg: &str) {
+        self.finish(Terminal::Failed(msg.to_string()));
+    }
+
+    /// First terminal wins; later ones (including the drop guard) no-op.
+    fn finish(&self, terminal: Terminal) {
+        let mut st = lock(&self.shared);
+        if st.terminal.is_none() {
+            st.terminal = Some(terminal);
+            if let Some(load) = &self.shared.load {
+                load.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for TicketSink {
+    fn drop(&mut self) {
+        // fail-safe: a sink dropped without a terminal (server thread gone,
+        // queue discarded) must not leave the client blocked forever
+        self.finish(Terminal::Failed("request dropped by the server".into()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn builder_defaults_and_setters() {
+        let req = GenRequest::new(3);
+        assert!(req.src.is_none() && req.cfg.is_none() && req.deadline.is_none());
+        assert_eq!(req.priority, Priority::Normal);
+        assert!(!req.stream);
+        let req = req
+            .src("hello")
+            .deadline(Duration::from_millis(5))
+            .priority(Priority::High)
+            .stream_partials();
+        assert_eq!(req.src.as_deref(), Some("hello"));
+        assert_eq!(req.priority, Priority::High);
+        assert!(req.stream && req.deadline.is_some());
+    }
+
+    #[test]
+    fn priority_orders_low_normal_high() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+    }
+
+    #[test]
+    fn progress_coalesces_and_terminal_ends_stream() {
+        let (mut t, sink) = Ticket::detached(true);
+        sink.set_admitted();
+        sink.progress(1, 4, Some(&[5, 5]));
+        sink.progress(2, 4, Some(&[5, 6]));
+        assert!(matches!(t.try_next_event(), Some(Event::Admitted)));
+        // the two progress writes coalesced into the latest snapshot
+        match t.try_next_event() {
+            Some(Event::Progress { nfe_done, nfe_total, partial_tokens }) => {
+                assert_eq!((nfe_done, nfe_total), (2, 4));
+                assert_eq!(partial_tokens, vec![5, 6]);
+            }
+            other => panic!("expected progress, got {other:?}"),
+        }
+        assert!(t.try_next_event().is_none(), "nothing new yet");
+        assert!(!t.finished());
+        sink.finish_done(GenOutput {
+            text: "x".into(),
+            tokens: vec![5, 6],
+            nfe: 2,
+            elapsed: Duration::ZERO,
+        });
+        assert!(matches!(t.try_next_event(), Some(Event::Done(_))));
+        assert!(t.finished());
+        assert!(t.try_next_event().is_none());
+        assert!(t.next_event().is_none(), "terminal delivered exactly once");
+    }
+
+    #[test]
+    fn first_terminal_wins() {
+        let (t, sink) = Ticket::detached(false);
+        sink.finish_cancelled();
+        sink.finish_failed("too late");
+        drop(sink);
+        assert!(t.wait().unwrap_err().to_string().contains("cancelled"));
+    }
+
+    #[test]
+    fn dropped_sink_fails_the_ticket() {
+        let (t, sink) = Ticket::detached(false);
+        drop(sink);
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("dropped"), "{err}");
+    }
+
+    #[test]
+    fn cancel_flag_is_visible_to_the_sink() {
+        let (t, sink) = Ticket::detached(false);
+        assert!(!sink.is_cancelled());
+        t.cancel();
+        assert!(sink.is_cancelled());
+    }
+
+    #[test]
+    fn detached_cancel_handle_cancels_while_the_ticket_blocks() {
+        let (mut t, sink) = Ticket::detached(false);
+        let handle = t.cancel_handle();
+        let canceller = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            handle.cancel();
+            // the serving side observes the flag at a boundary and
+            // resolves the request
+            assert!(sink.is_cancelled());
+            sink.finish_cancelled();
+        });
+        // the sole ticket is tied up blocking — only the handle can cancel
+        assert!(matches!(t.next_event(), Some(Event::Cancelled)));
+        canceller.join().unwrap();
+    }
+
+    #[test]
+    fn load_decrements_exactly_once_at_terminal() {
+        let load = Arc::new(AtomicUsize::new(1));
+        let (_t, sink) = lifecycle(false, Some(load.clone()));
+        sink.finish_cancelled();
+        assert_eq!(load.load(Ordering::Relaxed), 0);
+        drop(sink); // drop guard must not decrement again
+        assert_eq!(load.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn blocking_next_event_wakes_on_progress() {
+        let (mut t, sink) = Ticket::detached(false);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            sink.set_admitted();
+            sink.progress(1, 2, None);
+            sink.finish_cancelled();
+        });
+        assert!(matches!(t.next_event(), Some(Event::Admitted)));
+        assert!(matches!(t.next_event(), Some(Event::Progress { nfe_done: 1, .. })));
+        assert!(matches!(t.next_event(), Some(Event::Cancelled)));
+        assert!(t.next_event().is_none());
+        h.join().unwrap();
+    }
+}

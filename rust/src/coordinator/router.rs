@@ -1,0 +1,364 @@
+//! Sharded serving frontend: one [`ServeBuilder`] entry point for both
+//! scheduling modes, fanned out over N independent server threads
+//! (engines) with spec-affinity placement.
+//!
+//! Each shard is a full [`Server`] — its own thread, engine, queue, and
+//! scheduler (PJRT handles are thread-bound, so sharding by thread is the
+//! natural unit). The [`Router`] places each [`GenRequest`] by:
+//!
+//! 1. **Spec affinity** — requests whose [`SpecKey`] (sampler kind, steps,
+//!    𝒟_τ, order, temperature, shared-τ) matches a key recently routed
+//!    prefer the same shard, maximizing the scheduler's shared-𝒯 batching
+//!    (a lane only amortizes denoiser calls across requests with equal
+//!    keys, so scattering one spec over all shards wastes the paper's
+//!    |𝒯|-per-batch property).
+//! 2. **Least-loaded fallback** — a new key (or an affinity shard whose
+//!    outstanding load exceeds twice the least-loaded shard's, plus one)
+//!    goes to the shard with the fewest outstanding requests; ties rotate
+//!    round-robin so idle shards share cold starts.
+//!
+//! Outstanding load is tracked per shard and decremented exactly once when
+//! a request reaches its terminal event (the ticket sink owns the
+//! decrement, so cancelled / expired / failed requests release their load
+//! the same way completed ones do).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+
+use anyhow::{anyhow, Result};
+
+use crate::sampler::SamplerConfig;
+
+use super::batcher::BatchPolicy;
+use super::engine::{Engine, GenOutput};
+use super::request::{GenRequest, Ticket};
+use super::scheduler::{SchedPolicy, SpecKey};
+use super::server::{Server, ServerJoin, ServerStats};
+
+/// Scheduling mode of every shard a [`ServeBuilder`] starts.
+#[derive(Debug, Clone, Copy)]
+enum ServeMode {
+    Fixed(BatchPolicy),
+    Continuous(SchedPolicy),
+}
+
+/// One builder for the whole serving stack — replaces choosing between
+/// `Server::start` and `Server::start_continuous` by hand and adds
+/// multi-engine sharding:
+///
+/// ```no_run
+/// use dndm::coordinator::{cipher_mock_engine, GenRequest, ServeBuilder};
+/// use dndm::sampler::{SamplerConfig, SamplerKind};
+///
+/// let router = ServeBuilder::new(
+///     || Ok(cipher_mock_engine(16)),
+///     SamplerConfig::new(SamplerKind::Dndm, 50),
+/// )
+/// .shards(2)
+/// .start();
+/// let out = router.generate(GenRequest::new(7).src("the quick fox")).unwrap();
+/// println!("{} (NFE {})", out.text, out.nfe);
+/// router.shutdown();
+/// ```
+///
+/// Defaults: continuous scheduling with [`SchedPolicy::default`], one
+/// shard. The factory runs once per shard, on that shard's thread.
+pub struct ServeBuilder<F> {
+    factory: F,
+    cfg: SamplerConfig,
+    mode: ServeMode,
+    shards: usize,
+}
+
+impl<F> ServeBuilder<F>
+where
+    F: Fn() -> Result<Engine> + Send + Clone + 'static,
+{
+    pub fn new(factory: F, cfg: SamplerConfig) -> ServeBuilder<F> {
+        ServeBuilder {
+            factory,
+            cfg,
+            mode: ServeMode::Continuous(SchedPolicy::default()),
+            shards: 1,
+        }
+    }
+
+    /// Use the legacy fixed-batch policy (the serving bench's ablation
+    /// baseline). Tickets still work, but with queue-side lifecycle only —
+    /// no per-NFE progress events.
+    pub fn fixed(mut self, policy: BatchPolicy) -> Self {
+        self.mode = ServeMode::Fixed(policy);
+        self
+    }
+
+    /// Use the continuous NFE-aligned scheduler (the default) with an
+    /// explicit policy.
+    pub fn continuous(mut self, policy: SchedPolicy) -> Self {
+        self.mode = ServeMode::Continuous(policy);
+        self
+    }
+
+    /// Number of server threads/engines to shard across (min 1).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n.max(1);
+        self
+    }
+
+    /// Start every shard and return the routing frontend.
+    pub fn start(self) -> Router {
+        let mut shards = Vec::with_capacity(self.shards);
+        for _ in 0..self.shards {
+            let factory = self.factory.clone();
+            let (server, join) = match self.mode {
+                ServeMode::Fixed(p) => Server::start(factory, self.cfg.clone(), p),
+                ServeMode::Continuous(p) => {
+                    Server::start_continuous(factory, self.cfg.clone(), p)
+                }
+            };
+            shards.push(Shard {
+                server,
+                load: Arc::new(AtomicUsize::new(0)),
+                join: Some(join),
+            });
+        }
+        Router {
+            shards,
+            affinity: Mutex::new(Vec::new()),
+            rr: AtomicUsize::new(0),
+            default_cfg: self.cfg,
+        }
+    }
+}
+
+struct Shard {
+    server: Server,
+    /// outstanding (submitted, not yet terminal) requests on this shard
+    load: Arc<AtomicUsize>,
+    join: Option<ServerJoin>,
+}
+
+/// Keys the router remembers for affinity placement; beyond this the
+/// oldest mapping is evicted (plenty for real workloads — distinct specs
+/// in flight at once are few).
+const AFFINITY_CAP: usize = 64;
+
+/// The sharding frontend produced by [`ServeBuilder::start`]. Routes each
+/// request to a shard (spec affinity, then least-loaded) and exposes the
+/// same request surface as a single [`Server`].
+pub struct Router {
+    shards: Vec<Shard>,
+    /// recently routed keys, oldest first (evicted at `AFFINITY_CAP`)
+    affinity: Mutex<Vec<(SpecKey, usize)>>,
+    /// round-robin cursor for load ties
+    rr: AtomicUsize,
+    default_cfg: SamplerConfig,
+}
+
+impl Router {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct handle to one shard's server (tests, gradual migration).
+    pub fn shard(&self, i: usize) -> &Server {
+        &self.shards[i].server
+    }
+
+    /// Submit a typed request to the shard chosen by the placement policy;
+    /// returns the streaming [`Ticket`].
+    pub fn submit_request(&self, req: GenRequest) -> Result<Ticket> {
+        let key = SpecKey::of(req.cfg.as_ref().unwrap_or(&self.default_cfg));
+        let idx = self.place(&key);
+        let load = self.shards[idx].load.clone();
+        load.fetch_add(1, Ordering::Relaxed);
+        // On failure the sink travels inside the rejected message, is
+        // dropped with it, and its drop guard emits the Failed terminal —
+        // which performs the exactly-once load decrement. Decrementing
+        // here as well would double-count and underflow the gauge.
+        self.shards[idx].server.submit_ticketed(req, Some(load))
+    }
+
+    /// Submit and wait — the blocking convenience.
+    pub fn generate(&self, req: GenRequest) -> Result<GenOutput> {
+        self.submit_request(req)?.wait()
+    }
+
+    /// Pick a shard: spec affinity first, least-loaded (round-robin on
+    /// ties) otherwise. Also refreshes the affinity table.
+    fn place(&self, key: &SpecKey) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        let loads: Vec<usize> =
+            self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut least = start;
+        for off in 1..n {
+            let i = (start + off) % n;
+            if loads[i] < loads[least] {
+                least = i;
+            }
+        }
+        let mut aff = self.affinity.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(pos) = aff.iter().position(|(k, _)| k == key) {
+            let (k, shard) = aff.remove(pos);
+            // affinity holds while the preferred shard isn't overloaded
+            // relative to the least-loaded one
+            let chosen = if loads[shard] <= 2 * loads[least] + 1 { shard } else { least };
+            aff.push((k, chosen));
+            return chosen;
+        }
+        if aff.len() >= AFFINITY_CAP {
+            aff.remove(0);
+        }
+        aff.push((key.clone(), least));
+        least
+    }
+
+    /// Merged statistics across shards (see [`ServerStats::merged`] for
+    /// the merge semantics); use [`Self::shard_stats`] for the raw
+    /// per-shard view.
+    pub fn stats(&self) -> Result<ServerStats> {
+        Ok(ServerStats::merged(self.shard_stats()?))
+    }
+
+    pub fn shard_stats(&self) -> Result<Vec<ServerStats>> {
+        self.shards.iter().map(|s| s.server.stats()).collect()
+    }
+
+    /// Ask every shard to drain and exit. Follow with [`Self::join`] (or
+    /// drop the router) to wait for the threads.
+    pub fn shutdown(&self) {
+        for s in &self.shards {
+            s.server.shutdown();
+        }
+    }
+
+    /// Wait for every shard thread to finish. Dropping the router joins
+    /// implicitly (each shard's [`ServerJoin`] joins on drop).
+    pub fn join(mut self) {
+        for s in &mut self.shards {
+            if let Some(j) = s.join.take() {
+                j.join();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Router {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let loads: Vec<usize> =
+            self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
+        f.debug_struct("Router").field("shards", &self.shards.len()).field("loads", &loads).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::cipher_mock_engine;
+    use crate::coordinator::request::Event;
+    use crate::sampler::{SamplerConfig, SamplerKind};
+    use crate::schedule::{AlphaSchedule, TransitionSpec};
+    use std::time::Duration;
+
+    fn builder() -> ServeBuilder<impl Fn() -> Result<Engine> + Send + Clone + 'static> {
+        ServeBuilder::new(
+            || Ok(cipher_mock_engine(8)),
+            SamplerConfig::new(SamplerKind::Dndm, 50),
+        )
+    }
+
+    fn policy() -> SchedPolicy {
+        SchedPolicy { max_batch: 4, window: Duration::ZERO, shared_tau_groups: true }
+    }
+
+    #[test]
+    fn single_shard_roundtrip_via_generate() {
+        let router = builder().continuous(policy()).start();
+        let out = router
+            .generate(GenRequest::new(7).src("the quick fox crosses a river"))
+            .unwrap();
+        assert!(out.nfe >= 1 && out.nfe <= 8);
+        assert!(!out.text.is_empty());
+        let stats = router.stats().unwrap();
+        assert_eq!(stats.requests, 1);
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn same_spec_keeps_affinity_to_one_shard() {
+        let router = builder().continuous(policy()).shards(2).start();
+        for i in 0..3 {
+            router
+                .generate(GenRequest::new(i).src("the quick fox"))
+                .unwrap();
+        }
+        let per_shard = router.shard_stats().unwrap();
+        let reqs: Vec<u64> = per_shard.iter().map(|s| s.requests).collect();
+        assert_eq!(reqs.iter().sum::<u64>(), 3);
+        assert!(
+            reqs.contains(&3),
+            "one shard must own the whole spec (affinity), got {reqs:?}"
+        );
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn distinct_specs_spread_over_idle_shards() {
+        let router = builder().continuous(policy()).shards(2).start();
+        let spec_b = SamplerConfig::new(SamplerKind::DndmC, 0)
+            .with_spec(TransitionSpec::Exact(AlphaSchedule::Linear));
+        router.generate(GenRequest::new(1).src("the quick fox")).unwrap();
+        router
+            .generate(GenRequest::new(2).src("the quick fox").config(spec_b))
+            .unwrap();
+        let per_shard = router.shard_stats().unwrap();
+        let reqs: Vec<u64> = per_shard.iter().map(|s| s.requests).collect();
+        assert_eq!(reqs, vec![1, 1], "two keys, two idle shards → one each");
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn fixed_mode_router_serves_tickets() {
+        let router = builder()
+            .fixed(BatchPolicy { max_batch: 2, window: Duration::from_millis(5) })
+            .start();
+        let mut t = router
+            .submit_request(GenRequest::new(3).src("a small garden"))
+            .unwrap();
+        let mut saw_done = false;
+        while let Some(ev) = t.next_event() {
+            match ev {
+                Event::Admitted => {}
+                Event::Done(out) => {
+                    assert!(!out.tokens.is_empty());
+                    saw_done = true;
+                }
+                Event::Progress { .. } => panic!("fixed mode has no boundaries"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(saw_done);
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn merged_stats_accumulate_counters() {
+        let router = builder().continuous(policy()).shards(2).start();
+        for i in 0..4 {
+            router.generate(GenRequest::new(i).src("the quick fox")).unwrap();
+        }
+        let merged = router.stats().unwrap();
+        assert_eq!(merged.requests, 4);
+        assert!(merged.nn_calls >= 1);
+        assert!(merged.avg_request_nfe >= 1.0);
+        router.shutdown();
+        router.join();
+    }
+}

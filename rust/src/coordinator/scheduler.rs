@@ -21,11 +21,20 @@
 //!   mixed-spec workload degrades to separate batches instead of
 //!   corrupting the shared ladder.
 //!
+//! The same boundaries carry the request lifecycle
+//! (`coordinator::request`): a [`Pending`] may hold a [`TicketSink`], and
+//! the scheduler emits `Admitted`/`Progress` into it at each boundary the
+//! request participates in, honours [`Ticket::cancel`] and deadlines by
+//! dropping the request at the next boundary (queue-side: before it is
+//! ever admitted), and orders the queue by [`Priority`] (FIFO within a
+//! class).
+//!
 //! Per-request NFE (= the number of calls the request's session consumed,
 //! |𝒯| for DNDM), queue wait, and in-flight occupancy are recorded on the
 //! engine's [`NfeCounter`] (`metrics::nfe`).
 //!
 //! [`NfeCounter`]: crate::metrics::NfeCounter
+//! [`Ticket::cancel`]: super::request::Ticket::cancel
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -37,6 +46,7 @@ use crate::schedule::{TransitionOrder, TransitionSpec};
 use crate::tensor::{LogitsBuf, TokenBatch};
 
 use super::engine::{Engine, GenOutput};
+use super::request::{Priority, TicketSink};
 
 /// Admission policy of the continuous scheduler.
 #[derive(Debug, Clone, Copy)]
@@ -69,18 +79,52 @@ impl Default for SchedPolicy {
 }
 
 /// A queued request, generic over the caller's payload (response channel,
-/// test id, …).
+/// test id, …). Lifecycle fields are optional: a bare payload request
+/// (no sink, no deadline, [`Priority::Normal`]) behaves exactly like the
+/// pre-lifecycle scheduler.
 pub struct Pending<P> {
     pub src: Option<String>,
     pub seed: u64,
     /// per-request sampler override; `None` = the scheduler's default
     pub cfg: Option<SamplerConfig>,
     pub enqueued: Instant,
+    /// absolute deadline; queue-side expiry is checked before admission,
+    /// in-flight expiry at every boundary
+    pub deadline: Option<Instant>,
+    pub priority: Priority,
+    /// lifecycle sink (`Admitted`/`Progress`/terminal events + the
+    /// cancellation flag); `None` = no client subscribed
+    pub ctl: Option<TicketSink>,
     pub payload: P,
 }
 
+impl<P> Pending<P> {
+    /// A plain request: no deadline, no lifecycle sink, normal priority.
+    pub fn new(
+        src: Option<String>,
+        seed: u64,
+        cfg: Option<SamplerConfig>,
+        payload: P,
+    ) -> Pending<P> {
+        Pending {
+            src,
+            seed,
+            cfg,
+            enqueued: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+            ctl: None,
+            payload,
+        }
+    }
+}
+
 struct Member<P> {
-    payload: P,
+    /// `None` once the member left the lane early (cancelled / expired);
+    /// its session row keeps computing but the result is discarded.
+    payload: Option<P>,
+    ctl: Option<TicketSink>,
+    deadline: Option<Instant>,
     enqueued: Instant,
     admitted: Instant,
 }
@@ -94,6 +138,14 @@ struct Lane<P> {
     src_ids: Option<TokenBatch>,
     members: Vec<Member<P>>,
     admitted_boundary: u64,
+    /// total events of this lane's session (`nfe_total` in progress events)
+    total: usize,
+}
+
+impl<P> Lane<P> {
+    fn live(&self) -> usize {
+        self.members.iter().filter(|m| m.payload.is_some()).count()
+    }
 }
 
 /// Observable lane state (tests, debugging).
@@ -106,12 +158,30 @@ pub struct LaneInfo {
     pub nfe: usize,
 }
 
-/// A retired (or failed) request handed back to the caller.
+/// How a request left the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Generation completed; `result` holds the output.
+    Done,
+    /// Engine or sampler-spec failure; `result` holds the error.
+    Failed,
+    /// Dropped on [`Ticket::cancel`](super::request::Ticket::cancel) —
+    /// queue-side before admission, or at a boundary while in flight.
+    Cancelled,
+    /// The deadline passed before completion.
+    DeadlineExceeded,
+}
+
+/// A retired (or failed/dropped) request handed back to the caller. The
+/// lifecycle sink, if any, has already received the matching terminal
+/// event by the time this is returned from [`Scheduler::tick`].
 pub struct Finished<P> {
     pub payload: P,
     pub result: Result<GenOutput>,
-    /// queue wait: enqueue → admission into a lane
+    /// queue wait: enqueue → admission into a lane (or → drop, for
+    /// requests that never made it in)
     pub wait: Duration,
+    pub outcome: Outcome,
 }
 
 /// Admission-compatibility key: two requests may share an in-flight batch
@@ -126,6 +196,10 @@ pub struct Finished<P> {
 /// carrying NaN (already nonsensical for sampling) is never equal to
 /// itself and degrades to singleton lanes — correct output, just no
 /// batching for that pathological request.
+///
+/// The [`Router`](super::router::Router) uses the same key for
+/// spec-affinity placement: requests sharing a key prefer the engine
+/// already serving that key, maximizing shared-𝒯 batching.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpecKey {
     kind: SamplerKind,
@@ -137,7 +211,8 @@ pub struct SpecKey {
 }
 
 impl SpecKey {
-    fn of(cfg: &SamplerConfig) -> SpecKey {
+    /// The admission key of a sampler config.
+    pub fn of(cfg: &SamplerConfig) -> SpecKey {
         SpecKey {
             kind: cfg.kind,
             steps: cfg.steps,
@@ -154,8 +229,10 @@ impl SpecKey {
 /// `LogitsBuf` every call — after the first tick, steady-state `tick()`
 /// performs zero heap allocations outside the denoiser itself for the
 /// non-sorting samplers (pinned by `steady_state_tick_is_allocation_free`
-/// below; the score-ranking kinds may allocate std's stable-sort merge
-/// buffer inside `advance` at seq_len > 20 — see `docs/perf.md`).
+/// below, including with an active event subscriber; the score-ranking
+/// kinds keep std's stable-sort scratch — see `docs/perf.md`). Lifecycle
+/// emission stays heap-silent because each sink overwrites a reused
+/// snapshot buffer instead of queueing events.
 #[derive(Default)]
 struct StepScratch {
     xs: TokenBatch,
@@ -211,7 +288,9 @@ impl<P> Scheduler<P> {
         self.boundary
     }
 
-    /// Total in-flight sequences (sum of lane widths).
+    /// Total in-flight sequences (sum of lane widths). Early-departed
+    /// members still occupy their lane's rows until the whole lane retires
+    /// or empties, so this counts session rows, not live requests.
     pub fn in_flight(&self) -> usize {
         self.lanes.iter().map(|l| l.session.batch()).sum()
     }
@@ -240,9 +319,15 @@ impl<P> Scheduler<P> {
         self.key.as_ref()
     }
 
-    /// Queue a request; it will be admitted at a future boundary.
+    /// Queue a request; it will be admitted at a future boundary. The
+    /// queue is ordered by [`Priority`] (higher first), FIFO within a
+    /// class.
     pub fn enqueue(&mut self, req: Pending<P>) {
-        self.pending.push_back(req);
+        let mut idx = self.pending.len();
+        while idx > 0 && self.pending[idx - 1].priority < req.priority {
+            idx -= 1;
+        }
+        self.pending.insert(idx, req);
     }
 
     /// Enter drain mode: admit pending work immediately (ignore the
@@ -251,18 +336,85 @@ impl<P> Scheduler<P> {
         self.flushing = true;
     }
 
-    /// When idle with pending work, the instant by which the grouping
-    /// window forces a batch to start. `None` while lanes are active (the
-    /// scheduler should keep stepping) or when nothing is pending.
+    /// When idle with pending work, the instant by which the scheduler
+    /// must wake: the grouping window of the oldest pending request, or
+    /// the earliest queued deadline, whichever comes first. `None` while
+    /// lanes are active (the scheduler should keep stepping) or when
+    /// nothing is pending.
     pub fn next_deadline(&self) -> Option<Instant> {
         if !self.lanes.is_empty() {
             return None;
         }
-        self.pending.front().map(|p| p.enqueued + self.policy.window)
+        // oldest enqueue, not front: priority insertion can put a younger
+        // request at the head of the queue
+        let window = self.oldest_enqueue().map(|e| e + self.policy.window);
+        let deadline = self.pending.iter().filter_map(|p| p.deadline).min();
+        match (window, deadline) {
+            (Some(w), Some(d)) => Some(w.min(d)),
+            (w, d) => w.or(d),
+        }
+    }
+
+    /// Enqueue instant of the longest-waiting pending request — the queue
+    /// is priority-ordered, so this is not necessarily the front.
+    fn oldest_enqueue(&self) -> Option<Instant> {
+        self.pending.iter().map(|p| p.enqueued).min()
     }
 
     fn effective_key(&self, p: &Pending<P>) -> SpecKey {
         SpecKey::of(p.cfg.as_ref().unwrap_or(&self.default_cfg))
+    }
+
+    /// Boundary enforcement of cancellation and deadlines. Queue-side:
+    /// cancelled/expired requests are dropped before they can be admitted.
+    /// Lane-side: an early-departing member's terminal event fires now and
+    /// its result is discarded; a lane with no live members left is
+    /// dropped whole — before the next denoiser call, so its slots free
+    /// immediately and can refill at this very boundary.
+    fn reap(&mut self, out: &mut Vec<Finished<P>>) {
+        if self.pending.is_empty() && self.lanes.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        // queue side: never admit a dead request
+        let mut i = 0;
+        while i < self.pending.len() {
+            let cancelled =
+                self.pending[i].ctl.as_ref().is_some_and(|c| c.is_cancelled());
+            let expired = self.pending[i].deadline.is_some_and(|d| now >= d);
+            if !(cancelled || expired) {
+                i += 1;
+                continue;
+            }
+            let p = self.pending.remove(i).expect("index in bounds");
+            let wait = p.enqueued.elapsed();
+            out.push(resolve_drop(p.payload, p.ctl.as_ref(), cancelled, wait));
+        }
+        // lane side: boundary cancellation
+        for lane in &mut self.lanes {
+            for m in lane.members.iter_mut() {
+                if m.payload.is_none() {
+                    continue;
+                }
+                let cancelled = m.ctl.as_ref().is_some_and(|c| c.is_cancelled());
+                let expired = m.deadline.is_some_and(|d| now >= d);
+                if !(cancelled || expired) {
+                    continue;
+                }
+                let payload = m.payload.take().expect("checked live");
+                let ctl = m.ctl.take();
+                out.push(resolve_drop(
+                    payload,
+                    ctl.as_ref(),
+                    cancelled,
+                    m.admitted.duration_since(m.enqueued),
+                ));
+            }
+        }
+        self.lanes.retain(|l| l.live() > 0);
+        if self.lanes.is_empty() {
+            self.key = None;
+        }
     }
 
     /// Admit pending requests into free slots. Called only between calls
@@ -280,9 +432,8 @@ impl<P> Scheduler<P> {
             // we are draining
             let full = self.pending.len() >= self.policy.max_batch;
             let waited = self
-                .pending
-                .front()
-                .map(|p| p.enqueued.elapsed() >= self.policy.window)
+                .oldest_enqueue()
+                .map(|e| e.elapsed() >= self.policy.window)
                 .unwrap_or(false);
             if !(full || waited || self.flushing) {
                 return resolved;
@@ -295,7 +446,8 @@ impl<P> Scheduler<P> {
             if free == 0 {
                 break;
             }
-            // strict FIFO: take the longest front run with a matching key
+            // strict priority-FIFO: take the longest front run with a
+            // matching key
             let mut group: Vec<Pending<P>> = Vec::new();
             while group.len() < free {
                 let Some(front) = self.pending.front() else { break };
@@ -344,10 +496,14 @@ impl<P> Scheduler<P> {
                 Err(e) => {
                     let msg = format!("{e:#}");
                     for p in group {
+                        if let Some(ctl) = &p.ctl {
+                            ctl.finish_failed(&msg);
+                        }
                         out.push(Finished {
                             payload: p.payload,
                             result: Err(anyhow!("{msg}")),
                             wait: p.enqueued.elapsed(),
+                            outcome: Outcome::Failed,
                         });
                     }
                     return;
@@ -363,16 +519,22 @@ impl<P> Scheduler<P> {
                 let wait = p.enqueued.elapsed();
                 self.engine.nfe.record_request(nfe, wait);
                 let tokens = res.tokens[i].clone();
+                let output = GenOutput {
+                    text: self.engine.decode(&tokens),
+                    tokens,
+                    nfe,
+                    // zero denoiser calls were made for this request
+                    elapsed: Duration::ZERO,
+                };
+                if let Some(ctl) = &p.ctl {
+                    ctl.set_admitted();
+                    ctl.finish_done(output.clone());
+                }
                 out.push(Finished {
                     payload: p.payload,
-                    result: Ok(GenOutput {
-                        text: self.engine.decode(&tokens),
-                        tokens,
-                        nfe,
-                        // zero denoiser calls were made for this request
-                        elapsed: Duration::ZERO,
-                    }),
+                    result: Ok(output),
                     wait,
+                    outcome: Outcome::Done,
                 });
             }
             return;
@@ -390,11 +552,29 @@ impl<P> Scheduler<P> {
             None
         };
         let now = Instant::now();
+        let total = session.total_events();
         let members = group
             .into_iter()
-            .map(|p| Member { payload: p.payload, enqueued: p.enqueued, admitted: now })
+            .map(|p| {
+                if let Some(ctl) = &p.ctl {
+                    ctl.set_admitted();
+                }
+                Member {
+                    payload: Some(p.payload),
+                    ctl: p.ctl,
+                    deadline: p.deadline,
+                    enqueued: p.enqueued,
+                    admitted: now,
+                }
+            })
             .collect();
-        self.lanes.push(Lane { session, src_ids, members, admitted_boundary: self.boundary });
+        self.lanes.push(Lane {
+            session,
+            src_ids,
+            members,
+            admitted_boundary: self.boundary,
+            total,
+        });
     }
 
     /// One denoiser call over every active lane: each lane advances by one
@@ -404,10 +584,11 @@ impl<P> Scheduler<P> {
     /// The batch is gathered into the persistent [`StepScratch`] (one
     /// memcpy per lane, no per-row clones) and the logits are written back
     /// into the same reusable buffer; each lane then advances on a
-    /// `narrow`ed view of its own rows. Steady-state (no admission, no
-    /// retirement) this performs zero heap allocations outside the
-    /// denoiser, modulo std's stable-sort scratch inside the score-ranking
-    /// samplers' `advance` (see `docs/perf.md`).
+    /// `narrow`ed view of its own rows, after which every live subscribed
+    /// member gets a progress snapshot (reused buffer — no allocation).
+    /// Steady-state (no admission, no retirement) this performs zero heap
+    /// allocations outside the denoiser, modulo std's stable-sort scratch
+    /// inside the score-ranking samplers' `advance` (see `docs/perf.md`).
     fn step(&mut self) -> Vec<Finished<P>> {
         if self.lanes.is_empty() {
             return Vec::new();
@@ -452,6 +633,19 @@ impl<P> Scheduler<P> {
                 break;
             }
             off += w;
+            // boundary event: every live subscribed member sees this
+            // lane's new snapshot (nfe + optionally its own token row)
+            let nfe = lane.session.nfe();
+            for (j, m) in lane.members.iter().enumerate() {
+                if m.payload.is_none() {
+                    continue;
+                }
+                if let Some(ctl) = &m.ctl {
+                    let tokens =
+                        ctl.wants_partials().then(|| lane.session.x().row(j));
+                    ctl.progress(nfe, lane.total, tokens);
+                }
+            }
         }
         if let Some(e) = step_err {
             return self.fail_all(&e);
@@ -471,20 +665,28 @@ impl<P> Scheduler<P> {
             let nfe = lane.session.nfe();
             let res = lane.session.into_result();
             for (j, m) in lane.members.into_iter().enumerate() {
+                let Some(payload) = m.payload else {
+                    continue; // departed early; terminal already emitted
+                };
                 let wait = m.admitted.duration_since(m.enqueued);
                 self.engine.nfe.record_request(nfe, wait);
                 let tokens = res.tokens[j].clone();
+                let output = GenOutput {
+                    text: self.engine.decode(&tokens),
+                    tokens,
+                    nfe,
+                    // generation time only (same meaning as the
+                    // fixed path); queue wait travels separately
+                    elapsed: m.admitted.elapsed(),
+                };
+                if let Some(ctl) = &m.ctl {
+                    ctl.finish_done(output.clone());
+                }
                 finished.push(Finished {
-                    payload: m.payload,
-                    result: Ok(GenOutput {
-                        text: self.engine.decode(&tokens),
-                        tokens,
-                        nfe,
-                        // generation time only (same meaning as the
-                        // fixed path); queue wait travels separately
-                        elapsed: m.admitted.elapsed(),
-                    }),
+                    payload,
+                    result: Ok(output),
                     wait,
+                    outcome: Outcome::Done,
                 });
             }
         }
@@ -499,10 +701,15 @@ impl<P> Scheduler<P> {
         let mut out = Vec::new();
         for lane in std::mem::take(&mut self.lanes) {
             for m in lane.members {
+                let Some(payload) = m.payload else { continue };
+                if let Some(ctl) = &m.ctl {
+                    ctl.finish_failed(&msg);
+                }
                 out.push(Finished {
-                    payload: m.payload,
+                    payload,
                     result: Err(anyhow!("{msg}")),
                     wait: m.admitted.duration_since(m.enqueued),
+                    outcome: Outcome::Failed,
                 });
             }
         }
@@ -510,20 +717,47 @@ impl<P> Scheduler<P> {
         out
     }
 
-    /// One boundary: admit pending work into free slots, then make one
-    /// denoiser call. Returns every request that finished (or failed) at
-    /// this boundary.
+    /// One boundary: enforce cancellations/deadlines (freed slots become
+    /// available immediately), admit pending work into free slots, then
+    /// make one denoiser call. Returns every request that finished (or
+    /// failed, or was dropped) at this boundary.
     pub fn tick(&mut self) -> Vec<Finished<P>> {
-        let mut out = self.admit();
+        let mut out = Vec::new();
+        self.reap(&mut out);
+        out.extend(self.admit());
         out.extend(self.step());
         out
     }
+}
+
+/// Resolve a dropped request (cancellation or expiry, queue-side or
+/// in-flight) into its terminal event + a [`Finished`] record.
+fn resolve_drop<P>(
+    payload: P,
+    ctl: Option<&TicketSink>,
+    cancelled: bool,
+    wait: Duration,
+) -> Finished<P> {
+    if let Some(ctl) = ctl {
+        if cancelled {
+            ctl.finish_cancelled();
+        } else {
+            ctl.finish_deadline();
+        }
+    }
+    let (outcome, err) = if cancelled {
+        (Outcome::Cancelled, "request cancelled")
+    } else {
+        (Outcome::DeadlineExceeded, "request deadline exceeded")
+    };
+    Finished { payload, result: Err(anyhow!("{err}")), wait, outcome }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::engine::cipher_mock_engine;
+    use crate::coordinator::request::{Event, Ticket};
     use crate::sampler::SamplerKind;
 
     fn mock_engine() -> Engine {
@@ -531,13 +765,7 @@ mod tests {
     }
 
     fn req(id: usize, seed: u64, cfg: Option<SamplerConfig>) -> Pending<usize> {
-        Pending {
-            src: Some("the quick fox".into()),
-            seed,
-            cfg,
-            enqueued: Instant::now(),
-            payload: id,
-        }
+        Pending::new(Some("the quick fox".into()), seed, cfg, id)
     }
 
     fn policy(max_batch: usize) -> SchedPolicy {
@@ -554,6 +782,7 @@ mod tests {
             done.extend(s.tick());
         }
         assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, Outcome::Done);
         let out = done[0].result.as_ref().unwrap();
         assert!(out.nfe >= 1 && out.nfe <= 8);
         assert_eq!(s.engine().nfe.requests(), 1);
@@ -577,9 +806,11 @@ mod tests {
     }
 
     /// The tentpole guarantee: between admission and retirement, `tick()`
-    /// allocates nothing — token gather, time vector, src gather, and the
-    /// logits all live in buffers reused across calls (the mock denoiser
-    /// writes in place, so the whole boundary is heap-silent).
+    /// allocates nothing — token gather, time vector, src gather, logits,
+    /// *and* lifecycle event emission all live in buffers reused across
+    /// calls (the mock denoiser writes in place, so the whole boundary is
+    /// heap-silent). Runs with an active streaming subscriber attached, so
+    /// per-boundary progress emission is covered by the same pin.
     #[test]
     fn steady_state_tick_is_allocation_free() {
         use crate::util::bench::alloc_count::thread_allocs;
@@ -598,9 +829,13 @@ mod tests {
             })
             .expect("some seed in 0..64 must give >= 4 events");
 
+        let (mut ticket, sink) = Ticket::detached(true);
         let mut s: Scheduler<usize> = Scheduler::new(eng, cfg, policy(4));
-        s.enqueue(req(0, seed, None));
-        // boundary 1: admission + first call — warms every scratch buffer
+        let mut p = req(0, seed, None);
+        p.ctl = Some(sink);
+        s.enqueue(p);
+        // boundary 1: admission + first call — warms every scratch buffer,
+        // including the subscriber's partial-token snapshot
         let first = s.tick();
         assert!(first.is_empty(), ">= 4 events, so the first tick cannot retire");
 
@@ -618,7 +853,19 @@ mod tests {
         }
         assert!(steady >= 2, "expected >= 2 steady-state ticks, saw {steady}");
         assert_eq!(done.len(), 1);
-        assert!(done[0].result.is_ok());
+        let out = done[0].result.as_ref().unwrap();
+        // the subscriber observed the full lifecycle, and its final
+        // progress snapshot is exactly the finished tokens
+        assert!(matches!(ticket.try_next_event(), Some(Event::Admitted)));
+        match ticket.try_next_event() {
+            Some(Event::Progress { nfe_done, nfe_total, partial_tokens }) => {
+                assert_eq!(nfe_done, out.nfe);
+                assert_eq!(nfe_total, out.nfe);
+                assert_eq!(partial_tokens, out.tokens);
+            }
+            other => panic!("expected progress, got {other:?}"),
+        }
+        assert!(matches!(ticket.try_next_event(), Some(Event::Done(_))));
     }
 
     #[test]
@@ -645,5 +892,47 @@ mod tests {
         let nfes: Vec<usize> =
             all.iter().map(|f| f.result.as_ref().unwrap().nfe).collect();
         assert!(nfes.windows(2).all(|w| w[0] == w[1]), "{nfes:?}");
+    }
+
+    #[test]
+    fn late_high_priority_arrival_does_not_reset_the_grouping_window() {
+        let mut s: Scheduler<usize> = Scheduler::new(
+            mock_engine(),
+            SamplerConfig::new(SamplerKind::Dndm, 50),
+            SchedPolicy {
+                max_batch: 4,
+                window: Duration::from_millis(10),
+                shared_tau_groups: true,
+            },
+        );
+        s.enqueue(req(0, 3, None));
+        std::thread::sleep(Duration::from_millis(15));
+        // a fresh high-priority request jumps to the queue front — the
+        // window gate must still key off the oldest enqueue, not the front
+        let mut high = req(1, 4, None);
+        high.priority = Priority::High;
+        s.enqueue(high);
+        s.tick();
+        assert_eq!(s.pending_len(), 0, "batch starts on the oldest request's window");
+        assert_eq!(s.boundary(), 1, "the first denoiser call was made");
+    }
+
+    #[test]
+    fn priority_orders_admission_within_the_queue() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(mock_engine(), SamplerConfig::new(SamplerKind::Dndm, 50), policy(1));
+        let mut low = req(0, 3, None);
+        low.priority = Priority::Low;
+        let mut high = req(1, 4, None);
+        high.priority = Priority::High;
+        s.enqueue(low);
+        s.enqueue(high);
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].payload, 1, "high priority admitted (and finished) first");
+        assert_eq!(done[1].payload, 0);
     }
 }

@@ -1,23 +1,34 @@
 //! The request loop: queue → scheduler → engine → responses.
 //!
 //! PJRT handles are not `Send`, so the engine is built *inside* the server
-//! thread from a factory closure; clients hold a cheap cloneable handle
-//! and block on a per-request response channel (or use `submit_async` and
-//! collect later). Shutdown is explicit or on handle drop.
+//! thread from a factory closure; clients hold a cheap cloneable handle.
+//! The primary entry point is [`Server::submit_request`]: a typed
+//! [`GenRequest`] in, a streaming [`Ticket`] out (per-NFE progress events,
+//! boundary cancellation, deadlines). The legacy `submit*` channel
+//! wrappers remain as thin deprecated shims over the same path. Shutdown
+//! is explicit or on handle drop.
 //!
-//! Two scheduling modes share the same client handle:
+//! Two scheduling modes share the same client handle (unified behind
+//! [`ServeBuilder`](super::router::ServeBuilder), which also shards across
+//! engines via [`Router`](super::router::Router)):
 //!
 //! * **Fixed** ([`Server::start`]) — the legacy policy: FIFO batches are
 //!   frozen by the [`Batcher`] and run to completion. Kept as the ablation
-//!   baseline for the serving bench.
+//!   baseline for the serving bench. Lifecycle support is queue-side only
+//!   (no mid-generation boundaries exist): cancellation and deadlines are
+//!   enforced at dispatch, and tickets see `Admitted` → `Done` with no
+//!   `Progress` events.
 //! * **Continuous** ([`Server::start_continuous`]) — the NFE-aligned
 //!   [`Scheduler`]: requests join the in-flight batch at transition-time
-//!   boundaries, sequences retire individually, freed slots refill.
+//!   boundaries, sequences retire individually, freed slots refill, and
+//!   every boundary emits progress into subscribed tickets.
 //!
 //! [`Batcher`]: super::batcher::Batcher
 //! [`Scheduler`]: super::scheduler::Scheduler
 
+use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -27,7 +38,17 @@ use crate::sampler::SamplerConfig;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenOutput};
-use super::scheduler::{Pending, SchedPolicy, Scheduler};
+use super::request::{self, GenRequest, Priority, Ticket, TicketSink};
+use super::scheduler::{Outcome, Pending, SchedPolicy, Scheduler};
+
+/// Where a finished request's result goes.
+enum Reply {
+    /// Legacy channel client (`submit*` wrappers).
+    Channel(Sender<Result<GenOutput>>),
+    /// Ticket client: terminal events travel through the [`TicketSink`],
+    /// nothing to send here.
+    Ticket,
+}
 
 /// One queued request.
 struct Request {
@@ -36,8 +57,30 @@ struct Request {
     /// per-request sampler override (continuous mode only; the fixed path
     /// ignores it and uses the server-wide config)
     cfg: Option<SamplerConfig>,
+    deadline: Option<Instant>,
+    priority: Priority,
+    ctl: Option<TicketSink>,
     enqueued: Instant,
-    respond: Sender<Result<GenOutput>>,
+    reply: Reply,
+}
+
+impl Request {
+    /// Resolve both delivery legs together — the invariant every exit
+    /// path must uphold: the ticket sink (if any) gets the terminal event
+    /// matching `outcome`, and the channel client (if any) gets `result`.
+    fn resolve(self, result: Result<GenOutput>, outcome: Outcome) {
+        if let Some(ctl) = &self.ctl {
+            match (&result, outcome) {
+                (Ok(out), _) => ctl.finish_done(out.clone()),
+                (Err(_), Outcome::Cancelled) => ctl.finish_cancelled(),
+                (Err(_), Outcome::DeadlineExceeded) => ctl.finish_deadline(),
+                (Err(e), _) => ctl.finish_failed(&format!("{e:#}")),
+            }
+        }
+        if let Reply::Channel(tx) = self.reply {
+            let _ = tx.send(result);
+        }
+    }
 }
 
 enum Msg {
@@ -56,11 +99,56 @@ pub struct ServerStats {
     pub queue_p95: Duration,
     pub e2e_p95: Duration,
     pub e2e_p50: Duration,
-    /// mean per-request NFE over retired requests (continuous mode;
-    /// 0 under the fixed policy, which accounts per batch instead)
+    pub e2e_p99: Duration,
+    /// Mean per-request NFE over retired requests. This is the
+    /// **continuous-only** accounting: each retired request records the
+    /// denoiser calls its own session consumed (= |𝒯| for the DNDM
+    /// family). Under the fixed policy it stays 0 — that path accounts per
+    /// *batch* instead (`nn_calls` / `batches`, the Tables-7/8 statistic;
+    /// see [`crate::metrics::NfeCounter::avg_nfe`]). `docs/serving.md`
+    /// defers to this comment as the single description of the split.
     pub avg_request_nfe: f64,
     /// mean in-flight width per denoiser call / slot capacity, in [0, 1]
     pub occupancy: f64,
+    /// requests dropped by [`Ticket::cancel`]
+    pub cancelled: u64,
+    /// requests dropped because their deadline passed
+    pub deadline_exceeded: u64,
+}
+
+impl ServerStats {
+    /// Merge per-shard stats into one router-level view. Counters add;
+    /// ratios are weighted by their natural denominators; percentiles take
+    /// the per-shard maximum (a conservative upper bound — exact merged
+    /// percentiles would need the raw samples).
+    pub fn merged<I: IntoIterator<Item = ServerStats>>(stats: I) -> ServerStats {
+        let mut out = empty_stats();
+        let (mut batch_w, mut nfe_w, mut occ_w) = (0.0, 0.0, 0.0);
+        for s in stats {
+            out.requests += s.requests;
+            out.batches += s.batches;
+            out.nn_calls += s.nn_calls;
+            out.cancelled += s.cancelled;
+            out.deadline_exceeded += s.deadline_exceeded;
+            batch_w += s.mean_batch * s.batches as f64;
+            nfe_w += s.avg_request_nfe * s.requests as f64;
+            occ_w += s.occupancy * s.nn_calls as f64;
+            out.queue_p95 = out.queue_p95.max(s.queue_p95);
+            out.e2e_p50 = out.e2e_p50.max(s.e2e_p50);
+            out.e2e_p95 = out.e2e_p95.max(s.e2e_p95);
+            out.e2e_p99 = out.e2e_p99.max(s.e2e_p99);
+        }
+        if out.batches > 0 {
+            out.mean_batch = batch_w / out.batches as f64;
+        }
+        if out.requests > 0 {
+            out.avg_request_nfe = nfe_w / out.requests as f64;
+        }
+        if out.nn_calls > 0 {
+            out.occupancy = occ_w / out.nn_calls as f64;
+        }
+        out
+    }
 }
 
 /// Cloneable client handle to a running server.
@@ -99,41 +187,91 @@ impl Server {
         (Server { tx }, ServerJoin { handle: Some(handle) })
     }
 
+    /// Submit a typed request; returns the streaming [`Ticket`] (per-NFE
+    /// [`Event`](super::request::Event)s, `cancel()`, `wait()`).
+    pub fn submit_request(&self, req: GenRequest) -> Result<Ticket> {
+        self.submit_ticketed(req, None)
+    }
+
+    /// Router entry point: like [`Self::submit_request`] but wires the
+    /// shard's load counter into the ticket so it decrements exactly once
+    /// at the terminal event.
+    pub(crate) fn submit_ticketed(
+        &self,
+        req: GenRequest,
+        load: Option<Arc<AtomicUsize>>,
+    ) -> Result<Ticket> {
+        let (ticket, sink) = request::lifecycle(req.stream, load);
+        self.send_req(req, Some(sink), Reply::Ticket)?;
+        Ok(ticket)
+    }
+
     /// Submit and wait for the result.
+    #[deprecated(note = "build a GenRequest and use submit_request(..).wait() instead")]
     pub fn submit(&self, src: Option<String>, seed: u64) -> Result<GenOutput> {
-        self.submit_async(src, seed)?
-            .recv()
-            .map_err(|_| anyhow!("server dropped response"))?
+        let mut req = GenRequest::new(seed);
+        if let Some(s) = src {
+            req = req.src(s);
+        }
+        self.submit_request(req)?.wait()
     }
 
     /// Submit without blocking; returns the response receiver.
+    #[deprecated(note = "build a GenRequest and use submit_request for a streaming Ticket")]
     pub fn submit_async(
         &self,
         src: Option<String>,
         seed: u64,
     ) -> Result<Receiver<Result<GenOutput>>> {
-        self.submit_with(src, seed, None)
+        self.submit_channel(src, seed, None)
     }
 
     /// Submit with a per-request sampler override (continuous mode;
     /// requests with different specs are served in separate batches).
+    #[deprecated(note = "build a GenRequest with .config(..) and use submit_request")]
     pub fn submit_with(
         &self,
         src: Option<String>,
         seed: u64,
         cfg: Option<SamplerConfig>,
     ) -> Result<Receiver<Result<GenOutput>>> {
+        self.submit_channel(src, seed, cfg)
+    }
+
+    /// The shared body of the deprecated channel wrappers: a [`GenRequest`]
+    /// with a channel reply instead of a ticket.
+    fn submit_channel(
+        &self,
+        src: Option<String>,
+        seed: u64,
+        cfg: Option<SamplerConfig>,
+    ) -> Result<Receiver<Result<GenOutput>>> {
+        let mut req = GenRequest::new(seed);
+        if let Some(s) = src {
+            req = req.src(s);
+        }
+        if let Some(c) = cfg {
+            req = req.config(c);
+        }
         let (rtx, rrx) = channel();
+        self.send_req(req, None, Reply::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    fn send_req(&self, req: GenRequest, ctl: Option<TicketSink>, reply: Reply) -> Result<()> {
+        let now = Instant::now();
         self.tx
             .send(Msg::Req(Request {
-                src,
-                seed,
-                cfg,
-                enqueued: Instant::now(),
-                respond: rtx,
+                src: req.src,
+                seed: req.seed,
+                cfg: req.cfg,
+                deadline: req.deadline.map(|d| now + d),
+                priority: req.priority,
+                ctl,
+                enqueued: now,
+                reply,
             }))
-            .map_err(|_| anyhow!("server is down"))?;
-        Ok(rrx)
+            .map_err(|_| anyhow!("server is down"))
     }
 
     pub fn stats(&self) -> Result<ServerStats> {
@@ -172,6 +310,8 @@ struct LoopState {
     requests: u64,
     batches: u64,
     batch_sizes: u64,
+    cancelled: u64,
+    deadline_exceeded: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
     /// slot capacity, for the occupancy statistic
@@ -184,6 +324,8 @@ impl LoopState {
             requests: 0,
             batches: 0,
             batch_sizes: 0,
+            cancelled: 0,
+            deadline_exceeded: 0,
             queue_lat: LatencyStats::new(),
             e2e_lat: LatencyStats::new(),
             capacity,
@@ -196,9 +338,7 @@ fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error) {
     eprintln!("[server] engine init failed: {err:#}");
     while let Ok(msg) = rx.recv() {
         match msg {
-            Msg::Req(r) => {
-                let _ = r.respond.send(Err(anyhow!("engine init failed")));
-            }
+            Msg::Req(r) => r.resolve(Err(anyhow!("engine init failed")), Outcome::Failed),
             Msg::Shutdown => break,
             Msg::Stats(s) => {
                 let _ = s.send(empty_stats());
@@ -245,10 +385,13 @@ where
                 if r.cfg.is_some() {
                     // the fixed path serves one server-wide config; silently
                     // substituting it for the requested one would be wrong
-                    let _ = r.respond.send(Err(anyhow!(
-                        "per-request sampler config requires a continuous-mode \
-                         server (Server::start_continuous)"
-                    )));
+                    r.resolve(
+                        Err(anyhow!(
+                            "per-request sampler config requires a continuous-mode \
+                             server (ServeBuilder::continuous)"
+                        )),
+                        Outcome::Failed,
+                    );
                     continue;
                 }
                 st.requests += 1;
@@ -274,36 +417,64 @@ where
     }
 }
 
-fn dispatch(engine: &Engine, cfg: &SamplerConfig, batcher: &mut Batcher<Request>, st: &mut LoopState) {
+fn dispatch(
+    engine: &Engine,
+    cfg: &SamplerConfig,
+    batcher: &mut Batcher<Request>,
+    st: &mut LoopState,
+) {
     let reqs = batcher.take();
     if reqs.is_empty() {
         return;
     }
+    // queue-side lifecycle enforcement: the fixed path has no
+    // mid-generation boundaries, so dispatch is the last drop point
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        if r.ctl.as_ref().is_some_and(|c| c.is_cancelled()) {
+            st.cancelled += 1;
+            r.resolve(Err(anyhow!("request cancelled")), Outcome::Cancelled);
+            continue;
+        }
+        if r.deadline.is_some_and(|d| now >= d) {
+            st.deadline_exceeded += 1;
+            r.resolve(Err(anyhow!("request deadline exceeded")), Outcome::DeadlineExceeded);
+            continue;
+        }
+        live.push(r);
+    }
+    if live.is_empty() {
+        return;
+    }
     st.batches += 1;
-    st.batch_sizes += reqs.len() as u64;
-    for r in &reqs {
+    st.batch_sizes += live.len() as u64;
+    for r in &live {
         st.queue_lat.record(r.enqueued.elapsed());
+        if let Some(ctl) = &r.ctl {
+            ctl.set_admitted();
+        }
     }
 
     let conditional = engine.conditional();
     let srcs: Option<Vec<String>> = if conditional {
-        Some(reqs.iter().map(|r| r.src.clone().unwrap_or_default()).collect())
+        Some(live.iter().map(|r| r.src.clone().unwrap_or_default()).collect())
     } else {
         None
     };
-    let seed = reqs.first().map(|r| r.seed).unwrap_or(0);
+    let seed = live.first().map(|r| r.seed).unwrap_or(0);
 
-    match engine.generate_batch(srcs.as_deref(), reqs.len(), cfg, seed) {
+    match engine.generate_batch(srcs.as_deref(), live.len(), cfg, seed) {
         Ok((outs, _)) => {
-            for (r, o) in reqs.into_iter().zip(outs) {
+            for (r, o) in live.into_iter().zip(outs) {
                 st.e2e_lat.record(r.enqueued.elapsed());
-                let _ = r.respond.send(Ok(o));
+                r.resolve(Ok(o), Outcome::Done);
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
-            for r in reqs {
-                let _ = r.respond.send(Err(anyhow!("{msg}")));
+            for r in live {
+                r.resolve(Err(anyhow!("{msg}")), Outcome::Failed);
             }
         }
     }
@@ -329,7 +500,7 @@ fn serve_continuous_loop<F>(
         }
     };
 
-    let mut sched: Scheduler<Sender<Result<GenOutput>>> = Scheduler::new(engine, cfg, policy);
+    let mut sched: Scheduler<Reply> = Scheduler::new(engine, cfg, policy);
     let mut st = LoopState::new(policy.max_batch);
     let mut draining = false;
 
@@ -337,8 +508,8 @@ fn serve_continuous_loop<F>(
         // 1. ingest. While lanes are active, never block — drain whatever
         //    arrived and get back to stepping (admission happens at the
         //    boundary inside tick()). Otherwise block until the grouping
-        //    window of the oldest pending request expires, or forever when
-        //    fully idle.
+        //    window (or the earliest queued deadline) of the pending work
+        //    expires, or forever when fully idle.
         if sched.in_flight() > 0 {
             loop {
                 match rx.try_recv() {
@@ -357,7 +528,13 @@ fn serve_continuous_loop<F>(
             }
         } else if sched.pending_len() > 0 && !draining {
             let deadline = sched.next_deadline().expect("pending implies a deadline");
-            let timeout = deadline.saturating_duration_since(Instant::now());
+            // Cancellation has no wake path of its own (the flag lives in
+            // the ticket), so bound the idle sleep: a queued request
+            // cancelled during a long grouping window resolves within one
+            // poll interval instead of at window expiry.
+            const QUEUE_POLL: Duration = Duration::from_millis(20);
+            let timeout =
+                deadline.saturating_duration_since(Instant::now()).min(QUEUE_POLL);
             match rx.recv_timeout(timeout) {
                 Ok(m) => {
                     if handle_msg(m, &mut sched, &mut st) {
@@ -387,14 +564,24 @@ fn serve_continuous_loop<F>(
             }
         }
 
-        // 2. one boundary: admit + one denoiser call; deliver retirements.
+        // 2. one boundary: reap/admit + one denoiser call; deliver
+        //    retirements (ticket terminals were already emitted inside
+        //    tick(), channel replies are sent here).
         for f in sched.tick() {
-            st.queue_lat.record(f.wait);
-            if let Ok(out) = &f.result {
-                // e2e = queue wait + in-flight generation time
-                st.e2e_lat.record(f.wait + out.elapsed);
+            match f.outcome {
+                Outcome::Cancelled => st.cancelled += 1,
+                Outcome::DeadlineExceeded => st.deadline_exceeded += 1,
+                _ => {
+                    st.queue_lat.record(f.wait);
+                    if let Ok(out) = &f.result {
+                        // e2e = queue wait + in-flight generation time
+                        st.e2e_lat.record(f.wait + out.elapsed);
+                    }
+                }
             }
-            let _ = f.payload.send(f.result);
+            if let Reply::Channel(tx) = f.payload {
+                let _ = tx.send(f.result);
+            }
         }
         if draining && !sched.has_work() {
             break 'outer;
@@ -405,7 +592,7 @@ fn serve_continuous_loop<F>(
 /// Returns true when the message requests shutdown.
 fn handle_msg(
     msg: Msg,
-    sched: &mut Scheduler<Sender<Result<GenOutput>>>,
+    sched: &mut Scheduler<Reply>,
     st: &mut LoopState,
 ) -> bool {
     match msg {
@@ -416,7 +603,10 @@ fn handle_msg(
                 seed: r.seed,
                 cfg: r.cfg,
                 enqueued: r.enqueued,
-                payload: r.respond,
+                deadline: r.deadline,
+                priority: r.priority,
+                ctl: r.ctl,
+                payload: r.reply,
             });
             false
         }
@@ -447,8 +637,11 @@ fn snapshot(st: &LoopState, engine: &Engine) -> ServerStats {
         queue_p95: st.queue_lat.p95(),
         e2e_p95: st.e2e_lat.p95(),
         e2e_p50: st.e2e_lat.p50(),
+        e2e_p99: st.e2e_lat.p99(),
         avg_request_nfe: engine.nfe.avg_request_nfe(),
         occupancy: engine.nfe.occupancy(st.capacity),
+        cancelled: st.cancelled,
+        deadline_exceeded: st.deadline_exceeded,
     }
 }
 
@@ -461,8 +654,11 @@ fn empty_stats() -> ServerStats {
         queue_p95: Duration::ZERO,
         e2e_p95: Duration::ZERO,
         e2e_p50: Duration::ZERO,
+        e2e_p99: Duration::ZERO,
         avg_request_nfe: 0.0,
         occupancy: 0.0,
+        cancelled: 0,
+        deadline_exceeded: 0,
     }
 }
 
@@ -470,6 +666,7 @@ fn empty_stats() -> ServerStats {
 mod tests {
     use super::*;
     use crate::coordinator::engine::Engine;
+    use crate::coordinator::request::Event;
     use crate::sampler::{SamplerConfig, SamplerKind};
 
     fn mock_factory() -> Result<Engine> {
@@ -477,6 +674,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // the wrappers must keep working verbatim
     fn serves_concurrent_requests_batched() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
         let policy = BatchPolicy { max_batch: 4, window: Duration::from_millis(30) };
@@ -499,6 +697,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn blocking_submit_roundtrip() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
         let (srv, join) =
@@ -510,6 +709,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn shutdown_flushes_pending() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
         let policy = BatchPolicy { max_batch: 64, window: Duration::from_secs(60) };
@@ -523,6 +723,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn engine_failure_fails_requests_cleanly() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
         let (srv, join) = Server::start(
@@ -536,9 +737,44 @@ mod tests {
         join.join();
     }
 
+    #[test]
+    fn fixed_mode_ticket_sees_admitted_then_done() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let (srv, join) =
+            Server::start(mock_factory, cfg, BatchPolicy { max_batch: 1, window: Duration::ZERO });
+        let mut t = srv
+            .submit_request(GenRequest::new(1).src("a small garden").stream_partials())
+            .unwrap();
+        assert!(matches!(t.next_event(), Some(Event::Admitted)));
+        // the fixed path has no boundaries, so the next event is terminal
+        match t.next_event() {
+            Some(Event::Done(out)) => assert!(!out.tokens.is_empty()),
+            other => panic!("expected Done, got {other:?}"),
+        }
+        assert!(t.next_event().is_none());
+        srv.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn fixed_mode_enforces_deadline_at_dispatch() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let (srv, join) =
+            Server::start(mock_factory, cfg, BatchPolicy { max_batch: 1, window: Duration::ZERO });
+        let t = srv
+            .submit_request(GenRequest::new(1).src("x").deadline(Duration::ZERO))
+            .unwrap();
+        assert!(t.wait().unwrap_err().to_string().contains("deadline"));
+        let stats = srv.stats().unwrap();
+        assert_eq!(stats.deadline_exceeded, 1);
+        srv.shutdown();
+        join.join();
+    }
+
     // -- continuous mode --
 
     #[test]
+    #[allow(deprecated)]
     fn continuous_serves_and_reports_per_request_nfe() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
         let policy = SchedPolicy {
@@ -560,11 +796,49 @@ mod tests {
         assert_eq!(stats.requests, 8);
         assert!(stats.avg_request_nfe >= 1.0 && stats.avg_request_nfe <= 8.0);
         assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0);
+        assert_eq!(stats.cancelled + stats.deadline_exceeded, 0);
         srv.shutdown();
         join.join();
     }
 
     #[test]
+    fn continuous_ticket_streams_progress_to_done() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let policy = SchedPolicy {
+            max_batch: 4,
+            window: Duration::ZERO,
+            shared_tau_groups: true,
+        };
+        let (srv, join) = Server::start_continuous(mock_factory, cfg, policy);
+        let mut t = srv
+            .submit_request(
+                GenRequest::new(7).src("the quick fox crosses a river").stream_partials(),
+            )
+            .unwrap();
+        assert!(matches!(t.next_event(), Some(Event::Admitted)));
+        let mut last_progress: Option<(usize, usize, Vec<u32>)> = None;
+        let done = loop {
+            match t.next_event() {
+                Some(Event::Progress { nfe_done, nfe_total, partial_tokens }) => {
+                    if let Some((prev, _, _)) = &last_progress {
+                        assert!(nfe_done > *prev, "progress must be monotonic");
+                    }
+                    last_progress = Some((nfe_done, nfe_total, partial_tokens));
+                }
+                Some(Event::Done(out)) => break out,
+                other => panic!("unexpected event {other:?}"),
+            }
+        };
+        let (nfe_done, nfe_total, tokens) = last_progress.expect("at least one progress event");
+        assert_eq!(nfe_done, done.nfe);
+        assert_eq!(nfe_total, done.nfe);
+        assert_eq!(tokens, done.tokens, "final progress == done output, byte for byte");
+        srv.shutdown();
+        join.join();
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn continuous_shutdown_flushes_pending() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
         let policy = SchedPolicy {
@@ -581,6 +855,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn continuous_engine_failure_fails_requests_cleanly() {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
         let (srv, join) = Server::start_continuous(
@@ -590,6 +865,20 @@ mod tests {
         );
         let r = srv.submit(Some("x".into()), 0);
         assert!(r.is_err());
+        srv.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn engine_failure_fails_tickets_cleanly() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let (srv, join) = Server::start_continuous(
+            || Err(anyhow!("boom")),
+            cfg,
+            SchedPolicy::default(),
+        );
+        let t = srv.submit_request(GenRequest::new(0).src("x")).unwrap();
+        assert!(t.wait().is_err());
         srv.shutdown();
         join.join();
     }

@@ -9,7 +9,7 @@ pub enum NoiseKind {
     /// diffusion (Hoogeboom et al. 2021b). `lo` excludes the special
     /// tokens (<pad>/<unk>/<mask>), mirroring trainer.py::NOISE_LO.
     Multinomial { lo: u32, vocab: u32 },
-    /// Point mass on the absorbing [MASK] state (Austin et al. 2021).
+    /// Point mass on the absorbing `[MASK]` state (Austin et al. 2021).
     Absorbing { mask_id: u32 },
 }
 

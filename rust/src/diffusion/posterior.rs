@@ -50,8 +50,8 @@ pub fn multinomial_reverse_step(
 }
 
 /// Absorbing-diffusion reverse step (Appendix B.1):
-/// if x_t ≠ [MASK]    → x_{t−1} = x_t (already decoded, frozen);
-/// if x_t = [MASK]    → stay [MASK] w.p. (1−α_{t−1})/(1−α_t),
+/// if x_t ≠ `[MASK]`    → x_{t−1} = x_t (already decoded, frozen);
+/// if x_t = `[MASK]`    → stay `[MASK]` w.p. (1−α_{t−1})/(1−α_t),
 ///                      else reveal x̂0.
 pub fn absorbing_reverse_step(
     x_t: u32,

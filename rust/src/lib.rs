@@ -21,20 +21,41 @@
 //!
 //! ## Quick tour
 //!
-//! ```no_run
-//! use dndm::runtime::Artifacts;
-//! use dndm::sampler::{SamplerKind, SamplerConfig};
-//! use dndm::coordinator::Engine;
+//! Serving goes through one builder: [`coordinator::ServeBuilder`] starts
+//! N sharded server threads (continuous NFE-aligned scheduling by
+//! default), and each submitted [`coordinator::GenRequest`] returns a
+//! [`coordinator::Ticket`] — a per-NFE event stream with boundary
+//! cancellation:
 //!
-//! let arts = Artifacts::load("artifacts").unwrap();
-//! let engine = Engine::new(&arts, "cond_absorb_iwslt14").unwrap();
-//! let out = engine.generate_one(
-//!     Some("the quick fox crosses a river"),
-//!     &SamplerConfig::new(SamplerKind::Dndm, 50),
-//!     7,
-//! ).unwrap();
-//! println!("{} (NFE {})", out.text, out.nfe);
+//! ```no_run
+//! use dndm::coordinator::{Engine, Event, GenRequest, ServeBuilder};
+//! use dndm::runtime::Artifacts;
+//! use dndm::sampler::{SamplerConfig, SamplerKind};
+//!
+//! let router = ServeBuilder::new(
+//!     || Engine::new(&Artifacts::load("artifacts")?, "cond_absorb_iwslt14"),
+//!     SamplerConfig::new(SamplerKind::Dndm, 50),
+//! )
+//! .shards(2)
+//! .start();
+//!
+//! let mut ticket = router
+//!     .submit_request(GenRequest::new(7).src("the quick fox crosses a river").stream_partials())
+//!     .unwrap();
+//! while let Some(event) = ticket.next_event() {
+//!     match event {
+//!         Event::Progress { nfe_done, nfe_total, .. } => {
+//!             println!("boundary {nfe_done}/{nfe_total}");
+//!         }
+//!         Event::Done(out) => println!("{} (NFE {})", out.text, out.nfe),
+//!         _ => {}
+//!     }
+//! }
+//! router.shutdown();
 //! ```
+//!
+//! For one-off generation without a server thread, [`coordinator::Engine`]
+//! still exposes `generate_one` / `generate_batch` directly.
 
 pub mod coordinator;
 pub mod data;

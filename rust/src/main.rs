@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use dndm::coordinator::{BatchPolicy, Engine, Server};
+use dndm::coordinator::{BatchPolicy, Engine, GenRequest, SchedPolicy, ServeBuilder};
 use dndm::data::{gen_pairs, Dataset, Split};
 use dndm::metrics::bleu::corpus_bleu_str;
 use dndm::runtime::Artifacts;
@@ -52,6 +52,7 @@ fn print_help() {
          generate   --model NAME --sampler dndm --steps 50 --batch 4 --count 4 --seed 0\n\
          translate  --dataset iwslt14 --kind absorbing --sampler dndm-k --steps 50 --count 64\n\
          serve      --dataset iwslt14 --kind absorbing --requests 64 --max-batch 16 --window-ms 20\n\
+                    [--shards N] [--fixed]   (continuous NFE-aligned scheduling by default)\n\
          nfe        --steps 1000 --n 16 --spec beta:15:7\n\n\
          common flags: --artifacts PATH  --spec exact:cosine_sq|beta:A:B\n\
                        --order random|l2r|r2l  --temperature X  --seed N\n\
@@ -191,43 +192,55 @@ fn serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --dataset"))?;
     let model = model_for(args, &arts)?;
     let cfg = sampler_config(args)?;
-    let policy = BatchPolicy {
-        max_batch: args.usize_or("max-batch", 16),
-        window: std::time::Duration::from_millis(args.u64_or("window-ms", 20)),
-    };
+    let max_batch = args.usize_or("max-batch", 16);
+    let window = std::time::Duration::from_millis(args.u64_or("window-ms", 20));
+    let shards = args.usize_or("shards", 1);
+    let fixed = args.has("fixed");
     let n_requests = args.usize_or("requests", 64);
 
-    println!("starting server: model={model} sampler={} policy={policy:?}", cfg.kind.name());
-    let model2 = model.clone();
-    let (srv, join) = Server::start(
-        move || {
-            let arts = Artifacts::load(&arts_path)?;
-            let eng = Engine::new(&arts, &model2)?;
-            eng.warmup(&[1, 4, 16])?;
-            Ok(eng)
-        },
-        cfg,
-        policy,
+    println!(
+        "starting {} server: model={model} sampler={} max_batch={max_batch} \
+         window={window:?} shards={shards}",
+        if fixed { "fixed-batch" } else { "continuous" },
+        cfg.kind.name()
     );
+    let model2 = model.clone();
+    let factory = move || {
+        let arts = Artifacts::load(&arts_path)?;
+        let eng = Engine::new(&arts, &model2)?;
+        eng.warmup(&[1, 4, 16])?;
+        Ok(eng)
+    };
+    let builder = ServeBuilder::new(factory, cfg).shards(shards);
+    let router = if fixed {
+        builder.fixed(BatchPolicy { max_batch, window }).start()
+    } else {
+        builder
+            .continuous(SchedPolicy { max_batch, window, shared_tau_groups: true })
+            .start()
+    };
 
     // synthetic client load: the test split as concurrent requests
     let pairs = gen_pairs(ds, Split::Test, n_requests);
     let t0 = Instant::now();
-    let rxs: Vec<_> = pairs
+    let tickets: Vec<_> = pairs
         .iter()
         .enumerate()
-        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .map(|(i, (s, _))| {
+            router.submit_request(GenRequest::new(i as u64).src(s.join(" "))).unwrap()
+        })
         .collect();
     let mut hyps = Vec::new();
-    for rx in rxs {
-        hyps.push(rx.recv()??.text);
+    for t in tickets {
+        hyps.push(t.wait()?.text);
     }
     let wall = t0.elapsed();
     let refs: Vec<String> = pairs.iter().map(|(_, t)| t.join(" ")).collect();
-    let stats = srv.stats()?;
+    let stats = router.stats()?;
     println!(
         "served {} requests in {:.2}s ({:.1} req/s)\n  batches {} (mean size {:.1})  NN calls {}\n  \
-         queue p95 {:.1}ms  e2e p50 {:.1}ms  p95 {:.1}ms\n  BLEU {:.2}",
+         queue p95 {:.1}ms  e2e p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms\n  \
+         cancelled {}  deadline-exceeded {}\n  BLEU {:.2}",
         n_requests,
         wall.as_secs_f64(),
         n_requests as f64 / wall.as_secs_f64(),
@@ -237,10 +250,13 @@ fn serve(args: &Args) -> Result<()> {
         stats.queue_p95.as_secs_f64() * 1e3,
         stats.e2e_p50.as_secs_f64() * 1e3,
         stats.e2e_p95.as_secs_f64() * 1e3,
+        stats.e2e_p99.as_secs_f64() * 1e3,
+        stats.cancelled,
+        stats.deadline_exceeded,
         corpus_bleu_str(&hyps, &refs),
     );
-    srv.shutdown();
-    join.join();
+    router.shutdown();
+    router.join();
     Ok(())
 }
 

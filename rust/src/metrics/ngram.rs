@@ -12,7 +12,7 @@ use std::collections::HashMap;
 /// Interpolated Kneser–Ney LM over u32 token ids, order `n`.
 pub struct NgramLm {
     n: usize,
-    /// counts[k][context ++ token] for k-grams (k = 1..=n)
+    /// `counts[k][context ++ token]` for k-grams (k = 1..=n)
     counts: Vec<HashMap<Vec<u32>, usize>>,
     /// context totals per order
     ctx_totals: Vec<HashMap<Vec<u32>, usize>>,

@@ -58,6 +58,11 @@ impl AlgState for ArdmState {
         self.done = end;
         core.finish_event(t_norm as f64);
     }
+
+    fn total_events(&self) -> usize {
+        // ⌈N / parallel⌉ calls decode all N positions
+        self.order.len().div_ceil(self.parallel)
+    }
 }
 
 /// Run-to-completion wrapper with an explicit `parallel` (the `generate()`

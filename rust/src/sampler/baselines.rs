@@ -77,6 +77,10 @@ impl AlgState for D3pmState {
         self.t -= 1;
         core.finish_event(t_norm as f64);
     }
+
+    fn total_events(&self) -> usize {
+        self.t_max
+    }
 }
 
 /// RDM reparameterized sampling (Zheng et al. 2023).
@@ -181,6 +185,10 @@ impl AlgState for RdmState {
         self.t -= 1;
         core.finish_event(t_norm as f64);
     }
+
+    fn total_events(&self) -> usize {
+        self.t_max
+    }
 }
 
 /// Mask-Predict (Ghazvininejad et al. 2019) — Table 13's comparator.
@@ -235,6 +243,10 @@ impl AlgState for MaskPredictState {
         }
         self.i += 1;
         core.finish_event(t_norm as f64);
+    }
+
+    fn total_events(&self) -> usize {
+        self.iters
     }
 }
 

@@ -45,7 +45,7 @@ pub fn sample_x0(logits: &[f32], temperature: f32, rng: &mut SplitMix64) -> (u32
     (arg as u32, log_prob(logits, arg))
 }
 
-/// log softmax(logits)[idx], numerically stable single pass.
+/// `log softmax(logits)[idx]`, numerically stable single pass.
 #[inline]
 pub fn log_prob(logits: &[f32], idx: usize) -> f32 {
     let mut mx = f32::NEG_INFINITY;

@@ -92,6 +92,10 @@ impl AlgState for DdimState {
         self.t -= 1;
         core.finish_event(t_norm as f64);
     }
+
+    fn total_events(&self) -> usize {
+        self.t_max
+    }
 }
 
 /// Run-to-completion wrapper with an explicit η (the `generate()` dispatch

@@ -4,7 +4,7 @@
 //! transition-time set 𝒯 up front, then walk the *event list* (distinct τ
 //! values, descending) instead of all T steps. The denoiser runs once per
 //! event; every other step is the identity `x_{t−1} = x_t` and costs
-//! nothing. [`DndmState`] / [`DndmCState`] hold 𝒯 and the event cursor;
+//! nothing. `DndmState` / `DndmCState` hold 𝒯 and the event cursor;
 //! `session::drive` (or the coordinator's continuous scheduler) supplies
 //! the logits one event at a time.
 
@@ -77,6 +77,10 @@ impl AlgState for DndmState {
     fn taus(&self) -> Option<&[Vec<usize>]> {
         Some(&self.taus)
     }
+
+    fn total_events(&self) -> usize {
+        self.events.len()
+    }
 }
 
 /// Algorithm 2 — DNDM-C (continuous time / infinite steps).
@@ -92,6 +96,9 @@ pub(crate) struct DndmCState {
     order: Vec<usize>,
     /// cursor into `order`; ties are grouped per event
     k: usize,
+    /// distinct events over the whole walk (ties pre-counted with the same
+    /// grouping rule `advance` uses)
+    total: usize,
 }
 
 impl DndmCState {
@@ -99,7 +106,18 @@ impl DndmCState {
         let taus: Vec<f64> = cfg.spec.sample_times_continuous(core.n, cfg.order, &mut core.rng);
         let mut order: Vec<usize> = (0..core.n).collect();
         order.sort_by(|&a, &b| taus[b].partial_cmp(&taus[a]).unwrap());
-        DndmCState { taus, order, k: 0 }
+        let mut total = 0usize;
+        let mut k = 0usize;
+        while k < order.len() {
+            let t = taus[order[k]];
+            let mut j = k + 1;
+            while j < order.len() && (taus[order[j]] - t).abs() < 1e-12 {
+                j += 1;
+            }
+            total += 1;
+            k = j;
+        }
+        DndmCState { taus, order, k: 0, total }
     }
 }
 
@@ -129,6 +147,10 @@ impl AlgState for DndmCState {
         }
         self.k = j;
         core.finish_event(t);
+    }
+
+    fn total_events(&self) -> usize {
+        self.total
     }
 }
 

@@ -81,6 +81,10 @@ impl AlgState for TopKState {
 
     // no taus() override: Algorithm 4 predetermines the K_t counts, not
     // per-position times, so the default `None` is correct.
+
+    fn total_events(&self) -> usize {
+        self.tt.events().len()
+    }
 }
 
 #[cfg(test)]

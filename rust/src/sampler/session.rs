@@ -101,10 +101,16 @@ pub(crate) trait AlgState {
     fn taus(&self) -> Option<&[Vec<usize>]> {
         None
     }
+
+    /// Total denoiser calls this session will make over its whole life —
+    /// known up front for every algorithm (|𝒯| for the DNDM family, T for
+    /// the step-marching baselines, ⌈N/k⌉ for ARDM). Powers `nfe_total`
+    /// in serving progress events.
+    fn total_events(&self) -> usize;
 }
 
 /// Construct the shared core exactly the way the old loops did: RNG from
-/// the seed, then x_T (from q_noise, or all-[MASK] for the mask-seeded
+/// the seed, then x_T (from q_noise, or all-`[MASK]` for the mask-seeded
 /// algorithms, which draw nothing for x_T).
 pub(crate) fn build_core(
     mcfg: &ModelConfig,
@@ -211,6 +217,15 @@ impl SamplerSession {
     /// Denoiser calls completed so far (== |𝒯| events fired for DNDM).
     pub fn nfe(&self) -> usize {
         self.core.nfe
+    }
+
+    /// Total denoiser calls this session makes over its whole life,
+    /// predetermined at construction: |𝒯| for the DNDM family (the
+    /// paper's headline quantity), T for the step-marching baselines,
+    /// ⌈N/k⌉ for ARDM. Equals [`Self::nfe`] once the session is done;
+    /// serving uses it as `nfe_total` in streamed progress events.
+    pub fn total_events(&self) -> usize {
+        self.alg.total_events()
     }
 
     pub fn is_done(&self) -> bool {
@@ -368,6 +383,41 @@ mod tests {
         let cfg = SamplerConfig::new(SamplerKind::D3pm, 25);
         let sess = SamplerSession::new(den.config(), &cfg, 1, 1).unwrap();
         assert!(sess.taus().is_none());
+    }
+
+    #[test]
+    fn total_events_is_known_up_front_and_matches_final_nfe() {
+        let kinds: [(SamplerKind, &str); 10] = [
+            (SamplerKind::Dndm, "absorbing"),
+            (SamplerKind::DndmV2, "absorbing"),
+            (SamplerKind::DndmTopK, "absorbing"),
+            (SamplerKind::DndmC, "absorbing"),
+            (SamplerKind::D3pm, "absorbing"),
+            (SamplerKind::Rdm, "absorbing"),
+            (SamplerKind::RdmTopK, "multinomial"),
+            (SamplerKind::MaskPredict, "absorbing"),
+            (SamplerKind::Ddim, "multinomial"),
+            (SamplerKind::Ardm, "absorbing"),
+        ];
+        for (sk, noise) in kinds {
+            let den = mock(noise);
+            let cfg = SamplerConfig::new(sk, 25);
+            let mut sess = SamplerSession::new(den.config(), &cfg, 2, 11).unwrap();
+            let total = sess.total_events();
+            assert!(total >= 1, "{}: total must be predetermined", sk.name());
+            while let Some(call) = sess.next_event() {
+                assert!(call.index < total, "{}: index within total", sk.name());
+                let logits = den.denoise(sess.x(), &vec![call.t; 2], None).unwrap();
+                sess.advance(&logits).unwrap();
+            }
+            assert_eq!(
+                sess.total_events(),
+                sess.nfe(),
+                "{}: total_events == final NFE",
+                sk.name()
+            );
+            assert_eq!(sess.nfe(), total, "{}: total is stable over the run", sk.name());
+        }
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Continuous NFE-aligned batching suite, driven deterministically by
-//! hand-ticking the `Scheduler` (no threads, no timing):
+//! hand-ticking the `Scheduler` (no threads, minimal timing):
 //!
 //! * mid-flight admission happens at transition-time boundaries only,
 //! * retired sequences free slots that are refilled,
 //! * a mixed-spec workload falls back to separate batches instead of
-//!   corrupting the union-𝒯 path.
+//!   corrupting the union-𝒯 path,
+//! * cancellation and deadlines are enforced at the same boundaries:
+//!   a cancelled lane's slots free (and refill) at the next tick, an
+//!   expired queued request is never admitted.
 //!
 //! DNDM-C with the exact linear schedule is the workhorse: its continuous
 //! τ are a.s. distinct, so every request costs exactly N = 8 denoiser
@@ -12,7 +15,9 @@
 
 use std::time::{Duration, Instant};
 
-use dndm::coordinator::{cipher_mock_engine, Engine, Pending, SchedPolicy, Scheduler};
+use dndm::coordinator::{
+    cipher_mock_engine, Engine, Event, Outcome, Pending, SchedPolicy, Scheduler, Ticket,
+};
 use dndm::sampler::{SamplerConfig, SamplerKind};
 use dndm::schedule::{AlphaSchedule, TransitionSpec};
 
@@ -29,13 +34,20 @@ fn dndm_c_cfg() -> SamplerConfig {
 }
 
 fn req(id: usize, seed: u64, cfg: Option<SamplerConfig>) -> Pending<usize> {
-    Pending {
-        src: Some("the quick fox crosses a river to the garden by".into()),
+    Pending::new(
+        Some("the quick fox crosses a river to the garden by".into()),
         seed,
         cfg,
-        enqueued: Instant::now(),
-        payload: id,
-    }
+        id,
+    )
+}
+
+/// Like [`req`], but with a lifecycle ticket attached.
+fn ticketed_req(id: usize, seed: u64) -> (Ticket, Pending<usize>) {
+    let (ticket, sink) = Ticket::detached(true);
+    let mut p = req(id, seed, None);
+    p.ctl = Some(sink);
+    (ticket, p)
 }
 
 fn policy(max_batch: usize, shared: bool) -> SchedPolicy {
@@ -175,6 +187,127 @@ fn bad_spec_fails_its_group_without_poisoning_the_queue() {
     assert!(done.iter().find(|f| f.payload == 0).unwrap().result.is_err());
     let ok = done.iter().find(|f| f.payload == 1).unwrap();
     assert_eq!(ok.result.as_ref().unwrap().nfe, N);
+}
+
+#[test]
+fn cancel_at_a_boundary_frees_the_slot_and_refills_the_same_tick() {
+    // capacity 2, width-1 lanes; a third request waits for a slot
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(2, false));
+    let (ticket, p0) = ticketed_req(0, 1);
+    s.enqueue(p0);
+    s.enqueue(req(1, 2, None));
+    assert!(s.tick().is_empty());
+    assert_eq!(s.in_flight(), 2);
+    s.enqueue(req(2, 3, None));
+    assert_eq!(s.pending_len(), 1, "no free slot for request 2 yet");
+
+    ticket.cancel();
+    let done = s.tick();
+    // the cancelled lane was dropped before this boundary's call, and the
+    // freed slot was refilled by request 2 at the very same tick
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].payload, 0);
+    assert_eq!(done[0].outcome, Outcome::Cancelled);
+    assert!(done[0].result.is_err());
+    assert_eq!(s.in_flight(), 2, "freed slot refilled at the same boundary");
+    assert_eq!(s.pending_len(), 0);
+    let lanes = s.lane_info();
+    assert!(
+        lanes.iter().any(|l| l.admitted_boundary == 1),
+        "request 2 admitted at the cancellation boundary: {lanes:?}"
+    );
+
+    // the ticket observed the full lifecycle, ending in Cancelled
+    let mut t = ticket;
+    assert!(matches!(t.try_next_event(), Some(Event::Admitted)));
+    assert!(matches!(t.try_next_event(), Some(Event::Progress { nfe_done: 1, .. })));
+    assert!(matches!(t.try_next_event(), Some(Event::Cancelled)));
+    assert!(t.finished());
+
+    let mut rest = Vec::new();
+    while s.has_work() {
+        rest.extend(s.tick());
+    }
+    assert_eq!(rest.len(), 2);
+    for f in &rest {
+        assert_eq!(f.outcome, Outcome::Done);
+        assert_eq!(f.result.as_ref().unwrap().nfe, N);
+    }
+    // cancelled requests never reach the per-request NFE accounting
+    assert_eq!(s.engine().nfe.requests(), 2);
+}
+
+#[test]
+fn cancel_with_an_empty_queue_drops_occupancy_next_tick() {
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(2, false));
+    let (ticket, p0) = ticketed_req(0, 1);
+    s.enqueue(p0);
+    s.enqueue(req(1, 2, None));
+    assert!(s.tick().is_empty());
+    assert_eq!(s.in_flight(), 2);
+
+    ticket.cancel();
+    let done = s.tick();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].outcome, Outcome::Cancelled);
+    assert_eq!(s.in_flight(), 1, "occupancy drops at the next tick");
+    // the denoiser call at the cancellation boundary was width 1, not 2 —
+    // the dead lane's compute was actually saved, not just unreported
+    let calls_before = s.engine().nfe.calls();
+    let evals_before = s.engine().nfe.seq_evals();
+    s.tick();
+    assert_eq!(s.engine().nfe.calls(), calls_before + 1);
+    assert_eq!(s.engine().nfe.seq_evals(), evals_before + 1);
+
+    while s.has_work() {
+        s.tick();
+    }
+}
+
+#[test]
+fn queued_request_past_its_deadline_is_never_admitted() {
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(4, true));
+    let (ticket, mut p0) = ticketed_req(0, 1);
+    p0.deadline = Some(Instant::now()); // already due
+    s.enqueue(p0);
+    s.enqueue(req(1, 2, None));
+
+    let done = s.tick();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].payload, 0);
+    assert_eq!(done[0].outcome, Outcome::DeadlineExceeded);
+    // the expired request consumed no engine work and was never admitted
+    let mut t = ticket;
+    assert!(
+        matches!(t.try_next_event(), Some(Event::DeadlineExceeded)),
+        "no Admitted event may precede the expiry"
+    );
+
+    let mut rest = Vec::new();
+    while s.has_work() {
+        rest.extend(s.tick());
+    }
+    assert_eq!(rest.len(), 1);
+    assert_eq!(rest[0].result.as_ref().unwrap().nfe, N);
+    assert_eq!(s.engine().nfe.requests(), 1, "only the live request is accounted");
+    assert_eq!(s.engine().nfe.calls(), N as u64);
+}
+
+#[test]
+fn in_flight_deadline_is_enforced_at_the_next_boundary() {
+    let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), dndm_c_cfg(), policy(2, false));
+    let (_ticket, mut p0) = ticketed_req(0, 1);
+    p0.deadline = Some(Instant::now() + Duration::from_millis(25));
+    s.enqueue(p0);
+    assert!(s.tick().is_empty(), "admitted while the deadline is still ahead");
+    assert_eq!(s.in_flight(), 1);
+
+    std::thread::sleep(Duration::from_millis(40));
+    let done = s.tick();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].outcome, Outcome::DeadlineExceeded);
+    assert_eq!(s.in_flight(), 0, "the expired lane's slot is freed");
+    assert!(!s.has_work());
 }
 
 #[test]

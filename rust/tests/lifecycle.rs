@@ -1,0 +1,195 @@
+//! Request-lifecycle integration suite — the serving-side analogue of
+//! `tests/determinism.rs`: for every `SamplerKind`, driving a request
+//! through `ServeBuilder` → `Ticket` events must be *byte-identical* to
+//! calling `Engine::generate_one` with the same (src, seed, config), and
+//! the final `Progress` snapshot must equal the `Done` output exactly.
+//!
+//! Engines are deterministic mocks: the conditional absorbing cipher for
+//! the absorbing-capable kinds, an unconditional multinomial mock for the
+//! multinomial-only ones (DDIM, RDM-k's multinomial row).
+
+use std::time::Duration;
+
+use dndm::coordinator::{cipher_mock_engine, Engine, Event, GenRequest, SchedPolicy, ServeBuilder};
+use dndm::data::words;
+use dndm::runtime::MockDenoiser;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+
+/// Every sampler with a noise family it supports (mask-predict/ARDM are
+/// absorbing-only, DDIM multinomial-only) — same map as determinism.rs.
+const ALL_KINDS: [(SamplerKind, &str); 10] = [
+    (SamplerKind::Dndm, "absorbing"),
+    (SamplerKind::DndmV2, "absorbing"),
+    (SamplerKind::DndmTopK, "absorbing"),
+    (SamplerKind::DndmC, "absorbing"),
+    (SamplerKind::D3pm, "absorbing"),
+    (SamplerKind::Rdm, "absorbing"),
+    (SamplerKind::RdmTopK, "multinomial"),
+    (SamplerKind::MaskPredict, "absorbing"),
+    (SamplerKind::Ddim, "multinomial"),
+    (SamplerKind::Ardm, "absorbing"),
+];
+
+const SRC: &str = "the quick fox crosses a river to the garden by";
+
+fn engine(noise: &'static str) -> Engine {
+    if noise == "absorbing" {
+        return cipher_mock_engine(8);
+    }
+    // unconditional multinomial mock over the shared translation vocab
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), 8, 0, "multinomial");
+    let mut den = MockDenoiser::fixed(cfg, vec![44, 45, 46, 47, 48, 49, 50, 51]);
+    den.peak = 14.0;
+    Engine::from_denoiser(Box::new(den), vocab, "multinomial-mock")
+}
+
+fn sched_policy() -> SchedPolicy {
+    SchedPolicy { max_batch: 4, window: Duration::ZERO, shared_tau_groups: true }
+}
+
+/// The acceptance pin: for all ten kinds, ticket-driven serving output ==
+/// direct `Engine::generate_one`, and the last `Progress` event's tokens
+/// concatenate to exactly the `Done` output, byte for byte.
+#[test]
+fn ticket_stream_is_byte_identical_to_generate_one_for_every_kind() {
+    for (sk, noise) in ALL_KINDS {
+        // temperature 1.0 exercises the RNG on every draw — the strictest
+        // check that serving steps the session identically
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+        let conditional = noise == "absorbing";
+
+        let reference = engine(noise);
+        let want = reference
+            .generate_one(conditional.then_some(SRC), &cfg, 7)
+            .unwrap();
+
+        let router = ServeBuilder::new(
+            move || Ok(engine(noise)),
+            SamplerConfig::new(SamplerKind::Dndm, 50), // default ≠ per-request cfg
+        )
+        .continuous(sched_policy())
+        .start();
+
+        let mut req = GenRequest::new(7).config(cfg).stream_partials();
+        if conditional {
+            req = req.src(SRC);
+        }
+        let mut ticket = router.submit_request(req).unwrap();
+
+        assert!(
+            matches!(ticket.next_event(), Some(Event::Admitted)),
+            "{}: first event must be Admitted",
+            sk.name()
+        );
+        let mut last_progress: Option<(usize, usize, Vec<u32>)> = None;
+        let got = loop {
+            match ticket.next_event() {
+                Some(Event::Progress { nfe_done, nfe_total, partial_tokens }) => {
+                    if let Some((prev, _, _)) = &last_progress {
+                        assert!(nfe_done > *prev, "{}: progress is monotonic", sk.name());
+                    }
+                    last_progress = Some((nfe_done, nfe_total, partial_tokens));
+                }
+                Some(Event::Done(out)) => break out,
+                other => panic!("{}: unexpected event {other:?}", sk.name()),
+            }
+        };
+        assert!(ticket.next_event().is_none(), "{}: stream ends after Done", sk.name());
+
+        // byte-identical to the direct engine run with the same seed
+        assert_eq!(got.tokens, want.tokens, "{}: tokens differ", sk.name());
+        assert_eq!(got.nfe, want.nfe, "{}: NFE differs", sk.name());
+        assert_eq!(got.text, want.text, "{}: decoded text differs", sk.name());
+
+        // the final Progress snapshot is the Done output, byte for byte,
+        // and its counters agree with the predetermined total
+        let (nfe_done, nfe_total, tokens) =
+            last_progress.unwrap_or_else(|| panic!("{}: no progress events", sk.name()));
+        assert_eq!(tokens, got.tokens, "{}: final partial != done output", sk.name());
+        assert_eq!(nfe_done, got.nfe, "{}: final nfe_done != NFE", sk.name());
+        assert_eq!(nfe_total, got.nfe, "{}: nfe_total != realized NFE", sk.name());
+
+        router.shutdown();
+        router.join();
+    }
+}
+
+/// Mid-flight cancellation through the full server stack: the ticket
+/// resolves as Cancelled (or Done if the race is lost — never an error
+/// other than cancellation), and the server counts it.
+#[test]
+fn server_level_cancellation_resolves_the_ticket() {
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 1000),
+    )
+    .continuous(sched_policy())
+    .start();
+
+    let ticket = router.submit_request(GenRequest::new(3).src(SRC)).unwrap();
+    // cancel through a detached handle, the way a supervisor thread would
+    // while the ticket itself is tied up in a blocking wait
+    let handle = ticket.cancel_handle();
+    handle.cancel();
+    match ticket.wait() {
+        Err(e) => {
+            assert!(e.to_string().contains("cancelled"), "unexpected error: {e}");
+            let stats = router.stats().unwrap();
+            assert_eq!(stats.cancelled, 1);
+        }
+        Ok(out) => {
+            // the request beat the cancel to retirement — legal, must be valid
+            assert!(!out.tokens.is_empty());
+        }
+    }
+    router.shutdown();
+    router.join();
+}
+
+/// Queue-side deadline through the full server stack.
+#[test]
+fn server_level_deadline_is_counted_and_never_served() {
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+    )
+    .continuous(sched_policy())
+    .start();
+
+    let ticket = router
+        .submit_request(GenRequest::new(3).src(SRC).deadline(Duration::ZERO))
+        .unwrap();
+    let err = ticket.wait().unwrap_err().to_string();
+    assert!(err.contains("deadline"), "{err}");
+    let stats = router.stats().unwrap();
+    assert_eq!(stats.deadline_exceeded, 1);
+    assert_eq!(stats.requests, 1);
+    router.shutdown();
+    router.join();
+}
+
+/// A per-request spec that is invalid for the engine fails the ticket
+/// without poisoning the server.
+#[test]
+fn bad_spec_fails_the_ticket_and_the_server_keeps_serving() {
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+    )
+    .continuous(sched_policy())
+    .start();
+
+    // DDIM on an absorbing engine is invalid
+    let bad = router
+        .submit_request(
+            GenRequest::new(1).src(SRC).config(SamplerConfig::new(SamplerKind::Ddim, 10)),
+        )
+        .unwrap();
+    assert!(bad.wait().is_err());
+
+    let ok = router.generate(GenRequest::new(2).src(SRC)).unwrap();
+    assert!(!ok.tokens.is_empty());
+    router.shutdown();
+    router.join();
+}

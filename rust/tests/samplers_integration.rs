@@ -114,6 +114,7 @@ fn schedules_dont_change_convergence_with_perfect_net() {
 }
 
 #[test]
+#[allow(deprecated)] // the legacy submit_async wrapper must keep working
 fn server_end_to_end_with_mock_backend() {
     let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
     let policy = BatchPolicy { max_batch: 8, window: Duration::from_millis(15) };
