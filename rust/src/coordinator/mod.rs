@@ -33,5 +33,7 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{cipher_mock_engine, Engine, GenOutput};
 pub use request::{CancelHandle, Event, GenRequest, Priority, Ticket, TicketSink};
 pub use router::{Router, ServeBuilder};
-pub use scheduler::{LaneInfo, Outcome, Pending, SchedPolicy, Scheduler, SpecKey};
+pub use scheduler::{
+    Delivery, Finished, LaneInfo, Outcome, Pending, SchedPolicy, Scheduler, SpecKey,
+};
 pub use server::{Server, ServerStats};

@@ -171,14 +171,17 @@ struct SinkState {
     /// the first boundary
     partial: Vec<u32>,
     terminal: Option<Terminal>,
+    /// Router shard load, decremented exactly once at the terminal event.
+    /// Lives behind the state mutex (not on `Shared`) so cross-shard work
+    /// stealing can re-point it at the thief shard's gauge atomically with
+    /// respect to the terminal transition.
+    load: Option<Arc<AtomicUsize>>,
 }
 
 struct Shared {
     cancelled: AtomicBool,
     /// client subscribed to partial tokens
     stream: bool,
-    /// router shard load, decremented exactly once at the terminal event
-    load: Option<Arc<AtomicUsize>>,
     state: Mutex<SinkState>,
     cv: Condvar,
 }
@@ -195,13 +198,13 @@ pub(crate) fn lifecycle(
     let shared = Arc::new(Shared {
         cancelled: AtomicBool::new(false),
         stream,
-        load,
         state: Mutex::new(SinkState {
             admitted: false,
             nfe_done: 0,
             nfe_total: 0,
             partial: Vec::new(),
             terminal: None,
+            load,
         }),
         cv: Condvar::new(),
     });
@@ -395,12 +398,28 @@ impl TicketSink {
         self.finish(Terminal::Failed(msg.to_string()));
     }
 
+    /// Re-point the load gauge at another shard's counter (cross-shard
+    /// work stealing): the donor's gauge drops, the thief's rises, and the
+    /// exactly-once terminal decrement now targets the thief. A no-op
+    /// after the terminal event (the old gauge was already decremented).
+    pub(crate) fn retarget_load(&self, new: Arc<AtomicUsize>) {
+        let mut st = lock(&self.shared);
+        if st.terminal.is_some() {
+            return;
+        }
+        if let Some(old) = st.load.take() {
+            old.fetch_sub(1, Ordering::Relaxed);
+        }
+        new.fetch_add(1, Ordering::Relaxed);
+        st.load = Some(new);
+    }
+
     /// First terminal wins; later ones (including the drop guard) no-op.
     fn finish(&self, terminal: Terminal) {
         let mut st = lock(&self.shared);
         if st.terminal.is_none() {
             st.terminal = Some(terminal);
-            if let Some(load) = &self.shared.load {
+            if let Some(load) = st.load.take() {
                 load.fetch_sub(1, Ordering::Relaxed);
             }
         }
@@ -523,6 +542,30 @@ mod tests {
         assert_eq!(load.load(Ordering::Relaxed), 0);
         drop(sink); // drop guard must not decrement again
         assert_eq!(load.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn retarget_load_moves_the_gauge_and_the_terminal_decrement() {
+        let donor = Arc::new(AtomicUsize::new(1));
+        let thief = Arc::new(AtomicUsize::new(0));
+        let (_t, sink) = lifecycle(false, Some(donor.clone()));
+        sink.retarget_load(thief.clone());
+        assert_eq!(donor.load(Ordering::Relaxed), 0, "donor released on steal");
+        assert_eq!(thief.load(Ordering::Relaxed), 1, "thief acquired on steal");
+        sink.finish_cancelled();
+        assert_eq!(thief.load(Ordering::Relaxed), 0, "terminal decrements the thief");
+        assert_eq!(donor.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn retarget_load_after_terminal_is_a_no_op() {
+        let donor = Arc::new(AtomicUsize::new(1));
+        let thief = Arc::new(AtomicUsize::new(0));
+        let (_t, sink) = lifecycle(false, Some(donor.clone()));
+        sink.finish_cancelled();
+        assert_eq!(donor.load(Ordering::Relaxed), 0);
+        sink.retarget_load(thief.clone());
+        assert_eq!(thief.load(Ordering::Relaxed), 0, "finished request acquires nothing");
     }
 
     #[test]

@@ -21,6 +21,20 @@
 //! a request reaches its terminal event (the ticket sink owns the
 //! decrement, so cancelled / expired / failed requests release their load
 //! the same way completed ones do).
+//!
+//! Placement alone can strand work: load balances at submit time, but a
+//! shard serving a slow spec keeps a deep queue while a neighbour drains
+//! to idle — and no new submissions means no re-placement. [`Router::
+//! rebalance`] closes that gap with **cross-shard work stealing**: the
+//! shard with the deepest queue donates up to half of it to an idle
+//! shard, at boundary granularity (the donor pops requests between two
+//! denoiser calls) and with `SpecKey` affinity preserved — a donation is
+//! a single same-key run, so the thief can still serve it as one
+//! shared-𝒯 lane. Donated requests keep their sink, deadline, priority,
+//! and enqueue time; their load-gauge accounting moves to the thief.
+//! `submit_request` triggers a pass opportunistically whenever the load
+//! gauges show an idle shard next to a loaded one; callers with idle
+//! periods can also invoke [`Router::rebalance`] directly.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -126,6 +140,8 @@ where
             affinity: Mutex::new(Vec::new()),
             rr: AtomicUsize::new(0),
             default_cfg: self.cfg,
+            continuous: matches!(self.mode, ServeMode::Continuous(_)),
+            steal_cooldown: AtomicUsize::new(0),
         }
     }
 }
@@ -142,6 +158,16 @@ struct Shard {
 /// in flight at once are few).
 const AFFINITY_CAP: usize = 64;
 
+/// Minimum queue depth on the donor before a steal pass is worth the
+/// disruption to admission grouping (a 1-deep queue admits next boundary
+/// anyway).
+const STEAL_MIN_QUEUE: usize = 2;
+
+/// Submits skipped after a fruitless gauge-triggered rebalance before the
+/// gauges are consulted again (each stats pass blocks on every shard's
+/// next boundary, so fruitless passes must not run per-submit).
+const STEAL_COOLDOWN: usize = 32;
+
 /// The sharding frontend produced by [`ServeBuilder::start`]. Routes each
 /// request to a shard (spec affinity, then least-loaded) and exposes the
 /// same request surface as a single [`Server`].
@@ -152,6 +178,15 @@ pub struct Router {
     /// round-robin cursor for load ties
     rr: AtomicUsize,
     default_cfg: SamplerConfig,
+    /// shards run the continuous scheduler (work stealing requires the
+    /// boundary-granular queue; fixed shards neither donate nor steal)
+    continuous: bool,
+    /// Submits to skip before the next gauge-triggered rebalance attempt.
+    /// The load gauges count in-flight + queued, so an in-flight-only
+    /// imbalance (nothing stealable) would otherwise pay the blocking
+    /// stats round-trip on *every* submit; a fruitless pass arms this
+    /// cooldown, a successful steal clears it.
+    steal_cooldown: AtomicUsize,
 }
 
 impl Router {
@@ -165,8 +200,14 @@ impl Router {
     }
 
     /// Submit a typed request to the shard chosen by the placement policy;
-    /// returns the streaming [`Ticket`].
+    /// returns the streaming [`Ticket`]. When the load gauges show an idle
+    /// shard next to a loaded one, a work-stealing pass runs first (the
+    /// imbalance placement can't fix — queued work stranded behind a slow
+    /// shard — is exactly what new-traffic moments should repair).
     pub fn submit_request(&self, req: GenRequest) -> Result<Ticket> {
+        if self.steal_worthwhile() {
+            let _ = self.rebalance();
+        }
         let key = SpecKey::of(req.cfg.as_ref().unwrap_or(&self.default_cfg));
         let idx = self.place(&key);
         let load = self.shards[idx].load.clone();
@@ -214,6 +255,84 @@ impl Router {
         }
         aff.push((key.clone(), least));
         least
+    }
+
+    /// Cheap gauge-only pre-check: is there an idle shard while another
+    /// holds enough outstanding work to be worth a stats round-trip? The
+    /// gauges include in-flight work, so this over-triggers on lanes with
+    /// nothing queued — the cooldown armed by a fruitless [`Self::
+    /// rebalance`] keeps that from taxing every submit.
+    fn steal_worthwhile(&self) -> bool {
+        if self.shards.len() < 2 || !self.continuous {
+            return false;
+        }
+        let cooldown = self.steal_cooldown.load(Ordering::Relaxed);
+        if cooldown > 0 {
+            self.steal_cooldown.store(cooldown - 1, Ordering::Relaxed);
+            return false;
+        }
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for s in &self.shards {
+            let l = s.load.load(Ordering::Relaxed);
+            min = min.min(l);
+            max = max.max(l);
+        }
+        min == 0 && max >= STEAL_MIN_QUEUE + 1
+    }
+
+    /// One cross-shard work-stealing pass: the shard with the deepest
+    /// queue donates up to half of it (one same-`SpecKey` run, so the
+    /// thief can batch it into a single shared-𝒯 lane) to the
+    /// least-loaded idle shard. The donor pops the requests between two
+    /// denoiser calls — boundary granularity — and forwards them with
+    /// sinks, deadlines, priorities, enqueue times, and load accounting
+    /// intact. No-op with one shard, in fixed mode, or when no shard has
+    /// at least [`STEAL_MIN_QUEUE`] queued requests next to an idle
+    /// shard. The steal itself is asynchronous; this returns once the
+    /// donor has been asked.
+    pub fn rebalance(&self) -> Result<()> {
+        if self.shards.len() < 2 || !self.continuous {
+            return Ok(());
+        }
+        let stats = self.shard_stats()?;
+        let queued: Vec<u64> = stats
+            .iter()
+            .map(|s| s.queued_low + s.queued_normal + s.queued_high)
+            .collect();
+        let donor = (0..queued.len())
+            .max_by_key(|&i| queued[i])
+            .expect("at least two shards");
+        if queued[donor] < STEAL_MIN_QUEUE as u64 {
+            // nothing stealable (the gauges saw in-flight work, not
+            // queues): back off so submits stop paying the stats pass
+            self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
+            return Ok(());
+        }
+        let loads: Vec<usize> =
+            self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
+        let thief = (0..self.shards.len())
+            .filter(|&i| i != donor)
+            .min_by_key(|&i| loads[i])
+            .expect("at least two shards");
+        if loads[thief] != 0 {
+            // every other shard is busy: stealing would just shuffle the
+            // queue between working shards and break admission grouping
+            self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
+            return Ok(());
+        }
+        let max = queued[donor].div_ceil(2) as usize;
+        self.shards[donor].server.steal_into(
+            max,
+            &self.shards[thief].server,
+            self.shards[thief].load.clone(),
+        );
+        // arm the cooldown after a steal too: the donation is async and
+        // the queues need boundaries to move before another stats pass
+        // can learn anything — without this, a steady imbalance would
+        // put the blocking pass back on the very next submit
+        self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Merged statistics across shards (see [`ServerStats::merged`] for
@@ -344,6 +463,67 @@ mod tests {
             }
         }
         assert!(saw_done);
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn rebalance_steals_queued_work_for_an_idle_shard() {
+        // capacity 1 so the donor can hold at most one request in flight
+        // and the rest stay visibly queued
+        let narrow = SchedPolicy {
+            max_batch: 1,
+            window: Duration::ZERO,
+            shared_tau_groups: true,
+        };
+        let router = builder().continuous(narrow).shards(2).start();
+        // pile work directly onto shard 0 (bypassing placement, like a
+        // burst that landed before its neighbour existed); a slow spec
+        // keeps the donor busy long enough that the queue is still there
+        // when the steal lands
+        let slow = SamplerConfig::new(SamplerKind::D3pm, 3000);
+        let mut tickets = Vec::new();
+        for i in 0..4 {
+            let req = GenRequest::new(i)
+                .src("the quick fox")
+                .config(slow.clone());
+            tickets.push(router.shard(0).submit_request(req).unwrap());
+        }
+        // shard 0: 1 in flight (max_batch 1) + 3 queued; shard 1 idle
+        router.rebalance().unwrap();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let per_shard = router.shard_stats().unwrap();
+        assert_eq!(per_shard[0].stolen, 2, "donor gave away half its queue");
+        assert!(
+            per_shard[1].nn_calls >= 3000,
+            "thief served at least one stolen request: {} calls",
+            per_shard[1].nn_calls
+        );
+        // nothing lost, nothing double-served: 4 requests × 3000 calls
+        assert_eq!(per_shard[0].nn_calls + per_shard[1].nn_calls, 4 * 3000);
+        let merged = router.stats().unwrap();
+        assert_eq!(merged.stolen, 2);
+        assert_eq!(merged.queued_low + merged.queued_normal + merged.queued_high, 0);
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn rebalance_is_a_no_op_for_fixed_mode_and_single_shard() {
+        let router = builder()
+            .fixed(BatchPolicy { max_batch: 2, window: Duration::from_millis(1) })
+            .shards(2)
+            .start();
+        router.rebalance().unwrap();
+        assert_eq!(router.stats().unwrap().stolen, 0);
+        router.shutdown();
+        router.join();
+
+        let router = builder().continuous(policy()).start();
+        router.rebalance().unwrap();
+        assert_eq!(router.stats().unwrap().stolen, 0);
         router.shutdown();
         router.join();
     }

@@ -14,7 +14,12 @@
 //!   per-sequence time vector, so one call advances every lane by one
 //!   event of its own ladder.
 //! * A lane retires the moment its last τ fires; its slots free up and are
-//!   refilled at the next boundary.
+//!   refilled at the next boundary. A *member* can also leave early: at
+//!   the boundary where its cancellation/deadline is observed, its session
+//!   row is evicted ([`SamplerSession::evict_slot`]) and the lane narrows
+//!   in place — the next denoiser call is one row cheaper and the freed
+//!   slot refills the same tick, while survivors stay byte-identical
+//!   (per-row RNG streams).
 //! * Requests whose sampler spec differs from the in-flight batch's spec
 //!   (different kind/steps/𝒟_τ/order/temperature) are **not** merged —
 //!   they wait until the batch drains and then form their own batch, so a
@@ -95,11 +100,17 @@ pub struct Pending<P> {
     /// lifecycle sink (`Admitted`/`Progress`/terminal events + the
     /// cancellation flag); `None` = no client subscribed
     pub ctl: Option<TicketSink>,
+    /// Does the caller consume [`Finished::result`]? `false` (ticket-only
+    /// requests: the sink is the sole reader) lets retirement **move** the
+    /// [`GenOutput`] into the sink instead of cloning it — see
+    /// [`Delivery::SinkOwned`].
+    pub wants_result: bool,
     pub payload: P,
 }
 
 impl<P> Pending<P> {
-    /// A plain request: no deadline, no lifecycle sink, normal priority.
+    /// A plain request: no deadline, no lifecycle sink, normal priority,
+    /// result delivered through [`Finished::result`].
     pub fn new(
         src: Option<String>,
         seed: u64,
@@ -114,38 +125,36 @@ impl<P> Pending<P> {
             deadline: None,
             priority: Priority::Normal,
             ctl: None,
+            wants_result: true,
             payload,
         }
     }
 }
 
 struct Member<P> {
-    /// `None` once the member left the lane early (cancelled / expired);
-    /// its session row keeps computing but the result is discarded.
-    payload: Option<P>,
+    payload: P,
     ctl: Option<TicketSink>,
+    wants_result: bool,
     deadline: Option<Instant>,
     enqueued: Instant,
     admitted: Instant,
 }
 
-/// One co-admitted group: a session of `members.len()` sequences. Source
-/// ids are flattened into a [`TokenBatch`] once at admission, so every
-/// subsequent NFE call gathers them with a single memcpy instead of
-/// re-cloning one `Vec` per sequence per call.
+/// One co-admitted group: a session of `members.len()` sequences (the two
+/// stay index-aligned for the lane's whole life — an early-departing
+/// member takes its session row with it via
+/// [`SamplerSession::evict_slot`]). Source ids are flattened into a
+/// [`TokenBatch`] once at admission, so every subsequent NFE call gathers
+/// them with a single memcpy instead of re-cloning one `Vec` per sequence
+/// per call; eviction compacts the same buffer.
 struct Lane<P> {
     session: SamplerSession,
     src_ids: Option<TokenBatch>,
     members: Vec<Member<P>>,
     admitted_boundary: u64,
-    /// total events of this lane's session (`nfe_total` in progress events)
+    /// total events of this lane's session (`nfe_total` in progress
+    /// events) — predetermined at admission and unchanged by eviction
     total: usize,
-}
-
-impl<P> Lane<P> {
-    fn live(&self) -> usize {
-        self.members.iter().filter(|m| m.payload.is_some()).count()
-    }
 }
 
 /// Observable lane state (tests, debugging).
@@ -172,12 +181,59 @@ pub enum Outcome {
     DeadlineExceeded,
 }
 
+/// Where a completed request's [`GenOutput`] ended up.
+#[derive(Debug)]
+pub enum Delivery {
+    /// The caller owns the output ([`Pending::wants_result`] was `true`).
+    Output(GenOutput),
+    /// The output was **moved** into the request's ticket sink
+    /// (`wants_result == false`), eliminating the per-request clone the
+    /// old always-both delivery paid; only the accounting travels here.
+    SinkOwned { nfe: usize, elapsed: Duration },
+}
+
+impl Delivery {
+    /// NN calls of the batch this request was generated in.
+    pub fn nfe(&self) -> usize {
+        match self {
+            Delivery::Output(out) => out.nfe,
+            Delivery::SinkOwned { nfe, .. } => *nfe,
+        }
+    }
+
+    /// Generation wall time (excludes queue wait).
+    pub fn elapsed(&self) -> Duration {
+        match self {
+            Delivery::Output(out) => out.elapsed,
+            Delivery::SinkOwned { elapsed, .. } => *elapsed,
+        }
+    }
+
+    /// The output, when the caller owns it.
+    pub fn output(&self) -> Option<&GenOutput> {
+        match self {
+            Delivery::Output(out) => Some(out),
+            Delivery::SinkOwned { .. } => None,
+        }
+    }
+
+    /// Consume into the output; errors when the sink took ownership.
+    pub fn into_output(self) -> Result<GenOutput> {
+        match self {
+            Delivery::Output(out) => Ok(out),
+            Delivery::SinkOwned { .. } => {
+                Err(anyhow!("output was delivered through the ticket sink"))
+            }
+        }
+    }
+}
+
 /// A retired (or failed/dropped) request handed back to the caller. The
 /// lifecycle sink, if any, has already received the matching terminal
 /// event by the time this is returned from [`Scheduler::tick`].
 pub struct Finished<P> {
     pub payload: P,
-    pub result: Result<GenOutput>,
+    pub result: Result<Delivery>,
     /// queue wait: enqueue → admission into a lane (or → drop, for
     /// requests that never made it in)
     pub wait: Duration,
@@ -288,15 +344,74 @@ impl<P> Scheduler<P> {
         self.boundary
     }
 
-    /// Total in-flight sequences (sum of lane widths). Early-departed
-    /// members still occupy their lane's rows until the whole lane retires
-    /// or empties, so this counts session rows, not live requests.
+    /// Total in-flight sequences (sum of lane widths). Lane widths shrink
+    /// when members depart early (slot eviction at the boundary), so this
+    /// equals the number of live requests in flight.
     pub fn in_flight(&self) -> usize {
         self.lanes.iter().map(|l| l.session.batch()).sum()
     }
 
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Queued requests per priority class, indexed `[Low, Normal, High]`
+    /// — the instantaneous depths behind `ServerStats::queued_*`.
+    pub fn queue_depths(&self) -> [usize; 3] {
+        let mut d = [0usize; 3];
+        for p in &self.pending {
+            d[match p.priority {
+                Priority::Low => 0,
+                Priority::Normal => 1,
+                Priority::High => 2,
+            }] += 1;
+        }
+        d
+    }
+
+    /// Donate up to `max` queued requests to another shard (cross-shard
+    /// work stealing — the donor side). All stolen requests share one
+    /// [`SpecKey`] so the thief can still batch them into one shared-𝒯
+    /// lane. The steal key is chosen from the **back** of the
+    /// priority-ordered queue (lowest priority, youngest), preferring a
+    /// key that differs from the in-flight batch's key — requests that
+    /// match it would refill this shard's own slots at the next boundary
+    /// anyway. Every queued request with the chosen key is then eligible
+    /// (youngest taken first), wherever it sits in the queue, so a run
+    /// within `max` moves whole — but a run *larger* than `max` is
+    /// split: its youngest `max` members move and the oldest keep their
+    /// queue positions on the donor (both halves still batch shared-𝒯 on
+    /// their own shard). Returned requests keep their enqueue time,
+    /// deadline, priority, and sink; the caller re-enqueues them
+    /// elsewhere.
+    pub fn steal_pending(&mut self, max: usize) -> Vec<Pending<P>> {
+        if max == 0 || self.pending.is_empty() {
+            return Vec::new();
+        }
+        // pick the steal key: scan from the back for the first request
+        // whose key differs from the in-flight key; fall back to the back
+        // request's key when everything matches it
+        let steal_key = self
+            .pending
+            .iter()
+            .rev()
+            .map(|p| self.effective_key(p))
+            .find(|k| self.key.as_ref() != Some(k))
+            .unwrap_or_else(|| {
+                self.effective_key(self.pending.back().expect("non-empty"))
+            });
+        let mut stolen = Vec::new();
+        let mut i = self.pending.len();
+        while i > 0 && stolen.len() < max {
+            i -= 1;
+            if self.effective_key(&self.pending[i]) == steal_key {
+                let p = self.pending.remove(i).expect("index in bounds");
+                stolen.push(p);
+            }
+        }
+        // removal walked back-to-front; restore queue order for the thief
+        stolen.reverse();
+        stolen
     }
 
     pub fn has_work(&self) -> bool {
@@ -368,9 +483,12 @@ impl<P> Scheduler<P> {
     /// Boundary enforcement of cancellation and deadlines. Queue-side:
     /// cancelled/expired requests are dropped before they can be admitted.
     /// Lane-side: an early-departing member's terminal event fires now and
-    /// its result is discarded; a lane with no live members left is
-    /// dropped whole — before the next denoiser call, so its slots free
-    /// immediately and can refill at this very boundary.
+    /// its session row is **evicted** — the lane narrows in place
+    /// ([`SamplerSession::evict_slot`] + src compaction), so the very next
+    /// denoiser call is one row cheaper and the freed slot can refill at
+    /// this same boundary. Survivors are byte-exact (per-row RNG streams;
+    /// pinned by `tests/narrowing.rs`). A lane whose last member departs
+    /// is dropped whole.
     fn reap(&mut self, out: &mut Vec<Finished<P>>) {
         if self.pending.is_empty() && self.lanes.is_empty() {
             return;
@@ -390,28 +508,43 @@ impl<P> Scheduler<P> {
             let wait = p.enqueued.elapsed();
             out.push(resolve_drop(p.payload, p.ctl.as_ref(), cancelled, wait));
         }
-        // lane side: boundary cancellation
-        for lane in &mut self.lanes {
-            for m in lane.members.iter_mut() {
-                if m.payload.is_none() {
-                    continue;
-                }
+        // lane side: boundary cancellation narrows the lane in place
+        let mut li = 0;
+        while li < self.lanes.len() {
+            let lane = &mut self.lanes[li];
+            let mut j = 0;
+            while j < lane.members.len() {
+                let m = &lane.members[j];
                 let cancelled = m.ctl.as_ref().is_some_and(|c| c.is_cancelled());
                 let expired = m.deadline.is_some_and(|d| now >= d);
                 if !(cancelled || expired) {
+                    j += 1;
                     continue;
                 }
-                let payload = m.payload.take().expect("checked live");
-                let ctl = m.ctl.take();
+                let m = lane.members.remove(j);
                 out.push(resolve_drop(
-                    payload,
-                    ctl.as_ref(),
+                    m.payload,
+                    m.ctl.as_ref(),
                     cancelled,
                     m.admitted.duration_since(m.enqueued),
                 ));
+                if lane.members.is_empty() {
+                    // last member gone: the whole lane dies below
+                    break;
+                }
+                // members and session rows are index-aligned: row j now
+                // belongs to the departed member — compact it out
+                lane.session.evict_slot(j).expect("evict within lane bounds");
+                if let Some(src) = &mut lane.src_ids {
+                    src.narrow_remove(j);
+                }
+            }
+            if self.lanes[li].members.is_empty() {
+                self.lanes.remove(li);
+            } else {
+                li += 1;
             }
         }
-        self.lanes.retain(|l| l.live() > 0);
         if self.lanes.is_empty() {
             self.key = None;
         }
@@ -528,11 +661,11 @@ impl<P> Scheduler<P> {
                 };
                 if let Some(ctl) = &p.ctl {
                     ctl.set_admitted();
-                    ctl.finish_done(output.clone());
                 }
+                let delivered = deliver(p.ctl.as_ref(), p.wants_result, output);
                 out.push(Finished {
                     payload: p.payload,
-                    result: Ok(output),
+                    result: Ok(delivered),
                     wait,
                     outcome: Outcome::Done,
                 });
@@ -560,8 +693,9 @@ impl<P> Scheduler<P> {
                     ctl.set_admitted();
                 }
                 Member {
-                    payload: Some(p.payload),
+                    payload: p.payload,
                     ctl: p.ctl,
+                    wants_result: p.wants_result,
                     deadline: p.deadline,
                     enqueued: p.enqueued,
                     admitted: now,
@@ -633,13 +767,10 @@ impl<P> Scheduler<P> {
                 break;
             }
             off += w;
-            // boundary event: every live subscribed member sees this
-            // lane's new snapshot (nfe + optionally its own token row)
+            // boundary event: every subscribed member sees this lane's
+            // new snapshot (nfe + optionally its own token row)
             let nfe = lane.session.nfe();
             for (j, m) in lane.members.iter().enumerate() {
-                if m.payload.is_none() {
-                    continue;
-                }
                 if let Some(ctl) = &m.ctl {
                     let tokens =
                         ctl.wants_partials().then(|| lane.session.x().row(j));
@@ -663,14 +794,11 @@ impl<P> Scheduler<P> {
             let lane = self.lanes.remove(i);
             self.engine.nfe.record_batch();
             let nfe = lane.session.nfe();
-            let res = lane.session.into_result();
+            let mut res = lane.session.into_result();
             for (j, m) in lane.members.into_iter().enumerate() {
-                let Some(payload) = m.payload else {
-                    continue; // departed early; terminal already emitted
-                };
                 let wait = m.admitted.duration_since(m.enqueued);
                 self.engine.nfe.record_request(nfe, wait);
-                let tokens = res.tokens[j].clone();
+                let tokens = std::mem::take(&mut res.tokens[j]);
                 let output = GenOutput {
                     text: self.engine.decode(&tokens),
                     tokens,
@@ -679,12 +807,10 @@ impl<P> Scheduler<P> {
                     // fixed path); queue wait travels separately
                     elapsed: m.admitted.elapsed(),
                 };
-                if let Some(ctl) = &m.ctl {
-                    ctl.finish_done(output.clone());
-                }
+                let delivered = deliver(m.ctl.as_ref(), m.wants_result, output);
                 finished.push(Finished {
-                    payload,
-                    result: Ok(output),
+                    payload: m.payload,
+                    result: Ok(delivered),
                     wait,
                     outcome: Outcome::Done,
                 });
@@ -701,12 +827,11 @@ impl<P> Scheduler<P> {
         let mut out = Vec::new();
         for lane in std::mem::take(&mut self.lanes) {
             for m in lane.members {
-                let Some(payload) = m.payload else { continue };
                 if let Some(ctl) = &m.ctl {
                     ctl.finish_failed(&msg);
                 }
                 out.push(Finished {
-                    payload,
+                    payload: m.payload,
                     result: Err(anyhow!("{msg}")),
                     wait: m.admitted.duration_since(m.enqueued),
                     outcome: Outcome::Failed,
@@ -727,6 +852,26 @@ impl<P> Scheduler<P> {
         out.extend(self.admit());
         out.extend(self.step());
         out
+    }
+}
+
+/// Deliver a completed output to the sink and/or the [`Finished`] record,
+/// moving (not cloning) whenever only one side consumes it: ticket-only
+/// requests (`wants_result == false`) hand the sink ownership, channel /
+/// embedded callers get it in [`Finished::result`]. Only a request wired
+/// to *both* (hand-built `Pending`s in tests) still pays a clone.
+fn deliver(ctl: Option<&TicketSink>, wants_result: bool, output: GenOutput) -> Delivery {
+    match ctl {
+        Some(ctl) if !wants_result => {
+            let (nfe, elapsed) = (output.nfe, output.elapsed);
+            ctl.finish_done(output);
+            Delivery::SinkOwned { nfe, elapsed }
+        }
+        Some(ctl) => {
+            ctl.finish_done(output.clone());
+            Delivery::Output(output)
+        }
+        None => Delivery::Output(output),
     }
 }
 
@@ -783,7 +928,7 @@ mod tests {
         }
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].outcome, Outcome::Done);
-        let out = done[0].result.as_ref().unwrap();
+        let out = done[0].result.as_ref().unwrap().output().unwrap();
         assert!(out.nfe >= 1 && out.nfe <= 8);
         assert_eq!(s.engine().nfe.requests(), 1);
         assert_eq!(s.engine().nfe.calls() as usize, out.nfe);
@@ -810,34 +955,54 @@ mod tests {
     /// *and* lifecycle event emission all live in buffers reused across
     /// calls (the mock denoiser writes in place, so the whole boundary is
     /// heap-silent). Runs with an active streaming subscriber attached, so
-    /// per-boundary progress emission is covered by the same pin.
+    /// per-boundary progress emission is covered by the same pin — and
+    /// with a second lane that is cancelled mid-flight, so a tick that
+    /// **narrows** the batch (slot eviction + compaction) is covered too:
+    /// eviction itself works in place, and every tick after the narrow
+    /// must be exactly as heap-silent as before it.
     #[test]
     fn steady_state_tick_is_allocation_free() {
         use crate::util::bench::alloc_count::thread_allocs;
 
         let eng = mock_engine();
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
-        // pick a seed whose session spans enough events that some ticks
-        // neither admit nor retire (DNDM's |𝒯| varies with the seed)
-        let seed = (0..64u64)
+        // pick a seed whose *width-2* session (the lane below is a width-2
+        // shared-𝒯 group, and 𝒯 depends on the batch size) spans enough
+        // events that, after the admission tick and the narrowing tick,
+        // some ticks still neither admit nor retire
+        let seed = (0..256u64)
             .find(|&s| {
                 let sess =
-                    SamplerSession::new(eng.denoiser().config(), &cfg, 1, s).unwrap();
-                let distinct: std::collections::BTreeSet<usize> =
-                    sess.taus().unwrap().iter().flatten().copied().collect();
-                distinct.len() >= 4
+                    SamplerSession::new(eng.denoiser().config(), &cfg, 2, s).unwrap();
+                sess.total_events() >= 6
             })
-            .expect("some seed in 0..64 must give >= 4 events");
+            .expect("some seed in 0..256 must give >= 6 events");
 
         let (mut ticket, sink) = Ticket::detached(true);
+        let (victim, victim_sink) = Ticket::detached(false);
         let mut s: Scheduler<usize> = Scheduler::new(eng, cfg, policy(4));
         let mut p = req(0, seed, None);
         p.ctl = Some(sink);
         s.enqueue(p);
-        // boundary 1: admission + first call — warms every scratch buffer,
-        // including the subscriber's partial-token snapshot
+        // a second member of the same shared-𝒯 lane, cancelled mid-flight
+        // so the lane must *narrow* (evict the row, keep the survivor)
+        let mut v = req(1, seed, None);
+        v.ctl = Some(victim_sink);
+        s.enqueue(v);
+        // boundary 1: co-admission into one width-2 lane + first call —
+        // warms every scratch buffer, including the subscriber's
+        // partial-token snapshot
         let first = s.tick();
-        assert!(first.is_empty(), ">= 4 events, so the first tick cannot retire");
+        assert!(first.is_empty(), ">= 6 events, so the first tick cannot retire");
+        assert_eq!(s.in_flight(), 2);
+        assert_eq!(s.lane_info().len(), 1, "one shared-𝒯 lane");
+        victim.cancel();
+        let narrow = s.tick();
+        // the narrowing tick resolves the victim and shrinks the lane
+        assert_eq!(narrow.len(), 1);
+        assert_eq!(narrow[0].outcome, Outcome::Cancelled);
+        assert_eq!(s.in_flight(), 1, "victim's row evicted before the call");
+        assert_eq!(s.lane_info()[0].width, 1, "the lane narrowed in place");
 
         let mut steady = 0usize;
         let mut done = Vec::new();
@@ -851,9 +1016,9 @@ mod tests {
             }
             done.extend(out);
         }
-        assert!(steady >= 2, "expected >= 2 steady-state ticks, saw {steady}");
+        assert!(steady >= 2, "expected >= 2 steady-state ticks after the narrow, saw {steady}");
         assert_eq!(done.len(), 1);
-        let out = done[0].result.as_ref().unwrap();
+        let out = done[0].result.as_ref().unwrap().output().unwrap();
         // the subscriber observed the full lifecycle, and its final
         // progress snapshot is exactly the finished tokens
         assert!(matches!(ticket.try_next_event(), Some(Event::Admitted)));
@@ -890,7 +1055,7 @@ mod tests {
         assert_eq!(all.len(), 3);
         // shared 𝒯 ⇒ identical per-request NFE
         let nfes: Vec<usize> =
-            all.iter().map(|f| f.result.as_ref().unwrap().nfe).collect();
+            all.iter().map(|f| f.result.as_ref().unwrap().nfe()).collect();
         assert!(nfes.windows(2).all(|w| w[0] == w[1]), "{nfes:?}");
     }
 
@@ -915,6 +1080,67 @@ mod tests {
         s.tick();
         assert_eq!(s.pending_len(), 0, "batch starts on the oldest request's window");
         assert_eq!(s.boundary(), 1, "the first denoiser call was made");
+    }
+
+    #[test]
+    fn queue_depths_count_per_priority() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(mock_engine(), SamplerConfig::new(SamplerKind::Dndm, 50), policy(4));
+        assert_eq!(s.queue_depths(), [0, 0, 0]);
+        let mut low = req(0, 1, None);
+        low.priority = Priority::Low;
+        let mut high = req(1, 2, None);
+        high.priority = Priority::High;
+        s.enqueue(low);
+        s.enqueue(high);
+        s.enqueue(req(2, 3, None));
+        s.enqueue(req(3, 4, None));
+        assert_eq!(s.queue_depths(), [1, 2, 1]);
+    }
+
+    #[test]
+    fn steal_pending_takes_a_same_key_run_from_the_tail() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(mock_engine(), SamplerConfig::new(SamplerKind::Dndm, 50), policy(1));
+        // in-flight key becomes the default spec
+        s.enqueue(req(0, 1, None));
+        assert!(s.tick().is_empty() || !s.has_work());
+        // queue: two default-key requests, then two with a distinct key
+        let other = SamplerConfig::new(SamplerKind::DndmV2, 50);
+        s.enqueue(req(1, 2, None));
+        s.enqueue(req(2, 3, None));
+        s.enqueue(req(3, 4, Some(other.clone())));
+        s.enqueue(req(4, 5, Some(other.clone())));
+        let stolen = s.steal_pending(10);
+        // prefers the key that differs from the in-flight batch, takes the
+        // whole run, and preserves FIFO order
+        assert_eq!(stolen.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(stolen
+            .iter()
+            .all(|p| SpecKey::of(p.cfg.as_ref().unwrap()) == SpecKey::of(&other)));
+        assert_eq!(s.pending_len(), 2, "default-key requests stay with the donor");
+        // a second steal falls back to the in-flight key's queued run
+        let stolen = s.steal_pending(1);
+        assert_eq!(stolen.len(), 1);
+        assert_eq!(stolen[0].payload, 2, "taken from the back (youngest first)");
+        assert_eq!(s.pending_len(), 1);
+        while s.has_work() {
+            s.tick();
+        }
+    }
+
+    #[test]
+    fn steal_pending_respects_max_and_empty_queue() {
+        let mut s: Scheduler<usize> =
+            Scheduler::new(mock_engine(), SamplerConfig::new(SamplerKind::Dndm, 50), policy(4));
+        assert!(s.steal_pending(4).is_empty());
+        for i in 0..3 {
+            s.enqueue(req(i, i as u64, None));
+        }
+        assert!(s.steal_pending(0).is_empty());
+        let stolen = s.steal_pending(2);
+        assert_eq!(stolen.len(), 2);
+        assert_eq!(s.pending_len(), 1);
     }
 
     #[test]

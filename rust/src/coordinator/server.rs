@@ -39,7 +39,7 @@ use crate::sampler::SamplerConfig;
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenOutput};
 use super::request::{self, GenRequest, Priority, Ticket, TicketSink};
-use super::scheduler::{Outcome, Pending, SchedPolicy, Scheduler};
+use super::scheduler::{Delivery, Outcome, Pending, SchedPolicy, Scheduler};
 
 /// Where a finished request's result goes.
 enum Reply {
@@ -68,23 +68,44 @@ impl Request {
     /// Resolve both delivery legs together — the invariant every exit
     /// path must uphold: the ticket sink (if any) gets the terminal event
     /// matching `outcome`, and the channel client (if any) gets `result`.
+    /// Ticket-only requests **move** the output into the sink (no channel
+    /// reply exists to want a copy — the retirement-path clone is gone).
     fn resolve(self, result: Result<GenOutput>, outcome: Outcome) {
-        if let Some(ctl) = &self.ctl {
-            match (&result, outcome) {
-                (Ok(out), _) => ctl.finish_done(out.clone()),
-                (Err(_), Outcome::Cancelled) => ctl.finish_cancelled(),
-                (Err(_), Outcome::DeadlineExceeded) => ctl.finish_deadline(),
-                (Err(e), _) => ctl.finish_failed(&format!("{e:#}")),
+        match self.reply {
+            Reply::Channel(tx) => {
+                if let Some(ctl) = &self.ctl {
+                    match (&result, outcome) {
+                        (Ok(out), _) => ctl.finish_done(out.clone()),
+                        (Err(_), Outcome::Cancelled) => ctl.finish_cancelled(),
+                        (Err(_), Outcome::DeadlineExceeded) => ctl.finish_deadline(),
+                        (Err(e), _) => ctl.finish_failed(&format!("{e:#}")),
+                    }
+                }
+                let _ = tx.send(result);
             }
-        }
-        if let Reply::Channel(tx) = self.reply {
-            let _ = tx.send(result);
+            Reply::Ticket => {
+                if let Some(ctl) = &self.ctl {
+                    match (result, outcome) {
+                        (Ok(out), _) => ctl.finish_done(out),
+                        (Err(_), Outcome::Cancelled) => ctl.finish_cancelled(),
+                        (Err(_), Outcome::DeadlineExceeded) => ctl.finish_deadline(),
+                        (Err(e), _) => ctl.finish_failed(&format!("{e:#}")),
+                    }
+                }
+            }
         }
     }
 }
 
 enum Msg {
     Req(Request),
+    /// Donor side of cross-shard work stealing: pop up to `max` queued
+    /// same-key requests and forward them to `to` (the thief's channel),
+    /// re-pointing each sink's load gauge at `to_load` on the way.
+    Steal { max: usize, to: Sender<Msg>, to_load: Arc<AtomicUsize> },
+    /// A request donated by another shard — served normally, but not
+    /// re-counted in `ServerStats::requests` (its submit shard counted it).
+    Donated(Request),
     Stats(Sender<ServerStats>),
     Shutdown,
 }
@@ -114,6 +135,18 @@ pub struct ServerStats {
     pub cancelled: u64,
     /// requests dropped because their deadline passed
     pub deadline_exceeded: u64,
+    /// queued low-priority requests at snapshot time (instantaneous
+    /// depth; continuous mode only — the fixed policy ignores priority,
+    /// so its whole batcher depth reports as `queued_normal`)
+    pub queued_low: u64,
+    /// queued normal-priority requests at snapshot time (fixed mode:
+    /// every queued request, whatever its nominal priority)
+    pub queued_normal: u64,
+    /// queued high-priority requests at snapshot time (continuous only)
+    pub queued_high: u64,
+    /// requests this shard donated to other shards (work stealing,
+    /// cumulative)
+    pub stolen: u64,
 }
 
 impl ServerStats {
@@ -130,6 +163,10 @@ impl ServerStats {
             out.nn_calls += s.nn_calls;
             out.cancelled += s.cancelled;
             out.deadline_exceeded += s.deadline_exceeded;
+            out.queued_low += s.queued_low;
+            out.queued_normal += s.queued_normal;
+            out.queued_high += s.queued_high;
+            out.stolen += s.stolen;
             batch_w += s.mean_batch * s.batches as f64;
             nfe_w += s.avg_request_nfe * s.requests as f64;
             occ_w += s.occupancy * s.nn_calls as f64;
@@ -274,6 +311,16 @@ impl Server {
             .map_err(|_| anyhow!("server is down"))
     }
 
+    /// Ask this shard to donate up to `max` queued requests to `to`
+    /// (cross-shard work stealing). Fire-and-forget: the donor pops the
+    /// requests between two denoiser calls — boundary granularity — and
+    /// forwards them with their sinks, deadlines, priorities, and enqueue
+    /// times intact; each stolen sink's load gauge is re-pointed at
+    /// `to_load`. No-op if nothing is queued (or the server is down).
+    pub(crate) fn steal_into(&self, max: usize, to: &Server, to_load: Arc<AtomicUsize>) {
+        let _ = self.tx.send(Msg::Steal { max, to: to.tx.clone(), to_load });
+    }
+
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = channel();
         self.tx.send(Msg::Stats(stx)).map_err(|_| anyhow!("server is down"))?;
@@ -312,6 +359,8 @@ struct LoopState {
     batch_sizes: u64,
     cancelled: u64,
     deadline_exceeded: u64,
+    /// requests donated away via work stealing
+    stolen: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
     /// slot capacity, for the occupancy statistic
@@ -326,6 +375,7 @@ impl LoopState {
             batch_sizes: 0,
             cancelled: 0,
             deadline_exceeded: 0,
+            stolen: 0,
             queue_lat: LatencyStats::new(),
             e2e_lat: LatencyStats::new(),
             capacity,
@@ -338,7 +388,10 @@ fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error) {
     eprintln!("[server] engine init failed: {err:#}");
     while let Ok(msg) = rx.recv() {
         match msg {
-            Msg::Req(r) => r.resolve(Err(anyhow!("engine init failed")), Outcome::Failed),
+            Msg::Req(r) | Msg::Donated(r) => {
+                r.resolve(Err(anyhow!("engine init failed")), Outcome::Failed)
+            }
+            Msg::Steal { .. } => {} // nothing queued here to donate
             Msg::Shutdown => break,
             Msg::Stats(s) => {
                 let _ = s.send(empty_stats());
@@ -397,8 +450,13 @@ where
                 st.requests += 1;
                 batcher.push(r);
             }
+            // a donated request was already counted by its submit shard
+            Some(Msg::Donated(r)) => batcher.push(r),
+            // fixed batches are FIFO with no spec keys — this mode never
+            // donates (the router only steals between continuous shards)
+            Some(Msg::Steal { .. }) => continue,
             Some(Msg::Stats(s)) => {
-                let _ = s.send(snapshot(&st, &engine));
+                let _ = s.send(snapshot(&st, &engine, [0, batcher.len(), 0]));
                 continue;
             }
             Some(Msg::Shutdown) => {
@@ -573,14 +631,16 @@ fn serve_continuous_loop<F>(
                 Outcome::DeadlineExceeded => st.deadline_exceeded += 1,
                 _ => {
                     st.queue_lat.record(f.wait);
-                    if let Ok(out) = &f.result {
+                    if let Ok(d) = &f.result {
                         // e2e = queue wait + in-flight generation time
-                        st.e2e_lat.record(f.wait + out.elapsed);
+                        st.e2e_lat.record(f.wait + d.elapsed());
                     }
                 }
             }
             if let Reply::Channel(tx) = f.payload {
-                let _ = tx.send(f.result);
+                // channel requests set wants_result, so the delivery holds
+                // the output (ticket terminals were emitted inside tick())
+                let _ = tx.send(f.result.and_then(Delivery::into_output));
             }
         }
         if draining && !sched.has_work() {
@@ -598,23 +658,35 @@ fn handle_msg(
     match msg {
         Msg::Req(r) => {
             st.requests += 1;
-            sched.enqueue(Pending {
-                src: r.src,
-                seed: r.seed,
-                cfg: r.cfg,
-                enqueued: r.enqueued,
-                deadline: r.deadline,
-                priority: r.priority,
-                ctl: r.ctl,
-                payload: r.reply,
-            });
+            sched.enqueue(request_to_pending(r));
+            false
+        }
+        // a donated request was already counted by its submit shard
+        Msg::Donated(r) => {
+            sched.enqueue(request_to_pending(r));
+            false
+        }
+        Msg::Steal { max, to, to_load } => {
+            // donor side of work stealing, between two denoiser calls:
+            // pop a same-key run off the queue tail and forward it with
+            // sinks/deadlines intact, re-pointing each load gauge at the
+            // thief. If the thief is gone, the drop guards fail the
+            // tickets rather than losing the requests silently.
+            for p in sched.steal_pending(max) {
+                if let Some(ctl) = &p.ctl {
+                    ctl.retarget_load(to_load.clone());
+                }
+                st.stolen += 1;
+                let _ = to.send(Msg::Donated(pending_to_request(p)));
+            }
             false
         }
         Msg::Stats(s) => {
             // lanes retired so far are the "batches" of continuous mode
             st.batches = sched.engine().nfe.batches();
             st.batch_sizes = sched.engine().nfe.requests();
-            let _ = s.send(snapshot(st, sched.engine()));
+            let depths = sched.queue_depths();
+            let _ = s.send(snapshot(st, sched.engine(), depths));
             false
         }
         Msg::Shutdown => {
@@ -624,7 +696,39 @@ fn handle_msg(
     }
 }
 
-fn snapshot(st: &LoopState, engine: &Engine) -> ServerStats {
+/// A queued server request as a scheduler entry. Ticket-only requests
+/// (`Reply::Ticket`) don't read `Finished::result`, so retirement moves
+/// the output into the sink instead of cloning it.
+fn request_to_pending(r: Request) -> Pending<Reply> {
+    Pending {
+        src: r.src,
+        seed: r.seed,
+        cfg: r.cfg,
+        enqueued: r.enqueued,
+        deadline: r.deadline,
+        priority: r.priority,
+        ctl: r.ctl,
+        wants_result: matches!(r.reply, Reply::Channel(_)),
+        payload: r.reply,
+    }
+}
+
+/// Inverse of [`request_to_pending`] — a stolen queue entry travelling to
+/// another shard's channel.
+fn pending_to_request(p: Pending<Reply>) -> Request {
+    Request {
+        src: p.src,
+        seed: p.seed,
+        cfg: p.cfg,
+        deadline: p.deadline,
+        priority: p.priority,
+        ctl: p.ctl,
+        enqueued: p.enqueued,
+        reply: p.payload,
+    }
+}
+
+fn snapshot(st: &LoopState, engine: &Engine, queue_depths: [usize; 3]) -> ServerStats {
     ServerStats {
         requests: st.requests,
         batches: st.batches,
@@ -642,6 +746,10 @@ fn snapshot(st: &LoopState, engine: &Engine) -> ServerStats {
         occupancy: engine.nfe.occupancy(st.capacity),
         cancelled: st.cancelled,
         deadline_exceeded: st.deadline_exceeded,
+        queued_low: queue_depths[0] as u64,
+        queued_normal: queue_depths[1] as u64,
+        queued_high: queue_depths[2] as u64,
+        stolen: st.stolen,
     }
 }
 
@@ -659,6 +767,10 @@ fn empty_stats() -> ServerStats {
         occupancy: 0.0,
         cancelled: 0,
         deadline_exceeded: 0,
+        queued_low: 0,
+        queued_normal: 0,
+        queued_high: 0,
+        stolen: 0,
     }
 }
 

@@ -120,7 +120,10 @@ impl MockDenoiser {
         MockDenoiser {
             cfg,
             target: Box::new(f),
-            peak: 8.0,
+            // sharp enough that temperature-1 Gumbel draws essentially
+            // never override the target (flip mass ≈ V·e^{-peak}), so
+            // exact-convergence assertions don't ride on seed luck
+            peak: 12.0,
             calls: std::sync::atomic::AtomicU64::new(0),
         }
     }

@@ -51,7 +51,7 @@ impl AlgState for ArdmState {
         for b in 0..core.x.rows() {
             for &pos in &self.order[self.done..end] {
                 let (tok, _) =
-                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                 core.x.set(b, pos, tok);
             }
         }

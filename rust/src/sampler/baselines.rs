@@ -48,7 +48,7 @@ impl AlgState for D3pmState {
                 let (x0_hat, _) = sample_x0(
                     logits.row(b, pos),
                     core.temperature.max(1.0),
-                    &mut core.rng,
+                    &mut core.row_rngs[b],
                 );
                 let next = match self.noise {
                     NoiseKind::Absorbing { mask_id } => absorbing_reverse_step(
@@ -58,7 +58,7 @@ impl AlgState for D3pmState {
                         self.t_max,
                         self.sched,
                         mask_id,
-                        &mut core.rng,
+                        &mut core.row_rngs[b],
                     ),
                     NoiseKind::Multinomial { .. } => multinomial_reverse_step(
                         core.x.get(b, pos),
@@ -68,7 +68,7 @@ impl AlgState for D3pmState {
                         self.sched,
                         self.noise,
                         core.v,
-                        &mut core.rng,
+                        &mut core.row_rngs[b],
                     ),
                 };
                 core.x.set(b, pos, next);
@@ -146,7 +146,7 @@ impl AlgState for RdmState {
             self.decoded.clear();
             for pos in 0..core.n {
                 let (tok, score) =
-                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                 self.decoded.push((pos, tok, score));
             }
             // re-predict already-revealed tokens (RDM re-decoding)
@@ -174,7 +174,7 @@ impl AlgState for RdmState {
                     if self.revealed[b][pos] {
                         continue;
                     }
-                    if t == 1 || core.rng.coin(p_reveal) {
+                    if t == 1 || core.row_rngs[b].coin(p_reveal) {
                         let (_, tok, _) = self.decoded[pos];
                         core.x.set(b, pos, tok);
                         self.revealed[b][pos] = true;
@@ -188,6 +188,10 @@ impl AlgState for RdmState {
 
     fn total_events(&self) -> usize {
         self.t_max
+    }
+
+    fn evict_row(&mut self, row: usize) {
+        self.revealed.remove(row);
     }
 }
 
@@ -228,7 +232,7 @@ impl AlgState for MaskPredictState {
             self.scored.clear();
             for pos in 0..core.n {
                 let (tok, s) =
-                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                 self.scored.push((pos, tok, s));
             }
             for &(pos, tok, _) in &self.scored {

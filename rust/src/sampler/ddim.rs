@@ -76,15 +76,15 @@ impl AlgState for DdimState {
                 let (x0_hat, _) = sample_x0(
                     logits.row(b, pos),
                     core.temperature.max(1.0),
-                    &mut core.rng,
+                    &mut core.row_rngs[b],
                 );
-                let u = core.rng.uniform() * (w_xt + w_x0 + w_uni);
+                let u = core.row_rngs[b].uniform() * (w_xt + w_x0 + w_uni);
                 let next = if u < w_xt {
                     core.x.get(b, pos)
                 } else if u < w_xt + w_x0 {
                     x0_hat
                 } else {
-                    self.noise.sample(&mut core.rng)
+                    self.noise.sample(&mut core.row_rngs[b])
                 };
                 core.x.set(b, pos, next);
             }

@@ -65,7 +65,7 @@ impl AlgState for DndmState {
                     if self.v2 { self.taus[b][pos] >= t } else { self.taus[b][pos] == t };
                 if moves {
                     let (tok, _) =
-                        sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                        sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                     core.x.set(b, pos, tok);
                 }
             }
@@ -80,6 +80,12 @@ impl AlgState for DndmState {
 
     fn total_events(&self) -> usize {
         self.events.len()
+    }
+
+    fn evict_row(&mut self, row: usize) {
+        // the event ladder stays as admitted (see the trait docs); only
+        // the per-row τ assignment goes
+        self.taus.remove(row);
     }
 }
 
@@ -141,7 +147,7 @@ impl AlgState for DndmCState {
         for b in 0..core.x.rows() {
             for &pos in &self.order[self.k..j] {
                 let (tok, _) =
-                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                 core.x.set(b, pos, tok);
             }
         }

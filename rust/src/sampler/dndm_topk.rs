@@ -59,7 +59,7 @@ impl AlgState for TopKState {
             self.cand.clear();
             for pos in 0..core.n {
                 let (tok, score) =
-                    sample_x0(logits.row(b, pos), core.temperature, &mut core.rng);
+                    sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                 self.cand.push((pos, tok, score));
             }
             self.cand.sort_by(|a, b| b.2.total_cmp(&a.2));
@@ -84,6 +84,10 @@ impl AlgState for TopKState {
 
     fn total_events(&self) -> usize {
         self.tt.events().len()
+    }
+
+    fn evict_row(&mut self, row: usize) {
+        self.updated.remove(row);
     }
 }
 

@@ -31,6 +31,11 @@
 //! scheduler batch), and no tokens or logits are copied per NFE outside
 //! the denoiser itself (`docs/perf.md`).
 //!
+//! Sessions can also **shrink**: [`SamplerSession::evict_slot`] removes
+//! one sequence mid-flight (cancellation inside a shared-𝒯 lane) while
+//! leaving every survivor byte-identical, because each row samples from
+//! its own forked RNG stream (see the `Core` docs).
+//!
 //! [`generate`]: super::generate
 
 use anyhow::{bail, Result};
@@ -56,14 +61,29 @@ pub struct PendingCall {
     pub index: usize,
 }
 
-/// State shared by every algorithm: current tokens, the RNG stream, and
-/// per-event accounting. The update order inside every `advance` mirrors
-/// the locals of the old run-to-completion loops so the RNG consumption
-/// order — and therefore every sampled token — is unchanged.
+/// State shared by every algorithm: current tokens, the RNG streams, and
+/// per-event accounting.
+///
+/// Randomness is split into two kinds of streams, both derived
+/// deterministically from the session seed:
+///
+/// * `rng` — the **lane stream**: everything drawn once per session and
+///   shared across sequences (x_T init, the predetermined 𝒯, ARDM's
+///   decode order).
+/// * `row_rngs[b]` — one **per-sequence stream** per batch row, forked
+///   from the lane stream at construction. Every per-(row, position) draw
+///   inside `advance` uses its own row's stream, so a sequence's sampled
+///   tokens never depend on how many neighbours share its batch. That
+///   independence is what makes [`SamplerSession::evict_slot`] exact:
+///   removing a row removes its stream, and every survivor's remaining
+///   draws are byte-for-byte the draws it would have made anyway.
 pub(crate) struct Core {
     /// current tokens x_t, flat `[B, N]`
     pub x: TokenBatch,
+    /// lane stream: session-level draws shared by all rows
     pub rng: SplitMix64,
+    /// per-sequence streams, index-aligned with the rows of `x`
+    pub row_rngs: Vec<SplitMix64>,
     pub temperature: f32,
     /// sequence length N
     pub n: usize,
@@ -82,6 +102,13 @@ impl Core {
         if self.trace_on {
             self.trace.push(TracePoint { t, tokens: self.x.row(0).to_vec() });
         }
+    }
+
+    /// Drop row `i`: its tokens compact out of `x` and its RNG stream is
+    /// discarded. Survivor streams are untouched.
+    fn evict_row(&mut self, i: usize) {
+        self.x.narrow_remove(i);
+        self.row_rngs.remove(i);
     }
 }
 
@@ -107,11 +134,22 @@ pub(crate) trait AlgState {
     /// the step-marching baselines, ⌈N/k⌉ for ARDM). Powers `nfe_total`
     /// in serving progress events.
     fn total_events(&self) -> usize;
+
+    /// Remove sequence `row`'s per-row state (called by
+    /// [`SamplerSession::evict_slot`] after the core row is gone). The
+    /// default is for algorithms whose state is shared across rows. The
+    /// event ladder is **never** recomputed: an evicted row's remaining
+    /// events still fire (survivors simply may move nothing there), which
+    /// keeps every survivor's event schedule — and with it `total_events`
+    /// and the RNG draw sequence — exactly what it was at admission.
+    fn evict_row(&mut self, _row: usize) {}
 }
 
-/// Construct the shared core exactly the way the old loops did: RNG from
-/// the seed, then x_T (from q_noise, or all-`[MASK]` for the mask-seeded
-/// algorithms, which draw nothing for x_T).
+/// Construct the shared core: the lane RNG from the seed, x_T (from
+/// q_noise, or all-`[MASK]` for the mask-seeded algorithms, which draw
+/// nothing for x_T), then one forked per-sequence stream per row. Forking
+/// happens *before* the algorithm state draws its 𝒯 from the lane stream,
+/// so (seed, batch) fully determines every stream.
 pub(crate) fn build_core(
     mcfg: &ModelConfig,
     cfg: &SamplerConfig,
@@ -126,9 +164,11 @@ pub(crate) fn build_core(
     } else {
         init_noise(batch, n, noise_of(mcfg), &mut rng)
     };
+    let row_rngs = (0..batch).map(|b| rng.fork(b as u64)).collect();
     Core {
         x,
         rng,
+        row_rngs,
         temperature: cfg.temperature,
         n,
         v: mcfg.vocab,
@@ -260,6 +300,34 @@ impl SamplerSession {
             );
         }
         self.alg.advance(&mut self.core, view);
+        Ok(())
+    }
+
+    /// Drop sequence `i` from the session mid-flight: its token row
+    /// compacts out of `x()`, its RNG stream and per-row algorithm state
+    /// are discarded, and the next denoiser call is one row narrower.
+    ///
+    /// Survivors are **byte-exact**: each sequence samples from its own
+    /// forked stream and the event ladder is never recomputed, so every
+    /// remaining row produces exactly the tokens it would have produced
+    /// had the evicted row stayed (pinned per kind by
+    /// `tests/narrowing.rs`). This is what lets the scheduler free a
+    /// cancelled request's slot at the next transition-time boundary
+    /// instead of riding it to lane retirement.
+    ///
+    /// The last row cannot be evicted — drop the whole session instead.
+    /// With tracing on, the trace follows whichever row is currently row
+    /// 0 (serving sessions never trace).
+    pub fn evict_slot(&mut self, i: usize) -> Result<()> {
+        if i >= self.batch {
+            bail!("slot {i} out of bounds for session batch {}", self.batch);
+        }
+        if self.batch == 1 {
+            bail!("cannot evict the last slot; drop the session instead");
+        }
+        self.core.evict_row(i);
+        self.alg.evict_row(i);
+        self.batch -= 1;
         Ok(())
     }
 

@@ -10,7 +10,8 @@
 //!
 //! * [`TokenBatch`] — flat `u32` storage with `[B, N]` dims: cheap row
 //!   views, in-place row writes, `extend_from` for gathering lanes into a
-//!   batch without per-row clones.
+//!   batch without per-row clones, and `narrow_remove` for compacting a
+//!   row out of a live batch (slot eviction) without reallocating.
 //! * [`LogitsBuf`] — flat `f32` `[B, N, V]` storage the denoiser writes
 //!   into (`Denoiser::denoise_into`); `reset` keeps capacity across calls.
 //! * [`LogitsView`] — a borrowed, `Copy` window over a `LogitsBuf` (or any
@@ -107,6 +108,18 @@ impl TokenBatch {
         self.data[row * self.cols + col] = val;
     }
 
+    /// Remove row `i` in place, compacting the rows above it down by one
+    /// (`copy_within` + truncate — no heap traffic), so a live batch can
+    /// shrink at a transition-time boundary without rebuilding. O(rows
+    /// after `i`); the allocation is kept.
+    pub fn narrow_remove(&mut self, i: usize) {
+        let rows = self.rows();
+        assert!(i < rows, "row {i} out of bounds for {rows} rows");
+        let start = i * self.cols;
+        self.data.copy_within(start + self.cols.., start);
+        self.data.truncate((rows - 1) * self.cols);
+    }
+
     /// The whole `[B * N]` storage, row-major.
     pub fn flat(&self) -> &[u32] {
         &self.data
@@ -196,6 +209,21 @@ impl LogitsBuf {
     /// Vocab-sized logits row of (sequence `i`, position `pos`).
     pub fn row(&self, i: usize, pos: usize) -> &[f32] {
         self.view().row(i, pos)
+    }
+
+    /// Remove sequence `i`'s `[N, V]` block in place, compacting the
+    /// sequences above it down (no heap traffic, allocation kept) — the
+    /// logits-side twin of [`TokenBatch::narrow_remove`]. The scheduler
+    /// itself narrows *before* the denoiser call and refills logits at
+    /// the new width, so this exists for callers that hold logits across
+    /// an eviction (and to keep the two flat types' APIs symmetric).
+    pub fn narrow_remove(&mut self, i: usize) {
+        let batch = self.batch();
+        assert!(i < batch, "sequence {i} out of bounds for batch {batch}");
+        let stride = self.n * self.v;
+        let start = i * stride;
+        self.data.copy_within(start + stride.., start);
+        self.data.truncate((batch - 1) * stride);
     }
 
     pub fn flat(&self) -> &[f32] {
@@ -320,6 +348,29 @@ mod tests {
     }
 
     #[test]
+    fn token_batch_narrow_remove_compacts_without_realloc() {
+        let mut tb = TokenBatch::from_rows(&[vec![1, 1], vec![2, 2], vec![3, 3]]);
+        let cap = tb.data.capacity();
+        tb.narrow_remove(1);
+        assert_eq!(tb.rows(), 2);
+        assert_eq!(tb.row(0), &[1, 1]);
+        assert_eq!(tb.row(1), &[3, 3]);
+        assert_eq!(tb.data.capacity(), cap, "narrowing must not touch the heap");
+        tb.narrow_remove(1); // last row
+        assert_eq!(tb.rows(), 1);
+        assert_eq!(tb.row(0), &[1, 1]);
+        tb.narrow_remove(0); // down to empty
+        assert_eq!(tb.rows(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn token_batch_narrow_remove_rejects_bad_row() {
+        let mut tb = TokenBatch::from_rows(&[vec![1, 1]]);
+        tb.narrow_remove(1);
+    }
+
+    #[test]
     #[should_panic(expected = "row width")]
     fn token_batch_rejects_ragged_rows() {
         let mut tb = TokenBatch::new(2);
@@ -371,6 +422,23 @@ mod tests {
         // views are Copy
         let w2 = w;
         assert_eq!(w2.flat(), w.flat());
+    }
+
+    #[test]
+    fn logits_buf_narrow_remove_compacts_sequences() {
+        let mut lb = LogitsBuf::new();
+        lb.reset(3, 2, 2);
+        for (i, x) in lb.flat_mut().iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let keep0 = lb.seq(0).to_vec();
+        let keep2 = lb.seq(2).to_vec();
+        let cap = lb.data.capacity();
+        lb.narrow_remove(1);
+        assert_eq!(lb.batch(), 2);
+        assert_eq!(lb.seq(0), &keep0[..]);
+        assert_eq!(lb.seq(1), &keep2[..]);
+        assert_eq!(lb.data.capacity(), cap, "narrowing must not touch the heap");
     }
 
     #[test]

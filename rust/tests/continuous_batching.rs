@@ -81,7 +81,7 @@ fn mid_flight_admission_joins_at_a_boundary_only() {
     // both cost exactly N calls of their own — step-decoupling means the
     // shared in-flight window doesn't distort per-request NFE
     for f in &done {
-        assert_eq!(f.result.as_ref().unwrap().nfe, N);
+        assert_eq!(f.result.as_ref().unwrap().nfe(), N);
     }
     // req 0 spans boundaries [0, 8), req 1 [2, 10) → 10 calls total,
     // versus 16 for run-to-completion serial batches
@@ -118,7 +118,7 @@ fn retired_sequences_free_slots_for_waiting_requests() {
     }
     assert_eq!(done.len(), 3);
     for f in &done {
-        assert_eq!(f.result.as_ref().unwrap().nfe, N);
+        assert_eq!(f.result.as_ref().unwrap().nfe(), N);
     }
     assert_eq!(s.engine().nfe.calls(), 2 * N as u64);
 }
@@ -140,8 +140,8 @@ fn mixed_spec_workload_falls_back_to_separate_batches() {
     }
     assert_eq!(max_in_flight, 1);
     assert_eq!(done.len(), 2);
-    let nfe0 = done.iter().find(|f| f.payload == 0).unwrap().result.as_ref().unwrap().nfe;
-    let nfe1 = done.iter().find(|f| f.payload == 1).unwrap().result.as_ref().unwrap().nfe;
+    let nfe0 = done.iter().find(|f| f.payload == 0).unwrap().result.as_ref().unwrap().nfe();
+    let nfe1 = done.iter().find(|f| f.payload == 1).unwrap().result.as_ref().unwrap().nfe();
     assert_eq!(nfe0, N, "DNDM-C batch ran alone");
     assert_eq!(nfe1, 3, "D3PM batch ran alone with NFE = T");
     assert_eq!(s.engine().nfe.calls(), (N + 3) as u64);
@@ -166,7 +166,7 @@ fn same_boundary_group_takes_the_shared_tau_fast_path() {
         done.extend(s.tick());
     }
     assert_eq!(done.len(), 4);
-    let nfes: Vec<usize> = done.iter().map(|f| f.result.as_ref().unwrap().nfe).collect();
+    let nfes: Vec<usize> = done.iter().map(|f| f.result.as_ref().unwrap().nfe()).collect();
     assert!(nfes.windows(2).all(|w| w[0] == w[1]), "shared 𝒯 ⇒ equal NFE: {nfes:?}");
     assert_eq!(s.engine().nfe.calls() as usize, nfes[0], "batch cost = |𝒯|, not 4·|𝒯|");
     assert!((s.engine().nfe.mean_width() - 4.0).abs() < 1e-9);
@@ -186,7 +186,7 @@ fn bad_spec_fails_its_group_without_poisoning_the_queue() {
     assert_eq!(done.len(), 2);
     assert!(done.iter().find(|f| f.payload == 0).unwrap().result.is_err());
     let ok = done.iter().find(|f| f.payload == 1).unwrap();
-    assert_eq!(ok.result.as_ref().unwrap().nfe, N);
+    assert_eq!(ok.result.as_ref().unwrap().nfe(), N);
 }
 
 #[test]
@@ -231,7 +231,7 @@ fn cancel_at_a_boundary_frees_the_slot_and_refills_the_same_tick() {
     assert_eq!(rest.len(), 2);
     for f in &rest {
         assert_eq!(f.outcome, Outcome::Done);
-        assert_eq!(f.result.as_ref().unwrap().nfe, N);
+        assert_eq!(f.result.as_ref().unwrap().nfe(), N);
     }
     // cancelled requests never reach the per-request NFE accounting
     assert_eq!(s.engine().nfe.requests(), 2);
@@ -288,7 +288,7 @@ fn queued_request_past_its_deadline_is_never_admitted() {
         rest.extend(s.tick());
     }
     assert_eq!(rest.len(), 1);
-    assert_eq!(rest[0].result.as_ref().unwrap().nfe, N);
+    assert_eq!(rest[0].result.as_ref().unwrap().nfe(), N);
     assert_eq!(s.engine().nfe.requests(), 1, "only the live request is accounted");
     assert_eq!(s.engine().nfe.calls(), N as u64);
 }

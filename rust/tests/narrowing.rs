@@ -1,0 +1,301 @@
+//! Narrowing parity suite — the acceptance pin for mid-flight slot
+//! eviction: removing one sequence from a live batch must leave every
+//! survivor **byte-identical** to the run where nobody left.
+//!
+//! Two layers, mirroring `tests/determinism.rs` / `tests/lifecycle.rs`:
+//!
+//! * session level — for every `SamplerKind`, a batch-3
+//!   `SamplerSession` with `evict_slot(1)` fired mid-run produces the
+//!   same rows 0/2 as the uninterrupted run (per-row RNG streams + an
+//!   event ladder that never recomputes make this exact);
+//! * scheduler level — cancelling one member of a shared-𝒯 lane narrows
+//!   the lane at the next boundary (batch width shrinks, the freed slot
+//!   refills the same tick) and the survivors' served outputs equal the
+//!   uncancelled run's, for every kind, through the conditional cipher
+//!   engine (so src-row compaction is covered too).
+
+use std::time::Duration;
+
+use dndm::coordinator::{
+    cipher_mock_engine, Engine, Outcome, Pending, SchedPolicy, Scheduler, Ticket,
+};
+use dndm::data::words;
+use dndm::runtime::{Denoiser, MockDenoiser};
+use dndm::sampler::{SamplerConfig, SamplerKind, SamplerSession};
+
+/// Every sampler with a noise family it supports — same map as
+/// determinism.rs (mask-predict/ARDM absorbing-only, DDIM multinomial).
+const ALL_KINDS: [(SamplerKind, &str); 10] = [
+    (SamplerKind::Dndm, "absorbing"),
+    (SamplerKind::DndmV2, "absorbing"),
+    (SamplerKind::DndmTopK, "absorbing"),
+    (SamplerKind::DndmC, "absorbing"),
+    (SamplerKind::D3pm, "absorbing"),
+    (SamplerKind::Rdm, "absorbing"),
+    (SamplerKind::RdmTopK, "multinomial"),
+    (SamplerKind::MaskPredict, "absorbing"),
+    (SamplerKind::Ddim, "multinomial"),
+    (SamplerKind::Ardm, "absorbing"),
+];
+
+fn mock(kind: &str) -> MockDenoiser {
+    let cfg = MockDenoiser::test_config(20, 8, 0, kind);
+    MockDenoiser::fixed(cfg, vec![10, 11, 12, 13, 14, 15, 16, 17])
+}
+
+/// First seed whose batch-3 session makes at least 3 denoiser calls, so
+/// an eviction after call 1 still leaves work to diverge on.
+fn seed_with_events(den: &MockDenoiser, cfg: &SamplerConfig) -> u64 {
+    (0..64u64)
+        .find(|&s| {
+            SamplerSession::new(den.config(), cfg, 3, s)
+                .map(|sess| sess.total_events() >= 3)
+                .unwrap_or(false)
+        })
+        .expect("some seed in 0..64 must give >= 3 events")
+}
+
+/// Run a batch-3 session to completion, optionally evicting row 1 after
+/// `evict_after` advances.
+fn run_session(
+    den: &MockDenoiser,
+    cfg: &SamplerConfig,
+    seed: u64,
+    evict_after: Option<usize>,
+) -> Vec<Vec<u32>> {
+    let mut sess = SamplerSession::new(den.config(), cfg, 3, seed).unwrap();
+    let mut advances = 0usize;
+    while let Some(call) = sess.next_event() {
+        let logits = den
+            .denoise(sess.x(), &vec![call.t; sess.batch()], None)
+            .unwrap();
+        sess.advance(&logits).unwrap();
+        advances += 1;
+        if Some(advances) == evict_after {
+            sess.evict_slot(1).unwrap();
+        }
+    }
+    sess.into_result().tokens
+}
+
+/// The session-level acceptance pin, for all ten kinds at temperature 1
+/// (every draw exercises the RNG — the strictest stream-independence
+/// check).
+#[test]
+fn evicting_a_row_leaves_survivors_byte_identical_for_every_kind() {
+    for (sk, noise) in ALL_KINDS {
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+        let den = mock(noise);
+        let seed = seed_with_events(&den, &cfg);
+
+        let full = run_session(&mock(noise), &cfg, seed, None);
+        let narrowed = run_session(&mock(noise), &cfg, seed, Some(1));
+
+        assert_eq!(narrowed.len(), 2, "{}: one row evicted", sk.name());
+        assert_eq!(narrowed[0], full[0], "{}: row 0 must not change", sk.name());
+        assert_eq!(narrowed[1], full[2], "{}: row 2 must not change", sk.name());
+    }
+}
+
+#[test]
+fn evict_slot_rejects_out_of_bounds_and_the_last_row() {
+    let den = mock("absorbing");
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+    let mut sess = SamplerSession::new(den.config(), &cfg, 2, 3).unwrap();
+    assert!(sess.evict_slot(2).is_err(), "out of bounds");
+    sess.evict_slot(1).unwrap();
+    assert_eq!(sess.batch(), 1);
+    assert_eq!(sess.x().rows(), 1);
+    assert!(sess.evict_slot(0).is_err(), "the last slot cannot be evicted");
+}
+
+/// Per-sequence 𝒯 (the union-ladder ablation): eviction drops the row's
+/// τ assignment but keeps the admitted event ladder, so survivors keep
+/// both their schedule and their bytes.
+#[test]
+fn eviction_preserves_survivors_under_per_sequence_tau() {
+    let mut cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_temperature(1.0);
+    cfg.shared_tau = false;
+    let den = mock("absorbing");
+    let seed = seed_with_events(&den, &cfg);
+    let full = run_session(&mock("absorbing"), &cfg, seed, None);
+    let narrowed = run_session(&mock("absorbing"), &cfg, seed, Some(1));
+    assert_eq!(narrowed[0], full[0]);
+    assert_eq!(narrowed[1], full[2]);
+}
+
+// ---------------------------------------------------------------------------
+// scheduler level
+// ---------------------------------------------------------------------------
+
+const SRCS: [&str; 3] = [
+    "the quick fox crosses a river",
+    "a small garden by the road",
+    "this old road to the river",
+];
+
+fn engine(noise: &'static str) -> Engine {
+    if noise == "absorbing" {
+        return cipher_mock_engine(8);
+    }
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), 8, 0, "multinomial");
+    let mut den = MockDenoiser::fixed(cfg, vec![44, 45, 46, 47, 48, 49, 50, 51]);
+    den.peak = 14.0;
+    Engine::from_denoiser(Box::new(den), vocab, "multinomial-mock")
+}
+
+fn policy() -> SchedPolicy {
+    SchedPolicy { max_batch: 4, window: Duration::ZERO, shared_tau_groups: true }
+}
+
+fn req(id: usize, noise: &str, seed: u64) -> Pending<usize> {
+    // one shared-𝒯 lane is seeded from its first member, so member seeds
+    // beyond the first don't matter; distinct srcs make each conditional
+    // row's logits distinct (src-compaction coverage)
+    let src = (noise == "absorbing").then(|| SRCS[id % SRCS.len()].to_string());
+    Pending::new(src, seed, None, id)
+}
+
+/// First lane seed whose width-3 session spans at least 3 events, so a
+/// cancel after the first call lands mid-flight *and* the narrowed lane
+/// is still flying at the boundary after the narrow.
+fn lane_seed(eng: &Engine, cfg: &SamplerConfig) -> u64 {
+    (0..64u64)
+        .find(|&s| {
+            SamplerSession::new(eng.denoiser().config(), cfg, 3, s)
+                .map(|sess| sess.total_events() >= 3)
+                .unwrap_or(false)
+        })
+        .expect("some seed in 0..64 must give >= 3 events")
+}
+
+type Resolved = (usize, Outcome, Option<Vec<u32>>);
+
+fn collect(fs: Vec<dndm::coordinator::Finished<usize>>) -> Vec<Resolved> {
+    fs.into_iter()
+        .map(|f| {
+            let tokens = f
+                .result
+                .as_ref()
+                .ok()
+                .and_then(|d| d.output())
+                .map(|o| o.tokens.clone());
+            (f.payload, f.outcome, tokens)
+        })
+        .collect()
+}
+
+/// Drive a scheduler until idle, collecting (payload, outcome, tokens).
+fn drain(s: &mut Scheduler<usize>) -> Vec<Resolved> {
+    let mut out = Vec::new();
+    while s.has_work() {
+        out.extend(collect(s.tick()));
+    }
+    out
+}
+
+fn tokens_of(rows: &[Resolved], id: usize, label: &str) -> Vec<u32> {
+    rows.iter()
+        .find(|(p, _, _)| *p == id)
+        .and_then(|(_, _, t)| t.clone())
+        .unwrap_or_else(|| panic!("{label}: request {id} must finish with tokens"))
+}
+
+/// The scheduler-level acceptance pin: for every kind, cancelling lane
+/// member 1 mid-flight (a) narrows the in-flight batch before the next
+/// call and (b) leaves survivors byte-identical to the uncancelled run.
+#[test]
+fn cancelled_lane_member_narrows_the_lane_and_preserves_survivors() {
+    for (sk, noise) in ALL_KINDS {
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+        // the lane is seeded from its first member: pick one whose
+        // session outlives the first call so the cancel can land
+        let probe = engine(noise);
+        let seed = lane_seed(&probe, &cfg);
+
+        // reference: an uncancelled width-3 lane
+        let mut s: Scheduler<usize> = Scheduler::new(engine(noise), cfg.clone(), policy());
+        for id in 0..3 {
+            s.enqueue(req(id, noise, seed));
+        }
+        let full = drain(&mut s);
+        let want0 = tokens_of(&full, 0, sk.name());
+        let want2 = tokens_of(&full, 2, sk.name());
+
+        // cancelled run: same lane, member 1 cancels after the first call
+        let mut s: Scheduler<usize> = Scheduler::new(engine(noise), cfg.clone(), policy());
+        let (ticket, sink) = Ticket::detached(false);
+        let mut sink = Some(sink);
+        for id in 0..3 {
+            let mut p = req(id, noise, seed);
+            if id == 1 {
+                p.ctl = sink.take();
+            }
+            s.enqueue(p);
+        }
+        let first = s.tick();
+        assert!(first.is_empty(), "{}: lane must outlive the first call", sk.name());
+        assert_eq!(s.in_flight(), 3, "{}", sk.name());
+        ticket.cancel();
+        let narrowed = collect(s.tick());
+        assert_eq!(narrowed.len(), 1, "{}: the cancel resolves at this boundary", sk.name());
+        assert_eq!(narrowed[0].0, 1, "{}", sk.name());
+        assert_eq!(narrowed[0].1, Outcome::Cancelled, "{}", sk.name());
+        assert_eq!(s.in_flight(), 2, "{}: the lane narrowed before the call", sk.name());
+
+        let mut all = narrowed;
+        all.extend(drain(&mut s));
+        assert_eq!(
+            tokens_of(&all, 0, sk.name()),
+            want0,
+            "{}: survivor 0 must be byte-identical",
+            sk.name()
+        );
+        assert_eq!(
+            tokens_of(&all, 2, sk.name()),
+            want2,
+            "{}: survivor 2 must be byte-identical",
+            sk.name()
+        );
+    }
+}
+
+/// The freed slot refills from the queue at the very boundary the member
+/// leaves, while the narrowed lane keeps flying: capacity accounting
+/// sees the eviction immediately.
+#[test]
+fn evicted_slot_refills_the_same_tick_while_the_lane_survives() {
+    // capacity 3, one width-3 shared lane; a fourth request waits
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+    let seed = lane_seed(&cipher_mock_engine(8), &cfg);
+    let narrow_policy =
+        SchedPolicy { max_batch: 3, window: Duration::ZERO, shared_tau_groups: true };
+    let mut s: Scheduler<usize> = Scheduler::new(cipher_mock_engine(8), cfg, narrow_policy);
+    let (ticket, sink) = Ticket::detached(false);
+    let mut p1 = req(1, "absorbing", seed);
+    p1.ctl = Some(sink);
+    s.enqueue(req(0, "absorbing", seed));
+    s.enqueue(p1);
+    s.enqueue(req(2, "absorbing", seed));
+    let first = s.tick();
+    assert!(first.is_empty(), "width-3 lane in flight");
+    assert_eq!(s.in_flight(), 3);
+    s.enqueue(req(3, "absorbing", seed));
+    assert_eq!(s.pending_len(), 1, "no free slot for request 3 yet");
+
+    ticket.cancel();
+    let out = collect(s.tick());
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].1, Outcome::Cancelled);
+    assert_eq!(s.in_flight(), 3, "evicted slot refilled at the same boundary");
+    assert_eq!(s.pending_len(), 0);
+    let lanes = s.lane_info();
+    assert_eq!(lanes.len(), 2, "narrowed lane + the refill lane coexist");
+    assert!(lanes.iter().any(|l| l.width == 2), "the original lane narrowed: {lanes:?}");
+    assert!(lanes.iter().any(|l| l.width == 1), "request 3 joined as its own lane");
+
+    let rest = drain(&mut s);
+    assert_eq!(rest.len(), 3, "both survivors and the refill complete");
+    assert!(rest.iter().all(|(_, o, t)| *o == Outcome::Done && t.is_some()));
+}

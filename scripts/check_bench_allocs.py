@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""CI gate: fail when allocs/call in a serving bench run regresses past the
+committed ceiling.
+
+Usage: check_bench_allocs.py BENCH_serving.json serving_allocs_baseline.json
+
+The bench JSON is what `cargo bench --bench serving_throughput` emits; the
+baseline maps each policy row to a ceiling on `allocs_per_call`. Throughput
+and latency are NOT gated (too noisy on shared runners) — heap acquisitions
+per denoiser call are deterministic enough to hold a line on, and they are
+the flat-data-path metric the repo actually optimizes (docs/perf.md).
+
+Ratchet policy (see the baseline file): ceilings start generous; once the
+uploaded BENCH_serving.json artifacts record a stable trajectory, lower
+each ceiling to ~1.5x the observed steady value.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+    ceilings = base["max_allocs_per_call"]
+    if bench.get("backend") != base.get("backend", "mock"):
+        print(
+            f"note: bench backend '{bench.get('backend')}' != baseline backend "
+            f"'{base.get('backend', 'mock')}' — gating anyway"
+        )
+    failures = []
+    seen = set()
+    for row in bench["rows"]:
+        policy = row["policy"]
+        seen.add(policy)
+        value = row["allocs_per_call"]
+        if policy not in ceilings:
+            print(f"{policy:28s} allocs/call {value:9.1f}  (no ceiling — not gated)")
+            continue
+        limit = ceilings[policy]
+        ok = value <= limit
+        print(
+            f"{policy:28s} allocs/call {value:9.1f}  ceiling {limit:9.1f}  "
+            f"{'ok' if ok else 'REGRESSION'}"
+        )
+        if not ok:
+            failures.append(policy)
+    missing = sorted(set(ceilings) - seen)
+    if missing:
+        print(f"\nbaseline rows missing from the bench output: {', '.join(missing)}")
+        failures.extend(missing)
+    if failures:
+        print(f"\nallocs/call gate failed for: {', '.join(sorted(set(failures)))}")
+        print("If the regression is intentional, raise the ceiling in")
+        print(f"{sys.argv[2]} in the same PR and say why in its comment field.")
+        return 1
+    print("\nallocs/call gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
