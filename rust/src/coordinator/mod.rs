@@ -19,11 +19,17 @@
 //!   scheduling modes, and [`Router`], which shards requests across N
 //!   server threads/engines with spec-affinity placement and least-loaded
 //!   fallback.
+//! * [`rebalancer`] — the background rebalance loop and its pure decision
+//!   policy: queued-request stealing plus **in-flight lane donation** (a
+//!   whole live lane moves shards at a transition-time boundary and
+//!   resumes byte-exactly — possible because 𝒯 is predetermined). See
+//!   `docs/rebalancing.md`.
 //! * [`batcher`] — the legacy fixed batching policy (max size +
 //!   collection window), kept as the serving bench's ablation baseline.
 
 pub mod batcher;
 pub mod engine;
+pub mod rebalancer;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -31,9 +37,11 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{cipher_mock_engine, Engine, GenOutput};
+pub use rebalancer::RebalancePolicy;
 pub use request::{CancelHandle, Event, GenRequest, Priority, Ticket, TicketSink};
 pub use router::{Router, ServeBuilder};
 pub use scheduler::{
-    Delivery, Finished, LaneInfo, Outcome, Pending, SchedPolicy, Scheduler, SpecKey,
+    Delivery, DonatedLane, Finished, LaneInfo, Outcome, Pending, SchedPolicy, Scheduler,
+    SpecKey,
 };
 pub use server::{Server, ServerStats};

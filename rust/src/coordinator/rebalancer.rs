@@ -1,0 +1,464 @@
+//! Background rebalancing — the decision policy and cadence loop behind
+//! cross-shard work movement.
+//!
+//! Placement ([`Router::place`]) balances load at **submit** time and the
+//! pull-at-submit stealing pass repairs queue imbalance whenever new
+//! traffic arrives. Neither helps during a lull: a shard serving a slow
+//! spec can sit on a deep queue — or a wide in-flight batch — while its
+//! neighbour drains to idle, and with no submissions nothing ever looks
+//! at the gauges again. This module closes that gap with a **background
+//! rebalance loop** owned by the [`Router`]: on a configurable cadence it
+//! snapshots every shard, plans at most one corrective action, and
+//! dispatches it.
+//!
+//! Two kinds of movement, in preference order:
+//!
+//! 1. **Queued-request stealing** (PR 4's mechanism): the deepest queue
+//!    donates up to half of one same-`SpecKey` run to an idle shard.
+//!    Cheapest — the requests haven't started, so nothing but queue
+//!    entries move.
+//! 2. **In-flight lane donation** (new): when queues are shallow but a
+//!    shard's *in-flight* work could be split, a whole live lane moves.
+//!    The paper's predetermined transition-time set 𝒯 is what makes this
+//!    possible at all: every lane's remaining denoiser calls are known
+//!    exactly (`total_events()` minus the event cursor), so the donor can
+//!    pack the lane at a transition-time boundary
+//!    ([`Scheduler::donate_lane`] → [`DonatedLane`]) and the thief
+//!    resumes it mid-schedule ([`Scheduler::adopt_lane`]) with survivor
+//!    byte-parity — the handoff point is well-defined for every
+//!    `SamplerKind` because the event ladder never recomputes.
+//!
+//! The decision policy is **pure** — [`plan`] maps per-shard
+//! [`ShardView`]s to at most one [`Action`], and [`pick_donation`] is the
+//! lane-level cost model — so both are unit-testable without threads or
+//! channels. The thin I/O wrapper [`run_pass`] gathers the views (one
+//! stats round-trip per shard, answered between denoiser calls) and
+//! executes the plan; the background thread in `spawn_background` just
+//! calls it on a timer.
+//!
+//! When is movement **refused**? See `docs/rebalancing.md` for the full
+//! table; in short:
+//!
+//! * no idle thief — adopting into a busy shard would put a second spec
+//!   key in flight (mixed-spec), so the planner waits instead;
+//! * queues below [`RebalancePolicy::min_queue`] and no donatable lane;
+//! * every candidate lane is near retirement
+//!   ([`RebalancePolicy::min_remaining`] — a lane about to free its slots
+//!   anyway is not worth the handoff);
+//! * the donor holds a single lane and an empty queue (moving its only
+//!   work is zero-sum: it idles the donor to busy the thief).
+//!
+//! [`Router`]: super::router::Router
+//! [`Router::place`]: super::router::Router
+//! [`Scheduler::donate_lane`]: super::scheduler::Scheduler::donate_lane
+//! [`Scheduler::adopt_lane`]: super::scheduler::Scheduler::adopt_lane
+//! [`DonatedLane`]: super::scheduler::DonatedLane
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::server::Server;
+
+/// When and how aggressively the router rebalances. Defaults are tuned
+/// for "always on, never disruptive": a 100 ms cadence is ~10 stats
+/// round-trips per second per shard (each answered between two denoiser
+/// calls), and the thresholds refuse any move that would not increase
+/// parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct RebalancePolicy {
+    /// Cadence of the background loop. `None` disables the thread
+    /// entirely — rebalancing then happens only at submit time (gauge
+    /// skew) and on explicit [`Router::rebalance`] calls.
+    ///
+    /// [`Router::rebalance`]: super::router::Router::rebalance
+    pub interval: Option<Duration>,
+    /// Minimum queued requests on the donor before queued-request
+    /// stealing is worth disrupting admission grouping (a 1-deep queue
+    /// admits at the next boundary anyway).
+    pub min_queue: usize,
+    /// Minimum *remaining* denoiser calls for a lane to be donated.
+    /// Near-retirement lanes free their slots in a tick or two; moving
+    /// them buys nothing.
+    pub min_remaining: usize,
+    /// Enable in-flight lane donation (stage 2). With `false` the
+    /// rebalancer only ever steals queued requests.
+    pub donate_lanes: bool,
+}
+
+impl Default for RebalancePolicy {
+    fn default() -> Self {
+        RebalancePolicy {
+            interval: Some(Duration::from_millis(100)),
+            min_queue: 2,
+            min_remaining: 2,
+            donate_lanes: true,
+        }
+    }
+}
+
+impl RebalancePolicy {
+    /// No background thread: rebalancing only at submit time and on
+    /// explicit [`Router::rebalance`] calls — the pre-PR-5 behaviour,
+    /// useful for tests that pin exact steal counts.
+    ///
+    /// [`Router::rebalance`]: super::router::Router::rebalance
+    pub fn manual() -> Self {
+        RebalancePolicy { interval: None, ..RebalancePolicy::default() }
+    }
+}
+
+/// What the planner sees of one shard — a pure-data snapshot, so [`plan`]
+/// is testable without servers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardView {
+    /// Queued (not yet admitted) requests, all priorities.
+    pub queued: usize,
+    /// In-flight lanes (co-admitted groups) on the shard's scheduler.
+    pub lanes: usize,
+    /// The router's load gauge: outstanding (submitted, not yet
+    /// terminal) requests routed to this shard. `0` means idle — safe to
+    /// adopt a lane without mixing spec keys.
+    pub load: usize,
+    /// `false` when the shard's engine failed to build
+    /// (`ServerStats::healthy`): such a shard only drains and fails
+    /// requests, so it must be neither donor nor thief — its zeroed
+    /// gauges would otherwise make it look like a perfect idle shard and
+    /// every donation to it would fail the moved requests.
+    ///
+    /// [`ServerStats::healthy`]: super::server::ServerStats
+    pub healthy: bool,
+}
+
+/// One lane's donation cost-model inputs (see [`pick_donation`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneCost {
+    /// Denoiser calls the lane still needs: `total_events()` minus the
+    /// event-ladder cursor — exact, because 𝒯 is predetermined.
+    pub remaining: usize,
+    /// Sequences in the lane.
+    pub width: usize,
+}
+
+/// The single corrective action of one rebalance pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Move up to `max` queued same-key requests from `donor`'s queue to
+    /// `thief` (PR 4's boundary-granular stealing).
+    StealQueued { donor: usize, thief: usize, max: usize },
+    /// Ask `donor` to pack one in-flight lane at its next boundary and
+    /// ship it to `thief`, which resumes it mid-schedule.
+    DonateLane { donor: usize, thief: usize },
+}
+
+/// The decision policy: map shard snapshots to at most one [`Action`].
+///
+/// Stealing queued work is always preferred over donating a lane — it
+/// moves requests that haven't consumed any denoiser calls yet. Lane
+/// donation is the fallback for the in-flight-only imbalance stealing
+/// cannot touch. Exactly one action per pass keeps the pass cheap and
+/// lets the next snapshot observe the result before moving more.
+pub fn plan(views: &[ShardView], policy: &RebalancePolicy) -> Option<Action> {
+    if views.len() < 2 {
+        return None;
+    }
+    // The thief must be idle: its scheduler has drained, so adopting a
+    // lane (or a stolen run) cannot put a second spec key in flight.
+    // A busy-but-underloaded shard is *not* a thief — refusing here is
+    // the planner's mixed-spec guard. All three gauges must read zero:
+    // the load gauge alone is blind to requests submitted directly to a
+    // shard (no router gauge), which `queued`/`lanes` — ground truth
+    // from the scheduler — still see.
+    let thief = (0..views.len()).find(|&i| {
+        views[i].healthy && views[i].load == 0 && views[i].queued == 0 && views[i].lanes == 0
+    })?;
+
+    // stage 1: queued-request stealing from the deepest queue (an
+    // unhealthy shard has nothing real to steal — its queue only drains
+    // to Failed)
+    let donor = (0..views.len())
+        .filter(|&i| i != thief && views[i].healthy)
+        .max_by_key(|&i| views[i].queued)?;
+    if views[donor].queued >= policy.min_queue {
+        return Some(Action::StealQueued {
+            donor,
+            thief,
+            max: views[donor].queued.div_ceil(2),
+        });
+    }
+
+    // stage 2: in-flight lane donation. A donor can give a lane away
+    // only if doing so increases parallelism: either a second lane keeps
+    // it busy, or a queued request admits into the freed capacity.
+    if !policy.donate_lanes {
+        return None;
+    }
+    let donor = (0..views.len())
+        .filter(|&i| i != thief && views[i].healthy)
+        .filter(|&i| views[i].lanes >= 2 || (views[i].lanes >= 1 && views[i].queued >= 1))
+        .max_by_key(|&i| views[i].load)?;
+    Some(Action::DonateLane { donor, thief })
+}
+
+/// The lane-level cost model: which in-flight lane should a donor give
+/// away? The lane with the most **remaining** denoiser calls moves — it
+/// transfers the most future work per handoff — with width as the
+/// tie-break (more sequences moved). Lanes below `min_remaining` (floored
+/// at 1: a finished lane cannot be resumed) are refused as
+/// near-retirement.
+pub fn pick_donation(costs: &[LaneCost], min_remaining: usize) -> Option<usize> {
+    let floor = min_remaining.max(1);
+    costs
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.remaining >= floor)
+        .max_by_key(|&(_, c)| (c.remaining, c.width))
+        .map(|(i, _)| i)
+}
+
+/// A shard as the rebalancer addresses it: the cloneable server handle
+/// plus the router's load gauge for that shard.
+#[derive(Clone)]
+pub(crate) struct ShardHandle {
+    pub(crate) server: Server,
+    pub(crate) load: Arc<AtomicUsize>,
+}
+
+/// One rebalance pass: snapshot every shard (stats round-trip + load
+/// gauge), [`plan`], dispatch. Returns the action taken, if any. Errors
+/// only when a shard is gone (shutdown) — callers treat that as "stop
+/// rebalancing", not a failure.
+pub(crate) fn run_pass(
+    shards: &[ShardHandle],
+    policy: &RebalancePolicy,
+) -> Result<Option<Action>> {
+    let mut views = Vec::with_capacity(shards.len());
+    for sh in shards {
+        let st = sh.server.stats()?;
+        views.push(ShardView {
+            queued: (st.queued_low + st.queued_normal + st.queued_high) as usize,
+            lanes: st.lanes as usize,
+            load: sh.load.load(Ordering::Relaxed),
+            healthy: st.healthy,
+        });
+    }
+    let action = plan(&views, policy);
+    match action {
+        Some(Action::StealQueued { donor, thief, max }) => {
+            shards[donor].server.steal_into(
+                max,
+                &shards[thief].server,
+                shards[thief].load.clone(),
+            );
+        }
+        Some(Action::DonateLane { donor, thief }) => {
+            shards[donor].server.donate_lane_into(
+                &shards[thief].server,
+                shards[thief].load.clone(),
+                policy.min_remaining,
+            );
+        }
+        None => {}
+    }
+    Ok(action)
+}
+
+/// Handle to the background rebalance thread. Stops (and joins) the
+/// thread on drop; [`Router::shutdown`] stops it explicitly first so
+/// shard drains are never raced by a late pass.
+///
+/// [`Router::shutdown`]: super::router::Router::shutdown
+pub(crate) struct RebalancerGuard {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RebalancerGuard {
+    /// Signal the loop to exit; returns without joining.
+    pub(crate) fn stop(&self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        cv.notify_all();
+    }
+}
+
+impl Drop for RebalancerGuard {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the background loop: every `policy.interval`, run one pass.
+/// Returns `None` (no thread) when the policy is manual or there is
+/// nothing to balance between (< 2 shards).
+pub(crate) fn spawn_background(
+    shards: Vec<ShardHandle>,
+    policy: RebalancePolicy,
+) -> Option<RebalancerGuard> {
+    let interval = policy.interval?;
+    if shards.len() < 2 {
+        return None;
+    }
+    let stop: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+    let stop2 = stop.clone();
+    let handle = std::thread::spawn(move || {
+        let (lock, cv) = &*stop2;
+        loop {
+            // sleep out one interval, waking early only on stop
+            let deadline = Instant::now() + interval;
+            let mut stopped = lock.lock().unwrap_or_else(PoisonError::into_inner);
+            while !*stopped {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                let (g, _) =
+                    cv.wait_timeout(stopped, left).unwrap_or_else(PoisonError::into_inner);
+                stopped = g;
+            }
+            if *stopped {
+                return;
+            }
+            drop(stopped);
+            if run_pass(&shards, &policy).is_err() {
+                // a shard is gone: the router is shutting down
+                return;
+            }
+        }
+    });
+    Some(RebalancerGuard { stop, handle: Some(handle) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(queued: usize, lanes: usize, load: usize) -> ShardView {
+        ShardView { queued, lanes, load, healthy: true }
+    }
+
+    fn idle() -> ShardView {
+        v(0, 0, 0)
+    }
+
+    #[test]
+    fn plan_prefers_stealing_queued_work() {
+        let views = [v(5, 1, 6), idle()];
+        assert_eq!(
+            plan(&views, &RebalancePolicy::default()),
+            Some(Action::StealQueued { donor: 0, thief: 1, max: 3 }),
+            "deep queue → steal (ceil(5/2) = 3), even though a lane is donatable"
+        );
+    }
+
+    #[test]
+    fn plan_donates_a_lane_when_queues_are_shallow() {
+        // two lanes in flight, nothing queued: stealing has nothing to
+        // take, but a lane can move
+        let views = [v(0, 2, 4), idle()];
+        assert_eq!(
+            plan(&views, &RebalancePolicy::default()),
+            Some(Action::DonateLane { donor: 0, thief: 1 })
+        );
+        // one lane + one queued request: donating frees capacity the
+        // queued request admits into
+        let views = [v(1, 1, 2), idle()];
+        assert_eq!(
+            plan(&views, &RebalancePolicy::default()),
+            Some(Action::DonateLane { donor: 0, thief: 1 })
+        );
+    }
+
+    #[test]
+    fn plan_refuses_zero_sum_and_busy_thieves() {
+        let policy = RebalancePolicy::default();
+        // single lane, empty queue: moving the only work is zero-sum
+        let views = [v(0, 1, 1), idle()];
+        assert_eq!(plan(&views, &policy), None);
+        // no idle shard: adopting would mix spec keys — refuse
+        let views = [
+            v(0, 2, 4),
+            v(0, 1, 1),
+        ];
+        assert_eq!(plan(&views, &policy), None);
+        // a queued- or lane-holding-but-gaugeless shard (direct submits
+        // bypass the router's load gauge) is not idle either
+        let views = [
+            v(0, 2, 4),
+            v(1, 0, 0),
+        ];
+        assert_eq!(plan(&views, &policy), None);
+        let views = [
+            v(0, 2, 4),
+            v(0, 1, 0),
+        ];
+        assert_eq!(plan(&views, &policy), None);
+        // single shard / empty cluster
+        assert_eq!(plan(&[idle()], &policy), None);
+        assert_eq!(plan(&[], &policy), None);
+    }
+
+    #[test]
+    fn plan_never_uses_an_unhealthy_shard() {
+        let policy = RebalancePolicy::default();
+        // a failed-engine shard reports all-zero gauges but healthy =
+        // false: it must not be chosen as the thief (donating to it
+        // would fail every moved request)...
+        let dead = ShardView { healthy: false, ..idle() };
+        let views = [v(5, 1, 6), dead];
+        assert_eq!(plan(&views, &policy), None);
+        // ...nor as a donor (its queue only drains to Failed)
+        let dead_busy = ShardView { queued: 9, healthy: false, ..idle() };
+        let views = [dead_busy, idle(), v(2, 1, 3)];
+        assert_eq!(
+            plan(&views, &policy),
+            Some(Action::StealQueued { donor: 2, thief: 1, max: 1 }),
+            "the healthy 2-deep queue wins over the dead 9-deep one"
+        );
+    }
+
+    #[test]
+    fn plan_respects_donate_lanes_and_min_queue_knobs() {
+        let policy =
+            RebalancePolicy { donate_lanes: false, ..RebalancePolicy::default() };
+        let views = [v(0, 2, 4), idle()];
+        assert_eq!(plan(&views, &policy), None, "donation disabled");
+
+        let policy = RebalancePolicy { min_queue: 4, ..RebalancePolicy::default() };
+        let views = [v(3, 0, 3), idle()];
+        assert_eq!(plan(&views, &policy), None, "queue below min_queue, no lanes");
+    }
+
+    #[test]
+    fn plan_picks_deepest_donor_and_idle_thief() {
+        let views = [
+            v(2, 1, 3),
+            idle(),
+            v(6, 1, 7),
+        ];
+        assert_eq!(
+            plan(&views, &RebalancePolicy::default()),
+            Some(Action::StealQueued { donor: 2, thief: 1, max: 3 })
+        );
+    }
+
+    #[test]
+    fn pick_donation_maximizes_remaining_work() {
+        let costs = [
+            LaneCost { remaining: 3, width: 2 },
+            LaneCost { remaining: 9, width: 1 },
+            LaneCost { remaining: 9, width: 4 },
+            LaneCost { remaining: 1, width: 8 },
+        ];
+        assert_eq!(pick_donation(&costs, 2), Some(2), "ties broken by width");
+        assert_eq!(pick_donation(&costs, 10), None, "all below the floor");
+        assert_eq!(pick_donation(&[], 0), None);
+        // floor clamps to 1: a lane with zero remaining events cannot move
+        assert_eq!(pick_donation(&[LaneCost { remaining: 0, width: 2 }], 0), None);
+    }
+}

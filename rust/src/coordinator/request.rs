@@ -398,10 +398,14 @@ impl TicketSink {
         self.finish(Terminal::Failed(msg.to_string()));
     }
 
-    /// Re-point the load gauge at another shard's counter (cross-shard
-    /// work stealing): the donor's gauge drops, the thief's rises, and the
-    /// exactly-once terminal decrement now targets the thief. A no-op
-    /// after the terminal event (the old gauge was already decremented).
+    /// Re-point the load gauge at another shard's counter — called once
+    /// per moved request by both rebalancing paths: queued-request
+    /// stealing and in-flight lane donation (every member sink of a
+    /// [`DonatedLane`](super::scheduler::DonatedLane) is retargeted as
+    /// the lane is packed). The donor's gauge drops, the thief's rises,
+    /// and the exactly-once terminal decrement now targets the thief. A
+    /// no-op after the terminal event (the old gauge was already
+    /// decremented).
     pub(crate) fn retarget_load(&self, new: Arc<AtomicUsize>) {
         let mut st = lock(&self.shared);
         if st.terminal.is_some() {

@@ -24,17 +24,29 @@
 //!
 //! Placement alone can strand work: load balances at submit time, but a
 //! shard serving a slow spec keeps a deep queue while a neighbour drains
-//! to idle — and no new submissions means no re-placement. [`Router::
-//! rebalance`] closes that gap with **cross-shard work stealing**: the
-//! shard with the deepest queue donates up to half of it to an idle
-//! shard, at boundary granularity (the donor pops requests between two
-//! denoiser calls) and with `SpecKey` affinity preserved — a donation is
-//! a single same-key run, so the thief can still serve it as one
-//! shared-𝒯 lane. Donated requests keep their sink, deadline, priority,
-//! and enqueue time; their load-gauge accounting moves to the thief.
-//! `submit_request` triggers a pass opportunistically whenever the load
-//! gauges show an idle shard next to a loaded one; callers with idle
-//! periods can also invoke [`Router::rebalance`] directly.
+//! to idle — and no new submissions means no re-placement. Rebalancing
+//! closes that gap (policy and cost model in
+//! [`rebalancer`](super::rebalancer); semantics in
+//! `docs/rebalancing.md`), with two movements:
+//!
+//! * **Queued-request stealing** — the shard with the deepest queue
+//!   donates up to half of it to an idle shard, at boundary granularity
+//!   (the donor pops requests between two denoiser calls) and with
+//!   `SpecKey` affinity preserved — a donation is a single same-key run,
+//!   so the thief can still serve it as one shared-𝒯 lane.
+//! * **In-flight lane donation** — when queues are shallow but a shard's
+//!   in-flight work could be split, a whole live lane moves: the donor
+//!   packs the session (state, RNG streams, event-ladder cursor) at a
+//!   transition-time boundary and the thief resumes it mid-schedule with
+//!   survivor byte-parity — possible only because 𝒯 is predetermined.
+//!
+//! Moved requests keep their sink, deadline, priority, and enqueue time;
+//! their load-gauge accounting follows them. Three triggers share the
+//! same planner: a **background cadence loop** owned by the router
+//! ([`RebalancePolicy::interval`], on by default, covering traffic
+//! lulls), an opportunistic pass from `submit_request` whenever the load
+//! gauges show an idle shard next to a loaded one, and explicit
+//! [`Router::rebalance`] calls.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -45,6 +57,7 @@ use crate::sampler::SamplerConfig;
 
 use super::batcher::BatchPolicy;
 use super::engine::{Engine, GenOutput};
+use super::rebalancer::{self, RebalancePolicy, RebalancerGuard, ShardHandle};
 use super::request::{GenRequest, Ticket};
 use super::scheduler::{SchedPolicy, SpecKey};
 use super::server::{Server, ServerJoin, ServerStats};
@@ -82,6 +95,7 @@ pub struct ServeBuilder<F> {
     cfg: SamplerConfig,
     mode: ServeMode,
     shards: usize,
+    rebalance: RebalancePolicy,
 }
 
 impl<F> ServeBuilder<F>
@@ -94,6 +108,7 @@ where
             cfg,
             mode: ServeMode::Continuous(SchedPolicy::default()),
             shards: 1,
+            rebalance: RebalancePolicy::default(),
         }
     }
 
@@ -118,6 +133,14 @@ where
         self
     }
 
+    /// Rebalancing policy (cadence + thresholds). The default runs a
+    /// background pass every 100 ms on multi-shard continuous routers;
+    /// [`RebalancePolicy::manual`] disables the background thread.
+    pub fn rebalance(mut self, policy: RebalancePolicy) -> Self {
+        self.rebalance = policy;
+        self
+    }
+
     /// Start every shard and return the routing frontend.
     pub fn start(self) -> Router {
         let mut shards = Vec::with_capacity(self.shards);
@@ -135,12 +158,22 @@ where
                 join: Some(join),
             });
         }
+        let continuous = matches!(self.mode, ServeMode::Continuous(_));
+        // the background cadence loop only exists where rebalancing can
+        // act: multi-shard continuous routers with a non-manual policy
+        let rebalancer = if continuous {
+            rebalancer::spawn_background(handles_of(&shards), self.rebalance)
+        } else {
+            None
+        };
         Router {
+            rebalancer,
             shards,
             affinity: Mutex::new(Vec::new()),
             rr: AtomicUsize::new(0),
             default_cfg: self.cfg,
-            continuous: matches!(self.mode, ServeMode::Continuous(_)),
+            continuous,
+            rebalance_policy: self.rebalance,
             steal_cooldown: AtomicUsize::new(0),
         }
     }
@@ -153,15 +186,19 @@ struct Shard {
     join: Option<ServerJoin>,
 }
 
+/// The shards as the rebalancer addresses them (cheap clones of the
+/// server sender + load gauge).
+fn handles_of(shards: &[Shard]) -> Vec<ShardHandle> {
+    shards
+        .iter()
+        .map(|s| ShardHandle { server: s.server.clone(), load: s.load.clone() })
+        .collect()
+}
+
 /// Keys the router remembers for affinity placement; beyond this the
 /// oldest mapping is evicted (plenty for real workloads — distinct specs
 /// in flight at once are few).
 const AFFINITY_CAP: usize = 64;
-
-/// Minimum queue depth on the donor before a steal pass is worth the
-/// disruption to admission grouping (a 1-deep queue admits next boundary
-/// anyway).
-const STEAL_MIN_QUEUE: usize = 2;
 
 /// Submits skipped after a fruitless gauge-triggered rebalance before the
 /// gauges are consulted again (each stats pass blocks on every shard's
@@ -172,20 +209,28 @@ const STEAL_COOLDOWN: usize = 32;
 /// request to a shard (spec affinity, then least-loaded) and exposes the
 /// same request surface as a single [`Server`].
 pub struct Router {
+    // field order is drop order: the background rebalancer joins first
+    // (its thread holds server-sender clones), and only then can each
+    // `Shard`'s join-on-drop observe its server thread exiting
+    /// background cadence loop (`None` for manual policies, fixed mode,
+    /// or a single shard)
+    rebalancer: Option<RebalancerGuard>,
     shards: Vec<Shard>,
     /// recently routed keys, oldest first (evicted at `AFFINITY_CAP`)
     affinity: Mutex<Vec<(SpecKey, usize)>>,
     /// round-robin cursor for load ties
     rr: AtomicUsize,
     default_cfg: SamplerConfig,
-    /// shards run the continuous scheduler (work stealing requires the
+    /// shards run the continuous scheduler (rebalancing requires the
     /// boundary-granular queue; fixed shards neither donate nor steal)
     continuous: bool,
+    /// thresholds shared by all three rebalance triggers
+    rebalance_policy: RebalancePolicy,
     /// Submits to skip before the next gauge-triggered rebalance attempt.
     /// The load gauges count in-flight + queued, so an in-flight-only
-    /// imbalance (nothing stealable) would otherwise pay the blocking
+    /// imbalance with nothing movable would otherwise pay the blocking
     /// stats round-trip on *every* submit; a fruitless pass arms this
-    /// cooldown, a successful steal clears it.
+    /// cooldown.
     steal_cooldown: AtomicUsize,
 }
 
@@ -278,59 +323,29 @@ impl Router {
             min = min.min(l);
             max = max.max(l);
         }
-        min == 0 && max >= STEAL_MIN_QUEUE + 1
+        min == 0 && max >= self.rebalance_policy.min_queue + 1
     }
 
-    /// One cross-shard work-stealing pass: the shard with the deepest
-    /// queue donates up to half of it (one same-`SpecKey` run, so the
-    /// thief can batch it into a single shared-𝒯 lane) to the
-    /// least-loaded idle shard. The donor pops the requests between two
-    /// denoiser calls — boundary granularity — and forwards them with
-    /// sinks, deadlines, priorities, enqueue times, and load accounting
-    /// intact. No-op with one shard, in fixed mode, or when no shard has
-    /// at least [`STEAL_MIN_QUEUE`] queued requests next to an idle
-    /// shard. The steal itself is asynchronous; this returns once the
-    /// donor has been asked.
+    /// One rebalance pass, shared by all three triggers (background
+    /// cadence, gauge-triggered submit pass, and this direct call):
+    /// snapshot every shard, let [`rebalancer::plan`] pick at most one
+    /// action, dispatch it. Stage 1 moves up to half of the deepest
+    /// queue (one same-`SpecKey` run, so the idle thief can batch it
+    /// into a single shared-𝒯 lane); stage 2 donates one whole
+    /// **in-flight** lane at the donor's next boundary, resumed
+    /// mid-schedule by the thief (see `docs/rebalancing.md` for the cost
+    /// model and the refusal table). Everything moved keeps its sinks,
+    /// deadlines, priorities, enqueue times, and load accounting. No-op
+    /// with one shard or in fixed mode; the movement itself is
+    /// asynchronous — this returns once the donor has been asked.
     pub fn rebalance(&self) -> Result<()> {
         if self.shards.len() < 2 || !self.continuous {
             return Ok(());
         }
-        let stats = self.shard_stats()?;
-        let queued: Vec<u64> = stats
-            .iter()
-            .map(|s| s.queued_low + s.queued_normal + s.queued_high)
-            .collect();
-        let donor = (0..queued.len())
-            .max_by_key(|&i| queued[i])
-            .expect("at least two shards");
-        if queued[donor] < STEAL_MIN_QUEUE as u64 {
-            // nothing stealable (the gauges saw in-flight work, not
-            // queues): back off so submits stop paying the stats pass
-            self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
-            return Ok(());
-        }
-        let loads: Vec<usize> =
-            self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
-        let thief = (0..self.shards.len())
-            .filter(|&i| i != donor)
-            .min_by_key(|&i| loads[i])
-            .expect("at least two shards");
-        if loads[thief] != 0 {
-            // every other shard is busy: stealing would just shuffle the
-            // queue between working shards and break admission grouping
-            self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
-            return Ok(());
-        }
-        let max = queued[donor].div_ceil(2) as usize;
-        self.shards[donor].server.steal_into(
-            max,
-            &self.shards[thief].server,
-            self.shards[thief].load.clone(),
-        );
-        // arm the cooldown after a steal too: the donation is async and
-        // the queues need boundaries to move before another stats pass
-        // can learn anything — without this, a steady imbalance would
-        // put the blocking pass back on the very next submit
+        rebalancer::run_pass(&handles_of(&self.shards), &self.rebalance_policy)?;
+        // arm the cooldown whatever happened: a fruitless pass must not
+        // re-run per submit, and after a move the queues need boundaries
+        // to shift before another stats pass can learn anything
         self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
         Ok(())
     }
@@ -347,8 +362,14 @@ impl Router {
     }
 
     /// Ask every shard to drain and exit. Follow with [`Self::join`] (or
-    /// drop the router) to wait for the threads.
+    /// drop the router) to wait for the threads. Signals the background
+    /// rebalancer to stop first; a pass already in flight is harmless —
+    /// a donor whose handoff reaches an already-exited thief takes the
+    /// work back (re-enqueue / re-adopt) and drains it itself.
     pub fn shutdown(&self) {
+        if let Some(r) = &self.rebalancer {
+            r.stop();
+        }
         for s in &self.shards {
             s.server.shutdown();
         }
@@ -476,7 +497,13 @@ mod tests {
             window: Duration::ZERO,
             shared_tau_groups: true,
         };
-        let router = builder().continuous(narrow).shards(2).start();
+        // manual policy: the background loop would also steal/donate and
+        // make the exact counts below timing-dependent
+        let router = builder()
+            .continuous(narrow)
+            .shards(2)
+            .rebalance(RebalancePolicy::manual())
+            .start();
         // pile work directly onto shard 0 (bypassing placement, like a
         // burst that landed before its neighbour existed); a slow spec
         // keeps the donor busy long enough that the queue is still there

@@ -25,6 +25,13 @@
 //!   they wait until the batch drains and then form their own batch, so a
 //!   mixed-spec workload degrades to separate batches instead of
 //!   corrupting the shared ladder.
+//! * A whole lane can also **move shards** mid-run:
+//!   [`Scheduler::donate_lane`] packs it (live session + members + flat
+//!   src rows) at a boundary into a [`DonatedLane`] and
+//!   [`Scheduler::adopt_lane`] resumes it on another scheduler at the
+//!   exact next event — the predetermined ladder makes the handoff point
+//!   well-defined. See `coordinator::rebalancer` and
+//!   `docs/rebalancing.md` for the policy that drives this.
 //!
 //! The same boundaries carry the request lifecycle
 //! (`coordinator::request`): a [`Pending`] may hold a [`TicketSink`], and
@@ -51,6 +58,7 @@ use crate::schedule::{TransitionOrder, TransitionSpec};
 use crate::tensor::{LogitsBuf, TokenBatch};
 
 use super::engine::{Engine, GenOutput};
+use super::rebalancer::{pick_donation, LaneCost};
 use super::request::{Priority, TicketSink};
 
 /// Admission policy of the continuous scheduler.
@@ -155,6 +163,64 @@ struct Lane<P> {
     /// total events of this lane's session (`nfe_total` in progress
     /// events) — predetermined at admission and unchanged by eviction
     total: usize,
+    /// admission key of this lane's members. Normally equal to the
+    /// scheduler-wide in-flight key, but tracked per lane so a lane can
+    /// be donated to (or adopted from) another shard, where the
+    /// surrounding in-flight key may differ (see [`Scheduler::adopt_lane`]).
+    key: SpecKey,
+}
+
+/// A whole in-flight lane packed for cross-shard donation: the live
+/// [`SamplerSession`] (its `AlgState`, per-row RNG streams, and
+/// event-ladder cursor travel by move — session state is pure host data,
+/// so the handoff is byte-exact by construction), the pre-flattened
+/// source [`TokenBatch`] moved flat, and every member with its lifecycle
+/// sink, deadline, priority accounting, and timestamps intact.
+///
+/// Produced by [`Scheduler::donate_lane`] on the donor **between two
+/// denoiser calls** (the transition-time boundary — the predetermined
+/// event ladder makes the handoff point well-defined for every
+/// `SamplerKind`), shipped over the shard channel, and resumed by
+/// [`Scheduler::adopt_lane`] on the thief, which continues the session
+/// mid-schedule at the exact event the donor would have fired next.
+/// Dropping an undelivered `DonatedLane` is fail-safe: each member's
+/// sink drop-guard fails its ticket, so requests are never silently
+/// lost.
+pub struct DonatedLane<P> {
+    session: SamplerSession,
+    src_ids: Option<TokenBatch>,
+    members: Vec<Member<P>>,
+    total: usize,
+    key: SpecKey,
+}
+
+impl<P> DonatedLane<P> {
+    /// Number of sequences (= live members) travelling in this lane.
+    pub fn width(&self) -> usize {
+        self.session.batch()
+    }
+
+    /// Denoiser calls this lane still needs — the donation cost model's
+    /// currency: `total_events()` minus the event-ladder cursor, known
+    /// exactly because 𝒯 is predetermined.
+    pub fn remaining_events(&self) -> usize {
+        self.total - self.session.nfe()
+    }
+
+    /// Admission key of the lane's members.
+    pub fn key(&self) -> &SpecKey {
+        &self.key
+    }
+
+    /// Re-point every member sink's load gauge at the thief shard
+    /// (exactly-once terminal decrement follows the lane).
+    pub(crate) fn retarget_load(&self, to: &std::sync::Arc<std::sync::atomic::AtomicUsize>) {
+        for m in &self.members {
+            if let Some(ctl) = &m.ctl {
+                ctl.retarget_load(to.clone());
+            }
+        }
+    }
 }
 
 /// Observable lane state (tests, debugging).
@@ -353,6 +419,13 @@ impl<P> Scheduler<P> {
 
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Number of in-flight lanes (co-admitted groups). What the
+    /// rebalancer's donor filter reads: a shard with ≥ 2 lanes (or ≥ 1
+    /// lane plus queued work) can donate one without going idle.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
     }
 
     /// Queued requests per priority class, indexed `[Low, Normal, High]`
@@ -621,6 +694,7 @@ impl<P> Scheduler<P> {
     /// resolve without a lane (bad spec, zero-call specs) go to `out`.
     fn push_lane(&mut self, group: Vec<Pending<P>>, out: &mut Vec<Finished<P>>) {
         let cfg = group[0].cfg.clone().unwrap_or_else(|| self.default_cfg.clone());
+        let key = SpecKey::of(&cfg);
         let width = group.len();
         let seed = group[0].seed;
         let session =
@@ -708,6 +782,80 @@ impl<P> Scheduler<P> {
             members,
             admitted_boundary: self.boundary,
             total,
+            key,
+        });
+    }
+
+    /// Donor side of in-flight lane donation: pack one whole lane for
+    /// another shard and remove it from this scheduler. Must only be
+    /// called between two denoiser calls (the server handles donation
+    /// requests exactly there), so the handoff sits on a transition-time
+    /// boundary: the packed session's next event is precisely the call
+    /// the donor would have made next.
+    ///
+    /// The lane is chosen by the cost model in
+    /// [`rebalancer`](super::rebalancer): the lane with the most
+    /// **remaining** denoiser calls (`total_events()` minus the event
+    /// cursor — exactly known because 𝒯 is predetermined) moves, since it
+    /// transfers the most future work per handoff. Donation is refused
+    /// (`None`) when
+    ///
+    /// * no lane has at least `min_remaining` calls left (near-retirement
+    ///   lanes are not worth the move — they free their slots here in a
+    ///   tick or two anyway), or
+    /// * this scheduler holds exactly one lane and nothing is queued:
+    ///   moving the only in-flight work would just idle the donor and
+    ///   busy the thief (zero-sum), not increase parallelism.
+    pub fn donate_lane(&mut self, min_remaining: usize) -> Option<DonatedLane<P>> {
+        if self.lanes.len() == 1 && self.pending.is_empty() {
+            return None;
+        }
+        let costs: Vec<LaneCost> = self
+            .lanes
+            .iter()
+            .map(|l| LaneCost {
+                remaining: l.total - l.session.nfe(),
+                width: l.session.batch(),
+            })
+            .collect();
+        let i = pick_donation(&costs, min_remaining)?;
+        let lane = self.lanes.remove(i);
+        if self.lanes.is_empty() {
+            self.key = None;
+        }
+        Some(DonatedLane {
+            session: lane.session,
+            src_ids: lane.src_ids,
+            members: lane.members,
+            total: lane.total,
+            key: lane.key,
+        })
+    }
+
+    /// Thief side of lane donation: resume a donated lane mid-schedule.
+    /// The session continues at the exact event the donor would have
+    /// fired next, so survivors are byte-identical to the undonated run
+    /// (pinned per kind by `tests/rebalance.rs`).
+    ///
+    /// Adoption is total — it never refuses. The rebalancer only donates
+    /// to idle shards, so the adopted key normally *becomes* the
+    /// in-flight key; in the race window where a submit landed on the
+    /// thief first, the donated lane coexists with a different in-flight
+    /// key. That is mechanically sound — each lane is its own session and
+    /// the denoiser takes a per-sequence time vector — it only forgoes
+    /// shared-𝒯 amortization for the adopted lane, and queue admission
+    /// keeps matching against the primary key.
+    pub fn adopt_lane(&mut self, lane: DonatedLane<P>) {
+        if self.key.is_none() {
+            self.key = Some(lane.key.clone());
+        }
+        self.lanes.push(Lane {
+            session: lane.session,
+            src_ids: lane.src_ids,
+            members: lane.members,
+            admitted_boundary: self.boundary,
+            total: lane.total,
+            key: lane.key,
         });
     }
 
@@ -955,11 +1103,13 @@ mod tests {
     /// *and* lifecycle event emission all live in buffers reused across
     /// calls (the mock denoiser writes in place, so the whole boundary is
     /// heap-silent). Runs with an active streaming subscriber attached, so
-    /// per-boundary progress emission is covered by the same pin — and
-    /// with a second lane that is cancelled mid-flight, so a tick that
-    /// **narrows** the batch (slot eviction + compaction) is covered too:
-    /// eviction itself works in place, and every tick after the narrow
-    /// must be exactly as heap-silent as before it.
+    /// per-boundary progress emission is covered by the same pin — with a
+    /// second lane member that is cancelled mid-flight, so a tick that
+    /// **narrows** the batch (slot eviction + compaction) is covered too,
+    /// and with a **rebalance** after the narrow: the lane is donated to
+    /// a second scheduler at a boundary and resumed there, and every tick
+    /// after the thief's scratch warms must be exactly as heap-silent as
+    /// on the donor.
     #[test]
     fn steady_state_tick_is_allocation_free() {
         use crate::util::bench::alloc_count::thread_allocs;
@@ -968,19 +1118,20 @@ mod tests {
         let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
         // pick a seed whose *width-2* session (the lane below is a width-2
         // shared-𝒯 group, and 𝒯 depends on the batch size) spans enough
-        // events that, after the admission tick and the narrowing tick,
-        // some ticks still neither admit nor retire
+        // events that, after the admission tick, the narrowing tick, and
+        // the thief's warm-up tick, some ticks still neither admit nor
+        // retire
         let seed = (0..256u64)
             .find(|&s| {
                 let sess =
                     SamplerSession::new(eng.denoiser().config(), &cfg, 2, s).unwrap();
-                sess.total_events() >= 6
+                sess.total_events() >= 7
             })
-            .expect("some seed in 0..256 must give >= 6 events");
+            .expect("some seed in 0..256 must give >= 7 events");
 
         let (mut ticket, sink) = Ticket::detached(true);
         let (victim, victim_sink) = Ticket::detached(false);
-        let mut s: Scheduler<usize> = Scheduler::new(eng, cfg, policy(4));
+        let mut s: Scheduler<usize> = Scheduler::new(eng, cfg.clone(), policy(4));
         let mut p = req(0, seed, None);
         p.ctl = Some(sink);
         s.enqueue(p);
@@ -993,7 +1144,7 @@ mod tests {
         // warms every scratch buffer, including the subscriber's
         // partial-token snapshot
         let first = s.tick();
-        assert!(first.is_empty(), ">= 6 events, so the first tick cannot retire");
+        assert!(first.is_empty(), ">= 7 events, so the first tick cannot retire");
         assert_eq!(s.in_flight(), 2);
         assert_eq!(s.lane_info().len(), 1, "one shared-𝒯 lane");
         victim.cancel();
@@ -1004,19 +1155,42 @@ mod tests {
         assert_eq!(s.in_flight(), 1, "victim's row evicted before the call");
         assert_eq!(s.lane_info()[0].width, 1, "the lane narrowed in place");
 
+        // rebalance at this boundary: donate the narrowed lane to a
+        // second scheduler (the filler request keeps the move from being
+        // zero-sum) and resume it there mid-schedule
+        s.enqueue(req(2, seed, None));
+        let lane = s.donate_lane(1).expect("plenty of events remain");
+        assert_eq!(lane.width(), 1);
+        let mut s2: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(4));
+        s2.adopt_lane(lane);
+        assert_eq!(s2.in_flight(), 1, "the thief resumes the lane");
+        // the donor serves its filler to completion (allocation pin not
+        // re-asserted here — admission/retirement may allocate)
+        while s.has_work() {
+            s.tick();
+        }
+
         let mut steady = 0usize;
         let mut done = Vec::new();
-        while s.has_work() {
+        let mut warmed = false;
+        while s2.has_work() {
             let before = thread_allocs();
-            let out = s.tick();
+            let out = s2.tick();
             let delta = thread_allocs() - before;
             if out.is_empty() {
-                assert_eq!(delta, 0, "steady-state tick() allocated {delta} time(s)");
-                steady += 1;
+                if warmed {
+                    assert_eq!(delta, 0, "steady-state tick() allocated {delta} time(s)");
+                    steady += 1;
+                }
+                // the thief's first call warms its own scratch buffers
+                warmed = true;
             }
             done.extend(out);
         }
-        assert!(steady >= 2, "expected >= 2 steady-state ticks after the narrow, saw {steady}");
+        assert!(
+            steady >= 2,
+            "expected >= 2 steady-state ticks after the rebalance, saw {steady}"
+        );
         assert_eq!(done.len(), 1);
         let out = done[0].result.as_ref().unwrap().output().unwrap();
         // the subscriber observed the full lifecycle, and its final
@@ -1141,6 +1315,66 @@ mod tests {
         let stolen = s.steal_pending(2);
         assert_eq!(stolen.len(), 2);
         assert_eq!(s.pending_len(), 1);
+    }
+
+    #[test]
+    fn donate_lane_refuses_zero_sum_and_near_retirement() {
+        // D3pm makes the event count deterministic (= steps)
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 50);
+        let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(1));
+        assert!(s.donate_lane(1).is_none(), "nothing in flight");
+        s.enqueue(req(0, 7, None));
+        assert!(s.tick().is_empty(), "50 events: far from retirement");
+        // single lane + empty queue: moving the only work is zero-sum
+        assert!(s.donate_lane(1).is_none());
+        // queued work lifts the zero-sum refusal, but an absurd
+        // min_remaining still refuses as near-retirement
+        s.enqueue(req(1, 8, None));
+        assert!(s.donate_lane(1000).is_none());
+        assert!(s.donate_lane(2).is_some(), "49 calls left ≥ 2");
+        while s.has_work() {
+            s.tick();
+        }
+    }
+
+    #[test]
+    fn donated_lane_resumes_on_the_thief_with_accounting_intact() {
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 20);
+        let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), cfg.clone(), policy(2));
+        s.enqueue(req(0, 3, None));
+        s.enqueue(req(1, 4, None)); // same key → one co-admitted width-2 lane
+        assert!(s.tick().is_empty()); // admission + call 1
+        assert!(s.tick().is_empty()); // call 2
+        s.enqueue(req(2, 5, None)); // filler: donation must not be zero-sum
+        let lane = s.donate_lane(2).expect("18 calls remain");
+        assert_eq!(lane.width(), 2);
+        assert_eq!(lane.remaining_events(), 18, "cursor travels with the lane");
+        assert_eq!(s.in_flight(), 0, "donor released the lane's slots");
+
+        let mut t: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(2));
+        t.adopt_lane(lane);
+        assert_eq!(t.in_flight(), 2);
+        assert_eq!(t.lane_count(), 1);
+        let mut done = Vec::new();
+        while t.has_work() {
+            done.extend(t.tick());
+        }
+        assert_eq!(done.len(), 2);
+        for f in &done {
+            assert_eq!(f.outcome, Outcome::Done);
+            assert_eq!(
+                f.result.as_ref().unwrap().nfe(),
+                20,
+                "per-request NFE spans donor + thief calls"
+            );
+        }
+        // the donor admits and serves its filler independently
+        let mut rest = Vec::new();
+        while s.has_work() {
+            rest.extend(s.tick());
+        }
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].outcome, Outcome::Done);
     }
 
     #[test]

@@ -39,7 +39,7 @@ use crate::sampler::SamplerConfig;
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenOutput};
 use super::request::{self, GenRequest, Priority, Ticket, TicketSink};
-use super::scheduler::{Delivery, Outcome, Pending, SchedPolicy, Scheduler};
+use super::scheduler::{Delivery, DonatedLane, Outcome, Pending, SchedPolicy, Scheduler};
 
 /// Where a finished request's result goes.
 enum Reply {
@@ -106,6 +106,14 @@ enum Msg {
     /// A request donated by another shard — served normally, but not
     /// re-counted in `ServerStats::requests` (its submit shard counted it).
     Donated(Request),
+    /// Donor side of in-flight lane donation: at the next boundary, pack
+    /// one lane (chosen by the rebalancer's cost model, refusing lanes
+    /// with fewer than `min_remaining` calls left) and ship it to `to`,
+    /// re-pointing every member sink's load gauge at `to_load`.
+    DonateLaneReq { to: Sender<Msg>, to_load: Arc<AtomicUsize>, min_remaining: usize },
+    /// Thief side: a live lane donated by another shard, resumed
+    /// mid-schedule at its next predetermined event.
+    AdoptLane(DonatedLane<Reply>),
     Stats(Sender<ServerStats>),
     Shutdown,
 }
@@ -147,6 +155,24 @@ pub struct ServerStats {
     /// requests this shard donated to other shards (work stealing,
     /// cumulative)
     pub stolen: u64,
+    /// in-flight lanes (co-admitted groups) at snapshot time — what the
+    /// rebalancer's donor filter reads (instantaneous; continuous only)
+    pub lanes: u64,
+    /// in-flight sequences (sum of lane widths) at snapshot time
+    /// (instantaneous; continuous only)
+    pub in_flight: u64,
+    /// rebalance actions this shard executed as donor (queued-steal
+    /// passes that moved ≥ 1 request + lane donations; cumulative)
+    pub rebalances: u64,
+    /// whole in-flight lanes this shard donated to other shards
+    /// (cumulative; each also counts once in `rebalances`)
+    pub lanes_donated: u64,
+    /// `false` when this shard's engine factory failed: the shard only
+    /// drains and fails requests, so the rebalancer must treat it as
+    /// neither donor nor thief (its zeroed gauges would otherwise make
+    /// it look like an ideal idle shard). Merged stats AND this across
+    /// shards.
+    pub healthy: bool,
 }
 
 impl ServerStats {
@@ -157,6 +183,13 @@ impl ServerStats {
     pub fn merged<I: IntoIterator<Item = ServerStats>>(stats: I) -> ServerStats {
         let mut out = empty_stats();
         let (mut batch_w, mut nfe_w, mut occ_w) = (0.0, 0.0, 0.0);
+        // per-request NFE is recorded by the shard that *retires* a
+        // request, which under lane donation / stealing is not always
+        // the shard that counted it at submit — so the weight for
+        // avg_request_nfe is each shard's retired-request count
+        // (mean_batch × batches = the engine-side tally), not
+        // `requests`
+        let mut retired_w = 0.0;
         for s in stats {
             out.requests += s.requests;
             out.batches += s.batches;
@@ -167,8 +200,15 @@ impl ServerStats {
             out.queued_normal += s.queued_normal;
             out.queued_high += s.queued_high;
             out.stolen += s.stolen;
+            out.lanes += s.lanes;
+            out.in_flight += s.in_flight;
+            out.rebalances += s.rebalances;
+            out.lanes_donated += s.lanes_donated;
+            out.healthy &= s.healthy;
             batch_w += s.mean_batch * s.batches as f64;
-            nfe_w += s.avg_request_nfe * s.requests as f64;
+            let retired = s.mean_batch * s.batches as f64;
+            nfe_w += s.avg_request_nfe * retired;
+            retired_w += retired;
             occ_w += s.occupancy * s.nn_calls as f64;
             out.queue_p95 = out.queue_p95.max(s.queue_p95);
             out.e2e_p50 = out.e2e_p50.max(s.e2e_p50);
@@ -178,8 +218,8 @@ impl ServerStats {
         if out.batches > 0 {
             out.mean_batch = batch_w / out.batches as f64;
         }
-        if out.requests > 0 {
-            out.avg_request_nfe = nfe_w / out.requests as f64;
+        if retired_w > 0.0 {
+            out.avg_request_nfe = nfe_w / retired_w;
         }
         if out.nn_calls > 0 {
             out.occupancy = occ_w / out.nn_calls as f64;
@@ -321,6 +361,23 @@ impl Server {
         let _ = self.tx.send(Msg::Steal { max, to: to.tx.clone(), to_load });
     }
 
+    /// Ask this shard to donate one whole **in-flight** lane to `to` at
+    /// its next transition-time boundary (in-flight lane donation — the
+    /// rebalancer's stage 2). Fire-and-forget like [`Self::steal_into`]:
+    /// the donor packs the lane between two denoiser calls, re-points the
+    /// member sinks' load gauges at `to_load`, and the thief resumes the
+    /// session mid-schedule. The donor refuses (no-op) when no lane has
+    /// at least `min_remaining` calls left or the move would be zero-sum;
+    /// see [`Scheduler::donate_lane`].
+    pub(crate) fn donate_lane_into(
+        &self,
+        to: &Server,
+        to_load: Arc<AtomicUsize>,
+        min_remaining: usize,
+    ) {
+        let _ = self.tx.send(Msg::DonateLaneReq { to: to.tx.clone(), to_load, min_remaining });
+    }
+
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = channel();
         self.tx.send(Msg::Stats(stx)).map_err(|_| anyhow!("server is down"))?;
@@ -361,6 +418,11 @@ struct LoopState {
     deadline_exceeded: u64,
     /// requests donated away via work stealing
     stolen: u64,
+    /// rebalance actions executed as donor (steals that moved work +
+    /// lane donations)
+    rebalances: u64,
+    /// whole in-flight lanes donated away
+    lanes_donated: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
     /// slot capacity, for the occupancy statistic
@@ -376,6 +438,8 @@ impl LoopState {
             cancelled: 0,
             deadline_exceeded: 0,
             stolen: 0,
+            rebalances: 0,
+            lanes_donated: 0,
             queue_lat: LatencyStats::new(),
             e2e_lat: LatencyStats::new(),
             capacity,
@@ -391,10 +455,15 @@ fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error) {
             Msg::Req(r) | Msg::Donated(r) => {
                 r.resolve(Err(anyhow!("engine init failed")), Outcome::Failed)
             }
-            Msg::Steal { .. } => {} // nothing queued here to donate
+            Msg::Steal { .. } | Msg::DonateLaneReq { .. } => {} // nothing here to donate
+            // dropping the lane fires every member sink's drop guard
+            // (tickets fail, gauges decrement) — never silently lost
+            Msg::AdoptLane(lane) => drop(lane),
             Msg::Shutdown => break,
             Msg::Stats(s) => {
-                let _ = s.send(empty_stats());
+                // healthy: false keeps the rebalancer from ever picking
+                // this shard as a thief (its zeroed gauges look idle)
+                let _ = s.send(ServerStats { healthy: false, ..empty_stats() });
             }
         }
     }
@@ -453,10 +522,17 @@ where
             // a donated request was already counted by its submit shard
             Some(Msg::Donated(r)) => batcher.push(r),
             // fixed batches are FIFO with no spec keys — this mode never
-            // donates (the router only steals between continuous shards)
-            Some(Msg::Steal { .. }) => continue,
+            // donates (the router only rebalances between continuous
+            // shards)
+            Some(Msg::Steal { .. }) | Some(Msg::DonateLaneReq { .. }) => continue,
+            // unreachable via the router (donation is continuous-only);
+            // dropping the lane fail-safes its tickets and load gauges
+            Some(Msg::AdoptLane(lane)) => {
+                drop(lane);
+                continue;
+            }
             Some(Msg::Stats(s)) => {
-                let _ = s.send(snapshot(&st, &engine, [0, batcher.len(), 0]));
+                let _ = s.send(snapshot(&st, &engine, [0, batcher.len(), 0], 0, 0));
                 continue;
             }
             Some(Msg::Shutdown) => {
@@ -607,18 +683,21 @@ fn serve_continuous_loop<F>(
             }
         } else if !sched.has_work() {
             if draining {
-                break;
-            }
-            match rx.recv() {
-                Ok(m) => {
-                    if handle_msg(m, &mut sched, &mut st) {
-                        draining = true;
-                        if !sched.has_work() {
-                            break;
+                if !drain_residual(&rx, &mut sched, &mut st) {
+                    break;
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => {
+                        if handle_msg(m, &mut sched, &mut st) {
+                            draining = true;
+                            if !drain_residual(&rx, &mut sched, &mut st) {
+                                break;
+                            }
                         }
                     }
+                    Err(_) => break,
                 }
-                Err(_) => break,
             }
         }
 
@@ -643,10 +722,30 @@ fn serve_continuous_loop<F>(
                 let _ = tx.send(f.result.and_then(Delivery::into_output));
             }
         }
-        if draining && !sched.has_work() {
+        if draining && !sched.has_work() && !drain_residual(&rx, &mut sched, &mut st) {
             break 'outer;
         }
     }
+}
+
+/// Final drain before a shutting-down shard exits: a rebalance pass
+/// racing the shutdown may have parked work behind the `Shutdown`
+/// message (a donated lane, stolen requests), and dropping the
+/// `Receiver` would fail it. Handle everything already queued and
+/// report whether any of it is (or produced) servable work — if so, the
+/// caller keeps draining instead of exiting. Together with the donor
+/// taking back work whose handoff send fails, this keeps graceful
+/// shutdown from failing requests that rebalancing happened to be
+/// moving.
+fn drain_residual(
+    rx: &Receiver<Msg>,
+    sched: &mut Scheduler<Reply>,
+    st: &mut LoopState,
+) -> bool {
+    while let Ok(m) = rx.try_recv() {
+        handle_msg(m, sched, st);
+    }
+    sched.has_work()
 }
 
 /// Returns true when the message requests shutdown.
@@ -670,15 +769,63 @@ fn handle_msg(
             // donor side of work stealing, between two denoiser calls:
             // pop a same-key run off the queue tail and forward it with
             // sinks/deadlines intact, re-pointing each load gauge at the
-            // thief. If the thief is gone, the drop guards fail the
-            // tickets rather than losing the requests silently.
+            // thief. If the thief exited (a rebalance pass racing
+            // shutdown), the failed send returns the request and the
+            // donor re-enqueues it — live work is never failed by a
+            // handoff to a dead shard. (The re-taken request keeps the
+            // thief's gauge; it was incremented at retarget and still
+            // decrements exactly once at terminal, so the books balance.)
+            let mut moved = false;
             for p in sched.steal_pending(max) {
                 if let Some(ctl) = &p.ctl {
                     ctl.retarget_load(to_load.clone());
                 }
-                st.stolen += 1;
-                let _ = to.send(Msg::Donated(pending_to_request(p)));
+                match to.send(Msg::Donated(pending_to_request(p))) {
+                    Ok(()) => {
+                        st.stolen += 1;
+                        moved = true;
+                    }
+                    Err(e) => {
+                        let Msg::Donated(r) = e.0 else { unreachable!("sent Donated") };
+                        sched.enqueue(request_to_pending(r));
+                    }
+                }
             }
+            if moved {
+                st.rebalances += 1;
+            }
+            false
+        }
+        Msg::DonateLaneReq { to, to_load, min_remaining } => {
+            // donor side of lane donation. handle_msg runs between two
+            // denoiser calls, so the pack happens exactly at a
+            // transition-time boundary: the lane's next predetermined
+            // event is where the thief resumes. Refusals (near-retirement
+            // lanes, zero-sum moves) are decided by the scheduler.
+            if let Some(lane) = sched.donate_lane(min_remaining) {
+                lane.retarget_load(&to_load);
+                match to.send(Msg::AdoptLane(lane)) {
+                    Ok(()) => {
+                        st.rebalances += 1;
+                        st.lanes_donated += 1;
+                    }
+                    Err(e) => {
+                        // thief exited (shutdown race): resume the lane
+                        // right here — byte-exact either way, and no
+                        // member ticket is failed by the dead handoff
+                        let Msg::AdoptLane(lane) = e.0 else {
+                            unreachable!("sent AdoptLane")
+                        };
+                        sched.adopt_lane(lane);
+                    }
+                }
+            }
+            false
+        }
+        Msg::AdoptLane(lane) => {
+            // thief side: resume the donated session mid-schedule; its
+            // members were counted by their submit shard already
+            sched.adopt_lane(lane);
             false
         }
         Msg::Stats(s) => {
@@ -686,7 +833,13 @@ fn handle_msg(
             st.batches = sched.engine().nfe.batches();
             st.batch_sizes = sched.engine().nfe.requests();
             let depths = sched.queue_depths();
-            let _ = s.send(snapshot(st, sched.engine(), depths));
+            let _ = s.send(snapshot(
+                st,
+                sched.engine(),
+                depths,
+                sched.lane_count(),
+                sched.in_flight(),
+            ));
             false
         }
         Msg::Shutdown => {
@@ -728,7 +881,13 @@ fn pending_to_request(p: Pending<Reply>) -> Request {
     }
 }
 
-fn snapshot(st: &LoopState, engine: &Engine, queue_depths: [usize; 3]) -> ServerStats {
+fn snapshot(
+    st: &LoopState,
+    engine: &Engine,
+    queue_depths: [usize; 3],
+    lanes: usize,
+    in_flight: usize,
+) -> ServerStats {
     ServerStats {
         requests: st.requests,
         batches: st.batches,
@@ -750,6 +909,11 @@ fn snapshot(st: &LoopState, engine: &Engine, queue_depths: [usize; 3]) -> Server
         queued_normal: queue_depths[1] as u64,
         queued_high: queue_depths[2] as u64,
         stolen: st.stolen,
+        lanes: lanes as u64,
+        in_flight: in_flight as u64,
+        rebalances: st.rebalances,
+        lanes_donated: st.lanes_donated,
+        healthy: true,
     }
 }
 
@@ -771,6 +935,11 @@ fn empty_stats() -> ServerStats {
         queued_normal: 0,
         queued_high: 0,
         stolen: 0,
+        lanes: 0,
+        in_flight: 0,
+        rebalances: 0,
+        lanes_donated: 0,
+        healthy: true,
     }
 }
 

@@ -19,6 +19,29 @@
 //! Python never runs on the request path: after `make artifacts` the rust
 //! binary is self-contained.
 //!
+//! ## The serving stack
+//!
+//! ```text
+//!  GenRequest ──▶ Router (ServeBuilder) ── spec-affinity / least-loaded ──┐
+//!      │              │                                                   │
+//!   Ticket ◀── events │ rebalancer: background cadence loop               │
+//!  (Admitted/         │   steal queued runs / donate in-flight lanes      │
+//!   Progress/Done)    ▼   between shards at 𝒯-boundaries                  ▼
+//!               ┌─ shard 0 ─────────────┐   DonateLane    ┌─ shard 1 ──────┐
+//!               │ Server (engine thread)│ ◀═════════════▶ │ Server …       │
+//!               │   └ Scheduler         │                 │   └ Scheduler  │
+//!               │      lanes ⇆ queue    │                 │                │
+//!               │      └ SamplerSession │                 │                │
+//!               │         └ Denoiser ───┼── PJRT / mock   │                │
+//!               └───────────────────────┘                 └────────────────┘
+//! ```
+//!
+//! Every arrow that crosses into a scheduler lands on a **transition-time
+//! boundary**: admission, retirement, cancellation, progress emission,
+//! and cross-shard movement all happen between two denoiser calls, which
+//! the paper's predetermined 𝒯 makes exact (see `docs/serving.md` and
+//! `docs/rebalancing.md`; the repo-level map is in the root README).
+//!
 //! ## Quick tour
 //!
 //! Serving goes through one builder: [`coordinator::ServeBuilder`] starts

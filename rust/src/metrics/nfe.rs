@@ -9,6 +9,18 @@
 //! retired request records its own NFE (= |𝒯| of its session) and its
 //! queue wait, and every call records the in-flight width so occupancy
 //! (mean width / capacity) is observable.
+//!
+//! One counter lives per engine (= per shard), and in-flight lane
+//! donation (`coordinator::rebalancer`) can split a request's life
+//! across two of them: *calls* land on whichever engine executed them,
+//! while the *per-request* records (`record_request`, `record_batch`)
+//! land on the engine that retired the lane — with the request's **full**
+//! NFE, donor-side calls included, since that is what the request cost
+//! end to end. Per-shard `avg_request_nfe` can therefore disagree with
+//! that shard's own `nn_calls` under donation; the router-level merge
+//! weighs each shard's average by its *retired*-request count (not its
+//! submit count), so the merged figure is the true per-request mean
+//! across the fleet, and total calls remain conserved across shards.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

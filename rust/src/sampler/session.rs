@@ -36,6 +36,14 @@
 //! leaving every survivor byte-identical, because each row samples from
 //! its own forked RNG stream (see the `Core` docs).
 //!
+//! And sessions can **move**: a `SamplerSession` is `Send` (its state is
+//! pure host data — tokens, RNG streams, the predetermined event ladder
+//! and its cursor), so the serving layer can hand a live session to
+//! another engine thread at an NFE boundary and resume it there with the
+//! exact bytes it would have produced in place. The coordinator's lane
+//! donation (`coordinator::rebalancer`, `docs/rebalancing.md`) is built
+//! on this.
+//!
 //! [`generate`]: super::generate
 
 use anyhow::{bail, Result};
@@ -114,7 +122,16 @@ impl Core {
 
 /// One sampling algorithm's private state. Implementations live next to
 /// the algorithms they refactor (`dndm.rs`, `baselines.rs`, …).
-pub(crate) trait AlgState {
+///
+/// `Send` is a supertrait by design: every implementation is plain host
+/// data (token buffers, RNG streams, the predetermined event ladder and
+/// its cursor), so a whole [`SamplerSession`] can be *moved* between
+/// engine threads at an NFE boundary. That is what lets the coordinator
+/// donate an in-flight lane to another shard
+/// (`coordinator::rebalancer`) with byte-exact resumption — unlike the
+/// PJRT handles, which stay pinned to their thread, session state is
+/// pure data and travels freely.
+pub(crate) trait AlgState: Send {
     /// `(t_for_denoiser, exact_event_time)` of the next call, or `None`
     /// when sampling is complete.
     fn next_t(&self, core: &Core) -> Option<(f32, f64)>;
@@ -486,6 +503,14 @@ mod tests {
             );
             assert_eq!(sess.nfe(), total, "{}: total is stable over the run", sk.name());
         }
+    }
+
+    #[test]
+    fn sessions_are_send() {
+        // the static guarantee lane donation rests on: a live session can
+        // move to another engine thread (compile-time check)
+        fn assert_send<T: Send>() {}
+        assert_send::<SamplerSession>();
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //! Ownership rules (see `docs/perf.md`): buffers live with the outermost
 //! loop — the scheduler's `StepScratch`, `session::drive`'s locals — and
 //! everything below them borrows.
+//!
+//! Because the storage is flat and owned, these buffers also *move*
+//! cheaply: when the rebalancer donates an in-flight lane to another
+//! shard (`coordinator::rebalancer`, `docs/rebalancing.md`), the lane's
+//! token state and pre-flattened source rows travel as whole
+//! [`TokenBatch`]es — one pointer move each, no per-row repacking on
+//! either side of the handoff.
 
 /// A `[B, N]` batch of token ids in one contiguous allocation.
 ///

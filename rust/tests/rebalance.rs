@@ -1,0 +1,324 @@
+//! Rebalancing acceptance suite — the pin for in-flight lane donation:
+//! a lane donated between shards at a transition-time boundary must
+//! produce **byte-identical** tokens to the undonated run, for every
+//! `SamplerKind`.
+//!
+//! Three layers, mirroring `tests/narrowing.rs`:
+//!
+//! * scheduler level — for every kind, a width-3 lane donated after its
+//!   first denoiser call and resumed on a second scheduler finishes with
+//!   exactly the undonated run's bytes (the live session moves whole:
+//!   `AlgState`, per-row RNG streams, event-ladder cursor), plus the
+//!   donor-side refusal paths and the mixed-key adoption race;
+//! * router level — `Router::rebalance()` donates an in-flight lane to
+//!   an idle shard when queues are too shallow to steal, with calls
+//!   conserved across shards and `lanes_donated`/`rebalances` accounted;
+//! * cadence level — the background loop donates during a traffic lull
+//!   with **no** submit to trigger it.
+
+use std::time::Duration;
+
+use dndm::coordinator::{
+    cipher_mock_engine, Engine, GenRequest, Outcome, Pending, RebalancePolicy, SchedPolicy,
+    Scheduler, ServeBuilder,
+};
+use dndm::data::words;
+use dndm::runtime::{Denoiser, MockDenoiser};
+use dndm::sampler::{SamplerConfig, SamplerKind, SamplerSession};
+
+/// Every sampler with a noise family it supports — same map as
+/// determinism.rs / narrowing.rs.
+const ALL_KINDS: [(SamplerKind, &str); 10] = [
+    (SamplerKind::Dndm, "absorbing"),
+    (SamplerKind::DndmV2, "absorbing"),
+    (SamplerKind::DndmTopK, "absorbing"),
+    (SamplerKind::DndmC, "absorbing"),
+    (SamplerKind::D3pm, "absorbing"),
+    (SamplerKind::Rdm, "absorbing"),
+    (SamplerKind::RdmTopK, "multinomial"),
+    (SamplerKind::MaskPredict, "absorbing"),
+    (SamplerKind::Ddim, "multinomial"),
+    (SamplerKind::Ardm, "absorbing"),
+];
+
+const SRCS: [&str; 3] = [
+    "the quick fox crosses a river",
+    "a small garden by the road",
+    "this old road to the river",
+];
+
+fn engine(noise: &'static str) -> Engine {
+    if noise == "absorbing" {
+        return cipher_mock_engine(8);
+    }
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), 8, 0, "multinomial");
+    let mut den = MockDenoiser::fixed(cfg, vec![44, 45, 46, 47, 48, 49, 50, 51]);
+    den.peak = 14.0;
+    Engine::from_denoiser(Box::new(den), vocab, "multinomial-mock")
+}
+
+fn policy() -> SchedPolicy {
+    SchedPolicy { max_batch: 4, window: Duration::ZERO, shared_tau_groups: true }
+}
+
+fn req(id: usize, noise: &str, seed: u64) -> Pending<usize> {
+    let src = (noise == "absorbing").then(|| SRCS[id % SRCS.len()].to_string());
+    Pending::new(src, seed, None, id)
+}
+
+/// First seed whose width-3 session spans at least 3 events, so a
+/// donation after the first call hands over a lane that is still flying.
+fn lane_seed(eng: &Engine, cfg: &SamplerConfig) -> u64 {
+    (0..64u64)
+        .find(|&s| {
+            SamplerSession::new(eng.denoiser().config(), cfg, 3, s)
+                .map(|sess| sess.total_events() >= 3)
+                .unwrap_or(false)
+        })
+        .expect("some seed in 0..64 must give >= 3 events")
+}
+
+type Resolved = (usize, Outcome, Option<Vec<u32>>);
+
+fn collect(fs: Vec<dndm::coordinator::Finished<usize>>) -> Vec<Resolved> {
+    fs.into_iter()
+        .map(|f| {
+            let tokens = f
+                .result
+                .as_ref()
+                .ok()
+                .and_then(|d| d.output())
+                .map(|o| o.tokens.clone());
+            (f.payload, f.outcome, tokens)
+        })
+        .collect()
+}
+
+fn drain(s: &mut Scheduler<usize>) -> Vec<Resolved> {
+    let mut out = Vec::new();
+    while s.has_work() {
+        out.extend(collect(s.tick()));
+    }
+    out
+}
+
+fn tokens_of(rows: &[Resolved], id: usize, label: &str) -> Vec<u32> {
+    rows.iter()
+        .find(|(p, _, _)| *p == id)
+        .and_then(|(_, _, t)| t.clone())
+        .unwrap_or_else(|| panic!("{label}: request {id} must finish with tokens"))
+}
+
+// ---------------------------------------------------------------------------
+// scheduler level
+// ---------------------------------------------------------------------------
+
+/// The acceptance pin: for every kind, a width-3 lane donated at the
+/// boundary after its first call and resumed on a *different* scheduler
+/// produces byte-identical tokens to the run that never moved. The
+/// session state (algorithm state, per-row RNG streams, event-ladder
+/// cursor) travels by move, so the thief's next call is exactly the call
+/// the donor would have made.
+#[test]
+fn donated_lane_resumes_byte_identical_for_every_kind() {
+    for (sk, noise) in ALL_KINDS {
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+        let probe = engine(noise);
+        let seed = lane_seed(&probe, &cfg);
+
+        // reference: the lane never moves
+        let mut r: Scheduler<usize> = Scheduler::new(engine(noise), cfg.clone(), policy());
+        for id in 0..3 {
+            r.enqueue(req(id, noise, seed));
+        }
+        let full = drain(&mut r);
+        let want: Vec<Vec<u32>> =
+            (0..3).map(|id| tokens_of(&full, id, sk.name())).collect();
+
+        // donated run: one call on the donor, then the lane moves
+        let mut donor: Scheduler<usize> =
+            Scheduler::new(engine(noise), cfg.clone(), policy());
+        for id in 0..3 {
+            donor.enqueue(req(id, noise, seed));
+        }
+        let first = donor.tick();
+        assert!(first.is_empty(), "{}: lane must outlive the first call", sk.name());
+        // a queued filler keeps the donation from being zero-sum
+        donor.enqueue(req(9, noise, seed));
+        let lane = donor
+            .donate_lane(1)
+            .unwrap_or_else(|| panic!("{}: donation refused", sk.name()));
+        assert_eq!(lane.width(), 3, "{}", sk.name());
+        assert!(lane.remaining_events() >= 1, "{}", sk.name());
+        assert_eq!(donor.in_flight(), 0, "{}: donor released the slots", sk.name());
+
+        let mut thief: Scheduler<usize> =
+            Scheduler::new(engine(noise), cfg.clone(), policy());
+        thief.adopt_lane(lane);
+        assert_eq!(thief.in_flight(), 3, "{}", sk.name());
+        let done = drain(&mut thief);
+        for id in 0..3 {
+            assert_eq!(
+                tokens_of(&done, id, sk.name()),
+                want[id],
+                "{}: request {id} must be byte-identical after donation",
+                sk.name()
+            );
+        }
+
+        // the donor admits and serves its filler independently
+        let rest = drain(&mut donor);
+        assert!(
+            rest.iter().any(|(p, o, t)| *p == 9 && *o == Outcome::Done && t.is_some()),
+            "{}: the filler completes on the donor",
+            sk.name()
+        );
+    }
+}
+
+/// The adoption race: the rebalancer only donates to idle shards, but a
+/// submit can land on the thief first. Adoption is total — the donated
+/// lane coexists with a different in-flight key, each lane advances its
+/// own session at its own event time, and *both* finish byte-identical
+/// to their solo runs.
+#[test]
+fn adoption_next_to_a_different_key_lane_stays_byte_exact() {
+    let cfg_a = SamplerConfig::new(SamplerKind::Dndm, 25).with_temperature(1.0);
+    let cfg_b = SamplerConfig::new(SamplerKind::D3pm, 10).with_temperature(1.0);
+    let seed_a = lane_seed(&cipher_mock_engine(8), &cfg_a);
+
+    // solo references for both lanes
+    let mut ra: Scheduler<usize> = Scheduler::new(cipher_mock_engine(8), cfg_a.clone(), policy());
+    for id in 0..3 {
+        ra.enqueue(req(id, "absorbing", seed_a));
+    }
+    let full_a = drain(&mut ra);
+    let mut rb: Scheduler<usize> = Scheduler::new(cipher_mock_engine(8), cfg_b.clone(), policy());
+    rb.enqueue(req(100, "absorbing", 5));
+    let full_b = drain(&mut rb);
+
+    // donor: one call, then donate lane A
+    let mut donor: Scheduler<usize> =
+        Scheduler::new(cipher_mock_engine(8), cfg_a.clone(), policy());
+    for id in 0..3 {
+        donor.enqueue(req(id, "absorbing", seed_a));
+    }
+    assert!(donor.tick().is_empty());
+    donor.enqueue(req(9, "absorbing", seed_a));
+    let lane = donor.donate_lane(1).expect("lane A still flying");
+
+    // thief: already serving a D3pm lane (different SpecKey) when the
+    // donation lands
+    let mut thief: Scheduler<usize> =
+        Scheduler::new(cipher_mock_engine(8), cfg_b.clone(), policy());
+    thief.enqueue(req(100, "absorbing", 5));
+    assert!(thief.tick().is_empty(), "10 D3pm steps: still flying");
+    thief.adopt_lane(lane);
+    assert_eq!(thief.in_flight(), 4, "both lanes coexist");
+
+    let done = drain(&mut thief);
+    for id in 0..3 {
+        assert_eq!(
+            tokens_of(&done, id, "mixed"),
+            tokens_of(&full_a, id, "mixed-ref"),
+            "donated lane member {id} unchanged by the foreign neighbour"
+        );
+    }
+    assert_eq!(
+        tokens_of(&done, 100, "mixed"),
+        tokens_of(&full_b, 100, "mixed-ref"),
+        "the thief's own lane unchanged by the adoption"
+    );
+    drain(&mut donor);
+}
+
+// ---------------------------------------------------------------------------
+// router level
+// ---------------------------------------------------------------------------
+
+fn slow_cfg(steps: usize) -> SamplerConfig {
+    // D3pm marches every step: the event count is exactly `steps`, so
+    // the lane is predictably long-lived
+    SamplerConfig::new(SamplerKind::D3pm, steps)
+}
+
+/// Stage 2 through the serving stack: with one in-flight lane and a
+/// 1-deep queue (below `min_queue`, so stealing has nothing to take),
+/// `Router::rebalance()` donates the lane to the idle shard; the thief
+/// resumes it and the freed capacity admits the queued request. Calls
+/// are conserved and the donation is accounted.
+#[test]
+fn manual_rebalance_donates_an_in_flight_lane_to_an_idle_shard() {
+    let narrow = SchedPolicy { max_batch: 1, window: Duration::ZERO, shared_tau_groups: true };
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+    )
+    .continuous(narrow)
+    .shards(2)
+    .rebalance(RebalancePolicy::manual())
+    .start();
+    let mut tickets = Vec::new();
+    for i in 0..2 {
+        let req = GenRequest::new(i).src("the quick fox").config(slow_cfg(20_000));
+        tickets.push(router.shard(0).submit_request(req).unwrap());
+    }
+    // shard 0: one lane in flight + one queued; shard 1 idle
+    router.rebalance().unwrap();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let per_shard = router.shard_stats().unwrap();
+    assert_eq!(per_shard[0].lanes_donated, 1, "the in-flight lane moved: {per_shard:?}");
+    assert!(per_shard[0].rebalances >= 1);
+    assert_eq!(per_shard[0].stolen, 0, "1-deep queue is below min_queue");
+    assert!(per_shard[1].nn_calls >= 1, "thief resumed the donated lane");
+    // nothing lost, nothing double-served: 2 requests × 20_000 calls,
+    // split across the shards at the donation boundary
+    assert_eq!(per_shard[0].nn_calls + per_shard[1].nn_calls, 2 * 20_000);
+    let merged = router.stats().unwrap();
+    assert_eq!(merged.lanes_donated, 1);
+    assert_eq!(merged.requests, 2);
+    assert_eq!(merged.queued_low + merged.queued_normal + merged.queued_high, 0);
+    router.shutdown();
+    router.join();
+}
+
+/// The tentpole trigger: during a traffic lull — no submits, so neither
+/// placement nor the gauge-triggered pass can act — the background
+/// cadence loop alone must notice the skew and donate the in-flight
+/// lane.
+#[test]
+fn background_rebalancer_donates_during_a_traffic_lull() {
+    let narrow = SchedPolicy { max_batch: 1, window: Duration::ZERO, shared_tau_groups: true };
+    let policy = RebalancePolicy {
+        interval: Some(Duration::from_millis(5)),
+        ..RebalancePolicy::default()
+    };
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+    )
+    .continuous(narrow)
+    .shards(2)
+    .rebalance(policy)
+    .start();
+    // direct shard submits: the router's submit path (and its
+    // gauge-triggered rebalance) is never involved
+    let mut tickets = Vec::new();
+    for i in 0..2 {
+        let req = GenRequest::new(i).src("the quick fox").config(slow_cfg(40_000));
+        tickets.push(router.shard(0).submit_request(req).unwrap());
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let merged = router.stats().unwrap();
+    assert!(
+        merged.lanes_donated >= 1,
+        "the cadence loop must donate without any submit trigger: {merged:?}"
+    );
+    router.shutdown();
+    router.join();
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Check that relative markdown links resolve to real files.
+
+Usage: check_doc_links.py FILE_OR_DIR [FILE_OR_DIR ...]
+
+Scans every given markdown file (directories are scanned for *.md,
+recursively) for inline links/images `[text](target)` and reference
+definitions `[label]: target`, and verifies that each relative target —
+after stripping any #fragment — exists on disk, resolved against the
+containing file's directory. External links (http/https/mailto),
+pure-fragment links (#section), and absolute paths are skipped: CI has
+no network, and the repo pins only its own cross-file structure.
+
+Exit status: 0 when every link resolves, 1 otherwise (each broken link
+is listed as file:line: target).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline [text](target) / ![alt](target); target ends at the first
+# unescaped ')' — markdown in this repo uses no nested parens in URLs
+INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# reference definitions: [label]: target
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#", "/")
+
+
+def md_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        else:
+            files.append(p)
+    return files
+
+
+def targets_in(line: str) -> list[str]:
+    found = [m.group(1) for m in INLINE.finditer(line)]
+    m = REFDEF.match(line)
+    if m:
+        found.append(m.group(1))
+    return found
+
+
+def strip_code_spans(line: str) -> str:
+    # `…` spans may contain link-shaped rust code (e.g. vec![x](y) never
+    # happens, but doc text quotes markdown syntax itself)
+    return re.sub(r"`[^`]*`", "`code`", line)
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__, file=sys.stderr)
+        return 2
+    broken: list[str] = []
+    checked = 0
+    for f in md_files(argv):
+        if not f.exists():
+            broken.append(f"{f}: file not found")
+            continue
+        in_fence = False
+        for lineno, line in enumerate(f.read_text(encoding="utf-8").splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in targets_in(strip_code_spans(line)):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                checked += 1
+                if not (f.parent / path).exists():
+                    broken.append(f"{f}:{lineno}: {target}")
+    if broken:
+        print("broken relative links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"doc link check OK ({checked} relative links resolved)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
