@@ -25,7 +25,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use dndm::coordinator::{BatchPolicy, Engine, SchedPolicy, Server};
+use dndm::coordinator::{BatchPolicy, Engine, Event, GenRequest, SchedPolicy, Server};
 use dndm::data::{gen_pairs, Dataset, Split};
 use dndm::exp;
 use dndm::runtime::Artifacts;
@@ -87,6 +87,11 @@ struct Row {
     /// bound; the sequential row (1 request per batch, fewest confounders
     /// per call) is the cleanest trend row for per-NFE churn.
     allocs_per_call: f64,
+    /// denoiser calls where zero rows moved. Per-row event ladders make
+    /// these structurally impossible — eviction retires the departed
+    /// row's unique transition times — so CI hard-gates this at 0 for
+    /// every row (`scripts/check_bench_allocs.py`).
+    ghost_events: u64,
 }
 
 fn factory(use_mock: bool) -> impl FnOnce() -> anyhow::Result<Engine> + Send + 'static {
@@ -156,6 +161,72 @@ fn run(name: &'static str, mode: Mode, n_requests: usize, steps: usize, use_mock
         avg_request_nfe: stats.avg_request_nfe,
         per_nfe_host_us: wall / calls as f64 * 1e6,
         allocs_per_call: allocs as f64 / calls as f64,
+        ghost_events: stats.ghost_events_fired,
+    }
+}
+
+/// The narrowing scenario: continuous serving with per-request 𝒯
+/// (`shared_tau_groups: false`, so rows in one lane carry distinct
+/// ladders), cancelling every other request after its first boundary.
+/// Each cancellation narrows a live lane and retires the departed row's
+/// unique transition times; `ghost_events_fired` must stay 0 — a call
+/// fired at a departed row's τ would surface here, and CI gates on it.
+fn run_narrowing(name: &'static str, n_requests: usize, steps: usize, use_mock: bool) -> Row {
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let (srv, join) = Server::start_continuous(
+        factory(use_mock),
+        cfg,
+        SchedPolicy {
+            max_batch: 16,
+            window: Duration::from_millis(20),
+            shared_tau_groups: false,
+        },
+    );
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut tickets: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| {
+            srv.submit_request(GenRequest::new(i as u64).src(s.join(" "))).unwrap()
+        })
+        .collect();
+    // cancel the odd half as soon as each has consumed one boundary, so
+    // the cancellation lands mid-flight and evicts a live lane row
+    for t in tickets.iter_mut().skip(1).step_by(2) {
+        loop {
+            match t.next_event() {
+                Some(Event::Progress { .. }) => {
+                    t.cancel();
+                    break;
+                }
+                Some(Event::Admitted) => {}
+                _ => break, // already terminal (finished before we got here)
+            }
+        }
+    }
+    for (i, t) in tickets.into_iter().enumerate() {
+        let res = t.wait();
+        if i % 2 == 0 {
+            res.expect("surviving request must finish");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let stats = srv.stats().unwrap();
+    srv.shutdown();
+    join.join();
+    let calls = stats.nn_calls.max(1);
+    Row {
+        name,
+        req_per_s: n_requests as f64 / wall,
+        e2e_p95_ms: stats.e2e_p95.as_secs_f64() * 1e3,
+        nn_calls: stats.nn_calls,
+        avg_request_nfe: stats.avg_request_nfe,
+        per_nfe_host_us: wall / calls as f64 * 1e6,
+        allocs_per_call: allocs as f64 / calls as f64,
+        ghost_events: stats.ghost_events_fired,
     }
 }
 
@@ -186,7 +257,7 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
         json.push_str(&format!(
             "    {{\"policy\": \"{}\", \"req_per_s\": {:.3}, \"e2e_p95_ms\": {:.3}, \
              \"nn_calls\": {}, \"avg_request_nfe\": {:.3}, \"per_nfe_host_us\": {:.3}, \
-             \"allocs_per_call\": {:.1}}}{}\n",
+             \"allocs_per_call\": {:.1}, \"ghost_events_fired\": {}}}{}\n",
             r.name,
             r.req_per_s,
             r.e2e_p95_ms,
@@ -194,6 +265,7 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
             r.avg_request_nfe,
             r.per_nfe_host_us,
             r.allocs_per_call,
+            r.ghost_events,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -242,9 +314,11 @@ fn main() {
     ] {
         rows.push(run(name, mode, n, steps, use_mock));
     }
+    rows.push(run_narrowing("continuous b=16 narrowing", n, steps, use_mock));
 
     let mut out = Table::new(&[
         "policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE", "host µs/NFE", "allocs/call",
+        "ghosts",
     ]);
     for r in &rows {
         out.row(&[
@@ -255,6 +329,7 @@ fn main() {
             if r.avg_request_nfe > 0.0 { format!("{:.2}", r.avg_request_nfe) } else { "-".into() },
             format!("{:.1}", r.per_nfe_host_us),
             format!("{:.1}", r.allocs_per_call),
+            r.ghost_events.to_string(),
         ]);
     }
     println!(

@@ -11,22 +11,31 @@
 //! snapshots every shard, plans at most one corrective action, and
 //! dispatches it.
 //!
-//! Two kinds of movement, in preference order:
+//! Three kinds of movement, in preference order:
 //!
 //! 1. **Queued-request stealing** (PR 4's mechanism): the deepest queue
 //!    donates up to half of one same-`SpecKey` run to an idle shard.
 //!    Cheapest — the requests haven't started, so nothing but queue
 //!    entries move.
-//! 2. **In-flight lane donation** (new): when queues are shallow but a
-//!    shard's *in-flight* work could be split, a whole live lane moves.
-//!    The paper's predetermined transition-time set 𝒯 is what makes this
-//!    possible at all: every lane's remaining denoiser calls are known
-//!    exactly (`total_events()` minus the event cursor), so the donor can
-//!    pack the lane at a transition-time boundary
+//! 2. **In-flight lane donation**: when queues are shallow but a shard
+//!    holds more than one live lane (or a queued request to refill the
+//!    freed capacity), a whole live lane moves. The paper's
+//!    predetermined transition-time set 𝒯 is what makes this possible at
+//!    all: every lane's remaining denoiser calls are known exactly
+//!    (`total_events()` minus the event cursors — exact even after
+//!    narrowing, since per-row ladders re-merge over the survivors), so
+//!    the donor can pack the lane at a transition-time boundary
 //!    ([`Scheduler::donate_lane`] → [`DonatedLane`]) and the thief
 //!    resumes it mid-schedule ([`Scheduler::adopt_lane`]) with survivor
 //!    byte-parity — the handoff point is well-defined for every
-//!    `SamplerKind` because the event ladder never recomputes.
+//!    `SamplerKind` because each row's event ladder is predetermined.
+//! 3. **Lane splitting** (new): when even donation is refused — one wide
+//!    lane is the shard's only work, so moving it whole is zero-sum —
+//!    the back half of its *rows* move instead
+//!    ([`Scheduler::donate_rows`]). Rows carry their own event ladders
+//!    and forked RNG streams, so both halves resume byte-exactly; the
+//!    donor keeps serving the front half, which makes the split strictly
+//!    parallelism-positive whenever the lane has ≥ 2 rows.
 //!
 //! The decision policy is **pure** — [`plan`] maps per-shard
 //! [`ShardView`]s to at most one [`Action`], and [`pick_donation`] is the
@@ -46,7 +55,9 @@
 //!   ([`RebalancePolicy::min_remaining`] — a lane about to free its slots
 //!   anyway is not worth the handoff);
 //! * the donor holds a single lane and an empty queue (moving its only
-//!   work is zero-sum: it idles the donor to busy the thief).
+//!   work is zero-sum: it idles the donor to busy the thief) — unless
+//!   that lane is **wide** (≥ 2 in-flight rows), in which case it splits
+//!   instead of moving whole.
 //!
 //! [`Router`]: super::router::Router
 //! [`Router::place`]: super::router::Router
@@ -118,6 +129,10 @@ pub struct ShardView {
     pub queued: usize,
     /// In-flight lanes (co-admitted groups) on the shard's scheduler.
     pub lanes: usize,
+    /// In-flight sequences (sum of lane widths). `in_flight >= 2` with
+    /// `lanes == 1` is the lane-splitting opportunity: one wide lane
+    /// that whole-lane donation would refuse as zero-sum.
+    pub in_flight: usize,
     /// The router's load gauge: outstanding (submitted, not yet
     /// terminal) requests routed to this shard. `0` means idle — safe to
     /// adopt a lane without mixing spec keys.
@@ -151,6 +166,10 @@ pub enum Action {
     /// Ask `donor` to pack one in-flight lane at its next boundary and
     /// ship it to `thief`, which resumes it mid-schedule.
     DonateLane { donor: usize, thief: usize },
+    /// Ask `donor` to split its widest in-flight lane at its next
+    /// boundary: the back half of the rows ship to `thief`, the front
+    /// half keep serving on `donor`.
+    SplitLane { donor: usize, thief: usize },
 }
 
 /// The decision policy: map shard snapshots to at most one [`Action`].
@@ -195,11 +214,23 @@ pub fn plan(views: &[ShardView], policy: &RebalancePolicy) -> Option<Action> {
     if !policy.donate_lanes {
         return None;
     }
-    let donor = (0..views.len())
+    if let Some(donor) = (0..views.len())
         .filter(|&i| i != thief && views[i].healthy)
         .filter(|&i| views[i].lanes >= 2 || (views[i].lanes >= 1 && views[i].queued >= 1))
+        .max_by_key(|&i| views[i].load)
+    {
+        return Some(Action::DonateLane { donor, thief });
+    }
+
+    // stage 3: lane splitting — the fallback for the shape stage 2 just
+    // refused: a single wide lane with nothing queued. Splitting keeps
+    // the donor serving the front half, so it is never zero-sum; it only
+    // needs a lane with ≥ 2 in-flight rows to carve.
+    let donor = (0..views.len())
+        .filter(|&i| i != thief && views[i].healthy)
+        .filter(|&i| views[i].lanes >= 1 && views[i].in_flight >= 2)
         .max_by_key(|&i| views[i].load)?;
-    Some(Action::DonateLane { donor, thief })
+    Some(Action::SplitLane { donor, thief })
 }
 
 /// The lane-level cost model: which in-flight lane should a donor give
@@ -240,6 +271,7 @@ pub(crate) fn run_pass(
         views.push(ShardView {
             queued: (st.queued_low + st.queued_normal + st.queued_high) as usize,
             lanes: st.lanes as usize,
+            in_flight: st.in_flight as usize,
             load: sh.load.load(Ordering::Relaxed),
             healthy: st.healthy,
         });
@@ -255,6 +287,13 @@ pub(crate) fn run_pass(
         }
         Some(Action::DonateLane { donor, thief }) => {
             shards[donor].server.donate_lane_into(
+                &shards[thief].server,
+                shards[thief].load.clone(),
+                policy.min_remaining,
+            );
+        }
+        Some(Action::SplitLane { donor, thief }) => {
+            shards[donor].server.split_lane_into(
                 &shards[thief].server,
                 shards[thief].load.clone(),
                 policy.min_remaining,
@@ -338,8 +377,10 @@ pub(crate) fn spawn_background(
 mod tests {
     use super::*;
 
+    // in_flight defaults to `lanes` (one width-1 row per lane): the
+    // narrowest possible lanes, which never qualify for splitting
     fn v(queued: usize, lanes: usize, load: usize) -> ShardView {
-        ShardView { queued, lanes, load, healthy: true }
+        ShardView { queued, lanes, in_flight: lanes, load, healthy: true }
     }
 
     fn idle() -> ShardView {
@@ -375,9 +416,27 @@ mod tests {
     }
 
     #[test]
+    fn plan_splits_a_single_wide_lane_instead_of_idling() {
+        let policy = RebalancePolicy::default();
+        // one wide lane, empty queue: whole-lane donation is zero-sum,
+        // but the lane's rows can split across both shards
+        let wide = ShardView { in_flight: 4, load: 4, ..v(0, 1, 0) };
+        assert_eq!(
+            plan(&[wide, idle()], &policy),
+            Some(Action::SplitLane { donor: 0, thief: 1 })
+        );
+        // a width-1 lane has nothing to carve — still refused
+        assert_eq!(plan(&[v(0, 1, 1), idle()], &policy), None);
+        // splitting rides the same knob as donation
+        let off = RebalancePolicy { donate_lanes: false, ..policy };
+        assert_eq!(plan(&[wide, idle()], &off), None);
+    }
+
+    #[test]
     fn plan_refuses_zero_sum_and_busy_thieves() {
         let policy = RebalancePolicy::default();
-        // single lane, empty queue: moving the only work is zero-sum
+        // single *narrow* lane, empty queue: moving the only work is
+        // zero-sum, and a width-1 lane cannot split
         let views = [v(0, 1, 1), idle()];
         assert_eq!(plan(&views, &policy), None);
         // no idle shard: adopting would mix spec keys — refuse

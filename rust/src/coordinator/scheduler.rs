@@ -30,8 +30,12 @@
 //!   src rows) at a boundary into a [`DonatedLane`] and
 //!   [`Scheduler::adopt_lane`] resumes it on another scheduler at the
 //!   exact next event — the predetermined ladder makes the handoff point
-//!   well-defined. See `coordinator::rebalancer` and
-//!   `docs/rebalancing.md` for the policy that drives this.
+//!   well-defined. When a scheduler has only one (wide) lane to give,
+//!   [`Scheduler::donate_rows`] instead **splits** it: the back half of
+//!   the rows move — with their per-row event ladders and RNG streams —
+//!   while the front half keeps serving here. See
+//!   `coordinator::rebalancer` and `docs/rebalancing.md` for the policy
+//!   that drives both movements.
 //!
 //! The same boundaries carry the request lifecycle
 //! (`coordinator::request`): a [`Pending`] may hold a [`TicketSink`], and
@@ -160,14 +164,25 @@ struct Lane<P> {
     src_ids: Option<TokenBatch>,
     members: Vec<Member<P>>,
     admitted_boundary: u64,
-    /// total events of this lane's session (`nfe_total` in progress
-    /// events) — predetermined at admission and unchanged by eviction
-    total: usize,
     /// admission key of this lane's members. Normally equal to the
     /// scheduler-wide in-flight key, but tracked per lane so a lane can
     /// be donated to (or adopted from) another shard, where the
     /// surrounding in-flight key may differ (see [`Scheduler::adopt_lane`]).
     key: SpecKey,
+}
+
+impl<P> Lane<P> {
+    /// Denoiser calls this lane still needs. The session's per-row event
+    /// ladders keep `total_events()` exact across evictions and splits,
+    /// so this never over-values a narrowed lane; the `saturating_sub`
+    /// plus debug assert guard the serving thread against any future
+    /// regression where a stale total could dip below the cursor.
+    fn remaining_events(&self) -> usize {
+        let total = self.session.total_events();
+        let nfe = self.session.nfe();
+        debug_assert!(nfe <= total, "lane nfe {nfe} exceeds total_events {total}");
+        total.saturating_sub(nfe)
+    }
 }
 
 /// A whole in-flight lane packed for cross-shard donation: the live
@@ -190,7 +205,6 @@ pub struct DonatedLane<P> {
     session: SamplerSession,
     src_ids: Option<TokenBatch>,
     members: Vec<Member<P>>,
-    total: usize,
     key: SpecKey,
 }
 
@@ -201,10 +215,14 @@ impl<P> DonatedLane<P> {
     }
 
     /// Denoiser calls this lane still needs — the donation cost model's
-    /// currency: `total_events()` minus the event-ladder cursor, known
-    /// exactly because 𝒯 is predetermined.
+    /// currency: `total_events()` minus the event-ladder cursors, known
+    /// exactly because 𝒯 is predetermined and re-merged over exactly the
+    /// rows travelling in this lane (evictions and splits included).
     pub fn remaining_events(&self) -> usize {
-        self.total - self.session.nfe()
+        let total = self.session.total_events();
+        let nfe = self.session.nfe();
+        debug_assert!(nfe <= total, "donated lane nfe {nfe} exceeds total_events {total}");
+        total.saturating_sub(nfe)
     }
 
     /// Admission key of the lane's members.
@@ -375,6 +393,11 @@ pub struct Scheduler<P> {
     key: Option<SpecKey>,
     /// completed denoiser calls — the boundary clock
     boundary: u64,
+    /// denoiser calls in which some lane moved zero rows — per-row event
+    /// ladders make this impossible (a lane only fires at a surviving
+    /// row's event), so serving surfaces it as `ghost_events_fired` and
+    /// CI gates it at 0 for the narrowing scenario
+    ghost_events: u64,
     /// shutdown/drain mode: ignore the grouping window
     flushing: bool,
     /// reusable per-tick buffers (see [`StepScratch`])
@@ -391,6 +414,7 @@ impl<P> Scheduler<P> {
             lanes: Vec::new(),
             key: None,
             boundary: 0,
+            ghost_events: 0,
             flushing: false,
             scratch: StepScratch::default(),
         }
@@ -408,6 +432,14 @@ impl<P> Scheduler<P> {
     /// i.e. at a value of this clock.
     pub fn boundary(&self) -> u64 {
         self.boundary
+    }
+
+    /// Denoiser calls in which a lane advanced without moving any row.
+    /// Per-row event ladders retire a departed row's unique events with
+    /// it, so this stays 0 (surfaced as `ServerStats::ghost_events_fired`
+    /// and gated in CI for the narrowing bench scenario).
+    pub fn ghost_events(&self) -> u64 {
+        self.ghost_events
     }
 
     /// Total in-flight sequences (sum of lane widths). Lane widths shrink
@@ -759,7 +791,6 @@ impl<P> Scheduler<P> {
             None
         };
         let now = Instant::now();
-        let total = session.total_events();
         let members = group
             .into_iter()
             .map(|p| {
@@ -781,7 +812,6 @@ impl<P> Scheduler<P> {
             src_ids,
             members,
             admitted_boundary: self.boundary,
-            total,
             key,
         });
     }
@@ -796,16 +826,17 @@ impl<P> Scheduler<P> {
     /// The lane is chosen by the cost model in
     /// [`rebalancer`](super::rebalancer): the lane with the most
     /// **remaining** denoiser calls (`total_events()` minus the event
-    /// cursor — exactly known because 𝒯 is predetermined) moves, since it
-    /// transfers the most future work per handoff. Donation is refused
-    /// (`None`) when
+    /// cursors — exact even after narrowing, because per-row ladders
+    /// re-merge over the surviving rows) moves, since it transfers the
+    /// most future work per handoff. Donation is refused (`None`) when
     ///
     /// * no lane has at least `min_remaining` calls left (near-retirement
     ///   lanes are not worth the move — they free their slots here in a
     ///   tick or two anyway), or
     /// * this scheduler holds exactly one lane and nothing is queued:
     ///   moving the only in-flight work would just idle the donor and
-    ///   busy the thief (zero-sum), not increase parallelism.
+    ///   busy the thief (zero-sum), not increase parallelism. (When that
+    ///   one lane is wide, [`Self::donate_rows`] can still split it.)
     pub fn donate_lane(&mut self, min_remaining: usize) -> Option<DonatedLane<P>> {
         if self.lanes.len() == 1 && self.pending.is_empty() {
             return None;
@@ -813,10 +844,7 @@ impl<P> Scheduler<P> {
         let costs: Vec<LaneCost> = self
             .lanes
             .iter()
-            .map(|l| LaneCost {
-                remaining: l.total - l.session.nfe(),
-                width: l.session.batch(),
-            })
+            .map(|l| LaneCost { remaining: l.remaining_events(), width: l.session.batch() })
             .collect();
         let i = pick_donation(&costs, min_remaining)?;
         let lane = self.lanes.remove(i);
@@ -827,9 +855,57 @@ impl<P> Scheduler<P> {
             session: lane.session,
             src_ids: lane.src_ids,
             members: lane.members,
-            total: lane.total,
             key: lane.key,
         })
+    }
+
+    /// Split donation: carve the back half of the widest splittable lane
+    /// into a [`DonatedLane`] and keep the front half serving here. This
+    /// is the rebalancer's third movement — it covers exactly the gap the
+    /// other two leave: one wide lane holding most of a shard's work,
+    /// with an empty queue (nothing to steal) and no second lane to
+    /// donate. Splitting is never zero-sum, because the donor keeps half
+    /// the rows.
+    ///
+    /// Mechanics: [`SamplerSession::split_rows`] moves the rows with
+    /// their event ladders and forked RNG streams, the members and
+    /// pre-flattened src rows partition index-aligned, and both halves
+    /// resume byte-exactly at the next boundary (pinned per kind by
+    /// `tests/rebalance.rs`). Each half's `total_events()` re-merges over
+    /// its own rows, so for per-seq-𝒯 lanes the split can *shrink* the
+    /// combined remaining-call count.
+    ///
+    /// Refused (`None`) when no lane has width ≥ 2, or when no such lane
+    /// has at least `min_remaining` calls left.
+    pub fn donate_rows(&mut self, min_remaining: usize) -> Option<DonatedLane<P>> {
+        let floor = min_remaining.max(1);
+        let i = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.session.batch() >= 2 && l.remaining_events() >= floor)
+            .max_by_key(|(_, l)| (l.session.batch(), l.remaining_events()))
+            .map(|(i, _)| i)?;
+        let lane = &mut self.lanes[i];
+        let w = lane.session.batch();
+        let half = w / 2;
+        let rows: Vec<usize> = (w - half..w).collect();
+        let session = lane
+            .session
+            .split_rows(&rows)
+            .expect("split of a width >= 2 lane's back half is valid");
+        let members = lane.members.split_off(w - half);
+        let src_ids = lane.src_ids.as_mut().map(|src| {
+            let mut tb = TokenBatch::new(src.cols());
+            for r in w - half..w {
+                tb.push_row(src.row(r));
+            }
+            for r in (w - half..w).rev() {
+                src.narrow_remove(r);
+            }
+            tb
+        });
+        Some(DonatedLane { session, src_ids, members, key: lane.key.clone() })
     }
 
     /// Thief side of lane donation: resume a donated lane mid-schedule.
@@ -854,7 +930,6 @@ impl<P> Scheduler<P> {
             src_ids: lane.src_ids,
             members: lane.members,
             admitted_boundary: self.boundary,
-            total: lane.total,
             key: lane.key,
         });
     }
@@ -908,24 +983,35 @@ impl<P> Scheduler<P> {
         let view = self.scratch.logits.view();
         let mut off = 0usize;
         let mut step_err = None;
+        let mut ghosts = 0u64;
         for lane in &mut self.lanes {
             let w = lane.session.batch();
-            if let Err(e) = lane.session.advance(view.narrow(off, w)) {
-                step_err = Some(e);
-                break;
+            match lane.session.advance(view.narrow(off, w)) {
+                Err(e) => {
+                    step_err = Some(e);
+                    break;
+                }
+                // a denoiser call where no row of this lane moved — only
+                // possible if an eviction left a stale event behind, which
+                // per-row ladders rule out; counted so the bench gate can
+                // pin it at zero
+                Ok(0) => ghosts += 1,
+                Ok(_) => {}
             }
             off += w;
             // boundary event: every subscribed member sees this lane's
             // new snapshot (nfe + optionally its own token row)
             let nfe = lane.session.nfe();
+            let total = lane.session.total_events();
             for (j, m) in lane.members.iter().enumerate() {
                 if let Some(ctl) = &m.ctl {
                     let tokens =
                         ctl.wants_partials().then(|| lane.session.x().row(j));
-                    ctl.progress(nfe, lane.total, tokens);
+                    ctl.progress(nfe, total, tokens);
                 }
             }
         }
+        self.ghost_events += ghosts;
         if let Some(e) = step_err {
             return self.fail_all(&e);
         }
@@ -1375,6 +1461,46 @@ mod tests {
         }
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].outcome, Outcome::Done);
+    }
+
+    #[test]
+    fn donate_rows_splits_a_wide_lane_and_both_halves_finish() {
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 20);
+        let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), cfg.clone(), policy(4));
+        assert!(s.donate_rows(1).is_none(), "nothing in flight");
+        for i in 0..3 {
+            s.enqueue(req(i, 3 + i as u64, None)); // one co-admitted width-3 lane
+        }
+        assert!(s.tick().is_empty()); // admission + call 1
+        assert!(s.tick().is_empty()); // call 2
+        assert!(s.donate_rows(1000).is_none(), "18 calls left < absurd floor");
+        // splitting is legal even with a single lane and an empty queue:
+        // the donor keeps the front ⌈w/2⌉ rows, so it is never zero-sum
+        let lane = s.donate_rows(2).expect("width 3 >= 2 and 18 calls remain");
+        assert_eq!(lane.width(), 1, "back ⌊3/2⌋ = 1 row moved");
+        assert_eq!(lane.remaining_events(), 18, "cursor travels with the split half");
+        assert_eq!(s.in_flight(), 2, "donor keeps the front rows serving");
+        assert_eq!(s.lane_info()[0].width, 2);
+        // a width-1 lane can no longer split once this one retires down
+        let mut t: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(4));
+        t.adopt_lane(lane);
+        assert!(t.donate_rows(1).is_none(), "width-1 lanes are unsplittable");
+        let mut done = Vec::new();
+        while t.has_work() {
+            done.extend(t.tick());
+        }
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert_eq!(done.len(), 3);
+        for f in &done {
+            assert_eq!(f.outcome, Outcome::Done);
+            assert_eq!(
+                f.result.as_ref().unwrap().nfe(),
+                20,
+                "per-request NFE spans donor + thief calls"
+            );
+        }
     }
 
     #[test]

@@ -111,6 +111,12 @@ enum Msg {
     /// with fewer than `min_remaining` calls left) and ship it to `to`,
     /// re-pointing every member sink's load gauge at `to_load`.
     DonateLaneReq { to: Sender<Msg>, to_load: Arc<AtomicUsize>, min_remaining: usize },
+    /// Donor side of lane **splitting**: at the next boundary, carve the
+    /// back half of the widest splittable lane (width ≥ 2, at least
+    /// `min_remaining` calls left) into a donated lane for `to`, keeping
+    /// the front half serving here. Covers the case lane donation
+    /// refuses: a single wide lane with an empty queue.
+    SplitLaneReq { to: Sender<Msg>, to_load: Arc<AtomicUsize>, min_remaining: usize },
     /// Thief side: a live lane donated by another shard, resumed
     /// mid-schedule at its next predetermined event.
     AdoptLane(DonatedLane<Reply>),
@@ -167,6 +173,15 @@ pub struct ServerStats {
     /// whole in-flight lanes this shard donated to other shards
     /// (cumulative; each also counts once in `rebalances`)
     pub lanes_donated: u64,
+    /// in-flight lanes this shard **split** — back half of the rows
+    /// donated, front half kept (cumulative; each also counts once in
+    /// `rebalances`)
+    pub lanes_split: u64,
+    /// denoiser calls in which some lane advanced an event where **zero**
+    /// of its rows moved. Per-row event ladders retire a departing row's
+    /// unique events at eviction, so this must stay 0 — the serving bench
+    /// gates on it (cumulative; continuous only)
+    pub ghost_events_fired: u64,
     /// `false` when this shard's engine factory failed: the shard only
     /// drains and fails requests, so the rebalancer must treat it as
     /// neither donor nor thief (its zeroed gauges would otherwise make
@@ -204,6 +219,8 @@ impl ServerStats {
             out.in_flight += s.in_flight;
             out.rebalances += s.rebalances;
             out.lanes_donated += s.lanes_donated;
+            out.lanes_split += s.lanes_split;
+            out.ghost_events_fired += s.ghost_events_fired;
             out.healthy &= s.healthy;
             batch_w += s.mean_batch * s.batches as f64;
             let retired = s.mean_batch * s.batches as f64;
@@ -378,6 +395,22 @@ impl Server {
         let _ = self.tx.send(Msg::DonateLaneReq { to: to.tx.clone(), to_load, min_remaining });
     }
 
+    /// Ask this shard to **split** its widest in-flight lane at the next
+    /// boundary: the back half of the rows — with their per-row event
+    /// ladders and RNG streams — move to `to` as a donated lane, the
+    /// front half keeps serving here (the rebalancer's stage 3, reached
+    /// when whole-lane donation would be zero-sum). Fire-and-forget; the
+    /// donor refuses (no-op) when no lane has width ≥ 2 with at least
+    /// `min_remaining` calls left; see [`Scheduler::donate_rows`].
+    pub(crate) fn split_lane_into(
+        &self,
+        to: &Server,
+        to_load: Arc<AtomicUsize>,
+        min_remaining: usize,
+    ) {
+        let _ = self.tx.send(Msg::SplitLaneReq { to: to.tx.clone(), to_load, min_remaining });
+    }
+
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = channel();
         self.tx.send(Msg::Stats(stx)).map_err(|_| anyhow!("server is down"))?;
@@ -423,6 +456,8 @@ struct LoopState {
     rebalances: u64,
     /// whole in-flight lanes donated away
     lanes_donated: u64,
+    /// in-flight lanes split (back half donated, front half kept)
+    lanes_split: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
     /// slot capacity, for the occupancy statistic
@@ -440,6 +475,7 @@ impl LoopState {
             stolen: 0,
             rebalances: 0,
             lanes_donated: 0,
+            lanes_split: 0,
             queue_lat: LatencyStats::new(),
             e2e_lat: LatencyStats::new(),
             capacity,
@@ -455,7 +491,8 @@ fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error) {
             Msg::Req(r) | Msg::Donated(r) => {
                 r.resolve(Err(anyhow!("engine init failed")), Outcome::Failed)
             }
-            Msg::Steal { .. } | Msg::DonateLaneReq { .. } => {} // nothing here to donate
+            // nothing here to donate or split
+            Msg::Steal { .. } | Msg::DonateLaneReq { .. } | Msg::SplitLaneReq { .. } => {}
             // dropping the lane fires every member sink's drop guard
             // (tickets fail, gauges decrement) — never silently lost
             Msg::AdoptLane(lane) => drop(lane),
@@ -522,9 +559,11 @@ where
             // a donated request was already counted by its submit shard
             Some(Msg::Donated(r)) => batcher.push(r),
             // fixed batches are FIFO with no spec keys — this mode never
-            // donates (the router only rebalances between continuous
-            // shards)
-            Some(Msg::Steal { .. }) | Some(Msg::DonateLaneReq { .. }) => continue,
+            // donates or splits (the router only rebalances between
+            // continuous shards)
+            Some(Msg::Steal { .. })
+            | Some(Msg::DonateLaneReq { .. })
+            | Some(Msg::SplitLaneReq { .. }) => continue,
             // unreachable via the router (donation is continuous-only);
             // dropping the lane fail-safes its tickets and load gauges
             Some(Msg::AdoptLane(lane)) => {
@@ -532,7 +571,7 @@ where
                 continue;
             }
             Some(Msg::Stats(s)) => {
-                let _ = s.send(snapshot(&st, &engine, [0, batcher.len(), 0], 0, 0));
+                let _ = s.send(snapshot(&mut st, &engine, [0, batcher.len(), 0], 0, 0, 0));
                 continue;
             }
             Some(Msg::Shutdown) => {
@@ -822,6 +861,33 @@ fn handle_msg(
             }
             false
         }
+        Msg::SplitLaneReq { to, to_load, min_remaining } => {
+            // donor side of lane splitting — same boundary discipline as
+            // DonateLaneReq, but only the back half of the widest
+            // splittable lane moves; the donor keeps serving the front
+            // half, so the move is never zero-sum. Refusals (no lane of
+            // width ≥ 2, near-retirement) are decided by the scheduler.
+            if let Some(lane) = sched.donate_rows(min_remaining) {
+                lane.retarget_load(&to_load);
+                match to.send(Msg::AdoptLane(lane)) {
+                    Ok(()) => {
+                        st.rebalances += 1;
+                        st.lanes_split += 1;
+                    }
+                    Err(e) => {
+                        // thief exited (shutdown race): resume the split
+                        // half right here as its own lane — byte-exact
+                        // either way, and no member ticket is failed by
+                        // the dead handoff
+                        let Msg::AdoptLane(lane) = e.0 else {
+                            unreachable!("sent AdoptLane")
+                        };
+                        sched.adopt_lane(lane);
+                    }
+                }
+            }
+            false
+        }
         Msg::AdoptLane(lane) => {
             // thief side: resume the donated session mid-schedule; its
             // members were counted by their submit shard already
@@ -833,12 +899,14 @@ fn handle_msg(
             st.batches = sched.engine().nfe.batches();
             st.batch_sizes = sched.engine().nfe.requests();
             let depths = sched.queue_depths();
+            let ghosts = sched.ghost_events();
             let _ = s.send(snapshot(
                 st,
                 sched.engine(),
                 depths,
                 sched.lane_count(),
                 sched.in_flight(),
+                ghosts,
             ));
             false
         }
@@ -882,11 +950,12 @@ fn pending_to_request(p: Pending<Reply>) -> Request {
 }
 
 fn snapshot(
-    st: &LoopState,
+    st: &mut LoopState,
     engine: &Engine,
     queue_depths: [usize; 3],
     lanes: usize,
     in_flight: usize,
+    ghost_events: u64,
 ) -> ServerStats {
     ServerStats {
         requests: st.requests,
@@ -913,6 +982,8 @@ fn snapshot(
         in_flight: in_flight as u64,
         rebalances: st.rebalances,
         lanes_donated: st.lanes_donated,
+        lanes_split: st.lanes_split,
+        ghost_events_fired: ghost_events,
         healthy: true,
     }
 }
@@ -939,6 +1010,8 @@ fn empty_stats() -> ServerStats {
         in_flight: 0,
         rebalances: 0,
         lanes_donated: 0,
+        lanes_split: 0,
+        ghost_events_fired: 0,
         healthy: true,
     }
 }

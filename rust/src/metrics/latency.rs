@@ -1,11 +1,58 @@
 //! Latency / throughput statistics for the serving benches.
+//!
+//! Bounded memory: samples land in a fixed-capacity **reservoir**
+//! (Vitter's Algorithm R over a deterministic [`SplitMix64`] stream), so a
+//! long-running server's stats stay O(capacity) instead of growing one
+//! `u64` per request forever. Count, sum, min, and max are tracked
+//! exactly; percentiles are computed over the reservoir — exact until
+//! `RESERVOIR_CAP` samples, a uniform subsample after — from a cached
+//! sorted view that is invalidated on record and rebuilt at most once per
+//! run of percentile queries (the old code cloned and re-sorted the full
+//! history on *every* percentile call; `summary()` did it four times).
 
 use std::time::Duration;
 
+use crate::schedule::SplitMix64;
+
+/// Reservoir capacity. Nearest-rank percentiles up to p99 need ~100
+/// samples for one rank of resolution; 4096 keeps p99 stable to well
+/// under a rank while costing 32 KiB per stats instance.
+const RESERVOIR_CAP: usize = 4096;
+
 /// Collects durations; reports mean / percentiles / throughput.
-#[derive(Debug, Default, Clone)]
+///
+/// Percentile accessors take `&mut self` so they can lazily (re)sort the
+/// cached view; recording stays amortized O(1).
+#[derive(Debug, Clone)]
 pub struct LatencyStats {
+    /// reservoir of at most [`RESERVOIR_CAP`] samples
     samples_us: Vec<u64>,
+    /// sorted copy of the reservoir, rebuilt lazily when `dirty`
+    sorted_us: Vec<u64>,
+    dirty: bool,
+    /// total samples ever recorded (not just retained)
+    count: u64,
+    sum_us: u128,
+    min_us: u64,
+    max_us: u64,
+    /// deterministic replacement stream: stats stay reproducible for a
+    /// given record sequence (no ambient randomness)
+    rng: SplitMix64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats {
+            samples_us: Vec::new(),
+            sorted_us: Vec::new(),
+            dirty: false,
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+            rng: SplitMix64::new(0x1A7E_11C7_57A7_5EED),
+        }
+    }
 }
 
 impl LatencyStats {
@@ -14,54 +61,81 @@ impl LatencyStats {
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        let us = d.as_micros() as u64;
+        self.count += 1;
+        self.sum_us += us as u128;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+        if self.samples_us.len() < RESERVOIR_CAP {
+            self.samples_us.push(us);
+            self.dirty = true;
+        } else {
+            // Algorithm R: sample i (0-based i = count-1) replaces a
+            // random reservoir slot with probability CAP / count
+            let j = (self.rng.next_u64() % self.count) as usize;
+            if j < RESERVOIR_CAP {
+                self.samples_us[j] = us;
+                self.dirty = true;
+            }
+        }
     }
 
+    /// Total samples recorded (not just the ≤ `RESERVOIR_CAP` retained).
     pub fn len(&self) -> usize {
-        self.samples_us.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_us.is_empty()
+        self.count == 0
     }
 
+    /// Exact mean over **all** recorded samples.
     pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / self.count as u128) as u64)
+    }
+
+    /// q ∈ [0, 1]; nearest-rank percentile over the reservoir (exact
+    /// while ≤ [`RESERVOIR_CAP`] samples have been recorded).
+    pub fn percentile(&mut self, q: f64) -> Duration {
         if self.samples_us.is_empty() {
             return Duration::ZERO;
         }
-        let sum: u64 = self.samples_us.iter().sum();
-        Duration::from_micros(sum / self.samples_us.len() as u64)
-    }
-
-    /// q ∈ [0, 1]; nearest-rank percentile.
-    pub fn percentile(&self, q: f64) -> Duration {
-        if self.samples_us.is_empty() {
-            return Duration::ZERO;
+        if self.dirty {
+            self.sorted_us.clone_from(&self.samples_us);
+            self.sorted_us.sort_unstable();
+            self.dirty = false;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_unstable();
-        let idx = ((q * s.len() as f64).ceil() as usize).clamp(1, s.len()) - 1;
-        Duration::from_micros(s[idx])
+        let n = self.sorted_us.len();
+        let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
+        Duration::from_micros(self.sorted_us[idx])
     }
 
-    pub fn p50(&self) -> Duration {
+    pub fn p50(&mut self) -> Duration {
         self.percentile(0.50)
     }
 
-    pub fn p95(&self) -> Duration {
+    pub fn p95(&mut self) -> Duration {
         self.percentile(0.95)
     }
 
-    pub fn p99(&self) -> Duration {
+    pub fn p99(&mut self) -> Duration {
         self.percentile(0.99)
     }
 
+    /// Exact minimum over all recorded samples.
     pub fn min(&self) -> Duration {
-        Duration::from_micros(self.samples_us.iter().copied().min().unwrap_or(0))
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.min_us)
     }
 
+    /// Exact maximum over all recorded samples.
     pub fn max(&self) -> Duration {
-        Duration::from_micros(self.samples_us.iter().copied().max().unwrap_or(0))
+        Duration::from_micros(self.max_us)
     }
 
     /// items/sec given total wall-clock time.
@@ -72,7 +146,7 @@ impl LatencyStats {
         items as f64 / wall.as_secs_f64()
     }
 
-    pub fn summary(&self, label: &str) -> String {
+    pub fn summary(&mut self, label: &str) -> String {
         format!(
             "{label}: n={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms",
             self.len(),
@@ -112,14 +186,50 @@ mod tests {
 
     #[test]
     fn empty_is_zero() {
-        let s = LatencyStats::new();
+        let mut s = LatencyStats::new();
         assert_eq!(s.mean(), Duration::ZERO);
         assert_eq!(s.p95(), Duration::ZERO);
+        assert_eq!(s.min(), Duration::ZERO);
     }
 
     #[test]
     fn throughput_math() {
         let t = LatencyStats::throughput(50, Duration::from_secs(2));
         assert!((t - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_with_exact_extremes_and_mean() {
+        let mut s = LatencyStats::new();
+        // 3 × capacity samples: 1..=3·CAP µs
+        let n = (RESERVOIR_CAP * 3) as u64;
+        for i in 1..=n {
+            s.record(Duration::from_micros(i));
+        }
+        assert_eq!(s.len(), n as usize, "count is exact");
+        assert_eq!(s.samples_us.len(), RESERVOIR_CAP, "memory is bounded");
+        assert_eq!(s.min(), Duration::from_micros(1), "min is exact, not sampled");
+        assert_eq!(s.max(), Duration::from_micros(n), "max is exact, not sampled");
+        assert_eq!(s.mean(), Duration::from_micros((n + 1) / 2));
+        // the subsampled median of a uniform ramp stays near the middle
+        let p50 = s.p50().as_micros() as f64;
+        let mid = n as f64 / 2.0;
+        assert!(
+            (p50 - mid).abs() < mid * 0.10,
+            "reservoir median {p50} strayed from {mid}"
+        );
+        // percentile caching: repeated queries agree without re-recording
+        assert_eq!(s.p95(), s.p95());
+    }
+
+    #[test]
+    fn cached_sort_invalidates_on_record() {
+        let mut s = LatencyStats::new();
+        s.record(Duration::from_micros(100));
+        assert_eq!(s.p99(), Duration::from_micros(100));
+        s.record(Duration::from_micros(900));
+        assert_eq!(s.p99(), Duration::from_micros(900), "new sample visible");
+        s.record(Duration::from_micros(50));
+        assert_eq!(s.p50(), Duration::from_micros(100));
     }
 }

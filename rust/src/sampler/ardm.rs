@@ -45,10 +45,11 @@ impl AlgState for ArdmState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let end = (self.done + self.parallel).min(core.n);
         let t_norm = 1.0 - self.done as f32 / core.n as f32;
-        for b in 0..core.x.rows() {
+        let moved = core.x.rows();
+        for b in 0..moved {
             for &pos in &self.order[self.done..end] {
                 let (tok, _) =
                     sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
@@ -57,11 +58,22 @@ impl AlgState for ArdmState {
         }
         self.done = end;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     fn total_events(&self) -> usize {
         // ⌈N / parallel⌉ calls decode all N positions
         self.order.len().div_ceil(self.parallel)
+    }
+
+    fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {
+        // the decode order σ is shared (like DNDM's shared 𝒯); every row
+        // decodes the same positions at the same events
+        Box::new(ArdmState {
+            order: self.order.clone(),
+            done: self.done,
+            parallel: self.parallel,
+        })
     }
 }
 

@@ -40,10 +40,11 @@ impl AlgState for D3pmState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let t = self.t;
         let t_norm = t as f32 / self.t_max as f32;
-        for b in 0..core.x.rows() {
+        let moved = core.x.rows();
+        for b in 0..moved {
             for pos in 0..core.n {
                 let (x0_hat, _) = sample_x0(
                     logits.row(b, pos),
@@ -76,10 +77,17 @@ impl AlgState for D3pmState {
         }
         self.t -= 1;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     fn total_events(&self) -> usize {
         self.t_max
+    }
+
+    fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {
+        // the countdown is the whole state and it is shared: both halves
+        // keep marching the same step grid
+        Box::new(D3pmState { t: self.t, t_max: self.t_max, sched: self.sched, noise: self.noise })
     }
 }
 
@@ -135,14 +143,15 @@ impl AlgState for RdmState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let t = self.t;
         let t_norm = t as f32 / self.t_max as f32;
         let a_t = self.sched.alpha_discrete(t, self.t_max);
         let a_prev = self.sched.alpha_discrete(t - 1, self.t_max);
         let p_reveal = if a_t >= 1.0 { 0.0 } else { (a_prev - a_t) / (1.0 - a_t) };
+        let moved = core.x.rows();
 
-        for b in 0..core.x.rows() {
+        for b in 0..moved {
             self.decoded.clear();
             for pos in 0..core.n {
                 let (tok, score) =
@@ -184,6 +193,7 @@ impl AlgState for RdmState {
         }
         self.t -= 1;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     fn total_events(&self) -> usize {
@@ -191,7 +201,28 @@ impl AlgState for RdmState {
     }
 
     fn evict_row(&mut self, row: usize) {
+        // the step grid is shared (every row reveals on every step), so
+        // only the reveal indicators go
         self.revealed.remove(row);
+    }
+
+    fn split_rows(&mut self, rows: &[usize]) -> Box<dyn AlgState> {
+        let mut revealed = Vec::with_capacity(rows.len());
+        for &r in rows {
+            revealed.push(self.revealed[r].clone());
+        }
+        for &r in rows.iter().rev() {
+            self.revealed.remove(r);
+        }
+        Box::new(RdmState {
+            revealed,
+            t: self.t,
+            t_max: self.t_max,
+            sched: self.sched,
+            topk: self.topk,
+            decoded: Vec::with_capacity(self.decoded.capacity()),
+            ranked: Vec::with_capacity(self.ranked.capacity()),
+        })
     }
 }
 
@@ -224,11 +255,12 @@ impl AlgState for MaskPredictState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let i = self.i;
         let t_norm = 1.0 - (i as f32 / self.iters as f32);
         let n_mask = (core.n * (self.iters - i - 1)) / self.iters;
-        for b in 0..core.x.rows() {
+        let moved = core.x.rows();
+        for b in 0..moved {
             self.scored.clear();
             for pos in 0..core.n {
                 let (tok, s) =
@@ -247,10 +279,21 @@ impl AlgState for MaskPredictState {
         }
         self.i += 1;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     fn total_events(&self) -> usize {
         self.iters
+    }
+
+    fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {
+        // the iteration ladder is shared; the scratch is per-advance only
+        Box::new(MaskPredictState {
+            i: self.i,
+            iters: self.iters,
+            mask: self.mask,
+            scored: Vec::new(),
+        })
     }
 }
 

@@ -59,7 +59,7 @@ impl AlgState for DdimState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let t = self.t;
         let t_norm = t as f32 / self.t_max as f32;
         let a_t = self.sched.alpha_discrete(t, self.t_max);
@@ -70,8 +70,9 @@ impl AlgState for DdimState {
         let w_xt = sigma;
         let w_x0 = a_prev - sigma * a_t;
         let w_uni = ((1.0 - a_prev) - (1.0 - a_t) * sigma).max(0.0);
+        let moved = core.x.rows();
 
-        for b in 0..core.x.rows() {
+        for b in 0..moved {
             for pos in 0..core.n {
                 let (x0_hat, _) = sample_x0(
                     logits.row(b, pos),
@@ -91,10 +92,22 @@ impl AlgState for DdimState {
         }
         self.t -= 1;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     fn total_events(&self) -> usize {
         self.t_max
+    }
+
+    fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {
+        // the countdown is the whole state and it is shared across rows
+        Box::new(DdimState {
+            t: self.t,
+            t_max: self.t_max,
+            sched: self.sched,
+            noise: self.noise,
+            eta: self.eta,
+        })
     }
 }
 

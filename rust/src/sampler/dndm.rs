@@ -18,16 +18,44 @@ use super::SamplerConfig;
 ///
 /// With `cfg.shared_tau` one 𝒯 is drawn per batch and broadcast over
 /// sequences (the paper's batched implementation — NFE per batch = |𝒯|);
-/// otherwise each sequence draws its own 𝒯 and the event list is the
-/// union (ablation; more calls, finer per-sequence schedules).
+/// otherwise each sequence draws its own 𝒯 (ablation; more calls, finer
+/// per-sequence schedules).
+///
+/// Events are scheduled **per row**: each sequence keeps its own ladder
+/// of distinct τ values (descending) plus a cursor, and `next_t` merges
+/// the survivors lazily by taking the max over the rows' current events.
+/// A row fires only at its own ladder events, so evicting or splitting a
+/// row retires the events unique to it and `total_events` stays exact —
+/// the merged schedule is always the *current* rows' union-|𝒯|.
 pub(crate) struct DndmState {
     /// τ per (sequence, position)
     taus: Vec<Vec<usize>>,
-    /// distinct transition times over the whole batch, descending
-    events: Vec<usize>,
-    idx: usize,
+    /// per-row event ladders: each row's distinct τ values, descending
+    ladders: Vec<Vec<usize>>,
+    /// per-row cursor into that row's ladder
+    cursors: Vec<usize>,
+    /// merged events fired so far (== core.nfe, kept locally for totals)
+    fired: usize,
+    /// `fired` + distinct events remaining in the current rows' ladders;
+    /// recomputed only on eviction / split, so it is exact after both
+    total: usize,
     t_max: usize,
     v2: bool,
+}
+
+/// Distinct event times in the union of every row's remaining ladder
+/// suffix. Allocates — called only at construction, eviction, and splits,
+/// never on the per-event path (the scheduler's steady-state ticks are
+/// pinned allocation-free).
+fn merged_remaining(ladders: &[Vec<usize>], cursors: &[usize]) -> usize {
+    let mut rest: Vec<usize> = ladders
+        .iter()
+        .zip(cursors)
+        .flat_map(|(l, &c)| l[c..].iter().copied())
+        .collect();
+    rest.sort_unstable();
+    rest.dedup();
+    rest.len()
 }
 
 impl DndmState {
@@ -41,37 +69,65 @@ impl DndmState {
                 .map(|_| cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng).taus)
                 .collect()
         };
-        let mut events: Vec<usize> = taus.iter().flatten().copied().collect();
-        events.sort_unstable_by(|a, b| b.cmp(a));
-        events.dedup();
-        DndmState { taus, events, idx: 0, t_max, v2 }
+        let ladders: Vec<Vec<usize>> = taus
+            .iter()
+            .map(|row| {
+                let mut l = row.clone();
+                l.sort_unstable_by(|a, b| b.cmp(a));
+                l.dedup();
+                l
+            })
+            .collect();
+        let cursors = vec![0; batch];
+        let total = merged_remaining(&ladders, &cursors);
+        DndmState { taus, ladders, cursors, fired: 0, total, t_max, v2 }
+    }
+
+    /// The next merged event time: max over the rows' current ladder
+    /// entries. Allocation-free (ran every `next_event`).
+    fn merged_next(&self) -> Option<usize> {
+        self.ladders
+            .iter()
+            .zip(&self.cursors)
+            .filter_map(|(l, &c)| l.get(c).copied())
+            .max()
     }
 }
 
 impl AlgState for DndmState {
     fn next_t(&self, _core: &Core) -> Option<(f32, f64)> {
-        self.events.get(self.idx).map(|&t| {
+        self.merged_next().map(|t| {
             let t_norm = t as f32 / self.t_max as f32;
             (t_norm, t_norm as f64)
         })
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
-        let t = self.events[self.idx];
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
+        let t = self.merged_next().expect("advance called on a completed session");
         let t_norm = t as f32 / self.t_max as f32;
+        let mut moved = 0usize;
         for b in 0..core.x.rows() {
+            // rows whose next event is later (a smaller t) sit this call
+            // out; their RNG streams are untouched, which is why the
+            // survivors of an eviction stay byte-identical
+            if self.ladders[b].get(self.cursors[b]) != Some(&t) {
+                continue;
+            }
             for pos in 0..core.n {
-                let moves =
+                let fires =
                     if self.v2 { self.taus[b][pos] >= t } else { self.taus[b][pos] == t };
-                if moves {
+                if fires {
                     let (tok, _) =
                         sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
                     core.x.set(b, pos, tok);
                 }
             }
+            self.cursors[b] += 1;
+            moved += 1;
         }
-        self.idx += 1;
+        self.fired += 1;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     fn taus(&self) -> Option<&[Vec<usize>]> {
@@ -79,13 +135,43 @@ impl AlgState for DndmState {
     }
 
     fn total_events(&self) -> usize {
-        self.events.len()
+        self.total
     }
 
     fn evict_row(&mut self, row: usize) {
-        // the event ladder stays as admitted (see the trait docs); only
-        // the per-row τ assignment goes
         self.taus.remove(row);
+        self.ladders.remove(row);
+        self.cursors.remove(row);
+        // events unique to the departed row are retired with it
+        self.total = self.fired + merged_remaining(&self.ladders, &self.cursors);
+    }
+
+    fn split_rows(&mut self, rows: &[usize]) -> Box<dyn AlgState> {
+        let mut taus = Vec::with_capacity(rows.len());
+        let mut ladders = Vec::with_capacity(rows.len());
+        let mut cursors = Vec::with_capacity(rows.len());
+        for &r in rows {
+            taus.push(self.taus[r].clone());
+            ladders.push(self.ladders[r].clone());
+            cursors.push(self.cursors[r]);
+        }
+        for &r in rows.iter().rev() {
+            self.taus.remove(r);
+            self.ladders.remove(r);
+            self.cursors.remove(r);
+        }
+        // each half re-merges over its own rows; both totals stay exact
+        self.total = self.fired + merged_remaining(&self.ladders, &self.cursors);
+        let total = self.fired + merged_remaining(&ladders, &cursors);
+        Box::new(DndmState {
+            taus,
+            ladders,
+            cursors,
+            fired: self.fired,
+            total,
+            t_max: self.t_max,
+            v2: self.v2,
+        })
     }
 }
 
@@ -107,6 +193,21 @@ pub(crate) struct DndmCState {
     total: usize,
 }
 
+/// End (exclusive) of the tie group starting at `order[k]`: positions
+/// whose timestamps sit within 1e-12 of `taus[order[k]]` collapse into
+/// one event. The single grouping rule shared by `DndmCState::new`
+/// (pre-counting `total`) and its `advance` (walking the cursor) — with
+/// one implementation the two can never disagree on what counts as an
+/// event, so `total_events` always matches the calls actually made.
+fn tie_group_end(taus: &[f64], order: &[usize], k: usize) -> usize {
+    let t = taus[order[k]];
+    let mut j = k + 1;
+    while j < order.len() && (taus[order[j]] - t).abs() < 1e-12 {
+        j += 1;
+    }
+    j
+}
+
 impl DndmCState {
     pub(crate) fn new(core: &mut Core, cfg: &SamplerConfig) -> DndmCState {
         let taus: Vec<f64> = cfg.spec.sample_times_continuous(core.n, cfg.order, &mut core.rng);
@@ -115,13 +216,8 @@ impl DndmCState {
         let mut total = 0usize;
         let mut k = 0usize;
         while k < order.len() {
-            let t = taus[order[k]];
-            let mut j = k + 1;
-            while j < order.len() && (taus[order[j]] - t).abs() < 1e-12 {
-                j += 1;
-            }
+            k = tie_group_end(&taus, &order, k);
             total += 1;
-            k = j;
         }
         DndmCState { taus, order, k: 0, total }
     }
@@ -137,14 +233,12 @@ impl AlgState for DndmCState {
         }
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let t = self.taus[self.order[self.k]];
         // all positions sharing this timestamp transition together
-        let mut j = self.k + 1;
-        while j < core.n && (self.taus[self.order[j]] - t).abs() < 1e-12 {
-            j += 1;
-        }
-        for b in 0..core.x.rows() {
+        let j = tie_group_end(&self.taus, &self.order, self.k);
+        let moved = core.x.rows();
+        for b in 0..moved {
             for &pos in &self.order[self.k..j] {
                 let (tok, _) =
                     sample_x0(logits.row(b, pos), core.temperature, &mut core.row_rngs[b]);
@@ -153,10 +247,24 @@ impl AlgState for DndmCState {
         }
         self.k = j;
         core.finish_event(t);
+        moved
     }
 
     fn total_events(&self) -> usize {
         self.total
+    }
+
+    // no `evict_row` override: the timestamp walk is per *position*, not
+    // per row — every row fires at every event, so nothing can ghost
+
+    fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {
+        // 𝒯 is shared across rows; both halves walk the same schedule
+        Box::new(DndmCState {
+            taus: self.taus.clone(),
+            order: self.order.clone(),
+            k: self.k,
+            total: self.total,
+        })
     }
 }
 
@@ -194,7 +302,6 @@ mod tests {
 
     #[test]
     fn nfe_bounded_by_min_n_t_and_calls_match() {
-        let den = mock("absorbing");
         for steps in [5usize, 50, 1000] {
             let den = mock("absorbing");
             let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
@@ -202,7 +309,6 @@ mod tests {
             assert!(out.nfe >= 1 && out.nfe <= steps.min(8), "T={steps} nfe={}", out.nfe);
             assert_eq!(den.calls() as usize, out.nfe, "NN calls must equal |𝒯|");
         }
-        let _ = den;
     }
 
     #[test]
@@ -234,6 +340,84 @@ mod tests {
         // union over 4 sequences ≥ single-sequence NFE, still ≤ 4·N
         assert!(out.nfe <= 32);
         assert_eq!(out.tokens[2], vec![10, 11, 12, 13, 14, 15, 16, 17]);
+    }
+
+    #[test]
+    fn continuous_tied_timestamps_keep_total_and_cursor_in_agreement() {
+        use super::{tie_group_end, DndmCState};
+        use crate::sampler::session::{build_core, SamplerSession};
+
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::DndmC, 0);
+        let core = build_core(den.config(), &cfg, 1, 7, false);
+        // Beta-rounded draws can collide: positions {0,3} and {2,5} tie
+        // within the 1e-12 grouping tolerance, so 8 positions → 6 events.
+        // Before the shared helper, `new` and `advance` each hand-rolled
+        // this scan and a drift between them would skew total_events.
+        let taus = vec![0.5, 0.9, 0.25, 0.5 + 1e-13, 0.75, 0.25 - 1e-13, 0.1, 0.6];
+        let mut order: Vec<usize> = (0..8).collect();
+        order.sort_by(|&a, &b| taus[b].partial_cmp(&taus[a]).unwrap());
+        let mut total = 0usize;
+        let mut k = 0usize;
+        while k < order.len() {
+            k = tie_group_end(&taus, &order, k);
+            total += 1;
+        }
+        assert_eq!(total, 6, "two tie pairs collapse into one event each");
+        let state = DndmCState { taus, order, k: 0, total };
+        let mut sess = SamplerSession::from_parts(core, Box::new(state), 1);
+        assert_eq!(sess.total_events(), 6);
+        let mut calls = 0usize;
+        while let Some(call) = sess.next_event() {
+            let logits = den.denoise(sess.x(), &vec![call.t; 1], None).unwrap();
+            sess.advance(&logits).unwrap();
+            calls += 1;
+        }
+        assert_eq!(calls, 6, "advance fires exactly the pre-counted events");
+        assert_eq!(sess.nfe(), sess.total_events());
+    }
+
+    #[test]
+    fn evicting_a_row_retires_its_unique_events() {
+        use crate::sampler::session::SamplerSession;
+
+        // per-seq 𝒯 with a large grid: rows almost surely hold τ values
+        // no other row shares, so eviction must shrink total_events to
+        // the survivors' union (plus what already fired)
+        let den = mock("absorbing");
+        let mut cfg = SamplerConfig::new(SamplerKind::Dndm, 100_000);
+        cfg.shared_tau = false;
+        for seed in 0..32u64 {
+            let mut sess = SamplerSession::new(den.config(), &cfg, 3, seed).unwrap();
+            let taus = sess.taus().unwrap();
+            let union = |rows: &[usize]| {
+                let mut u: Vec<usize> =
+                    rows.iter().flat_map(|&r| taus[r].iter().copied()).collect();
+                u.sort_unstable();
+                u.dedup();
+                u.len()
+            };
+            let before = union(&[0, 1, 2]);
+            let survivors = union(&[0, 2]);
+            assert_eq!(sess.total_events(), before);
+            if survivors == before {
+                continue; // row 1 held nothing unique for this seed
+            }
+            sess.evict_slot(1).unwrap();
+            assert_eq!(
+                sess.total_events(),
+                survivors,
+                "seed {seed}: total must re-merge over the survivors"
+            );
+            // and the session actually stops after that many calls
+            let mut calls = 0usize;
+            while let Some(call) = sess.next_event() {
+                let logits = den.denoise(sess.x(), &vec![call.t; 2], None).unwrap();
+                assert!(sess.advance(&logits).unwrap() >= 1, "no ghost events");
+                calls += 1;
+            }
+            assert_eq!(calls, survivors);
+        }
     }
 
     #[test]

@@ -48,13 +48,14 @@ impl AlgState for TopKState {
         })
     }
 
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) {
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize {
         let t = self.tt.events()[self.idx];
         // after this event, k_target tokens must be decoded in total
         let k_target = self.tt.k_t(t);
         let t_norm = t as f32 / self.t_max as f32;
+        let moved = core.x.rows();
 
-        for b in 0..core.x.rows() {
+        for b in 0..moved {
             // decode + score every position, then commit the top scorers
             self.cand.clear();
             for pos in 0..core.n {
@@ -77,6 +78,7 @@ impl AlgState for TopKState {
         }
         self.idx += 1;
         core.finish_event(t_norm as f64);
+        moved
     }
 
     // no taus() override: Algorithm 4 predetermines the K_t counts, not
@@ -87,7 +89,27 @@ impl AlgState for TopKState {
     }
 
     fn evict_row(&mut self, row: usize) {
+        // the K_t ladder is shared (every row commits at every event — the
+        // count sequence is strictly increasing), so only the decoded-set
+        // goes; no event can become unique to one row
         self.updated.remove(row);
+    }
+
+    fn split_rows(&mut self, rows: &[usize]) -> Box<dyn AlgState> {
+        let mut updated = Vec::with_capacity(rows.len());
+        for &r in rows {
+            updated.push(self.updated[r].clone());
+        }
+        for &r in rows.iter().rev() {
+            self.updated.remove(r);
+        }
+        Box::new(TopKState {
+            tt: self.tt.clone(),
+            updated,
+            idx: self.idx,
+            t_max: self.t_max,
+            cand: Vec::with_capacity(self.cand.capacity()),
+        })
     }
 }
 

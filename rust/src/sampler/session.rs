@@ -34,15 +34,24 @@
 //! Sessions can also **shrink**: [`SamplerSession::evict_slot`] removes
 //! one sequence mid-flight (cancellation inside a shared-𝒯 lane) while
 //! leaving every survivor byte-identical, because each row samples from
-//! its own forked RNG stream (see the `Core` docs).
+//! its own forked RNG stream (see the `Core` docs). Event scheduling is
+//! **per row**: each sequence carries its own descending event ladder
+//! (its own 𝒯 for the DNDM family, the step grid / decode order for the
+//! baselines) and [`SamplerSession::next_event`] merges the survivors'
+//! ladders lazily, so evicting a row also retires every event only that
+//! row needed — the lane's remaining denoiser calls drop to exactly the
+//! survivors' union-|𝒯| and [`SamplerSession::total_events`] stays
+//! exact after narrowing.
 //!
-//! And sessions can **move**: a `SamplerSession` is `Send` (its state is
-//! pure host data — tokens, RNG streams, the predetermined event ladder
-//! and its cursor), so the serving layer can hand a live session to
-//! another engine thread at an NFE boundary and resume it there with the
-//! exact bytes it would have produced in place. The coordinator's lane
-//! donation (`coordinator::rebalancer`, `docs/rebalancing.md`) is built
-//! on this.
+//! And sessions can **move** — or **split**: a `SamplerSession` is `Send`
+//! (its state is pure host data — tokens, RNG streams, the predetermined
+//! per-row event ladders and their cursors), so the serving layer can
+//! hand a live session to another engine thread at an NFE boundary and
+//! resume it there with the exact bytes it would have produced in place,
+//! or carve a subset of rows out with [`SamplerSession::split_rows`] and
+//! resume the two halves independently. The coordinator's lane donation
+//! and lane splitting (`coordinator::rebalancer`, `docs/rebalancing.md`)
+//! are built on this.
 //!
 //! [`generate`]: super::generate
 
@@ -118,6 +127,36 @@ impl Core {
         self.x.narrow_remove(i);
         self.row_rngs.remove(i);
     }
+
+    /// Carve `rows` (strictly ascending) out into a new core, removing
+    /// them from `self`. Moved rows keep their tokens and their forked
+    /// RNG streams byte-for-byte; the lane stream is cloned into both
+    /// halves (it is drawn only at construction — x_T init, 𝒯, ARDM's
+    /// decode order — so the copies never diverge). The split half never
+    /// traces (serving sessions don't trace).
+    fn split_rows(&mut self, rows: &[usize]) -> Core {
+        let mut x = TokenBatch::new(self.n);
+        let mut row_rngs = Vec::with_capacity(rows.len());
+        for &r in rows {
+            x.push_row(self.x.row(r));
+            row_rngs.push(self.row_rngs[r].clone());
+        }
+        for &r in rows.iter().rev() {
+            self.x.narrow_remove(r);
+            self.row_rngs.remove(r);
+        }
+        Core {
+            x,
+            rng: self.rng.clone(),
+            row_rngs,
+            temperature: self.temperature,
+            n: self.n,
+            v: self.v,
+            trace_on: false,
+            trace: Vec::new(),
+            nfe: self.nfe,
+        }
+    }
 }
 
 /// One sampling algorithm's private state. Implementations live next to
@@ -137,8 +176,13 @@ pub(crate) trait AlgState: Send {
     fn next_t(&self, core: &Core) -> Option<(f32, f64)>;
 
     /// Apply the logits of the pending call: update `core.x`, consume RNG,
-    /// and finish with `core.finish_event(..)`.
-    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>);
+    /// and finish with `core.finish_event(..)`. Returns how many rows
+    /// moved at this event (sampled at least one position, or — for the
+    /// step-marching baselines — took part in the step). A return of 0 is
+    /// a **ghost event**: a denoiser call no surviving row needed, which
+    /// the per-row ladders exist to eliminate (the serving layer counts
+    /// these as `ghost_events_fired` and CI gates them at zero).
+    fn advance(&mut self, core: &mut Core, logits: LogitsView<'_>) -> usize;
 
     /// The discrete per-position transition times, for samplers that
     /// predetermine them (the DNDM family).
@@ -146,20 +190,35 @@ pub(crate) trait AlgState: Send {
         None
     }
 
-    /// Total denoiser calls this session will make over its whole life —
-    /// known up front for every algorithm (|𝒯| for the DNDM family, T for
-    /// the step-marching baselines, ⌈N/k⌉ for ARDM). Powers `nfe_total`
-    /// in serving progress events.
+    /// Total denoiser calls this session will make over its whole life:
+    /// events already fired plus the merged remainder of the *current*
+    /// rows' ladders (|∪𝒯| for the DNDM family, T for the step-marching
+    /// baselines, ⌈N/k⌉ for ARDM). Exact at admission **and after every
+    /// eviction or split** — powers `nfe_total` in serving progress
+    /// events and the rebalancer's remaining-work cost model.
     fn total_events(&self) -> usize;
 
     /// Remove sequence `row`'s per-row state (called by
     /// [`SamplerSession::evict_slot`] after the core row is gone). The
-    /// default is for algorithms whose state is shared across rows. The
-    /// event ladder is **never** recomputed: an evicted row's remaining
-    /// events still fire (survivors simply may move nothing there), which
-    /// keeps every survivor's event schedule — and with it `total_events`
-    /// and the RNG draw sequence — exactly what it was at admission.
+    /// default is for algorithms whose state is fully shared across rows
+    /// (every row participates in every event, so nothing per-row needs
+    /// dropping and no event can become a ghost). Algorithms with
+    /// per-row event ladders (the DNDM family) drop the departed row's
+    /// ladder here: events unique to that row are retired with it, and
+    /// `total_events` shrinks to the count already fired plus the
+    /// survivors' merged remainder. Survivors stay byte-identical either
+    /// way — per-row draws come from per-row streams, so a retired event
+    /// changes no survivor's RNG sequence.
     fn evict_row(&mut self, _row: usize) {}
+
+    /// Carve the per-row state of `rows` (strictly ascending, validated
+    /// by [`SamplerSession::split_rows`]) out into a state for a new
+    /// `rows.len()`-sequence session, removing it from `self`. Shared
+    /// state (step grids, schedules, the 𝒯 spec) is cloned; per-row state
+    /// (event ladders, reveal masks) is partitioned. Both halves must
+    /// resume byte-exactly — the serving layer splits one wide lane
+    /// across two shards on top of this (`docs/rebalancing.md`).
+    fn split_rows(&mut self, rows: &[usize]) -> Box<dyn AlgState>;
 }
 
 /// Construct the shared core: the lane RNG from the seed, x_T (from
@@ -276,11 +335,15 @@ impl SamplerSession {
         self.core.nfe
     }
 
-    /// Total denoiser calls this session makes over its whole life,
-    /// predetermined at construction: |𝒯| for the DNDM family (the
-    /// paper's headline quantity), T for the step-marching baselines,
-    /// ⌈N/k⌉ for ARDM. Equals [`Self::nfe`] once the session is done;
-    /// serving uses it as `nfe_total` in streamed progress events.
+    /// Total denoiser calls this session makes over its whole life:
+    /// |∪𝒯| over the current rows for the DNDM family (the paper's
+    /// headline quantity), T for the step-marching baselines, ⌈N/k⌉ for
+    /// ARDM. Predetermined at construction and kept **exact** across
+    /// [`Self::evict_slot`] / [`Self::split_rows`] — after narrowing it
+    /// shrinks to the calls already made plus the survivors' merged
+    /// remainder. Equals [`Self::nfe`] once the session is done; serving
+    /// uses it as `nfe_total` in streamed progress events and the
+    /// rebalancer prices lanes with it.
     pub fn total_events(&self) -> usize {
         self.alg.total_events()
     }
@@ -298,8 +361,11 @@ impl SamplerSession {
 
     /// Apply the logits answering [`Self::next_event`]'s call. Accepts a
     /// `&LogitsBuf` or a [`LogitsView`] (e.g. a `narrow`ed window of a
-    /// scheduler-level batch).
-    pub fn advance<'a>(&mut self, logits: impl Into<LogitsView<'a>>) -> Result<()> {
+    /// scheduler-level batch). Returns how many rows moved at this event;
+    /// 0 marks a ghost event — a denoiser call no row needed, which
+    /// per-row ladders make impossible within one session (the serving
+    /// layer still counts the return to prove that in CI).
+    pub fn advance<'a>(&mut self, logits: impl Into<LogitsView<'a>>) -> Result<usize> {
         let view: LogitsView<'a> = logits.into();
         if self.alg.next_t(&self.core).is_none() {
             bail!("session is already complete");
@@ -316,21 +382,24 @@ impl SamplerSession {
                 self.core.v
             );
         }
-        self.alg.advance(&mut self.core, view);
-        Ok(())
+        Ok(self.alg.advance(&mut self.core, view))
     }
 
     /// Drop sequence `i` from the session mid-flight: its token row
     /// compacts out of `x()`, its RNG stream and per-row algorithm state
-    /// are discarded, and the next denoiser call is one row narrower.
+    /// — including its event ladder — are discarded, and the next
+    /// denoiser call is one row narrower.
     ///
     /// Survivors are **byte-exact**: each sequence samples from its own
-    /// forked stream and the event ladder is never recomputed, so every
-    /// remaining row produces exactly the tokens it would have produced
-    /// had the evicted row stayed (pinned per kind by
-    /// `tests/narrowing.rs`). This is what lets the scheduler free a
-    /// cancelled request's slot at the next transition-time boundary
-    /// instead of riding it to lane retirement.
+    /// forked stream, so every remaining row produces exactly the tokens
+    /// it would have produced had the evicted row stayed (pinned per kind
+    /// by `tests/narrowing.rs`). Events only the evicted row needed are
+    /// retired with it: the remaining schedule re-merges from the
+    /// survivors' ladders, [`Self::total_events`] shrinks to the calls
+    /// already made plus the survivors' union-|𝒯|, and the lane never
+    /// pays a ghost denoiser call for a departed row. This is what lets
+    /// the scheduler free a cancelled request's slot at the next
+    /// transition-time boundary instead of riding it to lane retirement.
     ///
     /// The last row cannot be evicted — drop the whole session instead.
     /// With tracing on, the trace follows whichever row is currently row
@@ -346,6 +415,50 @@ impl SamplerSession {
         self.alg.evict_row(i);
         self.batch -= 1;
         Ok(())
+    }
+
+    /// Carve sequences `rows` (strictly ascending row indices) out of
+    /// this session into a new, independent session, shrinking `self` to
+    /// the rows that stay. Call only at an NFE boundary (after an
+    /// [`Self::advance`], before the next denoiser call).
+    ///
+    /// Both halves resume **byte-exactly**: moved rows keep their forked
+    /// RNG streams and their event ladders, shared algorithm state is
+    /// cloned, and the lane stream is never drawn after construction, so
+    /// each half produces exactly the tokens the unsplit session would
+    /// have (pinned per kind by `tests/rebalance.rs`). Each half's
+    /// [`Self::total_events`] re-merges over its own rows, so the two
+    /// totals may each be smaller than the original — splitting can
+    /// *reduce* combined denoiser calls for per-seq-𝒯 lanes, never
+    /// increase per-row work. The scheduler's lane splitting
+    /// (`donate_rows`) is built on this.
+    ///
+    /// At least one row must move and at least one must stay.
+    pub fn split_rows(&mut self, rows: &[usize]) -> Result<SamplerSession> {
+        if rows.is_empty() {
+            bail!("split_rows needs at least one row to move");
+        }
+        if rows.len() >= self.batch {
+            bail!(
+                "cannot split all {} rows out of a {}-row session; move the whole session instead",
+                rows.len(),
+                self.batch
+            );
+        }
+        if !rows.windows(2).all(|w| w[0] < w[1]) {
+            bail!("split_rows indices must be strictly ascending: {rows:?}");
+        }
+        if *rows.last().unwrap() >= self.batch {
+            bail!(
+                "row {} out of bounds for session batch {}",
+                rows.last().unwrap(),
+                self.batch
+            );
+        }
+        let core = self.core.split_rows(rows);
+        let alg = self.alg.split_rows(rows);
+        self.batch -= rows.len();
+        Ok(SamplerSession { core, alg, batch: rows.len() })
     }
 
     /// Predetermined per-position transition times (DNDM family only).
@@ -503,6 +616,52 @@ mod tests {
             );
             assert_eq!(sess.nfe(), total, "{}: total is stable over the run", sk.name());
         }
+    }
+
+    fn drive_rest(den: &MockDenoiser, mut sess: SamplerSession) -> Vec<Vec<u32>> {
+        while let Some(call) = sess.next_event() {
+            let logits =
+                den.denoise(sess.x(), &vec![call.t; sess.batch()], None).unwrap();
+            sess.advance(&logits).unwrap();
+        }
+        sess.into_result().tokens
+    }
+
+    #[test]
+    fn split_rows_validates_its_arguments() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 25);
+        let mut sess = SamplerSession::new(den.config(), &cfg, 3, 5).unwrap();
+        assert!(sess.split_rows(&[]).is_err(), "empty split");
+        assert!(sess.split_rows(&[0, 1, 2]).is_err(), "cannot move every row");
+        assert!(sess.split_rows(&[1, 1]).is_err(), "must be strictly ascending");
+        assert!(sess.split_rows(&[2, 1]).is_err(), "must be strictly ascending");
+        assert!(sess.split_rows(&[3]).is_err(), "out of bounds");
+        assert_eq!(sess.batch(), 3, "failed splits leave the session intact");
+    }
+
+    #[test]
+    fn split_halves_match_the_unsplit_run() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_temperature(1.0);
+        let den = mock("absorbing");
+        let want = generate(&den, &cfg, None, 4, 9, None).unwrap();
+
+        let den = mock("absorbing");
+        let mut sess = SamplerSession::new(den.config(), &cfg, 4, 9).unwrap();
+        // one event together, then carve rows 1 and 3 off mid-flight
+        let call = sess.next_event().unwrap();
+        let logits = den.denoise(sess.x(), &vec![call.t; 4], None).unwrap();
+        sess.advance(&logits).unwrap();
+        let moved = sess.split_rows(&[1, 3]).unwrap();
+        assert_eq!(sess.batch(), 2);
+        assert_eq!(moved.batch(), 2);
+        assert_eq!(moved.nfe(), 1, "the split half inherits the event count");
+        let keep = drive_rest(&den, sess);
+        let split = drive_rest(&den, moved);
+        assert_eq!(keep[0], want.tokens[0]);
+        assert_eq!(keep[1], want.tokens[2]);
+        assert_eq!(split[0], want.tokens[1]);
+        assert_eq!(split[1], want.tokens[3]);
     }
 
     #[test]

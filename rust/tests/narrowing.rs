@@ -6,8 +6,10 @@
 //!
 //! * session level — for every `SamplerKind`, a batch-3
 //!   `SamplerSession` with `evict_slot(1)` fired mid-run produces the
-//!   same rows 0/2 as the uninterrupted run (per-row RNG streams + an
-//!   event ladder that never recomputes make this exact);
+//!   same rows 0/2 as the uninterrupted run (per-row RNG streams + a
+//!   per-row event ladder that re-merges over the survivors make this
+//!   exact, and retire the departed row's unique events so no call is
+//!   spent on a time where nobody moves);
 //! * scheduler level — cancelling one member of a shared-𝒯 lane narrows
 //!   the lane at the next boundary (batch width shrinks, the freed slot
 //!   refills the same tick) and the survivors' served outputs equal the
@@ -110,8 +112,9 @@ fn evict_slot_rejects_out_of_bounds_and_the_last_row() {
 }
 
 /// Per-sequence 𝒯 (the union-ladder ablation): eviction drops the row's
-/// τ assignment but keeps the admitted event ladder, so survivors keep
-/// both their schedule and their bytes.
+/// entire ladder, and the remaining per-row ladders re-merge lazily at
+/// `next_event()` — so survivors keep their own schedules and their
+/// bytes, while events unique to the departed row are never fired.
 #[test]
 fn eviction_preserves_survivors_under_per_sequence_tau() {
     let mut cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_temperature(1.0);
@@ -122,6 +125,75 @@ fn eviction_preserves_survivors_under_per_sequence_tau() {
     let narrowed = run_session(&mock("absorbing"), &cfg, seed, Some(1));
     assert_eq!(narrowed[0], full[0]);
     assert_eq!(narrowed[1], full[2]);
+}
+
+/// The tentpole pin, session level: with per-sequence 𝒯, evicting a row
+/// whose ladder holds τ values no survivor shares must *shrink* the
+/// denoiser-call count to exactly the survivors' union-|𝒯| — strictly
+/// fewer calls than the full batch needed. (Before per-row ladders, the
+/// admitted union ladder kept firing the departed row's times as ghost
+/// events: full-width denoiser calls where zero rows moved.)
+#[test]
+fn evicting_a_row_with_unique_events_cuts_the_call_count() {
+    let mut cfg = SamplerConfig::new(SamplerKind::Dndm, 100_000).with_temperature(1.0);
+    cfg.shared_tau = false;
+
+    // τ over 100k steps and n=8: three rows virtually never collide, so
+    // row 1 always holds unique events — but assert it, don't assume it
+    let den = mock("absorbing");
+    let seed = (0..64u64)
+        .find(|&s| {
+            let sess = SamplerSession::new(den.config(), &cfg, 3, s).unwrap();
+            let taus = sess.taus().expect("dndm exposes per-row τ").to_vec();
+            let union = |rows: &[usize]| {
+                let mut evs: Vec<usize> =
+                    rows.iter().flat_map(|&r| taus[r].iter().copied()).collect();
+                evs.sort_unstable();
+                evs.dedup();
+                evs.len()
+            };
+            union(&[0, 2]) < union(&[0, 1, 2]) && sess.total_events() >= 3
+        })
+        .expect("some seed in 0..64 gives row 1 a unique τ");
+
+    let full_calls = {
+        let den = mock("absorbing");
+        run_session(&den, &cfg, seed, None);
+        den.calls()
+    };
+
+    let den = mock("absorbing");
+    let mut sess = SamplerSession::new(den.config(), &cfg, 3, seed).unwrap();
+    let taus = sess.taus().unwrap().to_vec();
+    let survivors_union = {
+        let mut evs: Vec<usize> =
+            taus[0].iter().chain(taus[2].iter()).copied().collect();
+        evs.sort_unstable();
+        evs.dedup();
+        evs.len()
+    };
+    assert!(
+        (survivors_union as u64) < full_calls,
+        "row 1 holds unique events, so the union must shrink"
+    );
+
+    sess.evict_slot(1).unwrap();
+    assert_eq!(
+        sess.total_events(),
+        survivors_union,
+        "total_events is exact after eviction (no ghost events budgeted)"
+    );
+    while let Some(call) = sess.next_event() {
+        let logits = den
+            .denoise(sess.x(), &vec![call.t; sess.batch()], None)
+            .unwrap();
+        let moved = sess.advance(&logits).unwrap();
+        assert!(moved >= 1, "no denoiser call may fire a ghost event");
+    }
+    assert_eq!(
+        den.calls() as usize, survivors_union,
+        "calls collapse to the survivors' union-|𝒯|"
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -258,6 +330,12 @@ fn cancelled_lane_member_narrows_the_lane_and_preserves_survivors() {
             "{}: survivor 2 must be byte-identical",
             sk.name()
         );
+        assert_eq!(
+            s.ghost_events(),
+            0,
+            "{}: narrowing must never leave an event nobody fires at",
+            sk.name()
+        );
     }
 }
 
@@ -298,4 +376,5 @@ fn evicted_slot_refills_the_same_tick_while_the_lane_survives() {
     let rest = drain(&mut s);
     assert_eq!(rest.len(), 3, "both survivors and the refill complete");
     assert!(rest.iter().all(|(_, o, t)| *o == Outcome::Done && t.is_some()));
+    assert_eq!(s.ghost_events(), 0, "no call fired an event with zero movers");
 }

@@ -8,11 +8,15 @@
 //! * scheduler level — for every kind, a width-3 lane donated after its
 //!   first denoiser call and resumed on a second scheduler finishes with
 //!   exactly the undonated run's bytes (the live session moves whole:
-//!   `AlgState`, per-row RNG streams, event-ladder cursor), plus the
-//!   donor-side refusal paths and the mixed-key adoption race;
+//!   `AlgState`, per-row RNG streams, event-ladder cursors), plus the
+//!   donor-side refusal paths and the mixed-key adoption race — and the
+//!   same pin for lane **splitting** (`donate_rows`): the back rows move
+//!   with their per-row ladders and RNG streams, the front rows keep
+//!   serving on the donor, and *both* halves stay byte-exact;
 //! * router level — `Router::rebalance()` donates an in-flight lane to
-//!   an idle shard when queues are too shallow to steal, with calls
-//!   conserved across shards and `lanes_donated`/`rebalances` accounted;
+//!   an idle shard when queues are too shallow to steal (calls conserved
+//!   across shards, `lanes_donated`/`rebalances` accounted), and splits
+//!   the lane instead when it is the donor's only work (`lanes_split`);
 //! * cadence level — the background loop donates during a traffic lull
 //!   with **no** submit to trigger it.
 
@@ -177,6 +181,64 @@ fn donated_lane_resumes_byte_identical_for_every_kind() {
     }
 }
 
+/// The split pin: for every kind, a width-3 lane **split** at the
+/// boundary after its first call — back row to a different scheduler,
+/// front rows staying put — finishes with byte-identical tokens on both
+/// halves. Per-row event ladders and forked RNG streams are what make
+/// the carve exact: each moved row takes its own ladder suffix and its
+/// own stream, and the survivors' merged ladder never fires an event the
+/// departed rows owned exclusively.
+#[test]
+fn split_lane_halves_resume_byte_identical_for_every_kind() {
+    for (sk, noise) in ALL_KINDS {
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+        let probe = engine(noise);
+        let seed = lane_seed(&probe, &cfg);
+
+        // reference: the lane never splits
+        let mut r: Scheduler<usize> = Scheduler::new(engine(noise), cfg.clone(), policy());
+        for id in 0..3 {
+            r.enqueue(req(id, noise, seed));
+        }
+        let full = drain(&mut r);
+        let want: Vec<Vec<u32>> =
+            (0..3).map(|id| tokens_of(&full, id, sk.name())).collect();
+
+        // split run: one call on the donor, then the back row moves —
+        // legal even with nothing queued, the donor keeps rows 0..2
+        let mut donor: Scheduler<usize> =
+            Scheduler::new(engine(noise), cfg.clone(), policy());
+        for id in 0..3 {
+            donor.enqueue(req(id, noise, seed));
+        }
+        let first = donor.tick();
+        assert!(first.is_empty(), "{}: lane must outlive the first call", sk.name());
+        let lane = donor
+            .donate_rows(1)
+            .unwrap_or_else(|| panic!("{}: split refused", sk.name()));
+        assert_eq!(lane.width(), 1, "{}: back ⌊3/2⌋ = 1 row moved", sk.name());
+        assert_eq!(donor.in_flight(), 2, "{}: donor keeps the front rows", sk.name());
+
+        let mut thief: Scheduler<usize> =
+            Scheduler::new(engine(noise), cfg.clone(), policy());
+        thief.adopt_lane(lane);
+        assert_eq!(thief.in_flight(), 1, "{}", sk.name());
+
+        let mut done = drain(&mut thief);
+        done.extend(drain(&mut donor));
+        for id in 0..3 {
+            assert_eq!(
+                tokens_of(&done, id, sk.name()),
+                want[id],
+                "{}: request {id} must be byte-identical after the split",
+                sk.name()
+            );
+        }
+        assert_eq!(donor.ghost_events(), 0, "{}", sk.name());
+        assert_eq!(thief.ghost_events(), 0, "{}", sk.name());
+    }
+}
+
 /// The adoption race: the rebalancer only donates to idle shards, but a
 /// submit can land on the thief first. Adoption is total — the donated
 /// lane coexists with a different in-flight key, each lane advances its
@@ -281,6 +343,77 @@ fn manual_rebalance_donates_an_in_flight_lane_to_an_idle_shard() {
     assert_eq!(merged.lanes_donated, 1);
     assert_eq!(merged.requests, 2);
     assert_eq!(merged.queued_low + merged.queued_normal + merged.queued_high, 0);
+    router.shutdown();
+    router.join();
+}
+
+/// Stage 3 through the serving stack: one *wide* lane is shard 0's only
+/// work — whole-lane donation would idle the donor (zero-sum), so
+/// `Router::rebalance()` **splits** it instead. The back row resumes on
+/// the idle shard, the front row keeps serving on shard 0, and both
+/// requests retire with their full per-request NFE.
+#[test]
+fn manual_rebalance_splits_a_wide_lane_when_it_is_the_only_work() {
+    const STEPS: usize = 40_000;
+    let wide = SchedPolicy {
+        max_batch: 2,
+        window: Duration::from_millis(50),
+        shared_tau_groups: true,
+    };
+    let router = ServeBuilder::new(|| Ok(cipher_mock_engine(8)), slow_cfg(STEPS))
+        .continuous(wide)
+        .shards(2)
+        .rebalance(RebalancePolicy::manual())
+        .start();
+    let mut tickets = Vec::new();
+    for i in 0..2 {
+        let req = GenRequest::new(i).src("the quick fox");
+        tickets.push(router.shard(0).submit_request(req).unwrap());
+    }
+    // the grouping window co-admits both submits into one width-2 lane;
+    // wait until the stats confirm it is in flight
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let st = router.shard(0).stats().unwrap();
+        if st.lanes == 1 && st.in_flight == 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the width-2 lane never formed: {st:?}"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // shard 0: a single wide lane, nothing queued; shard 1 idle —
+    // stealing has nothing to take, whole-lane donation is zero-sum,
+    // so the planner reaches stage 3 and splits
+    router.rebalance().unwrap();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let per_shard = router.shard_stats().unwrap();
+    assert_eq!(per_shard[0].lanes_split, 1, "the lane split: {per_shard:?}");
+    assert_eq!(per_shard[0].lanes_donated, 0, "no whole lane moved");
+    assert!(per_shard[0].rebalances >= 1);
+    assert!(per_shard[1].nn_calls >= 1, "thief resumed the split half");
+    // the donor pays exactly STEPS calls (k joint width-2 calls, then
+    // STEPS − k solo); the thief pays the split half's remainder
+    assert_eq!(per_shard[0].nn_calls, STEPS as u64);
+    assert!(per_shard[1].nn_calls < STEPS as u64);
+    let merged = router.stats().unwrap();
+    assert_eq!(merged.lanes_split, 1);
+    assert_eq!(
+        merged.ghost_events_fired, 0,
+        "split halves never fire an event with zero movers"
+    );
+    // sequence-evaluation conservation, seen through per-request NFE:
+    // each request's session spans exactly STEPS events across donor +
+    // thief, nothing dropped and nothing double-served
+    assert!(
+        (merged.avg_request_nfe - STEPS as f64).abs() < 1e-9,
+        "avg_request_nfe {} != {STEPS}",
+        merged.avg_request_nfe
+    );
     router.shutdown();
     router.join();
 }

@@ -1,6 +1,6 @@
 #!/usr/bin/env python3
 """CI gate: fail when allocs/call in a serving bench run regresses past the
-committed ceiling.
+committed ceiling, or when any row fired a ghost event.
 
 Usage: check_bench_allocs.py BENCH_serving.json serving_allocs_baseline.json
 
@@ -9,6 +9,14 @@ baseline maps each policy row to a ceiling on `allocs_per_call`. Throughput
 and latency are NOT gated (too noisy on shared runners) — heap acquisitions
 per denoiser call are deterministic enough to hold a line on, and they are
 the flat-data-path metric the repo actually optimizes (docs/perf.md).
+
+`ghost_events_fired` (a denoiser call at which zero rows moved — only
+possible if lane narrowing fails to retire a departed row's transition
+times) is gated at exactly 0 on EVERY row that reports it, including rows
+with no allocs ceiling: per-row event ladders make ghosts structurally
+impossible, so any nonzero value is a correctness bug, not noise. The
+bench's narrowing scenario cancels requests mid-flight specifically to
+exercise this.
 
 Ratchet policy (see the baseline file): ceilings start generous; once the
 uploaded BENCH_serving.json artifacts record a stable trajectory, lower
@@ -38,6 +46,10 @@ def main() -> int:
     for row in bench["rows"]:
         policy = row["policy"]
         seen.add(policy)
+        ghosts = row.get("ghost_events_fired")
+        if ghosts is not None and ghosts != 0:
+            print(f"{policy:28s} ghost_events_fired {ghosts}  GHOST EVENTS (must be 0)")
+            failures.append(policy)
         value = row["allocs_per_call"]
         if policy not in ceilings:
             print(f"{policy:28s} allocs/call {value:9.1f}  (no ceiling — not gated)")
@@ -55,11 +67,13 @@ def main() -> int:
         print(f"\nbaseline rows missing from the bench output: {', '.join(missing)}")
         failures.extend(missing)
     if failures:
-        print(f"\nallocs/call gate failed for: {', '.join(sorted(set(failures)))}")
-        print("If the regression is intentional, raise the ceiling in")
+        print(f"\nbench gate failed for: {', '.join(sorted(set(failures)))}")
+        print("If an allocs/call regression is intentional, raise the ceiling in")
         print(f"{sys.argv[2]} in the same PR and say why in its comment field.")
+        print("A nonzero ghost_events_fired has no ceiling to raise — it is a")
+        print("lane-narrowing correctness bug; fix it.")
         return 1
-    print("\nallocs/call gate passed")
+    print("\nbench gate passed (allocs/call ceilings + ghost_events_fired == 0)")
     return 0
 
 
