@@ -11,6 +11,11 @@
 //! against the deterministic cipher mock (so the continuous-admission path
 //! is exercised on every machine).
 //!
+//! Two stress rows ride along: a narrowing scenario (mid-flight
+//! cancellations evict live lane rows) and a chaos scenario (seeded
+//! transient denoiser faults absorbed by the retry policy — see
+//! `docs/robustness.md`).
+//!
 //! Besides the human-readable table, the bench emits a machine-readable
 //! `BENCH_serving.json` with per-row throughput, per-NFE host overhead,
 //! and allocations per denoiser call (counted by a process-wide allocator
@@ -25,10 +30,13 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use dndm::coordinator::{BatchPolicy, Engine, Event, GenRequest, SchedPolicy, Server};
-use dndm::data::{gen_pairs, Dataset, Split};
+use dndm::coordinator::{
+    cipher_mock_denoiser, BatchPolicy, Engine, Event, FaultPolicy, GenRequest, SchedPolicy,
+    Server, ServerStats,
+};
+use dndm::data::{gen_pairs, words, Dataset, Split};
 use dndm::exp;
-use dndm::runtime::Artifacts;
+use dndm::runtime::{Artifacts, ChaosDenoiser};
 use dndm::sampler::{SamplerConfig, SamplerKind};
 use dndm::util::bench::Table;
 
@@ -92,9 +100,49 @@ struct Row {
     /// row's unique transition times — so CI hard-gates this at 0 for
     /// every row (`scripts/check_bench_allocs.py`).
     ghost_events: u64,
+    /// denoiser calls repeated after a transient fault. Zero on clean
+    /// rows; the chaos row shows the retry cost of its injected fault
+    /// rate as the gap to the clean continuous row.
+    retries: u64,
+    /// transient faults absorbed by the retry policy (≥ `retries` only
+    /// when retry budgets are exhausted, which must not happen here).
+    faults_transient: u64,
+    /// non-retryable faults. Hard-gated at 0 for every row — even the
+    /// chaos row injects transient faults only
+    /// (`scripts/check_bench_allocs.py`).
+    faults_fatal: u64,
+    /// 1 if the shard's circuit breaker was open at snapshot time.
+    /// Hard-gated at 0 for every row: the bench fault rate is far below
+    /// the breaker threshold.
+    breaker_open: u64,
+    /// lanes evacuated to another shard by a supervision pass. Always 0
+    /// in this single-shard bench; recorded so the JSON schema matches
+    /// the router stats surface.
+    lanes_salvaged: u64,
 }
 
-fn factory(use_mock: bool) -> impl FnOnce() -> anyhow::Result<Engine> + Send + 'static {
+/// One row from a finished run: throughput from the wall clock, the rest
+/// from the server's final stats snapshot.
+fn make_row(name: &'static str, n_requests: usize, wall: f64, allocs: u64, stats: &ServerStats) -> Row {
+    let calls = stats.nn_calls.max(1);
+    Row {
+        name,
+        req_per_s: n_requests as f64 / wall,
+        e2e_p95_ms: stats.e2e_p95.as_secs_f64() * 1e3,
+        nn_calls: stats.nn_calls,
+        avg_request_nfe: stats.avg_request_nfe,
+        per_nfe_host_us: wall / calls as f64 * 1e6,
+        allocs_per_call: allocs as f64 / calls as f64,
+        ghost_events: stats.ghost_events_fired,
+        retries: stats.retries,
+        faults_transient: stats.faults_transient,
+        faults_fatal: stats.faults_fatal,
+        breaker_open: stats.breaker_open as u64,
+        lanes_salvaged: stats.lanes_salvaged,
+    }
+}
+
+fn factory(use_mock: bool) -> impl Fn() -> anyhow::Result<Engine> + Send + 'static {
     move || {
         if use_mock {
             return Ok(dndm::coordinator::cipher_mock_engine(16));
@@ -152,17 +200,7 @@ fn run(name: &'static str, mode: Mode, n_requests: usize, steps: usize, use_mock
     let stats = srv.stats().unwrap();
     srv.shutdown();
     join.join();
-    let calls = stats.nn_calls.max(1);
-    Row {
-        name,
-        req_per_s: n_requests as f64 / wall,
-        e2e_p95_ms: stats.e2e_p95.as_secs_f64() * 1e3,
-        nn_calls: stats.nn_calls,
-        avg_request_nfe: stats.avg_request_nfe,
-        per_nfe_host_us: wall / calls as f64 * 1e6,
-        allocs_per_call: allocs as f64 / calls as f64,
-        ghost_events: stats.ghost_events_fired,
-    }
+    make_row(name, n_requests, wall, allocs, &stats)
 }
 
 /// The narrowing scenario: continuous serving with per-request 𝒯
@@ -217,17 +255,56 @@ fn run_narrowing(name: &'static str, n_requests: usize, steps: usize, use_mock: 
     let stats = srv.stats().unwrap();
     srv.shutdown();
     join.join();
-    let calls = stats.nn_calls.max(1);
-    Row {
-        name,
-        req_per_s: n_requests as f64 / wall,
-        e2e_p95_ms: stats.e2e_p95.as_secs_f64() * 1e3,
-        nn_calls: stats.nn_calls,
-        avg_request_nfe: stats.avg_request_nfe,
-        per_nfe_host_us: wall / calls as f64 * 1e6,
-        allocs_per_call: allocs as f64 / calls as f64,
-        ghost_events: stats.ghost_events_fired,
+    make_row(name, n_requests, wall, allocs, &stats)
+}
+
+/// The chaos scenario: continuous serving atop a fault-injecting
+/// denoiser with a seeded transient-fault rate, so the row is
+/// reproducible run to run. The scheduler's retry policy (zero backoff,
+/// so the degradation vs the clean continuous row reflects the retried
+/// calls themselves rather than sleeps) must absorb every fault:
+/// `retries > 0` while `faults_fatal` and `breaker_open` stay 0 — CI
+/// gates both on every row (`scripts/check_bench_allocs.py`). Always
+/// mock-backed, even when real artifacts exist: fault injection wraps
+/// the deterministic cipher denoiser.
+fn run_chaos(name: &'static str, n_requests: usize, steps: usize) -> Row {
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let fault = FaultPolicy {
+        backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        ..FaultPolicy::default()
+    };
+    let (srv, join) = Server::start_continuous_with(
+        || {
+            let den = ChaosDenoiser::new(cipher_mock_denoiser(16), 0xC4A0_5EED)
+                .transient_rate(0.05);
+            Ok(Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-chaos"))
+        },
+        cfg,
+        SchedPolicy {
+            max_batch: 16,
+            window: Duration::from_millis(20),
+            shared_tau_groups: true,
+        },
+        fault,
+    );
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| srv.submit_async(Some(s.join(" ")), i as u64).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
     }
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let stats = srv.stats().unwrap();
+    srv.shutdown();
+    join.join();
+    make_row(name, n_requests, wall, allocs, &stats)
 }
 
 /// Cheap engine-init probe: loads artifacts + weights but skips the
@@ -257,7 +334,9 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
         json.push_str(&format!(
             "    {{\"policy\": \"{}\", \"req_per_s\": {:.3}, \"e2e_p95_ms\": {:.3}, \
              \"nn_calls\": {}, \"avg_request_nfe\": {:.3}, \"per_nfe_host_us\": {:.3}, \
-             \"allocs_per_call\": {:.1}, \"ghost_events_fired\": {}}}{}\n",
+             \"allocs_per_call\": {:.1}, \"ghost_events_fired\": {}, \"retries\": {}, \
+             \"faults_transient\": {}, \"faults_fatal\": {}, \"breaker_open\": {}, \
+             \"lanes_salvaged\": {}}}{}\n",
             r.name,
             r.req_per_s,
             r.e2e_p95_ms,
@@ -266,6 +345,11 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
             r.per_nfe_host_us,
             r.allocs_per_call,
             r.ghost_events,
+            r.retries,
+            r.faults_transient,
+            r.faults_fatal,
+            r.breaker_open,
+            r.lanes_salvaged,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -315,10 +399,11 @@ fn main() {
         rows.push(run(name, mode, n, steps, use_mock));
     }
     rows.push(run_narrowing("continuous b=16 narrowing", n, steps, use_mock));
+    rows.push(run_chaos("continuous b=16 chaos", n, steps));
 
     let mut out = Table::new(&[
         "policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE", "host µs/NFE", "allocs/call",
-        "ghosts",
+        "ghosts", "retries",
     ]);
     for r in &rows {
         out.row(&[
@@ -330,6 +415,7 @@ fn main() {
             format!("{:.1}", r.per_nfe_host_us),
             format!("{:.1}", r.allocs_per_call),
             r.ghost_events.to_string(),
+            r.retries.to_string(),
         ]);
     }
     println!(

@@ -139,10 +139,12 @@ impl Engine {
     }
 }
 
-/// Deterministic mock-backed engine implementing the synthetic iwslt
-/// cipher (src word id + 41) perfectly — the shared backend for serving
-/// tests and artifact-free bench runs.
-pub fn cipher_mock_engine(seq_len: usize) -> Engine {
+/// The bare denoiser behind [`cipher_mock_engine`] — exposed so callers
+/// can wrap it (e.g. in a fault-injecting
+/// [`ChaosDenoiser`](crate::runtime::ChaosDenoiser)) before building the
+/// engine with [`Engine::from_denoiser`] and
+/// [`words::translation_vocab`].
+pub fn cipher_mock_denoiser(seq_len: usize) -> crate::runtime::MockDenoiser {
     use crate::runtime::MockDenoiser;
     let vocab = words::translation_vocab();
     let cfg = MockDenoiser::test_config(vocab.len(), seq_len, seq_len, "absorbing");
@@ -155,7 +157,15 @@ pub fn cipher_mock_engine(seq_len: usize) -> Engine {
         }
     });
     den.peak = 14.0; // sharp enough that temperature-1 draws stay correct
-    Engine::from_denoiser(Box::new(den), vocab, "cipher-mock")
+    den
+}
+
+/// Deterministic mock-backed engine implementing the synthetic iwslt
+/// cipher (src word id + 41) perfectly — the shared backend for serving
+/// tests and artifact-free bench runs.
+pub fn cipher_mock_engine(seq_len: usize) -> Engine {
+    let den = cipher_mock_denoiser(seq_len);
+    Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-mock")
 }
 
 /// Vocab for a dataset name (translation share one vocab; uncond per corpus).

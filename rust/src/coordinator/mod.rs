@@ -22,8 +22,11 @@
 //! * [`rebalancer`] — the background rebalance loop and its pure decision
 //!   policy: queued-request stealing plus **in-flight lane donation** (a
 //!   whole live lane moves shards at a transition-time boundary and
-//!   resumes byte-exactly — possible because 𝒯 is predetermined). See
-//!   `docs/rebalancing.md`.
+//!   resumes byte-exactly — possible because 𝒯 is predetermined). The
+//!   same loop supervises **shard failover**: retry/backoff at the
+//!   scheduler's denoiser call sites, a circuit breaker that parks lanes
+//!   at a boundary, salvage onto healthy shards, engine restart. See
+//!   `docs/rebalancing.md` and `docs/robustness.md`.
 //! * [`batcher`] — the legacy fixed batching policy (max size +
 //!   collection window), kept as the serving bench's ablation baseline.
 
@@ -36,12 +39,12 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{cipher_mock_engine, Engine, GenOutput};
+pub use engine::{cipher_mock_denoiser, cipher_mock_engine, Engine, GenOutput};
 pub use rebalancer::RebalancePolicy;
 pub use request::{CancelHandle, Event, GenRequest, Priority, Ticket, TicketSink};
 pub use router::{Router, ServeBuilder};
 pub use scheduler::{
-    Delivery, DonatedLane, Finished, LaneInfo, Outcome, Pending, SchedPolicy, Scheduler,
-    SpecKey,
+    Delivery, DonatedLane, FaultPolicy, Finished, LaneInfo, Outcome, Pending, SchedPolicy,
+    Scheduler, SpecKey,
 };
 pub use server::{Server, ServerStats};

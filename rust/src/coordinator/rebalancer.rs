@@ -45,6 +45,18 @@
 //! executes the plan; the background thread in `spawn_background` just
 //! calls it on a timer.
 //!
+//! The same cadence loop also runs a **supervision pass** first (shard
+//! failover, `docs/robustness.md`): a shard whose circuit breaker is
+//! open has parked its in-flight lanes at a transition-time boundary,
+//! so the supervisor salvages them — queued requests re-enqueue and
+//! parked lanes resume byte-exactly on the least-loaded healthy shard —
+//! and then asks the broken shard to rebuild its engine from the
+//! retained factory. [`plan_supervision`] is the pure decision;
+//! `supervise_pass` is the I/O wrapper. Init-dead shards (factory
+//! failed at startup: `healthy: false` with the breaker closed) are not
+//! actionable — they hold nothing to salvage and have no engine to
+//! restart.
+//!
 //! When is movement **refused**? See `docs/rebalancing.md` for the full
 //! table; in short:
 //!
@@ -137,14 +149,21 @@ pub struct ShardView {
     /// terminal) requests routed to this shard. `0` means idle — safe to
     /// adopt a lane without mixing spec keys.
     pub load: usize,
-    /// `false` when the shard's engine failed to build
-    /// (`ServerStats::healthy`): such a shard only drains and fails
-    /// requests, so it must be neither donor nor thief — its zeroed
-    /// gauges would otherwise make it look like a perfect idle shard and
-    /// every donation to it would fail the moved requests.
+    /// `false` when the shard cannot serve (`ServerStats::healthy`):
+    /// its engine failed to build, a failover restart failed, or its
+    /// circuit breaker is currently open. Such a shard must be neither
+    /// donor nor thief — its zeroed/frozen gauges would otherwise make
+    /// it look like a perfect idle shard and every donation to it would
+    /// strand (or fail) the moved requests.
     ///
     /// [`ServerStats::healthy`]: super::server::ServerStats
     pub healthy: bool,
+    /// `true` while the shard's circuit breaker is open
+    /// (`ServerStats::breaker_open`): its scheduler is parked at a
+    /// boundary and [`plan_supervision`] should salvage its work and
+    /// restart its engine. Always `false` when `healthy` — and also
+    /// `false` for init-dead shards, which are beyond supervision.
+    pub breaker_open: bool,
 }
 
 /// One lane's donation cost-model inputs (see [`pick_donation`]).
@@ -249,12 +268,69 @@ pub fn pick_donation(costs: &[LaneCost], min_remaining: usize) -> Option<usize> 
         .map(|(i, _)| i)
 }
 
+/// The supervision decision, pure like [`plan`]: pair every **broken**
+/// shard — circuit breaker open, lanes parked at a boundary — with the
+/// least-loaded healthy shard that should adopt its salvaged work.
+/// Init-dead shards (`healthy: false` with the breaker closed) are
+/// skipped: they hold nothing to salvage and have no engine to restart.
+/// With no healthy shard at all there is nowhere to salvage **to**, so
+/// every pairing is deferred (the parked work stays byte-exactly
+/// resumable where it is).
+pub fn plan_supervision(views: &[ShardView]) -> Vec<(usize, usize)> {
+    let target = (0..views.len())
+        .filter(|&i| views[i].healthy)
+        .min_by_key(|&i| views[i].load);
+    let Some(target) = target else {
+        return Vec::new();
+    };
+    (0..views.len())
+        .filter(|&i| views[i].breaker_open)
+        .map(|broken| (broken, target))
+        .collect()
+}
+
 /// A shard as the rebalancer addresses it: the cloneable server handle
 /// plus the router's load gauge for that shard.
 #[derive(Clone)]
 pub(crate) struct ShardHandle {
     pub(crate) server: Server,
     pub(crate) load: Arc<AtomicUsize>,
+}
+
+/// Snapshot one shard into the planner's pure view.
+fn shard_view(st: &super::server::ServerStats, sh: &ShardHandle) -> ShardView {
+    ShardView {
+        queued: (st.queued_low + st.queued_normal + st.queued_high) as usize,
+        lanes: st.lanes as usize,
+        in_flight: st.in_flight as usize,
+        load: sh.load.load(Ordering::Relaxed),
+        healthy: st.healthy,
+        breaker_open: st.breaker_open,
+    }
+}
+
+/// One supervision pass (shard failover): snapshot every shard,
+/// [`plan_supervision`], and for each broken shard dispatch the two
+/// failover stages — salvage (queued requests + parked lanes move to
+/// the target, byte-exactly) then an engine restart from the retained
+/// factory. Both are fire-and-forget boundary-granular messages; a
+/// shard whose breaker closed on its own in the meantime ignores them.
+/// Returns how many broken shards were acted on. Errors only when a
+/// shard is gone (shutdown) — callers treat that as "stop", not a
+/// failure.
+pub(crate) fn supervise_pass(shards: &[ShardHandle]) -> Result<usize> {
+    let mut views = Vec::with_capacity(shards.len());
+    for sh in shards {
+        views.push(shard_view(&sh.server.stats()?, sh));
+    }
+    let pairs = plan_supervision(&views);
+    for &(broken, target) in &pairs {
+        shards[broken]
+            .server
+            .evacuate_into(&shards[target].server, shards[target].load.clone());
+        shards[broken].server.restart_engine();
+    }
+    Ok(pairs.len())
 }
 
 /// One rebalance pass: snapshot every shard (stats round-trip + load
@@ -267,14 +343,7 @@ pub(crate) fn run_pass(
 ) -> Result<Option<Action>> {
     let mut views = Vec::with_capacity(shards.len());
     for sh in shards {
-        let st = sh.server.stats()?;
-        views.push(ShardView {
-            queued: (st.queued_low + st.queued_normal + st.queued_high) as usize,
-            lanes: st.lanes as usize,
-            in_flight: st.in_flight as usize,
-            load: sh.load.load(Ordering::Relaxed),
-            healthy: st.healthy,
-        });
+        views.push(shard_view(&sh.server.stats()?, sh));
     }
     let action = plan(&views, policy);
     match action {
@@ -364,7 +433,10 @@ pub(crate) fn spawn_background(
                 return;
             }
             drop(stopped);
-            if run_pass(&shards, &policy).is_err() {
+            // supervision first: a broken shard's parked work must move
+            // before the rebalance planner reasons about load (a parked
+            // shard reports healthy: false and is invisible to it)
+            if supervise_pass(&shards).is_err() || run_pass(&shards, &policy).is_err() {
                 // a shard is gone: the router is shutting down
                 return;
             }
@@ -380,7 +452,7 @@ mod tests {
     // in_flight defaults to `lanes` (one width-1 row per lane): the
     // narrowest possible lanes, which never qualify for splitting
     fn v(queued: usize, lanes: usize, load: usize) -> ShardView {
-        ShardView { queued, lanes, in_flight: lanes, load, healthy: true }
+        ShardView { queued, lanes, in_flight: lanes, load, healthy: true, breaker_open: false }
     }
 
     fn idle() -> ShardView {
@@ -504,6 +576,31 @@ mod tests {
             plan(&views, &RebalancePolicy::default()),
             Some(Action::StealQueued { donor: 2, thief: 1, max: 3 })
         );
+    }
+
+    #[test]
+    fn supervision_pairs_broken_shards_with_the_least_loaded_healthy_one() {
+        // a breaker-open shard reports healthy: false (it can't serve)
+        // and breaker_open: true (it is salvageable + restartable)
+        let parked = ShardView { healthy: false, breaker_open: true, ..v(1, 2, 3) };
+        let views = [parked, v(0, 1, 5), v(0, 0, 1)];
+        assert_eq!(plan_supervision(&views), vec![(0, 2)]);
+        // two broken shards both salvage to the same best target
+        let views = [parked, parked, v(0, 0, 1)];
+        assert_eq!(plan_supervision(&views), vec![(0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn supervision_skips_init_dead_shards_and_defers_without_a_target() {
+        // init-dead (factory failed at startup): healthy false, breaker
+        // closed — nothing to salvage, no engine to restart
+        let dead = ShardView { healthy: false, ..idle() };
+        assert!(plan_supervision(&[dead, idle()]).is_empty());
+        // a broken shard with no healthy shard anywhere: nowhere to
+        // salvage to — defer, the parked work stays resumable in place
+        let parked = ShardView { healthy: false, breaker_open: true, ..idle() };
+        assert!(plan_supervision(&[parked, dead]).is_empty());
+        assert!(plan_supervision(&[]).is_empty());
     }
 
     #[test]

@@ -47,6 +47,11 @@
 //! lulls), an opportunistic pass from `submit_request` whenever the load
 //! gauges show an idle shard next to a loaded one, and explicit
 //! [`Router::rebalance`] calls.
+//!
+//! The same cadence loop supervises **shard failover**
+//! (`docs/robustness.md`): a shard whose circuit breaker tripped has its
+//! parked lanes salvaged to a healthy shard and its engine rebuilt from
+//! the retained factory — [`Router::supervise`] is the manual trigger.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
@@ -59,7 +64,7 @@ use super::batcher::BatchPolicy;
 use super::engine::{Engine, GenOutput};
 use super::rebalancer::{self, RebalancePolicy, RebalancerGuard, ShardHandle};
 use super::request::{GenRequest, Ticket};
-use super::scheduler::{SchedPolicy, SpecKey};
+use super::scheduler::{FaultPolicy, SchedPolicy, SpecKey};
 use super::server::{Server, ServerJoin, ServerStats};
 
 /// Scheduling mode of every shard a [`ServeBuilder`] starts.
@@ -96,6 +101,7 @@ pub struct ServeBuilder<F> {
     mode: ServeMode,
     shards: usize,
     rebalance: RebalancePolicy,
+    fault: FaultPolicy,
 }
 
 impl<F> ServeBuilder<F>
@@ -109,6 +115,7 @@ where
             mode: ServeMode::Continuous(SchedPolicy::default()),
             shards: 1,
             rebalance: RebalancePolicy::default(),
+            fault: FaultPolicy::default(),
         }
     }
 
@@ -141,6 +148,14 @@ where
         self
     }
 
+    /// Retry/breaker [`FaultPolicy`] every continuous shard's scheduler
+    /// applies at its denoiser call sites (`docs/robustness.md`).
+    /// Ignored in fixed mode, which has no retry machinery.
+    pub fn fault_policy(mut self, fault: FaultPolicy) -> Self {
+        self.fault = fault;
+        self
+    }
+
     /// Start every shard and return the routing frontend.
     pub fn start(self) -> Router {
         let mut shards = Vec::with_capacity(self.shards);
@@ -149,7 +164,7 @@ where
             let (server, join) = match self.mode {
                 ServeMode::Fixed(p) => Server::start(factory, self.cfg.clone(), p),
                 ServeMode::Continuous(p) => {
-                    Server::start_continuous(factory, self.cfg.clone(), p)
+                    Server::start_continuous_with(factory, self.cfg.clone(), p, self.fault)
                 }
             };
             shards.push(Shard {
@@ -348,6 +363,22 @@ impl Router {
         // to shift before another stats pass can learn anything
         self.steal_cooldown.store(STEAL_COOLDOWN, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// One supervision pass (shard failover, `docs/robustness.md`): find
+    /// shards whose circuit breaker is open, salvage their work —
+    /// queued requests re-enqueue, parked in-flight lanes resume
+    /// byte-exactly — onto the least-loaded healthy shard, then ask each
+    /// broken shard to rebuild its engine from the retained factory.
+    /// Returns how many broken shards were acted on. The background
+    /// rebalance loop runs this automatically every cadence tick; call
+    /// it directly under [`RebalancePolicy::manual`]. No-op with a
+    /// single shard (nowhere to salvage to) or in fixed mode.
+    pub fn supervise(&self) -> Result<usize> {
+        if self.shards.len() < 2 || !self.continuous {
+            return Ok(0);
+        }
+        rebalancer::supervise_pass(&handles_of(&self.shards))
     }
 
     /// Merged statistics across shards (see [`ServerStats::merged`] for

@@ -57,6 +57,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::runtime::{is_transient, Denoiser};
 use crate::sampler::{SamplerConfig, SamplerKind, SamplerSession};
 use crate::schedule::{TransitionOrder, TransitionSpec};
 use crate::tensor::{LogitsBuf, TokenBatch};
@@ -91,6 +92,54 @@ impl Default for SchedPolicy {
             max_batch: 16,
             window: Duration::from_millis(20),
             shared_tau_groups: true,
+        }
+    }
+}
+
+/// Fault handling at the scheduler's denoiser call sites (separate from
+/// [`SchedPolicy`], which stays a pure admission policy).
+///
+/// A denoiser call is a pure function of `(x, t, src)` — per-row RNG
+/// streams live in the session, not the network — so retrying a transient
+/// fault is byte-identical to the fault never having happened (pinned for
+/// all ten `SamplerKind`s by `tests/chaos.rs`). The escalation ladder on
+/// top of that: **retry** transient faults up to `max_retries` with
+/// exponential backoff; a call that still fails (or fails fatally — see
+/// [`is_transient`]) triggers **lane isolation**, re-running the boundary
+/// lane by lane so only the lanes the fault follows are failed; and once
+/// `breaker_threshold` consecutive attempts have failed, the **circuit
+/// breaker opens**: the scheduler parks (lanes halt *at* a boundary,
+/// untouched and salvageable via [`Scheduler::evacuate`]) and only sends
+/// a probe call after `breaker_cooldown`. See `docs/robustness.md`.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPolicy {
+    /// Retries per denoiser call for transient faults (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles per retry up to
+    /// `max_backoff`. `Duration::ZERO` retries immediately.
+    pub backoff: Duration,
+    /// Ceiling on the exponential backoff.
+    pub max_backoff: Duration,
+    /// A *successful* call slower than this is counted as a transient
+    /// fault for breaker accounting (its result is still used — the call
+    /// is pure, only the shard's health is in question). `None` = never.
+    pub call_timeout: Option<Duration>,
+    /// Consecutive failed attempts (across retries and boundaries) that
+    /// open the breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker parks before letting one probe through.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            max_retries: 3,
+            backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(100),
+            call_timeout: None,
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_millis(250),
         }
     }
 }
@@ -402,6 +451,22 @@ pub struct Scheduler<P> {
     flushing: bool,
     /// reusable per-tick buffers (see [`StepScratch`])
     scratch: StepScratch,
+    /// retry/breaker policy for the denoiser call sites
+    fault: FaultPolicy,
+    /// cumulative: transient-fault retries performed
+    retries: u64,
+    /// cumulative: attempts that failed transiently (incl. slow calls
+    /// counted under [`FaultPolicy::call_timeout`])
+    faults_transient: u64,
+    /// cumulative: attempts that failed fatally
+    faults_fatal: u64,
+    /// consecutive failed attempts; reset by any clean success
+    fail_streak: u32,
+    /// circuit breaker: while open, [`Self::step`] parks — lanes halt at
+    /// the boundary, byte-exactly salvageable via [`Self::evacuate`]
+    breaker_open: bool,
+    /// when the breaker (last) opened, for the cooldown-then-probe cycle
+    breaker_opened_at: Option<Instant>,
 }
 
 impl<P> Scheduler<P> {
@@ -417,7 +482,20 @@ impl<P> Scheduler<P> {
             ghost_events: 0,
             flushing: false,
             scratch: StepScratch::default(),
+            fault: FaultPolicy::default(),
+            retries: 0,
+            faults_transient: 0,
+            faults_fatal: 0,
+            fail_streak: 0,
+            breaker_open: false,
+            breaker_opened_at: None,
         }
+    }
+
+    /// Replace the default [`FaultPolicy`] (builder style).
+    pub fn with_fault_policy(mut self, fault: FaultPolicy) -> Scheduler<P> {
+        self.fault = fault;
+        self
     }
 
     pub fn engine(&self) -> &Engine {
@@ -440,6 +518,102 @@ impl<P> Scheduler<P> {
     /// and gated in CI for the narrowing bench scenario).
     pub fn ghost_events(&self) -> u64 {
         self.ghost_events
+    }
+
+    /// Cumulative transient-fault retries performed at the call sites.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Cumulative denoiser attempts that failed transiently (including
+    /// slow-but-successful calls under [`FaultPolicy::call_timeout`]).
+    pub fn faults_transient(&self) -> u64 {
+        self.faults_transient
+    }
+
+    /// Cumulative denoiser attempts that failed fatally.
+    pub fn faults_fatal(&self) -> u64 {
+        self.faults_fatal
+    }
+
+    /// True while the circuit breaker is open: [`Self::tick`] makes no
+    /// denoiser calls and admits nothing; in-flight lanes sit parked at a
+    /// boundary (byte-exactly resumable), waiting for a cooldown probe to
+    /// close the breaker or for a supervisor to [`Self::evacuate`] them.
+    pub fn breaker_open(&self) -> bool {
+        self.breaker_open
+    }
+
+    fn open_breaker(&mut self) {
+        self.breaker_open = true;
+        self.breaker_opened_at = Some(Instant::now());
+    }
+
+    fn close_breaker(&mut self) {
+        self.breaker_open = false;
+        self.breaker_opened_at = None;
+    }
+
+    /// Failover: pack **every** in-flight lane for adoption elsewhere.
+    /// Unlike [`Self::donate_lane`] this never refuses — the caller has
+    /// decided this scheduler's engine is not coming back soon, so
+    /// zero-sum and near-retirement considerations don't apply. Lanes are
+    /// parked at a boundary (between two denoiser calls), so each handoff
+    /// is byte-exact for the same reason donation is.
+    pub fn evacuate(&mut self) -> Vec<DonatedLane<P>> {
+        self.key = None;
+        self.lanes
+            .drain(..)
+            .map(|lane| DonatedLane {
+                session: lane.session,
+                src_ids: lane.src_ids,
+                members: lane.members,
+                key: lane.key,
+            })
+            .collect()
+    }
+
+    /// Failover: remove every queued request, queue order preserved, for
+    /// re-enqueueing on a healthy scheduler.
+    pub fn drain_pending(&mut self) -> Vec<Pending<P>> {
+        self.pending.drain(..).collect()
+    }
+
+    /// Terminal failure: resolve everything queued and in flight as
+    /// [`Outcome::Failed`] with `msg`. Used when a shard dies for good
+    /// (engine restart failed) and nothing is left to salvage to.
+    pub fn abort_all(&mut self, msg: &str) -> Vec<Finished<P>> {
+        let mut out = Vec::new();
+        for p in std::mem::take(&mut self.pending) {
+            if let Some(ctl) = &p.ctl {
+                ctl.finish_failed(msg);
+            }
+            out.push(Finished {
+                payload: p.payload,
+                result: Err(anyhow!("{msg}")),
+                wait: p.enqueued.elapsed(),
+                outcome: Outcome::Failed,
+            });
+        }
+        for lane in std::mem::take(&mut self.lanes) {
+            fail_members(lane.members, msg, &mut out);
+        }
+        self.key = None;
+        out
+    }
+
+    /// Swap in a freshly built engine after a shard restart. The old
+    /// engine's [`NfeCounter`](crate::metrics::NfeCounter) is carried
+    /// over (nn-call/request accounting is cumulative per shard — exact
+    /// NFE conservation across a restart is what `tests/chaos.rs` pins),
+    /// the failure streak resets, and the breaker closes. The cumulative
+    /// fault counters survive: they are career totals, not incident
+    /// state.
+    pub fn reset_engine(&mut self, mut engine: Engine) {
+        engine.nfe = self.engine.nfe.clone();
+        self.engine = engine;
+        self.fail_streak = 0;
+        self.close_breaker();
     }
 
     /// Total in-flight sequences (sum of lane widths). Lane widths shrink
@@ -663,6 +837,21 @@ impl<P> Scheduler<P> {
         let mut resolved = Vec::new();
         if self.pending.is_empty() {
             return resolved;
+        }
+        if self.breaker_open {
+            let cooled = self
+                .breaker_opened_at
+                .map(|at| at.elapsed() >= self.fault.breaker_cooldown)
+                .unwrap_or(true);
+            if !cooled {
+                // a parked scheduler admits nothing: queued requests stay
+                // queued (cheap to evacuate to a healthy shard as-is)
+                // instead of being promoted into lanes that cannot progress
+                return resolved;
+            }
+            // half-open after cooldown: admit normally so the probe
+            // boundary in step() has a batch to try even when every
+            // parked lane was evacuated or reaped in the meantime
         }
         if self.lanes.is_empty() {
             // an idle scheduler starts a batch when the queue fills the
@@ -950,6 +1139,19 @@ impl<P> Scheduler<P> {
         if self.lanes.is_empty() {
             return Vec::new();
         }
+        if self.breaker_open {
+            let cooled = self
+                .breaker_opened_at
+                .map(|at| at.elapsed() >= self.fault.breaker_cooldown)
+                .unwrap_or(true);
+            if !cooled {
+                // parked: lanes sit untouched at the boundary, byte-exactly
+                // resumable — deliberately NOT a failure path
+                return Vec::new();
+            }
+            // half-open: let one probe boundary through; a clean success
+            // closes the breaker, a failure re-arms the cooldown
+        }
         let conditional = self.engine.conditional();
         let mcfg = self.engine.denoiser().config();
         self.scratch.xs.reset(mcfg.seq_len);
@@ -969,27 +1171,87 @@ impl<P> Scheduler<P> {
         }
         let src_opt = if conditional { Some(&self.scratch.srcs) } else { None };
         let width = self.scratch.xs.rows();
-        if let Err(e) = self.engine.denoiser().denoise_into(
+        // per-lane failure verdicts, in lane order: empty = the batched
+        // call succeeded and every lane advances from the shared logits
+        let lane_errs: Vec<Option<anyhow::Error>> = match call_with_retry(
+            self.engine.denoiser(),
+            &self.fault,
             &self.scratch.xs,
             &self.scratch.ts,
             src_opt,
             &mut self.scratch.logits,
+            FaultCounters {
+                retries: &mut self.retries,
+                faults_transient: &mut self.faults_transient,
+                faults_fatal: &mut self.faults_fatal,
+                fail_streak: &mut self.fail_streak,
+            },
         ) {
-            return self.fail_all(&e);
+            Ok(()) => {
+                if self.fail_streak >= self.fault.breaker_threshold {
+                    // successful but consistently slow (call_timeout):
+                    // use this boundary's result, then park
+                    self.open_breaker();
+                } else if self.fail_streak == 0 {
+                    self.close_breaker();
+                }
+                self.engine.nfe.record_call(width);
+                Vec::new()
+            }
+            Err(_) if self.fail_streak >= self.fault.breaker_threshold => {
+                // the engine looks down — not one lane's inputs: park with
+                // every lane intact at the boundary instead of failing
+                // anyone, so a supervisor can evacuate them byte-exactly
+                self.open_breaker();
+                return Vec::new();
+            }
+            // the batched error itself is dropped here: its classification
+            // was already counted, and each isolated lane produces its own
+            Err(_) => self.isolate_lanes(),
+        };
+        if !lane_errs.is_empty() && lane_errs.iter().all(Option::is_some) {
+            // every lane's isolated call failed too: no logits anywhere,
+            // nothing advances — fail them all and skip the advance loop
+            let mut out = Vec::new();
+            for (lane, e) in self.lanes.drain(..).zip(&lane_errs) {
+                let msg = format!("{:#}", e.as_ref().expect("all-failed branch"));
+                fail_members(lane.members, &msg, &mut out);
+            }
+            self.key = None;
+            return out;
         }
-        self.engine.nfe.record_call(width);
         self.boundary += 1;
 
         let view = self.scratch.logits.view();
+        let mut out = Vec::new();
         let mut off = 0usize;
-        let mut step_err = None;
         let mut ghosts = 0u64;
-        for lane in &mut self.lanes {
+        let mut i = 0usize;
+        let mut li = 0usize; // index into lane_errs (original lane order)
+        while i < self.lanes.len() {
+            let lane = &mut self.lanes[i];
             let w = lane.session.batch();
+            let verdict = lane_errs.get(li).and_then(|v| v.as_ref());
+            li += 1;
+            if let Some(e) = verdict {
+                // this lane's isolated call failed beyond retry: fail its
+                // members only — the shard keeps serving everyone else
+                off += w;
+                let msg = format!("{e:#}");
+                let lane = self.lanes.remove(i);
+                fail_members(lane.members, &msg, &mut out);
+                continue;
+            }
             match lane.session.advance(view.narrow(off, w)) {
                 Err(e) => {
-                    step_err = Some(e);
-                    break;
+                    // sampler-side failure is lane-local by construction
+                    // (each lane is its own session): fail this lane and
+                    // keep advancing the others
+                    off += w;
+                    let msg = format!("{e:#}");
+                    let lane = self.lanes.remove(i);
+                    fail_members(lane.members, &msg, &mut out);
+                    continue;
                 }
                 // a denoiser call where no row of this lane moved — only
                 // possible if an eviction left a stale event behind, which
@@ -1010,15 +1272,13 @@ impl<P> Scheduler<P> {
                     ctl.progress(nfe, total, tokens);
                 }
             }
+            i += 1;
         }
         self.ghost_events += ghosts;
-        if let Some(e) = step_err {
-            return self.fail_all(&e);
-        }
 
         // retire finished lanes in place (no mem::take + re-push, which
         // would re-allocate the lane vector on every boundary)
-        let mut finished = Vec::new();
+        let mut finished = out;
         let mut i = 0usize;
         while i < self.lanes.len() {
             if !self.lanes[i].session.is_done() {
@@ -1056,24 +1316,73 @@ impl<P> Scheduler<P> {
         finished
     }
 
-    fn fail_all(&mut self, e: &anyhow::Error) -> Vec<Finished<P>> {
-        let msg = format!("{e:#}");
-        let mut out = Vec::new();
-        for lane in std::mem::take(&mut self.lanes) {
-            for m in lane.members {
-                if let Some(ctl) = &m.ctl {
-                    ctl.finish_failed(&msg);
-                }
-                out.push(Finished {
-                    payload: m.payload,
-                    result: Err(anyhow!("{msg}")),
-                    wait: m.admitted.duration_since(m.enqueued),
-                    outcome: Outcome::Failed,
-                });
+    /// A batched denoiser call failed beyond retry, but the batch mixes
+    /// lanes and the fault may follow only some of them (poisoned inputs,
+    /// a width-specific backend bug). Re-run the same boundary lane by
+    /// lane — the same `(x, t, src)` rows, so a lane that succeeds here
+    /// gets logits byte-identical to the batched call's — and return one
+    /// verdict per lane in lane order: `None` = this lane's logits landed
+    /// in the shared buffer at its offset and it advances normally;
+    /// `Some(e)` = fail this lane's members. Cold path — allocates freely.
+    fn isolate_lanes(&mut self) -> Vec<Option<anyhow::Error>> {
+        let (seq, vocab) = {
+            let mcfg = self.engine.denoiser().config();
+            (mcfg.seq_len, mcfg.vocab)
+        };
+        let conditional = self.engine.conditional();
+        let width = self.scratch.xs.rows();
+        // surviving lanes overwrite their slice via the copy below; failed
+        // lanes' (stale) slices are never read — the advance loop skips them
+        self.scratch.logits.reset_for_overwrite(width, seq, vocab);
+        let mut cx = TokenBatch::new(self.scratch.xs.cols());
+        let mut cs = TokenBatch::new(self.scratch.srcs.cols());
+        let mut cout = LogitsBuf::new();
+        let mut verdicts = Vec::with_capacity(self.lanes.len());
+        let mut off = 0usize;
+        for lane in &self.lanes {
+            let w = lane.session.batch();
+            cx.reset(self.scratch.xs.cols());
+            for r in off..off + w {
+                cx.push_row(self.scratch.xs.row(r));
             }
+            let src_ref = if conditional {
+                cs.reset(self.scratch.srcs.cols());
+                for r in off..off + w {
+                    cs.push_row(self.scratch.srcs.row(r));
+                }
+                Some(&cs)
+            } else {
+                None
+            };
+            let res = call_with_retry(
+                self.engine.denoiser(),
+                &self.fault,
+                &cx,
+                &self.scratch.ts[off..off + w],
+                src_ref,
+                &mut cout,
+                FaultCounters {
+                    retries: &mut self.retries,
+                    faults_transient: &mut self.faults_transient,
+                    faults_fatal: &mut self.faults_fatal,
+                    fail_streak: &mut self.fail_streak,
+                },
+            );
+            match res {
+                Ok(()) => {
+                    self.scratch.logits.flat_mut()
+                        [off * seq * vocab..(off + w) * seq * vocab]
+                        .copy_from_slice(cout.flat());
+                    self.engine.nfe.record_call(w);
+                    verdicts.push(None);
+                }
+                Err(e) => {
+                    verdicts.push(Some(e.context("lane isolated after a failed batched call")));
+                }
+            }
+            off += w;
         }
-        self.key = None;
-        out
+        verdicts
     }
 
     /// One boundary: enforce cancellations/deadlines (freed slots become
@@ -1086,6 +1395,97 @@ impl<P> Scheduler<P> {
         out.extend(self.admit());
         out.extend(self.step());
         out
+    }
+}
+
+/// Resolve every member of one (dead) lane as [`Outcome::Failed`]:
+/// terminal sink event + `Finished` record. Lane-granular by design —
+/// callers decide which lanes die; nothing here touches the scheduler.
+fn fail_members<P>(members: Vec<Member<P>>, msg: &str, out: &mut Vec<Finished<P>>) {
+    for m in members {
+        if let Some(ctl) = &m.ctl {
+            ctl.finish_failed(msg);
+        }
+        out.push(Finished {
+            payload: m.payload,
+            result: Err(anyhow!("{msg}")),
+            wait: m.admitted.duration_since(m.enqueued),
+            outcome: Outcome::Failed,
+        });
+    }
+}
+
+/// The scheduler counters a retried call mutates — passed as disjoint
+/// `&mut` field borrows so [`call_with_retry`] can run against
+/// `engine.denoiser()` (an immutable borrow of a sibling field).
+struct FaultCounters<'a> {
+    retries: &'a mut u64,
+    faults_transient: &'a mut u64,
+    faults_fatal: &'a mut u64,
+    fail_streak: &'a mut u32,
+}
+
+/// One denoiser call under a [`FaultPolicy`]: transient faults (per
+/// [`is_transient`]) retry up to `max_retries` times with exponential
+/// backoff; fatal faults and exhausted retries return the error. The call
+/// is pure in `(x, t, src)` and `out` is fully overwritten per attempt,
+/// so a successful retry is byte-identical to an untroubled call.
+///
+/// The happy path (no fault, no timeout) touches only the clock and the
+/// streak reset — it keeps `tick()`'s zero-allocation steady state.
+fn call_with_retry(
+    den: &dyn Denoiser,
+    fault: &FaultPolicy,
+    x: &TokenBatch,
+    t: &[f32],
+    src: Option<&TokenBatch>,
+    out: &mut LogitsBuf,
+    c: FaultCounters<'_>,
+) -> Result<()> {
+    let mut attempt = 0u32;
+    loop {
+        let started = Instant::now();
+        match den.denoise_into(x, t, src, out) {
+            Ok(()) => {
+                if let Some(limit) = fault.call_timeout {
+                    if started.elapsed() > limit {
+                        // slow but successful: the result is valid (the
+                        // call is pure) and is used, but count it toward
+                        // the breaker so a crawling shard eventually parks
+                        // and its lanes move somewhere faster
+                        *c.faults_transient += 1;
+                        *c.fail_streak += 1;
+                        return Ok(());
+                    }
+                }
+                *c.fail_streak = 0;
+                return Ok(());
+            }
+            Err(e) if is_transient(&e) => {
+                *c.faults_transient += 1;
+                *c.fail_streak += 1;
+                if attempt >= fault.max_retries {
+                    return Err(e.context(format!(
+                        "transient fault persisted through {} retries",
+                        fault.max_retries
+                    )));
+                }
+                attempt += 1;
+                *c.retries += 1;
+                let backoff = fault
+                    .backoff
+                    .saturating_mul(1u32 << (attempt - 1).min(16))
+                    .min(fault.max_backoff);
+                if backoff > Duration::ZERO {
+                    std::thread::sleep(backoff);
+                }
+            }
+            Err(e) => {
+                *c.faults_fatal += 1;
+                *c.fail_streak += 1;
+                return Err(e);
+            }
+        }
     }
 }
 
@@ -1501,6 +1901,250 @@ mod tests {
                 "per-request NFE spans donor + thief calls"
             );
         }
+    }
+
+    // ---- fault handling (the full cross-shard story is tests/chaos.rs) ----
+
+    use crate::coordinator::engine::cipher_mock_denoiser;
+    use crate::data::words;
+    use crate::runtime::{ChaosDenoiser, ChaosSwitch, FaultKind, MockDenoiser};
+
+    fn chaos_engine(chaos: ChaosDenoiser<MockDenoiser>) -> Engine {
+        Engine::from_denoiser(Box::new(chaos), words::translation_vocab(), "cipher-chaos")
+    }
+
+    /// A retry policy that cannot plausibly exhaust or trip the breaker —
+    /// for pins where chaos must be absorbed entirely.
+    fn absorb_policy() -> FaultPolicy {
+        FaultPolicy {
+            max_retries: 16,
+            backoff: Duration::ZERO,
+            breaker_threshold: 1000,
+            ..FaultPolicy::default()
+        }
+    }
+
+    fn tokens_by_payload(done: &[Finished<usize>]) -> Vec<(usize, Vec<u32>)> {
+        let mut v: Vec<(usize, Vec<u32>)> = done
+            .iter()
+            .map(|f| {
+                (f.payload, f.result.as_ref().unwrap().output().unwrap().tokens.clone())
+            })
+            .collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
+    #[test]
+    fn transient_faults_retry_to_the_fault_free_output() {
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let run = |eng: Engine| {
+            let mut s: Scheduler<usize> =
+                Scheduler::new(eng, cfg.clone(), policy(4)).with_fault_policy(absorb_policy());
+            s.enqueue(req(0, 7, None));
+            s.enqueue(req(1, 9, None));
+            let mut done = Vec::new();
+            while s.has_work() {
+                done.extend(s.tick());
+            }
+            assert_eq!(done.len(), 2);
+            assert!(done.iter().all(|f| f.outcome == Outcome::Done));
+            let toks = tokens_by_payload(&done);
+            (toks, s.retries(), s.faults_transient(), s.faults_fatal())
+        };
+        let (want, r0, t0, f0) = run(mock_engine());
+        assert_eq!((r0, t0, f0), (0, 0, 0), "clean engine records no faults");
+        let (got, retries, transients, fatals) = run(chaos_engine(
+            ChaosDenoiser::new(cipher_mock_denoiser(8), 0xC4A05).transient_rate(0.3),
+        ));
+        assert_eq!(got, want, "retried run must be byte-identical to the clean run");
+        assert!(retries > 0 && transients > 0, "the chaos must actually have fired");
+        assert_eq!(fatals, 0);
+    }
+
+    #[test]
+    fn fatal_fault_fails_only_the_culprit_lane() {
+        // D3pm: per-request NFE is deterministically = steps
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 10);
+        // widths 3 (the batched call) and 1 (the culprit lane's isolated
+        // call) fault fatally; the width-2 lane's isolated call succeeds
+        let eng = chaos_engine(
+            ChaosDenoiser::new(cipher_mock_denoiser(8), 1)
+                .fail_on_widths(&[3, 1], FaultKind::Fatal),
+        );
+        let mut s: Scheduler<usize> = Scheduler::new(eng, cfg, policy(4));
+        s.enqueue(req(0, 3, None));
+        s.enqueue(req(1, 4, None)); // co-admitted: one width-2 lane
+        assert!(s.tick().is_empty(), "boundary 1: width 2, clean");
+        s.enqueue(req(2, 5, None)); // second lane, width 1
+        let mut done = s.tick(); // width-3 call faults → isolation
+        assert_eq!(done.len(), 1, "only the width-1 lane fails");
+        assert_eq!(done[0].payload, 2);
+        assert_eq!(done[0].outcome, Outcome::Failed);
+        assert_eq!(s.in_flight(), 2, "the width-2 lane is untouched");
+        assert!(!s.breaker_open());
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert_eq!(done.len(), 3);
+        for f in &done[1..] {
+            assert_eq!(f.outcome, Outcome::Done);
+            assert_eq!(f.result.as_ref().unwrap().nfe(), 10, "survivors keep exact NFE");
+        }
+        assert_eq!(s.faults_fatal(), 2, "one batched + one isolated fatal attempt");
+        assert_eq!(s.retries(), 0, "fatal faults never retry");
+    }
+
+    #[test]
+    fn breaker_parks_lanes_for_byte_exact_evacuation() {
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 20);
+        // reference: the same pair served with no faults at all
+        let mut r: Scheduler<usize> = Scheduler::new(mock_engine(), cfg.clone(), policy(2));
+        r.enqueue(req(0, 3, None));
+        r.enqueue(req(1, 4, None));
+        let mut want = Vec::new();
+        while r.has_work() {
+            want.extend(r.tick());
+        }
+        let want = tokens_by_payload(&want);
+
+        // the engine dies (transiently, forever) from call 4 on
+        let eng = chaos_engine(
+            ChaosDenoiser::new(cipher_mock_denoiser(8), 1)
+                .fail_from_call(4, FaultKind::Transient),
+        );
+        let mut s: Scheduler<usize> = Scheduler::new(eng, cfg.clone(), policy(2))
+            .with_fault_policy(FaultPolicy {
+                max_retries: 1,
+                backoff: Duration::ZERO,
+                breaker_threshold: 2,
+                breaker_cooldown: Duration::from_secs(3600),
+                ..FaultPolicy::default()
+            });
+        s.enqueue(req(0, 3, None));
+        s.enqueue(req(1, 4, None));
+        let mut early = Vec::new();
+        for _ in 0..8 {
+            early.extend(s.tick());
+        }
+        assert!(s.breaker_open(), "exhausted retries past the threshold open the breaker");
+        assert!(early.is_empty(), "parking fails nobody");
+        assert_eq!(s.in_flight(), 2, "lanes sit intact at the boundary");
+
+        // salvage: evacuate the parked lanes onto a healthy scheduler
+        let lanes = s.evacuate();
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(s.in_flight(), 0);
+        let mut t: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(2));
+        for lane in lanes {
+            t.adopt_lane(lane);
+        }
+        let mut done = Vec::new();
+        while t.has_work() {
+            done.extend(t.tick());
+        }
+        assert_eq!(done.len(), 2);
+        for f in &done {
+            assert_eq!(f.outcome, Outcome::Done);
+            assert_eq!(
+                f.result.as_ref().unwrap().nfe(),
+                20,
+                "per-request NFE spans donor + salvage calls exactly"
+            );
+        }
+        assert_eq!(tokens_by_payload(&done), want, "salvaged run is byte-identical");
+    }
+
+    #[test]
+    fn breaker_probe_closes_after_recovery() {
+        let sw = ChaosSwitch::new();
+        let eng = chaos_engine(
+            ChaosDenoiser::new(cipher_mock_denoiser(8), 1).with_switch(sw.clone()),
+        );
+        let mut s: Scheduler<usize> =
+            Scheduler::new(eng, SamplerConfig::new(SamplerKind::D3pm, 20), policy(2))
+                .with_fault_policy(FaultPolicy {
+                    max_retries: 0,
+                    backoff: Duration::ZERO,
+                    breaker_threshold: 1,
+                    breaker_cooldown: Duration::ZERO,
+                    ..FaultPolicy::default()
+                });
+        s.enqueue(req(0, 3, None));
+        sw.arm(FaultKind::Transient);
+        assert!(s.tick().is_empty());
+        assert!(s.breaker_open());
+        // cooldown ZERO: every tick probes; still armed → stays open
+        assert!(s.tick().is_empty());
+        assert!(s.breaker_open());
+        sw.disarm();
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert!(!s.breaker_open(), "a clean probe closes the breaker");
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, Outcome::Done);
+        assert_eq!(done[0].result.as_ref().unwrap().nfe(), 20);
+        assert!(s.faults_transient() >= 2);
+    }
+
+    #[test]
+    fn reset_engine_preserves_the_nfe_counter_and_closes_the_breaker() {
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 20);
+        let eng = chaos_engine(
+            ChaosDenoiser::new(cipher_mock_denoiser(8), 1)
+                .fail_from_call(3, FaultKind::Fatal),
+        );
+        let mut s: Scheduler<usize> = Scheduler::new(eng, cfg, policy(2))
+            .with_fault_policy(FaultPolicy {
+                max_retries: 0,
+                backoff: Duration::ZERO,
+                breaker_threshold: 1,
+                breaker_cooldown: Duration::from_secs(3600),
+                ..FaultPolicy::default()
+            });
+        s.enqueue(req(0, 3, None));
+        assert!(s.tick().is_empty()); // call 1
+        assert!(s.tick().is_empty()); // call 2
+        assert!(s.tick().is_empty()); // call 3 faults → breaker opens
+        assert!(s.breaker_open());
+        let calls_before = s.engine().nfe.calls();
+        assert_eq!(calls_before, 2);
+        assert_eq!(s.drain_pending().len(), 0);
+
+        s.reset_engine(mock_engine());
+        assert!(!s.breaker_open(), "a fresh engine starts with a closed breaker");
+        assert_eq!(
+            s.engine().nfe.calls(),
+            calls_before,
+            "the NFE counter survives the restart"
+        );
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, Outcome::Done);
+        assert_eq!(done[0].result.as_ref().unwrap().nfe(), 20);
+        assert_eq!(s.engine().nfe.calls(), 20, "restart lost no call accounting");
+        assert!(s.faults_fatal() >= 1, "fault totals are career counters");
+    }
+
+    #[test]
+    fn abort_all_fails_queued_and_in_flight_work() {
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 20);
+        let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), cfg, policy(1));
+        s.enqueue(req(0, 3, None));
+        assert!(s.tick().is_empty()); // payload 0 in flight
+        s.enqueue(req(1, 4, None)); // payload 1 stays queued (capacity 1)
+        let mut done = s.abort_all("shard lost for good");
+        done.sort_by_key(|f| f.payload);
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().all(|f| f.outcome == Outcome::Failed));
+        assert!(!s.has_work());
+        let msg = format!("{:#}", done[0].result.as_ref().unwrap_err());
+        assert!(msg.contains("shard lost for good"), "{msg}");
     }
 
     #[test]

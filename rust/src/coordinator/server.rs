@@ -23,6 +23,13 @@
 //!   boundaries, sequences retire individually, freed slots refill, and
 //!   every boundary emits progress into subscribed tickets.
 //!
+//! Continuous mode is fault-tolerant (`docs/robustness.md`): denoiser
+//! calls retry transient faults per [`FaultPolicy`], repeated failures
+//! trip a circuit breaker that parks the in-flight lanes at a boundary,
+//! and a supervisor (the rebalancer's supervision pass) can then salvage
+//! the parked work to a healthy shard ([`Msg::Evacuate`]) and rebuild
+//! this shard's engine from the retained factory ([`Msg::Restart`]).
+//!
 //! [`Batcher`]: super::batcher::Batcher
 //! [`Scheduler`]: super::scheduler::Scheduler
 
@@ -39,7 +46,15 @@ use crate::sampler::SamplerConfig;
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenOutput};
 use super::request::{self, GenRequest, Priority, Ticket, TicketSink};
-use super::scheduler::{Delivery, DonatedLane, Outcome, Pending, SchedPolicy, Scheduler};
+use super::scheduler::{
+    Delivery, DonatedLane, FaultPolicy, Finished, Outcome, Pending, SchedPolicy, Scheduler,
+};
+
+/// Upper bound on idle/parked sleeps in the continuous loop: cancellation
+/// has no wake path of its own (the flag lives in the ticket), and the
+/// circuit breaker's half-open probe needs the loop to come back to
+/// `tick()` after the cooldown — both resolve within one poll interval.
+const QUEUE_POLL: Duration = Duration::from_millis(20);
 
 /// Where a finished request's result goes.
 enum Reply {
@@ -120,6 +135,20 @@ enum Msg {
     /// Thief side: a live lane donated by another shard, resumed
     /// mid-schedule at its next predetermined event.
     AdoptLane(DonatedLane<Reply>),
+    /// Supervisor side of shard failover, stage 1: with the circuit
+    /// breaker open, ship this shard's queued requests (as `Donated`)
+    /// and every parked in-flight lane (as `AdoptLane`) to `to`, a
+    /// healthy shard, re-pointing load gauges at `to_load`. Parked lanes
+    /// sit at a transition-time boundary, so the salvage is byte-exact
+    /// for the same reason lane donation is. No-op while the breaker is
+    /// closed (a stale supervision decision).
+    Evacuate { to: Sender<Msg>, to_load: Arc<AtomicUsize> },
+    /// Supervisor side of shard failover, stage 2: rebuild the engine
+    /// from the retained factory and resume serving (the NFE counter
+    /// carries over). No-op while the breaker is closed. If the rebuild
+    /// itself fails, the shard fails whatever work it still holds and
+    /// drops into the drain-and-fail loop with its real counters.
+    Restart,
     Stats(Sender<ServerStats>),
     Shutdown,
 }
@@ -182,10 +211,30 @@ pub struct ServerStats {
     /// unique events at eviction, so this must stay 0 — the serving bench
     /// gates on it (cumulative; continuous only)
     pub ghost_events_fired: u64,
-    /// `false` when this shard's engine factory failed: the shard only
-    /// drains and fails requests, so the rebalancer must treat it as
-    /// neither donor nor thief (its zeroed gauges would otherwise make
-    /// it look like an ideal idle shard). Merged stats AND this across
+    /// transient-fault retries the denoiser call sites performed
+    /// (cumulative; continuous only — see [`FaultPolicy`])
+    pub retries: u64,
+    /// denoiser attempts that failed transiently, including
+    /// slow-but-successful calls under `FaultPolicy::call_timeout`
+    /// (cumulative; continuous only)
+    pub faults_transient: u64,
+    /// denoiser attempts that failed fatally (non-retryable; cumulative,
+    /// continuous only)
+    pub faults_fatal: u64,
+    /// `true` while this shard's circuit breaker is open: the scheduler
+    /// is parked at a boundary and the supervision pass should salvage
+    /// its work ([`Server`] internal `Evacuate`/`Restart`). Merged stats
+    /// OR this across shards. Instantaneous; continuous only.
+    pub breaker_open: bool,
+    /// in-flight lanes this shard evacuated to healthy shards during
+    /// failover (cumulative; each arrived byte-exact at its next
+    /// predetermined event)
+    pub lanes_salvaged: u64,
+    /// `false` when this shard cannot serve: its engine factory failed at
+    /// startup (or a failover restart failed), or its breaker is
+    /// currently open. The rebalancer must treat such a shard as neither
+    /// donor nor thief (its zeroed/frozen gauges would otherwise make it
+    /// look like an ideal idle shard). Merged stats AND this across
     /// shards.
     pub healthy: bool,
 }
@@ -221,6 +270,11 @@ impl ServerStats {
             out.lanes_donated += s.lanes_donated;
             out.lanes_split += s.lanes_split;
             out.ghost_events_fired += s.ghost_events_fired;
+            out.retries += s.retries;
+            out.faults_transient += s.faults_transient;
+            out.faults_fatal += s.faults_fatal;
+            out.breaker_open |= s.breaker_open;
+            out.lanes_salvaged += s.lanes_salvaged;
             out.healthy &= s.healthy;
             batch_w += s.mean_batch * s.batches as f64;
             let retired = s.mean_batch * s.batches as f64;
@@ -266,18 +320,34 @@ impl Server {
 
     /// Start a server with the continuous NFE-aligned scheduler: requests
     /// are admitted into the in-flight batch at transition-time boundaries
-    /// and retire individually.
+    /// and retire individually. Uses the default [`FaultPolicy`]; the
+    /// factory is `Fn` (not `FnOnce`) because the server thread retains
+    /// it to rebuild the engine after a failover restart.
     pub fn start_continuous<F>(
         factory: F,
         cfg: SamplerConfig,
         policy: SchedPolicy,
     ) -> (Server, ServerJoin)
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        F: Fn() -> Result<Engine> + Send + 'static,
+    {
+        Server::start_continuous_with(factory, cfg, policy, FaultPolicy::default())
+    }
+
+    /// [`Self::start_continuous`] with an explicit retry/breaker
+    /// [`FaultPolicy`] for the scheduler's denoiser call sites.
+    pub fn start_continuous_with<F>(
+        factory: F,
+        cfg: SamplerConfig,
+        policy: SchedPolicy,
+        fault: FaultPolicy,
+    ) -> (Server, ServerJoin)
+    where
+        F: Fn() -> Result<Engine> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
         let handle =
-            std::thread::spawn(move || serve_continuous_loop(factory, cfg, policy, rx));
+            std::thread::spawn(move || serve_continuous_loop(factory, cfg, policy, fault, rx));
         (Server { tx }, ServerJoin { handle: Some(handle) })
     }
 
@@ -411,6 +481,21 @@ impl Server {
         let _ = self.tx.send(Msg::SplitLaneReq { to: to.tx.clone(), to_load, min_remaining });
     }
 
+    /// Supervisor entry point (shard failover, stage 1): ask this shard
+    /// to salvage its work — queued requests plus parked in-flight lanes
+    /// — into `to`, re-pointing load gauges at `to_load`.
+    /// Fire-and-forget; the shard no-ops unless its breaker is open.
+    pub(crate) fn evacuate_into(&self, to: &Server, to_load: Arc<AtomicUsize>) {
+        let _ = self.tx.send(Msg::Evacuate { to: to.tx.clone(), to_load });
+    }
+
+    /// Supervisor entry point (shard failover, stage 2): ask this shard
+    /// to rebuild its engine from the retained factory and resume.
+    /// Fire-and-forget; the shard no-ops unless its breaker is open.
+    pub(crate) fn restart_engine(&self) {
+        let _ = self.tx.send(Msg::Restart);
+    }
+
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = channel();
         self.tx.send(Msg::Stats(stx)).map_err(|_| anyhow!("server is down"))?;
@@ -458,6 +543,8 @@ struct LoopState {
     lanes_donated: u64,
     /// in-flight lanes split (back half donated, front half kept)
     lanes_split: u64,
+    /// parked lanes evacuated to healthy shards during failover
+    lanes_salvaged: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
     /// slot capacity, for the occupancy statistic
@@ -476,6 +563,7 @@ impl LoopState {
             rebalances: 0,
             lanes_donated: 0,
             lanes_split: 0,
+            lanes_salvaged: 0,
             queue_lat: LatencyStats::new(),
             e2e_lat: LatencyStats::new(),
             capacity,
@@ -483,24 +571,40 @@ impl LoopState {
     }
 }
 
-/// Drain-and-fail loop for a factory that could not build an engine.
-fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error) {
-    eprintln!("[server] engine init failed: {err:#}");
+/// Drain-and-fail loop for a shard whose engine is gone for good: the
+/// factory failed at startup (`base` = empty stats) or a failover
+/// restart failed (`base` = the shard's real pre-failure snapshot, so
+/// the router still sees the work this shard actually did). Every
+/// report carries `healthy: false`; `breaker_open` reads `false` —
+/// there is no breaker left to probe, and the supervision pass must
+/// stop sending this shard Evacuate/Restart.
+fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error, base: ServerStats) {
+    eprintln!("[server] engine failed: {err:#}");
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Req(r) | Msg::Donated(r) => {
-                r.resolve(Err(anyhow!("engine init failed")), Outcome::Failed)
+                r.resolve(Err(anyhow!("engine unavailable: {err:#}")), Outcome::Failed)
             }
-            // nothing here to donate or split
-            Msg::Steal { .. } | Msg::DonateLaneReq { .. } | Msg::SplitLaneReq { .. } => {}
+            // nothing here to donate, split, salvage, or restart (the
+            // factory already failed; retrying it forever would wedge
+            // the supervision pass)
+            Msg::Steal { .. }
+            | Msg::DonateLaneReq { .. }
+            | Msg::SplitLaneReq { .. }
+            | Msg::Evacuate { .. }
+            | Msg::Restart => {}
             // dropping the lane fires every member sink's drop guard
             // (tickets fail, gauges decrement) — never silently lost
             Msg::AdoptLane(lane) => drop(lane),
             Msg::Shutdown => break,
             Msg::Stats(s) => {
                 // healthy: false keeps the rebalancer from ever picking
-                // this shard as a thief (its zeroed gauges look idle)
-                let _ = s.send(ServerStats { healthy: false, ..empty_stats() });
+                // this shard as a thief (its frozen gauges look idle)
+                let _ = s.send(ServerStats {
+                    healthy: false,
+                    breaker_open: false,
+                    ..base.clone()
+                });
             }
         }
     }
@@ -517,7 +621,7 @@ where
     let engine = match factory() {
         Ok(e) => e,
         Err(err) => {
-            fail_engine_loop(rx, err);
+            fail_engine_loop(rx, err, empty_stats());
             return;
         }
     };
@@ -560,10 +664,13 @@ where
             Some(Msg::Donated(r)) => batcher.push(r),
             // fixed batches are FIFO with no spec keys — this mode never
             // donates or splits (the router only rebalances between
-            // continuous shards)
+            // continuous shards), and it has no retry/breaker machinery
+            // to evacuate or restart
             Some(Msg::Steal { .. })
             | Some(Msg::DonateLaneReq { .. })
-            | Some(Msg::SplitLaneReq { .. }) => continue,
+            | Some(Msg::SplitLaneReq { .. })
+            | Some(Msg::Evacuate { .. })
+            | Some(Msg::Restart) => continue,
             // unreachable via the router (donation is continuous-only);
             // dropping the lane fail-safes its tickets and load gauges
             Some(Msg::AdoptLane(lane)) => {
@@ -571,7 +678,15 @@ where
                 continue;
             }
             Some(Msg::Stats(s)) => {
-                let _ = s.send(snapshot(&mut st, &engine, [0, batcher.len(), 0], 0, 0, 0));
+                let _ = s.send(snapshot(
+                    &mut st,
+                    &engine,
+                    [0, batcher.len(), 0],
+                    0,
+                    0,
+                    0,
+                    Faults::NONE,
+                ));
                 continue;
             }
             Some(Msg::Shutdown) => {
@@ -657,40 +772,105 @@ fn dispatch(
 // Continuous mode (NFE-aligned scheduler)
 // ---------------------------------------------------------------------------
 
+/// What the continuous loop should do after handling one message.
+enum Flow {
+    Continue,
+    /// Shutdown requested: drain remaining work, then exit.
+    Drain,
+    /// The shard is gone for good (a failover restart failed): fall into
+    /// the drain-and-fail loop with the carried error.
+    Die(anyhow::Error),
+}
+
+/// Deliver one retirement to its client: counters + latency stats, and
+/// the channel reply when one exists (ticket terminals were already
+/// emitted inside the scheduler).
+fn deliver_finished(f: Finished<Reply>, st: &mut LoopState) {
+    match f.outcome {
+        Outcome::Cancelled => st.cancelled += 1,
+        Outcome::DeadlineExceeded => st.deadline_exceeded += 1,
+        _ => {
+            st.queue_lat.record(f.wait);
+            if let Ok(d) = &f.result {
+                // e2e = queue wait + in-flight generation time
+                st.e2e_lat.record(f.wait + d.elapsed());
+            }
+        }
+    }
+    if let Reply::Channel(tx) = f.payload {
+        // channel requests set wants_result, so the delivery holds the
+        // output
+        let _ = tx.send(f.result.and_then(Delivery::into_output));
+    }
+}
+
+/// Terminal failover exit for the continuous loop: an engine restart
+/// against an open breaker failed, so this shard can never serve again.
+/// Remaining work was already failed by the `Restart` handler; this
+/// captures the shard's **real** pre-failure counters and parks in the
+/// drain-and-fail loop so stats (and late messages) keep being answered.
+fn shard_died(
+    rx: Receiver<Msg>,
+    sched: &mut Scheduler<Reply>,
+    st: &mut LoopState,
+    err: anyhow::Error,
+) {
+    st.batches = sched.engine().nfe.batches();
+    st.batch_sizes = sched.engine().nfe.requests();
+    let base = snapshot(
+        st,
+        sched.engine(),
+        sched.queue_depths(),
+        sched.lane_count(),
+        sched.in_flight(),
+        sched.ghost_events(),
+        Faults::of(sched),
+    );
+    fail_engine_loop(rx, err, base);
+}
+
 fn serve_continuous_loop<F>(
     factory: F,
     cfg: SamplerConfig,
     policy: SchedPolicy,
+    fault: FaultPolicy,
     rx: Receiver<Msg>,
 ) where
-    F: FnOnce() -> Result<Engine>,
+    F: Fn() -> Result<Engine>,
 {
     let engine = match factory() {
         Ok(e) => e,
         Err(err) => {
-            fail_engine_loop(rx, err);
+            fail_engine_loop(rx, err, empty_stats());
             return;
         }
     };
 
-    let mut sched: Scheduler<Reply> = Scheduler::new(engine, cfg, policy);
+    let mut sched: Scheduler<Reply> =
+        Scheduler::new(engine, cfg, policy).with_fault_policy(fault);
     let mut st = LoopState::new(policy.max_batch);
     let mut draining = false;
 
     'outer: loop {
-        // 1. ingest. While lanes are active, never block — drain whatever
-        //    arrived and get back to stepping (admission happens at the
-        //    boundary inside tick()). Otherwise block until the grouping
-        //    window (or the earliest queued deadline) of the pending work
-        //    expires, or forever when fully idle.
-        if sched.in_flight() > 0 {
+        // 1. ingest. While lanes are active and the breaker closed, never
+        //    block — drain whatever arrived and get back to stepping
+        //    (admission happens at the boundary inside tick()). While the
+        //    breaker is open (lanes parked at a boundary), block briefly
+        //    instead of spinning: the timeout paces the half-open probe
+        //    and keeps the loop responsive to Evacuate/Restart. Otherwise
+        //    block until the grouping window (or the earliest queued
+        //    deadline) of the pending work expires, or forever when idle.
+        if sched.in_flight() > 0 && !sched.breaker_open() {
             loop {
                 match rx.try_recv() {
-                    Ok(m) => {
-                        if handle_msg(m, &mut sched, &mut st) {
-                            draining = true;
+                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                        Flow::Continue => {}
+                        Flow::Drain => draining = true,
+                        Flow::Die(err) => {
+                            shard_died(rx, &mut sched, &mut st, err);
+                            return;
                         }
-                    }
+                    },
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         draining = true;
@@ -699,21 +879,53 @@ fn serve_continuous_loop<F>(
                     }
                 }
             }
+        } else if sched.in_flight() > 0 {
+            if draining {
+                // graceful shutdown cannot finish parked work and no
+                // supervisor is coming (shutdown tears the fleet down):
+                // fail it cleanly rather than hang the drain
+                for f in
+                    sched.abort_all("server shut down while its circuit breaker was open")
+                {
+                    deliver_finished(f, &mut st);
+                }
+            } else {
+                match rx.recv_timeout(QUEUE_POLL) {
+                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                        Flow::Continue => {}
+                        Flow::Drain => draining = true,
+                        Flow::Die(err) => {
+                            shard_died(rx, &mut sched, &mut st, err);
+                            return;
+                        }
+                    },
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        draining = true;
+                        sched.flush();
+                    }
+                }
+            }
         } else if sched.pending_len() > 0 && !draining {
-            let deadline = sched.next_deadline().expect("pending implies a deadline");
             // Cancellation has no wake path of its own (the flag lives in
             // the ticket), so bound the idle sleep: a queued request
             // cancelled during a long grouping window resolves within one
-            // poll interval instead of at window expiry.
-            const QUEUE_POLL: Duration = Duration::from_millis(20);
+            // poll interval instead of at window expiry. `next_deadline`
+            // can report nothing to wait for (e.g. a parked scheduler
+            // holding only queued work) — the poll bound covers that too.
+            let deadline =
+                sched.next_deadline().unwrap_or_else(|| Instant::now() + QUEUE_POLL);
             let timeout =
                 deadline.saturating_duration_since(Instant::now()).min(QUEUE_POLL);
             match rx.recv_timeout(timeout) {
-                Ok(m) => {
-                    if handle_msg(m, &mut sched, &mut st) {
-                        draining = true;
+                Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                    Flow::Continue => {}
+                    Flow::Drain => draining = true,
+                    Flow::Die(err) => {
+                        shard_died(rx, &mut sched, &mut st, err);
+                        return;
                     }
-                }
+                },
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                     draining = true;
@@ -722,19 +934,34 @@ fn serve_continuous_loop<F>(
             }
         } else if !sched.has_work() {
             if draining {
-                if !drain_residual(&rx, &mut sched, &mut st) {
-                    break;
+                match drain_residual(&rx, &mut sched, &mut st, &factory) {
+                    Ok(true) => {}
+                    Ok(false) => break,
+                    Err(err) => {
+                        shard_died(rx, &mut sched, &mut st, err);
+                        return;
+                    }
                 }
             } else {
                 match rx.recv() {
-                    Ok(m) => {
-                        if handle_msg(m, &mut sched, &mut st) {
+                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                        Flow::Continue => {}
+                        Flow::Drain => {
                             draining = true;
-                            if !drain_residual(&rx, &mut sched, &mut st) {
-                                break;
+                            match drain_residual(&rx, &mut sched, &mut st, &factory) {
+                                Ok(true) => {}
+                                Ok(false) => break,
+                                Err(err) => {
+                                    shard_died(rx, &mut sched, &mut st, err);
+                                    return;
+                                }
                             }
                         }
-                    }
+                        Flow::Die(err) => {
+                            shard_died(rx, &mut sched, &mut st, err);
+                            return;
+                        }
+                    },
                     Err(_) => break,
                 }
             }
@@ -744,25 +971,17 @@ fn serve_continuous_loop<F>(
         //    retirements (ticket terminals were already emitted inside
         //    tick(), channel replies are sent here).
         for f in sched.tick() {
-            match f.outcome {
-                Outcome::Cancelled => st.cancelled += 1,
-                Outcome::DeadlineExceeded => st.deadline_exceeded += 1,
-                _ => {
-                    st.queue_lat.record(f.wait);
-                    if let Ok(d) = &f.result {
-                        // e2e = queue wait + in-flight generation time
-                        st.e2e_lat.record(f.wait + d.elapsed());
-                    }
+            deliver_finished(f, &mut st);
+        }
+        if draining && !sched.has_work() {
+            match drain_residual(&rx, &mut sched, &mut st, &factory) {
+                Ok(true) => {}
+                Ok(false) => break 'outer,
+                Err(err) => {
+                    shard_died(rx, &mut sched, &mut st, err);
+                    return;
                 }
             }
-            if let Reply::Channel(tx) = f.payload {
-                // channel requests set wants_result, so the delivery holds
-                // the output (ticket terminals were emitted inside tick())
-                let _ = tx.send(f.result.and_then(Delivery::into_output));
-            }
-        }
-        if draining && !sched.has_work() && !drain_residual(&rx, &mut sched, &mut st) {
-            break 'outer;
         }
     }
 }
@@ -776,33 +995,44 @@ fn serve_continuous_loop<F>(
 /// taking back work whose handoff send fails, this keeps graceful
 /// shutdown from failing requests that rebalancing happened to be
 /// moving.
-fn drain_residual(
+fn drain_residual<F>(
     rx: &Receiver<Msg>,
     sched: &mut Scheduler<Reply>,
     st: &mut LoopState,
-) -> bool {
+    factory: &F,
+) -> Result<bool>
+where
+    F: Fn() -> Result<Engine>,
+{
     while let Ok(m) = rx.try_recv() {
-        handle_msg(m, sched, st);
+        match handle_msg(m, sched, st, factory) {
+            Flow::Continue | Flow::Drain => {}
+            Flow::Die(err) => return Err(err),
+        }
     }
-    sched.has_work()
+    Ok(sched.has_work())
 }
 
-/// Returns true when the message requests shutdown.
-fn handle_msg(
+/// Handle one control-plane message between two denoiser calls.
+fn handle_msg<F>(
     msg: Msg,
     sched: &mut Scheduler<Reply>,
     st: &mut LoopState,
-) -> bool {
+    factory: &F,
+) -> Flow
+where
+    F: Fn() -> Result<Engine>,
+{
     match msg {
         Msg::Req(r) => {
             st.requests += 1;
             sched.enqueue(request_to_pending(r));
-            false
+            Flow::Continue
         }
         // a donated request was already counted by its submit shard
         Msg::Donated(r) => {
             sched.enqueue(request_to_pending(r));
-            false
+            Flow::Continue
         }
         Msg::Steal { max, to, to_load } => {
             // donor side of work stealing, between two denoiser calls:
@@ -833,7 +1063,7 @@ fn handle_msg(
             if moved {
                 st.rebalances += 1;
             }
-            false
+            Flow::Continue
         }
         Msg::DonateLaneReq { to, to_load, min_remaining } => {
             // donor side of lane donation. handle_msg runs between two
@@ -859,7 +1089,7 @@ fn handle_msg(
                     }
                 }
             }
-            false
+            Flow::Continue
         }
         Msg::SplitLaneReq { to, to_load, min_remaining } => {
             // donor side of lane splitting — same boundary discipline as
@@ -886,13 +1116,76 @@ fn handle_msg(
                     }
                 }
             }
-            false
+            Flow::Continue
         }
         Msg::AdoptLane(lane) => {
             // thief side: resume the donated session mid-schedule; its
             // members were counted by their submit shard already
             sched.adopt_lane(lane);
-            false
+            Flow::Continue
+        }
+        Msg::Evacuate { to, to_load } => {
+            // supervisor-driven failover, stage 1. Only meaningful while
+            // the breaker is open (lanes parked at a boundary); a stale
+            // decision against a recovered shard is ignored.
+            if !sched.breaker_open() {
+                return Flow::Continue;
+            }
+            // queued requests first — they were counted at submit, so
+            // they travel as Donated and keep their enqueue order
+            for p in sched.drain_pending() {
+                if let Some(ctl) = &p.ctl {
+                    ctl.retarget_load(to_load.clone());
+                }
+                if let Err(e) = to.send(Msg::Donated(pending_to_request(p))) {
+                    // target exited (shutdown race): keep the request
+                    // here — the supervisor picks a new target next pass
+                    let Msg::Donated(r) = e.0 else { unreachable!("sent Donated") };
+                    sched.enqueue(request_to_pending(r));
+                }
+            }
+            // then every parked lane: each resumes on the healthy shard
+            // byte-exactly at its next predetermined event, because the
+            // breaker parked it *between* two denoiser calls
+            for lane in sched.evacuate() {
+                lane.retarget_load(&to_load);
+                match to.send(Msg::AdoptLane(lane)) {
+                    Ok(()) => st.lanes_salvaged += 1,
+                    Err(e) => {
+                        let Msg::AdoptLane(lane) = e.0 else {
+                            unreachable!("sent AdoptLane")
+                        };
+                        sched.adopt_lane(lane);
+                    }
+                }
+            }
+            Flow::Continue
+        }
+        Msg::Restart => {
+            // supervisor-driven failover, stage 2. Only meaningful while
+            // the breaker is open; a recovered shard keeps its engine.
+            if !sched.breaker_open() {
+                return Flow::Continue;
+            }
+            match factory() {
+                Ok(engine) => {
+                    // reset_engine carries the NfeCounter over, so
+                    // nn-call / per-request NFE accounting is continuous
+                    // across the restart (tests/chaos.rs pins this)
+                    sched.reset_engine(engine);
+                    Flow::Continue
+                }
+                Err(err) => {
+                    // the engine is not coming back: fail whatever this
+                    // shard still holds (post-evacuation, usually
+                    // nothing), then die with the real counters
+                    let reason = format!("engine restart failed: {err:#}");
+                    for f in sched.abort_all(&reason) {
+                        deliver_finished(f, st);
+                    }
+                    Flow::Die(err)
+                }
+            }
         }
         Msg::Stats(s) => {
             // lanes retired so far are the "batches" of continuous mode
@@ -900,6 +1193,7 @@ fn handle_msg(
             st.batch_sizes = sched.engine().nfe.requests();
             let depths = sched.queue_depths();
             let ghosts = sched.ghost_events();
+            let faults = Faults::of(sched);
             let _ = s.send(snapshot(
                 st,
                 sched.engine(),
@@ -907,12 +1201,13 @@ fn handle_msg(
                 sched.lane_count(),
                 sched.in_flight(),
                 ghosts,
+                faults,
             ));
-            false
+            Flow::Continue
         }
         Msg::Shutdown => {
             sched.flush();
-            true
+            Flow::Drain
         }
     }
 }
@@ -949,6 +1244,29 @@ fn pending_to_request(p: Pending<Reply>) -> Request {
     }
 }
 
+/// Continuous-mode fault counters for a stats snapshot. The fixed path
+/// has no retry/breaker machinery and reports [`Faults::NONE`].
+#[derive(Clone, Copy)]
+struct Faults {
+    retries: u64,
+    transient: u64,
+    fatal: u64,
+    breaker_open: bool,
+}
+
+impl Faults {
+    const NONE: Faults = Faults { retries: 0, transient: 0, fatal: 0, breaker_open: false };
+
+    fn of(sched: &Scheduler<Reply>) -> Faults {
+        Faults {
+            retries: sched.retries(),
+            transient: sched.faults_transient(),
+            fatal: sched.faults_fatal(),
+            breaker_open: sched.breaker_open(),
+        }
+    }
+}
+
 fn snapshot(
     st: &mut LoopState,
     engine: &Engine,
@@ -956,6 +1274,7 @@ fn snapshot(
     lanes: usize,
     in_flight: usize,
     ghost_events: u64,
+    faults: Faults,
 ) -> ServerStats {
     ServerStats {
         requests: st.requests,
@@ -984,7 +1303,14 @@ fn snapshot(
         lanes_donated: st.lanes_donated,
         lanes_split: st.lanes_split,
         ghost_events_fired: ghost_events,
-        healthy: true,
+        retries: faults.retries,
+        faults_transient: faults.transient,
+        faults_fatal: faults.fatal,
+        breaker_open: faults.breaker_open,
+        lanes_salvaged: st.lanes_salvaged,
+        // a parked shard can't serve until it recovers or is restarted —
+        // the rebalancer must not treat it as donor or thief meanwhile
+        healthy: !faults.breaker_open,
     }
 }
 
@@ -1012,6 +1338,11 @@ fn empty_stats() -> ServerStats {
         lanes_donated: 0,
         lanes_split: 0,
         ghost_events_fired: 0,
+        retries: 0,
+        faults_transient: 0,
+        faults_fatal: 0,
+        breaker_open: false,
+        lanes_salvaged: 0,
         healthy: true,
     }
 }

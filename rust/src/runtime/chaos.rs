@@ -1,0 +1,343 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`ChaosDenoiser`] wraps any [`Denoiser`] and injects faults *before*
+//! the inner network runs: scripted (fail on exactly the nth call, fail
+//! from the nth call on, fail on specific batch widths), probabilistic
+//! (seeded transient/fatal rates drawn from a [`SplitMix64`] stream), or
+//! externally armed (a shared [`ChaosSwitch`] an observer thread can flip
+//! mid-run). Because a faulted attempt never reaches the inner denoiser,
+//! the inner call count — and therefore `Engine::nfe` — only ever counts
+//! calls that actually produced logits, which is what makes the exact
+//! NFE-conservation pins in `tests/chaos.rs` possible.
+//!
+//! Fault classification is a message convention, not a type: the vendored
+//! `anyhow` has no downcast, so an error is *transient* (retryable) iff
+//! some message in its `chain()` contains [`TRANSIENT_MARKER`]. The
+//! injected errors follow the convention; a production backend opts its
+//! own recoverable errors into retry by including the same word. Anything
+//! else is fatal. See `docs/robustness.md` for the full taxonomy.
+
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::schedule::SplitMix64;
+use crate::tensor::{LogitsBuf, TokenBatch};
+
+use super::artifact::ModelConfig;
+use super::denoiser::Denoiser;
+
+/// The classification convention: an error whose `chain()` mentions this
+/// substring is transient (safe to retry); everything else is fatal.
+pub const TRANSIENT_MARKER: &str = "transient";
+
+/// True iff any message in the error chain marks the fault as transient.
+///
+/// A denoiser call is a pure function of `(x, t, src)` — every sequence
+/// samples from its own forked RNG stream and the logits buffer is fully
+/// overwritten — so retrying a transient fault is byte-identical to the
+/// fault never having happened.
+pub fn is_transient(e: &anyhow::Error) -> bool {
+    e.chain().any(|msg| msg.contains(TRANSIENT_MARKER))
+}
+
+/// Which class of fault to inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Recoverable: the scheduler retries the call under its `FaultPolicy`.
+    Transient,
+    /// Unrecoverable: no retry; the affected lane is isolated and failed.
+    Fatal,
+}
+
+impl FaultKind {
+    fn error(self, attempt: u64) -> anyhow::Error {
+        match self {
+            FaultKind::Transient => anyhow!("injected transient fault (call {attempt})"),
+            FaultKind::Fatal => anyhow!("injected fatal fault (call {attempt})"),
+        }
+    }
+}
+
+/// A cloneable lever that arms/disarms fault injection from outside the
+/// serving thread — e.g. a test that wants a shard to start failing *now*,
+/// after its engine factory has long since been cloned away.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSwitch(Arc<AtomicU8>);
+
+impl ChaosSwitch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Every subsequent attempt faults with `kind` until [`Self::disarm`].
+    pub fn arm(&self, kind: FaultKind) {
+        let v = match kind {
+            FaultKind::Transient => 1,
+            FaultKind::Fatal => 2,
+        };
+        self.0.store(v, Ordering::SeqCst);
+    }
+
+    /// Stop injecting; attempts pass through to the inner denoiser again.
+    pub fn disarm(&self) {
+        self.0.store(0, Ordering::SeqCst);
+    }
+
+    fn get(&self) -> Option<FaultKind> {
+        match self.0.load(Ordering::SeqCst) {
+            1 => Some(FaultKind::Transient),
+            2 => Some(FaultKind::Fatal),
+            _ => None,
+        }
+    }
+}
+
+struct ChaosScript {
+    rng: SplitMix64,
+    /// one-shot faults keyed by 1-based attempt number
+    one_shot: Vec<(u64, FaultKind)>,
+    /// every attempt `>= n` faults
+    fail_from: Option<(u64, FaultKind)>,
+}
+
+/// Deterministic fault-injecting wrapper around any [`Denoiser`].
+///
+/// All decisions derive from the constructor seed and the attempt counter,
+/// so a chaos run is exactly reproducible: same seed + same call sequence
+/// → same faults. Faulted attempts return an error *without* invoking the
+/// inner denoiser.
+pub struct ChaosDenoiser<D> {
+    inner: D,
+    script: Mutex<ChaosScript>,
+    /// total `denoise_into` attempts observed, including faulted ones
+    attempts: AtomicU64,
+    transient_rate: f64,
+    fatal_rate: f64,
+    /// fault any attempt whose batch width is in this set
+    fail_widths: Vec<usize>,
+    fail_widths_kind: FaultKind,
+    latency: Duration,
+    switch: Option<ChaosSwitch>,
+}
+
+impl<D> ChaosDenoiser<D> {
+    pub fn new(inner: D, seed: u64) -> Self {
+        ChaosDenoiser {
+            inner,
+            script: Mutex::new(ChaosScript {
+                rng: SplitMix64::new(seed),
+                one_shot: Vec::new(),
+                fail_from: None,
+            }),
+            attempts: AtomicU64::new(0),
+            transient_rate: 0.0,
+            fatal_rate: 0.0,
+            fail_widths: Vec::new(),
+            fail_widths_kind: FaultKind::Fatal,
+            latency: Duration::ZERO,
+            switch: None,
+        }
+    }
+
+    /// Probability that any given attempt faults transiently.
+    pub fn transient_rate(mut self, p: f64) -> Self {
+        self.transient_rate = p;
+        self
+    }
+
+    /// Probability that any given attempt faults fatally.
+    pub fn fatal_rate(mut self, p: f64) -> Self {
+        self.fatal_rate = p;
+        self
+    }
+
+    /// Fault exactly the `n`th attempt (1-based), once.
+    pub fn fail_on_call(self, n: u64, kind: FaultKind) -> Self {
+        self.script.lock().expect("chaos script lock").one_shot.push((n, kind));
+        self
+    }
+
+    /// Fault every attempt from the `n`th (1-based) onward.
+    pub fn fail_from_call(self, n: u64, kind: FaultKind) -> Self {
+        self.script.lock().expect("chaos script lock").fail_from = Some((n, kind));
+        self
+    }
+
+    /// Fault every attempt whose batch width (rows of `x`) is in `widths`.
+    ///
+    /// This is how a test makes a fault *lane-attributable*: the scheduler
+    /// retries a failed batched call lane-by-lane, and only the lane whose
+    /// width is in the set keeps failing.
+    pub fn fail_on_widths(mut self, widths: &[usize], kind: FaultKind) -> Self {
+        self.fail_widths = widths.to_vec();
+        self.fail_widths_kind = kind;
+        self
+    }
+
+    /// Sleep this long at the top of every attempt (timeout-path testing).
+    pub fn latency(mut self, d: Duration) -> Self {
+        self.latency = d;
+        self
+    }
+
+    /// Attach an external arm/disarm lever (checked before everything else).
+    pub fn with_switch(mut self, s: ChaosSwitch) -> Self {
+        self.switch = Some(s);
+        self
+    }
+
+    /// Total attempts observed, including faulted ones that never reached
+    /// the inner denoiser. `calls()` (delegated to the inner denoiser)
+    /// counts only successful calls; the difference is the injected-fault
+    /// count.
+    pub fn attempts(&self) -> u64 {
+        self.attempts.load(Ordering::Relaxed)
+    }
+
+    /// Decide whether this attempt faults. At most one RNG draw per
+    /// attempt, taken iff a probabilistic rate is configured, so the fault
+    /// pattern is a pure function of (seed, attempt index).
+    fn maybe_fault(&self, width: usize) -> Result<()> {
+        let attempt = self.attempts.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut script = self.script.lock().expect("chaos script lock");
+        // keep stream consumption independent of the scripted faults below
+        let u = if self.transient_rate > 0.0 || self.fatal_rate > 0.0 {
+            Some(script.rng.uniform())
+        } else {
+            None
+        };
+        if let Some(kind) = self.switch.as_ref().and_then(ChaosSwitch::get) {
+            return Err(kind.error(attempt));
+        }
+        if let Some(i) = script.one_shot.iter().position(|(n, _)| *n == attempt) {
+            let (_, kind) = script.one_shot.swap_remove(i);
+            return Err(kind.error(attempt));
+        }
+        if let Some((n, kind)) = script.fail_from {
+            if attempt >= n {
+                return Err(kind.error(attempt));
+            }
+        }
+        if self.fail_widths.contains(&width) {
+            return Err(self.fail_widths_kind.error(attempt));
+        }
+        if let Some(u) = u {
+            if u < self.fatal_rate {
+                return Err(FaultKind::Fatal.error(attempt));
+            }
+            if u < self.fatal_rate + self.transient_rate {
+                return Err(FaultKind::Transient.error(attempt));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<D: Denoiser> Denoiser for ChaosDenoiser<D> {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn denoise_into(
+        &self,
+        x: &TokenBatch,
+        t: &[f32],
+        src: Option<&TokenBatch>,
+        out: &mut LogitsBuf,
+    ) -> Result<()> {
+        if self.latency > Duration::ZERO {
+            std::thread::sleep(self.latency);
+        }
+        self.maybe_fault(x.rows())?;
+        self.inner.denoise_into(x, t, src, out)
+    }
+
+    fn calls(&self) -> u64 {
+        self.inner.calls()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::MockDenoiser;
+
+    fn mock() -> MockDenoiser {
+        let cfg = MockDenoiser::test_config(10, 4, 0, "multinomial");
+        MockDenoiser::fixed(cfg, vec![5, 6, 7, 8])
+    }
+
+    fn call(d: &dyn Denoiser, rows: usize) -> Result<()> {
+        let x = TokenBatch::filled(rows, 4, 3);
+        let mut out = LogitsBuf::new();
+        d.denoise_into(&x, &vec![0.5; rows], None, &mut out)
+    }
+
+    #[test]
+    fn scripted_one_shot_fault_skips_inner() {
+        let d = ChaosDenoiser::new(mock(), 1).fail_on_call(2, FaultKind::Transient);
+        assert!(call(&d, 1).is_ok());
+        let err = call(&d, 1).unwrap_err();
+        assert!(is_transient(&err), "one-shot fault must classify transient: {err:#}");
+        assert!(call(&d, 1).is_ok(), "one-shot means exactly once");
+        assert_eq!(d.attempts(), 3);
+        assert_eq!(d.calls(), 2, "faulted attempt must not reach the inner denoiser");
+    }
+
+    #[test]
+    fn fail_from_is_permanent_and_fatal_is_not_transient() {
+        let d = ChaosDenoiser::new(mock(), 1).fail_from_call(2, FaultKind::Fatal);
+        assert!(call(&d, 1).is_ok());
+        for _ in 0..3 {
+            let err = call(&d, 1).unwrap_err();
+            assert!(!is_transient(&err), "fatal must not classify transient: {err:#}");
+        }
+        assert_eq!(d.calls(), 1);
+    }
+
+    #[test]
+    fn seeded_rates_are_reproducible() {
+        let pattern = |seed: u64| -> Vec<bool> {
+            let d = ChaosDenoiser::new(mock(), seed).transient_rate(0.4);
+            (0..64).map(|_| call(&d, 1).is_err()).collect()
+        };
+        let a = pattern(7);
+        assert_eq!(a, pattern(7), "same seed, same fault pattern");
+        assert!(a.iter().any(|f| *f) && !a.iter().all(|f| *f), "rate 0.4 mixes over 64 draws");
+        assert_ne!(a, pattern(8), "different seed, different pattern");
+    }
+
+    #[test]
+    fn width_scoped_faults_hit_only_matching_batches() {
+        let d = ChaosDenoiser::new(mock(), 1).fail_on_widths(&[3], FaultKind::Fatal);
+        assert!(call(&d, 2).is_ok());
+        assert!(call(&d, 3).is_err());
+        assert!(call(&d, 4).is_ok());
+        assert!(call(&d, 3).is_err(), "width faults are permanent");
+    }
+
+    #[test]
+    fn switch_arms_and_disarms_externally() {
+        let sw = ChaosSwitch::new();
+        let d = ChaosDenoiser::new(mock(), 1).with_switch(sw.clone());
+        assert!(call(&d, 1).is_ok());
+        sw.arm(FaultKind::Transient);
+        let err = call(&d, 1).unwrap_err();
+        assert!(is_transient(&err));
+        sw.arm(FaultKind::Fatal);
+        assert!(!is_transient(&call(&d, 1).unwrap_err()));
+        sw.disarm();
+        assert!(call(&d, 1).is_ok());
+    }
+
+    #[test]
+    fn classification_survives_context_wrapping() {
+        let base = FaultKind::Transient.error(5);
+        let wrapped = base.context("denoiser call failed at boundary 12");
+        assert!(is_transient(&wrapped), "chain scan must see through context");
+        assert!(!is_transient(&FaultKind::Fatal.error(5).context("wrapped")));
+    }
+}

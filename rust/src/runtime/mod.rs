@@ -7,11 +7,13 @@
 //! buffers (uploaded once per model, reused for every NFE call).
 
 pub mod artifact;
+pub mod chaos;
 pub mod denoiser;
 pub mod model;
 pub mod weights;
 
 pub use artifact::{Artifacts, ManifestModel, ModelConfig};
+pub use chaos::{is_transient, ChaosDenoiser, ChaosSwitch, FaultKind, TRANSIENT_MARKER};
 pub use denoiser::{denoise_chunked, Denoiser, MockDenoiser};
 pub use model::{ModelRuntime, TransitionRuntime};
 pub use weights::{Dtype, Tensor, WeightsFile};

@@ -1,0 +1,485 @@
+//! Fault-injection acceptance suite — the pins for fault-tolerant
+//! serving (`docs/robustness.md`):
+//!
+//! * retry transparency — for every `SamplerKind`, a run whose denoiser
+//!   faults transiently (seeded rate + a scripted first-call fault) and
+//!   is retried under a generous `FaultPolicy` finishes with tokens
+//!   **byte-identical** to the clean run. A denoiser call is a pure
+//!   function of `(x, t, src)` — per-row RNG streams live in the
+//!   session — so a retried call is indistinguishable from one that
+//!   never faulted;
+//! * breaker park + salvage — a shard whose calls start failing parks
+//!   its lanes *at* a transition-time boundary instead of failing them;
+//!   queued work and parked lanes evacuated to a healthy scheduler
+//!   resume byte-exactly (same mechanism as lane donation: 𝒯 is
+//!   predetermined, so the handoff point is well-defined);
+//! * shard failover through the router — a mid-run engine failure on
+//!   one shard ends with every request served, per-request NFE exactly
+//!   conserved (nothing lost, nothing double-served), zero ghost
+//!   events, and the shard restarted via its engine factory;
+//! * terminal failure — when the restart factory also fails, the dead
+//!   shard keeps answering stats with its real pre-failure counters
+//!   (`healthy: false`), and everything salvaged still completes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{
+    cipher_mock_denoiser, cipher_mock_engine, Engine, FaultPolicy, GenRequest, Outcome, Pending,
+    RebalancePolicy, SchedPolicy, Scheduler, ServeBuilder,
+};
+use dndm::data::words;
+use dndm::runtime::{ChaosDenoiser, ChaosSwitch, Denoiser, FaultKind, MockDenoiser};
+use dndm::sampler::{SamplerConfig, SamplerKind, SamplerSession};
+
+/// Every sampler with a noise family it supports — same map as
+/// determinism.rs / narrowing.rs / rebalance.rs.
+const ALL_KINDS: [(SamplerKind, &str); 10] = [
+    (SamplerKind::Dndm, "absorbing"),
+    (SamplerKind::DndmV2, "absorbing"),
+    (SamplerKind::DndmTopK, "absorbing"),
+    (SamplerKind::DndmC, "absorbing"),
+    (SamplerKind::D3pm, "absorbing"),
+    (SamplerKind::Rdm, "absorbing"),
+    (SamplerKind::RdmTopK, "multinomial"),
+    (SamplerKind::MaskPredict, "absorbing"),
+    (SamplerKind::Ddim, "multinomial"),
+    (SamplerKind::Ardm, "absorbing"),
+];
+
+const SRCS: [&str; 3] = [
+    "the quick fox crosses a river",
+    "a small garden by the road",
+    "this old road to the river",
+];
+
+fn engine(noise: &'static str) -> Engine {
+    if noise == "absorbing" {
+        return cipher_mock_engine(8);
+    }
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), 8, 0, "multinomial");
+    let mut den = MockDenoiser::fixed(cfg, vec![44, 45, 46, 47, 48, 49, 50, 51]);
+    den.peak = 14.0;
+    Engine::from_denoiser(Box::new(den), vocab, "multinomial-mock")
+}
+
+/// The same engines as [`engine`], wrapped in a seeded [`ChaosDenoiser`]:
+/// the first attempt always faults transiently (so every kind exercises
+/// at least one retry) and ~30% of the remaining attempts fault from the
+/// seeded stream.
+fn chaos_engine(noise: &'static str, seed: u64) -> Engine {
+    let vocab = words::translation_vocab();
+    if noise == "absorbing" {
+        let den = ChaosDenoiser::new(cipher_mock_denoiser(8), seed)
+            .transient_rate(0.3)
+            .fail_on_call(1, FaultKind::Transient);
+        return Engine::from_denoiser(Box::new(den), vocab, "cipher-chaos");
+    }
+    let cfg = MockDenoiser::test_config(vocab.len(), 8, 0, "multinomial");
+    let mut inner = MockDenoiser::fixed(cfg, vec![44, 45, 46, 47, 48, 49, 50, 51]);
+    inner.peak = 14.0;
+    let den = ChaosDenoiser::new(inner, seed)
+        .transient_rate(0.3)
+        .fail_on_call(1, FaultKind::Transient);
+    Engine::from_denoiser(Box::new(den), vocab, "multinomial-chaos")
+}
+
+fn policy() -> SchedPolicy {
+    SchedPolicy { max_batch: 4, window: Duration::ZERO, shared_tau_groups: true }
+}
+
+/// A retry budget that absorbs every transient fault the seeded rates can
+/// produce without ever opening the breaker.
+fn absorb() -> FaultPolicy {
+    FaultPolicy {
+        max_retries: 16,
+        backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        call_timeout: None,
+        breaker_threshold: 1000,
+        breaker_cooldown: Duration::from_millis(250),
+    }
+}
+
+/// Trip the breaker on the first exhausted call: 1 + 2 retried attempts
+/// all fail → streak 3 ≥ threshold 3 → park, before lane isolation (which
+/// would fail lanes) is ever reached. The long cooldown keeps the shard
+/// parked until a supervisor acts, as a dead engine would.
+fn trip_fast() -> FaultPolicy {
+    FaultPolicy {
+        max_retries: 2,
+        backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        call_timeout: None,
+        breaker_threshold: 3,
+        breaker_cooldown: Duration::from_secs(60),
+    }
+}
+
+fn req(id: usize, noise: &str, seed: u64) -> Pending<usize> {
+    let src = (noise == "absorbing").then(|| SRCS[id % SRCS.len()].to_string());
+    Pending::new(src, seed, None, id)
+}
+
+/// First seed whose width-3 session spans at least 3 events, so the lane
+/// is still flying after its first call (same probe as rebalance.rs).
+fn lane_seed(eng: &Engine, cfg: &SamplerConfig) -> u64 {
+    (0..64u64)
+        .find(|&s| {
+            SamplerSession::new(eng.denoiser().config(), cfg, 3, s)
+                .map(|sess| sess.total_events() >= 3)
+                .unwrap_or(false)
+        })
+        .expect("some seed in 0..64 must give >= 3 events")
+}
+
+type Resolved = (usize, Outcome, Option<Vec<u32>>);
+
+fn collect(fs: Vec<dndm::coordinator::Finished<usize>>) -> Vec<Resolved> {
+    fs.into_iter()
+        .map(|f| {
+            let tokens = f
+                .result
+                .as_ref()
+                .ok()
+                .and_then(|d| d.output())
+                .map(|o| o.tokens.clone());
+            (f.payload, f.outcome, tokens)
+        })
+        .collect()
+}
+
+fn drain(s: &mut Scheduler<usize>) -> Vec<Resolved> {
+    let mut out = Vec::new();
+    while s.has_work() {
+        out.extend(collect(s.tick()));
+    }
+    out
+}
+
+fn tokens_of(rows: &[Resolved], id: usize, label: &str) -> Vec<u32> {
+    rows.iter()
+        .find(|(p, _, _)| *p == id)
+        .and_then(|(_, _, t)| t.clone())
+        .unwrap_or_else(|| panic!("{label}: request {id} must finish with tokens"))
+}
+
+fn wait_until(mut ready: impl FnMut() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !ready() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheduler level
+// ---------------------------------------------------------------------------
+
+/// The retry-transparency pin: for every kind, a run whose denoiser
+/// faults transiently — deterministically on the first attempt, then at
+/// a seeded ~30% rate — and retries under [`absorb`] finishes with
+/// tokens byte-identical to the clean run, with every fault accounted
+/// and no escalation past the retry rung.
+#[test]
+fn seeded_transient_faults_retry_byte_identical_for_every_kind() {
+    for (sk, noise) in ALL_KINDS {
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+
+        // clean reference
+        let mut r: Scheduler<usize> = Scheduler::new(engine(noise), cfg.clone(), policy());
+        for id in 0..3 {
+            r.enqueue(req(id, noise, 7));
+        }
+        let full = drain(&mut r);
+        let want: Vec<Vec<u32>> =
+            (0..3).map(|id| tokens_of(&full, id, sk.name())).collect();
+
+        // chaos run: same requests, faulting denoiser, generous retries
+        let mut c: Scheduler<usize> =
+            Scheduler::new(chaos_engine(noise, 0xC0FFEE), cfg.clone(), policy())
+                .with_fault_policy(absorb());
+        for id in 0..3 {
+            c.enqueue(req(id, noise, 7));
+        }
+        let done = drain(&mut c);
+        for id in 0..3 {
+            assert_eq!(
+                tokens_of(&done, id, sk.name()),
+                want[id],
+                "{}: request {id} must be byte-identical under transient faults",
+                sk.name()
+            );
+        }
+        assert!(c.retries() >= 1, "{}: the scripted first-call fault retried", sk.name());
+        assert!(c.faults_transient() >= c.retries(), "{}", sk.name());
+        assert_eq!(c.faults_fatal(), 0, "{}: transient-only injection", sk.name());
+        assert!(!c.breaker_open(), "{}: absorb policy never parks", sk.name());
+        assert_eq!(c.ghost_events(), 0, "{}", sk.name());
+    }
+}
+
+/// The park-and-salvage pin at scheduler level: when every attempt at a
+/// boundary fails, the breaker opens *without failing anyone* — lanes
+/// sit intact at the boundary — and queued work plus evacuated lanes
+/// adopted by a healthy scheduler finish byte-identical to a run where
+/// the fault never happened.
+#[test]
+fn breaker_parks_lanes_and_evacuation_resumes_byte_identical() {
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, 25).with_temperature(1.0);
+    let seed = lane_seed(&cipher_mock_engine(8), &cfg);
+    let pol = SchedPolicy { max_batch: 3, window: Duration::ZERO, shared_tau_groups: true };
+
+    // reference: same admission pattern (width-3 lane, then the 4th solo)
+    let mut r: Scheduler<usize> = Scheduler::new(cipher_mock_engine(8), cfg.clone(), pol);
+    for id in 0..4 {
+        r.enqueue(req(id, "absorbing", seed));
+    }
+    let full = drain(&mut r);
+    let want: Vec<Vec<u32>> = (0..4).map(|id| tokens_of(&full, id, "ref")).collect();
+
+    // chaos run: the switch arms after the first clean boundary
+    let sw = ChaosSwitch::new();
+    let den = ChaosDenoiser::new(cipher_mock_denoiser(8), 3).with_switch(sw.clone());
+    let eng = Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-chaos");
+    let mut broken: Scheduler<usize> =
+        Scheduler::new(eng, cfg.clone(), pol).with_fault_policy(trip_fast());
+    for id in 0..4 {
+        broken.enqueue(req(id, "absorbing", seed));
+    }
+    assert!(broken.tick().is_empty(), "lane must outlive the first call");
+    assert_eq!(broken.in_flight(), 3);
+    assert_eq!(broken.pending_len(), 1);
+
+    sw.arm(FaultKind::Transient);
+    let parked = broken.tick();
+    assert!(parked.is_empty(), "parking is not a failure path");
+    assert!(broken.breaker_open());
+    assert_eq!(broken.in_flight(), 3, "lanes sit intact at the boundary");
+    assert_eq!(broken.retries(), 2, "max_retries spent before the streak tripped");
+    assert_eq!(broken.faults_transient(), 3);
+    assert_eq!(broken.faults_fatal(), 0);
+    // further ticks while parked make no calls and fail no one
+    assert!(broken.tick().is_empty());
+    assert_eq!(broken.in_flight(), 3);
+
+    // supervisor: queued work re-enqueues, parked lanes evacuate whole
+    let mut healthy: Scheduler<usize> = Scheduler::new(cipher_mock_engine(8), cfg, pol);
+    for p in broken.drain_pending() {
+        healthy.enqueue(p);
+    }
+    let lanes = broken.evacuate();
+    assert_eq!(lanes.len(), 1, "every parked lane moves");
+    assert_eq!(lanes[0].width(), 3);
+    for lane in lanes {
+        healthy.adopt_lane(lane);
+    }
+    assert!(!broken.has_work(), "nothing left behind on the broken shard");
+
+    let done = drain(&mut healthy);
+    for id in 0..4 {
+        assert_eq!(
+            tokens_of(&done, id, "salvage"),
+            want[id],
+            "request {id} must be byte-identical across the salvage"
+        );
+    }
+    assert_eq!(healthy.ghost_events(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// router level
+// ---------------------------------------------------------------------------
+
+/// D3pm marches every step — the event count is exactly `steps` for any
+/// seed, so per-request NFE conservation has an exact expected value.
+fn slow_cfg(steps: usize) -> SamplerConfig {
+    SamplerConfig::new(SamplerKind::D3pm, steps)
+}
+
+const STEPS: usize = 20_000;
+
+/// A 2-shard chaos factory: every engine wraps the cipher mock in a
+/// [`ChaosDenoiser`] sharing one externally-armed switch, with enough
+/// per-call latency that the test can observe (and interrupt) the run
+/// mid-flight.
+fn switched_factory(
+    sw: &ChaosSwitch,
+) -> impl Fn() -> anyhow::Result<Engine> + Send + 'static {
+    let sw = sw.clone();
+    move || {
+        let den = ChaosDenoiser::new(cipher_mock_denoiser(8), 11)
+            .latency(Duration::from_micros(25))
+            .with_switch(sw.clone());
+        Ok(Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-chaos"))
+    }
+}
+
+/// The failover pin through the serving stack: shard 0's engine starts
+/// failing mid-run with one lane in flight and one request queued; the
+/// breaker parks, the supervision pass salvages both onto shard 1 and
+/// restarts shard 0 from its factory. Every request is served, NFE is
+/// exactly conserved across the two shards (nothing lost, nothing
+/// double-served), no ghost events fire, and the restarted shard is
+/// healthy again.
+#[test]
+fn killed_shard_salvages_lanes_and_queue_then_restarts() {
+    let sw = ChaosSwitch::new();
+    let router = ServeBuilder::new(switched_factory(&sw), slow_cfg(STEPS))
+        .continuous(SchedPolicy {
+            max_batch: 2,
+            window: Duration::from_millis(50),
+            shared_tau_groups: true,
+        })
+        .shards(2)
+        .rebalance(RebalancePolicy::manual())
+        .fault_policy(trip_fast())
+        .start();
+
+    // shard 0: two requests co-admit into a width-2 lane, the third queues
+    let mut tickets = Vec::new();
+    for i in 0..3 {
+        let req = GenRequest::new(i).src("the quick fox");
+        tickets.push(router.shard(0).submit_request(req).unwrap());
+    }
+    wait_until(
+        || {
+            let st = router.shard(0).stats().unwrap();
+            st.lanes == 1 && st.in_flight == 2 && st.nn_calls >= 10
+        },
+        "the width-2 lane to form and make progress",
+    );
+
+    // the engine "dies": every subsequent attempt faults until disarm
+    sw.arm(FaultKind::Transient);
+    wait_until(
+        || router.shard(0).stats().unwrap().breaker_open,
+        "the circuit breaker to park the shard",
+    );
+    let parked = router.shard(0).stats().unwrap();
+    assert_eq!(parked.in_flight, 2, "parked lanes are intact, not failed");
+    assert!(!parked.healthy, "an open breaker reports unhealthy");
+
+    // replacement hardware arrives; the supervision pass moves the work
+    sw.disarm();
+    assert_eq!(router.supervise().unwrap(), 1, "exactly one broken shard to salvage");
+
+    for t in tickets {
+        t.wait().expect("salvaged requests must finish");
+    }
+    let per_shard = router.shard_stats().unwrap();
+    assert_eq!(per_shard[0].lanes_salvaged, 1, "the parked lane moved: {per_shard:?}");
+    assert!(per_shard[0].healthy, "restart closed the breaker");
+    assert!(!per_shard[0].breaker_open);
+    assert!(per_shard[1].nn_calls > STEPS as u64, "thief served the queue + the lane tail");
+    // sequence-evaluation conservation: 3 requests × STEPS calls, split
+    // across the shards at the park boundary — nothing lost, nothing
+    // double-served, and the faulted attempts never reached the counter
+    assert_eq!(per_shard[0].nn_calls + per_shard[1].nn_calls, 3 * STEPS as u64);
+    let merged = router.stats().unwrap();
+    assert_eq!(merged.ghost_events_fired, 0);
+    assert!(
+        (merged.avg_request_nfe - STEPS as f64).abs() < 1e-9,
+        "per-request NFE conserved across the failover: {} != {STEPS}",
+        merged.avg_request_nfe
+    );
+    assert!(merged.retries >= 1, "the dying shard retried before parking");
+    assert!(merged.faults_transient >= 3);
+    assert_eq!(merged.faults_fatal, 0);
+    assert_eq!(merged.lanes_salvaged, 1);
+    assert!(merged.healthy);
+    router.shutdown();
+    router.join();
+}
+
+/// The terminal-failure pin: evacuation succeeds but the engine restart
+/// fails (the factory has no engines left). The dead shard must answer
+/// stats with its *real* pre-failure counters under `healthy: false` —
+/// not a zeroed snapshot — refuse new work loudly, and everything
+/// salvaged before the restart attempt still completes on the healthy
+/// shard with NFE conserved.
+#[test]
+fn failed_restart_reports_real_counters_and_salvage_still_completes() {
+    let sw = ChaosSwitch::new();
+    let built = Arc::new(AtomicUsize::new(0));
+    let factory = {
+        let (sw, built) = (sw.clone(), built.clone());
+        move || {
+            // two engines for the two shards at startup; the restart gets none
+            if built.fetch_add(1, Ordering::SeqCst) >= 2 {
+                anyhow::bail!("no spare engine for this shard");
+            }
+            let den = ChaosDenoiser::new(cipher_mock_denoiser(8), 11)
+                .latency(Duration::from_micros(25))
+                .with_switch(sw.clone());
+            Ok(Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-chaos"))
+        }
+    };
+    let router = ServeBuilder::new(factory, slow_cfg(STEPS))
+        .continuous(SchedPolicy {
+            max_batch: 2,
+            window: Duration::from_millis(50),
+            shared_tau_groups: true,
+        })
+        .shards(2)
+        .rebalance(RebalancePolicy::manual())
+        .fault_policy(trip_fast())
+        .start();
+
+    let mut tickets = Vec::new();
+    for i in 0..3 {
+        let req = GenRequest::new(i).src("the quick fox");
+        tickets.push(router.shard(0).submit_request(req).unwrap());
+    }
+    wait_until(
+        || {
+            let st = router.shard(0).stats().unwrap();
+            st.lanes == 1 && st.in_flight == 2 && st.nn_calls >= 10
+        },
+        "the width-2 lane to form and make progress",
+    );
+    sw.arm(FaultKind::Transient);
+    wait_until(
+        || router.shard(0).stats().unwrap().breaker_open,
+        "the circuit breaker to park the shard",
+    );
+    sw.disarm();
+    assert_eq!(router.supervise().unwrap(), 1);
+
+    // the salvage landed before the restart attempt, so every ticket
+    // still completes on shard 1
+    for t in tickets {
+        t.wait().expect("salvaged requests must finish");
+    }
+    wait_until(
+        || !router.shard(0).stats().unwrap().healthy,
+        "the failed restart to take shard 0 down",
+    );
+    let dead = router.shard(0).stats().unwrap();
+    assert_eq!(dead.requests, 3, "pre-failure counters survive: {dead:?}");
+    assert!(dead.nn_calls >= 10, "pre-failure nn_calls survive: {dead:?}");
+    assert_eq!(dead.lanes_salvaged, 1);
+    assert!(!dead.breaker_open, "a dead shard has no breaker left to probe");
+    let per_shard = router.shard_stats().unwrap();
+    assert_eq!(per_shard[0].nn_calls + per_shard[1].nn_calls, 3 * STEPS as u64);
+    let merged = router.stats().unwrap();
+    assert!(!merged.healthy, "one dead shard taints the merged report");
+    assert_eq!(merged.ghost_events_fired, 0);
+    assert!(
+        (merged.avg_request_nfe - STEPS as f64).abs() < 1e-9,
+        "per-request NFE conserved even when the donor died: {}",
+        merged.avg_request_nfe
+    );
+
+    // new work on the dead shard fails loudly instead of hanging
+    let t = router.shard(0).submit_request(GenRequest::new(99).src("the quick fox")).unwrap();
+    let err = t.wait().expect_err("a dead shard must refuse new work");
+    assert!(
+        format!("{err:#}").contains("engine unavailable"),
+        "refusal names the cause: {err:#}"
+    );
+    router.shutdown();
+    router.join();
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
 """CI gate: fail when allocs/call in a serving bench run regresses past the
-committed ceiling, or when any row fired a ghost event.
+committed ceiling, when any row fired a ghost event, or when any row saw a
+fatal fault or an open circuit breaker.
 
 Usage: check_bench_allocs.py BENCH_serving.json serving_allocs_baseline.json
 
@@ -17,6 +18,12 @@ with no allocs ceiling: per-row event ladders make ghosts structurally
 impossible, so any nonzero value is a correctness bug, not noise. The
 bench's narrowing scenario cancels requests mid-flight specifically to
 exercise this.
+
+`faults_fatal` and `breaker_open` are likewise gated at exactly 0 on every
+row that reports them: the chaos scenario injects transient faults only, at
+a rate far below the breaker threshold, so the retry policy must absorb all
+of them (docs/robustness.md). A fatal fault or an open breaker on any bench
+row means fault classification or the retry ladder regressed.
 
 Ratchet policy (see the baseline file): ceilings start generous; once the
 uploaded BENCH_serving.json artifacts record a stable trajectory, lower
@@ -50,6 +57,11 @@ def main() -> int:
         if ghosts is not None and ghosts != 0:
             print(f"{policy:28s} ghost_events_fired {ghosts}  GHOST EVENTS (must be 0)")
             failures.append(policy)
+        for field in ("faults_fatal", "breaker_open"):
+            bad = row.get(field)
+            if bad is not None and bad != 0:
+                print(f"{policy:28s} {field} {bad}  FAULT ESCALATION (must be 0)")
+                failures.append(policy)
         value = row["allocs_per_call"]
         if policy not in ceilings:
             print(f"{policy:28s} allocs/call {value:9.1f}  (no ceiling — not gated)")
@@ -71,9 +83,14 @@ def main() -> int:
         print("If an allocs/call regression is intentional, raise the ceiling in")
         print(f"{sys.argv[2]} in the same PR and say why in its comment field.")
         print("A nonzero ghost_events_fired has no ceiling to raise — it is a")
-        print("lane-narrowing correctness bug; fix it.")
+        print("lane-narrowing correctness bug; fix it. Likewise faults_fatal /")
+        print("breaker_open: the bench injects transient faults only, so either")
+        print("means fault classification or the retry ladder regressed.")
         return 1
-    print("\nbench gate passed (allocs/call ceilings + ghost_events_fired == 0)")
+    print(
+        "\nbench gate passed (allocs/call ceilings + ghost_events_fired == 0"
+        " + faults_fatal == 0 + breaker_open == 0)"
+    )
     return 0
 
 
