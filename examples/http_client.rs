@@ -1,0 +1,104 @@
+//! HTTP client walkthrough — runs anywhere, no artifacts needed: starts
+//! an in-process mock-backed front door on a loopback port, then talks
+//! to it the way any external client would — a std-only `TcpStream`,
+//! hand-written HTTP/1.1, and the SSE progress stream parsed line by
+//! line. Shows the exact-cost admission control from the outside: the
+//! `queued` frame announces the request's predetermined denoiser-call
+//! count before any compute, and an unmeetable deadline comes back as
+//! `503` + `Retry-After` without ever reaching the scheduler.
+//!
+//!     cargo run --release --example http_client
+//!
+//! Against a real server (`dndm serve --listen 127.0.0.1:8484 --mock`),
+//! the same wire format works from curl — see docs/http.md.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dndm::coordinator::{cipher_mock_denoiser, cipher_mock_engine, SchedPolicy, ServeBuilder};
+use dndm::net::{self, AdmissionPolicy, HttpOptions};
+use dndm::runtime::Denoiser;
+use dndm::sampler::{SamplerConfig, SamplerKind};
+
+fn main() -> anyhow::Result<()> {
+    // -- server side: the same front door `dndm serve --listen` runs ------
+    let router = Arc::new(
+        ServeBuilder::new(|| Ok(cipher_mock_engine(16)), SamplerConfig::new(SamplerKind::Dndm, 50))
+            .continuous(SchedPolicy {
+                max_batch: 8,
+                window: Duration::ZERO,
+                // per-request lanes: the admission-time |𝒯| is exact
+                shared_tau_groups: false,
+            })
+            .start(),
+    );
+    let mcfg = cipher_mock_denoiser(16).config().clone();
+    let server = net::serve(
+        "127.0.0.1:0",
+        router.clone(),
+        mcfg,
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+        AdmissionPolicy::default(),
+        HttpOptions::default(),
+    )?;
+    let addr = server.local_addr();
+    println!("front door on http://{addr}\n");
+
+    // -- client side: plain sockets, like any non-Rust consumer ----------
+    println!("== streaming a request over SSE ==");
+    let body = r#"{"seed":7,"src":"the quick fox crosses a river","stream":true}"#;
+    let mut conn = TcpStream::connect(addr)?;
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: demo\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut r = BufReader::new(conn);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    print!("  {line}");
+    // skip response headers
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    // chunked SSE body: each chunk is one frame; print the event lines
+    loop {
+        let mut size = String::new();
+        r.read_line(&mut size)?;
+        let n = usize::from_str_radix(size.trim(), 16)?;
+        let mut chunk = vec![0u8; n + 2]; // payload + CRLF
+        r.read_exact(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        for l in String::from_utf8_lossy(&chunk[..n]).lines() {
+            if !l.is_empty() {
+                println!("  {l}");
+            }
+        }
+    }
+
+    // -- a provably unmeetable deadline is shed at the door ---------------
+    println!("\n== exact-cost load shedding ==");
+    let body = r#"{"seed":8,"src":"a small garden","deadline_ms":0}"#;
+    let mut conn = TcpStream::connect(addr)?;
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: demo\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut text = String::new();
+    BufReader::new(conn).read_to_string(&mut text)?;
+    for l in text.lines().take(6) {
+        println!("  {l}");
+    }
+
+    router.shutdown();
+    Ok(())
+}

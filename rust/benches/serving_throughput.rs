@@ -36,7 +36,7 @@ use dndm::coordinator::{
 };
 use dndm::data::{gen_pairs, words, Dataset, Split};
 use dndm::exp;
-use dndm::runtime::{Artifacts, ChaosDenoiser};
+use dndm::runtime::{Artifacts, ChaosDenoiser, Denoiser};
 use dndm::sampler::{SamplerConfig, SamplerKind};
 use dndm::util::bench::Table;
 
@@ -119,11 +119,25 @@ struct Row {
     /// in this single-shard bench; recorded so the JSON schema matches
     /// the router stats surface.
     lanes_salvaged: u64,
+    /// requests the front door's token bucket turned away (HTTP 429).
+    /// 0 on every row except the admission row, which drives a synthetic
+    /// over-capacity burst through `net::admission` — CI gates both ways
+    /// (`scripts/check_bench_allocs.py`).
+    rejected_rate_limit: u64,
+    /// requests shed because the exact cost projection exceeded their
+    /// deadline (HTTP 503). Same gating as `rejected_rate_limit`.
+    rejected_deadline: u64,
 }
 
 /// One row from a finished run: throughput from the wall clock, the rest
 /// from the server's final stats snapshot.
-fn make_row(name: &'static str, n_requests: usize, wall: f64, allocs: u64, stats: &ServerStats) -> Row {
+fn make_row(
+    name: &'static str,
+    n_requests: usize,
+    wall: f64,
+    allocs: u64,
+    stats: &ServerStats,
+) -> Row {
     let calls = stats.nn_calls.max(1);
     Row {
         name,
@@ -139,6 +153,8 @@ fn make_row(name: &'static str, n_requests: usize, wall: f64, allocs: u64, stats
         faults_fatal: stats.faults_fatal,
         breaker_open: stats.breaker_open as u64,
         lanes_salvaged: stats.lanes_salvaged,
+        rejected_rate_limit: 0,
+        rejected_deadline: 0,
     }
 }
 
@@ -307,6 +323,88 @@ fn run_chaos(name: &'static str, n_requests: usize, steps: usize) -> Row {
     make_row(name, n_requests, wall, allocs, &stats)
 }
 
+/// The admission-control scenario: a synthetic over-capacity burst
+/// driven through `net::admission::Admission` in front of the server —
+/// the same controller the HTTP front door runs, minus the sockets.
+/// Every request's denoiser-call cost is computed exactly (host-side
+/// |𝒯|) before submission; a 30 ms admission deadline plus a no-refill
+/// token bucket sized at half the burst make the rejection counts fully
+/// deterministic: the bucket 429s the second half, and within the first
+/// half the exact projection 503s everything past the backlog the
+/// deadline can absorb. Accepted requests carry no server-side deadline,
+/// so the serving path stays clean (`ghost_events_fired`, `faults_*`
+/// all 0) and CI gates `rejected_deadline > 0` / `rejected_rate_limit >
+/// 0` on this row and `== 0` on every other.
+fn run_admission(name: &'static str, n_requests: usize, steps: usize) -> Row {
+    use dndm::net::{Admission, AdmissionPolicy, RateLimit};
+
+    let cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let mcfg = cipher_mock_denoiser(16).config().clone();
+    let (srv, join) = Server::start_continuous(
+        factory(true),
+        cfg.clone(),
+        SchedPolicy {
+            max_batch: 16,
+            window: Duration::from_millis(20),
+            // per-request lanes: the admission-time |𝒯| is each
+            // request's served NFE exactly
+            shared_tau_groups: false,
+        },
+    );
+    let admission = Admission::new(
+        AdmissionPolicy {
+            rate_limit: Some(RateLimit { burst: (n_requests / 2) as f64, per_sec: 0.0 }),
+            initial_us_per_nfe: 1000.0,
+            ewma_alpha: 0.2,
+        },
+        1,
+    );
+    let deadline = Duration::from_millis(30);
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    for (i, (s, _)) in pairs.iter().enumerate() {
+        let cost = dndm::net::exact_cost(&mcfg, &cfg, i as u64).unwrap();
+        if admission.admit(None, 0, cost, Some(deadline)).is_err() {
+            continue;
+        }
+        tickets.push((
+            cost,
+            srv.submit_request(GenRequest::new(i as u64).src(s.join(" "))).unwrap(),
+        ));
+        admission.charge(0, cost);
+    }
+    let accepted = tickets.len();
+    for (cost, t) in tickets {
+        match t.wait() {
+            Ok(out) => admission.observe(0, out.nfe as u64, out.elapsed),
+            Err(_) => admission.release(0, cost),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let stats = srv.stats().unwrap();
+    srv.shutdown();
+    join.join();
+    let mut row = make_row(name, accepted.max(1), wall, allocs, &stats);
+    row.rejected_rate_limit = admission.rejected_rate_limit();
+    row.rejected_deadline = admission.rejected_deadline();
+    assert!(
+        row.rejected_deadline > 0 && row.rejected_rate_limit > 0,
+        "admission burst must shed deterministically \
+         (deadline {} / rate {} of {n_requests})",
+        row.rejected_deadline,
+        row.rejected_rate_limit
+    );
+    println!(
+        "[serving_throughput] admission burst: {accepted}/{n_requests} accepted, \
+         {} shed by deadline, {} by rate limit",
+        row.rejected_deadline, row.rejected_rate_limit
+    );
+    row
+}
+
 /// Cheap engine-init probe: loads artifacts + weights but skips the
 /// expensive per-bucket warmup compilation the real factory does.
 fn probe_real_engine() -> anyhow::Result<()> {
@@ -336,7 +434,8 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
              \"nn_calls\": {}, \"avg_request_nfe\": {:.3}, \"per_nfe_host_us\": {:.3}, \
              \"allocs_per_call\": {:.1}, \"ghost_events_fired\": {}, \"retries\": {}, \
              \"faults_transient\": {}, \"faults_fatal\": {}, \"breaker_open\": {}, \
-             \"lanes_salvaged\": {}}}{}\n",
+             \"lanes_salvaged\": {}, \"rejected_rate_limit\": {}, \
+             \"rejected_deadline\": {}}}{}\n",
             r.name,
             r.req_per_s,
             r.e2e_p95_ms,
@@ -350,6 +449,8 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
             r.faults_fatal,
             r.breaker_open,
             r.lanes_salvaged,
+            r.rejected_rate_limit,
+            r.rejected_deadline,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -400,6 +501,7 @@ fn main() {
     }
     rows.push(run_narrowing("continuous b=16 narrowing", n, steps, use_mock));
     rows.push(run_chaos("continuous b=16 chaos", n, steps));
+    rows.push(run_admission("continuous b=16 admission burst", n, steps));
 
     let mut out = Table::new(&[
         "policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE", "host µs/NFE", "allocs/call",

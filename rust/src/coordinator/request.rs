@@ -68,6 +68,7 @@ pub struct GenRequest {
     pub(crate) deadline: Option<Duration>,
     pub(crate) priority: Priority,
     pub(crate) stream: bool,
+    pub(crate) tenant: Option<String>,
 }
 
 impl GenRequest {
@@ -81,6 +82,7 @@ impl GenRequest {
             deadline: None,
             priority: Priority::Normal,
             stream: false,
+            tenant: None,
         }
     }
 
@@ -109,6 +111,17 @@ impl GenRequest {
 
     pub fn priority(mut self, p: Priority) -> Self {
         self.priority = p;
+        self
+    }
+
+    /// Attribute this request to a tenant. Per-tenant submit counts show
+    /// up in [`ServerStats::tenant_requests`](super::server::ServerStats)
+    /// (counted once, by the submit shard — stolen/donated requests are
+    /// not re-counted), and the network front door keys its token-bucket
+    /// rate limits on the same identifier. `None` (the default) leaves
+    /// every existing call site and byte-parity pin untouched.
+    pub fn tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
         self
     }
 
@@ -451,14 +464,17 @@ mod tests {
         assert!(req.src.is_none() && req.cfg.is_none() && req.deadline.is_none());
         assert_eq!(req.priority, Priority::Normal);
         assert!(!req.stream);
+        assert!(req.tenant.is_none());
         let req = req
             .src("hello")
             .deadline(Duration::from_millis(5))
             .priority(Priority::High)
+            .tenant("acme")
             .stream_partials();
         assert_eq!(req.src.as_deref(), Some("hello"));
         assert_eq!(req.priority, Priority::High);
         assert!(req.stream && req.deadline.is_some());
+        assert_eq!(req.tenant.as_deref(), Some("acme"));
     }
 
     #[test]

@@ -265,6 +265,15 @@ impl Router {
     /// imbalance placement can't fix — queued work stranded behind a slow
     /// shard — is exactly what new-traffic moments should repair).
     pub fn submit_request(&self, req: GenRequest) -> Result<Ticket> {
+        self.submit_request_routed(req).map(|(t, _)| t)
+    }
+
+    /// [`Self::submit_request`], additionally reporting which shard the
+    /// placement policy chose. The network front door's admission control
+    /// keys its per-shard queued-cost backlog and wall-µs/NFE EWMA on
+    /// this index, so its completion-time projection charges the shard
+    /// that actually serves the request.
+    pub fn submit_request_routed(&self, req: GenRequest) -> Result<(Ticket, usize)> {
         if self.steal_worthwhile() {
             let _ = self.rebalance();
         }
@@ -276,7 +285,32 @@ impl Router {
         // dropped with it, and its drop guard emits the Failed terminal —
         // which performs the exactly-once load decrement. Decrementing
         // here as well would double-count and underflow the gauge.
-        self.shards[idx].server.submit_ticketed(req, Some(load))
+        self.shards[idx].server.submit_ticketed(req, Some(load)).map(|t| (t, idx))
+    }
+
+    /// Where would [`Self::submit_request`] place this request *right
+    /// now*? A pure read: neither the affinity table nor the round-robin
+    /// cursor moves, so peeking is free to call on every admission
+    /// decision. The answer can go stale the moment other submissions
+    /// land — callers (admission control projecting queue wait before
+    /// deciding to submit) treat it as the projection shard, not a
+    /// reservation.
+    pub fn peek_placement(&self, req: &GenRequest) -> usize {
+        let n = self.shards.len();
+        if n == 1 {
+            return 0;
+        }
+        let key = SpecKey::of(req.cfg.as_ref().unwrap_or(&self.default_cfg));
+        let loads: Vec<usize> =
+            self.shards.iter().map(|s| s.load.load(Ordering::Relaxed)).collect();
+        let least = (0..n).min_by_key(|&i| loads[i]).unwrap_or(0);
+        let aff = self.affinity.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some((_, shard)) = aff.iter().find(|(k, _)| k == &key) {
+            if loads[*shard] <= 2 * loads[least] + 1 {
+                return *shard;
+            }
+        }
+        least
     }
 
     /// Submit and wait — the blocking convenience.

@@ -161,6 +161,10 @@ pub struct Pending<P> {
     /// lifecycle sink (`Admitted`/`Progress`/terminal events + the
     /// cancellation flag); `None` = no client subscribed
     pub ctl: Option<TicketSink>,
+    /// Tenant attribution carried for the request's whole life so stolen
+    /// / donated / salvaged requests keep their identity (submit-side
+    /// stats counted it already; the scheduler itself never reads it).
+    pub tenant: Option<String>,
     /// Does the caller consume [`Finished::result`]? `false` (ticket-only
     /// requests: the sink is the sole reader) lets retirement **move** the
     /// [`GenOutput`] into the sink instead of cloning it — see
@@ -186,6 +190,7 @@ impl<P> Pending<P> {
             deadline: None,
             priority: Priority::Normal,
             ctl: None,
+            tenant: None,
             wants_result: true,
             payload,
         }

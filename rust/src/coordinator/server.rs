@@ -33,6 +33,7 @@
 //! [`Batcher`]: super::batcher::Batcher
 //! [`Scheduler`]: super::scheduler::Scheduler
 
+use std::collections::BTreeMap;
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -75,6 +76,7 @@ struct Request {
     deadline: Option<Instant>,
     priority: Priority,
     ctl: Option<TicketSink>,
+    tenant: Option<String>,
     enqueued: Instant,
     reply: Reply,
 }
@@ -237,6 +239,13 @@ pub struct ServerStats {
     /// look like an ideal idle shard). Merged stats AND this across
     /// shards.
     pub healthy: bool,
+    /// Per-tenant submit counts, sorted by tenant name (cumulative;
+    /// requests with no [`GenRequest::tenant`] are not listed — subtract
+    /// the listed sum from `requests` for the anonymous remainder). Each
+    /// request is counted once, by its submit shard; stolen / donated /
+    /// salvaged requests are not re-counted. This is what the network
+    /// front door's per-tenant rate limiting and `/metrics` labels read.
+    pub tenant_requests: Vec<(String, u64)>,
 }
 
 impl ServerStats {
@@ -254,6 +263,7 @@ impl ServerStats {
         // (mean_batch × batches = the engine-side tally), not
         // `requests`
         let mut retired_w = 0.0;
+        let mut tenants: BTreeMap<String, u64> = BTreeMap::new();
         for s in stats {
             out.requests += s.requests;
             out.batches += s.batches;
@@ -276,6 +286,9 @@ impl ServerStats {
             out.breaker_open |= s.breaker_open;
             out.lanes_salvaged += s.lanes_salvaged;
             out.healthy &= s.healthy;
+            for (tenant, n) in s.tenant_requests {
+                *tenants.entry(tenant).or_insert(0) += n;
+            }
             batch_w += s.mean_batch * s.batches as f64;
             let retired = s.mean_batch * s.batches as f64;
             nfe_w += s.avg_request_nfe * retired;
@@ -295,6 +308,7 @@ impl ServerStats {
         if out.nn_calls > 0 {
             out.occupancy = occ_w / out.nn_calls as f64;
         }
+        out.tenant_requests = tenants.into_iter().collect();
         out
     }
 }
@@ -432,6 +446,7 @@ impl Server {
                 deadline: req.deadline.map(|d| now + d),
                 priority: req.priority,
                 ctl,
+                tenant: req.tenant,
                 enqueued: now,
                 reply,
             }))
@@ -547,6 +562,8 @@ struct LoopState {
     lanes_salvaged: u64,
     queue_lat: LatencyStats,
     e2e_lat: LatencyStats,
+    /// per-tenant submit counts (anonymous requests are not listed)
+    tenants: BTreeMap<String, u64>,
     /// slot capacity, for the occupancy statistic
     capacity: usize,
 }
@@ -566,7 +583,18 @@ impl LoopState {
             lanes_salvaged: 0,
             queue_lat: LatencyStats::new(),
             e2e_lat: LatencyStats::new(),
+            tenants: BTreeMap::new(),
             capacity,
+        }
+    }
+
+    /// Submit-side accounting shared by both loops: total + per-tenant.
+    /// Called only for `Msg::Req` — donated/salvaged requests were
+    /// counted by their submit shard.
+    fn count_submit(&mut self, tenant: Option<&str>) {
+        self.requests += 1;
+        if let Some(t) = tenant {
+            *self.tenants.entry(t.to_string()).or_insert(0) += 1;
         }
     }
 }
@@ -657,7 +685,7 @@ where
                     );
                     continue;
                 }
-                st.requests += 1;
+                st.count_submit(r.tenant.as_deref());
                 batcher.push(r);
             }
             // a donated request was already counted by its submit shard
@@ -679,7 +707,7 @@ where
             }
             Some(Msg::Stats(s)) => {
                 let _ = s.send(snapshot(
-                    &mut st,
+                    &st,
                     &engine,
                     [0, batcher.len(), 0],
                     0,
@@ -1025,7 +1053,7 @@ where
 {
     match msg {
         Msg::Req(r) => {
-            st.requests += 1;
+            st.count_submit(r.tenant.as_deref());
             sched.enqueue(request_to_pending(r));
             Flow::Continue
         }
@@ -1224,6 +1252,7 @@ fn request_to_pending(r: Request) -> Pending<Reply> {
         deadline: r.deadline,
         priority: r.priority,
         ctl: r.ctl,
+        tenant: r.tenant,
         wants_result: matches!(r.reply, Reply::Channel(_)),
         payload: r.reply,
     }
@@ -1239,6 +1268,7 @@ fn pending_to_request(p: Pending<Reply>) -> Request {
         deadline: p.deadline,
         priority: p.priority,
         ctl: p.ctl,
+        tenant: p.tenant,
         enqueued: p.enqueued,
         reply: p.payload,
     }
@@ -1268,7 +1298,7 @@ impl Faults {
 }
 
 fn snapshot(
-    st: &mut LoopState,
+    st: &LoopState,
     engine: &Engine,
     queue_depths: [usize; 3],
     lanes: usize,
@@ -1311,6 +1341,7 @@ fn snapshot(
         // a parked shard can't serve until it recovers or is restarted —
         // the rebalancer must not treat it as donor or thief meanwhile
         healthy: !faults.breaker_open,
+        tenant_requests: st.tenants.iter().map(|(t, n)| (t.clone(), *n)).collect(),
     }
 }
 
@@ -1344,6 +1375,7 @@ fn empty_stats() -> ServerStats {
         breaker_open: false,
         lanes_salvaged: 0,
         healthy: true,
+        tenant_requests: Vec::new(),
     }
 }
 

@@ -79,12 +79,20 @@
 //!
 //! For one-off generation without a server thread, [`coordinator::Engine`]
 //! still exposes `generate_one` / `generate_batch` directly.
+//!
+//! Over the wire, the [`net`] module fronts the same router with
+//! HTTP/1.1 + Server-Sent Events and **exact-cost admission control**:
+//! because a request's denoiser-call count is the size of its
+//! predetermined transition set — computable on the host before any
+//! compute — the front door rejects unmeetable deadlines with `503`
+//! before they consume anything (`docs/http.md`).
 
 pub mod coordinator;
 pub mod data;
 pub mod diffusion;
 pub mod exp;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod sampler;
 pub mod schedule;

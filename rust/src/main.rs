@@ -53,6 +53,9 @@ fn print_help() {
          translate  --dataset iwslt14 --kind absorbing --sampler dndm-k --steps 50 --count 64\n\
          serve      --dataset iwslt14 --kind absorbing --requests 64 --max-batch 16 --window-ms 20\n\
                     [--shards N] [--fixed]   (continuous NFE-aligned scheduling by default)\n\
+                    [--listen ADDR [--mock]] serve HTTP/1.1 + SSE instead of the synthetic\n\
+                    workload: POST /v1/generate, GET /metrics, GET /healthz (docs/http.md);\n\
+                    [--rate-burst N --rate-per-sec X | --no-rate-limit] [--us-per-nfe X]\n\
          nfe        --steps 1000 --n 16 --spec beta:15:7\n\n\
          common flags: --artifacts PATH  --spec exact:cosine_sq|beta:A:B\n\
                        --order random|l2r|r2l  --temperature X  --seed N\n\
@@ -186,6 +189,10 @@ fn translate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        return serve_http(args, &listen);
+    }
     let arts_path = args.get_or("artifacts", "artifacts").to_string();
     let arts = load_artifacts(args)?;
     let ds = Dataset::parse(args.get_or("dataset", "iwslt14"))
@@ -258,6 +265,78 @@ fn serve(args: &Args) -> Result<()> {
     router.shutdown();
     router.join();
     Ok(())
+}
+
+/// `serve --listen ADDR`: the network front door — HTTP/1.1 + SSE over
+/// the same router, with exact-cost admission control (`docs/http.md`).
+/// `--mock` serves the artifact-free cipher mock; otherwise the model is
+/// resolved exactly like the synthetic-workload path. Runs until killed.
+fn serve_http(args: &Args, listen: &str) -> Result<()> {
+    use dndm::net::{self, AdmissionPolicy, HttpOptions, RateLimit};
+    use dndm::runtime::Denoiser;
+
+    let cfg = sampler_config(args)?;
+    let max_batch = args.usize_or("max-batch", 16);
+    let window = std::time::Duration::from_millis(args.u64_or("window-ms", 20));
+    let shards = args.usize_or("shards", 1);
+    // per-request lanes: admission's host-side |𝒯| equals each request's
+    // served NFE exactly (shared lanes would re-seed from the group head)
+    let policy = SchedPolicy { max_batch, window, shared_tau_groups: false };
+
+    let (router, mcfg, model) = if args.has("mock") {
+        let seq_len = args.usize_or("seq-len", 16);
+        let mcfg = dndm::coordinator::cipher_mock_denoiser(seq_len).config().clone();
+        let factory = move || Ok(dndm::coordinator::cipher_mock_engine(seq_len));
+        let router =
+            ServeBuilder::new(factory, cfg.clone()).shards(shards).continuous(policy).start();
+        (router, mcfg, "cipher-mock".to_string())
+    } else {
+        let arts_path = args.get_or("artifacts", "artifacts").to_string();
+        let arts = load_artifacts(args)?;
+        let model = model_for(args, &arts)?;
+        let manifest = arts
+            .models
+            .iter()
+            .find(|m| m.name == model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?;
+        let mcfg = arts.config(manifest)?;
+        let model2 = model.clone();
+        let factory = move || {
+            let arts = Artifacts::load(&arts_path)?;
+            let eng = Engine::new(&arts, &model2)?;
+            eng.warmup(&[1, 4, 16])?;
+            Ok(eng)
+        };
+        let router =
+            ServeBuilder::new(factory, cfg.clone()).shards(shards).continuous(policy).start();
+        (router, mcfg, model)
+    };
+
+    let admission = AdmissionPolicy {
+        rate_limit: (!args.has("no-rate-limit")).then(|| RateLimit {
+            burst: args.f64_or("rate-burst", 32.0),
+            per_sec: args.f64_or("rate-per-sec", 16.0),
+        }),
+        initial_us_per_nfe: args.f64_or("us-per-nfe", 1000.0),
+        ewma_alpha: 0.2,
+    };
+    let server = net::serve(
+        listen,
+        std::sync::Arc::new(router),
+        mcfg,
+        cfg,
+        admission,
+        HttpOptions::default(),
+    )
+    .map_err(|e| anyhow!("bind {listen}: {e}"))?;
+    println!(
+        "front door listening on http://{} (model={model}, shards={shards})\n  \
+         POST /v1/generate   GET /metrics   GET /healthz   (docs/http.md)",
+        server.local_addr()
+    );
+    loop {
+        std::thread::park();
+    }
 }
 
 /// Artifact self-check: every HLO parses+compiles, every weights file

@@ -9,7 +9,17 @@
 //! sorted view that is invalidated on record and rebuilt at most once per
 //! run of percentile queries (the old code cloned and re-sorted the full
 //! history on *every* percentile call; `summary()` did it four times).
+//!
+//! Percentile accessors take `&self`: the sorted view lives behind a
+//! `RefCell`, so read paths (stats snapshots, the `/metrics` scrape, the
+//! benches' report tables) never need a mutable borrow or a
+//! clone-and-sort. `LatencyStats` stays `Send` (each server thread owns
+//! its own instance); it is not `Sync`, which nothing relies on — shards
+//! answer stats requests from their own thread. [`LatencyStats::freeze`]
+//! captures an immutable [`LatencySnapshot`] for callers that want plain
+//! `Copy` data with no cell at all.
 
+use std::cell::RefCell;
 use std::time::Duration;
 
 use crate::schedule::SplitMix64;
@@ -19,17 +29,24 @@ use crate::schedule::SplitMix64;
 /// under a rank while costing 32 KiB per stats instance.
 const RESERVOIR_CAP: usize = 4096;
 
+/// Lazily rebuilt sorted view of the reservoir (interior state of
+/// [`LatencyStats`]; callers never see it).
+#[derive(Debug, Clone, Default)]
+struct SortedView {
+    us: Vec<u64>,
+    dirty: bool,
+}
+
 /// Collects durations; reports mean / percentiles / throughput.
 ///
-/// Percentile accessors take `&mut self` so they can lazily (re)sort the
-/// cached view; recording stays amortized O(1).
+/// Recording takes `&mut self` and stays amortized O(1); every accessor
+/// (including percentiles) takes `&self`.
 #[derive(Debug, Clone)]
 pub struct LatencyStats {
     /// reservoir of at most [`RESERVOIR_CAP`] samples
     samples_us: Vec<u64>,
     /// sorted copy of the reservoir, rebuilt lazily when `dirty`
-    sorted_us: Vec<u64>,
-    dirty: bool,
+    sorted: RefCell<SortedView>,
     /// total samples ever recorded (not just retained)
     count: u64,
     sum_us: u128,
@@ -44,8 +61,7 @@ impl Default for LatencyStats {
     fn default() -> Self {
         LatencyStats {
             samples_us: Vec::new(),
-            sorted_us: Vec::new(),
-            dirty: false,
+            sorted: RefCell::new(SortedView::default()),
             count: 0,
             sum_us: 0,
             min_us: u64::MAX,
@@ -53,6 +69,24 @@ impl Default for LatencyStats {
             rng: SplitMix64::new(0x1A7E_11C7_57A7_5EED),
         }
     }
+}
+
+/// An immutable point-in-time summary of a [`LatencyStats`] — plain
+/// `Copy` data, no interior cell, safe to ship across threads or embed in
+/// a stats struct. Produced by [`LatencyStats::freeze`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LatencySnapshot {
+    /// total samples recorded (not just the reservoir-retained subset)
+    pub count: u64,
+    /// exact mean over all recorded samples
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// exact minimum over all recorded samples
+    pub min: Duration,
+    /// exact maximum over all recorded samples
+    pub max: Duration,
 }
 
 impl LatencyStats {
@@ -68,14 +102,14 @@ impl LatencyStats {
         self.max_us = self.max_us.max(us);
         if self.samples_us.len() < RESERVOIR_CAP {
             self.samples_us.push(us);
-            self.dirty = true;
+            self.sorted.get_mut().dirty = true;
         } else {
             // Algorithm R: sample i (0-based i = count-1) replaces a
             // random reservoir slot with probability CAP / count
             let j = (self.rng.next_u64() % self.count) as usize;
             if j < RESERVOIR_CAP {
                 self.samples_us[j] = us;
-                self.dirty = true;
+                self.sorted.get_mut().dirty = true;
             }
         }
     }
@@ -99,29 +133,30 @@ impl LatencyStats {
 
     /// q ∈ [0, 1]; nearest-rank percentile over the reservoir (exact
     /// while ≤ [`RESERVOIR_CAP`] samples have been recorded).
-    pub fn percentile(&mut self, q: f64) -> Duration {
+    pub fn percentile(&self, q: f64) -> Duration {
         if self.samples_us.is_empty() {
             return Duration::ZERO;
         }
-        if self.dirty {
-            self.sorted_us.clone_from(&self.samples_us);
-            self.sorted_us.sort_unstable();
-            self.dirty = false;
+        let mut view = self.sorted.borrow_mut();
+        if view.dirty {
+            view.us.clone_from(&self.samples_us);
+            view.us.sort_unstable();
+            view.dirty = false;
         }
-        let n = self.sorted_us.len();
+        let n = view.us.len();
         let idx = ((q * n as f64).ceil() as usize).clamp(1, n) - 1;
-        Duration::from_micros(self.sorted_us[idx])
+        Duration::from_micros(view.us[idx])
     }
 
-    pub fn p50(&mut self) -> Duration {
+    pub fn p50(&self) -> Duration {
         self.percentile(0.50)
     }
 
-    pub fn p95(&mut self) -> Duration {
+    pub fn p95(&self) -> Duration {
         self.percentile(0.95)
     }
 
-    pub fn p99(&mut self) -> Duration {
+    pub fn p99(&self) -> Duration {
         self.percentile(0.99)
     }
 
@@ -138,6 +173,21 @@ impl LatencyStats {
         Duration::from_micros(self.max_us)
     }
 
+    /// Capture an immutable [`LatencySnapshot`] (one sort at most, then
+    /// plain `Copy` reads). This is what stats snapshots and the
+    /// `/metrics` renderer embed.
+    pub fn freeze(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            count: self.count,
+            mean: self.mean(),
+            p50: self.p50(),
+            p95: self.p95(),
+            p99: self.p99(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
     /// items/sec given total wall-clock time.
     pub fn throughput(items: usize, wall: Duration) -> f64 {
         if wall.is_zero() {
@@ -146,7 +196,7 @@ impl LatencyStats {
         items as f64 / wall.as_secs_f64()
     }
 
-    pub fn summary(&mut self, label: &str) -> String {
+    pub fn summary(&self, label: &str) -> String {
         format!(
             "{label}: n={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms max={:.1}ms",
             self.len(),
@@ -186,10 +236,11 @@ mod tests {
 
     #[test]
     fn empty_is_zero() {
-        let mut s = LatencyStats::new();
+        let s = LatencyStats::new();
         assert_eq!(s.mean(), Duration::ZERO);
         assert_eq!(s.p95(), Duration::ZERO);
         assert_eq!(s.min(), Duration::ZERO);
+        assert_eq!(s.freeze(), LatencySnapshot::default());
     }
 
     #[test]
@@ -231,5 +282,44 @@ mod tests {
         assert_eq!(s.p99(), Duration::from_micros(900), "new sample visible");
         s.record(Duration::from_micros(50));
         assert_eq!(s.p50(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn shared_reference_percentiles_need_no_mut() {
+        let mut s = LatencyStats::new();
+        for i in 1..=10u64 {
+            s.record(Duration::from_micros(i));
+        }
+        // the whole read API works through &LatencyStats
+        let r: &LatencyStats = &s;
+        assert_eq!(r.p50(), Duration::from_micros(5));
+        assert_eq!(r.percentile(1.0), Duration::from_micros(10));
+        let _ = r.summary("ro");
+    }
+
+    #[test]
+    fn freeze_matches_live_accessors_and_stays_fixed() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i));
+        }
+        let snap = s.freeze();
+        assert_eq!(snap.count, 100);
+        assert_eq!(snap.p50, s.p50());
+        assert_eq!(snap.p95, s.p95());
+        assert_eq!(snap.mean, s.mean());
+        s.record(Duration::from_micros(10_000));
+        assert_eq!(snap.max, Duration::from_micros(100), "snapshot is immutable");
+        assert_eq!(s.max(), Duration::from_micros(10_000));
+    }
+
+    #[test]
+    fn clone_carries_the_cache_independently() {
+        let mut s = LatencyStats::new();
+        s.record(Duration::from_micros(7));
+        let c = s.clone();
+        s.record(Duration::from_micros(9));
+        assert_eq!(c.p99(), Duration::from_micros(7));
+        assert_eq!(s.p99(), Duration::from_micros(9));
     }
 }

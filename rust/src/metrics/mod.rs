@@ -7,6 +7,6 @@ pub mod ngram;
 pub mod nfe;
 
 pub use bleu::{corpus_bleu, sentence_bleu};
-pub use latency::LatencyStats;
+pub use latency::{LatencySnapshot, LatencyStats};
 pub use ngram::NgramLm;
 pub use nfe::NfeCounter;

@@ -1,0 +1,403 @@
+//! Exact-cost admission control: token-bucket rate limiting plus
+//! deadline-aware load shedding at the front door.
+//!
+//! The whole point of a DNDM front door is that **the denoiser-call cost
+//! of a request is exactly known before any compute happens**: the
+//! predetermined transition set 𝒯 is a pure function of (model config,
+//! sampler config, seed), so [`exact_cost`] builds a throwaway
+//! [`SamplerSession`] on the host — no denoiser call, no device — and
+//! reads `total_events()`. Continuous serving runs each request in its
+//! own width-1 lane (`shared_tau_groups: false`), so this admission-time
+//! number equals the served lane's total and the final `Progress`
+//! event's `nfe_total` exactly. Load shedding here is therefore not a
+//! heuristic: a rejected request *provably* could not have met its
+//! deadline, and `Retry-After` is derived from the same arithmetic.
+//!
+//! The projection: completion time for a new request of cost `c` landing
+//! on a shard with `backlog` queued-but-unfinished NFE is
+//!
+//! ```text
+//! projected_us = (backlog + c) × ewma_us_per_nfe
+//! ```
+//!
+//! where `ewma_us_per_nfe` is an exponentially-weighted average of
+//! measured wall-µs per denoiser call, fed by [`Admission::observe`] on
+//! every retirement. If `projected_us` exceeds the request's deadline the
+//! request is rejected with `503` before consuming anything.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::ModelConfig;
+use crate::sampler::{SamplerConfig, SamplerSession};
+
+/// Exact denoiser-call cost of one request: the size of its
+/// predetermined transition set, computed host-side before any compute.
+/// Errors only when the sampler config itself is invalid (which would
+/// also fail at serving time — rejecting here with `400` is strictly
+/// earlier, never different).
+pub fn exact_cost(mcfg: &ModelConfig, cfg: &SamplerConfig, seed: u64) -> Result<u64> {
+    Ok(SamplerSession::new(mcfg, cfg, 1, seed)?.total_events() as u64)
+}
+
+/// Per-tenant token-bucket parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RateLimit {
+    /// bucket capacity — the largest instantaneous burst of requests
+    pub burst: f64,
+    /// refill rate, requests per second (0 disables refill: `burst`
+    /// requests total, ever — useful in tests)
+    pub per_sec: f64,
+}
+
+/// Front-door policy knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    /// per-tenant token bucket; `None` disables rate limiting
+    pub rate_limit: Option<RateLimit>,
+    /// seed for the µs/NFE EWMA before the first measurement arrives
+    pub initial_us_per_nfe: f64,
+    /// EWMA smoothing factor in (0, 1]: weight of each new sample
+    pub ewma_alpha: f64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy {
+            rate_limit: Some(RateLimit { burst: 32.0, per_sec: 16.0 }),
+            initial_us_per_nfe: 1000.0,
+            ewma_alpha: 0.2,
+        }
+    }
+}
+
+/// Why a request was turned away at the door.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejection {
+    /// Tenant bucket empty → HTTP `429`. `retry_after` is the exact time
+    /// until one token refills.
+    RateLimited { retry_after: Duration },
+    /// The exact projection says the deadline cannot be met → HTTP
+    /// `503`. `projected` is the projected completion time,
+    /// `retry_after` the exact backlog-drain time needed before this
+    /// request would fit.
+    DeadlineUnmeetable { projected: Duration, deadline: Duration, retry_after: Duration },
+}
+
+impl Rejection {
+    pub fn status(&self) -> u16 {
+        match self {
+            Rejection::RateLimited { .. } => 429,
+            Rejection::DeadlineUnmeetable { .. } => 503,
+        }
+    }
+
+    /// Seconds for the `Retry-After` header, rounded up so retrying at
+    /// the advertised time actually succeeds.
+    pub fn retry_after_secs(&self) -> u64 {
+        let d = match self {
+            Rejection::RateLimited { retry_after }
+            | Rejection::DeadlineUnmeetable { retry_after, .. } => *retry_after,
+        };
+        d.as_secs() + u64::from(d.subsec_nanos() > 0)
+    }
+}
+
+/// One tenant's token bucket. Refill is computed lazily from elapsed
+/// time — no background thread.
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-shard load account: NFE admitted but not yet retired, plus the
+/// measured pace. `ewma_us_per_nfe` is stored as f64 bits in an
+/// `AtomicU64` and updated with a CAS loop so `observe` never takes a
+/// lock on the retirement path.
+struct ShardLoad {
+    queued_nfe: AtomicU64,
+    ewma_us_bits: AtomicU64,
+}
+
+/// The admission controller. One instance fronts one [`Router`]; all
+/// methods take `&self` and are safe to call from every connection
+/// worker concurrently.
+///
+/// [`Router`]: crate::coordinator::Router
+pub struct Admission {
+    policy: AdmissionPolicy,
+    shards: Vec<ShardLoad>,
+    buckets: Mutex<HashMap<String, Bucket>>,
+    rejected_rate_limit: AtomicU64,
+    rejected_deadline: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(policy: AdmissionPolicy, num_shards: usize) -> Admission {
+        let shards = (0..num_shards.max(1))
+            .map(|_| ShardLoad {
+                queued_nfe: AtomicU64::new(0),
+                ewma_us_bits: AtomicU64::new(policy.initial_us_per_nfe.to_bits()),
+            })
+            .collect();
+        Admission {
+            policy,
+            shards,
+            buckets: Mutex::new(HashMap::new()),
+            rejected_rate_limit: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+        }
+    }
+
+    /// Check-only gate: may this request of exactly `cost` denoiser
+    /// calls, projected onto `shard`, be admitted? On `Err` the matching
+    /// rejection counter has been bumped and nothing else changed; on
+    /// `Ok` the caller submits to the router and then calls
+    /// [`Self::charge`] with the shard the router actually picked.
+    pub fn admit(
+        &self,
+        tenant: Option<&str>,
+        shard: usize,
+        cost: u64,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<(), Rejection> {
+        if let Some(limit) = self.policy.rate_limit {
+            if let Err(wait) = self.take_token(tenant.unwrap_or(""), limit) {
+                self.rejected_rate_limit.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejection::RateLimited { retry_after: wait });
+            }
+        }
+        if let Some(deadline) = deadline {
+            let shard = &self.shards[shard.min(self.shards.len() - 1)];
+            let backlog = shard.queued_nfe.load(Ordering::Relaxed);
+            let pace = f64::from_bits(shard.ewma_us_bits.load(Ordering::Relaxed));
+            let projected_us = (backlog + cost) as f64 * pace;
+            let deadline_us = deadline.as_micros() as f64;
+            if projected_us > deadline_us {
+                self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                // the shard must drain enough NFE that (backlog' + cost)
+                // × pace fits the deadline; that drain takes excess ×
+                // pace µs at the measured rate
+                let fits = (deadline_us / pace.max(1e-9)) as u64;
+                let excess = (backlog + cost).saturating_sub(fits);
+                let retry_after = Duration::from_micros((excess as f64 * pace) as u64);
+                return Err(Rejection::DeadlineUnmeetable {
+                    projected: Duration::from_micros(projected_us as u64),
+                    deadline,
+                    retry_after,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Record `cost` NFE as queued on `shard` — call with the shard the
+    /// router actually placed the request on (placement may differ from
+    /// the projection shard if a rebalance raced the submit; charging the
+    /// real shard keeps the account consistent either way).
+    pub fn charge(&self, shard: usize, cost: u64) {
+        self.shard(shard).queued_nfe.fetch_add(cost, Ordering::Relaxed);
+    }
+
+    /// Release `cost` NFE from `shard` without a pace measurement — for
+    /// requests that ended without finishing (cancelled, deadline-dropped,
+    /// failed, client disconnected).
+    pub fn release(&self, shard: usize, cost: u64) {
+        let q = &self.shard(shard).queued_nfe;
+        let mut cur = q.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(cost);
+            match q.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Retirement hook: release the request's NFE and fold its measured
+    /// wall time into the shard's µs/NFE EWMA.
+    pub fn observe(&self, shard: usize, nfe: u64, elapsed: Duration) {
+        self.release(shard, nfe);
+        let sample = elapsed.as_micros() as f64 / nfe.max(1) as f64;
+        let alpha = self.policy.ewma_alpha.clamp(0.0, 1.0);
+        let bits = &self.shard(shard).ewma_us_bits;
+        let mut cur = bits.load(Ordering::Relaxed);
+        loop {
+            let next = (alpha * sample + (1.0 - alpha) * f64::from_bits(cur)).to_bits();
+            match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current µs/NFE estimate for a shard (scraped into `/metrics`).
+    pub fn ewma_us_per_nfe(&self, shard: usize) -> f64 {
+        f64::from_bits(self.shard(shard).ewma_us_bits.load(Ordering::Relaxed))
+    }
+
+    /// NFE admitted but not yet retired on a shard.
+    pub fn queued_nfe(&self, shard: usize) -> u64 {
+        self.shard(shard).queued_nfe.load(Ordering::Relaxed)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Requests rejected by the rate limiter since construction.
+    pub fn rejected_rate_limit(&self) -> u64 {
+        self.rejected_rate_limit.load(Ordering::Relaxed)
+    }
+
+    /// Requests rejected by the deadline projection since construction.
+    pub fn rejected_deadline(&self) -> u64 {
+        self.rejected_deadline.load(Ordering::Relaxed)
+    }
+
+    fn shard(&self, shard: usize) -> &ShardLoad {
+        &self.shards[shard.min(self.shards.len() - 1)]
+    }
+
+    /// Take one token from `tenant`'s bucket, or return the exact wait
+    /// until a token refills.
+    fn take_token(&self, tenant: &str, limit: RateLimit) -> std::result::Result<(), Duration> {
+        let mut buckets = self.buckets.lock().unwrap_or_else(PoisonError::into_inner);
+        let now = Instant::now();
+        let bucket = buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| Bucket { tokens: limit.burst, last: now });
+        if limit.per_sec > 0.0 {
+            let refill = now.duration_since(bucket.last).as_secs_f64() * limit.per_sec;
+            bucket.tokens = (bucket.tokens + refill).min(limit.burst);
+        }
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            Ok(())
+        } else if limit.per_sec > 0.0 {
+            Err(Duration::from_secs_f64((1.0 - bucket.tokens) / limit.per_sec))
+        } else {
+            // no refill configured: "retry" is really "never"; advertise
+            // a flat minute so clients back off hard
+            Err(Duration::from_secs(60))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_limit() -> AdmissionPolicy {
+        AdmissionPolicy { rate_limit: None, ..AdmissionPolicy::default() }
+    }
+
+    #[test]
+    fn admits_when_projection_fits_the_deadline() {
+        // pace 1000 µs/NFE, cost 8, empty backlog → 8 ms projected
+        let adm = Admission::new(no_limit(), 2);
+        assert!(adm.admit(None, 0, 8, Some(Duration::from_millis(100))).is_ok());
+        assert!(adm.admit(None, 0, 8, None).is_ok(), "no deadline, no shedding");
+    }
+
+    #[test]
+    fn rejects_exactly_when_projection_exceeds_the_deadline() {
+        let adm = Admission::new(no_limit(), 1);
+        // projected = 8 × 1000 µs = 8 ms; a 7 ms deadline must reject,
+        // an 8 ms one must pass (the projection is exact, not padded)
+        assert!(adm.admit(None, 0, 8, Some(Duration::from_millis(7))).is_err());
+        assert!(adm.admit(None, 0, 8, Some(Duration::from_millis(8))).is_ok());
+        assert_eq!(adm.rejected_deadline(), 1);
+        assert_eq!(adm.rejected_rate_limit(), 0);
+    }
+
+    #[test]
+    fn backlog_counts_against_the_projection() {
+        let adm = Admission::new(no_limit(), 1);
+        adm.charge(0, 100);
+        // (100 + 8) × 1000 µs = 108 ms > 50 ms
+        let err = adm.admit(None, 0, 8, Some(Duration::from_millis(50))).unwrap_err();
+        let Rejection::DeadlineUnmeetable { projected, retry_after, .. } = err else {
+            panic!("expected deadline rejection");
+        };
+        assert_eq!(projected, Duration::from_millis(108));
+        // fits = 50ms/1000µs = 50 NFE; excess = 108 - 50 = 58 → 58 ms
+        assert_eq!(retry_after, Duration::from_millis(58));
+        // draining the backlog re-opens the door
+        adm.release(0, 100);
+        assert!(adm.admit(None, 0, 8, Some(Duration::from_millis(50))).is_ok());
+    }
+
+    #[test]
+    fn observe_releases_and_moves_the_ewma() {
+        let adm = Admission::new(no_limit(), 1);
+        adm.charge(0, 10);
+        assert_eq!(adm.queued_nfe(0), 10);
+        // 10 NFE in 50 ms → 5000 µs/NFE sample; α = 0.2 over seed 1000
+        adm.observe(0, 10, Duration::from_millis(50));
+        assert_eq!(adm.queued_nfe(0), 0);
+        let ewma = adm.ewma_us_per_nfe(0);
+        assert!((ewma - (0.2 * 5000.0 + 0.8 * 1000.0)).abs() < 1e-6, "{ewma}");
+    }
+
+    #[test]
+    fn release_saturates_at_zero() {
+        let adm = Admission::new(no_limit(), 1);
+        adm.charge(0, 3);
+        adm.release(0, 100);
+        assert_eq!(adm.queued_nfe(0), 0);
+    }
+
+    #[test]
+    fn token_bucket_limits_per_tenant_bursts() {
+        let policy = AdmissionPolicy {
+            rate_limit: Some(RateLimit { burst: 2.0, per_sec: 0.0 }),
+            ..AdmissionPolicy::default()
+        };
+        let adm = Admission::new(policy, 1);
+        assert!(adm.admit(Some("a"), 0, 1, None).is_ok());
+        assert!(adm.admit(Some("a"), 0, 1, None).is_ok());
+        let err = adm.admit(Some("a"), 0, 1, None).unwrap_err();
+        assert_eq!(err.status(), 429);
+        assert!(err.retry_after_secs() >= 1);
+        // tenant buckets are independent — and the anonymous bucket is
+        // its own tenant
+        assert!(adm.admit(Some("b"), 0, 1, None).is_ok());
+        assert!(adm.admit(None, 0, 1, None).is_ok());
+        assert_eq!(adm.rejected_rate_limit(), 1);
+    }
+
+    #[test]
+    fn rate_limit_retry_after_is_the_exact_refill_time() {
+        let policy = AdmissionPolicy {
+            rate_limit: Some(RateLimit { burst: 1.0, per_sec: 2.0 }),
+            ..AdmissionPolicy::default()
+        };
+        let adm = Admission::new(policy, 1);
+        assert!(adm.admit(Some("t"), 0, 1, None).is_ok());
+        let Err(Rejection::RateLimited { retry_after }) = adm.admit(Some("t"), 0, 1, None) else {
+            panic!("expected rate limit");
+        };
+        // one token at 2/s refills in ≤ 500 ms
+        assert!(retry_after <= Duration::from_millis(500), "{retry_after:?}");
+    }
+
+    #[test]
+    fn rejection_status_codes_and_rounding() {
+        let r = Rejection::RateLimited { retry_after: Duration::from_millis(1) };
+        assert_eq!(r.status(), 429);
+        assert_eq!(r.retry_after_secs(), 1, "sub-second waits round up, not to 0");
+        let r = Rejection::DeadlineUnmeetable {
+            projected: Duration::from_secs(2),
+            deadline: Duration::from_secs(1),
+            retry_after: Duration::ZERO,
+        };
+        assert_eq!(r.status(), 503);
+        assert_eq!(r.retry_after_secs(), 0);
+    }
+}

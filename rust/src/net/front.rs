@@ -1,0 +1,326 @@
+//! The network front door: routes HTTP requests onto the serving stack.
+//!
+//! ```text
+//!            POST /v1/generate            GET /metrics   GET /healthz
+//!                  │                            │             │
+//!  parse JSON ──▶ exact_cost (host-only 𝒯) ──▶ render       health
+//!                  │                        ServerStats
+//!          Admission::admit  ──▶ 429 / 503 + Retry-After (never submits)
+//!                  │
+//!        Router::submit_request_routed ──▶ charge(actual shard)
+//!                  │
+//!        stream? ──┴─▶ SSE (chunked)  else  block on the ticket
+//! ```
+//!
+//! The admission check happens **before** submit, on the shard
+//! [`Router::peek_placement`] projects; the charge happens **after**, on
+//! the shard the router actually picked (a rebalance can race the
+//! submit). A rejected request therefore never consumes a denoiser call,
+//! a lane slot, or even a queue entry — the acceptance test pins this by
+//! asserting `nn_calls == 0` after a burst of unmeetable requests.
+
+use std::io;
+use std::net::ToSocketAddrs;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{Event, GenRequest, Priority, Router, Ticket};
+use crate::runtime::ModelConfig;
+use crate::sampler::{SamplerConfig, SamplerKind};
+use crate::schedule::{TransitionOrder, TransitionSpec};
+use crate::util::json::Json;
+
+use super::admission::{exact_cost, Admission, AdmissionPolicy};
+use super::http::{HttpOptions, HttpServer, Request, Response};
+use super::metrics::{render, FrontGauges};
+use super::sse::{event_frame, frame, stream_ticket, StreamEnd};
+
+/// Default heartbeat interval on quiet SSE streams.
+const HEARTBEAT_EVERY: Duration = Duration::from_secs(5);
+
+/// Everything the HTTP handler needs, shared across connection workers.
+/// The admission controller sits behind an `Arc` because SSE streaming
+/// closures (which must be `'static`) carry their own handle to it for
+/// end-of-stream accounting.
+pub struct FrontDoor {
+    router: Arc<Router>,
+    mcfg: ModelConfig,
+    default_cfg: SamplerConfig,
+    admission: Arc<Admission>,
+    connections: Arc<AtomicU64>,
+    heartbeat: Duration,
+}
+
+/// Bind the front door on `addr` and start serving. The returned
+/// [`HttpServer`] owns the listener; dropping it stops serving (the
+/// router is left running — it belongs to the caller).
+pub fn serve<A: ToSocketAddrs>(
+    addr: A,
+    router: Arc<Router>,
+    mcfg: ModelConfig,
+    default_cfg: SamplerConfig,
+    policy: AdmissionPolicy,
+    opts: HttpOptions,
+) -> io::Result<HttpServer> {
+    let connections = Arc::new(AtomicU64::new(0));
+    let door = FrontDoor {
+        admission: Arc::new(Admission::new(policy, router.num_shards())),
+        router,
+        mcfg,
+        default_cfg,
+        connections: connections.clone(),
+        heartbeat: HEARTBEAT_EVERY,
+    };
+    HttpServer::bind_gauged(addr, opts, move |req: Request| door.route(req), connections)
+}
+
+/// Parsed body of `POST /v1/generate`.
+struct GenBody {
+    seed: u64,
+    src: Option<String>,
+    cfg: Option<SamplerConfig>,
+    deadline: Option<Duration>,
+    priority: Priority,
+    tenant: Option<String>,
+    stream: bool,
+    partial_tokens: bool,
+}
+
+fn err_json(status: u16, msg: &str) -> Response {
+    Response::json(status, format!("{{\"error\":{}}}", Json::Str(msg.to_string())))
+}
+
+impl FrontDoor {
+    fn route(&self, req: Request) -> Response {
+        match (req.method.as_str(), req.path()) {
+            ("POST", "/v1/generate") => self.generate(&req),
+            ("GET", "/metrics") => self.metrics(),
+            ("GET", "/healthz") => self.healthz(),
+            (_, "/v1/generate") | (_, "/metrics") | (_, "/healthz") => {
+                err_json(405, "method not allowed")
+            }
+            _ => err_json(404, "not found"),
+        }
+    }
+
+    /// Build the effective sampler config: the server default, overridden
+    /// field-by-field where the body names one. `None` = no override at
+    /// all, so the request inherits future server-side default changes.
+    fn build_cfg(&self, body: &Json) -> Result<Option<SamplerConfig>, String> {
+        let has_override = ["sampler", "steps", "spec", "order", "temperature"]
+            .iter()
+            .any(|k| body.get(k).is_some());
+        if !has_override {
+            return Ok(None);
+        }
+        let mut cfg = self.default_cfg.clone();
+        if let Some(v) = body.get("sampler") {
+            let name = v.as_str().ok_or("'sampler' must be a string")?;
+            cfg.kind =
+                SamplerKind::parse(name).ok_or_else(|| format!("unknown sampler {name:?}"))?;
+        }
+        if let Some(v) = body.get("steps") {
+            cfg.steps = v.as_usize().ok_or("'steps' must be a number")?;
+        }
+        if let Some(v) = body.get("spec") {
+            let s = v.as_str().ok_or("'spec' must be a string")?;
+            cfg.spec = TransitionSpec::parse(s).ok_or_else(|| format!("unknown spec {s:?}"))?;
+        }
+        if let Some(v) = body.get("order") {
+            cfg.order = match v.as_str().ok_or("'order' must be a string")? {
+                "random" => TransitionOrder::Random,
+                "l2r" => TransitionOrder::LeftToRight,
+                "r2l" => TransitionOrder::RightToLeft,
+                other => return Err(format!("unknown order {other:?} (random|l2r|r2l)")),
+            };
+        }
+        if let Some(v) = body.get("temperature") {
+            cfg.temperature = v.as_f64().ok_or("'temperature' must be a number")? as f32;
+        }
+        Ok(Some(cfg))
+    }
+
+    fn parse_body(&self, raw: &[u8]) -> Result<GenBody, String> {
+        let text = std::str::from_utf8(raw).map_err(|_| "body is not UTF-8".to_string())?;
+        let body = Json::parse(text).map_err(|e| format!("body is not JSON: {e}"))?;
+        let seed = body.get("seed").and_then(Json::as_f64).ok_or("missing number field 'seed'")?;
+        if seed < 0.0 || seed.fract() != 0.0 {
+            return Err("'seed' must be a non-negative integer".into());
+        }
+        let priority = match body.get("priority").map(|v| v.as_str()) {
+            None => Priority::Normal,
+            Some(Some("low")) => Priority::Low,
+            Some(Some("normal")) => Priority::Normal,
+            Some(Some("high")) => Priority::High,
+            Some(other) => {
+                return Err(format!("unknown priority {other:?} (low|normal|high)"));
+            }
+        };
+        Ok(GenBody {
+            seed: seed as u64,
+            src: body.get("src").and_then(Json::as_str).map(str::to_string),
+            cfg: self.build_cfg(&body)?,
+            deadline: body
+                .get("deadline_ms")
+                .and_then(Json::as_f64)
+                .map(|ms| Duration::from_micros((ms * 1000.0) as u64)),
+            priority,
+            tenant: body.get("tenant").and_then(Json::as_str).map(str::to_string),
+            stream: body.get("stream").and_then(Json::as_bool).unwrap_or(false),
+            partial_tokens: body.get("partial_tokens").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
+    fn generate(&self, req: &Request) -> Response {
+        let body = match self.parse_body(&req.body) {
+            Ok(b) => b,
+            Err(msg) => return err_json(400, &msg),
+        };
+
+        // exact pre-compute cost: |𝒯| from a host-only session build
+        let cfg_used = body.cfg.clone().unwrap_or_else(|| self.default_cfg.clone());
+        let cost = match exact_cost(&self.mcfg, &cfg_used, body.seed) {
+            Ok(c) => c,
+            Err(e) => return err_json(400, &format!("invalid sampler config: {e}")),
+        };
+
+        let mut gen = GenRequest::new(body.seed).priority(body.priority);
+        if let Some(src) = &body.src {
+            gen = gen.src(src.clone());
+        }
+        if let Some(cfg) = body.cfg {
+            gen = gen.config(cfg);
+        }
+        if let Some(d) = body.deadline {
+            gen = gen.deadline(d);
+        }
+        if let Some(t) = &body.tenant {
+            gen = gen.tenant(t.clone());
+        }
+        if body.partial_tokens {
+            gen = gen.stream_partials();
+        }
+
+        // admission: check on the projected shard, never submit on reject
+        let projected = self.router.peek_placement(&gen);
+        if let Err(rej) =
+            self.admission.admit(body.tenant.as_deref(), projected, cost, body.deadline)
+        {
+            let retry = rej.retry_after_secs();
+            let reason = match &rej {
+                super::admission::Rejection::RateLimited { .. } => {
+                    "tenant rate limit exceeded".to_string()
+                }
+                super::admission::Rejection::DeadlineUnmeetable { projected, deadline, .. } => {
+                    format!(
+                        "deadline unmeetable: projected {} ms for {} calls, deadline {} ms",
+                        projected.as_millis(),
+                        cost,
+                        deadline.as_millis()
+                    )
+                }
+            };
+            return err_json(rej.status(), &reason).header("retry-after", retry.to_string());
+        }
+
+        let (ticket, shard) = match self.router.submit_request_routed(gen) {
+            Ok(pair) => pair,
+            Err(e) => return err_json(500, &format!("submit failed: {e}")),
+        };
+        self.admission.charge(shard, cost);
+
+        if body.stream {
+            self.stream_response(ticket, shard, cost)
+        } else {
+            self.block_response(ticket, shard, cost)
+        }
+    }
+
+    /// SSE path: first a `queued` frame carrying the exact cost, then the
+    /// ticket's lifecycle. Runs on the connection worker; a write error
+    /// (client gone) cancels the ticket and releases the admission
+    /// charge.
+    fn stream_response(&self, mut ticket: Ticket, shard: usize, cost: u64) -> Response {
+        // Response::stream's closure must be 'static, so it carries its
+        // own admission handle for the end-of-stream accounting
+        let admission = self.admission.clone();
+        let heartbeat = self.heartbeat;
+        let queued = frame(Some("queued"), &format!("{{\"nfe_total\":{cost}}}"));
+        Response::stream(200, "text/event-stream", move |sink| {
+            sink.send(queued.as_bytes())?;
+            let end = stream_ticket(&mut ticket, heartbeat, |f| sink.send(f.as_bytes()));
+            match end {
+                StreamEnd::Done { nfe, elapsed_us } => {
+                    admission.observe(shard, nfe as u64, Duration::from_micros(elapsed_us));
+                }
+                StreamEnd::Cancelled
+                | StreamEnd::DeadlineExceeded
+                | StreamEnd::Failed
+                | StreamEnd::Disconnected => admission.release(shard, cost),
+            }
+            Ok(())
+        })
+        .header("cache-control", "no-store")
+    }
+
+    /// Blocking path: drive the ticket to its terminal event and answer
+    /// with one JSON body.
+    fn block_response(&self, mut ticket: Ticket, shard: usize, cost: u64) -> Response {
+        loop {
+            match ticket.next_event() {
+                Some(Event::Done(out)) => {
+                    self.admission.observe(shard, out.nfe as u64, out.elapsed);
+                    // reuse the SSE JSON payload: same fields, same writer
+                    let f = event_frame(&Event::Done(out));
+                    let json = f
+                        .lines()
+                        .find_map(|l| l.strip_prefix("data: "))
+                        .unwrap_or("{}")
+                        .to_string();
+                    return Response::json(200, json);
+                }
+                Some(Event::DeadlineExceeded) => {
+                    self.admission.release(shard, cost);
+                    return err_json(504, "deadline exceeded in flight");
+                }
+                Some(Event::Cancelled) => {
+                    self.admission.release(shard, cost);
+                    return err_json(500, "request cancelled");
+                }
+                Some(Event::Failed(msg)) => {
+                    self.admission.release(shard, cost);
+                    return err_json(500, &msg);
+                }
+                Some(Event::Admitted | Event::Progress { .. }) => continue,
+                None => {
+                    self.admission.release(shard, cost);
+                    return err_json(500, "event stream ended without a result");
+                }
+            }
+        }
+    }
+
+    fn metrics(&self) -> Response {
+        let stats = match self.router.stats() {
+            Ok(s) => s,
+            Err(e) => return err_json(500, &format!("stats unavailable: {e}")),
+        };
+        let front = FrontGauges {
+            rejected_rate_limit: self.admission.rejected_rate_limit(),
+            rejected_deadline: self.admission.rejected_deadline(),
+            connections_open: self.connections.load(Ordering::Relaxed),
+        };
+        Response::new(200)
+            .header("content-type", "text/plain; version=0.0.4; charset=utf-8")
+            .with_body(render(&stats, &front).into_bytes())
+    }
+
+    fn healthz(&self) -> Response {
+        match self.router.stats() {
+            Ok(s) if s.healthy => Response::text(200, "ok\n"),
+            Ok(_) => Response::text(503, "unhealthy\n"),
+            Err(e) => Response::text(503, format!("stats unavailable: {e}\n")),
+        }
+    }
+}

@@ -1,0 +1,726 @@
+//! Minimal HTTP/1.1 server over `std::net::TcpListener` — the transport
+//! under the network front door ([`super::front`]).
+//!
+//! Deliberately small and dependency-free (like the rest of the crate):
+//! request-line + header parsing with obs-fold unfolding, Content-Length
+//! bodies, fixed and chunked responses, keep-alive with pipelining,
+//! per-connection read/write timeouts, and a **bounded worker pool** — a
+//! fixed number of connection threads fed through a bounded channel, so a
+//! connection flood degrades into immediate `503`s instead of unbounded
+//! thread growth.
+//!
+//! The layer knows nothing about routes or the serving stack: a
+//! [`Handler`] maps one parsed [`Request`] to one [`Response`], which is
+//! either a full body (written with `Content-Length`) or a stream (written
+//! as chunked transfer coding through a [`ChunkSink`] — this is how SSE
+//! rides on top, see [`super::sse`]). Protocol errors are answered by this
+//! layer directly: `400` malformed, `411` missing `Content-Length`, `413`
+//! body too large, `431` header block too large, `501` request
+//! transfer-codings.
+
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// Transport limits and pool sizing. The defaults suit loopback tests and
+/// modest deployments; every field is public so the CLI can expose flags
+/// later without an options rebuild.
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// connection worker threads (each serves one connection at a time)
+    pub workers: usize,
+    /// accepted connections that may wait for a worker before the
+    /// acceptor answers `503` directly
+    pub backlog: usize,
+    /// per-connection socket read timeout (also bounds keep-alive idle)
+    pub read_timeout: Duration,
+    /// per-connection socket write timeout (bounds a stalled client on
+    /// the streaming path)
+    pub write_timeout: Duration,
+    /// total request-line + header bytes before `431`
+    pub max_header_bytes: usize,
+    /// body bytes before `413`
+    pub max_body_bytes: usize,
+    /// requests served per connection before the server closes it (bounds
+    /// how long one client can pin a pool worker)
+    pub max_requests_per_conn: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            workers: 8,
+            backlog: 64,
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 1024 * 1024,
+            max_requests_per_conn: 1024,
+        }
+    }
+}
+
+/// One parsed HTTP request. Header names are lowercased at parse time;
+/// values keep their bytes (trimmed, obs-folds unfolded with one space).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// origin-form target as received: path plus optional `?query`
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Target with any query string stripped.
+    pub fn path(&self) -> &str {
+        self.target.split(['?', '#']).next().unwrap_or(&self.target)
+    }
+}
+
+/// Response body: fixed (written with `Content-Length`) or streamed
+/// (chunked transfer coding; the closure runs on the connection worker
+/// and writes through a [`ChunkSink`] until it returns).
+pub enum Body {
+    Full(Vec<u8>),
+    Stream(Box<dyn FnOnce(&mut ChunkSink<'_>) -> io::Result<()> + Send>),
+}
+
+/// One HTTP response.
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Body,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Body::Full(Vec::new()) }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status)
+            .header("content-type", "text/plain; charset=utf-8")
+            .with_body(body.into().into_bytes())
+    }
+
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status)
+            .header("content-type", "application/json")
+            .with_body(body.into().into_bytes())
+    }
+
+    /// A chunked streaming response; `f` runs on the connection worker.
+    /// An `Err` from `f` (typically a disconnected client) abandons the
+    /// stream and closes the connection — the terminating zero chunk is
+    /// only written after `Ok`.
+    pub fn stream<F>(status: u16, content_type: &str, f: F) -> Response
+    where
+        F: FnOnce(&mut ChunkSink<'_>) -> io::Result<()> + Send + 'static,
+    {
+        Response {
+            status,
+            headers: vec![("content-type".into(), content_type.into())],
+            body: Body::Stream(Box::new(f)),
+        }
+    }
+
+    pub fn header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.into()));
+        self
+    }
+
+    pub fn with_body(mut self, body: Vec<u8>) -> Response {
+        self.body = Body::Full(body);
+        self
+    }
+}
+
+/// Maps one request to one response. Implemented for plain closures.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: Request) -> Response;
+}
+
+impl<F> Handler for F
+where
+    F: Fn(Request) -> Response + Send + Sync + 'static,
+{
+    fn handle(&self, req: Request) -> Response {
+        self(req)
+    }
+}
+
+/// Outcome of parsing one request off a connection.
+enum Parsed {
+    Request(Request),
+    /// clean EOF between requests (client closed a keep-alive connection)
+    Eof,
+    /// protocol error answered with this status, then the connection
+    /// closes
+    Error { status: u16, msg: String },
+}
+
+/// Read one CRLF (or bare-LF) line, charging its bytes against `budget`.
+/// `Ok(None)` = EOF before any byte.
+fn read_line(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+) -> io::Result<Option<Result<String, ()>>> {
+    let mut line = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                break;
+            }
+            Ok(_) => {
+                if *budget == 0 {
+                    return Ok(Some(Err(()))); // header block too large
+                }
+                *budget -= 1;
+                if byte[0] == b'\n' {
+                    break;
+                }
+                line.push(byte[0]);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    match String::from_utf8(line) {
+        Ok(s) => Ok(Some(Ok(s))),
+        Err(_) => Ok(Some(Ok(String::from("\u{fffd}")))), // poisoned line → parse error later
+    }
+}
+
+/// Parse one request (request line, headers with obs-fold unfolding, and
+/// a Content-Length body) off the connection.
+fn parse_request(r: &mut impl BufRead, opts: &HttpOptions) -> io::Result<Parsed> {
+    let mut budget = opts.max_header_bytes;
+    let line = match read_line(r, &mut budget)? {
+        None => return Ok(Parsed::Eof),
+        Some(Err(())) => {
+            return Ok(Parsed::Error {
+                status: 431,
+                msg: "request header block too large".into(),
+            })
+        }
+        Some(Ok(l)) => l,
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => {
+                (m.to_string(), t.to_string(), v.to_string())
+            }
+            _ => {
+                return Ok(Parsed::Error {
+                    status: 400,
+                    msg: format!("malformed request line: {line:?}"),
+                })
+            }
+        };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Ok(Parsed::Error { status: 505, msg: format!("unsupported {version}") });
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, &mut budget)? {
+            None => {
+                return Ok(Parsed::Error {
+                    status: 400,
+                    msg: "connection closed mid-headers".into(),
+                })
+            }
+            Some(Err(())) => {
+                return Ok(Parsed::Error {
+                    status: 431,
+                    msg: "request header block too large".into(),
+                })
+            }
+            Some(Ok(l)) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            // obs-fold continuation: RFC 7230 §3.2.4 says unfold or
+            // reject — unfold with a single space onto the prior value
+            match headers.last_mut() {
+                Some((_, v)) => {
+                    v.push(' ');
+                    v.push_str(line.trim());
+                }
+                None => {
+                    return Ok(Parsed::Error {
+                        status: 400,
+                        msg: "header continuation without a header".into(),
+                    })
+                }
+            }
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Ok(Parsed::Error { status: 400, msg: format!("malformed header {line:?}") });
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Ok(Parsed::Error {
+                status: 400,
+                msg: format!("malformed header name {name:?}"),
+            });
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = Request { method, target, headers, body: Vec::new() };
+    // keep-alive default differs by version; record it as a synthetic
+    // header only if the client didn't send one
+    if req.header("connection").is_none() && version == "HTTP/1.0" {
+        req.headers.push(("connection".into(), "close".into()));
+    }
+
+    if req.header("transfer-encoding").is_some() {
+        // request bodies are Content-Length only in this server
+        return Ok(Parsed::Error {
+            status: 501,
+            msg: "request transfer-encoding not supported".into(),
+        });
+    }
+    let len = match req.header("content-length") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                return Ok(Parsed::Error {
+                    status: 400,
+                    msg: format!("bad content-length {v:?}"),
+                })
+            }
+        },
+        None => None,
+    };
+    match (req.method.as_str(), len) {
+        ("POST" | "PUT" | "PATCH", None) => {
+            return Ok(Parsed::Error {
+                status: 411,
+                msg: "content-length required".into(),
+            })
+        }
+        (_, None) | (_, Some(0)) => {}
+        (_, Some(n)) if n > opts.max_body_bytes => {
+            return Ok(Parsed::Error {
+                status: 413,
+                msg: format!("body of {n} bytes exceeds limit {}", opts.max_body_bytes),
+            })
+        }
+        (_, Some(n)) => {
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)?;
+            req.body = body;
+        }
+    }
+    Ok(Parsed::Request(req))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "",
+    }
+}
+
+/// Writer handed to streaming bodies: each [`ChunkSink::send`] becomes
+/// one chunk, flushed immediately so event frames reach the client (and
+/// a disconnected client surfaces as an `Err` here, not at some buffered
+/// later point).
+pub struct ChunkSink<'a> {
+    w: &'a mut dyn Write,
+}
+
+impl ChunkSink<'_> {
+    pub fn send(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            // a zero-length chunk would terminate the stream
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+}
+
+fn write_response(w: &mut impl Write, resp: Response, keep_alive: bool) -> io::Result<bool> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status));
+    for (k, v) in &resp.headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    if !keep_alive {
+        head.push_str("connection: close\r\n");
+    }
+    match resp.body {
+        Body::Full(body) => {
+            head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+            w.write_all(head.as_bytes())?;
+            w.write_all(&body)?;
+            w.flush()?;
+            Ok(keep_alive)
+        }
+        Body::Stream(f) => {
+            head.push_str("transfer-encoding: chunked\r\n\r\n");
+            w.write_all(head.as_bytes())?;
+            w.flush()?;
+            let mut sink = ChunkSink { w };
+            f(&mut sink)?;
+            // stream completed: terminate the chunk sequence so a
+            // keep-alive client knows the body ended
+            w.write_all(b"0\r\n\r\n")?;
+            w.flush()?;
+            Ok(keep_alive)
+        }
+    }
+}
+
+fn error_response(status: u16, msg: &str) -> Response {
+    Response::text(status, format!("{msg}\n"))
+}
+
+/// Serve one connection: parse → dispatch → write, looping while
+/// keep-alive holds. Pipelined requests queue in the read buffer and are
+/// served back-to-back in order.
+fn handle_conn(stream: TcpStream, handler: &dyn Handler, opts: &HttpOptions) {
+    let _ = stream.set_read_timeout(Some(opts.read_timeout));
+    let _ = stream.set_write_timeout(Some(opts.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut r = BufReader::new(read_half);
+    let mut w = BufWriter::new(stream);
+    for served in 0..opts.max_requests_per_conn {
+        let req = match parse_request(&mut r, opts) {
+            Ok(Parsed::Request(req)) => req,
+            Ok(Parsed::Eof) => return,
+            Ok(Parsed::Error { status, msg }) => {
+                let _ = write_response(&mut w, error_response(status, &msg), false);
+                return;
+            }
+            // read timeout on an idle keep-alive connection, or a
+            // half-sent request: close quietly either way
+            Err(_) => return,
+        };
+        let close_requested =
+            req.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"));
+        let keep_alive = !close_requested && served + 1 < opts.max_requests_per_conn;
+        let resp = handler.handle(req);
+        match write_response(&mut w, resp, keep_alive) {
+            Ok(true) => continue,
+            _ => return,
+        }
+    }
+}
+
+/// A running HTTP server: an acceptor thread plus a bounded worker pool.
+/// Dropping (or [`HttpServer::shutdown`]) stops the acceptor, drains the
+/// workers, and joins every thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    /// currently open (accepted, not yet finished) connections
+    open: Arc<AtomicU64>,
+}
+
+impl HttpServer {
+    /// Bind and start serving `handler` on `addr` (use port 0 to let the
+    /// OS pick; read it back with [`Self::local_addr`]).
+    pub fn bind<A, H>(addr: A, opts: HttpOptions, handler: H) -> io::Result<HttpServer>
+    where
+        A: ToSocketAddrs,
+        H: Handler,
+    {
+        HttpServer::bind_gauged(addr, opts, handler, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// [`Self::bind`] with a caller-owned open-connections gauge — the
+    /// front door shares this gauge with its `/metrics` renderer so
+    /// `connections_open` is scrapeable.
+    pub fn bind_gauged<A, H>(
+        addr: A,
+        opts: HttpOptions,
+        handler: H,
+        open: Arc<AtomicU64>,
+    ) -> io::Result<HttpServer>
+    where
+        A: ToSocketAddrs,
+        H: Handler,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let handler: Arc<dyn Handler> = Arc::new(handler);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(opts.backlog);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut threads = Vec::with_capacity(opts.workers + 1);
+        for _ in 0..opts.workers.max(1) {
+            let rx = rx.clone();
+            let handler = handler.clone();
+            let opts = opts.clone();
+            let open = open.clone();
+            threads.push(std::thread::spawn(move || worker_loop(&rx, &*handler, &opts, &open)));
+        }
+        {
+            let stop = stop.clone();
+            let open = open.clone();
+            // `opts` moves into the acceptor — the workers cloned theirs
+            threads.push(std::thread::spawn(move || {
+                acceptor_loop(listener, &stop, tx, &opts, &open)
+            }));
+        }
+        Ok(HttpServer { addr, stop, threads, open })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accepted connections currently being served (the gauge behind the
+    /// `connections_open` metric).
+    pub fn connections_open(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, drain the workers, join every thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the acceptor's blocking accept() with a throwaway
+        // connection to ourselves
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<TcpStream>>,
+    handler: &dyn Handler,
+    opts: &HttpOptions,
+    open: &AtomicU64,
+) {
+    loop {
+        let conn = {
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.recv()
+        };
+        match conn {
+            Ok(stream) => {
+                handle_conn(stream, handler, opts);
+                open.fetch_sub(1, Ordering::Relaxed);
+            }
+            Err(_) => return, // acceptor gone: shutdown
+        }
+    }
+}
+
+fn acceptor_loop(
+    listener: TcpListener,
+    stop: &AtomicBool,
+    tx: SyncSender<TcpStream>,
+    opts: &HttpOptions,
+    open: &AtomicU64,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        open.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(stream) {
+            Ok(()) => {}
+            Err(TrySendError::Full(stream)) => {
+                // pool saturated and backlog full: shed at the door
+                open.fetch_sub(1, Ordering::Relaxed);
+                let _ = stream.set_write_timeout(Some(opts.write_timeout));
+                let mut w = BufWriter::new(stream);
+                let _ = write_response(
+                    &mut w,
+                    error_response(503, "server overloaded").header("retry-after", "1"),
+                    false,
+                );
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                open.fetch_sub(1, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+    // dropping tx wakes every idle worker out of recv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(bytes: &[u8]) -> Parsed {
+        let mut r = BufReader::new(Cursor::new(bytes.to_vec()));
+        parse_request(&mut r, &HttpOptions::default()).expect("io on cursor")
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let p = parse(
+            b"POST /v1/generate?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 4\r\n\r\nbody",
+        );
+        let Parsed::Request(req) = p else { panic!("expected request") };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/generate?x=1");
+        assert_eq!(req.path(), "/v1/generate");
+        assert_eq!(req.header("host"), Some("a"));
+        assert_eq!(req.header("HOST"), Some("a"), "lookup is case-insensitive");
+        assert_eq!(req.body, b"body");
+    }
+
+    #[test]
+    fn unfolds_obs_fold_header_continuations() {
+        let p = parse(b"GET / HTTP/1.1\r\nX-Long: first\r\n  second\r\n\tthird\r\n\r\n");
+        let Parsed::Request(req) = p else { panic!("expected request") };
+        assert_eq!(req.header("x-long"), Some("first second third"));
+    }
+
+    #[test]
+    fn continuation_before_any_header_is_400() {
+        let p = parse(b"GET / HTTP/1.1\r\n  floating\r\n\r\n");
+        let Parsed::Error { status, .. } = p else { panic!("expected error") };
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn post_without_content_length_is_411() {
+        let p = parse(b"POST /v1/generate HTTP/1.1\r\nHost: a\r\n\r\n");
+        let Parsed::Error { status, .. } = p else { panic!("expected error") };
+        assert_eq!(status, 411);
+    }
+
+    #[test]
+    fn get_without_content_length_is_fine() {
+        let p = parse(b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(matches!(p, Parsed::Request(_)));
+    }
+
+    #[test]
+    fn oversized_header_block_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(format!("X-Big: {}\r\n\r\n", "v".repeat(20 * 1024)).as_bytes());
+        let Parsed::Error { status, .. } = parse(&raw) else { panic!("expected error") };
+        assert_eq!(status, 431);
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_transfer_encoding_501() {
+        let p = parse(b"POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n");
+        let Parsed::Error { status, .. } = p else { panic!("expected error") };
+        assert_eq!(status, 413);
+        let p = parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        let Parsed::Error { status, .. } = p else { panic!("expected error") };
+        assert_eq!(status, 501);
+    }
+
+    #[test]
+    fn bad_request_line_is_400_and_eof_is_clean() {
+        assert!(matches!(parse(b"NONSENSE\r\n\r\n"), Parsed::Error { status: 400, .. }));
+        assert!(matches!(parse(b""), Parsed::Eof));
+    }
+
+    #[test]
+    fn http10_defaults_to_close_http11_to_keep_alive() {
+        let Parsed::Request(req) = parse(b"GET / HTTP/1.0\r\n\r\n") else { panic!() };
+        assert_eq!(req.header("connection"), Some("close"));
+        let Parsed::Request(req) = parse(b"GET / HTTP/1.1\r\n\r\n") else { panic!() };
+        assert_eq!(req.header("connection"), None);
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let mut r = BufReader::new(Cursor::new(raw.to_vec()));
+        let opts = HttpOptions::default();
+        let Ok(Parsed::Request(a)) = parse_request(&mut r, &opts) else { panic!() };
+        assert_eq!(a.target, "/a");
+        let Ok(Parsed::Request(b)) = parse_request(&mut r, &opts) else { panic!() };
+        assert_eq!((b.target.as_str(), b.body.as_slice()), ("/b", b"hi".as_slice()));
+        assert!(matches!(parse_request(&mut r, &opts), Ok(Parsed::Eof)));
+    }
+
+    #[test]
+    fn chunked_writer_frames_and_terminates() {
+        let mut out = Vec::new();
+        {
+            let mut w = BufWriter::new(Cursor::new(&mut out));
+            let resp = Response::stream(200, "text/event-stream", |sink| {
+                sink.send(b"hello")?;
+                sink.send(b"")?; // empty send is a no-op, not a terminator
+                sink.send(b"world!")
+            });
+            write_response(&mut w, resp, true).unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("transfer-encoding: chunked"));
+        assert!(text.contains("5\r\nhello\r\n"));
+        assert!(text.contains("6\r\nworld!\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+
+    #[test]
+    fn full_body_gets_content_length() {
+        let mut out = Vec::new();
+        {
+            let mut w = BufWriter::new(Cursor::new(&mut out));
+            write_response(&mut w, Response::text(200, "ok"), false).unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("content-length: 2\r\n"));
+        assert!(text.contains("connection: close\r\n"));
+        assert!(text.ends_with("\r\nok"));
+    }
+}

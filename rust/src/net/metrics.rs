@@ -1,0 +1,349 @@
+//! Prometheus text exposition for the `/metrics` endpoint.
+//!
+//! Renders the merged [`ServerStats`] (every counter the serving stack
+//! already tracks), the front door's admission counters
+//! (`rejected_rate_limit` / `rejected_deadline`), and the transport's
+//! `connections_open` gauge as `text/plain; version=0.0.4` — the
+//! Prometheus exposition format. No client library exists in-tree, so a
+//! tiny [`parse_text`] validator rides along for tests (and doubles as a
+//! grammar check: the E2E suite asserts a scrape round-trips).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::coordinator::ServerStats;
+
+/// One metric family: `# HELP` + `# TYPE` + one sample line.
+fn sample(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {}", fmt_value(value));
+}
+
+/// Format a value the way Prometheus expects: integers bare, floats as
+/// printed by Rust (both parse fine on the scrape side).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the exposition format: backslash, quote,
+/// newline.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Extra gauges owned by the front door rather than the router.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontGauges {
+    pub rejected_rate_limit: u64,
+    pub rejected_deadline: u64,
+    pub connections_open: u64,
+}
+
+/// Render one scrape. `stats` is the router-merged view; per-tenant
+/// submit counts become a labelled `dndm_tenant_requests_total` family.
+pub fn render(stats: &ServerStats, front: &FrontGauges) -> String {
+    let mut out = String::with_capacity(4096);
+    let s = stats;
+
+    // cumulative counters
+    sample(&mut out, "dndm_requests_total", "counter", "requests submitted", s.requests as f64);
+    sample(&mut out, "dndm_batches_total", "counter", "denoiser batches formed", s.batches as f64);
+    sample(&mut out, "dndm_nn_calls_total", "counter", "denoiser (NN) calls", s.nn_calls as f64);
+    sample(&mut out, "dndm_cancelled_total", "counter", "requests cancelled", s.cancelled as f64);
+    sample(
+        &mut out,
+        "dndm_deadline_exceeded_total",
+        "counter",
+        "requests dropped past their deadline",
+        s.deadline_exceeded as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_stolen_total",
+        "counter",
+        "requests donated to other shards",
+        s.stolen as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_rebalances_total",
+        "counter",
+        "rebalance actions executed",
+        s.rebalances as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_lanes_donated_total",
+        "counter",
+        "in-flight lanes donated",
+        s.lanes_donated as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_lanes_split_total",
+        "counter",
+        "in-flight lanes split",
+        s.lanes_split as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_lanes_salvaged_total",
+        "counter",
+        "lanes evacuated during failover",
+        s.lanes_salvaged as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_ghost_events_fired_total",
+        "counter",
+        "denoiser calls advancing an event with zero live rows (must stay 0)",
+        s.ghost_events_fired as f64,
+    );
+    sample(&mut out, "dndm_retries_total", "counter", "transient-fault retries", s.retries as f64);
+    sample(
+        &mut out,
+        "dndm_faults_transient_total",
+        "counter",
+        "transient denoiser faults",
+        s.faults_transient as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_faults_fatal_total",
+        "counter",
+        "fatal denoiser faults",
+        s.faults_fatal as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_rejected_rate_limit_total",
+        "counter",
+        "requests rejected at admission by the per-tenant token bucket (HTTP 429)",
+        front.rejected_rate_limit as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_rejected_deadline_total",
+        "counter",
+        "requests rejected at admission because the exact cost projection exceeds the deadline (HTTP 503)",
+        front.rejected_deadline as f64,
+    );
+
+    // instantaneous gauges
+    sample(
+        &mut out,
+        "dndm_connections_open",
+        "gauge",
+        "open HTTP connections",
+        front.connections_open as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_queued_low",
+        "gauge",
+        "queued low-priority requests",
+        s.queued_low as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_queued_normal",
+        "gauge",
+        "queued normal-priority requests",
+        s.queued_normal as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_queued_high",
+        "gauge",
+        "queued high-priority requests",
+        s.queued_high as f64,
+    );
+    sample(&mut out, "dndm_lanes", "gauge", "in-flight lanes", s.lanes as f64);
+    sample(&mut out, "dndm_in_flight", "gauge", "in-flight sequences", s.in_flight as f64);
+    sample(&mut out, "dndm_mean_batch", "gauge", "mean denoiser batch width", s.mean_batch);
+    sample(
+        &mut out,
+        "dndm_avg_request_nfe",
+        "gauge",
+        "mean per-request NFE over retired requests",
+        s.avg_request_nfe,
+    );
+    sample(&mut out, "dndm_occupancy", "gauge", "in-flight width / slot capacity", s.occupancy);
+    sample(
+        &mut out,
+        "dndm_breaker_open",
+        "gauge",
+        "1 while any shard's circuit breaker is open",
+        if s.breaker_open { 1.0 } else { 0.0 },
+    );
+    sample(
+        &mut out,
+        "dndm_healthy",
+        "gauge",
+        "1 while every shard can serve",
+        if s.healthy { 1.0 } else { 0.0 },
+    );
+
+    // latency percentiles, in seconds per Prometheus convention
+    sample(
+        &mut out,
+        "dndm_queue_seconds_p95",
+        "gauge",
+        "queue wait p95",
+        s.queue_p95.as_secs_f64(),
+    );
+    sample(
+        &mut out,
+        "dndm_e2e_seconds_p50",
+        "gauge",
+        "end-to-end latency p50",
+        s.e2e_p50.as_secs_f64(),
+    );
+    sample(
+        &mut out,
+        "dndm_e2e_seconds_p95",
+        "gauge",
+        "end-to-end latency p95",
+        s.e2e_p95.as_secs_f64(),
+    );
+    sample(
+        &mut out,
+        "dndm_e2e_seconds_p99",
+        "gauge",
+        "end-to-end latency p99",
+        s.e2e_p99.as_secs_f64(),
+    );
+
+    // per-tenant submit counts as one labelled family
+    let _ = writeln!(out, "# HELP dndm_tenant_requests_total requests submitted per tenant");
+    let _ = writeln!(out, "# TYPE dndm_tenant_requests_total counter");
+    for (tenant, n) in &s.tenant_requests {
+        let _ = writeln!(
+            out,
+            "dndm_tenant_requests_total{{tenant=\"{}\"}} {}",
+            escape_label(tenant),
+            n
+        );
+    }
+    out
+}
+
+/// Parse exposition text back into `name{labels} → value` — the test-side
+/// half of [`render`]. Rejects anything that doesn't look like the
+/// format: a parse `Err` in a test means the renderer broke grammar.
+pub fn parse_text(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no sample value: {line:?}", lineno + 1))?;
+        if name.is_empty()
+            || !name.chars().next().unwrap_or(' ').is_ascii_alphabetic()
+            || name.contains(' ') && !name.contains('{')
+        {
+            return Err(format!("line {}: bad metric name: {name:?}", lineno + 1));
+        }
+        let value: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: bad sample value: {value:?}", lineno + 1))?;
+        out.insert(name.to_string(), value);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn stats() -> ServerStats {
+        ServerStats {
+            requests: 12,
+            batches: 3,
+            nn_calls: 40,
+            mean_batch: 2.5,
+            queue_p95: Duration::from_millis(10),
+            e2e_p95: Duration::from_millis(200),
+            e2e_p50: Duration::from_millis(100),
+            e2e_p99: Duration::from_millis(300),
+            avg_request_nfe: 8.0,
+            occupancy: 0.75,
+            cancelled: 1,
+            deadline_exceeded: 2,
+            queued_low: 0,
+            queued_normal: 4,
+            queued_high: 1,
+            stolen: 0,
+            lanes: 2,
+            in_flight: 5,
+            rebalances: 0,
+            lanes_donated: 0,
+            lanes_split: 0,
+            ghost_events_fired: 0,
+            retries: 0,
+            faults_transient: 0,
+            faults_fatal: 0,
+            breaker_open: false,
+            lanes_salvaged: 0,
+            healthy: true,
+            tenant_requests: vec![("acme".into(), 7), ("z\"inc\\".into(), 5)],
+        }
+    }
+
+    #[test]
+    fn render_parses_and_counters_round_trip() {
+        let front = FrontGauges {
+            rejected_rate_limit: 3,
+            rejected_deadline: 4,
+            connections_open: 2,
+        };
+        let text = render(&stats(), &front);
+        let parsed = parse_text(&text).expect("renderer output must parse");
+        assert_eq!(parsed["dndm_requests_total"], 12.0);
+        assert_eq!(parsed["dndm_nn_calls_total"], 40.0);
+        assert_eq!(parsed["dndm_rejected_rate_limit_total"], 3.0);
+        assert_eq!(parsed["dndm_rejected_deadline_total"], 4.0);
+        assert_eq!(parsed["dndm_connections_open"], 2.0);
+        assert_eq!(parsed["dndm_mean_batch"], 2.5);
+        assert_eq!(parsed["dndm_occupancy"], 0.75);
+        assert_eq!(parsed["dndm_e2e_seconds_p50"], 0.1);
+        assert_eq!(parsed["dndm_healthy"], 1.0);
+        assert_eq!(parsed["dndm_breaker_open"], 0.0);
+        assert_eq!(parsed["dndm_tenant_requests_total{tenant=\"acme\"}"], 7.0);
+    }
+
+    #[test]
+    fn every_sample_has_help_and_type() {
+        let text = render(&stats(), &FrontGauges::default());
+        let mut declared = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                declared.insert(rest.split(' ').next().unwrap().to_string());
+            } else if !line.is_empty() && !line.starts_with('#') {
+                let family = line.split(['{', ' ']).next().unwrap();
+                assert!(declared.contains(family), "undeclared family {family}");
+            }
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let text = render(&stats(), &FrontGauges::default());
+        assert!(text.contains(r#"tenant="z\"inc\\""#), "{text}");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_text("dndm_x not_a_number").is_err());
+        assert!(parse_text("just one token? no:").is_err());
+        assert!(parse_text("# a comment\n\ndndm_ok 1\n").is_ok());
+    }
+}

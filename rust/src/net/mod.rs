@@ -1,0 +1,36 @@
+//! The network front door: HTTP/1.1 + SSE serving with exact-cost
+//! admission control.
+//!
+//! Everything under the coordinator speaks Rust types; this module is
+//! the wire boundary. It is deliberately layered so each piece tests in
+//! isolation and none knows about the ones above it:
+//!
+//! * [`http`] — dependency-free HTTP/1.1 transport: parsing, bodies,
+//!   chunked streaming, keep-alive, timeouts, a bounded worker pool.
+//! * [`sse`] — [`Ticket`](crate::coordinator::Ticket) lifecycle events as
+//!   Server-Sent Events, with disconnect-driven cancellation.
+//! * [`admission`] — per-tenant token buckets plus **exact** deadline
+//!   load shedding: a request's denoiser-call cost is the size of its
+//!   predetermined transition set, known before any compute, so
+//!   rejections are proofs, not guesses.
+//! * [`metrics`] — Prometheus text exposition over
+//!   [`ServerStats`](crate::coordinator::ServerStats).
+//! * [`front`] — the routes: `POST /v1/generate` (JSON in, JSON or SSE
+//!   out), `GET /metrics`, `GET /healthz` — wired together by
+//!   [`front::serve`].
+//!
+//! `docs/http.md` is the wire-level reference (endpoint table, request
+//! schema, SSE grammar, the admission-control math); `cargo run -- serve
+//! --listen 127.0.0.1:8484 --mock` brings the whole thing up without
+//! artifacts.
+
+pub mod admission;
+pub mod front;
+pub mod http;
+pub mod metrics;
+pub mod sse;
+
+pub use admission::{exact_cost, Admission, AdmissionPolicy, RateLimit, Rejection};
+pub use front::{serve, FrontDoor};
+pub use http::{HttpOptions, HttpServer};
+pub use sse::StreamEnd;

@@ -1,0 +1,277 @@
+//! Server-Sent Events framing over the [`Ticket`] lifecycle stream.
+//!
+//! A [`Ticket`] already holds one **coalescing snapshot** per request —
+//! bounded memory no matter how slow the reader — so the SSE layer is a
+//! thin poll loop: drain `try_next_event()`, frame each [`Event`] as one
+//! SSE event with a JSON `data:` payload, and sleep briefly when nothing
+//! is new (emitting a heartbeat comment on an interval so proxies and
+//! clients can tell a quiet stream from a dead one).
+//!
+//! The one piece of real logic is disconnect handling: any write error
+//! (the client went away) calls [`Ticket::cancel`], so the request's lane
+//! slot is freed at the next transition-time boundary instead of burning
+//! denoiser calls for a reader that no longer exists.
+//!
+//! Event grammar (documented in `docs/http.md`):
+//!
+//! ```text
+//! event: queued | admitted | progress | done | cancelled
+//!      | deadline_exceeded | failed
+//! data: <one-line JSON object>
+//! ```
+
+use std::collections::BTreeMap;
+use std::io;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Event, Ticket};
+use crate::util::json::Json;
+
+/// Poll interval while the snapshot has nothing new. Event latency under
+/// streaming is bounded by this plus the scheduler's boundary cadence.
+const IDLE_POLL: Duration = Duration::from_millis(10);
+
+/// Heartbeat comment frame — a no-op for SSE clients, a liveness probe
+/// for everything in between.
+pub const HEARTBEAT: &str = ": hb\n\n";
+
+/// Frame one SSE event: optional `event:` name, then the payload split
+/// into one `data:` line per payload line (the SSE spec's multi-line
+/// encoding — the client's EventSource rejoins them with `\n`).
+pub fn frame(event: Option<&str>, data: &str) -> String {
+    let mut out = String::new();
+    if let Some(name) = event {
+        out.push_str("event: ");
+        out.push_str(name);
+        out.push('\n');
+    }
+    for line in data.split('\n') {
+        out.push_str("data: ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out.push('\n');
+    out
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Frame one lifecycle [`Event`] as an SSE event with a JSON payload.
+pub fn event_frame(ev: &Event) -> String {
+    match ev {
+        Event::Admitted => frame(Some("admitted"), &obj(vec![]).to_string()),
+        Event::Progress { nfe_done, nfe_total, partial_tokens } => {
+            let mut fields = vec![
+                ("nfe_done", Json::Num(*nfe_done as f64)),
+                ("nfe_total", Json::Num(*nfe_total as f64)),
+            ];
+            if !partial_tokens.is_empty() {
+                fields.push((
+                    "partial_tokens",
+                    Json::Arr(partial_tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ));
+            }
+            frame(Some("progress"), &obj(fields).to_string())
+        }
+        Event::Done(out) => frame(
+            Some("done"),
+            &obj(vec![
+                ("text", Json::Str(out.text.clone())),
+                ("tokens", Json::Arr(out.tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
+                ("nfe", Json::Num(out.nfe as f64)),
+                ("elapsed_us", Json::Num(out.elapsed.as_micros() as f64)),
+            ])
+            .to_string(),
+        ),
+        Event::Cancelled => frame(Some("cancelled"), &obj(vec![]).to_string()),
+        Event::DeadlineExceeded => frame(Some("deadline_exceeded"), &obj(vec![]).to_string()),
+        Event::Failed(msg) => {
+            frame(Some("failed"), &obj(vec![("error", Json::Str(msg.clone()))]).to_string())
+        }
+    }
+}
+
+/// How a streamed ticket ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEnd {
+    /// Generation finished; carries the final NFE and wall time (µs) for
+    /// the admission EWMA.
+    Done { nfe: usize, elapsed_us: u64 },
+    Cancelled,
+    DeadlineExceeded,
+    Failed,
+    /// The client went away mid-stream; the ticket was cancelled so the
+    /// scheduler frees the lane slot at the next boundary.
+    Disconnected,
+}
+
+/// Pump a ticket's events into `write` as SSE frames until the stream
+/// ends one way or the other. `write` is called once per frame (the HTTP
+/// layer's [`ChunkSink`](super::http::ChunkSink) flushes per call, so a
+/// dead client surfaces here as an `Err`).
+pub fn stream_ticket(
+    ticket: &mut Ticket,
+    heartbeat: Duration,
+    mut write: impl FnMut(&str) -> io::Result<()>,
+) -> StreamEnd {
+    let mut last_write = Instant::now();
+    loop {
+        match ticket.try_next_event() {
+            Some(ev) => {
+                let end = match &ev {
+                    Event::Done(out) => Some(StreamEnd::Done {
+                        nfe: out.nfe,
+                        elapsed_us: out.elapsed.as_micros() as u64,
+                    }),
+                    Event::Cancelled => Some(StreamEnd::Cancelled),
+                    Event::DeadlineExceeded => Some(StreamEnd::DeadlineExceeded),
+                    Event::Failed(_) => Some(StreamEnd::Failed),
+                    Event::Admitted | Event::Progress { .. } => None,
+                };
+                if write(&event_frame(&ev)).is_err() {
+                    ticket.cancel();
+                    return StreamEnd::Disconnected;
+                }
+                last_write = Instant::now();
+                if let Some(end) = end {
+                    return end;
+                }
+            }
+            None => {
+                if ticket.finished() {
+                    // terminal already delivered before we got here
+                    return StreamEnd::Failed;
+                }
+                if last_write.elapsed() >= heartbeat {
+                    if write(HEARTBEAT).is_err() {
+                        ticket.cancel();
+                        return StreamEnd::Disconnected;
+                    }
+                    last_write = Instant::now();
+                }
+                std::thread::sleep(IDLE_POLL);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenOutput;
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    #[test]
+    fn frame_escapes_multiline_data_one_prefix_per_line() {
+        let f = frame(Some("done"), "line one\nline two\nline three");
+        assert_eq!(f, "event: done\ndata: line one\ndata: line two\ndata: line three\n\n");
+    }
+
+    #[test]
+    fn frame_without_event_name_is_data_only() {
+        assert_eq!(frame(None, "x"), "data: x\n\n");
+    }
+
+    #[test]
+    fn heartbeat_is_a_comment_frame() {
+        assert!(HEARTBEAT.starts_with(':'));
+        assert!(HEARTBEAT.ends_with("\n\n"));
+    }
+
+    #[test]
+    fn progress_frame_carries_nfe_and_tokens() {
+        let f = event_frame(&Event::Progress {
+            nfe_done: 3,
+            nfe_total: 8,
+            partial_tokens: vec![4, 7],
+        });
+        assert!(f.starts_with("event: progress\n"), "{f}");
+        assert!(f.contains("\"nfe_done\":3"), "{f}");
+        assert!(f.contains("\"nfe_total\":8"), "{f}");
+        assert!(f.contains("\"partial_tokens\":[4,7]"), "{f}");
+    }
+
+    #[test]
+    fn unsubscribed_progress_omits_tokens() {
+        let f = event_frame(&Event::Progress { nfe_done: 1, nfe_total: 2, partial_tokens: vec![] });
+        assert!(!f.contains("partial_tokens"), "{f}");
+    }
+
+    #[test]
+    fn done_frame_is_parseable_json_with_the_output() {
+        let f = event_frame(&Event::Done(GenOutput {
+            text: "a \"quoted\" line".into(),
+            tokens: vec![1, 2, 3],
+            nfe: 5,
+            elapsed: Duration::from_micros(1234),
+        }));
+        let data = f.lines().find(|l| l.starts_with("data: ")).unwrap();
+        let json = Json::parse(&data["data: ".len()..]).expect("payload parses");
+        assert_eq!(json.str_field("text").unwrap(), "a \"quoted\" line");
+        assert_eq!(json.num_field("nfe").unwrap(), 5.0);
+        assert_eq!(json.num_field("elapsed_us").unwrap(), 1234.0);
+        assert_eq!(json.get("tokens").and_then(Json::as_arr).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn stream_delivers_lifecycle_then_done() {
+        let (mut t, sink) = Ticket::detached(false);
+        sink.set_admitted();
+        sink.progress(2, 2, None);
+        sink.finish_done(GenOutput {
+            text: "out".into(),
+            tokens: vec![9],
+            nfe: 2,
+            elapsed: Duration::from_micros(10),
+        });
+        let frames: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sunk = frames.clone();
+        let end = stream_ticket(&mut t, Duration::from_secs(60), move |f| {
+            sunk.lock().unwrap().push(f.to_string());
+            Ok(())
+        });
+        assert_eq!(end, StreamEnd::Done { nfe: 2, elapsed_us: 10 });
+        let frames = frames.lock().unwrap();
+        assert!(frames[0].starts_with("event: admitted\n"));
+        assert!(frames[1].starts_with("event: progress\n"));
+        assert!(frames[2].starts_with("event: done\n"));
+    }
+
+    #[test]
+    fn write_error_cancels_the_ticket() {
+        let (mut t, sink) = Ticket::detached(false);
+        sink.set_admitted();
+        let end = stream_ticket(&mut t, Duration::from_secs(60), |_| {
+            Err(io::Error::new(io::ErrorKind::BrokenPipe, "client gone"))
+        });
+        assert_eq!(end, StreamEnd::Disconnected);
+        // the serving side now sees the cancel flag and frees the lane
+        // slot at the next boundary
+        assert!(sink.is_cancelled());
+    }
+
+    #[test]
+    fn quiet_stream_emits_heartbeats() {
+        let (mut t, sink) = Ticket::detached(false);
+        let finisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(80));
+            sink.finish_cancelled();
+        });
+        let frames: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sunk = frames.clone();
+        let end = stream_ticket(&mut t, Duration::from_millis(20), move |f| {
+            sunk.lock().unwrap().push(f.to_string());
+            Ok(())
+        });
+        assert_eq!(end, StreamEnd::Cancelled);
+        finisher.join().unwrap();
+        let frames = frames.lock().unwrap();
+        assert!(
+            frames.iter().any(|f| f == HEARTBEAT),
+            "expected a heartbeat among {frames:?}"
+        );
+    }
+}

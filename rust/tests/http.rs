@@ -1,0 +1,471 @@
+//! Loopback E2E suite for the network front door: real TCP connections
+//! against `net::front::serve` over the mock-backed router.
+//!
+//! The acceptance pins:
+//! * ≥ 8 concurrent SSE clients stream to completion with per-request
+//!   **NFE conservation**: the `queued` frame's `nfe_total` (the exact
+//!   host-side |𝒯| computed at admission) equals the final `progress`
+//!   frame's `nfe_total`, `nfe_done`, and the `done` event's `nfe`.
+//! * A request whose deadline is below its exact projected cost is
+//!   rejected with `503` at admission and **never consumes a denoiser
+//!   call** (`nn_calls == 0` stays pinned).
+//! * `/metrics` parses as Prometheus text and its counters equal
+//!   `Router::stats()`.
+//! * Transport conformance: oversized header → `431`, `POST` without
+//!   `Content-Length` → `411`, pipelined keep-alive, and a mid-stream
+//!   client disconnect that cancels the ticket (`cancelled == 1`) while
+//!   `ghost_events_fired` stays 0.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{
+    cipher_mock_denoiser, cipher_mock_engine, Router, SchedPolicy, ServeBuilder,
+};
+use dndm::net::http::HttpOptions;
+use dndm::net::metrics::parse_text;
+use dndm::net::{self, exact_cost, AdmissionPolicy, HttpServer, RateLimit};
+use dndm::runtime::{Denoiser, ModelConfig};
+use dndm::sampler::{SamplerConfig, SamplerKind};
+
+const SRC: &str = "the quick fox crosses a river to the garden by";
+const SEQ_LEN: usize = 8;
+
+fn default_cfg() -> SamplerConfig {
+    SamplerConfig::new(SamplerKind::Dndm, 25)
+}
+
+/// Mock-backed front door on an OS-assigned loopback port. Per-request
+/// lanes (`shared_tau_groups: false`) so the admission-time |𝒯| is the
+/// served NFE exactly.
+fn front(policy: AdmissionPolicy, shards: usize) -> (Arc<Router>, HttpServer, ModelConfig) {
+    let mcfg = cipher_mock_denoiser(SEQ_LEN).config().clone();
+    let sched = SchedPolicy {
+        max_batch: 8,
+        window: Duration::ZERO,
+        shared_tau_groups: false,
+    };
+    let router = Arc::new(
+        ServeBuilder::new(|| Ok(cipher_mock_engine(SEQ_LEN)), default_cfg())
+            .shards(shards)
+            .continuous(sched)
+            .start(),
+    );
+    let server = net::serve(
+        "127.0.0.1:0",
+        router.clone(),
+        mcfg.clone(),
+        default_cfg(),
+        policy,
+        HttpOptions::default(),
+    )
+    .expect("bind loopback");
+    (router, server, mcfg)
+}
+
+fn no_limits() -> AdmissionPolicy {
+    AdmissionPolicy { rate_limit: None, ..AdmissionPolicy::default() }
+}
+
+// ---------------------------------------------------------------------------
+// minimal client
+// ---------------------------------------------------------------------------
+
+struct ClientResponse {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl ClientResponse {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+fn read_head(r: &mut impl BufRead) -> (u16, Vec<(String, String)>) {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    let status: u16 = line.split(' ').nth(1).expect("status code").parse().expect("numeric status");
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').expect("header colon");
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    (status, headers)
+}
+
+/// Read one full response (fixed or chunked body) off the reader.
+fn read_response(r: &mut impl BufRead) -> ClientResponse {
+    let (status, headers) = read_head(r);
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.contains("chunked"));
+    let mut body = Vec::new();
+    if chunked {
+        loop {
+            let mut size = String::new();
+            r.read_line(&mut size).expect("chunk size");
+            let n = usize::from_str_radix(size.trim(), 16).expect("hex chunk size");
+            let mut chunk = vec![0u8; n + 2]; // payload + CRLF
+            r.read_exact(&mut chunk).expect("chunk payload");
+            if n == 0 {
+                break;
+            }
+            body.extend_from_slice(&chunk[..n]);
+        }
+    } else {
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().expect("content-length"))
+            .unwrap_or(0);
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf).expect("fixed body");
+        body = buf;
+    }
+    ClientResponse { status, headers, body }
+}
+
+fn post_generate(addr: std::net::SocketAddr, json: &str) -> ClientResponse {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{json}",
+        json.len()
+    )
+    .expect("send request");
+    let mut r = BufReader::new(conn);
+    read_response(&mut r)
+}
+
+fn get(addr: std::net::SocketAddr, path: &str) -> ClientResponse {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(conn, "GET {path} HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n").expect("send");
+    let mut r = BufReader::new(conn);
+    read_response(&mut r)
+}
+
+/// Split an SSE body into (event-name, data) pairs.
+fn sse_events(body: &str) -> Vec<(String, String)> {
+    body.split("\n\n")
+        .filter(|f| !f.trim().is_empty() && !f.starts_with(':'))
+        .map(|f| {
+            let mut name = String::new();
+            let mut data = Vec::new();
+            for line in f.lines() {
+                if let Some(v) = line.strip_prefix("event: ") {
+                    name = v.to_string();
+                } else if let Some(v) = line.strip_prefix("data: ") {
+                    data.push(v.to_string());
+                }
+            }
+            (name, data.join("\n"))
+        })
+        .collect()
+}
+
+fn field(json: &str, key: &str) -> f64 {
+    dndm::util::json::Json::parse(json)
+        .unwrap_or_else(|e| panic!("bad JSON {json:?}: {e}"))
+        .num_field(key)
+        .unwrap_or_else(|e| panic!("no {key} in {json:?}: {e}"))
+}
+
+fn teardown(router: Arc<Router>, server: HttpServer) {
+    drop(server);
+    router.shutdown();
+    // router is shared; join() needs ownership — shutdown is enough for
+    // the threads to drain, and the Arc keeps the handles alive
+}
+
+// ---------------------------------------------------------------------------
+// acceptance: concurrent SSE with NFE conservation
+// ---------------------------------------------------------------------------
+
+/// ≥ 8 concurrent SSE clients stream to completion; for each, the exact
+/// admission-time cost (the `queued` frame) equals the final progress
+/// counters and the done NFE — the wire-level statement of predetermined
+/// transition times.
+#[test]
+fn eight_concurrent_sse_clients_conserve_per_request_nfe() {
+    let (router, server, mcfg) = front(no_limits(), 2);
+    let addr = server.local_addr();
+    let clients: Vec<_> = (0..8)
+        .map(|i| {
+            let mcfg = mcfg.clone();
+            std::thread::spawn(move || {
+                let body = format!(
+                    "{{\"seed\":{i},\"src\":\"{SRC}\",\"stream\":true,\
+                     \"partial_tokens\":true,\"tenant\":\"t{}\"}}",
+                    i % 2
+                );
+                let resp = post_generate(addr, &body);
+                assert_eq!(resp.status, 200, "{}", resp.text());
+                assert_eq!(resp.header("content-type"), Some("text/event-stream"));
+                let events = sse_events(&resp.text());
+                assert_eq!(events.first().map(|(n, _)| n.as_str()), Some("queued"));
+
+                // the admission-time exact cost, recomputed independently
+                let want = exact_cost(&mcfg, &default_cfg(), i as u64).unwrap() as f64;
+                let queued_total = field(&events[0].1, "nfe_total");
+                assert_eq!(queued_total, want, "queued frame carries the exact |𝒯|");
+
+                let (_, done) = events
+                    .iter()
+                    .find(|(n, _)| n == "done")
+                    .unwrap_or_else(|| panic!("no done event in {events:?}"));
+                let last_progress = events
+                    .iter()
+                    .rev()
+                    .find(|(n, _)| n == "progress")
+                    .unwrap_or_else(|| panic!("no progress event in {events:?}"));
+                // conservation: admission cost == final progress == done
+                assert_eq!(field(&last_progress.1, "nfe_total"), want);
+                assert_eq!(field(&last_progress.1, "nfe_done"), want);
+                assert_eq!(field(done, "nfe"), want);
+                want as u64
+            })
+        })
+        .collect();
+    let costs: Vec<u64> = clients.into_iter().map(|c| c.join().expect("client thread")).collect();
+    assert!(costs.iter().all(|&c| c > 0), "every request cost at least one call");
+
+    let stats = router.stats().expect("stats");
+    assert_eq!(stats.requests, 8);
+    assert_eq!(stats.cancelled, 0);
+    assert_eq!(stats.ghost_events_fired, 0);
+    // conservation on the server side too: mean retired per-request NFE
+    // is exactly the mean of the admission-time costs (boundary batching
+    // may merge lanes into shared denoiser calls, so nn_calls itself can
+    // be smaller — but never larger than the summed costs)
+    let mean_cost = costs.iter().sum::<u64>() as f64 / costs.len() as f64;
+    assert!(
+        (stats.avg_request_nfe - mean_cost).abs() < 1e-9,
+        "avg_request_nfe {} != mean admission cost {mean_cost}",
+        stats.avg_request_nfe
+    );
+    assert!(stats.nn_calls > 0 && stats.nn_calls <= costs.iter().sum::<u64>());
+    teardown(router, server);
+}
+
+// ---------------------------------------------------------------------------
+// acceptance: exact-cost load shedding never consumes compute
+// ---------------------------------------------------------------------------
+
+/// With the EWMA seeded at 1 s/NFE, a 1 ms deadline is provably
+/// unmeetable: the front door answers `503` + `Retry-After` and the
+/// router never sees the request — `nn_calls` stays 0.
+#[test]
+fn unmeetable_deadline_is_rejected_without_a_denoiser_call() {
+    let policy = AdmissionPolicy {
+        rate_limit: None,
+        initial_us_per_nfe: 1_000_000.0,
+        ewma_alpha: 0.2,
+    };
+    let (router, server, _) = front(policy, 1);
+    let addr = server.local_addr();
+    for seed in 0..3 {
+        let resp = post_generate(
+            addr,
+            &format!("{{\"seed\":{seed},\"src\":\"{SRC}\",\"deadline_ms\":1}}"),
+        );
+        assert_eq!(resp.status, 503, "{}", resp.text());
+        assert!(resp.header("retry-after").is_some(), "503 must carry Retry-After");
+        assert!(resp.text().contains("deadline unmeetable"), "{}", resp.text());
+    }
+    let stats = router.stats().expect("stats");
+    assert_eq!(stats.requests, 0, "rejected requests never reach the router");
+    assert_eq!(stats.nn_calls, 0, "rejected requests never consume a denoiser call");
+
+    let scrape = get(addr, "/metrics");
+    let metrics = parse_text(&scrape.text()).expect("metrics parse");
+    assert_eq!(metrics["dndm_rejected_deadline_total"], 3.0);
+    assert_eq!(metrics["dndm_nn_calls_total"], 0.0);
+    teardown(router, server);
+}
+
+/// Per-tenant token bucket: a no-refill bucket of 2 admits two requests
+/// and 429s the third with `Retry-After`; an unrelated tenant is
+/// unaffected.
+#[test]
+fn tenant_rate_limit_rejects_with_429() {
+    let policy = AdmissionPolicy {
+        rate_limit: Some(RateLimit { burst: 2.0, per_sec: 0.0 }),
+        ..AdmissionPolicy::default()
+    };
+    let (router, server, _) = front(policy, 1);
+    let addr = server.local_addr();
+    let body = |tenant: &str, seed: u64| {
+        format!("{{\"seed\":{seed},\"src\":\"{SRC}\",\"tenant\":\"{tenant}\"}}")
+    };
+    assert_eq!(post_generate(addr, &body("acme", 0)).status, 200);
+    assert_eq!(post_generate(addr, &body("acme", 1)).status, 200);
+    let rejected = post_generate(addr, &body("acme", 2));
+    assert_eq!(rejected.status, 429, "{}", rejected.text());
+    assert!(rejected.header("retry-after").is_some());
+    assert_eq!(post_generate(addr, &body("other", 3)).status, 200, "tenants are independent");
+
+    let stats = router.stats().expect("stats");
+    assert_eq!(stats.requests, 3, "the 429 never reached the router");
+    assert_eq!(
+        stats.tenant_requests,
+        vec![("acme".to_string(), 2), ("other".to_string(), 1)]
+    );
+    teardown(router, server);
+}
+
+// ---------------------------------------------------------------------------
+// acceptance: /metrics parses and matches Router::stats()
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_scrape_parses_and_matches_router_stats() {
+    let (router, server, _) = front(no_limits(), 2);
+    let addr = server.local_addr();
+    for seed in 0..4u64 {
+        let resp = post_generate(
+            addr,
+            &format!("{{\"seed\":{seed},\"src\":\"{SRC}\",\"tenant\":\"acme\"}}"),
+        );
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        assert!(field(&resp.text(), "nfe") > 0.0);
+    }
+    let scrape = get(addr, "/metrics");
+    assert_eq!(scrape.status, 200);
+    assert!(scrape.header("content-type").unwrap_or("").starts_with("text/plain"));
+    let metrics = parse_text(&scrape.text()).expect("scrape must parse as Prometheus text");
+
+    let stats = router.stats().expect("stats");
+    assert_eq!(metrics["dndm_requests_total"], stats.requests as f64);
+    assert_eq!(metrics["dndm_nn_calls_total"], stats.nn_calls as f64);
+    assert_eq!(metrics["dndm_batches_total"], stats.batches as f64);
+    assert_eq!(metrics["dndm_cancelled_total"], stats.cancelled as f64);
+    assert_eq!(metrics["dndm_ghost_events_fired_total"], 0.0);
+    assert_eq!(metrics["dndm_healthy"], 1.0);
+    assert_eq!(metrics["dndm_tenant_requests_total{tenant=\"acme\"}"], 4.0);
+    assert_eq!(metrics["dndm_rejected_deadline_total"], 0.0);
+    assert_eq!(metrics["dndm_rejected_rate_limit_total"], 0.0);
+
+    assert_eq!(get(addr, "/healthz").status, 200);
+    teardown(router, server);
+}
+
+// ---------------------------------------------------------------------------
+// transport conformance over real sockets
+// ---------------------------------------------------------------------------
+
+#[test]
+fn protocol_errors_status_codes() {
+    let (router, server, _) = front(no_limits(), 1);
+    let addr = server.local_addr();
+
+    // POST without Content-Length → 411
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(conn, "POST /v1/generate HTTP/1.1\r\nhost: t\r\n\r\n").unwrap();
+    let mut r = BufReader::new(conn);
+    assert_eq!(read_response(&mut r).status, 411);
+
+    // oversized header block → 431
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(conn, "GET /healthz HTTP/1.1\r\nx-big: {}\r\n\r\n", "v".repeat(64 * 1024)).unwrap();
+    let mut r = BufReader::new(conn);
+    assert_eq!(read_response(&mut r).status, 431);
+
+    // malformed JSON → 400; unknown path → 404; wrong method → 405
+    assert_eq!(post_generate(addr, "{not json").status, 400);
+    assert_eq!(get(addr, "/nope").status, 404);
+    assert_eq!(get(addr, "/v1/generate").status, 405);
+    teardown(router, server);
+}
+
+/// Two pipelined requests on one keep-alive connection are answered in
+/// order on that same connection.
+#[test]
+fn pipelined_keep_alive_requests_are_served_in_order() {
+    let (router, server, _) = front(no_limits(), 1);
+    let addr = server.local_addr();
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\nGET /metrics HTTP/1.1\r\nhost: t\r\n\r\n"
+    )
+    .unwrap();
+    let mut r = BufReader::new(conn);
+    let first = read_response(&mut r);
+    assert_eq!(first.status, 200);
+    assert_eq!(first.text(), "ok\n");
+    let second = read_response(&mut r);
+    assert_eq!(second.status, 200);
+    assert!(second.text().contains("dndm_requests_total"), "second response is the scrape");
+    teardown(router, server);
+}
+
+// ---------------------------------------------------------------------------
+// disconnect-driven cancellation
+// ---------------------------------------------------------------------------
+
+/// A client that vanishes mid-stream must not keep burning denoiser
+/// calls: the SSE pump's write error cancels the ticket, the scheduler
+/// drops the lane at the next boundary, and the ghost-event pin holds.
+#[test]
+fn mid_stream_disconnect_cancels_the_request() {
+    let (router, server, _) = front(no_limits(), 1);
+    let addr = server.local_addr();
+
+    // D3PM marches every step, so 200k steps is a predictably long-lived
+    // request (same trick as the rebalance suite)
+    let body = format!(
+        "{{\"seed\":5,\"src\":\"{SRC}\",\"stream\":true,\"sampler\":\"d3pm\",\"steps\":200000}}"
+    );
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    // read just the head + the first chunk (the queued frame), then vanish
+    let mut r = BufReader::new(conn.try_clone().expect("clone"));
+    let (status, _) = read_head(&mut r);
+    assert_eq!(status, 200);
+    let mut size = String::new();
+    r.read_line(&mut size).expect("first chunk size");
+    drop(r);
+    conn.shutdown(std::net::Shutdown::Both).ok();
+    drop(conn);
+
+    // the write error cancels the ticket; the lane retires at the next
+    // boundary — without ever having fired an event with zero movers
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let stats = loop {
+        let stats = router.stats().expect("stats");
+        if stats.cancelled == 1 && stats.in_flight == 0 {
+            break stats;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "disconnect never cancelled the request: {stats:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(stats.ghost_events_fired, 0);
+    assert!(
+        stats.nn_calls < 200_000,
+        "cancellation must beat the 200k-step schedule ({} calls)",
+        stats.nn_calls
+    );
+    teardown(router, server);
+}

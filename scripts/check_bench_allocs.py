@@ -25,6 +25,15 @@ a rate far below the breaker threshold, so the retry policy must absorb all
 of them (docs/robustness.md). A fatal fault or an open breaker on any bench
 row means fault classification or the retry ladder regressed.
 
+`rejected_rate_limit` / `rejected_deadline` are gated both ways
+(docs/http.md): rows whose policy name does not contain "admission" run
+with no admission controller in front, so any nonzero rejection count
+there means accounting leaked across scenarios. The "admission" row runs a
+deterministic over-capacity burst (no-refill token bucket + a deadline the
+exact-cost projection cannot meet once the backlog grows), so BOTH
+counters must be strictly positive — zero means the shed path silently
+stopped shedding.
+
 Ratchet policy (see the baseline file): ceilings start generous; once the
 uploaded BENCH_serving.json artifacts record a stable trajectory, lower
 each ceiling to ~1.5x the observed steady value.
@@ -62,6 +71,17 @@ def main() -> int:
             if bad is not None and bad != 0:
                 print(f"{policy:28s} {field} {bad}  FAULT ESCALATION (must be 0)")
                 failures.append(policy)
+        is_admission = "admission" in policy
+        for field in ("rejected_rate_limit", "rejected_deadline"):
+            count = row.get(field)
+            if count is None:
+                continue
+            if is_admission and count == 0:
+                print(f"{policy:28s} {field} {count}  ADMISSION DID NOT SHED (must be > 0)")
+                failures.append(policy)
+            elif not is_admission and count != 0:
+                print(f"{policy:28s} {field} {count}  REJECTION LEAK (must be 0)")
+                failures.append(policy)
         value = row["allocs_per_call"]
         if policy not in ceilings:
             print(f"{policy:28s} allocs/call {value:9.1f}  (no ceiling — not gated)")
@@ -86,10 +106,12 @@ def main() -> int:
         print("lane-narrowing correctness bug; fix it. Likewise faults_fatal /")
         print("breaker_open: the bench injects transient faults only, so either")
         print("means fault classification or the retry ladder regressed.")
+        print("rejected_* counts must be 0 off the admission row and > 0 on it:")
+        print("the admission burst is sized to shed deterministically (docs/http.md).")
         return 1
     print(
         "\nbench gate passed (allocs/call ceilings + ghost_events_fired == 0"
-        " + faults_fatal == 0 + breaker_open == 0)"
+        " + faults_fatal == 0 + breaker_open == 0 + admission sheds, others don't)"
     )
     return 0
 
