@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     while let Some(event) = ticket.next_event() {
         match event {
-            Event::Admitted => println!("admitted into the in-flight batch"),
+            Event::Admitted { .. } => println!("admitted into the in-flight batch"),
             Event::Progress { nfe_done, nfe_total, partial_tokens } => {
                 let resolved = partial_tokens.iter().filter(|&&t| t != 2).count();
                 println!(

@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
             match t.next_event() {
                 Some(Event::Progress { .. }) => progress_events += 1,
                 Some(Event::Done(out)) => break out,
-                Some(Event::Admitted) => {}
+                Some(Event::Admitted { .. }) => {}
                 Some(other) => anyhow::bail!("request {i} ended early: {other:?}"),
                 None => anyhow::bail!("request {i} stream ended without a result"),
             }

@@ -32,7 +32,7 @@ use std::time::{Duration, Instant};
 
 use dndm::coordinator::{
     cipher_mock_denoiser, BatchPolicy, Engine, Event, FaultPolicy, GenRequest, SchedPolicy,
-    Server, ServerStats,
+    Server, ServerStats, Tier,
 };
 use dndm::data::{gen_pairs, words, Dataset, Split};
 use dndm::exp;
@@ -127,6 +127,17 @@ struct Row {
     /// requests shed because the exact cost projection exceeded their
     /// deadline (HTTP 503). Same gating as `rejected_rate_limit`.
     rejected_deadline: u64,
+    /// rows that exited their lane early because every remaining
+    /// transition was provably a no-op (`docs/tiers.md`) — an NFE refund.
+    /// Strictly positive on the tiered row (its Balanced third runs the
+    /// absorbing D3pm chain, which settles before its last steps), 0
+    /// everywhere else; CI gates both ways
+    /// (`scripts/check_bench_allocs.py`).
+    early_retired: u64,
+    /// transition times dropped by Turbo truncation before serving.
+    /// Strictly positive on the tiered row (its Turbo third caps |𝒯| at
+    /// 2), 0 everywhere else; same both-ways gating.
+    turbo_truncated_nfe: u64,
 }
 
 /// One row from a finished run: throughput from the wall clock, the rest
@@ -155,6 +166,8 @@ fn make_row(
         lanes_salvaged: stats.lanes_salvaged,
         rejected_rate_limit: 0,
         rejected_deadline: 0,
+        early_retired: stats.early_retired,
+        turbo_truncated_nfe: stats.turbo_truncated_nfe,
     }
 }
 
@@ -255,7 +268,7 @@ fn run_narrowing(name: &'static str, n_requests: usize, steps: usize, use_mock: 
                     t.cancel();
                     break;
                 }
-                Some(Event::Admitted) => {}
+                Some(Event::Admitted { .. }) => {}
                 _ => break, // already terminal (finished before we got here)
             }
         }
@@ -405,6 +418,76 @@ fn run_admission(name: &'static str, n_requests: usize, steps: usize) -> Row {
     row
 }
 
+/// The tiered-mix scenario (docs/tiers.md): one continuous server with
+/// per-request lanes serving all three tiers at once — ⅓ Quality
+/// (default DNDM, full ladder, never early-retired), ⅓ Balanced
+/// (absorbing D3PM with a generous SLO; tier opts the rows into early
+/// retirement, and on the cipher mock the chain settles well before its
+/// last steps, so `early_retired` must come out strictly positive), ⅓
+/// Turbo (DNDM with |𝒯| capped at 2, so `turbo_truncated_nfe` must be
+/// strictly positive). Always mock-backed: both assertions lean on the
+/// deterministic cipher denoiser. The bench drives the router surface
+/// below the front door, so Turbo requests carry the capped config the
+/// admission tier search would have pinned (`Admission::resolve_tier`).
+fn run_tiered(name: &'static str, n_requests: usize, steps: usize) -> Row {
+    let dndm_cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let (srv, join) = Server::start_continuous(
+        factory(true),
+        dndm_cfg.clone(),
+        SchedPolicy {
+            max_batch: 16,
+            window: Duration::from_millis(20),
+            // per-request lanes, as tiered serving runs in production:
+            // admission-time |𝒯| == served NFE, and capped ladders never
+            // share a lane with uncapped ones (SpecKey carries max_nfe)
+            shared_tau_groups: false,
+        },
+    );
+    let pairs = gen_pairs(Dataset::Iwslt14, Split::Test, n_requests);
+    let allocs0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(i, (s, _))| {
+            let req = GenRequest::new(i as u64).src(s.join(" "));
+            let req = match i % 3 {
+                0 => req, // Quality: server-default config, full ladder
+                1 => req
+                    .config(SamplerConfig::new(SamplerKind::D3pm, 30))
+                    .tier(Tier::Balanced { slo_ms: 60_000 }),
+                _ => req
+                    .config(dndm_cfg.clone().with_max_nfe(2))
+                    .tier(Tier::Turbo { max_nfe: 2 }),
+            };
+            srv.submit_request(req).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("tiered request must finish");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let stats = srv.stats().unwrap();
+    srv.shutdown();
+    join.join();
+    let row = make_row(name, n_requests, wall, allocs, &stats);
+    assert!(
+        row.early_retired > 0,
+        "Balanced third must early-retire settled absorbing rows (got 0)"
+    );
+    assert!(
+        row.turbo_truncated_nfe > 0,
+        "Turbo third must truncate transition times (got 0)"
+    );
+    println!(
+        "[serving_throughput] tiered mix: {} rows early-retired, \
+         {} transition times turbo-truncated",
+        row.early_retired, row.turbo_truncated_nfe
+    );
+    row
+}
+
 /// Cheap engine-init probe: loads artifacts + weights but skips the
 /// expensive per-bucket warmup compilation the real factory does.
 fn probe_real_engine() -> anyhow::Result<()> {
@@ -435,7 +518,8 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
              \"allocs_per_call\": {:.1}, \"ghost_events_fired\": {}, \"retries\": {}, \
              \"faults_transient\": {}, \"faults_fatal\": {}, \"breaker_open\": {}, \
              \"lanes_salvaged\": {}, \"rejected_rate_limit\": {}, \
-             \"rejected_deadline\": {}}}{}\n",
+             \"rejected_deadline\": {}, \"early_retired\": {}, \
+             \"turbo_truncated_nfe\": {}}}{}\n",
             r.name,
             r.req_per_s,
             r.e2e_p95_ms,
@@ -451,6 +535,8 @@ fn save_json(rows: &[Row], backend: &str, n: usize, steps: usize) {
             r.lanes_salvaged,
             r.rejected_rate_limit,
             r.rejected_deadline,
+            r.early_retired,
+            r.turbo_truncated_nfe,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -502,6 +588,7 @@ fn main() {
     rows.push(run_narrowing("continuous b=16 narrowing", n, steps, use_mock));
     rows.push(run_chaos("continuous b=16 chaos", n, steps));
     rows.push(run_admission("continuous b=16 admission burst", n, steps));
+    rows.push(run_tiered("continuous b=16 tiered mix", n, steps));
 
     let mut out = Table::new(&[
         "policy", "req/s", "e2e p95(ms)", "NN calls", "req NFE", "host µs/NFE", "allocs/call",

@@ -41,7 +41,7 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{cipher_mock_denoiser, cipher_mock_engine, Engine, GenOutput};
 pub use rebalancer::RebalancePolicy;
-pub use request::{CancelHandle, Event, GenRequest, Priority, Ticket, TicketSink};
+pub use request::{CancelHandle, Event, GenRequest, Priority, Ticket, TicketSink, Tier, TierDecision};
 pub use router::{Router, ServeBuilder};
 pub use scheduler::{
     Delivery, DonatedLane, FaultPolicy, Finished, LaneInfo, Outcome, Pending, SchedPolicy,

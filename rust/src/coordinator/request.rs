@@ -44,6 +44,37 @@ pub enum Priority {
     High,
 }
 
+/// Serving tier of a request (`docs/tiers.md`). The tier is *policy*, not
+/// mechanism: admission resolves it into a concrete [`SamplerConfig`] (and
+/// a [`TierDecision`] echo) before the scheduler ever sees the request.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Tier {
+    /// Serve the requested spec untouched — byte-identical to the
+    /// pre-tier path. The default: every existing call site is `Quality`.
+    #[default]
+    Quality,
+    /// Admission searches the spec space (step count × transition spec)
+    /// for the highest-NFE candidate whose projected latency on the best
+    /// shard meets the SLO; an unmeetable SLO is rejected with zero NN
+    /// calls spent.
+    Balanced { slo_ms: u64 },
+    /// Hard-cap per-row |𝒯| at `max_nfe` by deterministic Turbo
+    /// truncation (DNDM ladders) or step lowering (step-marching kinds).
+    Turbo { max_nfe: usize },
+}
+
+/// What admission decided for a tiered request — echoed to the client in
+/// the SSE `admitted` event and the blocking JSON response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierDecision {
+    /// name of the spec actually served, e.g. `"beta:15:7"` / `"uniform"`
+    pub chosen_spec: String,
+    /// exact |𝒯| the request will be charged and served
+    pub projected_nfe: u64,
+    /// projected completion latency on the placed shard, in ms
+    pub projected_ms: u64,
+}
+
 /// A typed generation request — the builder behind
 /// [`Server::submit_request`](super::server::Server::submit_request) and
 /// [`Router::submit_request`](super::router::Router::submit_request).
@@ -69,6 +100,10 @@ pub struct GenRequest {
     pub(crate) priority: Priority,
     pub(crate) stream: bool,
     pub(crate) tenant: Option<String>,
+    pub(crate) tier: Tier,
+    /// what admission decided (filled by the front door / tier resolver;
+    /// `None` on every untiered path)
+    pub(crate) decision: Option<TierDecision>,
 }
 
 impl GenRequest {
@@ -83,6 +118,8 @@ impl GenRequest {
             priority: Priority::Normal,
             stream: false,
             tenant: None,
+            tier: Tier::Quality,
+            decision: None,
         }
     }
 
@@ -125,6 +162,21 @@ impl GenRequest {
         self
     }
 
+    /// Serving tier ([`Tier`], `docs/tiers.md`). [`Tier::Quality`] — the
+    /// default — leaves the requested spec untouched, so every pre-tier
+    /// call site keeps its exact behavior.
+    pub fn tier(mut self, tier: Tier) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    /// Shorthand for `.tier(Tier::Balanced { slo_ms })`: let admission
+    /// pick the cheapest spec meeting this latency SLO.
+    pub fn latency_slo_ms(mut self, slo_ms: u64) -> Self {
+        self.tier = Tier::Balanced { slo_ms };
+        self
+    }
+
     /// Subscribe to partial tokens: every [`Event::Progress`] carries the
     /// request's current `x_t`. Off by default — unsubscribed progress
     /// events still report `nfe_done`/`nfe_total` but skip the token copy.
@@ -138,7 +190,9 @@ impl GenRequest {
 #[derive(Debug, Clone)]
 pub enum Event {
     /// The request joined an in-flight batch at a transition-time boundary.
-    Admitted,
+    /// `decision` carries what admission resolved for a tiered request
+    /// (`None` on every untiered path).
+    Admitted { decision: Option<TierDecision> },
     /// A boundary the request participated in has completed. `partial_tokens`
     /// is the request's current `x_t` when the client subscribed via
     /// [`GenRequest::stream_partials`] (empty otherwise). Progress coalesces:
@@ -178,6 +232,8 @@ impl Terminal {
 /// The coalescing snapshot shared by ticket and sink.
 struct SinkState {
     admitted: bool,
+    /// tier decision to echo with [`Event::Admitted`]
+    decision: Option<TierDecision>,
     nfe_done: usize,
     nfe_total: usize,
     /// reused partial-token scratch — overwritten, never reallocated after
@@ -207,12 +263,14 @@ fn lock(shared: &Shared) -> MutexGuard<'_, SinkState> {
 pub(crate) fn lifecycle(
     stream: bool,
     load: Option<Arc<AtomicUsize>>,
+    decision: Option<TierDecision>,
 ) -> (Ticket, TicketSink) {
     let shared = Arc::new(Shared {
         cancelled: AtomicBool::new(false),
         stream,
         state: Mutex::new(SinkState {
             admitted: false,
+            decision,
             nfe_done: 0,
             nfe_total: 0,
             partial: Vec::new(),
@@ -242,7 +300,7 @@ impl Ticket {
     /// tests, custom serving loops): put the sink in
     /// [`Pending::ctl`](super::scheduler::Pending) and drive `tick()`.
     pub fn detached(stream: bool) -> (Ticket, TicketSink) {
-        lifecycle(stream, None)
+        lifecycle(stream, None, None)
     }
 
     /// Request cancellation. Queue-side the request is dropped before
@@ -318,7 +376,7 @@ impl Ticket {
     fn diff(&mut self, st: &SinkState) -> Option<Event> {
         if st.admitted && !self.seen_admitted {
             self.seen_admitted = true;
-            return Some(Event::Admitted);
+            return Some(Event::Admitted { decision: st.decision.clone() });
         }
         if st.nfe_done > self.seen_nfe {
             self.seen_nfe = st.nfe_done;
@@ -465,16 +523,21 @@ mod tests {
         assert_eq!(req.priority, Priority::Normal);
         assert!(!req.stream);
         assert!(req.tenant.is_none());
+        assert_eq!(req.tier, Tier::Quality);
+        assert!(req.decision.is_none());
         let req = req
             .src("hello")
             .deadline(Duration::from_millis(5))
             .priority(Priority::High)
             .tenant("acme")
+            .latency_slo_ms(250)
             .stream_partials();
         assert_eq!(req.src.as_deref(), Some("hello"));
         assert_eq!(req.priority, Priority::High);
         assert!(req.stream && req.deadline.is_some());
         assert_eq!(req.tenant.as_deref(), Some("acme"));
+        assert_eq!(req.tier, Tier::Balanced { slo_ms: 250 });
+        assert_eq!(req.tier(Tier::Turbo { max_nfe: 4 }).tier, Tier::Turbo { max_nfe: 4 });
     }
 
     #[test]
@@ -489,7 +552,7 @@ mod tests {
         sink.set_admitted();
         sink.progress(1, 4, Some(&[5, 5]));
         sink.progress(2, 4, Some(&[5, 6]));
-        assert!(matches!(t.try_next_event(), Some(Event::Admitted)));
+        assert!(matches!(t.try_next_event(), Some(Event::Admitted { .. })));
         // the two progress writes coalesced into the latest snapshot
         match t.try_next_event() {
             Some(Event::Progress { nfe_done, nfe_total, partial_tokens }) => {
@@ -557,7 +620,7 @@ mod tests {
     #[test]
     fn load_decrements_exactly_once_at_terminal() {
         let load = Arc::new(AtomicUsize::new(1));
-        let (_t, sink) = lifecycle(false, Some(load.clone()));
+        let (_t, sink) = lifecycle(false, Some(load.clone()), None);
         sink.finish_cancelled();
         assert_eq!(load.load(Ordering::Relaxed), 0);
         drop(sink); // drop guard must not decrement again
@@ -568,7 +631,7 @@ mod tests {
     fn retarget_load_moves_the_gauge_and_the_terminal_decrement() {
         let donor = Arc::new(AtomicUsize::new(1));
         let thief = Arc::new(AtomicUsize::new(0));
-        let (_t, sink) = lifecycle(false, Some(donor.clone()));
+        let (_t, sink) = lifecycle(false, Some(donor.clone()), None);
         sink.retarget_load(thief.clone());
         assert_eq!(donor.load(Ordering::Relaxed), 0, "donor released on steal");
         assert_eq!(thief.load(Ordering::Relaxed), 1, "thief acquired on steal");
@@ -581,7 +644,7 @@ mod tests {
     fn retarget_load_after_terminal_is_a_no_op() {
         let donor = Arc::new(AtomicUsize::new(1));
         let thief = Arc::new(AtomicUsize::new(0));
-        let (_t, sink) = lifecycle(false, Some(donor.clone()));
+        let (_t, sink) = lifecycle(false, Some(donor.clone()), None);
         sink.finish_cancelled();
         assert_eq!(donor.load(Ordering::Relaxed), 0);
         sink.retarget_load(thief.clone());
@@ -597,7 +660,7 @@ mod tests {
             sink.progress(1, 2, None);
             sink.finish_cancelled();
         });
-        assert!(matches!(t.next_event(), Some(Event::Admitted)));
+        assert!(matches!(t.next_event(), Some(Event::Admitted { .. })));
         assert!(matches!(t.next_event(), Some(Event::Progress { nfe_done: 1, .. })));
         assert!(matches!(t.next_event(), Some(Event::Cancelled)));
         assert!(t.next_event().is_none());

@@ -288,6 +288,36 @@ impl Router {
         self.shards[idx].server.submit_ticketed(req, Some(load)).map(|t| (t, idx))
     }
 
+    /// Submit to an explicitly chosen shard, bypassing the placement
+    /// policy. This is the serve half of admission-aware placement
+    /// (`docs/tiers.md`): the front door's
+    /// [`place_and_charge`](crate::net::Admission::place_and_charge)
+    /// picks the shard with the lowest *projected wait* (backlog NFE ×
+    /// that shard's EWMA µs/NFE) and charges it, then routes here — so
+    /// the charge and the serve land on the same shard by construction
+    /// instead of via the peek-then-charge race. The affinity table is
+    /// refreshed toward the chosen shard so later same-spec requests
+    /// placed by [`Self::submit_request`] keep batching with it.
+    pub fn submit_request_to(&self, shard: usize, req: GenRequest) -> Result<Ticket> {
+        let n = self.shards.len();
+        if shard >= n {
+            return Err(anyhow!("shard {shard} out of range ({n} shards)"));
+        }
+        let key = SpecKey::of(req.cfg.as_ref().unwrap_or(&self.default_cfg));
+        {
+            let mut aff = self.affinity.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(pos) = aff.iter().position(|(k, _)| k == &key) {
+                aff.remove(pos);
+            } else if aff.len() >= AFFINITY_CAP {
+                aff.remove(0);
+            }
+            aff.push((key, shard));
+        }
+        let load = self.shards[shard].load.clone();
+        load.fetch_add(1, Ordering::Relaxed);
+        self.shards[shard].server.submit_ticketed(req, Some(load))
+    }
+
     /// Where would [`Self::submit_request`] place this request *right
     /// now*? A pure read: neither the affinity table nor the round-robin
     /// cursor moves, so peeking is free to call on every admission
@@ -539,7 +569,7 @@ mod tests {
         let mut saw_done = false;
         while let Some(ev) = t.next_event() {
             match ev {
-                Event::Admitted => {}
+                Event::Admitted { .. } => {}
                 Event::Done(out) => {
                     assert!(!out.tokens.is_empty());
                     saw_done = true;
@@ -598,6 +628,26 @@ mod tests {
         let merged = router.stats().unwrap();
         assert_eq!(merged.stolen, 2);
         assert_eq!(merged.queued_low + merged.queued_normal + merged.queued_high, 0);
+        router.shutdown();
+        router.join();
+    }
+
+    #[test]
+    fn submit_request_to_targets_the_exact_shard_and_refreshes_affinity() {
+        let router = builder().continuous(policy()).shards(2).start();
+        let out = router
+            .submit_request_to(1, GenRequest::new(5).src("the quick fox"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(out.nfe >= 1);
+        // the explicit placement refreshed affinity: the same spec now
+        // prefers shard 1 through the normal placement path too
+        router.generate(GenRequest::new(6).src("the quick fox")).unwrap();
+        let per_shard = router.shard_stats().unwrap();
+        let reqs: Vec<u64> = per_shard.iter().map(|s| s.requests).collect();
+        assert_eq!(reqs, vec![0, 2], "explicit shard serves; affinity follows it");
+        assert!(router.submit_request_to(9, GenRequest::new(7)).is_err());
         router.shutdown();
         router.join();
     }

@@ -170,6 +170,14 @@ pub struct Pending<P> {
     /// [`GenOutput`] into the sink instead of cloning it — see
     /// [`Delivery::SinkOwned`].
     pub wants_result: bool,
+    /// Opt in to confidence-based early retirement (`docs/tiers.md`): at
+    /// every boundary after the request's row advanced, the scheduler asks
+    /// its session whether the row's remaining events are provably no-ops
+    /// and, if so, finishes the request right there — refunding the
+    /// remaining denoiser calls. `false` (the default and every untiered
+    /// path) keeps the full schedule, byte-identical to the pre-tier
+    /// scheduler; the front door sets it for `Balanced`/`Turbo` requests.
+    pub early_retire: bool,
     pub payload: P,
 }
 
@@ -192,6 +200,7 @@ impl<P> Pending<P> {
             ctl: None,
             tenant: None,
             wants_result: true,
+            early_retire: false,
             payload,
         }
     }
@@ -204,6 +213,7 @@ struct Member<P> {
     deadline: Option<Instant>,
     enqueued: Instant,
     admitted: Instant,
+    early_retire: bool,
 }
 
 /// One co-admitted group: a session of `members.len()` sequences (the two
@@ -402,6 +412,9 @@ pub struct SpecKey {
     order: TransitionOrder,
     temperature: f32,
     shared_tau: bool,
+    /// Turbo truncation cap — it reshapes the event ladder, so capped and
+    /// uncapped requests must not share a lane.
+    max_nfe: Option<usize>,
 }
 
 impl SpecKey {
@@ -414,6 +427,7 @@ impl SpecKey {
             order: cfg.order,
             temperature: cfg.temperature,
             shared_tau: cfg.shared_tau,
+            max_nfe: cfg.max_nfe,
         }
     }
 }
@@ -472,6 +486,12 @@ pub struct Scheduler<P> {
     breaker_open: bool,
     /// when the breaker (last) opened, for the cooldown-then-probe cycle
     breaker_opened_at: Option<Instant>,
+    /// cumulative: members finished by confidence-based early retirement
+    /// ([`Pending::early_retire`], `docs/tiers.md`)
+    early_retired: u64,
+    /// cumulative: merged events dropped by Turbo truncation across every
+    /// lane built here ([`SamplerConfig::max_nfe`])
+    turbo_truncated: u64,
 }
 
 impl<P> Scheduler<P> {
@@ -494,6 +514,8 @@ impl<P> Scheduler<P> {
             fail_streak: 0,
             breaker_open: false,
             breaker_opened_at: None,
+            early_retired: 0,
+            turbo_truncated: 0,
         }
     }
 
@@ -539,6 +561,19 @@ impl<P> Scheduler<P> {
     /// Cumulative denoiser attempts that failed fatally.
     pub fn faults_fatal(&self) -> u64 {
         self.faults_fatal
+    }
+
+    /// Members finished by confidence-based early retirement — their
+    /// remaining events were provably no-ops and were refunded
+    /// (`docs/tiers.md`).
+    pub fn early_retired(&self) -> u64 {
+        self.early_retired
+    }
+
+    /// Merged events dropped by Turbo truncation across every lane built
+    /// on this scheduler ([`SamplerConfig::max_nfe`]).
+    pub fn turbo_truncated(&self) -> u64 {
+        self.turbo_truncated
     }
 
     /// True while the circuit breaker is open: [`Self::tick`] makes no
@@ -942,6 +977,9 @@ impl<P> Scheduler<P> {
                     return;
                 }
             };
+        // counted at construction (the only place truncation happens);
+        // donated lanes were already counted by their builder
+        self.turbo_truncated += session.truncated_events() as u64;
         if session.is_done() {
             // degenerate spec (e.g. 0 steps): nothing to denoise — complete
             // immediately with x_T as drawn
@@ -998,6 +1036,7 @@ impl<P> Scheduler<P> {
                     deadline: p.deadline,
                     enqueued: p.enqueued,
                     admitted: now,
+                    early_retire: p.early_retire,
                 }
             })
             .collect();
@@ -1275,6 +1314,64 @@ impl<P> Scheduler<P> {
                     let tokens =
                         ctl.wants_partials().then(|| lane.session.x().row(j));
                     ctl.progress(nfe, total, tokens);
+                }
+            }
+            // early retirement (serving tiers, docs/tiers.md): an opted-in
+            // member whose row provably has only no-op events left exits
+            // NOW through the eviction path — its remaining calls are
+            // refunded to this shard. Each row is probed against the same
+            // logits slice its advance just consumed; walking from the
+            // back keeps the surviving rows' view indices aligned with
+            // their session rows across evictions.
+            let probe =
+                lane.members.iter().any(|m| m.early_retire) && !lane.session.is_done();
+            if probe {
+                let lane_view = view.narrow(off - w, w);
+                let mut j = self.lanes[i].members.len();
+                let mut died = false;
+                while j > 0 {
+                    j -= 1;
+                    let settled = self.lanes[i].members[j].early_retire
+                        && self.lanes[i].session.row_settled(j, lane_view);
+                    if !settled {
+                        continue;
+                    }
+                    let m = self.lanes[i].members.remove(j);
+                    let nfe = self.lanes[i].session.nfe();
+                    let wait = m.admitted.duration_since(m.enqueued);
+                    self.engine.nfe.record_request(nfe, wait);
+                    let tokens = self.lanes[i].session.x().row(j).to_vec();
+                    let output = GenOutput {
+                        text: self.engine.decode(&tokens),
+                        tokens,
+                        nfe,
+                        elapsed: m.admitted.elapsed(),
+                    };
+                    let delivered = deliver(m.ctl.as_ref(), m.wants_result, output);
+                    out.push(Finished {
+                        payload: m.payload,
+                        result: Ok(delivered),
+                        wait,
+                        outcome: Outcome::Done,
+                    });
+                    self.early_retired += 1;
+                    if self.lanes[i].members.is_empty() {
+                        // last member settled: the whole lane retires early
+                        self.engine.nfe.record_batch();
+                        died = true;
+                        break;
+                    }
+                    self.lanes[i]
+                        .session
+                        .evict_slot(j)
+                        .expect("evict within lane bounds");
+                    if let Some(src) = &mut self.lanes[i].src_ids {
+                        src.narrow_remove(j);
+                    }
+                }
+                if died {
+                    self.lanes.remove(i);
+                    continue; // off already advanced past this lane
                 }
             }
             i += 1;
@@ -1686,7 +1783,7 @@ mod tests {
         let out = done[0].result.as_ref().unwrap().output().unwrap();
         // the subscriber observed the full lifecycle, and its final
         // progress snapshot is exactly the finished tokens
-        assert!(matches!(ticket.try_next_event(), Some(Event::Admitted)));
+        assert!(matches!(ticket.try_next_event(), Some(Event::Admitted { .. })));
         match ticket.try_next_event() {
             Some(Event::Progress { nfe_done, nfe_total, partial_tokens }) => {
                 assert_eq!(nfe_done, out.nfe);
@@ -2150,6 +2247,79 @@ mod tests {
         assert!(!s.has_work());
         let msg = format!("{:#}", done[0].result.as_ref().unwrap_err());
         assert!(msg.contains("shard lost for good"), "{msg}");
+    }
+
+    #[test]
+    fn early_retirement_refunds_remaining_calls_for_settled_absorbing_rows() {
+        // D3pm-Absorb reveals everything well before the grid ends; with
+        // early_retire the request must finish at the first boundary where
+        // its row is mask-free — strictly fewer than `steps` calls — while
+        // the untiered twin still runs the full grid.
+        // A row whose last reveal lands on the very last step never gets a
+        // settled boundary, so sweep a few seeds: nearly all retire early,
+        // and every one must serve the same tokens as its untiered twin.
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 30);
+        let mut retired_early = 0u64;
+        for seed in 0..6u64 {
+            let mut s: Scheduler<usize> =
+                Scheduler::new(mock_engine(), cfg.clone(), policy(2));
+            let mut p = req(0, seed, None);
+            p.early_retire = true;
+            s.enqueue(p);
+            let mut done = Vec::new();
+            while s.has_work() {
+                done.extend(s.tick());
+            }
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].outcome, Outcome::Done);
+            let out = done[0].result.as_ref().unwrap().output().unwrap();
+            assert!(out.nfe >= 1 && out.nfe <= 30);
+            assert_eq!(s.ghost_events(), 0);
+            if out.nfe < 30 {
+                assert_eq!(s.early_retired(), 1);
+                assert_eq!(
+                    s.engine().nfe.calls(),
+                    out.nfe as u64,
+                    "refund: the shard stopped calling when the lane retired"
+                );
+                retired_early += 1;
+            }
+
+            // the opted-out twin serves the full grid — early_retire is
+            // the only thing that changed
+            let mut q: Scheduler<usize> = Scheduler::new(mock_engine(), cfg.clone(), policy(2));
+            q.enqueue(req(0, seed, None));
+            let mut full = Vec::new();
+            while q.has_work() {
+                full.extend(q.tick());
+            }
+            let fout = full[0].result.as_ref().unwrap().output().unwrap();
+            assert_eq!(fout.nfe, 30);
+            assert_eq!(q.early_retired(), 0);
+            assert_eq!(
+                fout.tokens, out.tokens,
+                "seed {seed}: retiring early must not change the served tokens"
+            );
+        }
+        assert!(retired_early >= 1, "no seed in 0..6 settled before the grid ended");
+    }
+
+    #[test]
+    fn turbo_truncation_is_counted_and_spec_keyed() {
+        let base = SamplerConfig::new(SamplerKind::Dndm, 200);
+        let capped = base.clone().with_max_nfe(2);
+        assert_ne!(SpecKey::of(&base), SpecKey::of(&capped), "caps must not share a lane");
+        let mut s: Scheduler<usize> = Scheduler::new(mock_engine(), base, policy(2));
+        s.enqueue(req(0, 11, Some(capped)));
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.tick());
+        }
+        assert_eq!(done.len(), 1);
+        let out = done[0].result.as_ref().unwrap().output().unwrap();
+        assert!(out.nfe <= 2, "Turbo cap bounds the served |𝒯|, got {}", out.nfe);
+        assert!(s.turbo_truncated() > 0, "a 200-step ladder capped at 2 must drop events");
+        assert_eq!(s.ghost_events(), 0);
     }
 
     #[test]

@@ -46,7 +46,7 @@ use crate::sampler::SamplerConfig;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{Engine, GenOutput};
-use super::request::{self, GenRequest, Priority, Ticket, TicketSink};
+use super::request::{self, GenRequest, Priority, Ticket, TicketSink, Tier};
 use super::scheduler::{
     Delivery, DonatedLane, FaultPolicy, Finished, Outcome, Pending, SchedPolicy, Scheduler,
 };
@@ -78,6 +78,10 @@ struct Request {
     ctl: Option<TicketSink>,
     tenant: Option<String>,
     enqueued: Instant,
+    /// opt into confidence-based early retirement (Balanced/Turbo tiers;
+    /// `docs/tiers.md`) — Quality requests must run their full ladder so
+    /// they stay byte-identical to the untiered path
+    early_retire: bool,
     reply: Reply,
 }
 
@@ -232,6 +236,14 @@ pub struct ServerStats {
     /// failover (cumulative; each arrived byte-exact at its next
     /// predetermined event)
     pub lanes_salvaged: u64,
+    /// requests retired before their ladder ran dry because every
+    /// remaining transition was provably a no-op (confidence-based
+    /// early retirement — opt-in for Balanced/Turbo tier requests; an
+    /// NFE *refund*, see `docs/tiers.md`; cumulative, continuous only)
+    pub early_retired: u64,
+    /// merged ladder events dropped by Turbo truncation across admitted
+    /// sessions (cumulative; continuous only — `docs/tiers.md`)
+    pub turbo_truncated_nfe: u64,
     /// `false` when this shard cannot serve: its engine factory failed at
     /// startup (or a failover restart failed), or its breaker is
     /// currently open. The rebalancer must treat such a shard as neither
@@ -285,6 +297,8 @@ impl ServerStats {
             out.faults_fatal += s.faults_fatal;
             out.breaker_open |= s.breaker_open;
             out.lanes_salvaged += s.lanes_salvaged;
+            out.early_retired += s.early_retired;
+            out.turbo_truncated_nfe += s.turbo_truncated_nfe;
             out.healthy &= s.healthy;
             for (tenant, n) in s.tenant_requests {
                 *tenants.entry(tenant).or_insert(0) += n;
@@ -379,7 +393,8 @@ impl Server {
         req: GenRequest,
         load: Option<Arc<AtomicUsize>>,
     ) -> Result<Ticket> {
-        let (ticket, sink) = request::lifecycle(req.stream, load);
+        let decision = req.decision.clone();
+        let (ticket, sink) = request::lifecycle(req.stream, load, decision);
         self.send_req(req, Some(sink), Reply::Ticket)?;
         Ok(ticket)
     }
@@ -448,6 +463,7 @@ impl Server {
                 ctl,
                 tenant: req.tenant,
                 enqueued: now,
+                early_retire: !matches!(req.tier, Tier::Quality),
                 reply,
             }))
             .map_err(|_| anyhow!("server is down"))
@@ -714,6 +730,8 @@ where
                     0,
                     0,
                     Faults::NONE,
+                    0,
+                    0,
                 ));
                 continue;
             }
@@ -853,6 +871,8 @@ fn shard_died(
         sched.in_flight(),
         sched.ghost_events(),
         Faults::of(sched),
+        sched.early_retired(),
+        sched.turbo_truncated(),
     );
     fail_engine_loop(rx, err, base);
 }
@@ -1230,6 +1250,8 @@ where
                 sched.in_flight(),
                 ghosts,
                 faults,
+                sched.early_retired(),
+                sched.turbo_truncated(),
             ));
             Flow::Continue
         }
@@ -1254,6 +1276,7 @@ fn request_to_pending(r: Request) -> Pending<Reply> {
         ctl: r.ctl,
         tenant: r.tenant,
         wants_result: matches!(r.reply, Reply::Channel(_)),
+        early_retire: r.early_retire,
         payload: r.reply,
     }
 }
@@ -1270,6 +1293,7 @@ fn pending_to_request(p: Pending<Reply>) -> Request {
         ctl: p.ctl,
         tenant: p.tenant,
         enqueued: p.enqueued,
+        early_retire: p.early_retire,
         reply: p.payload,
     }
 }
@@ -1305,6 +1329,8 @@ fn snapshot(
     in_flight: usize,
     ghost_events: u64,
     faults: Faults,
+    early_retired: u64,
+    turbo_truncated_nfe: u64,
 ) -> ServerStats {
     ServerStats {
         requests: st.requests,
@@ -1338,6 +1364,8 @@ fn snapshot(
         faults_fatal: faults.fatal,
         breaker_open: faults.breaker_open,
         lanes_salvaged: st.lanes_salvaged,
+        early_retired,
+        turbo_truncated_nfe,
         // a parked shard can't serve until it recovers or is restarted —
         // the rebalancer must not treat it as donor or thief meanwhile
         healthy: !faults.breaker_open,
@@ -1374,6 +1402,8 @@ fn empty_stats() -> ServerStats {
         faults_fatal: 0,
         breaker_open: false,
         lanes_salvaged: 0,
+        early_retired: 0,
+        turbo_truncated_nfe: 0,
         healthy: true,
         tenant_requests: Vec::new(),
     }
@@ -1462,7 +1492,7 @@ mod tests {
         let mut t = srv
             .submit_request(GenRequest::new(1).src("a small garden").stream_partials())
             .unwrap();
-        assert!(matches!(t.next_event(), Some(Event::Admitted)));
+        assert!(matches!(t.next_event(), Some(Event::Admitted { .. })));
         // the fixed path has no boundaries, so the next event is terminal
         match t.next_event() {
             Some(Event::Done(out)) => assert!(!out.tokens.is_empty()),
@@ -1532,7 +1562,7 @@ mod tests {
                 GenRequest::new(7).src("the quick fox crosses a river").stream_partials(),
             )
             .unwrap();
-        assert!(matches!(t.next_event(), Some(Event::Admitted)));
+        assert!(matches!(t.next_event(), Some(Event::Admitted { .. })));
         let mut last_progress: Option<(usize, usize, Vec<u32>)> = None;
         let done = loop {
             match t.next_event() {

@@ -32,8 +32,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::{Tier, TierDecision};
 use crate::runtime::ModelConfig;
-use crate::sampler::{SamplerConfig, SamplerSession};
+use crate::sampler::{SamplerConfig, SamplerKind, SamplerSession};
+use crate::schedule::{AlphaSchedule, TransitionSpec};
 
 /// Exact denoiser-call cost of one request: the size of its
 /// predetermined transition set, computed host-side before any compute.
@@ -221,8 +223,16 @@ impl Admission {
     /// Retirement hook: release the request's NFE and fold its measured
     /// wall time into the shard's µs/NFE EWMA.
     pub fn observe(&self, shard: usize, nfe: u64, elapsed: Duration) {
-        self.release(shard, nfe);
-        let sample = elapsed.as_micros() as f64 / nfe.max(1) as f64;
+        self.observe_served(shard, nfe, nfe, elapsed);
+    }
+
+    /// Retirement hook for tiered requests, where the NFE *charged* at
+    /// admission may exceed the NFE actually *served* (early retirement
+    /// refunds the difference). Releases the full charge; the pace
+    /// sample uses served NFE, since that is what the wall time bought.
+    pub fn observe_served(&self, shard: usize, charged: u64, served_nfe: u64, elapsed: Duration) {
+        self.release(shard, charged);
+        let sample = elapsed.as_micros() as f64 / served_nfe.max(1) as f64;
         let alpha = self.policy.ewma_alpha.clamp(0.0, 1.0);
         let bits = &self.shard(shard).ewma_us_bits;
         let mut cur = bits.load(Ordering::Relaxed);
@@ -233,6 +243,166 @@ impl Admission {
                 Err(seen) => cur = seen,
             }
         }
+    }
+
+    /// Admission-aware placement: pick the shard with the lowest
+    /// *projected wait* — `(queued_nfe + cost) × that shard's EWMA` —
+    /// check the deadline against that projection, and charge the cost
+    /// there, all in one call. Replaces the peek-placement-then-charge
+    /// dance: the shard returned is the shard charged, so the account
+    /// cannot drift from placement. On `Err` nothing was charged (the
+    /// rate-limit token, if any, is spent — the request did arrive).
+    ///
+    /// The caller routes with [`Router::submit_request_to`] so the lane
+    /// lands exactly where the projection said.
+    ///
+    /// [`Router::submit_request_to`]: crate::coordinator::Router::submit_request_to
+    pub fn place_and_charge(
+        &self,
+        tenant: Option<&str>,
+        cost: u64,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<usize, Rejection> {
+        if let Some(limit) = self.policy.rate_limit {
+            if let Err(wait) = self.take_token(tenant.unwrap_or(""), limit) {
+                self.rejected_rate_limit.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejection::RateLimited { retry_after: wait });
+            }
+        }
+        let (shard, projected_us) = self.best_projection(cost);
+        if let Some(deadline) = deadline {
+            let deadline_us = deadline.as_micros() as f64;
+            if projected_us > deadline_us {
+                self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                let pace = self.ewma_us_per_nfe(shard);
+                let fits = (deadline_us / pace.max(1e-9)) as u64;
+                let excess = (self.queued_nfe(shard) + cost).saturating_sub(fits);
+                return Err(Rejection::DeadlineUnmeetable {
+                    projected: Duration::from_micros(projected_us as u64),
+                    deadline,
+                    retry_after: Duration::from_micros((excess as f64 * pace) as u64),
+                });
+            }
+        }
+        self.charge(shard, cost);
+        Ok(shard)
+    }
+
+    /// Resolve a serving tier against the current cluster state: returns
+    /// the sampler config to actually serve plus the [`TierDecision`]
+    /// echoed to the client. Pure host-side arithmetic — every candidate
+    /// is priced with [`exact_cost`], never a denoiser call.
+    ///
+    /// - [`Tier::Quality`]: the config is served untouched.
+    /// - [`Tier::Turbo`]: DNDM ladder kinds get `max_nfe` (deterministic
+    ///   truncation of the transition set, `docs/tiers.md`); step-marching
+    ///   kinds are capped by lowering `steps` instead.
+    /// - [`Tier::Balanced`]: if the base config's best-shard projection
+    ///   meets the SLO it is kept; otherwise a deterministic grid of
+    ///   cheaper candidates (step counts `{T, 3T/4, T/2, T/4, T/8}`,
+    ///   crossed with `{base, Uniform, Exact(cos²)}` specs for DNDM
+    ///   kinds) is searched and the **highest-NFE** candidate that fits
+    ///   wins — degrade as little as the SLO allows. No candidate fits →
+    ///   `503` with the base projection, before any compute.
+    pub fn resolve_tier(
+        &self,
+        mcfg: &ModelConfig,
+        base_cfg: &SamplerConfig,
+        seed: u64,
+        tier: Tier,
+    ) -> std::result::Result<(SamplerConfig, TierDecision), Rejection> {
+        match tier {
+            Tier::Quality => {
+                let cost = exact_cost(mcfg, base_cfg, seed).unwrap_or(0);
+                let (_, projected_us) = self.best_projection(cost);
+                Ok((base_cfg.clone(), decision_for(base_cfg, cost, projected_us)))
+            }
+            Tier::Turbo { max_nfe } => {
+                let cap = max_nfe.max(1);
+                let mut cfg = base_cfg.clone();
+                match cfg.kind {
+                    // ladder kinds: truncate the transition set itself —
+                    // exact_cost prices the capped ladder because the
+                    // session truncates at construction
+                    SamplerKind::Dndm | SamplerKind::DndmV2 => cfg = cfg.with_max_nfe(cap),
+                    _ => cfg.steps = cfg.steps.min(cap),
+                }
+                let cost = exact_cost(mcfg, &cfg, seed).unwrap_or(0);
+                let (_, projected_us) = self.best_projection(cost);
+                Ok((cfg, decision_for(&cfg, cost, projected_us)))
+            }
+            Tier::Balanced { slo_ms } => {
+                let slo_us = slo_ms as f64 * 1000.0;
+                let base_cost = exact_cost(mcfg, base_cfg, seed).unwrap_or(0);
+                let (_, base_proj) = self.best_projection(base_cost);
+                if base_proj <= slo_us {
+                    return Ok((base_cfg.clone(), decision_for(base_cfg, base_cost, base_proj)));
+                }
+                let t = base_cfg.steps;
+                let step_grid = [t, t * 3 / 4, t / 2, t / 4, (t / 8).max(2)];
+                let mut specs = vec![base_cfg.spec.clone()];
+                if base_cfg.kind.is_dndm() {
+                    specs.push(TransitionSpec::Uniform);
+                    specs.push(TransitionSpec::Exact(AlphaSchedule::CosineSq));
+                }
+                // best = highest projected NFE that fits the SLO; the
+                // grid order breaks ties deterministically (strict >)
+                let mut best: Option<(SamplerConfig, u64, f64)> = None;
+                let mut cheapest = base_cost;
+                for &steps in &step_grid {
+                    if steps == 0 {
+                        continue;
+                    }
+                    for spec in &specs {
+                        let mut cand = base_cfg.clone();
+                        cand.steps = steps;
+                        cand.spec = spec.clone();
+                        let Ok(cost) = exact_cost(mcfg, &cand, seed) else { continue };
+                        cheapest = cheapest.min(cost);
+                        let (_, proj) = self.best_projection(cost);
+                        if proj > slo_us {
+                            continue;
+                        }
+                        if best.as_ref().map_or(true, |(_, c, _)| cost > *c) {
+                            best = Some((cand, cost, proj));
+                        }
+                    }
+                }
+                match best {
+                    Some((cfg, cost, proj)) => {
+                        let d = decision_for(&cfg, cost, proj);
+                        Ok((cfg, d))
+                    }
+                    None => {
+                        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                        let (shard, _) = self.best_projection(cheapest);
+                        let pace = self.ewma_us_per_nfe(shard);
+                        let fits = (slo_us / pace.max(1e-9)) as u64;
+                        let excess = (self.queued_nfe(shard) + cheapest).saturating_sub(fits);
+                        Err(Rejection::DeadlineUnmeetable {
+                            projected: Duration::from_micros(base_proj as u64),
+                            deadline: Duration::from_millis(slo_ms),
+                            retry_after: Duration::from_micros((excess as f64 * pace) as u64),
+                        })
+                    }
+                }
+            }
+        }
+    }
+
+    /// `(shard, projected_us)` of the lowest-projected-wait shard for a
+    /// request of exactly `cost` denoiser calls.
+    fn best_projection(&self, cost: u64) -> (usize, f64) {
+        let mut best = (0usize, f64::INFINITY);
+        for (i, s) in self.shards.iter().enumerate() {
+            let backlog = s.queued_nfe.load(Ordering::Relaxed);
+            let pace = f64::from_bits(s.ewma_us_bits.load(Ordering::Relaxed));
+            let projected = (backlog + cost) as f64 * pace;
+            if projected < best.1 {
+                best = (i, projected);
+            }
+        }
+        best
     }
 
     /// Current µs/NFE estimate for a shard (scraped into `/metrics`).
@@ -247,6 +417,38 @@ impl Admission {
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// µs/NFE EWMA of every shard, for the `/metrics` gauge family.
+    pub fn shard_ewmas(&self) -> Vec<f64> {
+        (0..self.shards.len()).map(|i| self.ewma_us_per_nfe(i)).collect()
+    }
+
+    /// Queued-but-unretired NFE of every shard, for `/metrics`.
+    pub fn shard_queued(&self) -> Vec<u64> {
+        (0..self.shards.len()).map(|i| self.queued_nfe(i)).collect()
+    }
+
+    /// Per-tenant pace: each known tenant's current token-bucket level
+    /// (refreshed to now), sorted by tenant for stable scrape output.
+    /// Empty when rate limiting is disabled.
+    pub fn tenant_pace(&self) -> Vec<(String, f64)> {
+        let Some(limit) = self.policy.rate_limit else { return Vec::new() };
+        let mut buckets = self.buckets.lock().unwrap_or_else(PoisonError::into_inner);
+        let now = Instant::now();
+        let mut out: Vec<(String, f64)> = buckets
+            .iter_mut()
+            .map(|(tenant, b)| {
+                if limit.per_sec > 0.0 {
+                    let refill = now.duration_since(b.last).as_secs_f64() * limit.per_sec;
+                    b.tokens = (b.tokens + refill).min(limit.burst);
+                    b.last = now;
+                }
+                (tenant.clone(), b.tokens)
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 
     /// Requests rejected by the rate limiter since construction.
@@ -286,6 +488,23 @@ impl Admission {
             // a flat minute so clients back off hard
             Err(Duration::from_secs(60))
         }
+    }
+}
+
+/// Label of the spec actually served, echoed in [`TierDecision`]:
+/// `kind:spec@steps`, plus `#capN` when a Turbo ladder cap is set.
+fn spec_label(cfg: &SamplerConfig) -> String {
+    match cfg.max_nfe {
+        Some(cap) => format!("{}:{}@{}#cap{}", cfg.kind.name(), cfg.spec.name(), cfg.steps, cap),
+        None => format!("{}:{}@{}", cfg.kind.name(), cfg.spec.name(), cfg.steps),
+    }
+}
+
+fn decision_for(cfg: &SamplerConfig, cost: u64, projected_us: f64) -> TierDecision {
+    TierDecision {
+        chosen_spec: spec_label(cfg),
+        projected_nfe: cost,
+        projected_ms: (projected_us / 1000.0).ceil() as u64,
     }
 }
 
@@ -385,6 +604,133 @@ mod tests {
         };
         // one token at 2/s refills in ≤ 500 ms
         assert!(retry_after <= Duration::from_millis(500), "{retry_after:?}");
+    }
+
+    fn model() -> ModelConfig {
+        crate::runtime::MockDenoiser::test_config(20, 8, 0, "absorbing")
+    }
+
+    #[test]
+    fn place_and_charge_picks_the_lowest_projected_wait_shard() {
+        let adm = Admission::new(no_limit(), 2);
+        adm.charge(0, 100);
+        // shard 0 projects (100+8)×1000 µs, shard 1 projects 8×1000 µs
+        let shard = adm.place_and_charge(None, 8, None).unwrap();
+        assert_eq!(shard, 1);
+        assert_eq!(adm.queued_nfe(1), 8, "the charge landed on the placed shard");
+        // make shard 1's measured pace terrible: 8 NFE in 8 s → 1e6
+        // µs/NFE sample, EWMA 0.2·1e6 + 0.8·1000 = 200 800
+        adm.observe(1, 8, Duration::from_secs(8));
+        // now (100+8)×1000 = 108 ms beats (0+8)×200 800 ≈ 1.6 s
+        let shard = adm.place_and_charge(None, 8, None).unwrap();
+        assert_eq!(shard, 0, "projected wait, not raw backlog, decides placement");
+        // unmeetable deadline on the best shard rejects without charging
+        let before = adm.queued_nfe(0) + adm.queued_nfe(1);
+        let err = adm.place_and_charge(None, 8, Some(Duration::from_millis(1))).unwrap_err();
+        assert_eq!(err.status(), 503);
+        assert_eq!(adm.queued_nfe(0) + adm.queued_nfe(1), before, "rejected → nothing charged");
+    }
+
+    #[test]
+    fn observe_served_releases_the_full_charge_at_the_served_pace() {
+        let adm = Admission::new(no_limit(), 1);
+        adm.charge(0, 30);
+        // early retirement: charged 30, served 10 in 50 ms → full charge
+        // released, pace sample 5000 µs/NFE (not 50 ms / 30)
+        adm.observe_served(0, 30, 10, Duration::from_millis(50));
+        assert_eq!(adm.queued_nfe(0), 0);
+        let ewma = adm.ewma_us_per_nfe(0);
+        assert!((ewma - (0.2 * 5000.0 + 0.8 * 1000.0)).abs() < 1e-6, "{ewma}");
+    }
+
+    #[test]
+    fn quality_tier_serves_the_config_untouched() {
+        let adm = Admission::new(no_limit(), 1);
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50);
+        let (resolved, d) = adm.resolve_tier(&model(), &cfg, 7, Tier::Quality).unwrap();
+        assert_eq!(resolved.steps, cfg.steps);
+        assert_eq!(resolved.spec, cfg.spec);
+        assert!(resolved.max_nfe.is_none());
+        assert_eq!(d.projected_nfe, exact_cost(&model(), &cfg, 7).unwrap());
+        assert!(d.chosen_spec.starts_with("dndm:"), "{}", d.chosen_spec);
+    }
+
+    #[test]
+    fn turbo_tier_caps_cost_for_ladder_and_step_kinds() {
+        let adm = Admission::new(no_limit(), 1);
+        let dndm = SamplerConfig::new(SamplerKind::Dndm, 1000);
+        let (r, d) = adm.resolve_tier(&model(), &dndm, 3, Tier::Turbo { max_nfe: 3 }).unwrap();
+        assert_eq!(r.max_nfe, Some(3), "ladder kinds truncate the transition set");
+        assert!(d.projected_nfe <= 3, "{}", d.projected_nfe);
+        assert_eq!(
+            d.projected_nfe,
+            exact_cost(&model(), &r, 3).unwrap(),
+            "the projection is the served cost, exactly"
+        );
+        let d3pm = SamplerConfig::new(SamplerKind::D3pm, 100);
+        let (r, d) = adm.resolve_tier(&model(), &d3pm, 3, Tier::Turbo { max_nfe: 5 }).unwrap();
+        assert_eq!(r.steps, 5, "step-marching kinds are capped by lowering steps");
+        assert!(r.max_nfe.is_none());
+        assert_eq!(d.projected_nfe, 5);
+    }
+
+    #[test]
+    fn balanced_tier_downshifts_to_meet_the_slo_or_503s() {
+        let adm = Admission::new(no_limit(), 1);
+        // pace 1000 µs/NFE → a 3000-step D3PM projects 3 s
+        let cfg = SamplerConfig::new(SamplerKind::D3pm, 3000);
+        // generous SLO: the base config is kept
+        let (r, _) = adm.resolve_tier(&model(), &cfg, 7, Tier::Balanced { slo_ms: 10_000 }).unwrap();
+        assert_eq!(r.steps, 3000);
+        // tight SLO: the largest grid candidate that fits wins —
+        // grid {3000, 2250, 1500, 750, 375}, 1.6 s at 1000 µs/NFE → 1500
+        let (r, d) = adm.resolve_tier(&model(), &cfg, 7, Tier::Balanced { slo_ms: 1600 }).unwrap();
+        assert_eq!(r.steps, 1500);
+        assert_eq!(d.projected_nfe, 1500);
+        assert!(d.projected_ms <= 1600, "{}", d.projected_ms);
+        // unmeetable: even the cheapest candidate (375) exceeds the SLO
+        let err = adm.resolve_tier(&model(), &cfg, 7, Tier::Balanced { slo_ms: 1 }).unwrap_err();
+        assert_eq!(err.status(), 503);
+        assert_eq!(adm.rejected_deadline(), 1, "503 before any compute, counted");
+    }
+
+    #[test]
+    fn balanced_tier_searches_specs_for_dndm_kinds() {
+        let adm = Admission::new(no_limit(), 1);
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 40);
+        let base_cost = exact_cost(&model(), &cfg, 9).unwrap();
+        // SLO just under the base projection forces a downshift; the
+        // chosen candidate must fit and stay as close to base as possible
+        let slo_ms = base_cost.saturating_sub(1).max(1);
+        match adm.resolve_tier(&model(), &cfg, 9, Tier::Balanced { slo_ms }) {
+            Ok((r, d)) => {
+                assert!(d.projected_nfe < base_cost, "{} < {base_cost}", d.projected_nfe);
+                assert_eq!(d.projected_nfe, exact_cost(&model(), &r, 9).unwrap());
+                assert!(d.projected_ms <= slo_ms, "{} <= {slo_ms}", d.projected_ms);
+            }
+            Err(e) => assert_eq!(e.status(), 503),
+        }
+    }
+
+    #[test]
+    fn metric_accessors_snapshot_shards_and_tenants() {
+        let policy = AdmissionPolicy {
+            rate_limit: Some(RateLimit { burst: 4.0, per_sec: 0.0 }),
+            ..AdmissionPolicy::default()
+        };
+        let adm = Admission::new(policy, 2);
+        adm.charge(1, 7);
+        assert!(adm.admit(Some("b"), 0, 1, None).is_ok());
+        assert!(adm.admit(Some("a"), 0, 1, None).is_ok());
+        assert!(adm.admit(Some("a"), 0, 1, None).is_ok());
+        assert_eq!(adm.shard_queued(), vec![0, 7]);
+        assert_eq!(adm.shard_ewmas(), vec![1000.0, 1000.0]);
+        let pace = adm.tenant_pace();
+        assert_eq!(pace.len(), 2, "sorted tenants: {pace:?}");
+        assert_eq!(pace[0].0, "a");
+        assert!((pace[0].1 - 2.0).abs() < 1e-9, "{pace:?}");
+        assert_eq!(pace[1].0, "b");
+        assert!((pace[1].1 - 3.0).abs() < 1e-9, "{pace:?}");
     }
 
     #[test]

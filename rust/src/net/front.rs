@@ -5,19 +5,32 @@
 //!                  │                            │             │
 //!  parse JSON ──▶ exact_cost (host-only 𝒯) ──▶ render       health
 //!                  │                        ServerStats
-//!          Admission::admit  ──▶ 429 / 503 + Retry-After (never submits)
-//!                  │
-//!        Router::submit_request_routed ──▶ charge(actual shard)
+//!      Admission::resolve_tier  ──▶ 503 + Retry-After (SLO unmeetable)
+//!                  │   (tiered: spec search over exact costs)
+//!      Admission::place_and_charge ──▶ 429 / 503 (never submits)
+//!                  │   (lowest projected-wait shard, charged atomically)
+//!        Router::submit_request_to(shard)
 //!                  │
 //!        stream? ──┴─▶ SSE (chunked)  else  block on the ticket
 //! ```
 //!
-//! The admission check happens **before** submit, on the shard
-//! [`Router::peek_placement`] projects; the charge happens **after**, on
-//! the shard the router actually picked (a rebalance can race the
-//! submit). A rejected request therefore never consumes a denoiser call,
-//! a lane slot, or even a queue entry — the acceptance test pins this by
+//! Placement and admission are one decision:
+//! [`Admission::place_and_charge`] picks the shard with the lowest
+//! *projected wait* (backlog NFE × that shard's measured µs/NFE),
+//! checks the deadline against that exact projection, and charges it —
+//! then the request is pinned there with
+//! [`Router::submit_request_to`], so the account can never drift from
+//! placement. A rejected request never consumes a denoiser call, a lane
+//! slot, or even a queue entry — the acceptance test pins this by
 //! asserting `nn_calls == 0` after a burst of unmeetable requests.
+//!
+//! Serving tiers (`docs/tiers.md`): a request may carry `"tier"` —
+//! `"quality"` (default, config untouched), `"balanced"` + `"slo_ms"`
+//! (cheapest-adequate schedule picked at admission), or `"turbo"` +
+//! `"max_nfe"` (hard NFE cap via deterministic ladder truncation). The
+//! chosen schedule and its projections are echoed back as a
+//! [`TierDecision`] in the SSE `admitted` event and the blocking JSON
+//! body.
 
 use std::io;
 use std::net::ToSocketAddrs;
@@ -25,16 +38,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::{Event, GenRequest, Priority, Router, Ticket};
+use crate::coordinator::{Event, GenRequest, Priority, Router, Ticket, Tier, TierDecision};
 use crate::runtime::ModelConfig;
 use crate::sampler::{SamplerConfig, SamplerKind};
 use crate::schedule::{TransitionOrder, TransitionSpec};
 use crate::util::json::Json;
 
-use super::admission::{exact_cost, Admission, AdmissionPolicy};
+use super::admission::{exact_cost, Admission, AdmissionPolicy, Rejection};
 use super::http::{HttpOptions, HttpServer, Request, Response};
 use super::metrics::{render, FrontGauges};
-use super::sse::{event_frame, frame, stream_ticket, StreamEnd};
+use super::sse::{event_frame, frame, stream_ticket, tier_json, StreamEnd};
 
 /// Default heartbeat interval on quiet SSE streams.
 const HEARTBEAT_EVERY: Duration = Duration::from_secs(5);
@@ -85,6 +98,61 @@ struct GenBody {
     tenant: Option<String>,
     stream: bool,
     partial_tokens: bool,
+    tier: Option<Tier>,
+}
+
+/// Parse the tier surface. `"tier"`, `"slo_ms"` and `"max_nfe"` are one
+/// coherent knob: `"balanced"` requires `slo_ms`, `"turbo"` requires
+/// `max_nfe`, and a bare `slo_ms` / `max_nfe` implies its tier. Balanced
+/// and Turbo pick the schedule themselves, so explicit `steps`/`spec`
+/// overrides conflict with them → 400.
+fn parse_tier(body: &Json) -> Result<Option<Tier>, String> {
+    let slo_ms = match body.get("slo_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v.as_f64().ok_or("'slo_ms' must be a number")?;
+            if ms < 1.0 {
+                return Err("'slo_ms' must be >= 1".into());
+            }
+            Some(ms as u64)
+        }
+    };
+    let max_nfe = match body.get("max_nfe") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(n) if n >= 1 => Some(n),
+            _ => return Err("'max_nfe' must be a positive integer".into()),
+        },
+    };
+    let tier = match body.get("tier") {
+        None => match (slo_ms, max_nfe) {
+            (None, None) => return Ok(None),
+            (Some(ms), None) => Tier::Balanced { slo_ms: ms },
+            (None, Some(n)) => Tier::Turbo { max_nfe: n },
+            (Some(_), Some(_)) => {
+                return Err("'slo_ms' and 'max_nfe' are mutually exclusive".into());
+            }
+        },
+        Some(v) => match (v.as_str().ok_or("'tier' must be a string")?, slo_ms, max_nfe) {
+            ("quality", None, None) => Tier::Quality,
+            ("quality", ..) => {
+                return Err("tier \"quality\" takes neither 'slo_ms' nor 'max_nfe'".into());
+            }
+            ("balanced", Some(ms), None) => Tier::Balanced { slo_ms: ms },
+            ("balanced", ..) => {
+                return Err("tier \"balanced\" requires 'slo_ms' (and no 'max_nfe')".into());
+            }
+            ("turbo", None, Some(n)) => Tier::Turbo { max_nfe: n },
+            ("turbo", ..) => {
+                return Err("tier \"turbo\" requires 'max_nfe' (and no 'slo_ms')".into());
+            }
+            (other, ..) => return Err(format!("unknown tier {other:?} (quality|balanced|turbo)")),
+        },
+    };
+    if !matches!(tier, Tier::Quality) && ["steps", "spec"].iter().any(|k| body.get(k).is_some()) {
+        return Err("tier-driven schedule selection conflicts with explicit 'steps'/'spec'".into());
+    }
+    Ok(Some(tier))
 }
 
 fn err_json(status: u16, msg: &str) -> Response {
@@ -169,7 +237,26 @@ impl FrontDoor {
             tenant: body.get("tenant").and_then(Json::as_str).map(str::to_string),
             stream: body.get("stream").and_then(Json::as_bool).unwrap_or(false),
             partial_tokens: body.get("partial_tokens").and_then(Json::as_bool).unwrap_or(false),
+            tier: parse_tier(&body)?,
         })
+    }
+
+    /// Render a [`Rejection`] as the HTTP error response, `Retry-After`
+    /// included. `cost` is the exact NFE the projection priced.
+    fn reject(&self, rej: &Rejection, cost: u64) -> Response {
+        let retry = rej.retry_after_secs();
+        let reason = match rej {
+            Rejection::RateLimited { .. } => "tenant rate limit exceeded".to_string(),
+            Rejection::DeadlineUnmeetable { projected, deadline, .. } => {
+                format!(
+                    "deadline unmeetable: projected {} ms for {} calls, deadline {} ms",
+                    projected.as_millis(),
+                    cost,
+                    deadline.as_millis()
+                )
+            }
+        };
+        err_json(rej.status(), &reason).header("retry-after", retry.to_string())
     }
 
     fn generate(&self, req: &Request) -> Response {
@@ -178,18 +265,50 @@ impl FrontDoor {
             Err(msg) => return err_json(400, &msg),
         };
 
-        // exact pre-compute cost: |𝒯| from a host-only session build
+        // exact pre-compute cost: |𝒯| from a host-only session build —
+        // an invalid config is a 400 regardless of tier
         let cfg_used = body.cfg.clone().unwrap_or_else(|| self.default_cfg.clone());
-        let cost = match exact_cost(&self.mcfg, &cfg_used, body.seed) {
+        let base_cost = match exact_cost(&self.mcfg, &cfg_used, body.seed) {
             Ok(c) => c,
             Err(e) => return err_json(400, &format!("invalid sampler config: {e}")),
+        };
+
+        // tier resolution: pure host-side spec search; an unmeetable
+        // Balanced SLO rejects here, before any compute
+        let (cfg_override, decision, cost) = match body.tier {
+            Some(tier) => {
+                match self.admission.resolve_tier(&self.mcfg, &cfg_used, body.seed, tier) {
+                    Ok((cfg, d)) => {
+                        let cost = d.projected_nfe;
+                        // Quality serves the config untouched — keep the
+                        // body's override (or None, inheriting future
+                        // server-default changes); the cheaper tiers pin
+                        // the schedule they chose
+                        let cfg = match tier {
+                            Tier::Quality => body.cfg.clone(),
+                            _ => Some(cfg),
+                        };
+                        (cfg, Some(d), cost)
+                    }
+                    Err(rej) => return self.reject(&rej, base_cost),
+                }
+            }
+            None => (body.cfg.clone(), None, base_cost),
+        };
+
+        // one placement decision: lowest projected-wait shard, deadline
+        // checked against that exact projection, charged atomically
+        let shard = match self.admission.place_and_charge(body.tenant.as_deref(), cost, body.deadline)
+        {
+            Ok(s) => s,
+            Err(rej) => return self.reject(&rej, cost),
         };
 
         let mut gen = GenRequest::new(body.seed).priority(body.priority);
         if let Some(src) = &body.src {
             gen = gen.src(src.clone());
         }
-        if let Some(cfg) = body.cfg {
+        if let Some(cfg) = cfg_override {
             gen = gen.config(cfg);
         }
         if let Some(d) = body.deadline {
@@ -201,39 +320,23 @@ impl FrontDoor {
         if body.partial_tokens {
             gen = gen.stream_partials();
         }
-
-        // admission: check on the projected shard, never submit on reject
-        let projected = self.router.peek_placement(&gen);
-        if let Err(rej) =
-            self.admission.admit(body.tenant.as_deref(), projected, cost, body.deadline)
-        {
-            let retry = rej.retry_after_secs();
-            let reason = match &rej {
-                super::admission::Rejection::RateLimited { .. } => {
-                    "tenant rate limit exceeded".to_string()
-                }
-                super::admission::Rejection::DeadlineUnmeetable { projected, deadline, .. } => {
-                    format!(
-                        "deadline unmeetable: projected {} ms for {} calls, deadline {} ms",
-                        projected.as_millis(),
-                        cost,
-                        deadline.as_millis()
-                    )
-                }
-            };
-            return err_json(rej.status(), &reason).header("retry-after", retry.to_string());
+        if let Some(tier) = body.tier {
+            gen = gen.tier(tier);
         }
+        gen.decision = decision.clone();
 
-        let (ticket, shard) = match self.router.submit_request_routed(gen) {
-            Ok(pair) => pair,
-            Err(e) => return err_json(500, &format!("submit failed: {e}")),
+        let ticket = match self.router.submit_request_to(shard, gen) {
+            Ok(t) => t,
+            Err(e) => {
+                self.admission.release(shard, cost);
+                return err_json(500, &format!("submit failed: {e}"));
+            }
         };
-        self.admission.charge(shard, cost);
 
         if body.stream {
             self.stream_response(ticket, shard, cost)
         } else {
-            self.block_response(ticket, shard, cost)
+            self.block_response(ticket, shard, cost, decision)
         }
     }
 
@@ -252,7 +355,14 @@ impl FrontDoor {
             let end = stream_ticket(&mut ticket, heartbeat, |f| sink.send(f.as_bytes()));
             match end {
                 StreamEnd::Done { nfe, elapsed_us } => {
-                    admission.observe(shard, nfe as u64, Duration::from_micros(elapsed_us));
+                    // release the full admission charge; early-retired
+                    // requests served fewer NFE than they were charged
+                    admission.observe_served(
+                        shard,
+                        cost,
+                        nfe as u64,
+                        Duration::from_micros(elapsed_us),
+                    );
                 }
                 StreamEnd::Cancelled
                 | StreamEnd::DeadlineExceeded
@@ -265,12 +375,19 @@ impl FrontDoor {
     }
 
     /// Blocking path: drive the ticket to its terminal event and answer
-    /// with one JSON body.
-    fn block_response(&self, mut ticket: Ticket, shard: usize, cost: u64) -> Response {
+    /// with one JSON body. A tier decision is echoed as a `"tier"` field
+    /// alongside the result, mirroring the SSE `admitted` event.
+    fn block_response(
+        &self,
+        mut ticket: Ticket,
+        shard: usize,
+        cost: u64,
+        decision: Option<TierDecision>,
+    ) -> Response {
         loop {
             match ticket.next_event() {
                 Some(Event::Done(out)) => {
-                    self.admission.observe(shard, out.nfe as u64, out.elapsed);
+                    self.admission.observe_served(shard, cost, out.nfe as u64, out.elapsed);
                     // reuse the SSE JSON payload: same fields, same writer
                     let f = event_frame(&Event::Done(out));
                     let json = f
@@ -278,6 +395,13 @@ impl FrontDoor {
                         .find_map(|l| l.strip_prefix("data: "))
                         .unwrap_or("{}")
                         .to_string();
+                    let json = match &decision {
+                        Some(d) if json.len() > 2 => {
+                            format!("{{\"tier\":{},{}", tier_json(d), &json[1..])
+                        }
+                        Some(d) => format!("{{\"tier\":{}}}", tier_json(d)),
+                        None => json,
+                    };
                     return Response::json(200, json);
                 }
                 Some(Event::DeadlineExceeded) => {
@@ -292,7 +416,7 @@ impl FrontDoor {
                     self.admission.release(shard, cost);
                     return err_json(500, &msg);
                 }
-                Some(Event::Admitted | Event::Progress { .. }) => continue,
+                Some(Event::Admitted { .. } | Event::Progress { .. }) => continue,
                 None => {
                     self.admission.release(shard, cost);
                     return err_json(500, "event stream ended without a result");
@@ -310,6 +434,9 @@ impl FrontDoor {
             rejected_rate_limit: self.admission.rejected_rate_limit(),
             rejected_deadline: self.admission.rejected_deadline(),
             connections_open: self.connections.load(Ordering::Relaxed),
+            shard_ewma_us_per_nfe: self.admission.shard_ewmas(),
+            shard_queued_nfe: self.admission.shard_queued(),
+            tenant_pace: self.admission.tenant_pace(),
         };
         Response::new(200)
             .header("content-type", "text/plain; version=0.0.4; charset=utf-8")

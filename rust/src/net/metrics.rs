@@ -37,11 +37,19 @@ fn escape_label(v: &str) -> String {
 }
 
 /// Extra gauges owned by the front door rather than the router.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct FrontGauges {
     pub rejected_rate_limit: u64,
     pub rejected_deadline: u64,
     pub connections_open: u64,
+    /// per-shard measured pace (µs per denoiser call), index = shard —
+    /// the number admission projections multiply backlog by
+    pub shard_ewma_us_per_nfe: Vec<f64>,
+    /// per-shard NFE admitted but not yet retired, index = shard
+    pub shard_queued_nfe: Vec<u64>,
+    /// per-tenant token-bucket level (requests of burst remaining),
+    /// sorted by tenant; empty when rate limiting is off
+    pub tenant_pace: Vec<(String, f64)>,
 }
 
 /// Render one scrape. `stats` is the router-merged view; per-tenant
@@ -133,6 +141,20 @@ pub fn render(stats: &ServerStats, front: &FrontGauges) -> String {
         "requests rejected at admission because the exact cost projection exceeds the deadline (HTTP 503)",
         front.rejected_deadline as f64,
     );
+    sample(
+        &mut out,
+        "dndm_early_retired_total",
+        "counter",
+        "requests retired early because their remaining transitions were provably no-ops (NFE refund)",
+        s.early_retired as f64,
+    );
+    sample(
+        &mut out,
+        "dndm_turbo_truncated_nfe_total",
+        "counter",
+        "ladder events dropped by Turbo tier truncation",
+        s.turbo_truncated_nfe as f64,
+    );
 
     // instantaneous gauges
     sample(
@@ -219,6 +241,39 @@ pub fn render(stats: &ServerStats, front: &FrontGauges) -> String {
         s.e2e_p99.as_secs_f64(),
     );
 
+    // per-shard admission gauges as labelled families, index = shard
+    let _ = writeln!(
+        out,
+        "# HELP dndm_shard_ewma_us_per_nfe measured pace per shard (µs per denoiser call)"
+    );
+    let _ = writeln!(out, "# TYPE dndm_shard_ewma_us_per_nfe gauge");
+    for (i, v) in front.shard_ewma_us_per_nfe.iter().enumerate() {
+        let _ = writeln!(out, "dndm_shard_ewma_us_per_nfe{{shard=\"{i}\"}} {}", fmt_value(*v));
+    }
+    let _ = writeln!(
+        out,
+        "# HELP dndm_shard_queued_nfe NFE admitted but not yet retired per shard"
+    );
+    let _ = writeln!(out, "# TYPE dndm_shard_queued_nfe gauge");
+    for (i, v) in front.shard_queued_nfe.iter().enumerate() {
+        let _ = writeln!(out, "dndm_shard_queued_nfe{{shard=\"{i}\"}} {}", fmt_value(*v as f64));
+    }
+
+    // per-tenant pace: current token-bucket level
+    let _ = writeln!(
+        out,
+        "# HELP dndm_tenant_pace_tokens per-tenant token-bucket level (requests remaining)"
+    );
+    let _ = writeln!(out, "# TYPE dndm_tenant_pace_tokens gauge");
+    for (tenant, v) in &front.tenant_pace {
+        let _ = writeln!(
+            out,
+            "dndm_tenant_pace_tokens{{tenant=\"{}\"}} {}",
+            escape_label(tenant),
+            fmt_value(*v)
+        );
+    }
+
     // per-tenant submit counts as one labelled family
     let _ = writeln!(out, "# HELP dndm_tenant_requests_total requests submitted per tenant");
     let _ = writeln!(out, "# TYPE dndm_tenant_requests_total counter");
@@ -293,6 +348,8 @@ mod tests {
             faults_fatal: 0,
             breaker_open: false,
             lanes_salvaged: 0,
+            early_retired: 6,
+            turbo_truncated_nfe: 17,
             healthy: true,
             tenant_requests: vec![("acme".into(), 7), ("z\"inc\\".into(), 5)],
         }
@@ -304,6 +361,9 @@ mod tests {
             rejected_rate_limit: 3,
             rejected_deadline: 4,
             connections_open: 2,
+            shard_ewma_us_per_nfe: vec![1000.0, 1250.5],
+            shard_queued_nfe: vec![0, 42],
+            tenant_pace: vec![("acme".into(), 3.5)],
         };
         let text = render(&stats(), &front);
         let parsed = parse_text(&text).expect("renderer output must parse");
@@ -318,6 +378,12 @@ mod tests {
         assert_eq!(parsed["dndm_healthy"], 1.0);
         assert_eq!(parsed["dndm_breaker_open"], 0.0);
         assert_eq!(parsed["dndm_tenant_requests_total{tenant=\"acme\"}"], 7.0);
+        assert_eq!(parsed["dndm_early_retired_total"], 6.0);
+        assert_eq!(parsed["dndm_turbo_truncated_nfe_total"], 17.0);
+        assert_eq!(parsed["dndm_shard_ewma_us_per_nfe{shard=\"0\"}"], 1000.0);
+        assert_eq!(parsed["dndm_shard_ewma_us_per_nfe{shard=\"1\"}"], 1250.5);
+        assert_eq!(parsed["dndm_shard_queued_nfe{shard=\"1\"}"], 42.0);
+        assert_eq!(parsed["dndm_tenant_pace_tokens{tenant=\"acme\"}"], 3.5);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 use std::io;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Event, Ticket};
+use crate::coordinator::{Event, Ticket, TierDecision};
 use crate::util::json::Json;
 
 /// Poll interval while the snapshot has nothing new. Event latency under
@@ -58,10 +58,38 @@ fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
 }
 
+/// JSON rendering of a [`TierDecision`], shared by the SSE `admitted`
+/// event and the blocking response's `"tier"` field.
+pub fn tier_json(d: &TierDecision) -> String {
+    obj(vec![
+        ("chosen_spec", Json::Str(d.chosen_spec.clone())),
+        ("projected_nfe", Json::Num(d.projected_nfe as f64)),
+        ("projected_ms", Json::Num(d.projected_ms as f64)),
+    ])
+    .to_string()
+}
+
 /// Frame one lifecycle [`Event`] as an SSE event with a JSON payload.
 pub fn event_frame(ev: &Event) -> String {
     match ev {
-        Event::Admitted => frame(Some("admitted"), &obj(vec![]).to_string()),
+        Event::Admitted { decision } => {
+            let fields = match decision {
+                Some(d) => vec![(
+                    "tier",
+                    Json::Obj(
+                        [
+                            ("chosen_spec".to_string(), Json::Str(d.chosen_spec.clone())),
+                            ("projected_nfe".to_string(), Json::Num(d.projected_nfe as f64)),
+                            ("projected_ms".to_string(), Json::Num(d.projected_ms as f64)),
+                        ]
+                        .into_iter()
+                        .collect::<BTreeMap<_, _>>(),
+                    ),
+                )],
+                None => vec![],
+            };
+            frame(Some("admitted"), &obj(fields).to_string())
+        }
         Event::Progress { nfe_done, nfe_total, partial_tokens } => {
             let mut fields = vec![
                 ("nfe_done", Json::Num(*nfe_done as f64)),
@@ -128,7 +156,7 @@ pub fn stream_ticket(
                     Event::Cancelled => Some(StreamEnd::Cancelled),
                     Event::DeadlineExceeded => Some(StreamEnd::DeadlineExceeded),
                     Event::Failed(_) => Some(StreamEnd::Failed),
-                    Event::Admitted | Event::Progress { .. } => None,
+                    Event::Admitted { .. } | Event::Progress { .. } => None,
                 };
                 if write(&event_frame(&ev)).is_err() {
                     ticket.cancel();
@@ -198,6 +226,29 @@ mod tests {
     fn unsubscribed_progress_omits_tokens() {
         let f = event_frame(&Event::Progress { nfe_done: 1, nfe_total: 2, partial_tokens: vec![] });
         assert!(!f.contains("partial_tokens"), "{f}");
+    }
+
+    #[test]
+    fn admitted_frame_echoes_the_tier_decision() {
+        use crate::coordinator::TierDecision;
+        let d = TierDecision {
+            chosen_spec: "dndm:beta:15:7@25".into(),
+            projected_nfe: 8,
+            projected_ms: 12,
+        };
+        let f = event_frame(&Event::Admitted { decision: Some(d.clone()) });
+        assert!(f.starts_with("event: admitted\n"), "{f}");
+        let data = f.lines().find(|l| l.starts_with("data: ")).unwrap();
+        let json = Json::parse(&data["data: ".len()..]).expect("payload parses");
+        let tier = json.get("tier").expect("tier object");
+        assert_eq!(tier.str_field("chosen_spec").unwrap(), "dndm:beta:15:7@25");
+        assert_eq!(tier.num_field("projected_nfe").unwrap(), 8.0);
+        assert_eq!(tier.num_field("projected_ms").unwrap(), 12.0);
+        // the blocking path splices the same JSON under "tier"
+        assert!(Json::parse(&tier_json(&d)).is_ok());
+        // untiered requests keep the old empty payload
+        let f = event_frame(&Event::Admitted { decision: None });
+        assert!(f.contains("data: {}"), "{f}");
     }
 
     #[test]

@@ -14,6 +14,17 @@ use super::common::sample_x0;
 use super::session::{AlgState, Core};
 use super::SamplerConfig;
 
+/// Alloc-free argmax over one position's logits (early-retirement probes).
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
 /// Vanilla D3PM ancestral sampling (Hoogeboom 2021b / Austin 2021):
 /// every step t draws x̂0 ~ p_θ(·|x_t) then x_{t−1} ~ q(x_{t−1}|x_t, x̂0).
 pub(crate) struct D3pmState {
@@ -82,6 +93,20 @@ impl AlgState for D3pmState {
 
     fn total_events(&self) -> usize {
         self.t_max
+    }
+
+    fn row_settled(&self, core: &Core, row: usize, _logits: LogitsView<'_>) -> bool {
+        // Absorbing chains only: `absorbing_reverse_step` is the identity
+        // on unmasked tokens, so a row with no `[MASK]` left is settled
+        // *structurally* — every remaining step is provably a no-op,
+        // whatever the logits or the temperature. The multinomial
+        // posterior keeps resampling tokens, so it never settles early.
+        match self.noise {
+            NoiseKind::Absorbing { mask_id } => {
+                self.t >= 1 && core.x.row(row).iter().all(|&tok| tok != mask_id)
+            }
+            NoiseKind::Multinomial { .. } => false,
+        }
     }
 
     fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {
@@ -200,6 +225,18 @@ impl AlgState for RdmState {
         self.t_max
     }
 
+    fn row_settled(&self, core: &Core, row: usize, logits: LogitsView<'_>) -> bool {
+        // RDM re-decodes revealed tokens every step. At temperature 0 the
+        // decode is argmax, so a fully-revealed row whose every position
+        // already holds its argmax is a fixed point of the update *for
+        // these logits*. (The denoiser's t-conditioning can still shift
+        // logits at later steps — `docs/tiers.md` spells out why tiers
+        // accept this; `Quality` never asks.)
+        core.temperature == 0.0
+            && self.revealed[row].iter().all(|&r| r)
+            && (0..core.n).all(|pos| argmax(logits.row(row, pos)) == core.x.get(row, pos))
+    }
+
     fn evict_row(&mut self, row: usize) {
         // the step grid is shared (every row reveals on every step), so
         // only the reveal indicators go
@@ -284,6 +321,21 @@ impl AlgState for MaskPredictState {
 
     fn total_events(&self) -> usize {
         self.iters
+    }
+
+    fn row_settled(&self, core: &Core, row: usize, logits: LogitsView<'_>) -> bool {
+        // Called right after `advance` bumped `self.i`, so `self.i` is the
+        // *next* iteration. Once its re-mask count hits 0 it stays 0 (the
+        // count is decreasing in i), so every remaining iteration only
+        // re-predicts. At temperature 0 that predict is argmax: a mask-free
+        // row whose every position holds its argmax is a fixed point for
+        // these logits (same t-conditioning caveat as RDM, `docs/tiers.md`).
+        let next_remask =
+            (core.n * self.iters.saturating_sub(self.i + 1)) / self.iters;
+        core.temperature == 0.0
+            && next_remask == 0
+            && core.x.row(row).iter().all(|&tok| tok != self.mask)
+            && (0..core.n).all(|pos| argmax(logits.row(row, pos)) == core.x.get(row, pos))
     }
 
     fn split_rows(&mut self, _rows: &[usize]) -> Box<dyn AlgState> {

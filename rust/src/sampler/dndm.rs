@@ -39,6 +39,9 @@ pub(crate) struct DndmState {
     /// `fired` + distinct events remaining in the current rows' ladders;
     /// recomputed only on eviction / split, so it is exact after both
     total: usize,
+    /// merged events dropped by Turbo truncation at construction
+    /// (`cfg.max_nfe`); 0 on every untiered session
+    truncated: usize,
     t_max: usize,
     v2: bool,
 }
@@ -58,10 +61,54 @@ fn merged_remaining(ladders: &[Vec<usize>], cursors: &[usize]) -> usize {
     rest.len()
 }
 
+/// Turbo truncation (`docs/tiers.md`): cap one row's distinct transition
+/// times at `cap` by dropping the lowest-impact events. Impact of an
+/// event time is the number of positions firing at it; ties drop the
+/// *smaller* t first, so the early reverse-time events (which unmask
+/// first and anchor the sequence) survive. Positions whose τ was dropped
+/// are remapped to the nearest kept time (ties toward the larger t), so
+/// every position still transitions exactly once. This is a pure
+/// function of the already-sampled taus — no RNG draws — which is what
+/// makes Turbo byte-reproducible under a pinned seed.
+fn truncate_row_taus(taus: &mut [usize], cap: usize) {
+    let cap = cap.max(1);
+    let mut times: Vec<usize> = taus.to_vec();
+    times.sort_unstable();
+    times.dedup();
+    if times.len() <= cap {
+        return;
+    }
+    let counts: Vec<usize> =
+        times.iter().map(|&t| taus.iter().filter(|&&tau| tau == t).count()).collect();
+    // rank: fewest positions first, then smaller t first
+    let mut ranked: Vec<usize> = (0..times.len()).collect();
+    ranked.sort_by_key(|&i| (counts[i], times[i]));
+    let kept: Vec<usize> = {
+        let mut k: Vec<usize> =
+            ranked[times.len() - cap..].iter().map(|&i| times[i]).collect();
+        k.sort_unstable();
+        k
+    };
+    for tau in taus.iter_mut() {
+        if kept.binary_search(tau).is_ok() {
+            continue;
+        }
+        // nearest kept time; on a distance tie take the larger t
+        let mut best = kept[0];
+        for &k in &kept {
+            let (d, bd) = (k.abs_diff(*tau), best.abs_diff(*tau));
+            if d < bd || (d == bd && k > best) {
+                best = k;
+            }
+        }
+        *tau = best;
+    }
+}
+
 impl DndmState {
     pub(crate) fn new(core: &mut Core, cfg: &SamplerConfig, batch: usize, v2: bool) -> DndmState {
         let t_max = cfg.steps;
-        let taus: Vec<Vec<usize>> = if cfg.shared_tau {
+        let mut taus: Vec<Vec<usize>> = if cfg.shared_tau {
             let tt = cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng);
             vec![tt.taus; batch]
         } else {
@@ -69,18 +116,32 @@ impl DndmState {
                 .map(|_| cfg.spec.sample_times(t_max, core.n, cfg.order, &mut core.rng).taus)
                 .collect()
         };
-        let ladders: Vec<Vec<usize>> = taus
-            .iter()
-            .map(|row| {
-                let mut l = row.clone();
-                l.sort_unstable_by(|a, b| b.cmp(a));
-                l.dedup();
-                l
-            })
-            .collect();
+        let build_ladders = |taus: &[Vec<usize>]| -> Vec<Vec<usize>> {
+            taus.iter()
+                .map(|row| {
+                    let mut l = row.clone();
+                    l.sort_unstable_by(|a, b| b.cmp(a));
+                    l.dedup();
+                    l
+                })
+                .collect()
+        };
         let cursors = vec![0; batch];
+        let mut ladders = build_ladders(&taus);
+        let mut truncated = 0;
+        if let Some(cap) = cfg.max_nfe {
+            // Turbo: truncate *after* sampling, so the RNG stream (and
+            // everything drawn later from it) is identical to the
+            // uncapped run — only the ladder shrinks
+            let before = merged_remaining(&ladders, &cursors);
+            for row in taus.iter_mut() {
+                truncate_row_taus(row, cap);
+            }
+            ladders = build_ladders(&taus);
+            truncated = before - merged_remaining(&ladders, &cursors);
+        }
         let total = merged_remaining(&ladders, &cursors);
-        DndmState { taus, ladders, cursors, fired: 0, total, t_max, v2 }
+        DndmState { taus, ladders, cursors, fired: 0, total, truncated, t_max, v2 }
     }
 
     /// The next merged event time: max over the rows' current ladder
@@ -138,6 +199,10 @@ impl AlgState for DndmState {
         self.total
     }
 
+    fn truncated_events(&self) -> usize {
+        self.truncated
+    }
+
     fn evict_row(&mut self, row: usize) {
         self.taus.remove(row);
         self.ladders.remove(row);
@@ -169,6 +234,7 @@ impl AlgState for DndmState {
             cursors,
             fired: self.fired,
             total,
+            truncated: 0, // the donor keeps the construction-time stat
             t_max: self.t_max,
             v2: self.v2,
         })
@@ -418,6 +484,58 @@ mod tests {
             }
             assert_eq!(calls, survivors);
         }
+    }
+
+    #[test]
+    fn turbo_truncation_caps_events_and_is_deterministic() {
+        use crate::sampler::session::SamplerSession;
+
+        let den = mock("absorbing");
+        for seed in 0..16u64 {
+            let base = SamplerConfig::new(SamplerKind::Dndm, 1000);
+            let full = SamplerSession::new(den.config(), &base, 1, seed).unwrap();
+            let cap = 3;
+            let turbo = base.clone().with_max_nfe(cap);
+            let a = SamplerSession::new(den.config(), &turbo, 1, seed).unwrap();
+            let b = SamplerSession::new(den.config(), &turbo, 1, seed).unwrap();
+            assert!(a.total_events() <= cap, "seed {seed}: cap not honoured");
+            assert_eq!(
+                a.total_events() + a.truncated_events(),
+                full.total_events(),
+                "seed {seed}: truncated + remaining must equal the uncapped |𝒯|"
+            );
+            assert_eq!(
+                a.taus().unwrap(),
+                b.taus().unwrap(),
+                "seed {seed}: Turbo truncation must be byte-reproducible"
+            );
+            // every position still transitions exactly once, at a kept time
+            let taus = a.taus().unwrap();
+            assert!(taus[0].iter().all(|&t| (1..=1000).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn turbo_truncated_session_still_converges() {
+        let den = mock("absorbing");
+        let cfg = SamplerConfig::new(SamplerKind::Dndm, 50).with_max_nfe(2);
+        let out = generate(&den, &cfg, None, 2, 7, None).unwrap();
+        assert!(out.nfe <= 2, "Turbo cap must bound NFE, got {}", out.nfe);
+        for seq in &out.tokens {
+            assert_eq!(seq, &vec![10, 11, 12, 13, 14, 15, 16, 17]);
+        }
+    }
+
+    #[test]
+    fn no_cap_means_byte_identical_taus() {
+        use crate::sampler::session::SamplerSession;
+        let den = mock("absorbing");
+        let base = SamplerConfig::new(SamplerKind::Dndm, 100);
+        let loose = base.clone().with_max_nfe(10_000); // cap above |𝒯|: no-op
+        let a = SamplerSession::new(den.config(), &base, 2, 5).unwrap();
+        let b = SamplerSession::new(den.config(), &loose, 2, 5).unwrap();
+        assert_eq!(a.taus().unwrap(), b.taus().unwrap());
+        assert_eq!(b.truncated_events(), 0);
     }
 
     #[test]

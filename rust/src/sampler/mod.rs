@@ -118,6 +118,13 @@ pub struct SamplerConfig {
     pub shared_tau: bool,
     /// record per-event snapshots (Figure 2).
     pub trace: bool,
+    /// Turbo cap on per-row |𝒯| (serving tiers, `docs/tiers.md`): after 𝒯
+    /// is sampled, deterministically drop the lowest-impact transition
+    /// times of each row whose ladder exceeds the cap. `None` (the
+    /// default) leaves 𝒯 untouched — every pre-tier call site is
+    /// byte-identical. Honoured by Dndm / DndmV2 ladders; step-marching
+    /// kinds are capped by lowering `steps` at admission instead.
+    pub max_nfe: Option<usize>,
 }
 
 impl SamplerConfig {
@@ -130,6 +137,7 @@ impl SamplerConfig {
             temperature: 0.0,
             shared_tau: true,
             trace: false,
+            max_nfe: None,
         }
     }
 
@@ -150,6 +158,12 @@ impl SamplerConfig {
 
     pub fn with_trace(mut self) -> Self {
         self.trace = true;
+        self
+    }
+
+    /// Cap per-row |𝒯| at `n` by Turbo truncation (see `max_nfe`).
+    pub fn with_max_nfe(mut self, n: usize) -> Self {
+        self.max_nfe = Some(n);
         self
     }
 

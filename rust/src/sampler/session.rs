@@ -211,6 +211,27 @@ pub(crate) trait AlgState: Send {
     /// changes no survivor's RNG sequence.
     fn evict_row(&mut self, _row: usize) {}
 
+    /// Merged events dropped at construction by Turbo truncation
+    /// (`SamplerConfig::max_nfe`, `docs/tiers.md`). 0 for every untiered
+    /// session and every algorithm without per-row ladders.
+    fn truncated_events(&self) -> usize {
+        0
+    }
+
+    /// Early-retirement probe (serving tiers, `docs/tiers.md`): is row
+    /// `row` **settled** — are all of its remaining transitions provably
+    /// no-ops, so the serving layer may retire it now and refund the
+    /// leftover denoiser calls? Called at NFE boundaries right after
+    /// [`Self::advance`], with the same logits that call consumed.
+    /// Implementations must be conservative (`false` when in doubt) and
+    /// allocation-free — the scheduler probes on its steady-state path.
+    /// The default `false` keeps every algorithm without a settlement
+    /// proof (the DNDM family: each remaining ladder event still unmasks
+    /// at least one position) on the exact full schedule.
+    fn row_settled(&self, _core: &Core, _row: usize, _logits: LogitsView<'_>) -> bool {
+        false
+    }
+
     /// Carve the per-row state of `rows` (strictly ascending, validated
     /// by [`SamplerSession::split_rows`]) out into a state for a new
     /// `rows.len()`-sequence session, removing it from `self`. Shared
@@ -346,6 +367,25 @@ impl SamplerSession {
     /// rebalancer prices lanes with it.
     pub fn total_events(&self) -> usize {
         self.alg.total_events()
+    }
+
+    /// Merged events dropped at construction by Turbo truncation
+    /// (`SamplerConfig::max_nfe`); 0 everywhere else. The serving layer
+    /// surfaces the lane-level sum as `turbo_truncated_nfe`.
+    pub fn truncated_events(&self) -> usize {
+        self.alg.truncated_events()
+    }
+
+    /// Early-retirement probe (`docs/tiers.md`): `true` when row `row`'s
+    /// remaining transitions are provably no-ops given the logits of the
+    /// call just applied — for absorbing D3PM, no `[MASK]` left in the
+    /// row (the absorbing reverse step is the identity on unmasked
+    /// tokens); for the re-prediction baselines (RDM / Mask-Predict) at
+    /// temperature 0, every position already holds its argmax and no
+    /// re-masking remains. Allocation-free; call right after
+    /// [`Self::advance`] with the same logits view.
+    pub fn row_settled<'a>(&self, row: usize, logits: impl Into<LogitsView<'a>>) -> bool {
+        row < self.batch && self.alg.row_settled(&self.core, row, logits.into())
     }
 
     pub fn is_done(&self) -> bool {

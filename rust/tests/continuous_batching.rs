@@ -219,7 +219,7 @@ fn cancel_at_a_boundary_frees_the_slot_and_refills_the_same_tick() {
 
     // the ticket observed the full lifecycle, ending in Cancelled
     let mut t = ticket;
-    assert!(matches!(t.try_next_event(), Some(Event::Admitted)));
+    assert!(matches!(t.try_next_event(), Some(Event::Admitted { .. })));
     assert!(matches!(t.try_next_event(), Some(Event::Progress { nfe_done: 1, .. })));
     assert!(matches!(t.try_next_event(), Some(Event::Cancelled)));
     assert!(t.finished());

@@ -78,7 +78,7 @@ fn ticket_stream_is_byte_identical_to_generate_one_for_every_kind() {
         let mut ticket = router.submit_request(req).unwrap();
 
         assert!(
-            matches!(ticket.next_event(), Some(Event::Admitted)),
+            matches!(ticket.next_event(), Some(Event::Admitted { .. })),
             "{}: first event must be Admitted",
             sk.name()
         );

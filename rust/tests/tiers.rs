@@ -1,0 +1,460 @@
+//! Serving-tier integration suite (`docs/tiers.md`) — the acceptance
+//! pins for adaptive-NFE serving:
+//!
+//! * **Quality is inert**: for every `SamplerKind`, a `Tier::Quality`
+//!   request through the continuous per-request-lane scheduler is
+//!   byte-identical to the untiered path and to `Engine::generate_one` —
+//!   no truncation, no early retirement, full ladder.
+//! * **Turbo is deterministic**: capping |𝒯| with `max_nfe` truncates
+//!   the same transition times every run under a pinned seed, serves
+//!   exactly the admission-time exact cost, and is byte-identical to
+//!   `generate_one` with the same capped config.
+//! * **Early retirement conserves accounting**: a Balanced absorbing
+//!   request whose rows settle early exits with the *same tokens* as the
+//!   full run (retirement only fires when the remaining transitions are
+//!   provably no-ops), a strictly smaller NFE, and zero ghost events.
+//! * **Unmeetable SLOs never consume compute**: the front door 503s a
+//!   Balanced request whose whole spec grid misses the SLO, with
+//!   `nn_calls == 0` pinned; a meetable-but-tight SLO is admitted with a
+//!   cheaper spec whose served NFE equals its projection exactly.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dndm::coordinator::{
+    cipher_mock_denoiser, cipher_mock_engine, Engine, GenRequest, Router, SchedPolicy,
+    ServeBuilder, Tier,
+};
+use dndm::data::words;
+use dndm::net::http::HttpOptions;
+use dndm::net::{self, exact_cost, AdmissionPolicy, HttpServer};
+use dndm::runtime::{Denoiser, MockDenoiser, ModelConfig};
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::json::Json;
+
+const SRC: &str = "the quick fox crosses a river to the garden by";
+const SEQ_LEN: usize = 8;
+
+/// Same kind → noise-family map as `tests/lifecycle.rs`.
+const ALL_KINDS: [(SamplerKind, &str); 10] = [
+    (SamplerKind::Dndm, "absorbing"),
+    (SamplerKind::DndmV2, "absorbing"),
+    (SamplerKind::DndmTopK, "absorbing"),
+    (SamplerKind::DndmC, "absorbing"),
+    (SamplerKind::D3pm, "absorbing"),
+    (SamplerKind::Rdm, "absorbing"),
+    (SamplerKind::RdmTopK, "multinomial"),
+    (SamplerKind::MaskPredict, "absorbing"),
+    (SamplerKind::Ddim, "multinomial"),
+    (SamplerKind::Ardm, "absorbing"),
+];
+
+fn engine(noise: &'static str) -> Engine {
+    if noise == "absorbing" {
+        return cipher_mock_engine(SEQ_LEN);
+    }
+    let vocab = words::translation_vocab();
+    let cfg = MockDenoiser::test_config(vocab.len(), SEQ_LEN, 0, "multinomial");
+    let mut den = MockDenoiser::fixed(cfg, vec![44, 45, 46, 47, 48, 49, 50, 51]);
+    den.peak = 14.0;
+    Engine::from_denoiser(Box::new(den), vocab, "multinomial-mock")
+}
+
+/// Production tiered-serving mode: per-request lanes, so admission-time
+/// |𝒯| is the served NFE exactly and capped ladders never share a lane
+/// with uncapped ones.
+fn sched_policy() -> SchedPolicy {
+    SchedPolicy { max_batch: 4, window: Duration::ZERO, shared_tau_groups: false }
+}
+
+// ---------------------------------------------------------------------------
+// Quality tier: byte-identical to the untiered path for every kind
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quality_tier_is_byte_identical_to_the_untiered_path_for_every_kind() {
+    for (sk, noise) in ALL_KINDS {
+        let cfg = SamplerConfig::new(sk, 25).with_temperature(1.0);
+        let conditional = noise == "absorbing";
+
+        let reference = engine(noise);
+        let want = reference.generate_one(conditional.then_some(SRC), &cfg, 7).unwrap();
+
+        let router = ServeBuilder::new(
+            move || Ok(engine(noise)),
+            SamplerConfig::new(SamplerKind::Dndm, 50),
+        )
+        .continuous(sched_policy())
+        .start();
+
+        let req = |tiered: bool| {
+            let mut r = GenRequest::new(7).config(cfg.clone());
+            if conditional {
+                r = r.src(SRC);
+            }
+            if tiered {
+                r = r.tier(Tier::Quality);
+            }
+            r
+        };
+        let untiered = router.generate(req(false)).unwrap();
+        let quality = router.generate(req(true)).unwrap();
+
+        for (label, got) in [("untiered", &untiered), ("quality", &quality)] {
+            assert_eq!(got.tokens, want.tokens, "{}/{label}: tokens differ", sk.name());
+            assert_eq!(got.nfe, want.nfe, "{}/{label}: NFE differs", sk.name());
+            assert_eq!(got.text, want.text, "{}/{label}: text differs", sk.name());
+        }
+
+        // Quality must never be truncated or retired early — even the
+        // absorbing kinds whose rows settle before the last steps
+        let stats = router.stats().unwrap();
+        assert_eq!(stats.early_retired, 0, "{}: quality row early-retired", sk.name());
+        assert_eq!(stats.turbo_truncated_nfe, 0, "{}: quality row truncated", sk.name());
+        assert_eq!(stats.ghost_events_fired, 0, "{}", sk.name());
+        router.shutdown();
+        router.join();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Turbo tier: deterministic truncation serving exactly the projection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn turbo_truncation_is_deterministic_and_serves_exactly_the_exact_cost() {
+    let mcfg = cipher_mock_denoiser(SEQ_LEN).config().clone();
+    let full = SamplerConfig::new(SamplerKind::Dndm, 200);
+    let capped = full.clone().with_max_nfe(3);
+
+    for seed in 1..4u64 {
+        let full_cost = exact_cost(&mcfg, &full, seed).unwrap();
+        let cost = exact_cost(&mcfg, &capped, seed).unwrap();
+        assert!(cost <= 3, "cap must bound the exact cost (got {cost})");
+        assert!(cost < full_cost, "seed {seed}: cap never engaged ({cost} vs {full_cost})");
+
+        // generate_one shares the truncation rule, so it is the byte
+        // reference; two independent servers pin run-to-run determinism
+        let want = engine("absorbing").generate_one(Some(SRC), &capped, seed).unwrap();
+        let mut outs = Vec::new();
+        for _ in 0..2 {
+            let router = ServeBuilder::new(
+                || Ok(cipher_mock_engine(SEQ_LEN)),
+                SamplerConfig::new(SamplerKind::Dndm, 50),
+            )
+            .continuous(sched_policy())
+            .start();
+            let out = router
+                .generate(
+                    GenRequest::new(seed)
+                        .src(SRC)
+                        .config(capped.clone())
+                        .tier(Tier::Turbo { max_nfe: 3 }),
+                )
+                .unwrap();
+            let stats = router.stats().unwrap();
+            assert!(
+                stats.turbo_truncated_nfe > 0,
+                "seed {seed}: truncation must be counted"
+            );
+            assert_eq!(stats.turbo_truncated_nfe, (full_cost - cost) as u64);
+            assert_eq!(stats.ghost_events_fired, 0);
+            router.shutdown();
+            router.join();
+            outs.push(out);
+        }
+        for out in &outs {
+            assert_eq!(out.tokens, want.tokens, "seed {seed}: tokens differ");
+            assert_eq!(out.nfe as u64, cost, "seed {seed}: served NFE != truncated |𝒯|");
+        }
+        assert_eq!(outs[0].text, outs[1].text, "seed {seed}: runs differ");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Early retirement: same tokens, fewer calls, zero ghosts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn early_retirement_conserves_tokens_and_refunds_calls() {
+    let cfg = SamplerConfig::new(SamplerKind::D3pm, 30);
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(SEQ_LEN)),
+        SamplerConfig::new(SamplerKind::Dndm, 50),
+    )
+    .continuous(sched_policy())
+    .start();
+
+    let mut refunded = 0usize;
+    for seed in 0..8u64 {
+        // the absorbing D3PM chain settles once every token is decoded;
+        // the full run keeps stepping no-ops to the last boundary
+        let want = engine("absorbing").generate_one(Some(SRC), &cfg, seed).unwrap();
+        let got = router
+            .generate(
+                GenRequest::new(seed)
+                    .src(SRC)
+                    .config(cfg.clone())
+                    .tier(Tier::Balanced { slo_ms: 60_000 }),
+            )
+            .unwrap();
+        // retirement only fires when the remaining transitions are
+        // provably no-ops, so the output must not change at all
+        assert_eq!(got.tokens, want.tokens, "seed {seed}: retirement changed tokens");
+        assert_eq!(got.text, want.text, "seed {seed}: retirement changed text");
+        assert!(got.nfe <= want.nfe, "seed {seed}: retired row fired extra calls");
+        refunded += want.nfe - got.nfe;
+    }
+
+    let stats = router.stats().unwrap();
+    assert!(
+        stats.early_retired > 0 && refunded > 0,
+        "no row settled early across 8 seeds (retired {}, refunded {refunded})",
+        stats.early_retired
+    );
+    assert_eq!(stats.ghost_events_fired, 0, "retirement must retire the row's ladder");
+    router.shutdown();
+    router.join();
+}
+
+// ---------------------------------------------------------------------------
+// HTTP front door: tier resolution on the wire
+// ---------------------------------------------------------------------------
+
+fn front(policy: AdmissionPolicy) -> (Arc<Router>, HttpServer, ModelConfig) {
+    let mcfg = cipher_mock_denoiser(SEQ_LEN).config().clone();
+    let router = Arc::new(
+        ServeBuilder::new(
+            || Ok(cipher_mock_engine(SEQ_LEN)),
+            SamplerConfig::new(SamplerKind::Dndm, 25),
+        )
+        .continuous(SchedPolicy {
+            max_batch: 8,
+            window: Duration::ZERO,
+            shared_tau_groups: false,
+        })
+        .start(),
+    );
+    let server = net::serve(
+        "127.0.0.1:0",
+        router.clone(),
+        mcfg.clone(),
+        SamplerConfig::new(SamplerKind::Dndm, 25),
+        policy,
+        HttpOptions::default(),
+    )
+    .expect("bind loopback");
+    (router, server, mcfg)
+}
+
+fn no_limits() -> AdmissionPolicy {
+    AdmissionPolicy { rate_limit: None, ..AdmissionPolicy::default() }
+}
+
+fn read_response(r: &mut impl BufRead) -> (u16, Vec<(String, String)>, String) {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("status line");
+    let status: u16 = line.split(' ').nth(1).expect("code").parse().expect("numeric");
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).expect("header line");
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').expect("header colon");
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let chunked = headers
+        .iter()
+        .any(|(k, v)| k == "transfer-encoding" && v.contains("chunked"));
+    let mut body = Vec::new();
+    if chunked {
+        loop {
+            let mut size = String::new();
+            r.read_line(&mut size).expect("chunk size");
+            let n = usize::from_str_radix(size.trim(), 16).expect("hex chunk size");
+            let mut chunk = vec![0u8; n + 2];
+            r.read_exact(&mut chunk).expect("chunk payload");
+            if n == 0 {
+                break;
+            }
+            body.extend_from_slice(&chunk[..n]);
+        }
+    } else {
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().expect("content-length"))
+            .unwrap_or(0);
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf).expect("fixed body");
+        body = buf;
+    }
+    (status, headers, String::from_utf8_lossy(&body).into_owned())
+}
+
+fn post_generate(addr: std::net::SocketAddr, json: &str) -> (u16, Vec<(String, String)>, String) {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{json}",
+        json.len()
+    )
+    .expect("send request");
+    let mut r = BufReader::new(conn);
+    read_response(&mut r)
+}
+
+fn sse_events(body: &str) -> Vec<(String, String)> {
+    body.split("\n\n")
+        .filter(|f| !f.trim().is_empty() && !f.starts_with(':'))
+        .map(|f| {
+            let mut name = String::new();
+            let mut data = Vec::new();
+            for line in f.lines() {
+                if let Some(v) = line.strip_prefix("event: ") {
+                    name = v.to_string();
+                } else if let Some(v) = line.strip_prefix("data: ") {
+                    data.push(v.to_string());
+                }
+            }
+            (name, data.join("\n"))
+        })
+        .collect()
+}
+
+fn teardown(router: Arc<Router>, server: HttpServer) {
+    drop(server);
+    router.shutdown();
+}
+
+/// The acceptance pin: a Balanced request whose SLO is one millisecond
+/// below its base projection is admitted with a cheaper spec, and the
+/// served NFE equals the admission-time projection exactly (DNDM never
+/// early-retires, so the equality is strict).
+#[test]
+fn balanced_downshift_serves_exactly_the_projected_nfe() {
+    let (router, server, mcfg) = front(no_limits());
+    let addr = server.local_addr();
+    let base = SamplerConfig::new(SamplerKind::Dndm, 25);
+    let base_cost = exact_cost(&mcfg, &base, 3).unwrap();
+    // the spec grid's smallest step count is max(2, T/8) = 3, so any
+    // base cost above 3 guarantees a candidate fits slo = base - 1
+    assert!(base_cost > 3, "mock base cost too small to downshift ({base_cost})");
+
+    // default EWMA is 1000 µs/NFE, so the base projection is base_cost
+    // ms; an SLO 1 ms under it forces the spec search off the default
+    let slo = base_cost - 1;
+    let (status, _, body) = post_generate(
+        addr,
+        &format!("{{\"seed\":3,\"src\":\"{SRC}\",\"tier\":\"balanced\",\"slo_ms\":{slo}}}"),
+    );
+    assert_eq!(status, 200, "{body}");
+    let json = Json::parse(&body).expect("blocking response parses");
+    let tier = json.get("tier").expect("tier decision echoed");
+    let projected = tier.num_field("projected_nfe").unwrap();
+    assert!(
+        projected < base_cost as f64,
+        "SLO under the base projection must pick a cheaper spec ({projected} vs {base_cost})"
+    );
+    assert!(tier.num_field("projected_ms").unwrap() <= slo as f64);
+    assert!(!tier.str_field("chosen_spec").unwrap().is_empty());
+    // served NFE == admission-time projection, exactly
+    assert_eq!(json.num_field("nfe").unwrap(), projected, "{body}");
+    teardown(router, server);
+}
+
+/// A Balanced SLO no point in the spec grid can meet is shed with 503 +
+/// Retry-After before the router ever sees it: `nn_calls` stays 0.
+#[test]
+fn unmeetable_slo_503s_without_a_denoiser_call() {
+    let policy = AdmissionPolicy {
+        rate_limit: None,
+        initial_us_per_nfe: 1_000_000.0, // 1 s per call: nothing fits 1 ms
+        ewma_alpha: 0.2,
+    };
+    let (router, server, _) = front(policy);
+    let addr = server.local_addr();
+    let (status, headers, body) = post_generate(
+        addr,
+        &format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"balanced\",\"slo_ms\":1}}"),
+    );
+    assert_eq!(status, 503, "{body}");
+    assert!(
+        headers.iter().any(|(k, _)| k == "retry-after"),
+        "503 must carry Retry-After"
+    );
+    let stats = router.stats().unwrap();
+    assert_eq!(stats.requests, 0, "rejected requests never reach the router");
+    assert_eq!(stats.nn_calls, 0, "rejected requests never consume a denoiser call");
+    teardown(router, server);
+}
+
+/// Streaming Turbo request: the `queued` frame carries the truncated
+/// cost, the `admitted` frame echoes the tier decision, and the `done`
+/// NFE equals both.
+#[test]
+fn streamed_turbo_request_echoes_the_tier_decision() {
+    let (router, server, mcfg) = front(no_limits());
+    let addr = server.local_addr();
+    let capped = SamplerConfig::new(SamplerKind::Dndm, 25).with_max_nfe(2);
+    let cost = exact_cost(&mcfg, &capped, 5).unwrap() as f64;
+
+    let (status, _, body) = post_generate(
+        addr,
+        &format!("{{\"seed\":5,\"src\":\"{SRC}\",\"max_nfe\":2,\"stream\":true}}"),
+    );
+    assert_eq!(status, 200, "{body}");
+    let events = sse_events(&body);
+    assert_eq!(events[0].0, "queued", "{events:?}");
+    assert_eq!(
+        Json::parse(&events[0].1).unwrap().num_field("nfe_total").unwrap(),
+        cost,
+        "queued frame must carry the truncated cost"
+    );
+    assert_eq!(events[1].0, "admitted", "{events:?}");
+    let tier = Json::parse(&events[1].1).unwrap();
+    let tier = tier.get("tier").expect("admitted frame echoes the decision");
+    assert_eq!(tier.num_field("projected_nfe").unwrap(), cost);
+    let spec = tier.str_field("chosen_spec").unwrap().to_string();
+    assert!(spec.contains("#cap2"), "chosen spec must show the cap: {spec}");
+    let (_, done) = events.iter().find(|(n, _)| n == "done").expect("done event");
+    assert_eq!(Json::parse(done).unwrap().num_field("nfe").unwrap(), cost);
+    teardown(router, server);
+}
+
+/// Tier-surface conflicts are 400s, and a bare `max_nfe` / `slo_ms`
+/// implies its tier.
+#[test]
+fn conflicting_tier_fields_are_rejected_with_400() {
+    let (router, server, _) = front(no_limits());
+    let addr = server.local_addr();
+    for bad in [
+        // tier-driven selection conflicts with an explicit schedule
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"turbo\",\"max_nfe\":2,\"steps\":10}}"),
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"balanced\",\"slo_ms\":5,\"spec\":\"uniform\"}}"),
+        // incoherent tier/parameter pairings
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"quality\",\"slo_ms\":5}}"),
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"balanced\",\"max_nfe\":2}}"),
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"turbo\",\"slo_ms\":5}}"),
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"slo_ms\":5,\"max_nfe\":2}}"),
+        format!("{{\"seed\":0,\"src\":\"{SRC}\",\"tier\":\"premium\",\"slo_ms\":5}}"),
+    ] {
+        let (status, _, body) = post_generate(addr, &bad);
+        assert_eq!(status, 400, "{bad} -> {body}");
+    }
+    // a bare max_nfe implies Turbo and succeeds
+    let (status, _, body) =
+        post_generate(addr, &format!("{{\"seed\":1,\"src\":\"{SRC}\",\"max_nfe\":2}}"));
+    assert_eq!(status, 200, "{body}");
+    let json = Json::parse(&body).unwrap();
+    assert!(json.get("tier").is_some(), "implied Turbo still echoes a decision: {body}");
+    assert!(json.num_field("nfe").unwrap() <= 2.0);
+    let stats = router.stats().unwrap();
+    assert_eq!(stats.requests, 1, "the 400s never reached the router");
+    teardown(router, server);
+}

@@ -34,6 +34,13 @@ exact-cost projection cannot meet once the backlog grows), so BOTH
 counters must be strictly positive — zero means the shed path silently
 stopped shedding.
 
+`early_retired` / `turbo_truncated_nfe` are gated both ways the same way
+(docs/tiers.md): only the "tiered" row submits Balanced/Turbo requests,
+so both must be strictly positive there (a zero means truncation or
+confidence-based retirement silently stopped firing) and exactly 0 on
+every other row (Quality-path requests must never be truncated or
+retired early — that would break the byte-identity guarantee).
+
 Ratchet policy (see the baseline file): ceilings start generous; once the
 uploaded BENCH_serving.json artifacts record a stable trajectory, lower
 each ceiling to ~1.5x the observed steady value.
@@ -82,6 +89,17 @@ def main() -> int:
             elif not is_admission and count != 0:
                 print(f"{policy:28s} {field} {count}  REJECTION LEAK (must be 0)")
                 failures.append(policy)
+        is_tiered = "tiered" in policy
+        for field in ("early_retired", "turbo_truncated_nfe"):
+            count = row.get(field)
+            if count is None:
+                continue
+            if is_tiered and count == 0:
+                print(f"{policy:28s} {field} {count}  TIER PATH INERT (must be > 0)")
+                failures.append(policy)
+            elif not is_tiered and count != 0:
+                print(f"{policy:28s} {field} {count}  TIER LEAK (must be 0)")
+                failures.append(policy)
         value = row["allocs_per_call"]
         if policy not in ceilings:
             print(f"{policy:28s} allocs/call {value:9.1f}  (no ceiling — not gated)")
@@ -108,10 +126,14 @@ def main() -> int:
         print("means fault classification or the retry ladder regressed.")
         print("rejected_* counts must be 0 off the admission row and > 0 on it:")
         print("the admission burst is sized to shed deterministically (docs/http.md).")
+        print("early_retired / turbo_truncated_nfe must be 0 off the tiered row and")
+        print("> 0 on it: only Balanced/Turbo requests may be retired or truncated")
+        print("(docs/tiers.md).")
         return 1
     print(
         "\nbench gate passed (allocs/call ceilings + ghost_events_fired == 0"
-        " + faults_fatal == 0 + breaker_open == 0 + admission sheds, others don't)"
+        " + faults_fatal == 0 + breaker_open == 0 + admission sheds, tiers"
+        " retire/truncate, others don't)"
     )
     return 0
 
