@@ -1,0 +1,469 @@
+//! Adversarial scenario-mix load harness (`docs/scenarios.md`): six
+//! deterministic, mock-backed serving mixes driven through a 2-shard
+//! continuous [`Router`], each recording its end-to-end latency digest
+//! (p50/p99/p999), throughput, and the full shed/steal/donate/retire
+//! counter surface into `BENCH_scenarios.json` — the in-repo latency
+//! trajectory CI gates with `scripts/check_bench_scenarios.py`.
+//!
+//! The mixes:
+//!
+//! * `poisson_burst`   — bursty arrivals: seeded burst sizes + pauses;
+//! * `mixed_spec`      — three interleaved `SpecKey`s, per-request |𝒯|;
+//! * `cancel_storm`    — half the tickets cancelled mid-flight;
+//! * `skewed_tenant`   — Zipf-skewed tenant attribution (head = 50%);
+//! * `tiered_mix`      — ⅓ Quality / ⅓ Balanced / ⅓ Turbo in one pool;
+//! * `chaos_transient` — seeded transient denoiser faults, absorbed.
+//!
+//! Every scenario is deterministic in its *counters*: seeds are fixed,
+//! the cipher mock is pure, and |𝒯| is predetermined — so NFE
+//! conservation (`served_nfe == expected_nfe` on `nfe_exact` rows),
+//! ghost-freedom, and fault classification are hard invariants the
+//! checker gates at exact values. Wall-clock figures (throughput,
+//! latency percentiles) are machine-dependent and only held to
+//! generous ratchet ceilings (`benches/scenarios_latency_baseline.json`).
+//!
+//! Always mock-backed, never probing real artifacts: the adversarial
+//! value is in the scheduling/cancellation/fault interleavings, not the
+//! network, and determinism leans on the cipher denoiser.
+
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{
+    cipher_mock_denoiser, cipher_mock_engine, Engine, Event, FaultPolicy, GenRequest,
+    RebalancePolicy, Router, SchedPolicy, ServeBuilder, ServerStats, Tier,
+};
+use dndm::data::words;
+use dndm::net::exact_cost;
+use dndm::runtime::{ChaosDenoiser, Denoiser};
+use dndm::sampler::{SamplerConfig, SamplerKind};
+use dndm::util::bench::Table;
+
+const SHARDS: usize = 2;
+
+const SRCS: [&str; 3] = [
+    "the quick fox crosses a river",
+    "a small garden by the road",
+    "this old road to the river",
+];
+
+/// SplitMix64 — the repo's stock deterministic stream for seeded
+/// schedules (same generator the latency reservoir uses).
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-request lanes: the admission-time |𝒯| is each request's served
+/// NFE exactly, and `nn_calls` tallies sequence evaluations — so clean
+/// scenarios have an exact conservation expectation.
+fn per_request(max_batch: usize) -> SchedPolicy {
+    SchedPolicy { max_batch, window: Duration::ZERO, shared_tau_groups: false }
+}
+
+fn router(max_batch: usize, cfg: SamplerConfig) -> Router {
+    ServeBuilder::new(|| Ok(cipher_mock_engine(8)), cfg)
+        .continuous(per_request(max_batch))
+        .shards(SHARDS)
+        .rebalance(RebalancePolicy::manual())
+        .start()
+}
+
+/// Zipf-skewed tenant assignment: rank r gets ~1/(r+1) of the traffic,
+/// so the head tenant owns half the submits.
+fn zipf_tenant(i: usize) -> &'static str {
+    match i % 12 {
+        0..=5 => "t0",
+        6..=8 => "t1",
+        9..=10 => "t2",
+        _ => "t3",
+    }
+}
+
+struct Row {
+    scenario: &'static str,
+    requests: usize,
+    req_per_s: f64,
+    e2e_p50_ms: f64,
+    e2e_p99_ms: f64,
+    e2e_p999_ms: f64,
+    /// merged denoiser sequence-evaluation tally (`ServerStats::nn_calls`)
+    served_nfe: u64,
+    /// Σ over submitted requests of the host-side exact cost |𝒯| — the
+    /// conservation expectation where `nfe_exact` is set
+    expected_nfe: u64,
+    /// whether `served_nfe == expected_nfe` is a hard invariant of this
+    /// scenario (false where cancellation / truncation / early
+    /// retirement legitimately change the served total)
+    nfe_exact: bool,
+    ghost_events_fired: u64,
+    retries: u64,
+    faults_transient: u64,
+    faults_fatal: u64,
+    breaker_open: u64,
+    cancelled: u64,
+    deadline_exceeded: u64,
+    stolen: u64,
+    lanes_donated: u64,
+    lanes_salvaged: u64,
+    early_retired: u64,
+    turbo_truncated_nfe: u64,
+    /// Σ of per-tenant submit counts (0 on scenarios that submit no
+    /// tenant attribution)
+    tenant_total: u64,
+    /// distinct tenants observed
+    tenant_count: u64,
+}
+
+/// Assemble a row from the merged **board** report — the same lock-free
+/// read path `/metrics` scrapes. One channel `stats()` barrier first:
+/// both serve loops publish the board before answering, so afterwards
+/// the board is at least as fresh as the last terminal
+/// (`tests/scenarios.rs` pins board == channel at quiesce).
+fn make_row(
+    scenario: &'static str,
+    rt: &Router,
+    n_requests: usize,
+    wall: f64,
+    expected_nfe: u64,
+    nfe_exact: bool,
+) -> Row {
+    let channel = rt.stats().expect("stats barrier");
+    let stats: ServerStats = rt.board_stats();
+    assert_eq!(
+        stats.nn_calls, channel.nn_calls,
+        "{scenario}: board and channel must agree at quiesce"
+    );
+    let tenant_total = stats.tenant_requests.iter().map(|(_, n)| n).sum();
+    Row {
+        scenario,
+        requests: n_requests,
+        req_per_s: n_requests as f64 / wall,
+        e2e_p50_ms: stats.e2e.p50.as_secs_f64() * 1e3,
+        e2e_p99_ms: stats.e2e.p99.as_secs_f64() * 1e3,
+        e2e_p999_ms: stats.e2e.p999.as_secs_f64() * 1e3,
+        served_nfe: stats.nn_calls,
+        expected_nfe,
+        nfe_exact,
+        ghost_events_fired: stats.ghost_events_fired,
+        retries: stats.retries,
+        faults_transient: stats.faults_transient,
+        faults_fatal: stats.faults_fatal,
+        breaker_open: stats.breaker_open as u64,
+        cancelled: stats.cancelled,
+        deadline_exceeded: stats.deadline_exceeded,
+        stolen: stats.stolen,
+        lanes_donated: stats.lanes_donated,
+        lanes_salvaged: stats.lanes_salvaged,
+        early_retired: stats.early_retired,
+        turbo_truncated_nfe: stats.turbo_truncated_nfe,
+        tenant_total,
+        tenant_count: stats.tenant_requests.len() as u64,
+    }
+}
+
+/// Bursty arrivals: burst sizes 1–8 and 0–2 ms pauses from a seeded
+/// SplitMix64 stream, one spec, per-request lanes. The queue repeatedly
+/// empties and refills, exercising admission grouping under a lumpy
+/// arrival process; conservation stays exact.
+fn run_poisson_burst(n: usize, steps: usize) -> Row {
+    let rt = router(8, SamplerConfig::new(SamplerKind::D3pm, steps));
+    let mut rng = 0x5CE_0B57u64;
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(n);
+    while tickets.len() < n {
+        let burst = (splitmix(&mut rng) % 8 + 1) as usize;
+        for _ in 0..burst.min(n - tickets.len()) {
+            let i = tickets.len();
+            let req = GenRequest::new(i as u64).src(SRCS[i % SRCS.len()]);
+            tickets.push(rt.submit_request(req).unwrap());
+        }
+        std::thread::sleep(Duration::from_millis(splitmix(&mut rng) % 3));
+    }
+    for t in tickets {
+        t.wait().expect("burst request must finish");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = make_row("poisson_burst", &rt, n, wall, (n * steps) as u64, true);
+    rt.shutdown();
+    rt.join();
+    row
+}
+
+/// Three interleaved `SpecKey`s — two DNDM ladders of different depth
+/// plus an absorbing D3PM chain — through one pool. Lanes are
+/// spec-homogeneous, so the mix stresses spec-keyed admission; each
+/// request's exact cost is computed host-side before submit and the sum
+/// must be served exactly.
+fn run_mixed_spec(n: usize) -> Row {
+    let mcfg = cipher_mock_denoiser(8).config().clone();
+    let rt = router(8, SamplerConfig::new(SamplerKind::Dndm, 25));
+    let specs = [
+        SamplerConfig::new(SamplerKind::Dndm, 25),
+        SamplerConfig::new(SamplerKind::Dndm, 40),
+        SamplerConfig::new(SamplerKind::D3pm, 30),
+    ];
+    let mut expected = 0u64;
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            let cfg = specs[i % specs.len()].clone();
+            expected += exact_cost(&mcfg, &cfg, i as u64).unwrap();
+            let req = GenRequest::new(i as u64).src(SRCS[i % SRCS.len()]).config(cfg);
+            rt.submit_request(req).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("mixed-spec request must finish");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = make_row("mixed_spec", &rt, n, wall, expected, true);
+    rt.shutdown();
+    rt.join();
+    row
+}
+
+/// The cancellation storm: every other ticket is cancelled at its first
+/// progress boundary, evicting live lane rows while their neighbours
+/// keep flying. Ghost-freedom is the invariant — eviction must retire
+/// the departed row's unique transition times.
+fn run_cancel_storm(n: usize, steps: usize) -> Row {
+    let rt = router(8, SamplerConfig::new(SamplerKind::D3pm, steps));
+    let t0 = Instant::now();
+    let mut tickets: Vec<_> = (0..n)
+        .map(|i| {
+            rt.submit_request(GenRequest::new(i as u64).src(SRCS[i % SRCS.len()])).unwrap()
+        })
+        .collect();
+    for t in tickets.iter_mut().skip(1).step_by(2) {
+        loop {
+            match t.next_event() {
+                Some(Event::Progress { .. }) => {
+                    t.cancel();
+                    break;
+                }
+                Some(Event::Admitted { .. }) => {}
+                _ => break, // already terminal
+            }
+        }
+    }
+    for (i, t) in tickets.into_iter().enumerate() {
+        let res = t.wait();
+        if i % 2 == 0 {
+            res.expect("surviving request must finish");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = make_row("cancel_storm", &rt, n, wall, (n * steps) as u64, false);
+    assert!(row.cancelled > 0, "the storm must land at least one mid-flight cancellation");
+    rt.shutdown();
+    rt.join();
+    row
+}
+
+/// Zipf-skewed tenant attribution: the head tenant owns half the
+/// submits. The served work is tenant-blind (no per-tenant scheduling),
+/// so conservation stays exact while the per-tenant accounting the
+/// front door's rate limiting reads must sum to the submit count.
+fn run_skewed_tenant(n: usize, steps: usize) -> Row {
+    let rt = router(8, SamplerConfig::new(SamplerKind::D3pm, steps));
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            let req = GenRequest::new(i as u64)
+                .src(SRCS[i % SRCS.len()])
+                .tenant(zipf_tenant(i));
+            rt.submit_request(req).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("tenant request must finish");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = make_row("skewed_tenant", &rt, n, wall, (n * steps) as u64, true);
+    assert_eq!(row.tenant_total, n as u64, "every submit is attributed");
+    assert_eq!(row.tenant_count, 4, "four Zipf ranks");
+    rt.shutdown();
+    rt.join();
+    row
+}
+
+/// The tiered mix (docs/tiers.md): ⅓ Quality (full DNDM ladder), ⅓
+/// Balanced (absorbing D3PM, early retirement opted in — the cipher
+/// chain settles before its last steps), ⅓ Turbo (|𝒯| capped at 2).
+/// Served NFE is deliberately *below* the uncapped expectation: the
+/// refunds are the point, and the both-ways checker gates pin them
+/// strictly positive here and zero everywhere else.
+fn run_tiered_mix(n: usize, steps: usize) -> Row {
+    let dndm_cfg = SamplerConfig::new(SamplerKind::Dndm, steps);
+    let rt = router(8, dndm_cfg.clone());
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            let req = GenRequest::new(i as u64).src(SRCS[i % SRCS.len()]);
+            let req = match i % 3 {
+                0 => req, // Quality: server-default config, full ladder
+                1 => req
+                    .config(SamplerConfig::new(SamplerKind::D3pm, 30))
+                    .tier(Tier::Balanced { slo_ms: 60_000 }),
+                _ => req
+                    .config(dndm_cfg.clone().with_max_nfe(2))
+                    .tier(Tier::Turbo { max_nfe: 2 }),
+            };
+            rt.submit_request(req).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("tiered request must finish");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = make_row("tiered_mix", &rt, n, wall, 0, false);
+    assert!(row.early_retired > 0, "Balanced third must early-retire settled rows");
+    assert!(row.turbo_truncated_nfe > 0, "Turbo third must truncate transition times");
+    rt.shutdown();
+    rt.join();
+    row
+}
+
+/// Seeded transient denoiser faults at a rate far below the breaker
+/// threshold, absorbed by a zero-backoff retry policy. Faulted attempts
+/// never reach the sequence-evaluation counter, so conservation stays
+/// exact *through* the faults — the retry cost shows up in latency, not
+/// in the NFE ledger.
+fn run_chaos_transient(n: usize, steps: usize) -> Row {
+    let absorb = FaultPolicy {
+        max_retries: 16,
+        backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        call_timeout: None,
+        breaker_threshold: 1000,
+        breaker_cooldown: Duration::from_millis(250),
+    };
+    let rt = ServeBuilder::new(
+        || {
+            let den = ChaosDenoiser::new(cipher_mock_denoiser(8), 0x5CE_4A05).transient_rate(0.05);
+            Ok(Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-chaos"))
+        },
+        SamplerConfig::new(SamplerKind::D3pm, steps),
+    )
+    .continuous(per_request(8))
+    .shards(SHARDS)
+    .rebalance(RebalancePolicy::manual())
+    .fault_policy(absorb)
+    .start();
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            rt.submit_request(GenRequest::new(i as u64).src(SRCS[i % SRCS.len()])).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("chaos request must finish (transient faults are absorbed)");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let row = make_row("chaos_transient", &rt, n, wall, (n * steps) as u64, true);
+    assert!(row.retries > 0, "the seeded fault rate must fire at least once");
+    assert_eq!(row.faults_fatal, 0, "transient-only injection");
+    rt.shutdown();
+    rt.join();
+    row
+}
+
+fn save_json(rows: &[Row]) {
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"bench_scenarios\",\n");
+    json.push_str("  \"backend\": \"mock\",\n");
+    json.push_str(&format!("  \"shards\": {SHARDS},\n"));
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"requests\": {}, \"req_per_s\": {:.3}, \
+             \"e2e_p50_ms\": {:.3}, \"e2e_p99_ms\": {:.3}, \"e2e_p999_ms\": {:.3}, \
+             \"served_nfe\": {}, \"expected_nfe\": {}, \"nfe_exact\": {}, \
+             \"ghost_events_fired\": {}, \"retries\": {}, \"faults_transient\": {}, \
+             \"faults_fatal\": {}, \"breaker_open\": {}, \"cancelled\": {}, \
+             \"deadline_exceeded\": {}, \"stolen\": {}, \"lanes_donated\": {}, \
+             \"lanes_salvaged\": {}, \"early_retired\": {}, \"turbo_truncated_nfe\": {}, \
+             \"tenant_total\": {}, \"tenant_count\": {}}}{}\n",
+            r.scenario,
+            r.requests,
+            r.req_per_s,
+            r.e2e_p50_ms,
+            r.e2e_p99_ms,
+            r.e2e_p999_ms,
+            r.served_nfe,
+            r.expected_nfe,
+            r.nfe_exact,
+            r.ghost_events_fired,
+            r.retries,
+            r.faults_transient,
+            r.faults_fatal,
+            r.breaker_open,
+            r.cancelled,
+            r.deadline_exceeded,
+            r.stolen,
+            r.lanes_donated,
+            r.lanes_salvaged,
+            r.early_retired,
+            r.turbo_truncated_nfe,
+            r.tenant_total,
+            r.tenant_count,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_scenarios.json", &json) {
+        Ok(()) => println!("[bench_scenarios] wrote BENCH_scenarios.json"),
+        Err(e) => eprintln!("[bench_scenarios] could not write BENCH_scenarios.json: {e}"),
+    }
+}
+
+fn main() {
+    let rows = vec![
+        run_poisson_burst(64, 30),
+        run_mixed_spec(60),
+        run_cancel_storm(48, 2000),
+        run_skewed_tenant(64, 25),
+        run_tiered_mix(48, 50),
+        run_chaos_transient(48, 40),
+    ];
+
+    let mut out = Table::new(&[
+        "scenario", "reqs", "req/s", "p50(ms)", "p99(ms)", "p999(ms)", "served NFE", "expected",
+        "ghosts", "retries", "cancelled",
+    ]);
+    for r in &rows {
+        out.row(&[
+            r.scenario.into(),
+            r.requests.to_string(),
+            format!("{:.1}", r.req_per_s),
+            format!("{:.1}", r.e2e_p50_ms),
+            format!("{:.1}", r.e2e_p99_ms),
+            format!("{:.1}", r.e2e_p999_ms),
+            r.served_nfe.to_string(),
+            if r.nfe_exact { r.expected_nfe.to_string() } else { "-".into() },
+            r.ghost_events_fired.to_string(),
+            r.retries.to_string(),
+            r.cancelled.to_string(),
+        ]);
+    }
+    println!("\n== Scenario-mix load harness ({SHARDS} shards, mock backend) ==");
+    out.print();
+
+    for r in &rows {
+        assert_eq!(r.ghost_events_fired, 0, "{}: ghost events", r.scenario);
+        assert_eq!(r.faults_fatal, 0, "{}: fatal faults", r.scenario);
+        assert_eq!(r.breaker_open, 0, "{}: breaker left open", r.scenario);
+        if r.nfe_exact {
+            assert_eq!(
+                r.served_nfe, r.expected_nfe,
+                "{}: NFE conservation (|𝒯| is predetermined)",
+                r.scenario
+            );
+        }
+    }
+    save_json(&rows);
+}

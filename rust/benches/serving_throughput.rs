@@ -369,6 +369,7 @@ fn run_admission(name: &'static str, n_requests: usize, steps: usize) -> Row {
             rate_limit: Some(RateLimit { burst: (n_requests / 2) as f64, per_sec: 0.0 }),
             initial_us_per_nfe: 1000.0,
             ewma_alpha: 0.2,
+            use_board_pace: false,
         },
         1,
     );

@@ -27,6 +27,11 @@
 //!   scheduler's denoiser call sites, a circuit breaker that parks lanes
 //!   at a boundary, salvage onto healthy shards, engine restart. See
 //!   `docs/rebalancing.md` and `docs/robustness.md`.
+//! * [`telemetry`] — the per-shard lock-free [`StatsBoard`]: engine
+//!   threads publish counters/gauges/seqlock snapshots on every tick and
+//!   terminal; the rebalancer's views, admission's pace projection and
+//!   the `/metrics` scrape read them without `Msg::Stats` channel
+//!   round-trips, so observation never blocks on a parked or dead shard.
 //! * [`batcher`] — the legacy fixed batching policy (max size +
 //!   collection window), kept as the serving bench's ablation baseline.
 
@@ -37,6 +42,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod telemetry;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{cipher_mock_denoiser, cipher_mock_engine, Engine, GenOutput};
@@ -48,3 +54,4 @@ pub use scheduler::{
     Scheduler, SpecKey,
 };
 pub use server::{Server, ServerStats};
+pub use telemetry::{BoardView, PaceView, SeqCell, StatsBoard};

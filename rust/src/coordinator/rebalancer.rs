@@ -40,10 +40,25 @@
 //! The decision policy is **pure** — [`plan`] maps per-shard
 //! [`ShardView`]s to at most one [`Action`], and [`pick_donation`] is the
 //! lane-level cost model — so both are unit-testable without threads or
-//! channels. The thin I/O wrapper [`run_pass`] gathers the views (one
-//! stats round-trip per shard, answered between denoiser calls) and
-//! executes the plan; the background thread in `spawn_background` just
-//! calls it on a timer.
+//! channels. The thin I/O wrapper [`run_pass`] gathers the views from
+//! each shard's lock-free [`StatsBoard`] (no `Msg::Stats` channel
+//! round-trips at steady state — the engine loop publishes its gauges
+//! between denoiser calls and the pass just reads atomics) and executes
+//! the plan; the background thread in `spawn_background` calls it on a
+//! timer. One freshness escape hatch remains: a submit the engine has
+//! not yet ingested is invisible to the board
+//! ([`StatsBoard::has_unseen_submits`]), so for exactly those shards a
+//! pass falls back to one channel `stats()` — the reply is answered
+//! after the queued `Msg::Req`s, restoring the submit→view ordering
+//! that manual `rebalance()` callers (and the steal-count pins in
+//! `tests/rebalance.rs`) rely on. The trade: board passes are no longer
+//! serialized against the donor's message loop, so two close-together
+//! passes can both observe the same imbalance and over-donate
+//! transiently — the next pass sees the result and corrects, which is
+//! the same self-correction contract the cadence loop already had.
+//!
+//! [`StatsBoard`]: super::telemetry::StatsBoard
+//! [`StatsBoard::has_unseen_submits`]: super::telemetry::StatsBoard::has_unseen_submits
 //!
 //! The same cadence loop also runs a **supervision pass** first (shard
 //! failover, `docs/robustness.md`): a shard whose circuit breaker is
@@ -84,12 +99,13 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::server::Server;
+use super::telemetry::StatsBoard;
 
 /// When and how aggressively the router rebalances. Defaults are tuned
-/// for "always on, never disruptive": a 100 ms cadence is ~10 stats
-/// round-trips per second per shard (each answered between two denoiser
-/// calls), and the thresholds refuse any move that would not increase
-/// parallelism.
+/// for "always on, never disruptive": a 100 ms cadence is ~10 lock-free
+/// board reads per second per shard (channel stats round-trips happen
+/// only for a shard with just-submitted, not-yet-ingested work), and
+/// the thresholds refuse any move that would not increase parallelism.
 #[derive(Debug, Clone, Copy)]
 pub struct RebalancePolicy {
     /// Cadence of the background loop. `None` disables the thread
@@ -289,15 +305,17 @@ pub fn plan_supervision(views: &[ShardView]) -> Vec<(usize, usize)> {
         .collect()
 }
 
-/// A shard as the rebalancer addresses it: the cloneable server handle
-/// plus the router's load gauge for that shard.
+/// A shard as the rebalancer addresses it: the cloneable server handle,
+/// the router's load gauge, and the shard's lock-free stats board —
+/// what passes read instead of making `Msg::Stats` round-trips.
 #[derive(Clone)]
 pub(crate) struct ShardHandle {
     pub(crate) server: Server,
     pub(crate) load: Arc<AtomicUsize>,
+    pub(crate) board: Arc<StatsBoard>,
 }
 
-/// Snapshot one shard into the planner's pure view.
+/// Snapshot one shard into the planner's pure view (channel-stats path).
 fn shard_view(st: &super::server::ServerStats, sh: &ShardHandle) -> ShardView {
     ShardView {
         queued: (st.queued_low + st.queued_normal + st.queued_high) as usize,
@@ -309,20 +327,49 @@ fn shard_view(st: &super::server::ServerStats, sh: &ShardHandle) -> ShardView {
     }
 }
 
-/// One supervision pass (shard failover): snapshot every shard,
-/// [`plan_supervision`], and for each broken shard dispatch the two
-/// failover stages — salvage (queued requests + parked lanes move to
-/// the target, byte-exactly) then an engine restart from the retained
-/// factory. Both are fire-and-forget boundary-granular messages; a
-/// shard whose breaker closed on its own in the meantime ignores them.
-/// Returns how many broken shards were acted on. Errors only when a
-/// shard is gone (shutdown) — callers treat that as "stop", not a
-/// failure.
-pub(crate) fn supervise_pass(shards: &[ShardHandle]) -> Result<usize> {
+/// Gather every shard's [`ShardView`] for one pass. The steady-state
+/// path is lock-free: the shard's engine loop publishes its gauges to
+/// the [`StatsBoard`] on every tick, and this just reads atomics — a
+/// breaker-parked or dead shard can no longer stall supervision (its
+/// loop published `healthy: false` / its failure path published a final
+/// snapshot before parking). The one exception is a shard whose board
+/// is behind its own submit queue ([`StatsBoard::has_unseen_submits`]):
+/// only for that shard the pass pays one channel `stats()` round-trip,
+/// whose reply — answered after the queued `Msg::Req`s — re-syncs the
+/// board and preserves submit→view ordering for manual `rebalance()`
+/// callers. Errors only when that fallback shard is gone (shutdown).
+pub(crate) fn collect_views(shards: &[ShardHandle]) -> Result<Vec<ShardView>> {
     let mut views = Vec::with_capacity(shards.len());
     for sh in shards {
-        views.push(shard_view(&sh.server.stats()?, sh));
+        if sh.board.alive() && sh.board.has_unseen_submits() {
+            views.push(shard_view(&sh.server.stats()?, sh));
+        } else {
+            let v = sh.board.view();
+            views.push(ShardView {
+                queued: v.queued,
+                lanes: v.lanes,
+                in_flight: v.in_flight,
+                load: sh.load.load(Ordering::Relaxed),
+                healthy: v.healthy,
+                breaker_open: v.breaker_open,
+            });
+        }
     }
+    Ok(views)
+}
+
+/// One supervision pass (shard failover): snapshot every shard from its
+/// board ([`collect_views`] — a parked shard can no longer stall the
+/// pass), [`plan_supervision`], and for each broken shard dispatch the
+/// two failover stages — salvage (queued requests + parked lanes move
+/// to the target, byte-exactly) then an engine restart from the
+/// retained factory. Both are fire-and-forget boundary-granular
+/// messages; a shard whose breaker closed on its own in the meantime
+/// ignores them. Returns how many broken shards were acted on. Errors
+/// only when a shard is gone (shutdown) — callers treat that as "stop",
+/// not a failure.
+pub(crate) fn supervise_pass(shards: &[ShardHandle]) -> Result<usize> {
+    let views = collect_views(shards)?;
     let pairs = plan_supervision(&views);
     for &(broken, target) in &pairs {
         shards[broken]
@@ -333,18 +380,16 @@ pub(crate) fn supervise_pass(shards: &[ShardHandle]) -> Result<usize> {
     Ok(pairs.len())
 }
 
-/// One rebalance pass: snapshot every shard (stats round-trip + load
-/// gauge), [`plan`], dispatch. Returns the action taken, if any. Errors
-/// only when a shard is gone (shutdown) — callers treat that as "stop
+/// One rebalance pass: snapshot every shard (board read + load gauge,
+/// no channel round-trips at steady state — see [`collect_views`]),
+/// [`plan`], dispatch. Returns the action taken, if any. Errors only
+/// when a shard is gone (shutdown) — callers treat that as "stop
 /// rebalancing", not a failure.
 pub(crate) fn run_pass(
     shards: &[ShardHandle],
     policy: &RebalancePolicy,
 ) -> Result<Option<Action>> {
-    let mut views = Vec::with_capacity(shards.len());
-    for sh in shards {
-        views.push(shard_view(&sh.server.stats()?, sh));
-    }
+    let views = collect_views(shards)?;
     let action = plan(&views, policy);
     match action {
         Some(Action::StealQueued { donor, thief, max }) => {

@@ -66,6 +66,7 @@ use super::rebalancer::{self, RebalancePolicy, RebalancerGuard, ShardHandle};
 use super::request::{GenRequest, Ticket};
 use super::scheduler::{FaultPolicy, SchedPolicy, SpecKey};
 use super::server::{Server, ServerJoin, ServerStats};
+use super::telemetry::StatsBoard;
 
 /// Scheduling mode of every shard a [`ServeBuilder`] starts.
 #[derive(Debug, Clone, Copy)]
@@ -202,11 +203,15 @@ struct Shard {
 }
 
 /// The shards as the rebalancer addresses them (cheap clones of the
-/// server sender + load gauge).
+/// server sender + load gauge + stats board).
 fn handles_of(shards: &[Shard]) -> Vec<ShardHandle> {
     shards
         .iter()
-        .map(|s| ShardHandle { server: s.server.clone(), load: s.load.clone() })
+        .map(|s| ShardHandle {
+            server: s.server.clone(),
+            load: s.load.clone(),
+            board: s.server.board().clone(),
+        })
         .collect()
 }
 
@@ -454,6 +459,32 @@ impl Router {
 
     pub fn shard_stats(&self) -> Result<Vec<ServerStats>> {
         self.shards.iter().map(|s| s.server.stats()).collect()
+    }
+
+    /// Each shard's lock-free [`StatsBoard`] (index-aligned with
+    /// [`Self::shard`]). The network front door reads these directly —
+    /// admission's pace projection and the `/metrics` scrape never pay
+    /// a channel round-trip.
+    pub fn boards(&self) -> Vec<Arc<StatsBoard>> {
+        self.shards.iter().map(|s| s.server.board().clone()).collect()
+    }
+
+    /// [`Self::stats`] served entirely from the shards' lock-free
+    /// boards: same merge semantics, zero `Msg::Stats` round-trips, and
+    /// — unlike the channel path — it cannot block on a breaker-parked
+    /// or dead shard, whose loop stopped answering messages but whose
+    /// board still holds its last published snapshot. The board lags
+    /// the channel view only by work the engine has accepted but not
+    /// yet reached a publish point for (sub-tick staleness; the two
+    /// agree exactly at quiesce — pinned in `tests/scenarios.rs`).
+    pub fn board_stats(&self) -> ServerStats {
+        ServerStats::merged(self.board_shard_stats())
+    }
+
+    /// Per-shard stats from the boards (the non-blocking counterpart of
+    /// [`Self::shard_stats`]).
+    pub fn board_shard_stats(&self) -> Vec<ServerStats> {
+        self.shards.iter().map(|s| s.server.board().snapshot()).collect()
     }
 
     /// Ask every shard to drain and exit. Follow with [`Self::join`] (or

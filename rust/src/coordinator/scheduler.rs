@@ -674,6 +674,16 @@ impl<P> Scheduler<P> {
         self.lanes.len()
     }
 
+    /// Remaining denoiser calls the in-flight lanes still owe — the sum
+    /// of every lane's unfired merged-ladder events. Exact, not an
+    /// estimate: 𝒯 is predetermined, so each lane's remaining event
+    /// count is known the moment it is admitted. This is the backlog
+    /// figure the telemetry board publishes for admission's pace
+    /// projection.
+    pub fn backlog_events(&self) -> u64 {
+        self.lanes.iter().map(|l| l.remaining_events() as u64).sum()
+    }
+
     /// Queued requests per priority class, indexed `[Low, Normal, High]`
     /// — the instantaneous depths behind `ServerStats::queued_*`.
     pub fn queue_depths(&self) -> [usize; 3] {

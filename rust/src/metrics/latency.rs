@@ -26,7 +26,9 @@ use crate::schedule::SplitMix64;
 
 /// Reservoir capacity. Nearest-rank percentiles up to p99 need ~100
 /// samples for one rank of resolution; 4096 keeps p99 stable to well
-/// under a rank while costing 32 KiB per stats instance.
+/// under a rank while costing 32 KiB per stats instance. p999 needs
+/// ~1000 samples for its first rank of resolution — below that it
+/// degrades gracefully to the reservoir maximum.
 const RESERVOIR_CAP: usize = 4096;
 
 /// Lazily rebuilt sorted view of the reservoir (interior state of
@@ -83,10 +85,85 @@ pub struct LatencySnapshot {
     pub p50: Duration,
     pub p95: Duration,
     pub p99: Duration,
+    /// tail percentile for the scenario harness' latency trajectory
+    /// (`docs/scenarios.md`); resolution-limited by the reservoir below
+    /// ~1000 samples, where it equals the retained maximum
+    pub p999: Duration,
     /// exact minimum over all recorded samples
     pub min: Duration,
     /// exact maximum over all recorded samples
     pub max: Duration,
+}
+
+impl LatencySnapshot {
+    /// Merge per-shard snapshots into one cross-shard snapshot with
+    /// **pinned weighted-marker semantics** (`docs/scenarios.md`).
+    ///
+    /// Each input contributes five `(value, mass)` markers under an
+    /// upper-endpoint convention — a marker carries the probability mass
+    /// of the quantile segment it closes:
+    ///
+    /// ```text
+    /// (p50, 0.500·count)   closes [0,     0.50 ]
+    /// (p95, 0.450·count)   closes (0.50,  0.95 ]
+    /// (p99, 0.040·count)   closes (0.95,  0.99 ]
+    /// (p999, 0.009·count)  closes (0.99,  0.999]
+    /// (max, 0.001·count)   closes (0.999, 1    ]
+    /// ```
+    ///
+    /// The merged percentile at `q` is the smallest marker value whose
+    /// cumulative mass (markers sorted by value) reaches `q·Σcount`. For
+    /// a single input this reproduces its own p50/p95/p99/p999 exactly;
+    /// across inputs the result is always some shard's marker value, and
+    /// the true union quantile lies inside that donor's closing segment —
+    /// i.e. the error is bounded by one marker segment per shard, on top
+    /// of each shard's own reservoir error. `count` is exact, `mean` is
+    /// count-weighted and exact, `min`/`max` are exact.
+    pub fn merged(parts: &[LatencySnapshot]) -> LatencySnapshot {
+        let total: u64 = parts.iter().map(|p| p.count).sum();
+        if total == 0 {
+            return LatencySnapshot::default();
+        }
+        let mut sum_us: u128 = 0;
+        let mut min = Duration::MAX;
+        let mut max = Duration::ZERO;
+        let mut markers: Vec<(Duration, f64)> = Vec::with_capacity(parts.len() * 5);
+        for p in parts.iter().filter(|p| p.count > 0) {
+            sum_us += p.mean.as_micros() * p.count as u128;
+            min = min.min(p.min);
+            max = max.max(p.max);
+            let c = p.count as f64;
+            markers.push((p.p50, 0.500 * c));
+            markers.push((p.p95, 0.450 * c));
+            markers.push((p.p99, 0.040 * c));
+            markers.push((p.p999, 0.009 * c));
+            markers.push((p.max, 0.001 * c));
+        }
+        markers.sort_unstable_by_key(|&(d, _)| d);
+        let pick = |q: f64| -> Duration {
+            let target = q * total as f64;
+            let mut acc = 0.0;
+            for &(d, w) in &markers {
+                acc += w;
+                // tolerance absorbs float rounding so a single input's
+                // own markers land exactly on their ranks
+                if acc >= target - 1e-9 {
+                    return d;
+                }
+            }
+            markers.last().map(|&(d, _)| d).unwrap_or_default()
+        };
+        LatencySnapshot {
+            count: total,
+            mean: Duration::from_micros((sum_us / total as u128) as u64),
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            p999: pick(0.999),
+            min,
+            max,
+        }
+    }
 }
 
 impl LatencyStats {
@@ -160,6 +237,10 @@ impl LatencyStats {
         self.percentile(0.99)
     }
 
+    pub fn p999(&self) -> Duration {
+        self.percentile(0.999)
+    }
+
     /// Exact minimum over all recorded samples.
     pub fn min(&self) -> Duration {
         if self.count == 0 {
@@ -183,6 +264,7 @@ impl LatencyStats {
             p50: self.p50(),
             p95: self.p95(),
             p99: self.p99(),
+            p999: self.p999(),
             min: self.min(),
             max: self.max(),
         }
@@ -311,6 +393,118 @@ mod tests {
         s.record(Duration::from_micros(10_000));
         assert_eq!(snap.max, Duration::from_micros(100), "snapshot is immutable");
         assert_eq!(s.max(), Duration::from_micros(10_000));
+    }
+
+    #[test]
+    fn p999_resolves_past_p99_with_enough_samples() {
+        let mut s = LatencyStats::new();
+        for i in 1..=2000u64 {
+            s.record(Duration::from_micros(i));
+        }
+        assert_eq!(s.p99(), Duration::from_micros(1980));
+        assert_eq!(s.p999(), Duration::from_micros(1998));
+        assert!(s.p999() <= s.max());
+        let snap = s.freeze();
+        assert_eq!(snap.p999, s.p999());
+    }
+
+    #[test]
+    fn p999_degrades_to_retained_max_on_few_samples() {
+        let mut s = LatencyStats::new();
+        for i in 1..=10u64 {
+            s.record(Duration::from_micros(i));
+        }
+        assert_eq!(s.p999(), Duration::from_micros(10));
+    }
+
+    #[test]
+    fn merged_single_input_is_exact() {
+        let mut s = LatencyStats::new();
+        for i in 1..=2000u64 {
+            s.record(Duration::from_micros(i * 3));
+        }
+        let snap = s.freeze();
+        let m = LatencySnapshot::merged(&[snap]);
+        assert_eq!(m, snap, "one-shard merge must be the identity");
+    }
+
+    #[test]
+    fn merged_empty_and_zero_count_inputs() {
+        assert_eq!(LatencySnapshot::merged(&[]), LatencySnapshot::default());
+        let mut s = LatencyStats::new();
+        s.record(Duration::from_micros(500));
+        let snap = s.freeze();
+        let m = LatencySnapshot::merged(&[LatencySnapshot::default(), snap]);
+        assert_eq!(m.count, 1);
+        assert_eq!(m.p50, Duration::from_micros(500));
+        assert_eq!(m.min, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn merged_disjoint_shards_split_at_the_weight_boundary() {
+        // shard A: 1000 samples at 1ms; shard B: 1000 samples at 100ms.
+        // Union ground truth: p50 = 1ms (rank 1000 of 2000), p95/p99/p999
+        // all 100ms.
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        for _ in 0..1000 {
+            a.record(Duration::from_millis(1));
+            b.record(Duration::from_millis(100));
+        }
+        let m = LatencySnapshot::merged(&[a.freeze(), b.freeze()]);
+        assert_eq!(m.count, 2000);
+        assert_eq!(m.p50, Duration::from_millis(1));
+        assert_eq!(m.p95, Duration::from_millis(100));
+        assert_eq!(m.p99, Duration::from_millis(100));
+        assert_eq!(m.p999, Duration::from_millis(100));
+        assert_eq!(m.min, Duration::from_millis(1));
+        assert_eq!(m.max, Duration::from_millis(100));
+        assert_eq!(m.mean, Duration::from_micros(50_500));
+    }
+
+    #[test]
+    fn merged_tracks_ground_truth_union_within_marker_tolerance() {
+        // Three shards over different ranges of one uniform ramp; compare
+        // the weighted-marker merge against exact nearest-rank percentiles
+        // over the union of every recorded duration. All counts stay below
+        // RESERVOIR_CAP so per-shard snapshots are reservoir-exact and the
+        // only error is the documented marker-segment band.
+        let ranges: [(u64, u64); 3] = [(1, 1200), (1201, 2400), (2401, 3600)];
+        let mut union: Vec<u64> = Vec::new();
+        let mut parts = Vec::new();
+        for (lo, hi) in ranges {
+            let mut s = LatencyStats::new();
+            for v in lo..=hi {
+                s.record(Duration::from_micros(v));
+                union.push(v);
+            }
+            parts.push(s.freeze());
+        }
+        union.sort_unstable();
+        let truth = |q: f64| -> u64 {
+            let n = union.len();
+            union[((q * n as f64).ceil() as usize).clamp(1, n) - 1]
+        };
+        let m = LatencySnapshot::merged(&parts);
+        assert_eq!(m.count, union.len() as u64);
+        assert_eq!(m.min.as_micros() as u64, 1);
+        assert_eq!(m.max.as_micros() as u64, 3600);
+        // documented tolerance: the merged value is some shard's marker and
+        // the true union quantile lies inside that marker's closing segment
+        // — for this union (three equal shards covering disjoint thirds of
+        // a ramp) every segment spans < 50% of one shard's range.
+        for (q, got, band) in
+            [(0.50, m.p50, 600), (0.95, m.p95, 600), (0.99, m.p99, 150), (0.999, m.p999, 150)]
+        {
+            let got = got.as_micros() as i64;
+            let want = truth(q) as i64;
+            assert!(
+                (got - want).abs() <= band,
+                "q={q}: merged {got}µs vs truth {want}µs (band {band}µs)"
+            );
+        }
+        // and the pinned headline property: ordering is preserved
+        assert!(m.p50 <= m.p95 && m.p95 <= m.p99 && m.p99 <= m.p999 && m.p999 <= m.max);
     }
 
     #[test]

@@ -27,12 +27,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Tier, TierDecision};
+use crate::coordinator::{StatsBoard, Tier, TierDecision};
 use crate::runtime::ModelConfig;
 use crate::sampler::{SamplerConfig, SamplerKind, SamplerSession};
 use crate::schedule::{AlphaSchedule, TransitionSpec};
@@ -65,6 +65,17 @@ pub struct AdmissionPolicy {
     pub initial_us_per_nfe: f64,
     /// EWMA smoothing factor in (0, 1]: weight of each new sample
     pub ewma_alpha: f64,
+    /// Prefer the engine-measured µs/NFE EWMA from the shards' lock-free
+    /// [`StatsBoard`]s (attached via [`Admission::attach_boards`]) over
+    /// this controller's own front-door EWMA. The board's pace is fed by
+    /// **every** terminal the engine delivers — including requests
+    /// submitted straight to the router, which the front door never
+    /// observes — so it converges on mixed-ingress deployments where the
+    /// front-door EWMA stays blind. Off by default: the front-door EWMA
+    /// is the pinned arithmetic existing projections (and their tests)
+    /// are calibrated against, and a shard that has not yet retired a
+    /// request publishes `0.0`, which always falls back here anyway.
+    pub use_board_pace: bool,
 }
 
 impl Default for AdmissionPolicy {
@@ -73,6 +84,7 @@ impl Default for AdmissionPolicy {
             rate_limit: Some(RateLimit { burst: 32.0, per_sec: 16.0 }),
             initial_us_per_nfe: 1000.0,
             ewma_alpha: 0.2,
+            use_board_pace: false,
         }
     }
 }
@@ -136,6 +148,10 @@ pub struct Admission {
     buckets: Mutex<HashMap<String, Bucket>>,
     rejected_rate_limit: AtomicU64,
     rejected_deadline: AtomicU64,
+    /// per-shard lock-free boards, attached after construction (the
+    /// router exists before the controller does); consulted by pace
+    /// queries only under [`AdmissionPolicy::use_board_pace`]
+    boards: Mutex<Vec<Arc<StatsBoard>>>,
 }
 
 impl Admission {
@@ -152,7 +168,35 @@ impl Admission {
             buckets: Mutex::new(HashMap::new()),
             rejected_rate_limit: AtomicU64::new(0),
             rejected_deadline: AtomicU64::new(0),
+            boards: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Attach the shards' lock-free boards
+    /// ([`Router::boards`](crate::coordinator::Router::boards)),
+    /// index-aligned with this controller's shard accounts. Pace queries
+    /// prefer a board's engine-measured EWMA only when
+    /// [`AdmissionPolicy::use_board_pace`] is set **and** that board has
+    /// observed at least one terminal (its EWMA is nonzero); otherwise
+    /// the front-door EWMA keeps deciding, so attaching is always safe.
+    pub fn attach_boards(&self, boards: Vec<Arc<StatsBoard>>) {
+        *self.boards.lock().unwrap_or_else(PoisonError::into_inner) = boards;
+    }
+
+    /// The µs/NFE pace a projection for `shard` should multiply by:
+    /// the board's engine-measured EWMA when enabled and warmed up, the
+    /// front-door EWMA otherwise.
+    fn pace_us(&self, shard: usize) -> f64 {
+        if self.policy.use_board_pace {
+            let boards = self.boards.lock().unwrap_or_else(PoisonError::into_inner);
+            if let Some(b) = boards.get(shard) {
+                let p = b.pace();
+                if p.ewma_us_per_nfe > 0.0 {
+                    return p.ewma_us_per_nfe;
+                }
+            }
+        }
+        f64::from_bits(self.shard(shard).ewma_us_bits.load(Ordering::Relaxed))
     }
 
     /// Check-only gate: may this request of exactly `cost` denoiser
@@ -174,9 +218,9 @@ impl Admission {
             }
         }
         if let Some(deadline) = deadline {
-            let shard = &self.shards[shard.min(self.shards.len() - 1)];
-            let backlog = shard.queued_nfe.load(Ordering::Relaxed);
-            let pace = f64::from_bits(shard.ewma_us_bits.load(Ordering::Relaxed));
+            let idx = shard.min(self.shards.len() - 1);
+            let backlog = self.shards[idx].queued_nfe.load(Ordering::Relaxed);
+            let pace = self.pace_us(idx);
             let projected_us = (backlog + cost) as f64 * pace;
             let deadline_us = deadline.as_micros() as f64;
             if projected_us > deadline_us {
@@ -396,7 +440,7 @@ impl Admission {
         let mut best = (0usize, f64::INFINITY);
         for (i, s) in self.shards.iter().enumerate() {
             let backlog = s.queued_nfe.load(Ordering::Relaxed);
-            let pace = f64::from_bits(s.ewma_us_bits.load(Ordering::Relaxed));
+            let pace = self.pace_us(i);
             let projected = (backlog + cost) as f64 * pace;
             if projected < best.1 {
                 best = (i, projected);
@@ -405,9 +449,12 @@ impl Admission {
         best
     }
 
-    /// Current µs/NFE estimate for a shard (scraped into `/metrics`).
+    /// Current µs/NFE estimate for a shard (scraped into `/metrics`):
+    /// the same value projections multiply by, so under
+    /// [`AdmissionPolicy::use_board_pace`] this reflects the attached
+    /// board's engine-measured EWMA once it has warmed up.
     pub fn ewma_us_per_nfe(&self, shard: usize) -> f64 {
-        f64::from_bits(self.shard(shard).ewma_us_bits.load(Ordering::Relaxed))
+        self.pace_us(shard)
     }
 
     /// NFE admitted but not yet retired on a shard.
@@ -731,6 +778,30 @@ mod tests {
         assert!((pace[0].1 - 2.0).abs() < 1e-9, "{pace:?}");
         assert_eq!(pace[1].0, "b");
         assert!((pace[1].1 - 3.0).abs() < 1e-9, "{pace:?}");
+    }
+
+    #[test]
+    fn board_pace_is_opt_in_and_prefers_warmed_boards() {
+        let board = Arc::new(StatsBoard::new());
+        // engine-side observation: 10 NFE in 50 ms → 5000 µs/NFE (first
+        // sample seeds the board EWMA outright)
+        board.observe_pace(10, Duration::from_millis(50));
+
+        // off by default: attaching changes nothing
+        let adm = Admission::new(no_limit(), 1);
+        adm.attach_boards(vec![board.clone()]);
+        assert_eq!(adm.ewma_us_per_nfe(0), 1000.0);
+
+        // opted in: the board's measured pace drives projections...
+        let policy = AdmissionPolicy { use_board_pace: true, ..no_limit() };
+        let adm = Admission::new(policy.clone(), 2);
+        adm.attach_boards(vec![board, Arc::new(StatsBoard::new())]);
+        assert_eq!(adm.ewma_us_per_nfe(0), 5000.0);
+        // ...while a cold board (no terminal yet → 0.0) falls back to
+        // the front-door EWMA, as does a shard with no board at all
+        assert_eq!(adm.ewma_us_per_nfe(1), 1000.0);
+        let adm = Admission::new(policy, 1);
+        assert_eq!(adm.ewma_us_per_nfe(0), 1000.0);
     }
 
     #[test]

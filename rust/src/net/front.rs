@@ -77,8 +77,12 @@ pub fn serve<A: ToSocketAddrs>(
     opts: HttpOptions,
 ) -> io::Result<HttpServer> {
     let connections = Arc::new(AtomicU64::new(0));
+    let admission = Arc::new(Admission::new(policy, router.num_shards()));
+    // index-aligned boards for the opt-in engine-measured pace
+    // (`AdmissionPolicy::use_board_pace`); attaching is free otherwise
+    admission.attach_boards(router.boards());
     let door = FrontDoor {
-        admission: Arc::new(Admission::new(policy, router.num_shards())),
+        admission,
         router,
         mcfg,
         default_cfg,
@@ -426,10 +430,12 @@ impl FrontDoor {
     }
 
     fn metrics(&self) -> Response {
-        let stats = match self.router.stats() {
-            Ok(s) => s,
-            Err(e) => return err_json(500, &format!("stats unavailable: {e}")),
-        };
+        // Served from the shards' lock-free boards, not `Msg::Stats`
+        // round-trips: a scrape never blocks on a breaker-parked or dead
+        // shard's message loop (it reads that shard's last published
+        // snapshot), and cannot fail. tests/http.rs pins board == channel
+        // at quiesce; tests/scenarios.rs pins the parked-shard scrape.
+        let stats = self.router.board_stats();
         let front = FrontGauges {
             rejected_rate_limit: self.admission.rejected_rate_limit(),
             rejected_deadline: self.admission.rejected_deadline(),
@@ -444,10 +450,12 @@ impl FrontDoor {
     }
 
     fn healthz(&self) -> Response {
-        match self.router.stats() {
-            Ok(s) if s.healthy => Response::text(200, "ok\n"),
-            Ok(_) => Response::text(503, "unhealthy\n"),
-            Err(e) => Response::text(503, format!("stats unavailable: {e}\n")),
+        // board-backed like /metrics: health checks keep answering while
+        // a shard is parked (reporting it unhealthy) instead of hanging
+        if self.router.board_stats().healthy {
+            Response::text(200, "ok\n")
+        } else {
+            Response::text(503, "unhealthy\n")
         }
     }
 }

@@ -240,6 +240,13 @@ pub fn render(stats: &ServerStats, front: &FrontGauges) -> String {
         "end-to-end latency p99",
         s.e2e_p99.as_secs_f64(),
     );
+    sample(
+        &mut out,
+        "dndm_e2e_seconds_p999",
+        "gauge",
+        "end-to-end latency p999 (reservoir-limited below ~1000 samples)",
+        s.e2e.p999.as_secs_f64(),
+    );
 
     // per-shard admission gauges as labelled families, index = shard
     let _ = writeln!(
@@ -317,6 +324,7 @@ pub fn parse_text(text: &str) -> Result<BTreeMap<String, f64>, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::LatencySnapshot;
     use std::time::Duration;
 
     fn stats() -> ServerStats {
@@ -329,6 +337,16 @@ mod tests {
             e2e_p95: Duration::from_millis(200),
             e2e_p50: Duration::from_millis(100),
             e2e_p99: Duration::from_millis(300),
+            e2e: LatencySnapshot {
+                count: 12,
+                mean: Duration::from_millis(120),
+                p50: Duration::from_millis(100),
+                p95: Duration::from_millis(200),
+                p99: Duration::from_millis(300),
+                p999: Duration::from_millis(450),
+                min: Duration::from_millis(50),
+                max: Duration::from_millis(500),
+            },
             avg_request_nfe: 8.0,
             occupancy: 0.75,
             cancelled: 1,
@@ -375,6 +393,7 @@ mod tests {
         assert_eq!(parsed["dndm_mean_batch"], 2.5);
         assert_eq!(parsed["dndm_occupancy"], 0.75);
         assert_eq!(parsed["dndm_e2e_seconds_p50"], 0.1);
+        assert_eq!(parsed["dndm_e2e_seconds_p999"], 0.45);
         assert_eq!(parsed["dndm_healthy"], 1.0);
         assert_eq!(parsed["dndm_breaker_open"], 0.0);
         assert_eq!(parsed["dndm_tenant_requests_total{tenant=\"acme\"}"], 7.0);

@@ -273,7 +273,7 @@ fn unmeetable_deadline_is_rejected_without_a_denoiser_call() {
     let policy = AdmissionPolicy {
         rate_limit: None,
         initial_us_per_nfe: 1_000_000.0,
-        ewma_alpha: 0.2,
+        ..AdmissionPolicy::default()
     };
     let (router, server, _) = front(policy, 1);
     let addr = server.local_addr();

@@ -1,0 +1,446 @@
+//! Scenario-mix acceptance suite for the lock-free telemetry board and
+//! the adversarial serving mixes the scenario bench trajectories
+//! (`docs/scenarios.md`):
+//!
+//! * **soak mix** — a cancellation storm over mixed per-request specs
+//!   with Zipf-skewed tenants through a 2-shard router: every ticket
+//!   yields **exactly one** terminal event, every survivor's served NFE
+//!   equals the host-side exact cost (|𝒯| is predetermined), no ghost
+//!   events fire, and per-tenant accounting sums to the submit count;
+//! * **board == channel** — at quiesce, [`StatsBoard::snapshot`] equals
+//!   the channel `stats()` reply field for field (the channel reply is
+//!   the board's sync barrier: both serve loops publish the board
+//!   before answering `Msg::Stats`);
+//! * **zero round-trips** — the acceptance pin for the board itself: a
+//!   steady-state rebalancer pass (`rebalance()` + `supervise()`) and a
+//!   `/metrics`-style scrape perform **zero** `Msg::Stats` channel
+//!   round-trips, measured by [`StatsBoard::stats_rpcs`];
+//! * **parked scrape** — a breaker-parked shard no longer stalls
+//!   observability: the HTTP `/metrics` scrape renders from the boards
+//!   (breaker visible, shard unhealthy) without touching any shard's
+//!   channel.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dndm::coordinator::{
+    cipher_mock_denoiser, cipher_mock_engine, Engine, Event, FaultPolicy, GenRequest,
+    RebalancePolicy, Router, SchedPolicy, ServeBuilder, Ticket,
+};
+use dndm::data::words;
+use dndm::net::http::HttpOptions;
+use dndm::net::metrics::parse_text;
+use dndm::net::{self, exact_cost, AdmissionPolicy};
+use dndm::runtime::{ChaosDenoiser, ChaosSwitch, Denoiser, FaultKind};
+use dndm::sampler::{SamplerConfig, SamplerKind};
+
+const SRCS: [&str; 3] = [
+    "the quick fox crosses a river",
+    "a small garden by the road",
+    "this old road to the river",
+];
+
+/// Per-request lanes (`shared_tau_groups: false`): the admission-time
+/// |𝒯| is each request's served NFE exactly, and the denoiser-call tally
+/// counts sequence evaluations, so conservation has an exact expectation.
+fn per_request(max_batch: usize) -> SchedPolicy {
+    SchedPolicy { max_batch, window: Duration::ZERO, shared_tau_groups: false }
+}
+
+/// The soak mix's spec rotation — three distinct `SpecKey`s, so lanes
+/// carry requests of one spec each and specs interleave on the shard.
+fn mixed_cfg(i: usize) -> SamplerConfig {
+    match i % 3 {
+        0 => SamplerConfig::new(SamplerKind::Dndm, 25),
+        1 => SamplerConfig::new(SamplerKind::Dndm, 40),
+        _ => SamplerConfig::new(SamplerKind::D3pm, 30),
+    }
+}
+
+/// Zipf-skewed tenant assignment (deterministic): tenant rank r gets
+/// ~1/(r+1) of the traffic — half the submits land on `t0`.
+fn zipf_tenant(i: usize) -> &'static str {
+    match i % 12 {
+        0..=5 => "t0",
+        6..=8 => "t1",
+        9..=10 => "t2",
+        _ => "t3",
+    }
+}
+
+fn wait_until(mut ready: impl FnMut() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !ready() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Drain every event off a ticket (optionally cancelling at the first
+/// `Progress`, mid-flight) and return the collected stream. The channel
+/// closes after the terminal, so this observes the ticket's whole life.
+fn drain(mut t: Ticket, cancel_at_progress: bool) -> Vec<Event> {
+    let mut events = Vec::new();
+    let mut cancelled = false;
+    while let Some(e) = t.next_event() {
+        if cancel_at_progress && !cancelled && matches!(e, Event::Progress { .. }) {
+            t.cancel();
+            cancelled = true;
+        }
+        events.push(e);
+    }
+    events
+}
+
+fn terminal_count(events: &[Event]) -> usize {
+    events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                Event::Done(_) | Event::Cancelled | Event::DeadlineExceeded | Event::Failed(_)
+            )
+        })
+        .count()
+}
+
+/// Sum of `stats_rpcs` across every shard board — the channel
+/// round-trips the telemetry board exists to eliminate.
+fn rpc_total(router: &Router) -> u64 {
+    router.boards().iter().map(|b| b.stats_rpcs()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// soak mix
+// ---------------------------------------------------------------------------
+
+/// Cancellation storm + mixed specs + skewed tenants, 2 shards. Pins:
+/// exactly one terminal per ticket, per-survivor NFE == exact host-side
+/// cost, ghost events 0, faults 0, tenant accounting exact.
+#[test]
+fn soak_mix_one_terminal_per_ticket_and_exact_nfe() {
+    const N: usize = 48;
+    let mcfg = cipher_mock_denoiser(8).config().clone();
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 25),
+    )
+    .continuous(per_request(8))
+    .shards(2)
+    .rebalance(RebalancePolicy::manual())
+    .start();
+
+    let mut tickets = Vec::new();
+    for i in 0..N {
+        let cfg = mixed_cfg(i);
+        let cost = exact_cost(&mcfg, &cfg, i as u64).unwrap();
+        let req = GenRequest::new(i as u64)
+            .src(SRCS[i % SRCS.len()])
+            .config(cfg)
+            .tenant(zipf_tenant(i));
+        tickets.push((i, cost, router.submit_request(req).unwrap()));
+    }
+
+    let mut cancels_requested = 0u64;
+    for (i, cost, t) in tickets {
+        // every 3rd ticket is storm fodder: cancel at its first progress
+        let storm = i % 3 == 2;
+        cancels_requested += storm as u64;
+        let events = drain(t, storm);
+        assert_eq!(
+            terminal_count(&events),
+            1,
+            "ticket {i} must see exactly one terminal: {events:?}"
+        );
+        assert!(
+            !events.iter().any(|e| matches!(e, Event::Failed(_))),
+            "no request may fail in a chaos-free mix: {events:?}"
+        );
+        if let Some(Event::Done(out)) = events.last() {
+            // |𝒯| is predetermined: the served NFE is the exact cost the
+            // admission controller would have projected host-side
+            assert_eq!(
+                out.nfe as u64, cost,
+                "request {i}: served NFE must equal the exact host-side cost"
+            );
+        } else if !storm {
+            panic!("non-storm ticket {i} must finish: {events:?}");
+        }
+    }
+
+    let merged = router.stats().unwrap();
+    assert_eq!(merged.requests, N as u64);
+    assert_eq!(merged.ghost_events_fired, 0, "cancellations must retire ladder events");
+    assert_eq!(merged.faults_fatal, 0);
+    assert_eq!(merged.faults_transient, 0);
+    assert!(merged.cancelled <= cancels_requested);
+    let tenant_sum: u64 = merged.tenant_requests.iter().map(|(_, n)| n).sum();
+    assert_eq!(tenant_sum, N as u64, "every submit carries a tenant: {:?}", merged.tenant_requests);
+    let t0 = merged.tenant_requests.iter().find(|(t, _)| t == "t0").map(|(_, n)| *n);
+    assert_eq!(t0, Some(N as u64 / 2), "Zipf head tenant gets half the submits");
+    router.shutdown();
+    router.join();
+}
+
+// ---------------------------------------------------------------------------
+// board == channel
+// ---------------------------------------------------------------------------
+
+/// At quiesce the board snapshot equals the channel reply exactly: both
+/// serve loops publish the board *before* answering `Msg::Stats`, and
+/// the board's latency cells hold whole microseconds — the resolution
+/// `LatencyStats` records at — so nothing is lost in the round-trip.
+#[test]
+fn board_snapshot_equals_channel_stats_at_quiesce() {
+    const N: usize = 16;
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::D3pm, 50),
+    )
+    .continuous(per_request(4))
+    .shards(2)
+    .rebalance(RebalancePolicy::manual())
+    .start();
+
+    let tickets: Vec<_> = (0..N)
+        .map(|i| {
+            let req = GenRequest::new(i as u64)
+                .src(SRCS[i % SRCS.len()])
+                .tenant(zipf_tenant(i));
+            router.submit_request(req).unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("request must finish");
+    }
+
+    for i in 0..router.num_shards() {
+        // the channel reply doubles as the board's sync barrier
+        let channel = router.shard(i).stats().unwrap();
+        let board = router.shard(i).board().snapshot();
+        assert_eq!(board, channel, "shard {i}: board snapshot must equal the channel reply");
+    }
+
+    // the merged board report is consistent across shards: counts add,
+    // the merged p50 stays inside the per-shard envelope, and the flat
+    // convenience fields mirror the digest
+    let parts = router.board_shard_stats();
+    let merged = router.board_stats();
+    assert_eq!(merged.requests, parts.iter().map(|p| p.requests).sum::<u64>());
+    assert_eq!(merged.e2e.count, parts.iter().map(|p| p.e2e.count).sum::<u64>());
+    assert_eq!(merged.e2e.count, N as u64);
+    let lo = parts.iter().map(|p| p.e2e.p50).min().unwrap();
+    let hi = parts.iter().map(|p| p.e2e.p50).max().unwrap();
+    assert!(
+        merged.e2e.p50 >= lo && merged.e2e.p50 <= hi,
+        "merged p50 {:?} outside the shard envelope [{lo:?}, {hi:?}]",
+        merged.e2e.p50
+    );
+    assert_eq!(merged.e2e_p50, merged.e2e.p50);
+    assert_eq!(merged.e2e_p99, merged.e2e.p99);
+    router.shutdown();
+    router.join();
+}
+
+// ---------------------------------------------------------------------------
+// zero channel round-trips
+// ---------------------------------------------------------------------------
+
+/// The acceptance pin for the telemetry board: once the submit
+/// watermark is caught up (no unseen submits in any shard's channel), a
+/// rebalancer pass and a stats scrape read boards only — the
+/// `Msg::Stats` round-trip count across every shard stays exactly flat.
+#[test]
+fn steady_state_rebalance_and_scrape_pay_zero_stats_rpcs() {
+    const N: usize = 12;
+    let router = ServeBuilder::new(
+        || Ok(cipher_mock_engine(8)),
+        SamplerConfig::new(SamplerKind::Dndm, 30),
+    )
+    .continuous(per_request(4))
+    .shards(2)
+    .rebalance(RebalancePolicy::manual())
+    .start();
+
+    let tickets: Vec<_> = (0..N)
+        .map(|i| {
+            router
+                .submit_request(GenRequest::new(i as u64).src(SRCS[i % SRCS.len()]))
+                .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("request must finish");
+    }
+    for b in router.boards() {
+        assert!(
+            !b.has_unseen_submits(),
+            "at quiesce every submit has been ingested and published"
+        );
+    }
+
+    let base = rpc_total(&router);
+    // a full steady-state supervision + rebalance pass...
+    assert_eq!(router.supervise().unwrap(), 0, "no shard to salvage at steady state");
+    router.rebalance().unwrap();
+    // ...and a /metrics-style scrape (merged + per-shard)
+    let merged = router.board_stats();
+    let _ = router.board_shard_stats();
+    assert_eq!(
+        rpc_total(&router) - base,
+        0,
+        "steady-state rebalance + scrape must not touch any shard channel"
+    );
+    assert!(merged.healthy);
+    assert_eq!(merged.requests, N as u64);
+
+    // a fresh submit re-arms the watermark: the *next* pass is allowed
+    // one round-trip against exactly that shard, then goes quiet again
+    let t = router.submit_request(GenRequest::new(99).src(SRCS[0])).unwrap();
+    t.wait().expect("request must finish");
+    router.rebalance().unwrap();
+    let after_ingest = rpc_total(&router);
+    assert!(
+        after_ingest - base <= 1,
+        "at most one catch-up round-trip for the shard with unseen submits"
+    );
+    router.rebalance().unwrap();
+    assert_eq!(rpc_total(&router), after_ingest, "watermark caught up — quiet again");
+    router.shutdown();
+    router.join();
+}
+
+// ---------------------------------------------------------------------------
+// parked scrape
+// ---------------------------------------------------------------------------
+
+fn trip_fast() -> FaultPolicy {
+    FaultPolicy {
+        max_retries: 2,
+        backoff: Duration::ZERO,
+        max_backoff: Duration::ZERO,
+        call_timeout: None,
+        breaker_threshold: 3,
+        breaker_cooldown: Duration::from_secs(60),
+    }
+}
+
+/// A 2-shard chaos factory sharing one externally-armed switch, with
+/// enough per-call latency that lanes stay observably in flight.
+fn switched_factory(sw: &ChaosSwitch) -> impl Fn() -> anyhow::Result<Engine> + Send + 'static {
+    let sw = sw.clone();
+    move || {
+        let den = ChaosDenoiser::new(cipher_mock_denoiser(8), 11)
+            .latency(Duration::from_micros(25))
+            .with_switch(sw.clone());
+        Ok(Engine::from_denoiser(Box::new(den), words::translation_vocab(), "cipher-chaos"))
+    }
+}
+
+/// Minimal HTTP GET over a fresh connection (`Connection: close`, read
+/// to EOF) — enough for the fixed-length `/metrics` and `/healthz`
+/// bodies.
+fn http_get(addr: &str, path: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n")
+        .expect("send request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split(' ')
+        .nth(1)
+        .expect("status code")
+        .parse()
+        .expect("numeric status");
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// The regression this PR fixes: before the board, `/metrics` paid a
+/// channel round-trip per shard, and a breaker-parked shard only polls
+/// its channel between queue polls — a scrape stalled on exactly the
+/// shard an operator most wants to see. Now the scrape renders from the
+/// boards: the parked shard is visible (breaker open, unhealthy) and
+/// **no** shard channel is touched.
+#[test]
+fn metrics_scrape_serves_from_board_while_breaker_parked() {
+    let sw = ChaosSwitch::new();
+    let mcfg = cipher_mock_denoiser(8).config().clone();
+    let cfg = SamplerConfig::new(SamplerKind::D3pm, 20_000);
+    let router = Arc::new(
+        ServeBuilder::new(switched_factory(&sw), cfg.clone())
+            .continuous(SchedPolicy {
+                max_batch: 2,
+                window: Duration::from_millis(50),
+                shared_tau_groups: true,
+            })
+            .shards(2)
+            .rebalance(RebalancePolicy::manual())
+            .fault_policy(trip_fast())
+            .start(),
+    );
+    let server = net::serve(
+        "127.0.0.1:0",
+        router.clone(),
+        mcfg,
+        cfg,
+        AdmissionPolicy { rate_limit: None, ..AdmissionPolicy::default() },
+        HttpOptions::default(),
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    // a width-2 lane in flight on shard 0, then the engine "dies"
+    let tickets: Vec<_> = (0..2)
+        .map(|i| {
+            router
+                .shard(0)
+                .submit_request(GenRequest::new(i).src(SRCS[i as usize]))
+                .unwrap()
+        })
+        .collect();
+    wait_until(
+        || {
+            let v = router.shard(0).board().view();
+            v.lanes == 1 && v.in_flight == 2
+        },
+        "the width-2 lane to form",
+    );
+    sw.arm(FaultKind::Transient);
+    wait_until(
+        || router.shard(0).board().breaker_open(),
+        "the circuit breaker to park the shard",
+    );
+
+    // scrape while parked: board-served, park visible, zero round-trips
+    let base = rpc_total(&router);
+    let (status, body) = http_get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    let parsed = parse_text(&body).expect("prometheus text");
+    assert_eq!(parsed["dndm_breaker_open"], 1.0, "the park must be visible in the scrape");
+    assert_eq!(parsed["dndm_healthy"], 0.0, "a parked shard taints merged health");
+    let (hstatus, _) = http_get(&addr, "/healthz");
+    assert_eq!(hstatus, 503, "healthz reports the parked shard");
+    assert_eq!(
+        rpc_total(&router) - base,
+        0,
+        "scraping a parked shard must not touch any shard channel"
+    );
+
+    // recovery: salvage onto shard 1, everything still completes
+    sw.disarm();
+    assert_eq!(router.supervise().unwrap(), 1, "exactly one parked shard to salvage");
+    for t in tickets {
+        t.wait().expect("salvaged requests must finish");
+    }
+    let merged = router.stats().unwrap();
+    assert_eq!(merged.ghost_events_fired, 0);
+    assert_eq!(merged.faults_fatal, 0);
+    assert!(merged.healthy, "restart closed the breaker");
+    drop(server);
+    // router is shared with the front door; join() needs ownership —
+    // shutdown is enough for a test
+    router.shutdown();
+}

@@ -375,7 +375,7 @@ fn unmeetable_slo_503s_without_a_denoiser_call() {
     let policy = AdmissionPolicy {
         rate_limit: None,
         initial_us_per_nfe: 1_000_000.0, // 1 s per call: nothing fits 1 ms
-        ewma_alpha: 0.2,
+        ..AdmissionPolicy::default()
     };
     let (router, server, _) = front(policy);
     let addr = server.local_addr();

@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""CI gate for the scenario-mix load harness (`docs/scenarios.md`).
+
+Usage:
+  check_bench_scenarios.py BENCH_scenarios.json scenarios_latency_baseline.json [COMMITTED.json]
+
+The bench JSON is what `cargo bench --bench bench_scenarios` emits; the
+baseline maps each scenario to ratchetable ceilings on the e2e latency
+percentiles. With the optional third argument, the fresh run is also
+compared against the committed BENCH_scenarios.json on its
+*deterministic* fields (scenario set, request counts, `nfe_exact`
+flags) — wall-clock fields are machine-dependent and never diffed.
+
+Hard invariant gates (exact, every row):
+
+* `ghost_events_fired == 0` — a denoiser call at which zero rows moved
+  is only possible if lane narrowing failed to retire a departed row's
+  transition times; the cancel storm exists to exercise this.
+* `faults_fatal == 0` and `breaker_open == 0` — the chaos scenario
+  injects transient faults only, at a rate far below the breaker
+  threshold; either nonzero means fault classification or the retry
+  ladder regressed.
+* `deadline_exceeded == 0` — no scenario submits deadlines.
+* NFE conservation: on rows flagged `nfe_exact`, `served_nfe ==
+  expected_nfe` exactly — |T| is predetermined at admission, so the
+  sequence-evaluation tally has an exact expectation. On `cancel_storm`
+  (the one row where cancellation legitimately reduces served work)
+  `served_nfe` must stay strictly below the uncancelled expectation.
+
+Both-ways scenario gates (a counter leaking across scenarios is an
+accounting bug, a missing one is a silently-inert path):
+
+* `cancel_storm` — `cancelled > 0`; every other row exactly 0.
+* `chaos_transient` — `retries > 0` and `faults_transient > 0`; every
+  other row exactly 0.
+* `tiered_mix` — `early_retired > 0` and `turbo_truncated_nfe > 0`;
+  every other row exactly 0 (Quality-path requests must never be
+  truncated or retired early).
+* `skewed_tenant` — `tenant_total == requests` and `tenant_count == 4`;
+  every other row submits no attribution (`tenant_total == 0`).
+
+Ratchet policy (see the baseline file): latency ceilings start generous
+— shared runners are noisy — and only ratchet down once the uploaded
+BENCH_scenarios artifacts record a stable trajectory; lower each
+ceiling to ~2x the observed steady p99/p999.
+"""
+
+import json
+import sys
+
+REQUIRED = [
+    "poisson_burst",
+    "mixed_spec",
+    "cancel_storm",
+    "skewed_tenant",
+    "tiered_mix",
+    "chaos_transient",
+]
+
+# field -> scenario that must be strictly positive there, zero elsewhere
+BOTH_WAYS = {
+    "cancelled": "cancel_storm",
+    "retries": "chaos_transient",
+    "faults_transient": "chaos_transient",
+    "early_retired": "tiered_mix",
+    "turbo_truncated_nfe": "tiered_mix",
+    "tenant_total": "skewed_tenant",
+}
+
+
+def gate_rows(bench, base):
+    failures = []
+    rows = {r["scenario"]: r for r in bench["rows"]}
+    missing = [s for s in REQUIRED if s not in rows]
+    if missing:
+        print(f"required scenarios missing from the bench output: {', '.join(missing)}")
+        failures.extend(missing)
+    if len(bench["rows"]) < 6:
+        print(f"expected >= 6 scenario rows, got {len(bench['rows'])}")
+        failures.append("row-count")
+    for name, row in rows.items():
+        for field in ("ghost_events_fired", "faults_fatal", "breaker_open", "deadline_exceeded"):
+            if row.get(field, 0) != 0:
+                print(f"{name:16s} {field} {row[field]}  INVARIANT VIOLATION (must be 0)")
+                failures.append(name)
+        if row.get("nfe_exact") and row["served_nfe"] != row["expected_nfe"]:
+            print(
+                f"{name:16s} served_nfe {row['served_nfe']} != expected_nfe "
+                f"{row['expected_nfe']}  NFE NOT CONSERVED"
+            )
+            failures.append(name)
+        if name == "cancel_storm" and row["served_nfe"] >= row["expected_nfe"]:
+            print(
+                f"{name:16s} served_nfe {row['served_nfe']} >= uncancelled expectation "
+                f"{row['expected_nfe']}  CANCELLATION DID NOT SHED WORK"
+            )
+            failures.append(name)
+        for field, home in BOTH_WAYS.items():
+            count = row.get(field)
+            if count is None:
+                continue
+            if name == home and count == 0:
+                print(f"{name:16s} {field} {count}  PATH INERT (must be > 0)")
+                failures.append(name)
+            elif name != home and count != 0:
+                print(f"{name:16s} {field} {count}  COUNTER LEAK (must be 0)")
+                failures.append(name)
+        if name == "skewed_tenant":
+            if row.get("tenant_total") != row["requests"]:
+                print(f"{name:16s} tenant_total {row.get('tenant_total')}  != requests")
+                failures.append(name)
+            if row.get("tenant_count") != 4:
+                print(f"{name:16s} tenant_count {row.get('tenant_count')}  != 4 Zipf ranks")
+                failures.append(name)
+        for pct in ("e2e_p99_ms", "e2e_p999_ms"):
+            ceilings = base.get(f"max_{pct}", {})
+            if name not in ceilings:
+                print(f"{name:16s} {pct} {row[pct]:9.1f}  (no ceiling — not gated)")
+                failures.append(f"{name}:no-ceiling:{pct}")
+                continue
+            limit = ceilings[name]
+            ok = row[pct] <= limit
+            print(f"{name:16s} {pct} {row[pct]:9.1f}  ceiling {limit:9.1f}  {'ok' if ok else 'REGRESSION'}")
+            if not ok:
+                failures.append(name)
+    return failures
+
+
+def compare_deterministic(fresh, committed):
+    """The committed-JSON diff, restricted to fields that are identical on
+    every machine: scenario set, request counts, nfe_exact flags."""
+    failures = []
+    f_rows = {r["scenario"]: r for r in fresh["rows"]}
+    c_rows = {r["scenario"]: r for r in committed["rows"]}
+    if set(f_rows) != set(c_rows):
+        print(
+            "scenario set drifted from the committed BENCH_scenarios.json: "
+            f"fresh {sorted(f_rows)} vs committed {sorted(c_rows)}"
+        )
+        failures.append("scenario-set")
+    for name in sorted(set(f_rows) & set(c_rows)):
+        for field in ("requests", "nfe_exact"):
+            if f_rows[name].get(field) != c_rows[name].get(field):
+                print(
+                    f"{name:16s} {field}: fresh {f_rows[name].get(field)} != committed "
+                    f"{c_rows[name].get(field)}  (update the committed JSON in this PR)"
+                )
+                failures.append(name)
+    return failures
+
+
+def main() -> int:
+    if len(sys.argv) not in (3, 4):
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+    if bench.get("backend") != "mock":
+        print(f"scenario harness must be mock-backed, got backend '{bench.get('backend')}'")
+        return 1
+    failures = gate_rows(bench, base)
+    if len(sys.argv) == 4:
+        with open(sys.argv[3]) as f:
+            committed = json.load(f)
+        failures += compare_deterministic(bench, committed)
+    if failures:
+        print(f"\nscenario gate failed for: {', '.join(sorted(set(str(f) for f in failures)))}")
+        print("If a latency regression is intentional, raise the ceiling in")
+        print(f"{sys.argv[2]} in the same PR and say why in its comment field.")
+        print("ghost_events_fired / faults_fatal / breaker_open / NFE conservation")
+        print("have no ceilings to raise — each is a correctness invariant; fix it.")
+        return 1
+    print("\nscenario gate passed (invariants exact, latency under ceilings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
